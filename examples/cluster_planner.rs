@@ -1,0 +1,73 @@
+//! Cluster detection + plan adaptation demo (Fig. 5 + §7 "Ours").
+//!
+//! Shows that (a) the detector recovers the partially-connected NVLink
+//! topology from probing alone, and (b) the searched plan *changes* with
+//! the interconnect: the same model gets a different mesh/plan on a
+//! fully-NVLinked box vs the Fig-5 box vs a 2-node cluster.
+//!
+//! Run: cargo run --release --example cluster_planner
+
+use automap::cluster::{detect, DeviceMesh, SimCluster};
+use automap::coordinator::{autoparallelize_with_info, PipelineOpts};
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::sim::DeviceModel;
+use automap::solver::SolveOpts;
+
+fn main() -> anyhow::Result<()> {
+    let clusters = vec![
+        ("fig5 (4 NVLink pairs)", SimCluster::partially_connected_8gpu()),
+        ("fully NVLinked", SimCluster::fully_connected(8)),
+        ("2 nodes x 4 GPUs (100 Gb/s)", SimCluster::multi_node(2, 4, 100.0)),
+    ];
+    let cfg = Gpt2Cfg::paper("gamma");
+    let model = gpt2(&cfg);
+    let dev = DeviceModel::a100_80gb();
+    let opts = PipelineOpts {
+        sweep: 2,
+        solve: SolveOpts {
+            beam_width: 16,
+            anneal_iters: 400,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    for (name, cluster) in clusters {
+        println!("=== {name} ===");
+        let info = detect(&cluster, 42);
+        println!(
+            "  detected {} bandwidth tier(s): {:?} GB/s",
+            info.tiers.len(),
+            info.tiers
+                .iter()
+                .map(|t| (t / 1e9).round())
+                .collect::<Vec<_>>()
+        );
+        for t in 0..info.tiers.len() {
+            println!("    tier {t}: {:?}", info.groups_at_tier(t));
+        }
+        for shape in DeviceMesh::candidate_shapes(info.n) {
+            if let Some(m) = DeviceMesh::build(&info, &shape) {
+                println!(
+                    "    mesh {:?}: axis bw {:?} GB/s",
+                    m.shape,
+                    m.axis_beta
+                        .iter()
+                        .map(|b| (b / 1e9).round())
+                        .collect::<Vec<_>>()
+                );
+            }
+        }
+        match autoparallelize_with_info(&model, &info, &dev, &opts) {
+            Ok(plan) => println!(
+                "  plan: mesh {:?}, iter {:.1} ms, {:.3} PFLOPS, {} comm ops\n",
+                plan.mesh.shape,
+                plan.iter_time * 1e3,
+                plan.pflops,
+                plan.plan.comms.len()
+            ),
+            Err(e) => println!("  no plan: {e}\n"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Table 3 + Table 4 reproduction: GPT-2 weak scaling on the Fig-5 box.
+//!
+//! For each experiment (alpha..delta) plan with the full pipeline and
+//! compare against the manually-designed baselines. See EXPERIMENTS.md
+//! for the paper-vs-measured discussion.
+//!
+//! Run: cargo run --release --example gpt2_weak_scaling [-- --fast]
+
+use automap::cluster::{detect, SimCluster};
+use automap::coordinator::{autoparallelize, PipelineOpts};
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::profiler::profile;
+use automap::sim::{baselines, DeviceModel};
+use automap::solver::SolveOpts;
+use automap::util::cli::Args;
+
+fn fig5_prefix(n: usize) -> SimCluster {
+    if n == 1 {
+        return SimCluster::single();
+    }
+    let mut c = SimCluster::partially_connected_8gpu();
+    c.n = n;
+    c.latency.truncate(n);
+    c.bandwidth.truncate(n);
+    for row in c.latency.iter_mut() {
+        row.truncate(n);
+    }
+    for row in c.bandwidth.iter_mut() {
+        row.truncate(n);
+    }
+    c
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let dev = DeviceModel::a100_80gb();
+    println!("Table 3 model configurations:");
+    println!("| exp | #GPU | hidden | #params (B, Table-3 counting) |");
+    for (exp, n) in [("alpha", 1), ("beta", 2), ("gamma", 4), ("delta", 8)] {
+        let cfg = Gpt2Cfg::paper(exp);
+        println!(
+            "| {exp} | {n} | {} | {:.3} |",
+            cfg.d_model,
+            cfg.n_params_table3() as f64 / 1e9
+        );
+    }
+
+    println!("\nTable 4 — weak scaling, total PFLOPS (paper metric):");
+    println!(
+        "| exp | #GPU | DDP | Megatron-1D | Optimus-2D | 3D-TP | ours | ours mesh |"
+    );
+    for (exp, n) in
+        [("alpha", 1usize), ("beta", 2), ("gamma", 4), ("delta", 8)]
+    {
+        let cfg = Gpt2Cfg::paper(exp);
+        let g = gpt2(&cfg);
+        let prof = profile(&g);
+        let info = detect(&fig5_prefix(n), 1);
+        let metric = 6.0
+            * cfg.n_params_table3() as f64
+            * (cfg.batch * cfg.seq) as f64;
+        let scale = metric / prof.total_flops();
+        let fmt = |r: &baselines::SimReport| {
+            if r.feasible {
+                format!("{:.3}", r.pflops * scale)
+            } else {
+                "-".into()
+            }
+        };
+        let mut opts = PipelineOpts::default();
+        if args.has_flag("fast") {
+            opts.sweep = 2;
+            opts.solve = SolveOpts {
+                beam_width: 16,
+                anneal_iters: 400,
+                lagrange_iters: 4,
+                ..Default::default()
+            };
+        }
+        let (ours, mesh) =
+            match autoparallelize(&g, &fig5_prefix(n), &dev, &opts) {
+                Ok(p) => (
+                    format!("{:.3}", p.pflops * scale),
+                    format!("{:?}", p.mesh.shape),
+                ),
+                Err(_) => ("-".into(), "-".into()),
+            };
+        println!(
+            "| {exp} | {n} | {} | {} | {} | {} | {} | {} |",
+            fmt(&baselines::ddp(&cfg, &g, &prof, &info, &dev)),
+            fmt(&baselines::megatron_1d(&cfg, &g, &prof, &info, &dev)),
+            fmt(&baselines::optimus_2d(&cfg, &g, &prof, &info, &dev)),
+            fmt(&baselines::tp_3d(&cfg, &g, &prof, &info, &dev)),
+            ours,
+            mesh,
+        );
+    }
+    println!(
+        "\npaper Table 4 (ours): alpha 0.161 | beta 0.332 | gamma 0.604 | delta 0.824"
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: the paper's one-line `autoparallelize(model)` experience.
+//!
+//! Builds a GPT-2 graph from serial "user code", probes the (simulated)
+//! Fig-5 cluster, runs the 2-stage solver, and prints the searched plan
+//! plus a snippet of the generated code.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use automap::cluster::SimCluster;
+use automap::coordinator::{autoparallelize, PipelineOpts};
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::sim::DeviceModel;
+use automap::solver::SolveOpts;
+
+fn main() -> anyhow::Result<()> {
+    // 1. the "serial user model"
+    let cfg = Gpt2Cfg::mini();
+    let model = gpt2(&cfg);
+    println!(
+        "model: GPT-2 mini — {} graph nodes, {:.2}M params",
+        model.len(),
+        model.param_count() as f64 / 1e6
+    );
+
+    // 2. the cluster (8 GPUs, NVLink only between adjacent pairs — Fig. 5)
+    let cluster = SimCluster::partially_connected_8gpu();
+
+    // 3. one call: profile -> detect -> solve -> checkpoint -> generate
+    let opts = PipelineOpts {
+        sweep: 4,
+        solve: SolveOpts {
+            beam_width: 24,
+            anneal_iters: 800,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let plan =
+        autoparallelize(&model, &cluster, &DeviceModel::a100_80gb(), &opts)?;
+
+    println!("\nsearched execution plan:");
+    println!(
+        "  mesh            : {:?} over devices {:?}",
+        plan.mesh.shape, plan.mesh.devices
+    );
+    println!("  iteration time  : {:.3} ms", plan.iter_time * 1e3);
+    println!("  achieved        : {:.3} PFLOPS", plan.pflops);
+    println!("  memory / device : {:.2} GB", plan.mem_per_device / 1e9);
+    println!("  comm ops        : {}", plan.plan.comms.len());
+    if let Some(ck) = &plan.plan.ckpt {
+        let n_ck = ck.blocks.iter().filter(|b| b.checkpointed).count();
+        println!(
+            "  ckpt blocks     : {} ({} recomputed)",
+            ck.blocks.len(),
+            n_ck
+        );
+    }
+
+    // 4. the plan round-trips to (pseudo) source code
+    let code = plan.plan.codegen(&model);
+    println!("\ngenerated code (first 25 lines):");
+    for line in code.lines().take(25) {
+        println!("  {line}");
+    }
+    Ok(())
+}

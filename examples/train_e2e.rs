@@ -1,0 +1,92 @@
+//! End-to-end validation driver: train the GPT-2 artifact model for a few
+//! hundred steps of real data-parallel execution on 4 logical PJRT
+//! devices with rust-side gradient all-reduce — and prove the parallel
+//! schedule is *numerically exact*:
+//!
+//!   1. tensor-parallel block forward == serial block forward,
+//!   2. DP training step sequence == serial full-batch training,
+//!   3. the loss curve on a learnable synthetic corpus goes down.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example train_e2e [-- --steps 200]
+
+use automap::coordinator::tp::{serial_block_forward, tp_block_forward,
+                               BlockParams};
+use automap::coordinator::trainer::{dp_step, init_params, serial_step,
+                                    synth_batch, train_dp};
+use automap::runtime::{HostTensor, Runtime};
+use automap::util::cli::Args;
+use automap::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let steps = args.get_usize("steps", 200);
+    let mut rt = Runtime::open(Runtime::default_dir())?;
+    let cfg = rt.manifest.config.clone();
+    println!(
+        "platform {} | GPT-2 mini: {} params, batch {}, seq {}",
+        rt.platform(),
+        cfg.n_params,
+        cfg.batch,
+        cfg.seq
+    );
+
+    // --- 1. tensor-parallel numerics -------------------------------------
+    let params = BlockParams::random(cfg.d_model, cfg.d_ff, 11);
+    let mut rng = Rng::new(13);
+    let x = HostTensor::randn(
+        vec![cfg.batch, cfg.seq, cfg.d_model],
+        0.5,
+        &mut rng,
+    );
+    let serial = serial_block_forward(&mut rt, &x, &params)?;
+    for tp in [2usize, 4] {
+        let par = tp_block_forward(&mut rt, &x, &params, cfg.n_head, tp)?;
+        let diff = serial.max_abs_diff(&par);
+        println!("TP{tp} block forward: max |serial - parallel| = {diff:.2e}");
+        anyhow::ensure!(diff < 1e-3, "TP{tp} numerics diverged");
+    }
+
+    // --- 2. DP == serial training equivalence ----------------------------
+    let mut p_serial = init_params(&rt, 5);
+    let mut p_dp = p_serial.clone();
+    let mut rng = Rng::new(77);
+    for step in 0..5 {
+        let (tok, tgt) = synth_batch(cfg.vocab, cfg.batch, cfg.seq, &mut rng);
+        let ls = serial_step(&mut rt, &mut p_serial, &tok, &tgt)?;
+        let ld = dp_step(&mut rt, 4, &mut p_dp, &tok, &tgt)?;
+        let wdiff: f32 = p_serial
+            .iter()
+            .zip(&p_dp)
+            .map(|(a, b)| a.max_abs_diff(b))
+            .fold(0.0, f32::max);
+        println!(
+            "step {step}: serial loss {ls:.4} | dp loss {ld:.4} | max param diff {wdiff:.2e}"
+        );
+        anyhow::ensure!(wdiff < 1e-3, "DP diverged from serial training");
+    }
+
+    // --- 3. the real training run -----------------------------------------
+    println!("\ntraining {steps} steps on 4 logical devices...");
+    let rep = train_dp(&mut rt, 4, steps, 7)?;
+    for (i, l) in rep.losses.iter().enumerate() {
+        if i % 20 == 0 || i + 1 == rep.losses.len() {
+            println!("  step {i:>4}  loss {l:.4}");
+        }
+    }
+    println!(
+        "\n{} steps in {:.1}s ({:.0} tokens/s), loss {:.3} -> {:.3}",
+        rep.steps,
+        rep.wall.as_secs_f64(),
+        rep.steps as f64 * rep.tokens_per_step as f64
+            / rep.wall.as_secs_f64(),
+        rep.first_loss(),
+        rep.last_loss()
+    );
+    anyhow::ensure!(
+        rep.last_loss() < rep.first_loss() - 1.0,
+        "loss must drop by >1 nat over {steps} steps"
+    );
+    println!("E2E OK: plan executes, numerics exact, loss decreases.");
+    Ok(())
+}

@@ -1,0 +1,206 @@
+"""AOT bridge: lower every L2 entry point to HLO *text* + a JSON manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust ``xla`` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; python is never on the request path.
+
+Usage:  python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import matmul_kernel_call, layernorm_kernel_call, attention_kernel_call
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, arr_spec):
+    return {
+        "name": name,
+        "shape": list(arr_spec.shape),
+        "dtype": str(arr_spec.dtype),
+    }
+
+
+class Bundle:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.entries = []
+
+    def lower(self, name, fn, in_specs, in_names, meta=None):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*[s for _, s in in_specs_zip(in_specs)])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        outs = jax.tree_util.tree_leaves(out_avals)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [
+                _spec(n, s) for n, s in zip(in_names, in_specs)
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": str(o.dtype)} for o in outs
+            ],
+            "meta": meta or {},
+        }
+        self.entries.append(entry)
+        print(f"  {name}: {len(text)/1e6:.2f} MB HLO, "
+              f"{len(entry['inputs'])} in / {len(entry['outputs'])} out, "
+              f"{time.time()-t0:.1f}s")
+        return entry
+
+
+def in_specs_zip(in_specs):
+    return [(i, s) for i, s in enumerate(in_specs)]
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_all(out_dir: str, use_pallas: bool = True) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = M.GPT2Config()  # vocab 512, seq 64, d 128, L2, h4, ff 512, batch 8
+    names = M.sorted_names(cfg)
+    shapes = M.param_shapes(cfg)
+    param_specs = [f32(*shapes[n]) for n in names]
+    b = Bundle(out_dir)
+    lr = 0.05
+
+    cfg_meta = {
+        "vocab": cfg.vocab, "seq": cfg.seq, "d_model": cfg.d_model,
+        "n_layer": cfg.n_layer, "n_head": cfg.n_head, "d_ff": cfg.d_ff,
+        "batch": cfg.batch, "n_params": int(cfg.n_params()), "lr": lr,
+    }
+    print(f"lowering artifacts for GPT-2 mini ({cfg_meta['n_params']/1e6:.2f}M params), "
+          f"use_pallas={use_pallas}")
+
+    # --- serial training path -------------------------------------------
+    for bs, tag in [(cfg.batch, f"b{cfg.batch}"), (2, "b2")]:
+        b.lower(
+            f"gpt2_grad_step_{tag}",
+            M.make_grad_step(cfg, use_pallas),
+            param_specs + [i32(bs, cfg.seq), i32(bs, cfg.seq)],
+            names + ["tokens", "targets"],
+            meta={"kind": "grad_step", "batch": bs, "n_params": len(names)},
+        )
+    b.lower(
+        "gpt2_sgd_update",
+        M.make_sgd_update(cfg, lr=lr),
+        param_specs + param_specs,
+        names + [f"grad.{n}" for n in names],
+        meta={"kind": "sgd_update", "lr": lr, "n_params": len(names)},
+    )
+    b.lower(
+        "gpt2_forward",
+        M.make_forward(cfg, use_pallas),
+        param_specs + [i32(cfg.batch, cfg.seq)],
+        names + ["tokens"],
+        meta={"kind": "forward", "batch": cfg.batch, "n_params": len(names)},
+    )
+
+    # --- tensor-parallel block shards ------------------------------------
+    d, s_, bt = cfg.d_model, cfg.seq, cfg.batch
+    blk = [f32(*shapes["h0." + n]) for n in M.TP_BLOCK_PARAMS]
+    b.lower(
+        "block_fwd_serial",
+        lambda x, *bp: (M.block_fwd(
+            cfg, dict(zip(["h0." + n for n in M.TP_BLOCK_PARAMS], bp)),
+            "h0.", x, use_pallas),),
+        [f32(bt, s_, d)] + blk,
+        ["x"] + M.TP_BLOCK_PARAMS,
+        meta={"kind": "block_serial"},
+    )
+    for tp in (2, 4):
+        attn_shard, mlp_shard = M.make_tp_block_shard(cfg, tp, use_pallas)
+        hs = cfg.n_head // tp
+        fs = cfg.d_ff // tp
+        attn_specs = [f32(bt, s_, d), f32(d), f32(d),
+                      f32(d, 3 * hs * cfg.d_head), f32(3 * hs * cfg.d_head),
+                      f32(hs * cfg.d_head, d), f32(d)]
+        mlp_specs = [f32(bt, s_, d), f32(d), f32(d),
+                     f32(d, fs), f32(fs), f32(fs, d), f32(d)]
+        b.lower(
+            f"tp{tp}_attn_shard", attn_shard, attn_specs,
+            ["x", "ln1.g", "ln1.b", "attn.wqkv", "attn.bqkv",
+             "attn.wo", "attn.bo"],
+            meta={"kind": "tp_attn_shard", "tp": tp},
+        )
+        b.lower(
+            f"tp{tp}_mlp_shard", mlp_shard, mlp_specs,
+            ["mid", "ln2.g", "ln2.b", "mlp.w1", "mlp.b1",
+             "mlp.w2", "mlp.b2"],
+            meta={"kind": "tp_mlp_shard", "tp": tp},
+        )
+
+    # --- raw kernel demos (runtime smoke artifacts) -----------------------
+    b.lower(
+        "kernel_matmul",
+        lambda x, w, bb: matmul_kernel_call(x, w, bb, "gelu"),
+        [f32(64, 96), f32(96, 128), f32(128)],
+        ["x", "w", "b"],
+        meta={"kind": "kernel", "activation": "gelu"},
+    )
+    b.lower(
+        "kernel_layernorm",
+        lambda x, g, bb: (layernorm_kernel_call(x, g, bb),),
+        [f32(64, 128), f32(128), f32(128)],
+        ["x", "g", "b"],
+        meta={"kind": "kernel"},
+    )
+    b.lower(
+        "kernel_attention",
+        lambda q, k, v: (attention_kernel_call(q, k, v, True),),
+        [f32(8, 64, 32)] * 3,
+        ["q", "k", "v"],
+        meta={"kind": "kernel", "causal": True},
+    )
+
+    manifest = {
+        "version": 1,
+        "config": cfg_meta,
+        "param_names": names,
+        "param_shapes": {n: list(shapes[n]) for n in names},
+        "artifacts": b.entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(b.entries)} artifacts + manifest.json to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference path instead")
+    args = ap.parse_args()
+    build_all(args.out, use_pallas=not args.no_pallas)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from .matmul import linear, matmul_bias_act, matmul_kernel_call
+from .layernorm import layernorm, layernorm_kernel_call
+from .attention import attention, attention_kernel_call
+
+__all__ = [
+    "linear",
+    "matmul_bias_act",
+    "matmul_kernel_call",
+    "layernorm",
+    "layernorm_kernel_call",
+    "attention",
+    "attention_kernel_call",
+]

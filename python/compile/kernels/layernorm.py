@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: row-blocked LayerNorm.
+
+Each program instance normalizes a (block_rows, d) tile entirely in VMEM:
+mean/variance are row reductions on the VPU, the affine epilogue is fused.
+VMEM per instance: 2 * block_rows * d + 2 * d floats.
+
+Forward is pallas; backward is the closed-form layernorm VJP in jnp
+(recompute-from-inputs — the same trade the paper's activation-checkpoint
+solver reasons about).  Validated against ``ref.layernorm_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROWS = 128
+
+
+def _pick_rows(rows: int, pref: int = DEFAULT_ROWS) -> int:
+    for b in range(min(rows, pref), 0, -1):
+        if rows % b == 0:
+            return b
+    return 1
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, y_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    y = (x - mean) * rstd * g_ref[...][None, :] + b_ref[...][None, :]
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def layernorm_kernel_call(x2, g, b, eps=1e-5, block_rows=None):
+    rows, d = x2.shape
+    br = block_rows or _pick_rows(rows)
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x2.dtype),
+        interpret=True,
+    )(x2, g, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def layernorm(x, g, b, eps=1e-5):
+    """LayerNorm over the last axis; arbitrary leading dims."""
+    lead = x.shape[:-1]
+    y2 = layernorm_kernel_call(x.reshape((-1, x.shape[-1])), g, b, eps)
+    return y2.reshape(lead + (x.shape[-1],))
+
+
+def _ln_fwd(x, g, b, eps):
+    return layernorm(x, g, b, eps), (x, g)
+
+
+def _ln_bwd(eps, res, dy):
+    x, g = res
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mean) ** 2, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (xf - mean) * rstd
+    dyf = dy.astype(jnp.float32)
+    dg = jnp.sum(dyf * xhat, axis=tuple(range(x.ndim - 1)))
+    db = jnp.sum(dyf, axis=tuple(range(x.ndim - 1)))
+    dxhat = dyf * g.astype(jnp.float32)
+    d = x.shape[-1]
+    dx = (
+        dxhat
+        - jnp.mean(dxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    ) * rstd
+    return dx.astype(x.dtype), dg.astype(g.dtype), db.astype(g.dtype)
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)

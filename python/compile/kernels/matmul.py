@@ -1,0 +1,160 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + activation epilogue.
+
+TPU adaptation of the paper's dense hot spots (linear projections / MLP):
+the grid is (M/bm, N/bn, K/bk); each (i, j) output tile keeps an f32
+accumulator in VMEM scratch while the k-loop streams (bm, bk) / (bk, bn)
+tiles from HBM.  Bias-add and GELU run in the epilogue on the VPU, fused
+with the MXU matmul — the CUDA version would have been a separate kernel.
+
+VMEM footprint per program instance (f32):
+    bm*bk + bk*bn + bm*bn (acc) + bm*bn (out) + bn (bias)   floats.
+The default 128x128x128 tiling uses ~256 KiB, well under the ~16 MiB VMEM
+of a TPU core; MXU utilization estimate for the default tiling is recorded
+in DESIGN.md / EXPERIMENTS.md (Perf section).
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); numerics are validated against ``ref.py`` by pytest.
+
+The public entry points are differentiable: ``custom_vjp`` with the
+backward pass expressed with the *same* pallas matmul kernel
+(dx = dy @ w^T, dw = x^T @ dy), so the training-path HLO also contains
+only pallas-lowered matmuls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 128
+
+
+def _pick_block(dim: int, pref: int = DEFAULT_BLOCK) -> int:
+    """Largest divisor of ``dim`` that is <= ``pref`` (keeps grids exact)."""
+    for b in range(min(dim, pref), 0, -1):
+        if dim % b == 0:
+            return b
+    return 1
+
+
+def _activate(z, activation):
+    if activation is None:
+        return z
+    if activation == "gelu":
+        return jax.nn.gelu(z, approximate=True)
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    raise ValueError(f"unknown activation: {activation}")
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, z_ref, y_ref, acc_ref, *, nk, activation):
+    """One (i, j, k) grid step: accumulate a K-tile; epilogue on last k."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        z = acc_ref[...] + b_ref[...][None, :].astype(jnp.float32)
+        z_ref[...] = z.astype(z_ref.dtype)
+        y_ref[...] = _activate(z, activation).astype(y_ref.dtype)
+
+
+def matmul_kernel_call(x, w, b, activation, bm=None, bn=None, bk=None):
+    """Raw pallas call: returns (z, y) = (x @ w + b, act(z)).
+
+    ``z`` (pre-activation) is emitted alongside ``y`` so the custom VJP can
+    compute the activation gradient without recomputing the matmul.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul shape mismatch {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm = bm or _pick_block(m)
+    bn = bn or _pick_block(n)
+    bk = bk or _pick_block(k)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    kernel = functools.partial(_mm_kernel, nk=nk, activation=activation)
+    z, y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+            jax.ShapeDtypeStruct((m, n), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, w, b)
+    return z, y
+
+
+def _matmul_plain(a, bmat):
+    """a @ bmat via the pallas kernel (zero bias, no activation)."""
+    zero_b = jnp.zeros((bmat.shape[1],), dtype=a.dtype)
+    _, y = matmul_kernel_call(a, bmat, zero_b, None)
+    return y
+
+
+def _act_grad(z, activation):
+    if activation is None:
+        return jnp.ones_like(z)
+    if activation == "relu":
+        return (z > 0).astype(z.dtype)
+    if activation == "gelu":
+        # d/dz gelu_tanh(z)
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        inner = c * (z + 0.044715 * z**3)
+        t = jnp.tanh(inner)
+        dinner = c * (1.0 + 3 * 0.044715 * z**2)
+        return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t**2) * dinner
+    raise ValueError(activation)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def matmul_bias_act(x, w, b, activation=None):
+    """y = act(x @ w + b), fully pallas-backed (fwd and bwd)."""
+    _, y = matmul_kernel_call(x, w, b, activation)
+    return y
+
+
+def _mba_fwd(x, w, b, activation):
+    z, y = matmul_kernel_call(x, w, b, activation)
+    return y, (x, w, z)
+
+
+def _mba_bwd(activation, res, dy):
+    x, w, z = res
+    dz = dy * _act_grad(z, activation)
+    dx = _matmul_plain(dz, w.T)
+    dw = _matmul_plain(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+matmul_bias_act.defvjp(_mba_fwd, _mba_bwd)
+
+
+def linear(x, w, b, activation=None):
+    """Linear layer over arbitrary leading dims: flattens to 2-D, calls the
+    pallas matmul, restores the leading shape."""
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    y2 = matmul_bias_act(x2, w, b, activation)
+    return y2.reshape(lead + (w.shape[1],))

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every pallas kernel — the CORE correctness signal.
+
+Each ``*_ref`` mirrors one kernel's public contract exactly (same shapes,
+same dtypes, same math); pytest asserts allclose between kernel and ref
+across a hypothesis-driven sweep of shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def matmul_bias_act_ref(x, w, b, activation=None):
+    z = (
+        jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+        + b.astype(jnp.float32)[None, :]
+    )
+    if activation == "gelu":
+        z = jax.nn.gelu(z, approximate=True)
+    elif activation == "relu":
+        z = jnp.maximum(z, 0.0)
+    elif activation is not None:
+        raise ValueError(activation)
+    return z.astype(x.dtype)
+
+
+def linear_ref(x, w, b, activation=None):
+    lead = x.shape[:-1]
+    y = matmul_bias_act_ref(x.reshape((-1, x.shape[-1])), w, b, activation)
+    return y.reshape(lead + (w.shape[1],))
+
+
+def layernorm_ref(x, g, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mean) ** 2, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps) * g + b
+    return y.astype(x.dtype)
+
+
+def attention_ref(q, k, v, causal=True):
+    d = q.shape[-1]
+    s = jnp.einsum("hqd,hkd->hqk", q, k).astype(jnp.float32) / (d**0.5)
+    if causal:
+        sq, sk = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool))
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p.astype(q.dtype), v)

@@ -1,0 +1,310 @@
+"""L2: GPT-2 style transformer in JAX, calling the L1 pallas kernels.
+
+This is the "model under compilation" for the MAP/Colossal-Auto planner:
+the rust Layer-3 builds the *same* computation graph symbolically, searches
+an execution plan, and then executes AOT-lowered shards of this model on
+logical PJRT devices.  Three flavours are lowered by ``aot.py``:
+
+  * serial          — full fwd / grad-step / sgd-update (ground truth),
+  * tensor-parallel — per-device Megatron-style column/row shards of a
+    block's MLP + attention (two phases); partial sums are all-reduced
+    *in rust*,
+  * data-parallel   — the full grad-step per device on its microbatch;
+    gradient all-reduce happens *in rust*.
+
+Everything is f32 (CPU PJRT).  Parameters travel as a flat, name-sorted
+list so the rust side can address them positionally via the manifest.
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, layernorm, linear
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class GPT2Config:
+    vocab: int = 512
+    seq: int = 64
+    d_model: int = 128
+    n_layer: int = 2
+    n_head: int = 4
+    d_ff: int = 512  # 4 * d_model
+    batch: int = 8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    def n_params(self) -> int:
+        import math
+
+        return sum(math.prod(s) for s in param_shapes(self).values())
+
+
+# Paper Table 3 configurations (layers fixed at 4, seq 1024).
+PAPER_CONFIGS = {
+    "alpha": GPT2Config(vocab=50257, seq=1024, d_model=2048, n_layer=4,
+                        n_head=16, d_ff=8192, batch=8),
+    "beta": GPT2Config(vocab=50257, seq=1024, d_model=4096, n_layer=4,
+                       n_head=32, d_ff=16384, batch=8),
+    "gamma": GPT2Config(vocab=50257, seq=1024, d_model=8192, n_layer=4,
+                        n_head=64, d_ff=32768, batch=8),
+    "delta": GPT2Config(vocab=50257, seq=1024, d_model=16384, n_layer=4,
+                        n_head=128, d_ff=65536, batch=8),
+}
+
+
+def param_shapes(cfg: GPT2Config) -> Dict[str, Tuple[int, ...]]:
+    """Name -> shape; ``sorted(names)`` gives the flat artifact signature."""
+    d, f = cfg.d_model, cfg.d_ff
+    shapes = {
+        "wte": (cfg.vocab, d),
+        "wpe": (cfg.seq, d),
+        "ln_f.g": (d,),
+        "ln_f.b": (d,),
+    }
+    for i in range(cfg.n_layer):
+        p = f"h{i}."
+        shapes[p + "ln1.g"] = (d,)
+        shapes[p + "ln1.b"] = (d,)
+        shapes[p + "attn.wqkv"] = (d, 3 * d)
+        shapes[p + "attn.bqkv"] = (3 * d,)
+        shapes[p + "attn.wo"] = (d, d)
+        shapes[p + "attn.bo"] = (d,)
+        shapes[p + "ln2.g"] = (d,)
+        shapes[p + "ln2.b"] = (d,)
+        shapes[p + "mlp.w1"] = (d, f)
+        shapes[p + "mlp.b1"] = (f,)
+        shapes[p + "mlp.w2"] = (f, d)
+        shapes[p + "mlp.b2"] = (d,)
+    return shapes
+
+
+def sorted_names(cfg: GPT2Config) -> List[str]:
+    return sorted(param_shapes(cfg).keys())
+
+
+def init_params(cfg: GPT2Config, key) -> Dict[str, jax.Array]:
+    params = {}
+    for name, shape in param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name.endswith(".g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.split(".")[-1].startswith("b") and len(shape) == 1:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def params_to_flat(cfg: GPT2Config, params: Dict[str, jax.Array]):
+    return [params[n] for n in sorted_names(cfg)]
+
+
+def flat_to_params(cfg: GPT2Config, flat) -> Dict[str, jax.Array]:
+    return dict(zip(sorted_names(cfg), flat))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _ops(use_pallas: bool):
+    if use_pallas:
+        return linear, layernorm, attention
+    return kref.linear_ref, kref.layernorm_ref, kref.attention_ref
+
+
+def block_fwd(cfg: GPT2Config, p: Dict[str, jax.Array], prefix: str,
+              x: jax.Array, use_pallas: bool = True) -> jax.Array:
+    """One transformer block: x (B, S, D) -> (B, S, D)."""
+    lin, ln, attn = _ops(use_pallas)
+    b, s, d = x.shape
+    h, dh = cfg.n_head, cfg.d_head
+
+    a = ln(x, p[prefix + "ln1.g"], p[prefix + "ln1.b"])
+    qkv = lin(a, p[prefix + "attn.wqkv"], p[prefix + "attn.bqkv"])
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # (B, S, D) -> (B*H, S, dh)
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+    o = attn(heads(q), heads(k), heads(v), True)
+    o = o.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + lin(o, p[prefix + "attn.wo"], p[prefix + "attn.bo"])
+
+    m = ln(x, p[prefix + "ln2.g"], p[prefix + "ln2.b"])
+    m = lin(m, p[prefix + "mlp.w1"], p[prefix + "mlp.b1"], "gelu")
+    m = lin(m, p[prefix + "mlp.w2"], p[prefix + "mlp.b2"])
+    return x + m
+
+
+def forward(cfg: GPT2Config, p: Dict[str, jax.Array], tokens: jax.Array,
+            use_pallas: bool = True) -> jax.Array:
+    """tokens (B, S) int32 -> logits (B, S, V)."""
+    _, ln, _ = _ops(use_pallas)
+    x = p["wte"][tokens] + p["wpe"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layer):
+        x = block_fwd(cfg, p, f"h{i}.", x, use_pallas)
+    x = ln(x, p["ln_f.g"], p["ln_f.b"])
+    return jnp.einsum("bsd,vd->bsv", x, p["wte"])
+
+
+def loss_fn(cfg: GPT2Config, p: Dict[str, jax.Array], tokens, targets,
+            use_pallas: bool = True) -> jax.Array:
+    logits = forward(cfg, p, tokens, use_pallas)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Training-step functions (the AOT artifact entry points)
+# ---------------------------------------------------------------------------
+
+def make_grad_step(cfg: GPT2Config, use_pallas: bool = True):
+    """(flat params..., tokens, targets) -> (loss, flat grads...)."""
+    names = sorted_names(cfg)
+
+    def grad_step(*args):
+        flat, tokens, targets = args[: len(names)], args[-2], args[-1]
+        p = dict(zip(names, flat))
+        loss, grads = jax.value_and_grad(
+            lambda p_: loss_fn(cfg, p_, tokens, targets, use_pallas)
+        )(p)
+        return (loss,) + tuple(grads[n] for n in names)
+
+    return grad_step
+
+
+def make_sgd_update(cfg: GPT2Config, lr: float = 0.05):
+    """(flat params..., flat grads...) -> (flat new params...)."""
+    names = sorted_names(cfg)
+
+    def sgd_update(*args):
+        n = len(names)
+        flat, grads = args[:n], args[n:]
+        return tuple(w - lr * g for w, g in zip(flat, grads))
+
+    return sgd_update
+
+
+def make_forward(cfg: GPT2Config, use_pallas: bool = True):
+    names = sorted_names(cfg)
+
+    def fwd(*args):
+        flat, tokens = args[: len(names)], args[-1]
+        return (forward(cfg, dict(zip(names, flat)), tokens, use_pallas),)
+
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel (Megatron-style) block shards
+# ---------------------------------------------------------------------------
+
+TP_BLOCK_PARAMS = ["ln1.g", "ln1.b", "attn.wqkv", "attn.bqkv", "attn.wo",
+                   "attn.bo", "ln2.g", "ln2.b", "mlp.w1", "mlp.b1",
+                   "mlp.w2", "mlp.b2"]
+
+
+def shard_block_params(cfg: GPT2Config, p: Dict[str, jax.Array], prefix: str,
+                       tp: int, rank: int) -> List[jax.Array]:
+    """Megatron column/row split of one block's parameters for (tp, rank).
+
+    Column-parallel: wqkv/bqkv (head split), mlp.w1/b1 (d_ff split).
+    Row-parallel:    attn.wo, mlp.w2 (input-dim split); their biases are
+    zeroed on ranks > 0 so the rust all-reduce of partials is exact.
+    LayerNorm parameters are replicated.
+    """
+    d, h, dh = cfg.d_model, cfg.n_head, cfg.d_head
+    assert h % tp == 0, "tp must divide n_head"
+    assert cfg.d_ff % tp == 0, "tp must divide d_ff"
+    hs = h // tp
+    fs = cfg.d_ff // tp
+    out = []
+    for name in TP_BLOCK_PARAMS:
+        t = p[prefix + name]
+        if name == "attn.wqkv":
+            q, k, v = jnp.split(t, 3, axis=1)
+
+            def headsplit(m):
+                return m.reshape(d, h, dh)[:, rank * hs:(rank + 1) * hs, :] \
+                        .reshape(d, hs * dh)
+
+            t = jnp.concatenate([headsplit(q), headsplit(k), headsplit(v)],
+                                axis=1)
+        elif name == "attn.bqkv":
+            q, k, v = jnp.split(t, 3)
+
+            def bheadsplit(m):
+                return m.reshape(h, dh)[rank * hs:(rank + 1) * hs, :] \
+                        .reshape(hs * dh)
+
+            t = jnp.concatenate([bheadsplit(q), bheadsplit(k), bheadsplit(v)])
+        elif name == "attn.wo":
+            t = t.reshape(h, dh, d)[rank * hs:(rank + 1) * hs, :, :] \
+                 .reshape(hs * dh, d)
+        elif name == "mlp.w1":
+            t = t[:, rank * fs:(rank + 1) * fs]
+        elif name == "mlp.b1":
+            t = t[rank * fs:(rank + 1) * fs]
+        elif name == "mlp.w2":
+            t = t[rank * fs:(rank + 1) * fs, :]
+        elif name in ("attn.bo", "mlp.b2") and rank != 0:
+            t = jnp.zeros_like(t)
+        out.append(t)
+    return out
+
+
+def make_tp_block_shard(cfg: GPT2Config, tp: int, use_pallas: bool = True):
+    """Two per-device TP phase functions for one transformer block.
+
+    Phase 1 ``attn_shard``: (x, shard params[0:6]) -> attention partial.
+      rust: mid = x + all_reduce(partials)
+    Phase 2 ``mlp_shard``:  (mid, shard params[6:12]) -> MLP partial.
+      rust: out = mid + all_reduce(partials)
+    The composition equals serial ``block_fwd`` up to float associativity.
+    """
+    lin, ln, attn = _ops(use_pallas)
+    hs = cfg.n_head // tp
+    dh = cfg.d_head
+
+    def attn_shard(x, ln1g, ln1b, wqkv, bqkv, wo, bo):
+        b, s, _ = x.shape
+        a = ln(x, ln1g, ln1b)
+        qkv = lin(a, wqkv, bqkv)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(b, s, hs, dh).transpose(0, 2, 1, 3) \
+                    .reshape(b * hs, s, dh)
+
+        o = attn(heads(q), heads(k), heads(v), True)
+        o = o.reshape(b, hs, s, dh).transpose(0, 2, 1, 3) \
+             .reshape(b, s, hs * dh)
+        return (lin(o, wo, bo),)
+
+    def mlp_shard(mid, ln2g, ln2b, w1, b1, w2, b2):
+        m = ln(mid, ln2g, ln2b)
+        m = lin(m, w1, b1, "gelu")
+        return (lin(m, w2, b2),)
+
+    return attn_shard, mlp_shard
+
+
+def tp_block_reference(cfg: GPT2Config, p: Dict[str, jax.Array], prefix: str,
+                       x: jax.Array, tp: int, use_pallas: bool = False):
+    """Pure-python emulation of the rust TP execution (for pytest)."""
+    attn_shard, mlp_shard = make_tp_block_shard(cfg, tp, use_pallas)
+    shards = [shard_block_params(cfg, p, prefix, tp, r) for r in range(tp)]
+    attn_sum = sum(attn_shard(x, *shards[r][:6])[0] for r in range(tp))
+    mid = x + attn_sum
+    mlp_sum = sum(mlp_shard(mid, *shards[r][6:])[0] for r in range(tp))
+    return mid + mlp_sum

@@ -1,0 +1,68 @@
+"""Manifest / artifact consistency: every artifact referenced by the
+manifest exists, parses as HLO text (ENTRY present), and its recorded
+signature matches the model's parameter table."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_files(manifest):
+    for e in manifest["artifacts"]:
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), e["file"]
+        with open(path) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), f"{e['file']} is not HLO text"
+        assert "ENTRY" in text, f"{e['file']} has no ENTRY computation"
+
+
+def test_param_signature_matches_model(manifest):
+    from compile import model as M
+
+    cm = manifest["config"]
+    cfg = M.GPT2Config(vocab=cm["vocab"], seq=cm["seq"], d_model=cm["d_model"],
+                       n_layer=cm["n_layer"], n_head=cm["n_head"],
+                       d_ff=cm["d_ff"], batch=cm["batch"])
+    assert manifest["param_names"] == M.sorted_names(cfg)
+    shapes = M.param_shapes(cfg)
+    for n, s in manifest["param_shapes"].items():
+        assert tuple(s) == shapes[n]
+    assert cm["n_params"] == cfg.n_params()
+
+
+def test_grad_step_signature(manifest):
+    e = {a["name"]: a for a in manifest["artifacts"]}["gpt2_grad_step_b8"]
+    n = e["meta"]["n_params"]
+    assert len(e["inputs"]) == n + 2
+    assert len(e["outputs"]) == n + 1
+    assert e["outputs"][0]["shape"] == []          # scalar loss
+    # grads mirror param shapes positionally
+    for pin, gout in zip(e["inputs"][:n], e["outputs"][1:]):
+        assert pin["shape"] == gout["shape"]
+
+
+def test_tp_shard_shapes_partition(manifest):
+    arts = {a["name"]: a for a in manifest["artifacts"]}
+    d = manifest["config"]["d_model"]
+    for tp in (2, 4):
+        a = arts[f"tp{tp}_attn_shard"]
+        wqkv = next(i for i in a["inputs"] if i["name"] == "attn.wqkv")
+        assert wqkv["shape"] == [d, 3 * d // tp]
+        m = arts[f"tp{tp}_mlp_shard"]
+        w1 = next(i for i in m["inputs"] if i["name"] == "mlp.w1")
+        assert w1["shape"] == [d, manifest["config"]["d_ff"] // tp]

@@ -1,0 +1,203 @@
+"""L1 kernel vs pure-jnp oracle — hypothesis sweeps over shapes.
+
+This is the core correctness signal for the pallas layer: every kernel is
+checked against ``ref.py`` across a randomized family of shapes (and the
+custom-VJP backward passes against jax-autodiff of the reference).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attention,
+    attention_kernel_call,
+    layernorm,
+    layernorm_kernel_call,
+    linear,
+    matmul_bias_act,
+    matmul_kernel_call,
+)
+from compile.kernels.ref import (
+    attention_ref,
+    layernorm_ref,
+    linear_ref,
+    matmul_bias_act_ref,
+)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rnd(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul + bias + activation
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 9).map(lambda v: v * 8),
+    k=st.integers(1, 9).map(lambda v: v * 8),
+    n=st.integers(1, 9).map(lambda v: v * 8),
+    act=st.sampled_from([None, "gelu", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, act, seed):
+    x, w, b = rnd(seed, m, k), rnd(seed + 1, k, n), rnd(seed + 2, n)
+    y = matmul_bias_act(x, w, b, act)
+    yr = matmul_bias_act_ref(x, w, b, act)
+    np.testing.assert_allclose(y, yr, atol=2e-4, rtol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 6).map(lambda v: v * 8),
+    k=st.integers(1, 6).map(lambda v: v * 8),
+    n=st.integers(1, 6).map(lambda v: v * 8),
+    act=st.sampled_from([None, "gelu", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_grads_match_ref(m, k, n, act, seed):
+    x, w, b = rnd(seed, m, k), rnd(seed + 1, k, n), rnd(seed + 2, n)
+    gx, gw, gb = jax.grad(
+        lambda x_, w_, b_: matmul_bias_act(x_, w_, b_, act).sum(),
+        argnums=(0, 1, 2),
+    )(x, w, b)
+    rx, rw, rb = jax.grad(
+        lambda x_, w_, b_: matmul_bias_act_ref(x_, w_, b_, act).sum(),
+        argnums=(0, 1, 2),
+    )(x, w, b)
+    np.testing.assert_allclose(gx, rx, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(gw, rw, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(gb, rb, atol=2e-3, rtol=2e-3)
+
+
+def test_matmul_awkward_blocks():
+    # prime-ish dims exercise the _pick_block divisor fallback
+    x, w, b = rnd(0, 30, 42), rnd(1, 42, 18), rnd(2, 18)
+    np.testing.assert_allclose(
+        matmul_bias_act(x, w, b, "gelu"),
+        matmul_bias_act_ref(x, w, b, "gelu"),
+        atol=2e-4, rtol=2e-4,
+    )
+
+
+def test_matmul_kernel_emits_preactivation():
+    x, w, b = rnd(0, 16, 16), rnd(1, 16, 16), rnd(2, 16)
+    z, y = matmul_kernel_call(x, w, b, "relu")
+    np.testing.assert_allclose(
+        z, matmul_bias_act_ref(x, w, b, None), atol=2e-4, rtol=2e-4
+    )
+    np.testing.assert_allclose(y, jnp.maximum(z, 0.0), atol=1e-6)
+
+
+def test_linear_leading_dims():
+    x, w, b = rnd(0, 4, 6, 24), rnd(1, 24, 16), rnd(2, 16)
+    np.testing.assert_allclose(
+        linear(x, w, b, "gelu"), linear_ref(x, w, b, "gelu"),
+        atol=2e-4, rtol=2e-4,
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        matmul_kernel_call(rnd(0, 8, 9), rnd(1, 8, 8), rnd(2, 8), None)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 12).map(lambda v: v * 4),
+    d=st.integers(2, 16).map(lambda v: v * 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(rows, d, seed):
+    x = rnd(seed, rows, d)
+    g = rnd(seed + 1, d) + 1.0
+    b = rnd(seed + 2, d)
+    np.testing.assert_allclose(
+        layernorm_kernel_call(x, g, b), layernorm_ref(x, g, b),
+        atol=2e-4, rtol=2e-4,
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    bsz=st.integers(1, 4),
+    rows=st.integers(1, 8).map(lambda v: v * 4),
+    d=st.integers(2, 8).map(lambda v: v * 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_grads_match_ref(bsz, rows, d, seed):
+    x, g, b = rnd(seed, bsz, rows, d), rnd(seed + 1, d) + 1.0, rnd(seed + 2, d)
+    got = jax.grad(lambda *a: layernorm(*a).sum(), argnums=(0, 1, 2))(x, g, b)
+    want = jax.grad(lambda *a: layernorm_ref(*a).sum(), argnums=(0, 1, 2))(x, g, b)
+    for gg, ww in zip(got, want):
+        np.testing.assert_allclose(gg, ww, atol=2e-3, rtol=2e-3)
+
+
+def test_layernorm_normalizes():
+    x = 5.0 + 3.0 * rnd(0, 16, 64)
+    y = layernorm_kernel_call(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(np.mean(y, axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(y, axis=-1), 1.0, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    bh=st.integers(1, 6),
+    s=st.integers(1, 8).map(lambda v: v * 8),
+    d=st.sampled_from([8, 16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(bh, s, d, causal, seed):
+    q, k, v = rnd(seed, bh, s, d), rnd(seed + 1, bh, s, d), rnd(seed + 2, bh, s, d)
+    np.testing.assert_allclose(
+        attention_kernel_call(q, k, v, causal),
+        attention_ref(q, k, v, causal),
+        atol=3e-4, rtol=3e-4,
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    s=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_grads_match_ref(s, causal, seed):
+    q, k, v = rnd(seed, 2, s, 16), rnd(seed + 1, 2, s, 16), rnd(seed + 2, 2, s, 16)
+    got = jax.grad(lambda *a: attention(*a, causal).sum(), argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(lambda *a: attention_ref(*a, causal).sum(), argnums=(0, 1, 2))(q, k, v)
+    for gg, ww in zip(got, want):
+        np.testing.assert_allclose(gg, ww, atol=2e-3, rtol=2e-3)
+
+
+def test_attention_causal_ignores_future():
+    """Perturbing future keys/values must not change causal outputs."""
+    q, k, v = rnd(0, 2, 32, 16), rnd(1, 2, 32, 16), rnd(2, 2, 32, 16)
+    out1 = attention_kernel_call(q, k, v, True)
+    k2 = k.at[:, 16:].set(99.0)
+    v2 = v.at[:, 16:].set(-99.0)
+    out2 = attention_kernel_call(q, k2, v2, True)
+    np.testing.assert_allclose(out1[:, :16], out2[:, :16], atol=1e-5)
+
+
+def test_attention_rows_are_convex_combinations():
+    """Non-causal attention output rows lie in the convex hull of V rows."""
+    q, k, v = rnd(0, 1, 16, 8), rnd(1, 1, 16, 8), rnd(2, 1, 16, 8)
+    out = np.asarray(attention_kernel_call(q, k, v, False))[0]
+    vmin, vmax = np.min(np.asarray(v)[0], 0), np.max(np.asarray(v)[0], 0)
+    assert (out >= vmin - 1e-4).all() and (out <= vmax + 1e-4).all()

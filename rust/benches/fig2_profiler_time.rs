@@ -1,0 +1,73 @@
+//! Bench: Figure 2 — symbolic execution vs real execution cost.
+//!
+//! The paper's claim: meta-propagation profiles a model in negligible
+//! time, where real execution takes orders of magnitude longer (and
+//! real memory). We measure both paths on the same graphs, including a
+//! paper-scale model that is impossible to actually execute here.
+//!
+//! `cargo bench --bench fig2_profiler_time [-- --quick]`
+
+use automap::graph::models::{gpt2, mlp, vit, Gpt2Cfg};
+use automap::profiler::{execute, profile, random_feeds};
+use automap::util::bench::{bench, quick, stats_headers, Table};
+
+fn main() {
+    let q = quick();
+    let iters = if q { 3 } else { 15 };
+
+    let cases: Vec<(&str, automap::graph::Graph, bool)> = vec![
+        ("mlp-4x256", mlp(16, &[256, 256, 256, 256, 10]), true),
+        (
+            "gpt2-tiny",
+            gpt2(&Gpt2Cfg {
+                vocab: 128,
+                seq: 32,
+                d_model: 64,
+                n_layer: 2,
+                n_head: 4,
+                d_ff: 256,
+                batch: 2,
+            }),
+            true,
+        ),
+        ("vit-tiny", vit(2, 32, 4, 64, 2, 4, 10), true),
+        // paper-scale: symbolic only — real execution would need >50 GB
+        ("gpt2-delta(14.5B)", gpt2(&Gpt2Cfg::paper("delta")), false),
+    ];
+
+    let mut table = Table::new(
+        "Fig. 2 — profiling cost: symbolic vs real execution",
+        &["model", "nodes", "symbolic", "real exec", "speedup"],
+    );
+    let mut micro = Table::new("raw timings", &stats_headers());
+
+    for (name, g, can_exec) in cases {
+        let sym = bench(&format!("sym:{name}"), 1, iters, || {
+            profile(&g).peak_fwd_activation
+        });
+        micro.stats_row(&sym);
+        let (real_str, speedup) = if can_exec {
+            let real = bench(&format!("real:{name}"), 0, iters.min(5), || {
+                execute(&g, random_feeds(&g, 0, 16))
+                    .unwrap()
+                    .peak_activation
+            });
+            micro.stats_row(&real);
+            (
+                format!("{:.2} ms", real.median_ns / 1e6),
+                format!("{:.0}x", real.median_ns / sym.median_ns),
+            )
+        } else {
+            ("OOM (symbolic only)".into(), "inf".into())
+        };
+        table.row(vec![
+            name.into(),
+            g.len().to_string(),
+            format!("{:.3} ms", sym.median_ns / 1e6),
+            real_str,
+            speedup,
+        ]);
+    }
+    table.print();
+    micro.print();
+}

@@ -1,0 +1,119 @@
+//! Bench: tensor layout manager (§4.3, Fig. 6 / Algorithm 1).
+//!
+//! Compares the heuristic search against the paper's two straw-men —
+//! dimension-by-dimension conversion and exhaustive search (BFS here;
+//! the enumeration table of Fig. 6 only exists for 1-D meshes) — on
+//! conversion quality (comm time of the emitted path) and search time,
+//! over every spec pair of 1-D/2-D/3-D meshes. Also measures the §4.3
+//! cache in solver-like workloads.
+//!
+//! `cargo bench --bench layout_conversion [-- --quick]`
+
+use automap::cluster::{DeviceMesh, GB};
+use automap::layout::LayoutManager;
+use automap::spec::ShardingSpec;
+use automap::util::bench::{bench, quick, stats_headers, Table};
+
+fn mesh(shape: &[usize]) -> DeviceMesh {
+    let n: usize = shape.iter().product();
+    DeviceMesh {
+        shape: shape.to_vec(),
+        devices: (0..n).collect(),
+        axis_alpha: vec![2e-6; shape.len()],
+        axis_beta: vec![100.0 * GB; shape.len()],
+    }
+}
+
+fn main() {
+    let q = quick();
+    let mut table = Table::new(
+        "layout conversion: heuristic (Alg. 1) vs dim-by-dim vs BFS",
+        &["mesh", "pairs", "heuristic ms(total)", "bfs ms(total)",
+          "comm heur/bfs", "comm dxd/heur", "avg steps"],
+    );
+
+    for shape in [vec![4usize], vec![2, 4], vec![2, 2, 2]] {
+        let m = mesh(&shape);
+        let tshape = vec![16usize, 16, 16];
+        let specs = ShardingSpec::enumerate(&tshape, &m);
+        let mut pairs = Vec::new();
+        for a in &specs {
+            for b in &specs {
+                if a != b {
+                    pairs.push((a.clone(), b.clone()));
+                }
+            }
+        }
+        if q {
+            pairs.truncate(60);
+        }
+
+        let t0 = std::time::Instant::now();
+        let mut heur_comm = 0.0;
+        let mut steps = 0usize;
+        {
+            let lm = LayoutManager::new(m.clone());
+            for (a, b) in &pairs {
+                let p = lm
+                    .greedy_search(a, b, &tshape, 4)
+                    .unwrap_or_else(|| lm.bfs_search(a, b, &tshape, 4).unwrap());
+                heur_comm += p.comm_time;
+                steps += p.len();
+            }
+        }
+        let heur_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let t0 = std::time::Instant::now();
+        let mut bfs_comm = 0.0;
+        {
+            let lm = LayoutManager::new(m.clone());
+            for (a, b) in &pairs {
+                bfs_comm += lm.bfs_search(a, b, &tshape, 4).unwrap().comm_time;
+            }
+        }
+        let bfs_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let mut dxd_comm = 0.0;
+        {
+            let lm = LayoutManager::new(m.clone());
+            for (a, b) in &pairs {
+                dxd_comm += lm.dim_by_dim(a, b, &tshape, 4).comm_time;
+            }
+        }
+
+        table.row(vec![
+            format!("{shape:?}"),
+            pairs.len().to_string(),
+            format!("{heur_ms:.1}"),
+            format!("{bfs_ms:.1}"),
+            format!("{:.2}", heur_comm / bfs_comm.max(1e-30)),
+            format!("{:.2}x", dxd_comm / heur_comm.max(1e-30)),
+            format!("{:.2}", steps as f64 / pairs.len() as f64),
+        ]);
+    }
+    table.print();
+
+    // cache behaviour under solver-like repetition
+    let m = mesh(&[2, 4]);
+    let tshape = vec![64usize, 128];
+    let specs = ShardingSpec::enumerate(&tshape, &m);
+    let mut lm = LayoutManager::new(m);
+    let s = bench("convert-with-cache(2x4)", 1, if q { 50 } else { 2000 }, || {
+        let mut acc = 0.0;
+        for a in specs.iter().take(6) {
+            for b in specs.iter().take(6) {
+                acc += lm.convert(a, b, &tshape, 4).comm_time;
+            }
+        }
+        acc
+    });
+    let mut micro = Table::new("cache micro", &stats_headers());
+    micro.stats_row(&s);
+    micro.print();
+    println!(
+        "cache: {} entries, {} hits / {} misses",
+        lm.cache_len(),
+        lm.cache_hits,
+        lm.cache_misses
+    );
+}

@@ -1,0 +1,146 @@
+//! Bench: intra-op solver (Eq. 1) scaling + §5.3 two-stage ablation.
+//!
+//! Part 1: solve time and plan quality vs graph size and beam width, with
+//! the exact branch-and-bound as quality reference on the small case.
+//! Part 2: the two-stage budget sweep [(1+α)^n] — intra-op budget vs
+//! total (intra-op + checkpoint) time, the ablation DESIGN.md calls out.
+//!
+//! `cargo bench --bench solver_ablation [-- --quick]`
+
+use automap::ckpt::{build_stages, common_nodes, linearize, RotorSolver};
+use automap::cluster::{DeviceMesh, GB};
+use automap::graph::models::{gpt2, mlp, Gpt2Cfg};
+use automap::layout::LayoutManager;
+use automap::sim::DeviceModel;
+use automap::solver::{solve, solve_exact, SolveOpts, SolverGraph};
+use automap::util::bench::{quick, Table};
+
+fn mesh(shape: &[usize]) -> DeviceMesh {
+    let n: usize = shape.iter().product();
+    DeviceMesh {
+        shape: shape.to_vec(),
+        devices: (0..n).collect(),
+        axis_alpha: vec![2e-6; shape.len()],
+        axis_beta: vec![100.0 * GB; shape.len()],
+    }
+}
+
+fn main() {
+    let q = quick();
+    let dev = DeviceModel::a100_80gb();
+
+    // --- part 1: scaling + beam-width quality -------------------------
+    let mut t = Table::new(
+        "intra-op solver scaling (unconstrained budget)",
+        &["graph", "anchors", "strategies", "beam", "time ms", "plan s",
+          "vs exact"],
+    );
+    let m4 = mesh(&[4]);
+    let small = mlp(64, &[512, 256, 128, 10]);
+    let mut lm = LayoutManager::new(m4.clone());
+    let sg_small = SolverGraph::build(&small, &m4, &dev, &mut lm);
+    let exact = solve_exact(&sg_small, 1e15).unwrap();
+
+    for (name, g, msh) in [
+        ("mlp-3", small.clone(), m4.clone()),
+        ("gpt2-mini[4]", gpt2(&Gpt2Cfg::mini()), m4.clone()),
+        ("gpt2-mini[2,2]", gpt2(&Gpt2Cfg::mini()), mesh(&[2, 2])),
+        (
+            "gpt2-alpha[2,4]",
+            gpt2(&Gpt2Cfg::paper("alpha")),
+            mesh(&[2, 4]),
+        ),
+    ] {
+        let mut lm = LayoutManager::new(msh.clone());
+        let sg = SolverGraph::build(&g, &msh, &dev, &mut lm);
+        let n_strats: usize =
+            sg.sets.iter().map(|s| s.strategies.len()).sum();
+        for beam in if q { vec![16] } else { vec![8, 64] } {
+            let t0 = std::time::Instant::now();
+            let sol = solve(
+                &sg,
+                1e15,
+                SolveOpts {
+                    beam_width: beam,
+                    anneal_iters: if q { 100 } else { 2000 },
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let vs_exact = if name == "mlp-3" {
+                format!("{:.3}x", sol.time / exact.time)
+            } else {
+                "-".into()
+            };
+            t.row(vec![
+                name.into(),
+                sg.len().to_string(),
+                n_strats.to_string(),
+                beam.to_string(),
+                format!("{:.0}", t0.elapsed().as_secs_f64() * 1e3),
+                format!("{:.5}", sol.time),
+                vs_exact,
+            ]);
+        }
+    }
+    t.print();
+
+    // --- part 2: §5.3 two-stage budget sweep ---------------------------
+    let g = gpt2(&Gpt2Cfg::mini());
+    let msh = mesh(&[2, 2]);
+    let mut lm = LayoutManager::new(msh.clone());
+    let sg = SolverGraph::build(&g, &msh, &dev, &mut lm);
+    let groups = linearize(&g, &common_nodes(&g));
+    let base_budget = {
+        // minimal feasible intra-op memory x headroom
+        let min: f64 = sg.min_mem().iter().sum();
+        min * 1.6
+    };
+    let mut t2 = Table::new(
+        "two-stage integration: intra-op budget sweep [(1+a)^n] (a=0.3)",
+        &["n", "intra budget GB", "intra time ms", "intra mem GB",
+          "ckpt time ms", "total ms"],
+    );
+    let alpha = 0.3f64;
+    let device_budget = base_budget; // what must finally fit
+    let mut best: Option<(usize, f64)> = None;
+    for n in 0..if q { 4 } else { 8 } {
+        let intra_budget = device_budget * (1.0 + alpha).powi(n as i32);
+        let Some(sol) = solve(
+            &sg,
+            intra_budget,
+            SolveOpts {
+                beam_width: if q { 8 } else { 32 },
+                anneal_iters: if q { 100 } else { 1000 },
+                ..Default::default()
+            },
+        ) else {
+            continue;
+        };
+        let stages = build_stages(&g, &groups, &dev, None);
+        let rotor = RotorSolver::new(stages);
+        let act_budget =
+            (device_budget - sol.mem * 0.5).max(device_budget * 0.2);
+        let Some(ck) = rotor.solve(act_budget) else { continue };
+        let total = ck.time + sol.time * 0.1;
+        if best.map(|(_, b)| total < b).unwrap_or(true) {
+            best = Some((n, total));
+        }
+        t2.row(vec![
+            n.to_string(),
+            format!("{:.4}", intra_budget / 1e9),
+            format!("{:.3}", sol.time * 1e3),
+            format!("{:.4}", sol.mem / 1e9),
+            format!("{:.3}", ck.time * 1e3),
+            format!("{:.3}", total * 1e3),
+        ]);
+    }
+    t2.print();
+    if let Some((n, total)) = best {
+        println!(
+            "\nbest sweep point: n = {n} (total {:.3} ms) — the 2-stage \
+             integration picks this plan",
+            total * 1e3
+        );
+    }
+}

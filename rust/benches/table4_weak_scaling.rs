@@ -1,0 +1,110 @@
+//! Bench: regenerate Table 4 (weak-scaling PFLOPS, ours vs baselines) and
+//! time the planning pipeline itself per experiment.
+//!
+//! `cargo bench --bench table4_weak_scaling [-- --quick]`
+
+use automap::cluster::{detect, SimCluster};
+use automap::coordinator::{autoparallelize, PipelineOpts};
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::profiler::profile;
+use automap::sim::{baselines, DeviceModel};
+use automap::solver::SolveOpts;
+use automap::util::bench::{bench, quick, Table};
+
+fn fig5_prefix(n: usize) -> SimCluster {
+    if n == 1 {
+        return SimCluster::single();
+    }
+    let mut c = SimCluster::partially_connected_8gpu();
+    c.n = n;
+    c.latency.truncate(n);
+    c.bandwidth.truncate(n);
+    for row in c.latency.iter_mut() {
+        row.truncate(n);
+    }
+    for row in c.bandwidth.iter_mut() {
+        row.truncate(n);
+    }
+    c
+}
+
+fn main() {
+    let q = quick();
+    let dev = DeviceModel::a100_80gb();
+    let mut t4 = Table::new(
+        "Table 4 — GPT-2 weak scaling, total PFLOPS (paper metric)",
+        &["exp", "#GPU", "DDP", "Megatron-1D", "Optimus-2D", "3D-TP",
+          "ours", "paper(ours)"],
+    );
+    let mut planner = Table::new(
+        "planner wall time per experiment",
+        &["exp", "solve ms"],
+    );
+    let paper_ours = [0.161, 0.332, 0.604, 0.824];
+    for (i, (exp, n)) in
+        [("alpha", 1usize), ("beta", 2), ("gamma", 4), ("delta", 8)]
+            .into_iter()
+            .enumerate()
+    {
+        let cfg = Gpt2Cfg::paper(exp);
+        let g = gpt2(&cfg);
+        let prof = profile(&g);
+        let info = detect(&fig5_prefix(n), 1);
+        let metric = 6.0
+            * cfg.n_params_table3() as f64
+            * (cfg.batch * cfg.seq) as f64;
+        let scale = metric / prof.total_flops();
+        let fmt = |r: &baselines::SimReport| {
+            if r.feasible {
+                format!("{:.3}", r.pflops * scale)
+            } else {
+                "-".into()
+            }
+        };
+        let opts = PipelineOpts {
+            sweep: if q { 1 } else { 3 },
+            solve: SolveOpts {
+                beam_width: if q { 8 } else { 48 },
+                anneal_iters: if q { 100 } else { 3000 },
+                lagrange_iters: 4,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let ours = autoparallelize(&g, &fig5_prefix(n), &dev, &opts)
+            .map(|p| format!("{:.3}", p.pflops * scale))
+            .unwrap_or_else(|_| "-".into());
+        planner.row(vec![
+            exp.into(),
+            format!("{:.0}", t0.elapsed().as_secs_f64() * 1e3),
+        ]);
+        t4.row(vec![
+            exp.into(),
+            n.to_string(),
+            fmt(&baselines::ddp(&cfg, &g, &prof, &info, &dev)),
+            fmt(&baselines::megatron_1d(&cfg, &g, &prof, &info, &dev)),
+            fmt(&baselines::optimus_2d(&cfg, &g, &prof, &info, &dev)),
+            fmt(&baselines::tp_3d(&cfg, &g, &prof, &info, &dev)),
+            ours,
+            format!("{:.3}", paper_ours[i]),
+        ]);
+    }
+    t4.print();
+    planner.print();
+
+    // micro: baseline costing is cheap enough to sweep
+    let cfg = Gpt2Cfg::paper("delta");
+    let g = gpt2(&cfg);
+    let prof = profile(&g);
+    let info = detect(&fig5_prefix(8), 1);
+    let s = bench("baseline-cost(delta)", 2, if q { 5 } else { 30 }, || {
+        baselines::megatron_1d(&cfg, &g, &prof, &info, &dev).iter_time
+    });
+    let mut micro = Table::new(
+        "micro",
+        &automap::util::bench::stats_headers(),
+    );
+    micro.stats_row(&s);
+    micro.print();
+}

@@ -1,0 +1,212 @@
+//! Network linearization (§5.2.2–5.2.4): partition the DAG into a chain
+//! of node groups (the rotor solver's stages) using the dependency-pool
+//! rule of Algorithm 2, with common-node propagation (Def. 5.3 /
+//! Lemma 5.4) so attention masks and friends don't glue everything into
+//! one group.
+
+use std::collections::HashMap;
+
+use crate::graph::op::{Op, PlaceholderKind};
+use crate::graph::{Graph, NodeId};
+
+/// Common nodes: non-differentiable sources propagated forward
+/// (Lemma 5.4): a node is common if its op is non-differentiable, its
+/// output dtype carries no gradient, or *all* its parents are common.
+pub fn common_nodes(g: &Graph) -> Vec<bool> {
+    let mut common = vec![false; g.len()];
+    for n in &g.nodes {
+        if n.op == Op::Placeholder(PlaceholderKind::Const)
+            || (!n.out.dtype.differentiable()
+                && !matches!(n.op, Op::Output))
+        {
+            common[n.id] = true;
+            continue;
+        }
+        if matches!(n.op, Op::Placeholder(_) | Op::Output) {
+            continue;
+        }
+        if !n.inputs.is_empty()
+            && n.inputs.iter().all(|&i| common[i])
+        {
+            common[n.id] = true;
+        }
+    }
+    common
+}
+
+/// Is this node invisible to the dependency pool?  Placeholders live in
+/// model data; common nodes are excluded per §5.2.3; Output is the sink.
+fn excluded(g: &Graph, common: &[bool], id: NodeId) -> bool {
+    common[id]
+        || matches!(g.node(id).op, Op::Placeholder(_) | Op::Output)
+}
+
+/// Algorithm 2: linearize `g` into a chain of stages.
+///
+/// Walk nodes in topological order maintaining a pool of outstanding
+/// dependencies; a node ends the current group when, after removing its
+/// parents' dependencies and adding its own, the pool is exactly "this
+/// node's own deps" — i.e. nothing earlier is still needed downstream —
+/// and none of its children is an in-place op (§5.2.4).
+pub fn linearize(g: &Graph, common: &[bool]) -> Vec<Vec<NodeId>> {
+    let users = g.users();
+    let mut groups: Vec<Vec<NodeId>> = Vec::new();
+    let mut current: Vec<NodeId> = Vec::new();
+    // deps_pool[node] = #children not yet processed
+    let mut deps: HashMap<NodeId, usize> = HashMap::new();
+
+    for n in &g.nodes {
+        if excluded(g, common, n.id) {
+            continue;
+        }
+        // remove dependencies this node discharges
+        for &p in &n.inputs {
+            if let Some(c) = deps.get_mut(&p) {
+                *c -= 1;
+                if *c == 0 {
+                    deps.remove(&p);
+                }
+            }
+        }
+        current.push(n.id);
+        // register this node's own downstream dependencies
+        let n_users = users[n.id]
+            .iter()
+            .filter(|&&u| !excluded(g, common, u))
+            .count();
+        if n_users > 0 {
+            deps.insert(n.id, n_users);
+        }
+        // sink check: pool holds at most this node's own entry, and no
+        // child is in-place (in-place children must join this group)
+        let only_self =
+            deps.is_empty() || (deps.len() == 1 && deps.contains_key(&n.id));
+        let inplace_child = users[n.id].iter().any(|&u| {
+            matches!(
+                g.node(u).op,
+                Op::EwUnary { in_place: true, .. }
+                    | Op::EwBinary { in_place: true, .. }
+            )
+        });
+        if only_self && !inplace_child {
+            groups.push(std::mem::take(&mut current));
+        }
+    }
+    if !current.is_empty() {
+        groups.push(current);
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models::{gpt2, mlp, resnet, Gpt2Cfg};
+    use crate::graph::{EwUnary, GraphBuilder};
+
+    #[test]
+    fn chain_mlp_linearizes_per_layer() {
+        let g = mlp(8, &[32, 32, 32, 32, 10]);
+        let common = common_nodes(&g);
+        let groups = linearize(&g, &common);
+        // a pure chain: many small groups, strictly ordered, covering all
+        // differentiable op nodes exactly once
+        let covered: usize = groups.iter().map(|g| g.len()).sum();
+        let expected = g
+            .nodes
+            .iter()
+            .filter(|n| !excluded(&g, &common, n.id))
+            .count();
+        assert_eq!(covered, expected);
+        assert!(groups.len() >= 4, "groups: {}", groups.len());
+    }
+
+    #[test]
+    fn residual_blocks_group_together() {
+        // x -> a -> b -> (x + b): the skip edge must keep a,b in x's group
+        let mut b = GraphBuilder::new("res");
+        let x = b.input("x", vec![8, 16]);
+        let w1 = b.param("w1", vec![16, 16]);
+        let h1 = b.matmul("h1", x, w1);
+        let w2 = b.param("w2", vec![16, 16]);
+        let h2 = b.matmul("h2", h1, w2);
+        let r = b.add_t("residual", h1, h2);
+        let w3 = b.param("w3", vec![16, 16]);
+        let out = b.matmul("out", r, w3);
+        b.output(&[out]);
+        let g = b.finish().unwrap();
+        let groups = linearize(&g, &common_nodes(&g));
+        // h2 cannot end a group: h1 is still needed by the skip edge, so
+        // h2 and the residual add must share a group
+        let gid = |id: NodeId| {
+            groups.iter().position(|grp| grp.contains(&id)).unwrap()
+        };
+        assert_eq!(gid(h2), gid(r));
+        assert!(gid(h1) <= gid(h2));
+        assert!(gid(out) > gid(r));
+    }
+
+    #[test]
+    fn gpt2_mask_is_common_and_blocks_split() {
+        let g = gpt2(&Gpt2Cfg::mini());
+        let common = common_nodes(&g);
+        // the causal mask const and the attn scale const are common
+        let mask = g.nodes.iter().find(|n| n.name == "causal_mask").unwrap();
+        assert!(common[mask.id]);
+        // tokens (int input) are non-differentiable -> common
+        let tokens = g.nodes.iter().find(|n| n.name == "tokens").unwrap();
+        assert!(common[tokens.id]);
+        let groups = linearize(&g, &common);
+        // without common-node removal GPT-2 collapses into ~1 group; with
+        // it we must get at least one group per transformer block
+        assert!(
+            groups.len() >= Gpt2Cfg::mini().n_layer + 1,
+            "got {} groups",
+            groups.len()
+        );
+    }
+
+    #[test]
+    fn resnet152_style_graph_linearizes() {
+        let g = resnet(2, &[2, 2, 2], 10);
+        let groups = linearize(&g, &common_nodes(&g));
+        assert!(groups.len() >= 6, "groups: {}", groups.len());
+        // groups are contiguous in topo order
+        let mut last_max = 0;
+        for grp in &groups {
+            let mn = *grp.iter().min().unwrap();
+            let mx = *grp.iter().max().unwrap();
+            assert!(mn >= last_max);
+            last_max = mx;
+        }
+    }
+
+    #[test]
+    fn inplace_children_extend_groups() {
+        let mut b = GraphBuilder::new("ip");
+        let x = b.input("x", vec![8, 16]);
+        let w = b.param("w", vec![16, 16]);
+        let h = b.matmul("h", x, w);
+        let r = b.ew_unary_inplace("relu", EwUnary::Relu, h);
+        let w2 = b.param("w2", vec![16, 16]);
+        let y = b.matmul("y", r, w2);
+        b.output(&[y]);
+        let g = b.finish().unwrap();
+        let groups = linearize(&g, &common_nodes(&g));
+        let gid = |id: NodeId| {
+            groups.iter().position(|grp| grp.contains(&id)).unwrap()
+        };
+        // h cannot end a group because its child relu is in-place
+        assert_eq!(gid(h), gid(r));
+    }
+
+    #[test]
+    fn all_common_graph_yields_no_groups() {
+        let mut b = GraphBuilder::new("c");
+        let ids = b.input_ids("ids", vec![4]);
+        b.output(&[ids]);
+        let g = b.finish().unwrap();
+        let groups = linearize(&g, &common_nodes(&g));
+        assert!(groups.is_empty());
+    }
+}

@@ -1,0 +1,9 @@
+//! Activation-checkpoint stage (§5.2): graph linearization with common
+//! nodes, then the communication-aware rotor DP of Theorem 5.1.
+
+pub mod linearize;
+pub mod rotor;
+
+pub use linearize::{common_nodes, linearize};
+pub use rotor::{build_stages, Block, NodeTimes, RotorSolution, RotorSolver,
+                Stage};

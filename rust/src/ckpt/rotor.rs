@@ -1,0 +1,421 @@
+//! Activation-checkpoint solver (§5.2): the *rotor* dynamic program of
+//! Herrmann et al. extended with per-stage communication overheads
+//! (Theorem 5.1) so it composes with the intra-op parallel plan.
+
+use crate::graph::{Graph, NodeId};
+use crate::profiler::cost::node_cost;
+use crate::sim::DeviceModel;
+
+/// One linearized stage (a node group from `linearize`).
+#[derive(Debug, Clone, Default)]
+pub struct Stage {
+    pub nodes: Vec<NodeId>,
+    /// Forward / backward compute time (u_f, u_b), seconds.
+    pub uf: f64,
+    pub ub: f64,
+    /// Communication overheads of Table 2 (u_fcomm, u_bcomm).
+    pub uf_comm: f64,
+    pub ub_comm: f64,
+    /// Transient memory overheads (o_f, o_b), bytes.
+    pub of: f64,
+    pub ob: f64,
+    /// Boundary activation leaving this stage (ω_a^ℓ), bytes.
+    pub wa_out: f64,
+    /// Saved intermediate set (ω_ā^ℓ), bytes.
+    pub wbar: f64,
+}
+
+/// Per-node overrides computed from an intra-op plan (sharded times and
+/// memory scale); absent entries fall back to the serial device model.
+#[derive(Debug, Clone, Default)]
+pub struct NodeTimes {
+    pub fwd: Vec<f64>,
+    pub bwd: Vec<f64>,
+    pub fwd_comm: Vec<f64>,
+    pub bwd_comm: Vec<f64>,
+    /// Memory division factor per node (sharding factor ≥ 1).
+    pub mem_scale: Vec<f64>,
+}
+
+/// Build stage costs from the graph, its linearization, and (optionally)
+/// the intra-op plan's per-node times.
+pub fn build_stages(
+    g: &Graph,
+    groups: &[Vec<NodeId>],
+    dev: &DeviceModel,
+    times: Option<&NodeTimes>,
+) -> Vec<Stage> {
+    let users = g.users();
+    let group_of = {
+        let mut m = vec![usize::MAX; g.len()];
+        for (gi, grp) in groups.iter().enumerate() {
+            for &n in grp {
+                m[n] = gi;
+            }
+        }
+        m
+    };
+    groups
+        .iter()
+        .enumerate()
+        .map(|(gi, grp)| {
+            let mut st = Stage { nodes: grp.clone(), ..Default::default() };
+            for &id in grp {
+                let c = node_cost(g, id);
+                let n = g.node(id);
+                let is_gemm = n.op.compute_intensive();
+                let (f, b, fc, bc, scale) = match times {
+                    Some(t) => (
+                        t.fwd[id],
+                        t.bwd[id],
+                        t.fwd_comm[id],
+                        t.bwd_comm[id],
+                        t.mem_scale[id].max(1.0),
+                    ),
+                    None => (
+                        dev.kernel_time(
+                            c.fwd_flops,
+                            (c.fwd_in + c.fwd_out) as f64,
+                            is_gemm,
+                        ),
+                        dev.kernel_time(
+                            c.bwd_flops,
+                            (c.fwd_in + c.bwd_out) as f64,
+                            is_gemm,
+                        ),
+                        0.0,
+                        0.0,
+                        1.0,
+                    ),
+                };
+                st.uf += f;
+                st.ub += b;
+                st.uf_comm += fc;
+                st.ub_comm += bc;
+                st.of = st.of.max(c.fwd_tmp as f64 / scale);
+                st.ob = st.ob.max(c.bwd_tmp as f64 / scale);
+                st.wbar += c.fwd_in as f64 / scale;
+                // boundary: outputs consumed outside this group
+                if users[id].iter().any(|&u| {
+                    group_of.get(u).copied().unwrap_or(usize::MAX) != gi
+                }) {
+                    let sc = match times {
+                        Some(t) => t.mem_scale[id].max(1.0),
+                        None => 1.0,
+                    };
+                    st.wa_out += n.out.bytes() as f64 / sc;
+                }
+            }
+            st
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Dec {
+    Infeasible,
+    Leaf,
+    All,
+    Ck(usize),
+}
+
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub start: usize,
+    pub end: usize, // inclusive stage range
+    pub checkpointed: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct RotorSolution {
+    /// Total fwd+bwd time including recomputation and comm, seconds.
+    pub time: f64,
+    /// Top-level checkpoint segmentation (for the code generator).
+    pub blocks: Vec<Block>,
+    pub budget: f64,
+}
+
+pub struct RotorSolver {
+    pub stages: Vec<Stage>,
+    pub bins: usize,
+}
+
+impl RotorSolver {
+    pub fn new(stages: Vec<Stage>) -> RotorSolver {
+        RotorSolver { stages, bins: 256 }
+    }
+
+    /// Time with no checkpointing (keep everything) — the baseline.
+    pub fn no_checkpoint_time(&self) -> f64 {
+        self.stages
+            .iter()
+            .map(|s| s.uf + s.uf_comm + s.ub + s.ub_comm)
+            .sum()
+    }
+
+    /// Memory needed with no checkpointing: all saved sets + worst case.
+    pub fn no_checkpoint_mem(&self) -> f64 {
+        let saved: f64 = self.stages.iter().map(|s| s.wbar).sum();
+        let worst =
+            self.stages.iter().map(|s| s.of.max(s.ob)).fold(0.0, f64::max);
+        let wd = self.stages.last().map(|s| s.wa_out).unwrap_or(0.0);
+        saved + worst + wd
+    }
+
+    /// Solve the Theorem-5.1 DP for `budget` bytes of activation memory.
+    pub fn solve(&self, budget: f64) -> Option<RotorSolution> {
+        let ln = self.stages.len();
+        if ln == 0 {
+            return Some(RotorSolution {
+                time: 0.0,
+                blocks: vec![],
+                budget,
+            });
+        }
+        let bins = self.bins;
+        let q = (budget / bins as f64).max(1.0);
+        let u = |bytes: f64| -> usize { (bytes / q).ceil() as usize };
+
+        // boundary in/out, gradient sizes (units)
+        let wa_in: Vec<usize> = (0..ln)
+            .map(|l| if l == 0 { 0 } else { u(self.stages[l - 1].wa_out) })
+            .collect();
+        let wa_out: Vec<usize> =
+            self.stages.iter().map(|s| u(s.wa_out)).collect();
+        let wbar: Vec<usize> =
+            self.stages.iter().map(|s| u(s.wbar)).collect();
+        let of: Vec<usize> = self.stages.iter().map(|s| u(s.of)).collect();
+        let ob: Vec<usize> = self.stages.iter().map(|s| u(s.ob)).collect();
+        let wdelta = &wa_out; // δ^ℓ has the shape of a^ℓ
+
+        let uf: Vec<f64> = self
+            .stages
+            .iter()
+            .map(|s| s.uf + s.uf_comm)
+            .collect();
+        let ub: Vec<f64> = self
+            .stages
+            .iter()
+            .map(|s| s.ub + s.ub_comm)
+            .collect();
+
+        // m_all / m_empty thresholds (Eq. 6)
+        let m_all = |s: usize, t: usize| -> usize {
+            (wdelta[t] + wbar[s] + of[s]).max(wdelta[s] + wbar[s] + ob[s])
+        };
+        let m_empty = |s: usize, t: usize| -> usize {
+            let mut m = wdelta[t] + wa_in[s] + wa_out[s] + of[s];
+            for j in s + 1..t {
+                m = m.max(wdelta[t] + wa_in[j] + wa_out[j] + of[j]);
+            }
+            m
+        };
+
+        let idx = |s: usize, t: usize, m: usize| (s * ln + t) * (bins + 1) + m;
+        let mut c = vec![f64::INFINITY; ln * ln * (bins + 1)];
+        let mut dec = vec![Dec::Infeasible; ln * ln * (bins + 1)];
+
+        for s in 0..ln {
+            for m in 0..=bins {
+                if m >= m_all(s, s) {
+                    c[idx(s, s, m)] = uf[s] + ub[s];
+                    dec[idx(s, s, m)] = Dec::Leaf;
+                }
+            }
+        }
+        for len in 1..ln {
+            for s in 0..ln - len {
+                let t = s + len;
+                let me = m_empty(s, t);
+                let ma = m_all(s, t);
+                let prefix: Vec<f64> = {
+                    // prefix[k] = Σ_{j=s}^{s+k-1} uf[j]
+                    let mut p = vec![0.0];
+                    for j in s..t {
+                        p.push(p.last().unwrap() + uf[j]);
+                    }
+                    p
+                };
+                for m in 0..=bins {
+                    let mut best = f64::INFINITY;
+                    let mut bd = Dec::Infeasible;
+                    if m >= me {
+                        for sp in s + 1..=t {
+                            if wa_in[sp] > m {
+                                continue;
+                            }
+                            let right = c[idx(sp, t, m - wa_in[sp])];
+                            let left = c[idx(s, sp - 1, m)];
+                            let v = prefix[sp - s] + right + left;
+                            if v < best {
+                                best = v;
+                                bd = Dec::Ck(sp);
+                            }
+                        }
+                    }
+                    if m >= ma && wbar[s] <= m {
+                        let v = uf[s] + ub[s] + c[idx(s + 1, t, m - wbar[s])];
+                        if v < best {
+                            best = v;
+                            bd = Dec::All;
+                        }
+                    }
+                    c[idx(s, t, m)] = best;
+                    dec[idx(s, t, m)] = bd;
+                }
+            }
+        }
+
+        let total = c[idx(0, ln - 1, bins)];
+        if !total.is_finite() {
+            return None;
+        }
+
+        // extract the top-level segmentation
+        let mut blocks = Vec::new();
+        let (mut s, t, mut m) = (0usize, ln - 1, bins);
+        loop {
+            match dec[idx(s, t, m)] {
+                Dec::Leaf => {
+                    blocks.push(Block {
+                        start: s,
+                        end: t,
+                        checkpointed: false,
+                    });
+                    break;
+                }
+                Dec::All => {
+                    blocks.push(Block {
+                        start: s,
+                        end: s,
+                        checkpointed: false,
+                    });
+                    if s == t {
+                        break;
+                    }
+                    m -= wbar[s];
+                    s += 1;
+                }
+                Dec::Ck(sp) => {
+                    blocks.push(Block {
+                        start: s,
+                        end: sp - 1,
+                        checkpointed: true,
+                    });
+                    m -= wa_in[sp];
+                    s = sp;
+                }
+                Dec::Infeasible => return None,
+            }
+            if s == t {
+                blocks.push(Block { start: s, end: t, checkpointed: false });
+                break;
+            }
+        }
+
+        Some(RotorSolution { time: total, blocks, budget })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::linearize::{common_nodes, linearize};
+    use crate::graph::models::{gpt2, mlp, Gpt2Cfg};
+
+    fn solver_for(g: &crate::graph::Graph) -> RotorSolver {
+        let groups = linearize(g, &common_nodes(g));
+        let stages =
+            build_stages(g, &groups, &DeviceModel::a100_80gb(), None);
+        RotorSolver::new(stages)
+    }
+
+    #[test]
+    fn unconstrained_budget_equals_no_checkpoint() {
+        let g = mlp(64, &[256; 8].iter().chain(&[10]).cloned()
+            .collect::<Vec<_>>());
+        let r = solver_for(&g);
+        let sol = r.solve(r.no_checkpoint_mem() * 4.0).unwrap();
+        assert!(
+            (sol.time - r.no_checkpoint_time()).abs()
+                / r.no_checkpoint_time()
+                < 1e-9,
+            "sol {} vs base {}",
+            sol.time,
+            r.no_checkpoint_time()
+        );
+        assert!(sol.blocks.iter().all(|b| !b.checkpointed));
+    }
+
+    #[test]
+    fn tight_budget_forces_recompute_and_costs_time() {
+        let g = gpt2(&Gpt2Cfg::mini());
+        let r = solver_for(&g);
+        let base_mem = r.no_checkpoint_mem();
+        let base_time = r.no_checkpoint_time();
+        let sol = r.solve(base_mem * 0.45).unwrap();
+        assert!(
+            sol.time > base_time * 1.01,
+            "tight budget must recompute: {} vs {}",
+            sol.time,
+            base_time
+        );
+        assert!(sol.blocks.iter().any(|b| b.checkpointed));
+    }
+
+    #[test]
+    fn time_is_monotone_in_budget() {
+        let g = gpt2(&Gpt2Cfg::mini());
+        let r = solver_for(&g);
+        let base = r.no_checkpoint_mem();
+        let mut last = f64::INFINITY;
+        for frac in [0.4, 0.55, 0.7, 0.85, 1.2] {
+            if let Some(sol) = r.solve(base * frac) {
+                assert!(
+                    sol.time <= last * (1.0 + 1e-9),
+                    "time must not increase with budget (frac {frac})"
+                );
+                last = sol.time;
+            }
+        }
+    }
+
+    #[test]
+    fn impossible_budget_returns_none() {
+        let g = gpt2(&Gpt2Cfg::mini());
+        let r = solver_for(&g);
+        assert!(r.solve(1024.0).is_none()); // 1 KiB: hopeless
+    }
+
+    #[test]
+    fn blocks_partition_the_chain() {
+        let g = gpt2(&Gpt2Cfg::mini());
+        let r = solver_for(&g);
+        let sol = r.solve(r.no_checkpoint_mem() * 0.5).unwrap();
+        let mut next = 0;
+        for b in &sol.blocks {
+            assert_eq!(b.start, next);
+            assert!(b.end >= b.start);
+            next = b.end + 1;
+        }
+        assert_eq!(next, r.stages.len());
+    }
+
+    #[test]
+    fn comm_overheads_increase_solution_time() {
+        let g = gpt2(&Gpt2Cfg::mini());
+        let groups = linearize(&g, &common_nodes(&g));
+        let dev = DeviceModel::a100_80gb();
+        let mut stages = build_stages(&g, &groups, &dev, None);
+        let r0 = RotorSolver::new(stages.clone());
+        let budget = r0.no_checkpoint_mem() * 0.5;
+        let t0 = r0.solve(budget).unwrap().time;
+        for s in &mut stages {
+            s.uf_comm = s.uf * 0.3;
+            s.ub_comm = s.ub * 0.3;
+        }
+        let r1 = RotorSolver::new(stages);
+        let t1 = r1.solve(budget).unwrap().time;
+        assert!(t1 > t0 * 1.1, "comm-aware time {t1} vs {t0}");
+    }
+}

@@ -1,0 +1,208 @@
+//! Cluster detector (§4.2): probes p2p latency/bandwidth with small/large
+//! messages, recovers the fine-grained topology (bandwidth tiers), and
+//! derives all-reduce bus bandwidth via B = S/t · 2(n−1)/n.
+
+use crate::util::rng::Rng;
+
+use super::topology::SimCluster;
+
+const SMALL_MSG: usize = 1 << 10; // 1 KiB -> latency dominated
+const LARGE_MSG: usize = 1 << 26; // 64 MiB -> bandwidth dominated
+const PROBE_REPS: usize = 5;
+
+#[derive(Debug, Clone)]
+pub struct ClusterInfo {
+    pub n: usize,
+    /// Estimated per-pair latency (alpha) in seconds.
+    pub alpha: Vec<Vec<f64>>,
+    /// Estimated per-pair bandwidth (1/beta) in bytes/second.
+    pub beta: Vec<Vec<f64>>,
+    /// Distinct bandwidth tiers, descending (e.g. [NVLink, PCIe, x-NUMA]).
+    pub tiers: Vec<f64>,
+    /// tier_of\[i\]\[j\] = index into `tiers` for the (i, j) link.
+    pub tier_of: Vec<Vec<usize>>,
+}
+
+impl ClusterInfo {
+    /// Groups of devices mutually connected at tier `t` *or better*
+    /// (connected components of the >= tier-t subgraph).
+    pub fn groups_at_tier(&self, t: usize) -> Vec<Vec<usize>> {
+        let mut seen = vec![false; self.n];
+        let mut out = Vec::new();
+        for s in 0..self.n {
+            if seen[s] {
+                continue;
+            }
+            let mut comp = vec![s];
+            seen[s] = true;
+            let mut stack = vec![s];
+            while let Some(u) = stack.pop() {
+                for v in 0..self.n {
+                    if !seen[v] && u != v && self.tier_of[u][v] <= t {
+                        seen[v] = true;
+                        comp.push(v);
+                        stack.push(v);
+                    }
+                }
+            }
+            comp.sort_unstable();
+            out.push(comp);
+        }
+        out
+    }
+
+    /// Estimated ring-all-reduce *bus bandwidth* for a device group
+    /// (gated by the weakest link, per the paper's observation).
+    pub fn bus_bandwidth(&self, group: &[usize]) -> f64 {
+        if group.len() < 2 {
+            return f64::INFINITY;
+        }
+        let mut min_bw = f64::INFINITY;
+        for (ai, &a) in group.iter().enumerate() {
+            for &b in &group[ai + 1..] {
+                min_bw = min_bw.min(self.beta[a][b]);
+            }
+        }
+        min_bw
+    }
+
+    pub fn group_alpha(&self, group: &[usize]) -> f64 {
+        let mut worst: f64 = 0.0;
+        for (ai, &a) in group.iter().enumerate() {
+            for &b in &group[ai + 1..] {
+                worst = worst.max(self.alpha[a][b]);
+            }
+        }
+        worst
+    }
+}
+
+/// Probe every pair with small (latency) and large (bandwidth) messages —
+/// the same microbenchmark schedule a real detector runs over NCCL.
+pub fn detect(cluster: &SimCluster, seed: u64) -> ClusterInfo {
+    let n = cluster.n;
+    let mut rng = Rng::new(seed);
+    let mut alpha = vec![vec![0.0; n]; n];
+    let mut beta = vec![vec![f64::INFINITY; n]; n];
+
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            // latency: median of small-message round trips
+            let mut lat: Vec<f64> = (0..PROBE_REPS)
+                .map(|_| cluster.measure(i, j, SMALL_MSG, &mut rng))
+                .collect();
+            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            alpha[i][j] = lat[PROBE_REPS / 2];
+            // bandwidth: large message, subtract measured latency
+            let mut bw: Vec<f64> = (0..PROBE_REPS)
+                .map(|_| {
+                    let t = cluster.measure(i, j, LARGE_MSG, &mut rng);
+                    LARGE_MSG as f64 / (t - alpha[i][j]).max(1e-9)
+                })
+                .collect();
+            bw.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            beta[i][j] = bw[PROBE_REPS / 2];
+        }
+    }
+
+    // tier classification: cluster the measured bandwidths; two links are
+    // in the same tier if within 30% of each other (noise ≪ the >2x gaps
+    // between real interconnect classes)
+    let mut all_bw: Vec<f64> = (0..n)
+        .flat_map(|i| (0..n).filter(move |&j| j != i).map({
+            let beta = &beta;
+            move |j| beta[i][j]
+        }))
+        .collect();
+    all_bw.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut tiers: Vec<f64> = Vec::new();
+    for &bw in &all_bw {
+        match tiers.last() {
+            Some(&t) if bw > t * 0.7 => {
+                // same tier: keep running representative (max)
+            }
+            _ => tiers.push(bw),
+        }
+    }
+    let tier_of: Vec<Vec<usize>> = (0..n)
+        .map(|i| {
+            (0..n)
+                .map(|j| {
+                    if i == j {
+                        0
+                    } else {
+                        tiers
+                            .iter()
+                            .position(|&t| beta[i][j] > t * 0.7)
+                            .unwrap_or(tiers.len() - 1)
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    ClusterInfo { n, alpha, beta, tiers, tier_of }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology::GB;
+
+    #[test]
+    fn detects_fig5_three_tiers() {
+        let c = SimCluster::partially_connected_8gpu();
+        let info = detect(&c, 42);
+        assert_eq!(info.tiers.len(), 3, "tiers: {:?}", info.tiers);
+        // NVLink pairs land in tier 0
+        assert_eq!(info.tier_of[0][1], 0);
+        assert_eq!(info.tier_of[2][3], 0);
+        // PCIe same-NUMA in tier 1
+        assert_eq!(info.tier_of[0][2], 1);
+        // cross-NUMA in tier 2
+        assert_eq!(info.tier_of[0][4], 2);
+    }
+
+    #[test]
+    fn recovers_nvlink_pairs_as_tier0_groups() {
+        let c = SimCluster::partially_connected_8gpu();
+        let info = detect(&c, 7);
+        let pairs = info.groups_at_tier(0);
+        assert_eq!(
+            pairs,
+            vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]]
+        );
+        let numa = info.groups_at_tier(1);
+        assert_eq!(numa, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+        let all = info.groups_at_tier(2);
+        assert_eq!(all.len(), 1);
+    }
+
+    #[test]
+    fn bandwidth_estimates_are_close() {
+        let c = SimCluster::partially_connected_8gpu();
+        let info = detect(&c, 3);
+        assert!((info.beta[0][1] / (200.0 * GB) - 1.0).abs() < 0.15);
+        assert!((info.beta[0][4] / (10.0 * GB) - 1.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn uniform_cluster_is_single_tier() {
+        let c = SimCluster::fully_connected(4);
+        let info = detect(&c, 5);
+        assert_eq!(info.tiers.len(), 1);
+        assert_eq!(info.groups_at_tier(0).len(), 1);
+    }
+
+    #[test]
+    fn bus_bandwidth_is_weakest_link() {
+        let c = SimCluster::partially_connected_8gpu();
+        let info = detect(&c, 9);
+        let bw_pair = info.bus_bandwidth(&[0, 1]);
+        let bw_numa = info.bus_bandwidth(&[0, 1, 2, 3]);
+        assert!(bw_pair > 5.0 * bw_numa);
+    }
+}

@@ -1,0 +1,308 @@
+//! Device mesh (§2.1, §4.2): a logical N-D tensor over physical devices,
+//! built so that every axis group has uniform communication capability,
+//! plus the α-β cost model for each collective on each axis.
+
+use super::detector::ClusterInfo;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Collective {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+    Broadcast,
+}
+
+#[derive(Debug, Clone)]
+pub struct DeviceMesh {
+    /// Logical shape, e.g. [2, 4]; product == number of devices.
+    pub shape: Vec<usize>,
+    /// Physical device ids in row-major logical order.
+    pub devices: Vec<usize>,
+    /// Per-axis worst-pair latency (alpha, seconds).
+    pub axis_alpha: Vec<f64>,
+    /// Per-axis weakest-link bandwidth (1/beta, bytes/second).
+    pub axis_beta: Vec<f64>,
+}
+
+impl DeviceMesh {
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn n_axes(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn axis_size(&self, axis: usize) -> usize {
+        self.shape[axis]
+    }
+
+    /// Single-device degenerate mesh.
+    pub fn trivial() -> DeviceMesh {
+        DeviceMesh {
+            shape: vec![1],
+            devices: vec![0],
+            axis_alpha: vec![0.0],
+            axis_beta: vec![f64::INFINITY],
+        }
+    }
+
+    /// Device groups that vary along `axis` with other coords fixed.
+    pub fn axis_groups(&self, axis: usize) -> Vec<Vec<usize>> {
+        let n = self.devices.len();
+        let mut strides = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * self.shape[i + 1];
+        }
+        let mut groups = Vec::new();
+        let mut seen = vec![false; n];
+        for start in 0..n {
+            if seen[start] {
+                continue;
+            }
+            let mut group = Vec::with_capacity(self.shape[axis]);
+            for k in 0..self.shape[axis] {
+                let idx = start + k * strides[axis];
+                // only valid if start's coord along axis is 0
+                if (start / strides[axis]) % self.shape[axis] != 0 {
+                    break;
+                }
+                group.push(idx);
+            }
+            if group.len() == self.shape[axis] {
+                for &g in &group {
+                    seen[g] = true;
+                }
+                groups.push(group.iter().map(|&i| self.devices[i]).collect());
+            }
+        }
+        groups
+    }
+
+    /// α-β time of a collective moving `bytes` (the full logical tensor
+    /// participating on this axis) across axis `axis`.
+    ///
+    /// Standard ring formulas:
+    ///   all-reduce:      2(n−1)/n · S/B + 2(n−1)α
+    ///   all-gather:       (n−1)/n · S/B +  (n−1)α   (S = gathered size)
+    ///   reduce-scatter:   (n−1)/n · S/B +  (n−1)α
+    ///   all-to-all:       (n−1)/n · S/B +  (n−1)α   (balanced permute)
+    ///   broadcast:              S/B     +  (n−1)α   (pipelined)
+    pub fn collective_time(&self, op: Collective, bytes: f64, axis: usize)
+                           -> f64 {
+        let n = self.shape[axis] as f64;
+        if n <= 1.0 {
+            return 0.0;
+        }
+        let b = self.axis_beta[axis];
+        let a = self.axis_alpha[axis];
+        match op {
+            Collective::AllReduce => {
+                2.0 * (n - 1.0) / n * bytes / b + 2.0 * (n - 1.0) * a
+            }
+            Collective::AllGather
+            | Collective::ReduceScatter
+            | Collective::AllToAll => {
+                (n - 1.0) / n * bytes / b + (n - 1.0) * a
+            }
+            Collective::Broadcast => bytes / b + (n - 1.0) * a,
+        }
+    }
+
+    /// Build a mesh of `shape` over the detected cluster, assigning devices
+    /// hierarchically so the *innermost* (last) axis gets the
+    /// best-connected groups — the assignment rule of §4.2.
+    pub fn build(info: &ClusterInfo, shape: &[usize]) -> Option<DeviceMesh> {
+        let n: usize = shape.iter().product();
+        if n != info.n {
+            return None;
+        }
+        // start from singleton groups; merge along axes innermost-first
+        let mut groups: Vec<Vec<usize>> =
+            (0..info.n).map(|d| vec![d]).collect();
+        for &axis_size in shape.iter().rev() {
+            if axis_size == 1 {
+                continue;
+            }
+            if groups.len() % axis_size != 0 {
+                return None;
+            }
+            groups = merge_groups(info, groups, axis_size);
+        }
+        assert_eq!(groups.len(), 1);
+        let devices = groups.pop().unwrap();
+
+        let mut mesh = DeviceMesh {
+            shape: shape.to_vec(),
+            devices,
+            axis_alpha: vec![0.0; shape.len()],
+            axis_beta: vec![f64::INFINITY; shape.len()],
+        };
+        for axis in 0..shape.len() {
+            let mut worst_a: f64 = 0.0;
+            let mut worst_b = f64::INFINITY;
+            for group in mesh.axis_groups(axis) {
+                if group.len() < 2 {
+                    continue;
+                }
+                worst_a = worst_a.max(info.group_alpha(&group));
+                worst_b = worst_b.min(info.bus_bandwidth(&group));
+            }
+            mesh.axis_alpha[axis] = worst_a;
+            mesh.axis_beta[axis] = worst_b;
+        }
+        Some(mesh)
+    }
+
+    /// All candidate mesh shapes for n devices (up to 3 axes), e.g. for 8:
+    /// [8], [2,4], [4,2], [2,2,2] — the planner tries each.
+    pub fn candidate_shapes(n: usize) -> Vec<Vec<usize>> {
+        let mut out = vec![vec![n]];
+        for a in 2..n {
+            if n % a == 0 {
+                out.push(vec![a, n / a]);
+                let rest = n / a;
+                for b in 2..rest {
+                    if rest % b == 0 {
+                        out.push(vec![a, b, rest / b]);
+                    }
+                }
+            }
+        }
+        if n == 1 {
+            return vec![vec![1]];
+        }
+        out
+    }
+}
+
+/// Merge consecutive groups into super-groups of `k` groups, greedily
+/// maximizing the weakest inter-group bandwidth inside each super-group.
+fn merge_groups(info: &ClusterInfo, mut groups: Vec<Vec<usize>>, k: usize)
+                -> Vec<Vec<usize>> {
+    let group_bw = |a: &[usize], b: &[usize]| -> f64 {
+        let mut min_bw = f64::INFINITY;
+        for &x in a {
+            for &y in b {
+                min_bw = min_bw.min(info.beta[x][y]);
+            }
+        }
+        min_bw
+    };
+    let mut out = Vec::new();
+    while !groups.is_empty() {
+        let mut cur = groups.remove(0);
+        for _ in 1..k {
+            // pick the remaining group with the best weakest-link bandwidth
+            let (best_i, _) = groups
+                .iter()
+                .enumerate()
+                .map(|(i, g)| (i, group_bw(&cur, g)))
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .expect("divisibility checked by caller");
+            let g = groups.remove(best_i);
+            cur.extend(g);
+        }
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::detector::detect;
+    use crate::cluster::topology::{SimCluster, GB};
+
+    fn fig5_info() -> ClusterInfo {
+        detect(&SimCluster::partially_connected_8gpu(), 42)
+    }
+
+    #[test]
+    fn mesh_2x4_keeps_numa_nodes_on_inner_axis() {
+        let info = fig5_info();
+        let mesh = DeviceMesh::build(&info, &[2, 4]).unwrap();
+        // inner axis (axis 1) groups must be the NUMA quads -> PCIe bw
+        let inner = mesh.axis_groups(1);
+        for g in &inner {
+            let mut s = g.clone();
+            s.sort_unstable();
+            assert!(
+                s == vec![0, 1, 2, 3] || s == vec![4, 5, 6, 7],
+                "inner group crossed NUMA: {s:?}"
+            );
+        }
+        assert!(mesh.axis_beta[1] > 15.0 * GB); // PCIe, not cross-NUMA
+        assert!(mesh.axis_beta[0] < 15.0 * GB); // outer axis crosses NUMA
+    }
+
+    #[test]
+    fn mesh_4x2_puts_nvlink_pairs_inner() {
+        let info = fig5_info();
+        let mesh = DeviceMesh::build(&info, &[4, 2]).unwrap();
+        for g in mesh.axis_groups(1) {
+            let mut s = g.clone();
+            s.sort_unstable();
+            assert_eq!(s[0] / 2, s[1] / 2, "inner pair not NVLink: {s:?}");
+        }
+        assert!(mesh.axis_beta[1] > 100.0 * GB);
+    }
+
+    #[test]
+    fn axis_groups_partition_devices() {
+        let info = fig5_info();
+        let mesh = DeviceMesh::build(&info, &[2, 2, 2]).unwrap();
+        for axis in 0..3 {
+            let groups = mesh.axis_groups(axis);
+            assert_eq!(groups.len(), 4);
+            let mut all: Vec<usize> = groups.concat();
+            all.sort_unstable();
+            assert_eq!(all, (0..8).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn collective_costs_scale_correctly() {
+        let mesh = DeviceMesh {
+            shape: vec![4],
+            devices: vec![0, 1, 2, 3],
+            axis_alpha: vec![1e-6],
+            axis_beta: vec![100.0 * GB],
+        };
+        let s = 1e9; // 1 GB
+        let ar = mesh.collective_time(Collective::AllReduce, s, 0);
+        let ag = mesh.collective_time(Collective::AllGather, s, 0);
+        // all-reduce moves 2x the data of all-gather
+        assert!((ar / ag - 2.0).abs() < 0.01);
+        // 1 GB over 100 GB/s, factor 1.5 => 15 ms
+        assert!((ar - 0.015).abs() / 0.015 < 0.01);
+    }
+
+    #[test]
+    fn single_axis_of_one_is_free() {
+        let mesh = DeviceMesh::trivial();
+        assert_eq!(
+            mesh.collective_time(Collective::AllReduce, 1e9, 0),
+            0.0
+        );
+    }
+
+    #[test]
+    fn candidate_shapes_enumerate_factorizations() {
+        let shapes = DeviceMesh::candidate_shapes(8);
+        assert!(shapes.contains(&vec![8]));
+        assert!(shapes.contains(&vec![2, 4]));
+        assert!(shapes.contains(&vec![4, 2]));
+        assert!(shapes.contains(&vec![2, 2, 2]));
+        assert_eq!(DeviceMesh::candidate_shapes(1), vec![vec![1]]);
+        // 7 is prime: only [7]
+        assert_eq!(DeviceMesh::candidate_shapes(7), vec![vec![7]]);
+    }
+
+    #[test]
+    fn mesh_build_rejects_wrong_size() {
+        let info = fig5_info();
+        assert!(DeviceMesh::build(&info, &[3, 3]).is_none());
+    }
+}

@@ -1,0 +1,11 @@
+//! Cluster detection + device mesh (§4.2): simulated interconnects, the
+//! probing detector, bandwidth-aware mesh construction, and the α-β
+//! collective cost model.
+
+pub mod detector;
+pub mod mesh;
+pub mod topology;
+
+pub use detector::{detect, ClusterInfo};
+pub use mesh::{Collective, DeviceMesh};
+pub use topology::{SimCluster, GB};

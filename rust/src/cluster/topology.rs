@@ -1,0 +1,172 @@
+//! Simulated cluster interconnect (substitution for the paper's 8×A100
+//! testbed — see DESIGN.md §Substitutions).
+//!
+//! A `SimCluster` is a per-pair (latency, bandwidth) matrix plus a
+//! `measure()` API shaped exactly like a p2p microbenchmark, so the
+//! detector consumes it the same way it would consume real NCCL probes.
+
+use crate::util::rng::Rng;
+
+pub const GB: f64 = 1e9;
+
+#[derive(Debug, Clone)]
+pub struct SimCluster {
+    pub name: String,
+    pub n: usize,
+    /// latency\[i\]\[j\] seconds for a zero-byte message.
+    pub latency: Vec<Vec<f64>>,
+    /// bandwidth\[i\]\[j\] bytes/second, symmetric.
+    pub bandwidth: Vec<Vec<f64>>,
+    /// multiplicative measurement noise (std dev, e.g. 0.03 = 3%).
+    pub noise: f64,
+}
+
+impl SimCluster {
+    fn uniform(name: &str, n: usize, lat: f64, bw: f64) -> SimCluster {
+        SimCluster {
+            name: name.to_string(),
+            n,
+            latency: vec![vec![lat; n]; n],
+            bandwidth: vec![vec![bw; n]; n],
+            noise: 0.03,
+        }
+    }
+
+    /// The paper's Fig. 5 topology: 8 GPUs, NVLink only between the 4
+    /// adjacent pairs (0,1)(2,3)(4,5)(6,7); PCIe inside a NUMA node
+    /// ({0..3}, {4..7}); the lowest bandwidth across NUMA domains.
+    /// Bandwidth classes follow §7: NVLink >200 GB/s, PCIe ~20 GB/s,
+    /// cross-NUMA ~10 GB/s.
+    pub fn partially_connected_8gpu() -> SimCluster {
+        let mut c = SimCluster::uniform("fig5-8xA100", 8, 12e-6, 10.0 * GB);
+        for i in 0..8 {
+            for j in 0..8 {
+                if i == j {
+                    continue;
+                }
+                if i / 2 == j / 2 {
+                    // NVLink pair
+                    c.latency[i][j] = 2e-6;
+                    c.bandwidth[i][j] = 200.0 * GB;
+                } else if i / 4 == j / 4 {
+                    // same NUMA node via PCIe
+                    c.latency[i][j] = 6e-6;
+                    c.bandwidth[i][j] = 20.0 * GB;
+                }
+                // else: cross-NUMA defaults (12 µs, 10 GB/s)
+            }
+        }
+        c
+    }
+
+    /// Fully NVLink-connected single node (DGX-like).
+    pub fn fully_connected(n: usize) -> SimCluster {
+        SimCluster::uniform(&format!("nvlink-{n}"), n, 2e-6, 200.0 * GB)
+    }
+
+    /// Multi-node cluster: `nodes` × `per_node` devices; NVLink inside a
+    /// node, `net_gbps` Ethernet/IB across nodes.
+    pub fn multi_node(nodes: usize, per_node: usize, net_gbps: f64)
+                      -> SimCluster {
+        let n = nodes * per_node;
+        let mut c = SimCluster::uniform(
+            &format!("{nodes}x{per_node}"),
+            n,
+            25e-6,
+            net_gbps / 8.0 * GB,
+        );
+        for i in 0..n {
+            for j in 0..n {
+                if i != j && i / per_node == j / per_node {
+                    c.latency[i][j] = 2e-6;
+                    c.bandwidth[i][j] = 200.0 * GB;
+                }
+            }
+        }
+        c
+    }
+
+    /// Single device (experiment alpha).
+    pub fn single() -> SimCluster {
+        SimCluster::uniform("single", 1, 0.0, f64::INFINITY)
+    }
+
+    /// Simulated p2p transfer time for `bytes` between `src` and `dst`,
+    /// with multiplicative noise — what a real ping-pong benchmark returns.
+    pub fn measure(&self, src: usize, dst: usize, bytes: usize,
+                   rng: &mut Rng) -> f64 {
+        assert!(src < self.n && dst < self.n);
+        if src == dst {
+            return 0.0;
+        }
+        let ideal =
+            self.latency[src][dst] + bytes as f64 / self.bandwidth[src][dst];
+        let jitter = 1.0 + self.noise * rng.normal();
+        ideal * jitter.max(0.5)
+    }
+
+    /// Ideal (noise-free) p2p time — used by cost models after detection.
+    pub fn ideal_time(&self, src: usize, dst: usize, bytes: usize) -> f64 {
+        if src == dst {
+            0.0
+        } else {
+            self.latency[src][dst] + bytes as f64 / self.bandwidth[src][dst]
+        }
+    }
+
+    /// Slowest-link bandwidth within a device group (the paper's point:
+    /// the weakest link gates collective performance on an axis).
+    pub fn bottleneck_bandwidth(&self, group: &[usize]) -> f64 {
+        let mut min_bw = f64::INFINITY;
+        for (ai, &a) in group.iter().enumerate() {
+            for &b in &group[ai + 1..] {
+                min_bw = min_bw.min(self.bandwidth[a][b]);
+            }
+        }
+        min_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_has_three_bandwidth_classes() {
+        let c = SimCluster::partially_connected_8gpu();
+        assert_eq!(c.bandwidth[0][1], 200.0 * GB); // NVLink pair
+        assert_eq!(c.bandwidth[0][2], 20.0 * GB); // PCIe same NUMA
+        assert_eq!(c.bandwidth[0][4], 10.0 * GB); // cross NUMA
+        assert_eq!(c.bandwidth[6][7], 200.0 * GB);
+    }
+
+    #[test]
+    fn measurement_noise_is_bounded() {
+        let c = SimCluster::partially_connected_8gpu();
+        let mut rng = Rng::new(0);
+        let ideal = c.ideal_time(0, 1, 1 << 26);
+        for _ in 0..100 {
+            let m = c.measure(0, 1, 1 << 26, &mut rng);
+            assert!((m / ideal - 1.0).abs() < 0.25);
+        }
+    }
+
+    #[test]
+    fn bottleneck_detects_weakest_link() {
+        let c = SimCluster::partially_connected_8gpu();
+        assert_eq!(c.bottleneck_bandwidth(&[0, 1]), 200.0 * GB);
+        assert_eq!(c.bottleneck_bandwidth(&[0, 1, 2, 3]), 20.0 * GB);
+        assert_eq!(c.bottleneck_bandwidth(&[0, 4]), 10.0 * GB);
+        assert_eq!(
+            c.bottleneck_bandwidth(&(0..8).collect::<Vec<_>>()),
+            10.0 * GB
+        );
+    }
+
+    #[test]
+    fn multi_node_wires_internal_nvlink() {
+        let c = SimCluster::multi_node(2, 4, 100.0);
+        assert_eq!(c.bandwidth[0][3], 200.0 * GB);
+        assert_eq!(c.bandwidth[0][4], 12.5 * GB);
+    }
+}

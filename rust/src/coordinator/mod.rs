@@ -1,0 +1,9 @@
+//! Layer-3 coordinator: the end-to-end planning pipeline plus the real
+//! training drivers that execute AOT artifacts on logical PJRT devices.
+
+pub mod pipeline;
+pub mod tp;
+pub mod trainer;
+
+pub use pipeline::{autoparallelize, autoparallelize_with_info, FullPlan,
+                   PipelineOpts};

@@ -1,0 +1,311 @@
+//! End-to-end planning pipeline — the paper's `autoparallelize(model)`
+//! one-liner (§3): cluster detection → mesh candidates → intra-op ILP
+//! under the §5.3 budget sweep [(1+α)^n] → communication-aware rotor →
+//! generator lowering.  Returns the fastest feasible `FullPlan`.
+
+use anyhow::{anyhow, Result};
+
+use crate::ckpt::{build_stages, common_nodes, linearize, NodeTimes,
+                  RotorSolver};
+use crate::cluster::{detect, ClusterInfo, DeviceMesh, SimCluster};
+use crate::gen::{lower, ExecutionPlan};
+use crate::graph::op::Op;
+use crate::graph::Graph;
+use crate::layout::LayoutManager;
+use crate::profiler::{profile, GraphProfile};
+use crate::sim::DeviceModel;
+use crate::solver::{solve, Solution, SolveOpts, SolverGraph};
+use crate::util::logger::Phase;
+
+#[derive(Debug, Clone)]
+pub struct PipelineOpts {
+    /// Per-device memory budget in bytes (defaults to the device model).
+    pub budget: Option<f64>,
+    /// §5.3 expansion coefficient α.
+    pub alpha: f64,
+    /// Number of sweep points n ∈ [0, sweep).
+    pub sweep: usize,
+    pub solve: SolveOpts,
+    /// Restrict mesh candidates (None = all factorizations).
+    pub mesh_shapes: Option<Vec<Vec<usize>>>,
+    pub seed: u64,
+}
+
+impl Default for PipelineOpts {
+    fn default() -> Self {
+        PipelineOpts {
+            budget: None,
+            alpha: 0.3,
+            sweep: 10,
+            solve: SolveOpts::default(),
+            mesh_shapes: None,
+            seed: 42,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FullPlan {
+    pub mesh: DeviceMesh,
+    pub plan: ExecutionPlan,
+    /// Per-iteration time including checkpoint recomputation, seconds.
+    pub iter_time: f64,
+    /// Aggregate achieved PFLOPS on this plan.
+    pub pflops: f64,
+    pub mem_per_device: f64,
+    /// Which sweep point n won (intra-op budget = budget·(1+α)^n).
+    pub sweep_n: usize,
+    pub profile: GraphProfile,
+}
+
+/// Split a solver solution into per-node times + memory scales for the
+/// checkpoint stage (fwd:bwd ≈ 1:2 for GEMM-dominated training).
+fn node_times(
+    g: &Graph,
+    sg: &SolverGraph,
+    sol: &Solution,
+    mesh: &DeviceMesh,
+) -> NodeTimes {
+    let mut t = NodeTimes {
+        fwd: vec![0.0; g.len()],
+        bwd: vec![0.0; g.len()],
+        fwd_comm: vec![0.0; g.len()],
+        bwd_comm: vec![0.0; g.len()],
+        mem_scale: vec![1.0; g.len()],
+    };
+    for (i, &anchor) in sg.anchors.iter().enumerate() {
+        let s = &sg.sets[i].strategies[sol.choice[i]];
+        t.fwd[anchor] = s.compute_time / 3.0;
+        t.bwd[anchor] = s.compute_time * 2.0 / 3.0;
+        // partial-sum comm sits on the critical path of both sweeps;
+        // gradient sync is excluded here — overlap is applied at the
+        // plan level (the solver itself stays overlap-blind, §5.1)
+        t.fwd_comm[anchor] = s.comm_time / 3.0;
+        t.bwd_comm[anchor] = s.comm_time * 2.0 / 3.0;
+        t.mem_scale[anchor] =
+            s.out_spec.sharding_factor(mesh).max(1) as f64;
+    }
+    t
+}
+
+/// Parameter-memory share of a solution (placeholder anchors).
+fn param_mem(g: &Graph, sg: &SolverGraph, sol: &Solution) -> f64 {
+    sg.anchors
+        .iter()
+        .enumerate()
+        .filter(|(_, &a)| matches!(g.node(a).op, Op::Placeholder(_)))
+        .map(|(i, _)| sg.sets[i].strategies[sol.choice[i]].mem_bytes)
+        .sum()
+}
+
+/// Run the full 2-stage pipeline against a (simulated) cluster.
+pub fn autoparallelize(
+    g: &Graph,
+    cluster: &SimCluster,
+    dev: &DeviceModel,
+    opts: &PipelineOpts,
+) -> Result<FullPlan> {
+    let info = {
+        let _p = Phase::new("cluster-detect");
+        detect(cluster, opts.seed)
+    };
+    autoparallelize_with_info(g, &info, dev, opts)
+}
+
+pub fn autoparallelize_with_info(
+    g: &Graph,
+    info: &ClusterInfo,
+    dev: &DeviceModel,
+    opts: &PipelineOpts,
+) -> Result<FullPlan> {
+    let prof = profile(g);
+    let budget = opts.budget.unwrap_or(dev.memory * 0.9);
+    let shapes = opts
+        .mesh_shapes
+        .clone()
+        .unwrap_or_else(|| DeviceMesh::candidate_shapes(info.n));
+
+    let groups = linearize(g, &common_nodes(g));
+    let mut best: Option<FullPlan> = None;
+
+    for shape in shapes {
+        let mesh = match DeviceMesh::build(info, &shape) {
+            Some(m) => m,
+            None => continue,
+        };
+        let _p = Phase::new(&format!("mesh {shape:?}"));
+        let mut layout = LayoutManager::new(mesh.clone());
+        let tb = std::time::Instant::now();
+        let sg = SolverGraph::build(g, &mesh, dev, &mut layout);
+        crate::debug!(
+            "sgraph build {:?}: {:.0} ms ({} nodes, {} edges, cache {})",
+            shape,
+            tb.elapsed().as_secs_f64() * 1e3,
+            sg.len(),
+            sg.edges.len(),
+            layout.cache_len()
+        );
+
+        for n in 0..opts.sweep {
+            let intra_budget =
+                budget * (1.0 + opts.alpha).powi(n as i32);
+            let ts = std::time::Instant::now();
+            let sol = match solve(&sg, intra_budget, opts.solve) {
+                Some(s) => s,
+                None => continue,
+            };
+            crate::debug!(
+                "solve n={n}: {:.0} ms",
+                ts.elapsed().as_secs_f64() * 1e3
+            );
+            // stage 2: activation checkpointing under what's left after
+            // model data
+            let times = node_times(g, &sg, &sol, &mesh);
+            let stages = build_stages(g, &groups, dev, Some(&times));
+            let rotor = RotorSolver::new(stages);
+            let act_budget = budget - param_mem(g, &sg, &sol);
+            if act_budget <= 0.0 {
+                continue;
+            }
+            let Some(ck) = rotor.solve(act_budget) else {
+                continue;
+            };
+            // rotor covers the grouped (differentiable) nodes; add the
+            // resharding costs the stages don't see
+            let edge_comm: f64 = sg
+                .edges
+                .iter()
+                .map(|e| e.cost[sol.choice[e.from]][sol.choice[e.to]])
+                .sum();
+            // the runtime overlaps gradient-sync collectives with the
+            // backward sweep (§7: the low-bandwidth DP all-reduce hides
+            // behind backward compute)
+            let grad_comm: f64 = sg
+                .anchors
+                .iter()
+                .enumerate()
+                .map(|(i, _)| {
+                    sg.sets[i].strategies[sol.choice[i]].grad_comm
+                })
+                .sum();
+            let bwd_compute: f64 = sg
+                .anchors
+                .iter()
+                .enumerate()
+                .map(|(i, _)| {
+                    sg.sets[i].strategies[sol.choice[i]].compute_time
+                        * 2.0 / 3.0
+                })
+                .sum();
+            let exposed_grad =
+                (grad_comm - 0.7 * bwd_compute).max(0.0);
+            let iter_time = ck.time + edge_comm + exposed_grad;
+            crate::debug!(
+                "mesh {:?} n={n}: sol.time {:.1}ms (mem {:.1}GB) ck {:.1}ms edge {:.1}ms grad {:.1}ms exposed {:.1}ms",
+                mesh.shape,
+                sol.time * 1e3,
+                sol.mem / 1e9,
+                ck.time * 1e3,
+                edge_comm * 1e3,
+                grad_comm * 1e3,
+                exposed_grad * 1e3
+            );
+            let mem = param_mem(g, &sg, &sol)
+                + rotor.no_checkpoint_mem().min(act_budget);
+            let better = best
+                .as_ref()
+                .map(|b| iter_time < b.iter_time)
+                .unwrap_or(true);
+            if better {
+                let plan = lower(
+                    g, &sg, &sol, &mesh, &mut layout, Some(ck),
+                );
+                best = Some(FullPlan {
+                    mesh: mesh.clone(),
+                    plan,
+                    iter_time,
+                    pflops: prof.total_flops() / iter_time / 1e15,
+                    mem_per_device: mem,
+                    sweep_n: n,
+                    profile: prof.clone(),
+                });
+            }
+            // if even the unconstrained sweep point fit without
+            // checkpointing, larger budgets change nothing
+            if sol.mem <= budget {
+                break;
+            }
+        }
+    }
+    best.ok_or_else(|| {
+        anyhow!("no feasible plan for any mesh under the memory budget")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models::{gpt2, Gpt2Cfg};
+
+    fn fast_opts() -> PipelineOpts {
+        PipelineOpts {
+            sweep: 3,
+            solve: SolveOpts {
+                beam_width: 16,
+                anneal_iters: 200,
+                lagrange_iters: 6,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pipeline_plans_gpt2_mini_on_fig5_cluster() {
+        let g = gpt2(&Gpt2Cfg::mini());
+        let cluster = SimCluster::partially_connected_8gpu();
+        let dev = DeviceModel::a100_80gb();
+        let plan =
+            autoparallelize(&g, &cluster, &dev, &fast_opts()).unwrap();
+        assert!(plan.iter_time > 0.0 && plan.iter_time.is_finite());
+        assert_eq!(
+            plan.mesh.n_devices(),
+            8,
+            "all 8 devices must participate"
+        );
+        assert!(plan.pflops > 0.0);
+        assert!(plan.plan.ckpt.is_some());
+    }
+
+    #[test]
+    fn single_device_degenerates_gracefully() {
+        let g = gpt2(&Gpt2Cfg::mini());
+        let cluster = SimCluster::single();
+        let dev = DeviceModel::a100_80gb();
+        let plan =
+            autoparallelize(&g, &cluster, &dev, &fast_opts()).unwrap();
+        assert_eq!(plan.mesh.n_devices(), 1);
+        // nothing can be sharded on one device
+        for d in plan.plan.decisions.values() {
+            assert!(d.out_spec.used_axes().is_empty());
+        }
+    }
+
+    #[test]
+    fn tight_budget_prefers_checkpointing_over_failure() {
+        let g = gpt2(&Gpt2Cfg::mini());
+        let cluster = SimCluster::fully_connected(4);
+        let dev = DeviceModel::a100_80gb();
+        let mut opts = fast_opts();
+        // budget: model data fits, activations only partially -> the
+        // checkpoint stage must reclaim the difference
+        let prof = profile(&g);
+        opts.budget = Some(
+            prof.model_bytes as f64 * 2.0
+                + prof.saved_activation as f64 * 0.6,
+        );
+        let plan = autoparallelize(&g, &cluster, &dev, &opts).unwrap();
+        assert!(plan.iter_time.is_finite());
+        assert!(plan.mem_per_device <= opts.budget.unwrap() * 1.01);
+    }
+}

@@ -1,0 +1,226 @@
+//! Fluent graph construction with eager symbolic shape inference: each
+//! `add` infers the node's output meta immediately, so malformed models
+//! fail at build time exactly like the paper's tracer does.
+
+use anyhow::{Context, Result};
+
+use super::graph::{Graph, Node, NodeId};
+use super::infer::infer;
+use super::meta::{DType, TensorMeta};
+use super::op::{EwBinary, EwUnary, Op, PlaceholderKind, PoolKind, ReduceKind};
+
+pub struct GraphBuilder {
+    g: Graph,
+    err: Option<anyhow::Error>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> GraphBuilder {
+        GraphBuilder { g: Graph::new(name), err: None }
+    }
+
+    fn push(&mut self, name: &str, op: Op, inputs: Vec<NodeId>,
+            out: TensorMeta) -> NodeId {
+        let id = self.g.nodes.len();
+        self.g.nodes.push(Node {
+            id,
+            name: name.to_string(),
+            op,
+            inputs,
+            out,
+        });
+        id
+    }
+
+    fn add(&mut self, name: &str, op: Op, inputs: Vec<NodeId>) -> NodeId {
+        if self.err.is_some() {
+            return usize::MAX;
+        }
+        let metas: Vec<&TensorMeta> =
+            inputs.iter().map(|&i| &self.g.nodes[i].out).collect();
+        match infer(&op, &metas).with_context(|| format!("at node {name}")) {
+            Ok(out) => self.push(name, op, inputs, out),
+            Err(e) => {
+                self.err = Some(e);
+                usize::MAX
+            }
+        }
+    }
+
+    // --- placeholders ----------------------------------------------------
+
+    pub fn input(&mut self, name: &str, shape: Vec<usize>) -> NodeId {
+        self.push(
+            name,
+            Op::Placeholder(PlaceholderKind::Input),
+            vec![],
+            TensorMeta::f32(shape),
+        )
+    }
+
+    pub fn input_ids(&mut self, name: &str, shape: Vec<usize>) -> NodeId {
+        self.push(
+            name,
+            Op::Placeholder(PlaceholderKind::Input),
+            vec![],
+            TensorMeta::new(shape, DType::I32),
+        )
+    }
+
+    pub fn param(&mut self, name: &str, shape: Vec<usize>) -> NodeId {
+        self.push(
+            name,
+            Op::Placeholder(PlaceholderKind::Param),
+            vec![],
+            TensorMeta::f32(shape),
+        )
+    }
+
+    pub fn constant(&mut self, name: &str, shape: Vec<usize>, dtype: DType)
+                    -> NodeId {
+        self.push(
+            name,
+            Op::Placeholder(PlaceholderKind::Const),
+            vec![],
+            TensorMeta::new(shape, dtype),
+        )
+    }
+
+    // --- compute ops ------------------------------------------------------
+
+    pub fn embedding(&mut self, name: &str, table: NodeId, ids: NodeId)
+                     -> NodeId {
+        self.add(name, Op::Embedding, vec![table, ids])
+    }
+
+    pub fn matmul(&mut self, name: &str, x: NodeId, w: NodeId) -> NodeId {
+        self.add(name, Op::Matmul, vec![x, w])
+    }
+
+    pub fn bmm(&mut self, name: &str, a: NodeId, b: NodeId) -> NodeId {
+        self.add(name, Op::BatchMatmul, vec![a, b])
+    }
+
+    pub fn ew_unary(&mut self, name: &str, kind: EwUnary, x: NodeId)
+                    -> NodeId {
+        self.add(name, Op::EwUnary { kind, in_place: false }, vec![x])
+    }
+
+    pub fn ew_unary_inplace(&mut self, name: &str, kind: EwUnary, x: NodeId)
+                            -> NodeId {
+        self.add(name, Op::EwUnary { kind, in_place: true }, vec![x])
+    }
+
+    pub fn ew_binary(&mut self, name: &str, kind: EwBinary, a: NodeId,
+                     b: NodeId) -> NodeId {
+        self.add(name, Op::EwBinary { kind, in_place: false }, vec![a, b])
+    }
+
+    pub fn add_t(&mut self, name: &str, a: NodeId, b: NodeId) -> NodeId {
+        self.ew_binary(name, EwBinary::Add, a, b)
+    }
+
+    pub fn layernorm(&mut self, name: &str, x: NodeId, g: NodeId, b: NodeId)
+                     -> NodeId {
+        self.add(name, Op::LayerNorm, vec![x, g, b])
+    }
+
+    pub fn batchnorm(&mut self, name: &str, x: NodeId, g: NodeId, b: NodeId)
+                     -> NodeId {
+        self.add(name, Op::BatchNorm, vec![x, g, b])
+    }
+
+    pub fn softmax(&mut self, name: &str, x: NodeId, axis: usize) -> NodeId {
+        self.add(name, Op::Softmax { axis }, vec![x])
+    }
+
+    pub fn reshape(&mut self, name: &str, x: NodeId, shape: Vec<usize>)
+                   -> NodeId {
+        self.add(name, Op::Reshape { shape }, vec![x])
+    }
+
+    pub fn transpose(&mut self, name: &str, x: NodeId, perm: Vec<usize>)
+                     -> NodeId {
+        self.add(name, Op::Transpose { perm }, vec![x])
+    }
+
+    pub fn slice(&mut self, name: &str, x: NodeId, axis: usize, start: usize,
+                 len: usize) -> NodeId {
+        self.add(name, Op::Slice { axis, start, len }, vec![x])
+    }
+
+    pub fn concat(&mut self, name: &str, xs: &[NodeId], axis: usize)
+                  -> NodeId {
+        self.add(name, Op::Concat { axis }, xs.to_vec())
+    }
+
+    pub fn reduce(&mut self, name: &str, x: NodeId, kind: ReduceKind,
+                  axes: Vec<usize>, keepdims: bool) -> NodeId {
+        self.add(name, Op::Reduce { kind, axes, keepdims }, vec![x])
+    }
+
+    pub fn conv2d(&mut self, name: &str, x: NodeId, w: NodeId, stride: usize,
+                  pad: usize) -> NodeId {
+        self.add(name, Op::Conv2d { stride, pad }, vec![x, w])
+    }
+
+    pub fn pool2d(&mut self, name: &str, x: NodeId, kind: PoolKind,
+                  size: usize, stride: usize) -> NodeId {
+        self.add(name, Op::Pool2d { kind, size, stride }, vec![x])
+    }
+
+    pub fn cross_entropy(&mut self, name: &str, logits: NodeId,
+                         targets: NodeId) -> NodeId {
+        self.add(name, Op::CrossEntropy, vec![logits, targets])
+    }
+
+    pub fn output(&mut self, values: &[NodeId]) -> NodeId {
+        if self.err.is_some() {
+            return usize::MAX;
+        }
+        let out = self.g.nodes[values[0]].out.clone();
+        self.push("output", Op::Output, values.to_vec(), out)
+    }
+
+    pub fn finish(self) -> Result<Graph> {
+        if let Some(e) = self.err {
+            return Err(e);
+        }
+        self.g.validate()?;
+        Ok(self.g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_catches_shape_errors_at_build_time() {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.input("x", vec![4, 8]);
+        let w = b.param("w", vec![9, 2]); // mismatch
+        let y = b.matmul("y", x, w);
+        let _ = y;
+        b.output(&[y]);
+        let err = b.finish().unwrap_err();
+        assert!(err.to_string().contains("at node y"), "{err}");
+    }
+
+    #[test]
+    fn mlp_builds() {
+        let mut b = GraphBuilder::new("mlp");
+        let x = b.input("x", vec![32, 784]);
+        let w1 = b.param("w1", vec![784, 256]);
+        let h = b.matmul("h", x, w1);
+        let h = b.ew_unary("relu", EwUnary::Relu, h);
+        let w2 = b.param("w2", vec![256, 10]);
+        let logits = b.matmul("logits", h, w2);
+        let t = b.input_ids("t", vec![32]);
+        let loss = b.cross_entropy("loss", logits, t);
+        b.output(&[loss]);
+        let g = b.finish().unwrap();
+        assert_eq!(g.node(loss).out.shape, Vec::<usize>::new());
+        assert_eq!(g.param_count(), 784 * 256 + 256 * 10);
+    }
+}

@@ -1,0 +1,396 @@
+//! Symbolic shape inference — the rust analog of the paper's meta-backend
+//! execution (§4.1): every op propagates (shape, dtype) only, no storage.
+
+use anyhow::{bail, ensure, Result};
+
+use super::meta::TensorMeta;
+use super::op::Op;
+
+/// Infer the output meta of `op` applied to `ins`.
+pub fn infer(op: &Op, ins: &[&TensorMeta]) -> Result<TensorMeta> {
+    match op {
+        Op::Placeholder(_) | Op::Output => {
+            bail!("placeholder/output metas are supplied, not inferred")
+        }
+        Op::Embedding => {
+            ensure!(ins.len() == 2, "embedding wants [table, ids]");
+            let (table, ids) = (ins[0], ins[1]);
+            ensure!(table.rank() == 2, "table must be 2-D, got {table}");
+            ensure!(!ids.dtype.differentiable(), "ids must be integer");
+            let mut shape = ids.shape.clone();
+            shape.push(table.shape[1]);
+            Ok(TensorMeta::new(shape, table.dtype))
+        }
+        Op::Matmul => {
+            ensure!(ins.len() == 2, "matmul wants [x, w]");
+            let (x, w) = (ins[0], ins[1]);
+            ensure!(w.rank() == 2, "w must be 2-D, got {w}");
+            ensure!(x.rank() >= 1, "x must have rank >= 1");
+            let k = *x.shape.last().unwrap();
+            ensure!(
+                k == w.shape[0],
+                "matmul contraction mismatch: {x} @ {w}"
+            );
+            let mut shape = x.shape[..x.rank() - 1].to_vec();
+            shape.push(w.shape[1]);
+            Ok(TensorMeta::new(shape, x.dtype))
+        }
+        Op::BatchMatmul => {
+            ensure!(ins.len() == 2, "bmm wants [a, b]");
+            let (a, b) = (ins[0], ins[1]);
+            ensure!(
+                a.rank() == b.rank() && a.rank() >= 3,
+                "bmm wants equal ranks >= 3: {a} vs {b}"
+            );
+            let r = a.rank();
+            ensure!(
+                a.shape[..r - 2] == b.shape[..r - 2],
+                "bmm batch dims differ: {a} vs {b}"
+            );
+            ensure!(a.shape[r - 1] == b.shape[r - 2], "bmm K mismatch");
+            let mut shape = a.shape[..r - 1].to_vec();
+            shape.push(b.shape[r - 1]);
+            Ok(TensorMeta::new(shape, a.dtype))
+        }
+        Op::EwUnary { .. } => {
+            ensure!(ins.len() == 1, "unary wants one input");
+            Ok(ins[0].clone())
+        }
+        Op::EwBinary { .. } => {
+            ensure!(ins.len() == 2, "binary wants two inputs");
+            let (a, b) = (ins[0], ins[1]);
+            // numpy-style broadcast
+            let r = a.rank().max(b.rank());
+            let dim = |t: &TensorMeta, i: usize| -> usize {
+                let off = r - t.rank();
+                if i < off { 1 } else { t.shape[i - off] }
+            };
+            let mut shape = Vec::with_capacity(r);
+            for i in 0..r {
+                let (da, db) = (dim(a, i), dim(b, i));
+                ensure!(
+                    da == db || da == 1 || db == 1,
+                    "broadcast mismatch at dim {i}: {a} vs {b}"
+                );
+                shape.push(da.max(db));
+            }
+            Ok(TensorMeta::new(shape, a.dtype))
+        }
+        Op::LayerNorm => {
+            ensure!(ins.len() == 3, "layernorm wants [x, g, b]");
+            let (x, g, b) = (ins[0], ins[1], ins[2]);
+            let d = *x.shape.last().unwrap();
+            ensure!(
+                g.shape == vec![d] && b.shape == vec![d],
+                "layernorm affine params must be [{d}]"
+            );
+            Ok(x.clone())
+        }
+        Op::BatchNorm => {
+            ensure!(ins.len() == 3, "batchnorm wants [x, g, b]");
+            let (x, g) = (ins[0], ins[1]);
+            ensure!(x.rank() >= 2, "batchnorm x rank >= 2");
+            ensure!(g.shape == vec![x.shape[1]], "bn affine over C");
+            Ok(x.clone())
+        }
+        Op::Softmax { axis } => {
+            ensure!(ins.len() == 1);
+            ensure!(*axis < ins[0].rank(), "softmax axis out of range");
+            Ok(ins[0].clone())
+        }
+        Op::Reshape { shape } => {
+            ensure!(ins.len() == 1);
+            ensure!(
+                shape.iter().product::<usize>() == ins[0].numel(),
+                "reshape numel mismatch: {} -> {:?}",
+                ins[0],
+                shape
+            );
+            Ok(TensorMeta::new(shape.clone(), ins[0].dtype))
+        }
+        Op::Transpose { perm } => {
+            ensure!(ins.len() == 1);
+            let x = ins[0];
+            ensure!(perm.len() == x.rank(), "perm rank mismatch");
+            let mut seen = vec![false; perm.len()];
+            for &p in perm {
+                ensure!(p < perm.len() && !seen[p], "perm not a permutation");
+                seen[p] = true;
+            }
+            let shape = perm.iter().map(|&p| x.shape[p]).collect();
+            Ok(TensorMeta::new(shape, x.dtype))
+        }
+        Op::Slice { axis, start, len } => {
+            ensure!(ins.len() == 1);
+            let x = ins[0];
+            ensure!(*axis < x.rank(), "slice axis out of range");
+            ensure!(
+                start + len <= x.shape[*axis],
+                "slice [{start}, {start}+{len}) exceeds dim {}",
+                x.shape[*axis]
+            );
+            let mut shape = x.shape.clone();
+            shape[*axis] = *len;
+            Ok(TensorMeta::new(shape, x.dtype))
+        }
+        Op::Concat { axis } => {
+            ensure!(!ins.is_empty());
+            let first = ins[0];
+            ensure!(*axis < first.rank(), "concat axis out of range");
+            let mut total = 0;
+            for t in ins {
+                ensure!(t.rank() == first.rank(), "concat rank mismatch");
+                for (i, (&a, &b)) in
+                    t.shape.iter().zip(&first.shape).enumerate()
+                {
+                    if i != *axis {
+                        ensure!(a == b, "concat non-axis dim mismatch");
+                    }
+                }
+                total += t.shape[*axis];
+            }
+            let mut shape = first.shape.clone();
+            shape[*axis] = total;
+            Ok(TensorMeta::new(shape, first.dtype))
+        }
+        Op::Reduce { kind, axes, keepdims } => {
+            ensure!(ins.len() == 1);
+            let x = ins[0];
+            for &a in axes {
+                ensure!(a < x.rank(), "reduce axis out of range");
+            }
+            let mut shape = Vec::new();
+            for (i, &d) in x.shape.iter().enumerate() {
+                if axes.contains(&i) {
+                    if *keepdims {
+                        shape.push(1);
+                    }
+                } else {
+                    shape.push(d);
+                }
+            }
+            let _ = kind;
+            Ok(TensorMeta::new(shape, x.dtype))
+        }
+        Op::Conv2d { stride, pad } => {
+            ensure!(ins.len() == 2, "conv2d wants [x, w]");
+            let (x, w) = (ins[0], ins[1]);
+            ensure!(x.rank() == 4 && w.rank() == 4, "conv2d wants 4-D");
+            let (n, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+            let (o, ci, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+            ensure!(c == ci, "conv2d channel mismatch");
+            let ho = (h + 2 * pad - kh) / stride + 1;
+            let wo = (wd + 2 * pad - kw) / stride + 1;
+            Ok(TensorMeta::new(vec![n, o, ho, wo], x.dtype))
+        }
+        Op::Pool2d { size, stride, .. } => {
+            ensure!(ins.len() == 1);
+            let x = ins[0];
+            ensure!(x.rank() == 4, "pool2d wants 4-D");
+            let ho = (x.shape[2] - size) / stride + 1;
+            let wo = (x.shape[3] - size) / stride + 1;
+            Ok(TensorMeta::new(
+                vec![x.shape[0], x.shape[1], ho, wo],
+                x.dtype,
+            ))
+        }
+        Op::CrossEntropy => {
+            ensure!(ins.len() == 2, "xent wants [logits, targets]");
+            let (logits, targets) = (ins[0], ins[1]);
+            ensure!(
+                targets.shape == logits.shape[..logits.rank() - 1],
+                "targets shape must be logits minus class dim"
+            );
+            Ok(TensorMeta::new(vec![], logits.dtype)) // scalar mean
+        }
+    }
+}
+
+/// FLOPs of the *forward* computation of `op` (multiply-accumulate = 2).
+pub fn fwd_flops(op: &Op, ins: &[&TensorMeta], out: &TensorMeta) -> f64 {
+    match op {
+        Op::Matmul => {
+            let k = *ins[0].shape.last().unwrap() as f64;
+            2.0 * out.numel() as f64 * k
+        }
+        Op::BatchMatmul => {
+            let k = *ins[0].shape.last().unwrap() as f64;
+            2.0 * out.numel() as f64 * k
+        }
+        Op::Conv2d { .. } => {
+            let w = ins[1];
+            let per_out = 2.0 * (w.shape[1] * w.shape[2] * w.shape[3]) as f64;
+            out.numel() as f64 * per_out
+        }
+        Op::Embedding => out.numel() as f64, // gather
+        Op::LayerNorm | Op::BatchNorm => 8.0 * ins[0].numel() as f64,
+        Op::Softmax { .. } => 5.0 * ins[0].numel() as f64,
+        Op::EwUnary { kind, .. } => {
+            let c = match kind {
+                super::op::EwUnary::Gelu => 10.0,
+                super::op::EwUnary::Tanh | super::op::EwUnary::Exp => 5.0,
+                _ => 1.0,
+            };
+            c * out.numel() as f64
+        }
+        Op::EwBinary { .. } => out.numel() as f64,
+        Op::Reduce { .. } => ins[0].numel() as f64,
+        Op::Pool2d { size, .. } => (size * size) as f64 * out.numel() as f64,
+        Op::CrossEntropy => 6.0 * ins[0].numel() as f64,
+        _ => 0.0,
+    }
+}
+
+/// FLOPs of the backward computation (rough analytic factors; matmul-like
+/// ops do two GEMMs of the forward size).
+pub fn bwd_flops(op: &Op, ins: &[&TensorMeta], out: &TensorMeta) -> f64 {
+    match op {
+        Op::Matmul | Op::BatchMatmul | Op::Conv2d { .. } => {
+            2.0 * fwd_flops(op, ins, out)
+        }
+        Op::Placeholder(_) | Op::Output => 0.0,
+        _ => fwd_flops(op, ins, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::meta::{DType, TensorMeta as T};
+    use crate::graph::op::{EwBinary, EwUnary, ReduceKind};
+
+    fn f32(shape: &[usize]) -> T {
+        T::f32(shape.to_vec())
+    }
+
+    #[test]
+    fn matmul_flattens_leading() {
+        let x = f32(&[8, 64, 128]);
+        let w = f32(&[128, 512]);
+        let out = infer(&Op::Matmul, &[&x, &w]).unwrap();
+        assert_eq!(out.shape, vec![8, 64, 512]);
+        assert_eq!(
+            fwd_flops(&Op::Matmul, &[&x, &w], &out),
+            2.0 * (8 * 64 * 512) as f64 * 128.0
+        );
+    }
+
+    #[test]
+    fn matmul_rejects_mismatch() {
+        let x = f32(&[4, 10]);
+        let w = f32(&[11, 5]);
+        assert!(infer(&Op::Matmul, &[&x, &w]).is_err());
+    }
+
+    #[test]
+    fn bmm_checks_batch_dims() {
+        let a = f32(&[32, 64, 16]);
+        let b = f32(&[32, 16, 64]);
+        assert_eq!(
+            infer(&Op::BatchMatmul, &[&a, &b]).unwrap().shape,
+            vec![32, 64, 64]
+        );
+        let bad = f32(&[31, 16, 64]);
+        assert!(infer(&Op::BatchMatmul, &[&a, &bad]).is_err());
+    }
+
+    #[test]
+    fn broadcast_binary() {
+        let a = f32(&[8, 64, 128]);
+        let b = f32(&[128]);
+        let out = infer(
+            &Op::EwBinary { kind: EwBinary::Add, in_place: false },
+            &[&a, &b],
+        )
+        .unwrap();
+        assert_eq!(out.shape, vec![8, 64, 128]);
+    }
+
+    #[test]
+    fn embedding_appends_dim() {
+        let table = f32(&[512, 128]);
+        let ids = T::new(vec![8, 64], DType::I32);
+        let out = infer(&Op::Embedding, &[&table, &ids]).unwrap();
+        assert_eq!(out.shape, vec![8, 64, 128]);
+    }
+
+    #[test]
+    fn reshape_transpose_slice_concat() {
+        let x = f32(&[8, 64, 128]);
+        let r = infer(&Op::Reshape { shape: vec![512, 128] }, &[&x]).unwrap();
+        assert_eq!(r.shape, vec![512, 128]);
+        assert!(infer(&Op::Reshape { shape: vec![7] }, &[&x]).is_err());
+
+        let t = infer(&Op::Transpose { perm: vec![1, 0, 2] }, &[&x]).unwrap();
+        assert_eq!(t.shape, vec![64, 8, 128]);
+
+        let s = infer(
+            &Op::Slice { axis: 2, start: 0, len: 64 },
+            &[&x],
+        )
+        .unwrap();
+        assert_eq!(s.shape, vec![8, 64, 64]);
+
+        let c = infer(&Op::Concat { axis: 2 }, &[&s, &s]).unwrap();
+        assert_eq!(c.shape, vec![8, 64, 128]);
+    }
+
+    #[test]
+    fn reduce_shapes() {
+        let x = f32(&[8, 64, 128]);
+        let r = infer(
+            &Op::Reduce { kind: ReduceKind::Mean, axes: vec![2], keepdims: false },
+            &[&x],
+        )
+        .unwrap();
+        assert_eq!(r.shape, vec![8, 64]);
+        let rk = infer(
+            &Op::Reduce { kind: ReduceKind::Sum, axes: vec![0, 2], keepdims: true },
+            &[&x],
+        )
+        .unwrap();
+        assert_eq!(rk.shape, vec![1, 64, 1]);
+    }
+
+    #[test]
+    fn conv_and_pool() {
+        let x = f32(&[4, 3, 32, 32]);
+        let w = f32(&[16, 3, 3, 3]);
+        let out = infer(&Op::Conv2d { stride: 1, pad: 1 }, &[&x, &w]).unwrap();
+        assert_eq!(out.shape, vec![4, 16, 32, 32]);
+        let p = infer(
+            &Op::Pool2d { kind: super::super::op::PoolKind::Max, size: 2, stride: 2 },
+            &[&out],
+        )
+        .unwrap();
+        assert_eq!(p.shape, vec![4, 16, 16, 16]);
+    }
+
+    #[test]
+    fn xent_is_scalar() {
+        let logits = f32(&[8, 64, 512]);
+        let tgt = T::new(vec![8, 64], DType::I32);
+        let out = infer(&Op::CrossEntropy, &[&logits, &tgt]).unwrap();
+        assert_eq!(out.shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn unary_flops_scale_with_kind() {
+        let x = f32(&[10, 10]);
+        let gelu = Op::EwUnary { kind: EwUnary::Gelu, in_place: false };
+        let neg = Op::EwUnary { kind: EwUnary::Neg, in_place: false };
+        let out = infer(&gelu, &[&x]).unwrap();
+        assert!(fwd_flops(&gelu, &[&x], &out) > fwd_flops(&neg, &[&x], &out));
+    }
+
+    #[test]
+    fn bwd_flops_double_for_matmul() {
+        let x = f32(&[16, 32]);
+        let w = f32(&[32, 8]);
+        let out = infer(&Op::Matmul, &[&x, &w]).unwrap();
+        assert_eq!(
+            bwd_flops(&Op::Matmul, &[&x, &w], &out),
+            2.0 * fwd_flops(&Op::Matmul, &[&x, &w], &out)
+        );
+    }
+}

@@ -1,0 +1,121 @@
+//! Tensor metadata: the "symbolic tensor" of the paper's profiler.
+//! Only shape + dtype propagate — no storage is ever allocated during
+//! planning (meta-execution, §4.1).
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    BF16,
+    I32,
+    I64,
+    Bool,
+}
+
+impl DType {
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 | DType::BF16 => 2,
+            DType::I64 => 8,
+            DType::Bool => 1,
+        }
+    }
+
+    /// Non-differentiable dtypes seed common-node propagation (Def. 5.3).
+    pub fn differentiable(self) -> bool {
+        matches!(self, DType::F32 | DType::F16 | DType::BF16)
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::Bool => "bool",
+        };
+        f.write_str(s)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorMeta {
+    pub fn new(shape: Vec<usize>, dtype: DType) -> TensorMeta {
+        TensorMeta { shape, dtype }
+    }
+
+    pub fn f32(shape: Vec<usize>) -> TensorMeta {
+        TensorMeta::new(shape, DType::F32)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * self.dtype.bytes()
+    }
+}
+
+impl fmt::Display for TensorMeta {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}]",
+            self.dtype,
+            self.shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_bytes() {
+        let t = TensorMeta::f32(vec![8, 64, 128]);
+        assert_eq!(t.numel(), 8 * 64 * 128);
+        assert_eq!(t.bytes(), 8 * 64 * 128 * 4);
+        let b = TensorMeta::new(vec![4, 4], DType::BF16);
+        assert_eq!(b.bytes(), 32);
+    }
+
+    #[test]
+    fn scalar_has_numel_one() {
+        let t = TensorMeta::f32(vec![]);
+        assert_eq!(t.numel(), 1);
+        assert_eq!(t.bytes(), 4);
+    }
+
+    #[test]
+    fn differentiability() {
+        assert!(DType::F32.differentiable());
+        assert!(!DType::Bool.differentiable());
+        assert!(!DType::I32.differentiable());
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(TensorMeta::f32(vec![2, 3]).to_string(), "f32[2,3]");
+    }
+}

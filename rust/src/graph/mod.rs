@@ -1,0 +1,16 @@
+//! Computation-graph IR: tensors-as-edges, operators-as-nodes (§2), with
+//! eager symbolic shape inference and model builders for the paper's
+//! evaluation family.
+
+pub mod builder;
+#[allow(clippy::module_inception)]
+pub mod graph;
+pub mod infer;
+pub mod meta;
+pub mod models;
+pub mod op;
+
+pub use builder::GraphBuilder;
+pub use graph::{Graph, Node, NodeId};
+pub use meta::{DType, TensorMeta};
+pub use op::{EwBinary, EwUnary, Op, PlaceholderKind, PoolKind, ReduceKind};

@@ -1,0 +1,168 @@
+//! Operator set of the graph IR.
+//!
+//! This is the closed primitive set the paper's §8.1 wishes PyTorch had:
+//! ~20 op classes are enough to express GPT-2, ViT, ResNet-style and MLP
+//! models, and each class maps to exactly one strategy generator
+//! (`strategy::dispatch`).
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlaceholderKind {
+    /// Activations entering the graph (batch-dependent).
+    Input,
+    /// Trainable parameters (model data).
+    Param,
+    /// Non-differentiable constants (attention masks, position ids).
+    Const,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EwUnary {
+    Gelu,
+    Relu,
+    Tanh,
+    Exp,
+    Neg,
+    Sqrt,
+    Cast,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EwBinary {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Maximum,
+    /// Masked fill (used with bool masks; second input non-differentiable).
+    Where,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReduceKind {
+    Sum,
+    Mean,
+    Max,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Op {
+    Placeholder(PlaceholderKind),
+    /// inputs: [table (V, D), ids (.., int)] -> (.., D)
+    Embedding,
+    /// inputs: [x (..., K), w (K, N)] -> (..., N); leading dims flattened.
+    Matmul,
+    /// inputs: [a (B.., M, K), b (B.., K, N)] -> (B.., M, N)
+    BatchMatmul,
+    EwUnary { kind: EwUnary, in_place: bool },
+    EwBinary { kind: EwBinary, in_place: bool },
+    /// inputs: [x (..., D), gamma (D), beta (D)]
+    LayerNorm,
+    /// inputs: [x (N, C, ..), gamma (C), beta (C)] — stats over N and spatial
+    BatchNorm,
+    Softmax { axis: usize },
+    Reshape { shape: Vec<usize> },
+    Transpose { perm: Vec<usize> },
+    Slice { axis: usize, start: usize, len: usize },
+    Concat { axis: usize },
+    Reduce { kind: ReduceKind, axes: Vec<usize>, keepdims: bool },
+    /// inputs: [x (N, C, H, W), w (O, C, KH, KW)]
+    Conv2d { stride: usize, pad: usize },
+    Pool2d { kind: PoolKind, size: usize, stride: usize },
+    /// inputs: [logits (.., V), targets (.., int)] -> scalar mean NLL
+    CrossEntropy,
+    /// Graph sink; inputs are the values the user keeps.
+    Output,
+}
+
+impl Op {
+    /// Compute-intensive ops anchor solver node-merging (§5.1): trivial
+    /// neighbours are folded into the nearest intensive node.
+    pub fn compute_intensive(&self) -> bool {
+        matches!(
+            self,
+            Op::Matmul | Op::BatchMatmul | Op::Conv2d { .. } | Op::Embedding
+        )
+    }
+
+    /// Zero-FLOP metadata ops (merged into neighbours, never own a strategy).
+    pub fn trivial(&self) -> bool {
+        matches!(
+            self,
+            Op::Reshape { .. }
+                | Op::Transpose { .. }
+                | Op::Slice { .. }
+                | Op::Concat { .. }
+                | Op::Placeholder(_)
+                | Op::Output
+        )
+    }
+
+    /// Non-differentiable ops seed common-node propagation (Lemma 5.4):
+    /// their outputs never need gradients.
+    pub fn non_differentiable(&self) -> bool {
+        matches!(self, Op::Placeholder(PlaceholderKind::Const))
+    }
+
+    /// Short opcode string (FX-style) for DOT export and logging.
+    pub fn opcode(&self) -> &'static str {
+        match self {
+            Op::Placeholder(PlaceholderKind::Input) => "input",
+            Op::Placeholder(PlaceholderKind::Param) => "param",
+            Op::Placeholder(PlaceholderKind::Const) => "const",
+            Op::Embedding => "embedding",
+            Op::Matmul => "matmul",
+            Op::BatchMatmul => "bmm",
+            Op::EwUnary { .. } => "ew_unary",
+            Op::EwBinary { .. } => "ew_binary",
+            Op::LayerNorm => "layernorm",
+            Op::BatchNorm => "batchnorm",
+            Op::Softmax { .. } => "softmax",
+            Op::Reshape { .. } => "reshape",
+            Op::Transpose { .. } => "transpose",
+            Op::Slice { .. } => "slice",
+            Op::Concat { .. } => "concat",
+            Op::Reduce { .. } => "reduce",
+            Op::Conv2d { .. } => "conv2d",
+            Op::Pool2d { .. } => "pool2d",
+            Op::CrossEntropy => "cross_entropy",
+            Op::Output => "output",
+        }
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.opcode())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification() {
+        assert!(Op::Matmul.compute_intensive());
+        assert!(!Op::Matmul.trivial());
+        assert!(Op::Reshape { shape: vec![2] }.trivial());
+        assert!(Op::Placeholder(PlaceholderKind::Const).non_differentiable());
+        assert!(!Op::LayerNorm.non_differentiable());
+    }
+
+    #[test]
+    fn opcodes_unique_enough() {
+        assert_eq!(Op::Matmul.opcode(), "matmul");
+        assert_eq!(
+            Op::Placeholder(PlaceholderKind::Param).opcode(),
+            "param"
+        );
+    }
+}

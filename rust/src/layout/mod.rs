@@ -1,0 +1,467 @@
+//! Tensor layout manager (§4.3): converts a tensor between sharding specs
+//! via a heuristic search over one-step transforms (Algorithm 1), with the
+//! α-β cost of each emitted collective, a conversion-path cache, and the
+//! two baselines the paper compares against (enumeration, dim-by-dim).
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use crate::cluster::{Collective, DeviceMesh};
+use crate::spec::{DimSpec, ShardingSpec};
+
+/// One primitive layout transform (§4.3 "One-step transform").
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransformOp {
+    /// Gather mesh axis `axis` out of tensor dim `dim` (cross-device).
+    AllGather { dim: usize, axis: usize },
+    /// Shard tensor dim `dim` along unused mesh axis `axis` (on-chip).
+    Shard { dim: usize, axis: usize },
+    /// Move mesh axis `axis` from dim `from` to dim `to` (cross-device).
+    AllToAll { from: usize, to: usize, axis: usize },
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TransformPath {
+    pub steps: Vec<(TransformOp, ShardingSpec)>,
+    /// Estimated α-β communication time of the whole path (seconds).
+    pub comm_time: f64,
+}
+
+impl TransformPath {
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+}
+
+/// Heuristic weights (§4.3): all-gather is cross-device so it must cost
+/// more than the on-chip shard; a step penalty discourages long paths.
+const COST_ALL_GATHER: f64 = 4.0;
+const COST_SHARD: f64 = 1.0;
+#[allow(dead_code)]
+const COST_ALL_TO_ALL: f64 = 4.5; // reserved for a future all-to-all-aware dim_diff
+const STEP_PENALTY: f64 = 2.0;
+const MAX_GREEDY_STEPS: usize = 24;
+
+/// Difference between two dim specs (the paper's `dim_diff`).
+fn dim_diff(s: &DimSpec, t: &DimSpec) -> f64 {
+    if s == t {
+        return 0.0;
+    }
+    let sa = s.axes();
+    let ta = t.axes();
+    // longest common prefix survives; the rest must be gathered off `s`
+    // and sharded on for `t`
+    let common = sa.iter().zip(ta).take_while(|(a, b)| a == b).count();
+    let gathers = (sa.len() - common) as f64;
+    let shards = (ta.len() - common) as f64;
+    let mut cost = gathers * COST_ALL_GATHER + shards * COST_SHARD;
+    if gathers > 0.0 && shards > 0.0 {
+        cost += STEP_PENALTY; // multi-operation conversion, e.g. S0 -> S1
+    }
+    cost
+}
+
+/// Heuristic distance between two sharding specs: Σᵢ dim_diff(s[i], t[i]).
+pub fn spec_distance(s: &ShardingSpec, t: &ShardingSpec) -> f64 {
+    s.dims.iter().zip(&t.dims).map(|(a, b)| dim_diff(a, b)).sum()
+}
+
+/// All one-step transforms from `spec` that are valid for (shape, mesh).
+pub fn one_step_transforms(
+    spec: &ShardingSpec,
+    shape: &[usize],
+    mesh: &DeviceMesh,
+) -> Vec<(TransformOp, ShardingSpec)> {
+    let mut out = Vec::new();
+    let used: HashSet<usize> = spec.used_axes().into_iter().collect();
+
+    for (dim, d) in spec.dims.iter().enumerate() {
+        // all-gather: peel the last axis off a sharded dim
+        if let DimSpec::Shard(axes) = d {
+            let mut new_axes = axes.clone();
+            let axis = new_axes.pop().unwrap();
+            let mut dims = spec.dims.clone();
+            dims[dim] = if new_axes.is_empty() {
+                DimSpec::Replica
+            } else {
+                DimSpec::Shard(new_axes)
+            };
+            out.push((
+                TransformOp::AllGather { dim, axis },
+                ShardingSpec { dims },
+            ));
+
+            // all-to-all: move that axis to any other dim
+            for to in 0..spec.rank() {
+                if to == dim {
+                    continue;
+                }
+                let mut dims = spec.dims.clone();
+                let mut from_axes = axes.clone();
+                let axis = from_axes.pop().unwrap();
+                dims[dim] = if from_axes.is_empty() {
+                    DimSpec::Replica
+                } else {
+                    DimSpec::Shard(from_axes)
+                };
+                let mut to_axes = dims[to].axes().to_vec();
+                to_axes.push(axis);
+                dims[to] = DimSpec::Shard(to_axes);
+                let cand = ShardingSpec { dims };
+                if cand.is_valid(shape, mesh) {
+                    out.push((
+                        TransformOp::AllToAll { from: dim, to, axis },
+                        cand,
+                    ));
+                }
+            }
+        }
+        // shard: apply any unused axis to this dim
+        for axis in 0..mesh.n_axes() {
+            if used.contains(&axis) || mesh.axis_size(axis) == 1 {
+                continue;
+            }
+            let mut dims = spec.dims.clone();
+            let mut axes = dims[dim].axes().to_vec();
+            axes.push(axis);
+            dims[dim] = DimSpec::Shard(axes);
+            let cand = ShardingSpec { dims };
+            if cand.is_valid(shape, mesh) {
+                out.push((TransformOp::Shard { dim, axis }, cand));
+            }
+        }
+    }
+    out
+}
+
+/// α-β communication time of one transform step applied to a tensor of
+/// `bytes_global` total bytes.
+pub fn step_time(
+    op: &TransformOp,
+    spec_after: &ShardingSpec,
+    bytes_global: usize,
+    mesh: &DeviceMesh,
+) -> f64 {
+    match op {
+        // on-chip slicing: free in comm terms
+        TransformOp::Shard { .. } => 0.0,
+        TransformOp::AllGather { axis, .. } => {
+            // gathered logical size per group: global / remaining shards
+            let remaining = spec_after.sharding_factor(mesh);
+            let s = bytes_global as f64 / remaining as f64;
+            mesh.collective_time(Collective::AllGather, s, *axis)
+        }
+        TransformOp::AllToAll { axis, .. } => {
+            let factor = spec_after.sharding_factor(mesh) as f64
+                / mesh.axis_size(*axis) as f64;
+            let s = bytes_global as f64 / factor.max(1.0);
+            mesh.collective_time(Collective::AllToAll, s, *axis)
+        }
+    }
+}
+
+/// Tensor layout manager with the Algorithm-1 greedy search and a
+/// (src, dst, shape) -> path cache (§4.3 "cache dictionary").
+pub struct LayoutManager {
+    pub mesh: DeviceMesh,
+    // structural keys: String formatting here dominated solver-graph
+    // construction before the perf pass (EXPERIMENTS.md §Perf)
+    cache: HashMap<(ShardingSpec, ShardingSpec, Vec<usize>), TransformPath>,
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+}
+
+impl LayoutManager {
+    pub fn new(mesh: DeviceMesh) -> LayoutManager {
+        LayoutManager {
+            mesh,
+            cache: HashMap::new(),
+            cache_hits: 0,
+            cache_misses: 0,
+        }
+    }
+
+    /// Find a conversion path src -> dst (Algorithm 1: greedy best-first
+    /// on the heuristic, with a visited set; falls back to BFS if the
+    /// greedy walk stalls). Returns None if src == dst needs no work.
+    pub fn convert(
+        &mut self,
+        src: &ShardingSpec,
+        dst: &ShardingSpec,
+        shape: &[usize],
+        elem_bytes: usize,
+    ) -> TransformPath {
+        if src == dst {
+            return TransformPath::default(); // identity: skip the cache
+        }
+        let key = (src.clone(), dst.clone(), shape.to_vec());
+        if let Some(p) = self.cache.get(&key) {
+            self.cache_hits += 1;
+            return p.clone();
+        }
+        self.cache_misses += 1;
+        let path = self
+            .greedy_search(src, dst, shape, elem_bytes)
+            .unwrap_or_else(|| {
+                self.bfs_search(src, dst, shape, elem_bytes)
+                    .expect("spec space is connected; BFS must succeed")
+            });
+        self.cache.insert(key, path.clone());
+        path
+    }
+
+    /// The paper's Algorithm 1.
+    pub fn greedy_search(
+        &self,
+        src: &ShardingSpec,
+        dst: &ShardingSpec,
+        shape: &[usize],
+        elem_bytes: usize,
+    ) -> Option<TransformPath> {
+        let bytes_global: usize =
+            shape.iter().product::<usize>() * elem_bytes;
+        let mut cur = src.clone();
+        let mut path = TransformPath::default();
+        let mut visited: HashSet<ShardingSpec> = HashSet::new();
+        visited.insert(cur.clone());
+        for _ in 0..MAX_GREEDY_STEPS {
+            if cur == *dst {
+                return Some(path);
+            }
+            let candidates = one_step_transforms(&cur, shape, &self.mesh);
+            let best = candidates
+                .into_iter()
+                .filter(|(_, s)| !visited.contains(s))
+                .min_by(|a, b| {
+                    spec_distance(&a.1, dst)
+                        .partial_cmp(&spec_distance(&b.1, dst))
+                        .unwrap()
+                })?;
+            path.comm_time +=
+                step_time(&best.0, &best.1, bytes_global, &self.mesh);
+            visited.insert(best.1.clone());
+            cur = best.1.clone();
+            path.steps.push(best);
+        }
+        (cur == *dst).then_some(path)
+    }
+
+    /// Exhaustive BFS over one-step transforms: shortest step count
+    /// (baseline + greedy fallback; also the optimality reference in
+    /// benches).
+    pub fn bfs_search(
+        &self,
+        src: &ShardingSpec,
+        dst: &ShardingSpec,
+        shape: &[usize],
+        elem_bytes: usize,
+    ) -> Option<TransformPath> {
+        let bytes_global: usize =
+            shape.iter().product::<usize>() * elem_bytes;
+        if src == dst {
+            return Some(TransformPath::default());
+        }
+        let mut q = VecDeque::new();
+        let mut seen: HashSet<ShardingSpec> = HashSet::new();
+        seen.insert(src.clone());
+        q.push_back((src.clone(), TransformPath::default()));
+        while let Some((cur, path)) = q.pop_front() {
+            for (op, next) in
+                one_step_transforms(&cur, shape, &self.mesh)
+            {
+                if !seen.insert(next.clone()) {
+                    continue;
+                }
+                let mut p = path.clone();
+                p.comm_time +=
+                    step_time(&op, &next, bytes_global, &self.mesh);
+                p.steps.push((op, next.clone()));
+                if next == *dst {
+                    return Some(p);
+                }
+                q.push_back((next, p));
+            }
+        }
+        None
+    }
+
+    /// Baseline: dimension-by-dimension scan (§4.3) — for each tensor dim
+    /// gather everything off, then shard to the target. Always valid,
+    /// often far more traffic than the heuristic path.
+    pub fn dim_by_dim(
+        &self,
+        src: &ShardingSpec,
+        dst: &ShardingSpec,
+        shape: &[usize],
+        elem_bytes: usize,
+    ) -> TransformPath {
+        let bytes_global: usize =
+            shape.iter().product::<usize>() * elem_bytes;
+        let mut cur = src.clone();
+        let mut path = TransformPath::default();
+        for dim in 0..cur.rank() {
+            // gather all axes off this dim
+            while let DimSpec::Shard(axes) = cur.dims[dim].clone() {
+                let mut axes = axes;
+                let axis = axes.pop().unwrap();
+                cur.dims[dim] = if axes.is_empty() {
+                    DimSpec::Replica
+                } else {
+                    DimSpec::Shard(axes)
+                };
+                let op = TransformOp::AllGather { dim, axis };
+                path.comm_time +=
+                    step_time(&op, &cur, bytes_global, &self.mesh);
+                path.steps.push((op, cur.clone()));
+            }
+        }
+        for dim in 0..cur.rank() {
+            // shard to target
+            for &axis in dst.dims[dim].axes() {
+                let mut axes = cur.dims[dim].axes().to_vec();
+                axes.push(axis);
+                cur.dims[dim] = DimSpec::Shard(axes);
+                let op = TransformOp::Shard { dim, axis };
+                path.comm_time +=
+                    step_time(&op, &cur, bytes_global, &self.mesh);
+                path.steps.push((op, cur.clone()));
+            }
+        }
+        debug_assert_eq!(&cur, dst);
+        path
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GB;
+
+    fn mesh(shape: &[usize]) -> DeviceMesh {
+        let n: usize = shape.iter().product();
+        DeviceMesh {
+            shape: shape.to_vec(),
+            devices: (0..n).collect(),
+            axis_alpha: vec![1e-6; shape.len()],
+            axis_beta: vec![100.0 * GB; shape.len()],
+        }
+    }
+
+    #[test]
+    fn one_step_list_matches_paper_example() {
+        // paper: one-step transforms of S0R on a 2-axis mesh include
+        // [RR, S01R, S0S1, RS0]
+        let m = mesh(&[2, 2]);
+        let s0r = ShardingSpec::new(&[&[0], &[]]);
+        let steps = one_step_transforms(&s0r, &[8, 8], &m);
+        let specs: Vec<String> =
+            steps.iter().map(|(_, s)| s.to_string()).collect();
+        for want in ["RR", "S01R", "S0S1", "RS0"] {
+            assert!(specs.contains(&want.to_string()), "missing {want} in {specs:?}");
+        }
+    }
+
+    #[test]
+    fn greedy_solves_s0_to_s1() {
+        // paper worked example: S0 -> S1 needs gather + shard
+        let m = mesh(&[2, 2]);
+        let mut lm = LayoutManager::new(m);
+        let src = ShardingSpec::new(&[&[0], &[]]);
+        let dst = ShardingSpec::new(&[&[1], &[]]);
+        let p = lm.convert(&src, &dst, &[8, 8], 4);
+        assert!(!p.is_empty() && p.len() <= 2, "path: {:?}", p.steps);
+        assert_eq!(p.steps.last().unwrap().1, dst);
+    }
+
+    #[test]
+    fn identity_conversion_is_empty() {
+        let m = mesh(&[2, 2]);
+        let mut lm = LayoutManager::new(m);
+        let s = ShardingSpec::new(&[&[0], &[1]]);
+        let p = lm.convert(&s, &s, &[8, 8], 4);
+        assert!(p.is_empty());
+        assert_eq!(p.comm_time, 0.0);
+    }
+
+    #[test]
+    fn greedy_never_worse_than_dim_by_dim() {
+        let m = mesh(&[2, 4]);
+        let mut lm = LayoutManager::new(m);
+        let shape = [32, 64];
+        let specs = ShardingSpec::enumerate(&shape, &lm.mesh);
+        for src in &specs {
+            for dst in &specs {
+                let g = lm.convert(src, dst, &shape, 4);
+                let d = lm.dim_by_dim(src, dst, &shape, 4);
+                assert!(
+                    g.comm_time <= d.comm_time + 1e-12,
+                    "{src} -> {dst}: greedy {} vs dxd {}",
+                    g.comm_time,
+                    d.comm_time
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_reaches_every_target_on_3d_mesh() {
+        let m = mesh(&[2, 2, 2]);
+        let mut lm = LayoutManager::new(m);
+        let shape = [16, 16, 16];
+        let specs = ShardingSpec::enumerate(&shape, &lm.mesh);
+        assert!(specs.len() > 20);
+        let src = ShardingSpec::replicated(3);
+        for dst in &specs {
+            let p = lm.convert(&src, dst, &shape, 4);
+            if dst != &src {
+                assert_eq!(&p.steps.last().unwrap().1, dst);
+            }
+        }
+    }
+
+    #[test]
+    fn cache_hits_on_repeat_queries() {
+        let m = mesh(&[2, 2]);
+        let mut lm = LayoutManager::new(m);
+        let src = ShardingSpec::new(&[&[0], &[]]);
+        let dst = ShardingSpec::new(&[&[], &[0]]);
+        lm.convert(&src, &dst, &[8, 8], 4);
+        let misses = lm.cache_misses;
+        lm.convert(&src, &dst, &[8, 8], 4);
+        assert_eq!(lm.cache_misses, misses);
+        assert!(lm.cache_hits >= 1);
+    }
+
+    #[test]
+    fn all_gather_costs_more_than_shard() {
+        let m = mesh(&[4]);
+        let lm = LayoutManager::new(m);
+        let src = ShardingSpec::new(&[&[0], &[]]);
+        let dst = ShardingSpec::replicated(2);
+        let p = lm.greedy_search(&src, &dst, &[64, 64], 4).unwrap();
+        assert_eq!(p.len(), 1);
+        assert!(p.comm_time > 0.0);
+        // reverse: shard is free
+        let p2 = lm.greedy_search(&dst, &src, &[64, 64], 4).unwrap();
+        assert_eq!(p2.comm_time, 0.0);
+    }
+
+    #[test]
+    fn s0_to_s1_prefers_all_to_all_over_gather_then_shard() {
+        // moving a shard between dims in ONE collective should be found
+        let m = mesh(&[4]);
+        let lm = LayoutManager::new(m);
+        let src = ShardingSpec::new(&[&[0], &[]]);
+        let dst = ShardingSpec::new(&[&[], &[0]]);
+        let p = lm.greedy_search(&src, &dst, &[16, 16], 4).unwrap();
+        assert_eq!(p.len(), 1, "path: {:?}", p.steps);
+        assert!(matches!(p.steps[0].0, TransformOp::AllToAll { .. }));
+    }
+}

@@ -1,0 +1,17 @@
+//! `automap` — reproduction of "MAP: Memory-aware Automated Intra-op
+//! Parallel Training For Foundation Models" (Colossal-Auto), as a
+//! rust coordinator + JAX/Pallas AOT stack.
+
+pub mod ckpt;
+pub mod coordinator;
+pub mod cluster;
+pub mod gen;
+pub mod graph;
+pub mod layout;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod spec;
+pub mod strategy;
+pub mod util;

@@ -1,0 +1,299 @@
+//! `automap` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   plan      --model gpt2-mini|alpha..delta --cluster fig5|nvlink<N>|single
+//!             [--budget-gb G] [--fast] [--codegen] : run the full 2-stage
+//!             pipeline and print the plan (+ generated code).
+//!   cluster   --cluster fig5 : probe the simulated cluster and print the
+//!             detected topology and candidate meshes.
+//!   profile   --model ... : symbolic profile (FLOPs, memory buckets).
+//!   train     [--devices N] [--steps K] : real data-parallel training on
+//!             logical PJRT devices via the AOT artifacts.
+//!   tp-check  [--tp 2|4] : tensor-parallel numerics vs the serial block.
+//!   table4    [--fast] : weak-scaling comparison (ours vs baselines).
+
+use anyhow::{anyhow, Result};
+
+use automap::cluster::{detect, DeviceMesh, SimCluster};
+use automap::coordinator::tp::{serial_block_forward, tp_block_forward,
+                               BlockParams};
+use automap::coordinator::trainer::train_dp;
+use automap::coordinator::{autoparallelize, PipelineOpts};
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::profiler::profile;
+use automap::runtime::{HostTensor, Runtime};
+use automap::sim::{baselines, DeviceModel};
+use automap::solver::SolveOpts;
+use automap::util::cli::Args;
+use automap::util::rng::Rng;
+
+fn model_for(name: &str) -> Gpt2Cfg {
+    match name {
+        "gpt2-mini" | "mini" => Gpt2Cfg::mini(),
+        "alpha" | "beta" | "gamma" | "delta" => Gpt2Cfg::paper(name),
+        other => panic!("unknown model {other} (gpt2-mini|alpha..delta)"),
+    }
+}
+
+fn cluster_for(name: &str) -> SimCluster {
+    if name == "fig5" {
+        SimCluster::partially_connected_8gpu()
+    } else if name == "single" {
+        SimCluster::single()
+    } else if let Some(n) = name.strip_prefix("nvlink") {
+        SimCluster::fully_connected(n.parse().expect("nvlink<N>"))
+    } else if let Some(spec) = name.strip_prefix("multinode") {
+        let (a, b) = spec.split_once('x').expect("multinode<N>x<M>");
+        SimCluster::multi_node(a.parse().unwrap(), b.parse().unwrap(), 100.0)
+    } else {
+        panic!("unknown cluster {name} (fig5|single|nvlink<N>|multinode<NxM>)")
+    }
+}
+
+/// Take the first `n` devices of the Fig-5 box (the paper's sub-cluster
+/// configurations for experiments alpha/beta/gamma).
+pub fn fig5_prefix(n: usize) -> SimCluster {
+    if n == 1 {
+        return SimCluster::single();
+    }
+    let mut c = SimCluster::partially_connected_8gpu();
+    c.n = n;
+    c.latency.truncate(n);
+    c.bandwidth.truncate(n);
+    for row in c.latency.iter_mut() {
+        row.truncate(n);
+    }
+    for row in c.bandwidth.iter_mut() {
+        row.truncate(n);
+    }
+    c
+}
+
+fn opts_from(args: &Args) -> PipelineOpts {
+    let mut opts = PipelineOpts::default();
+    if let Some(gb) = args.get("budget-gb") {
+        opts.budget = Some(gb.parse::<f64>().expect("--budget-gb") * 1e9);
+    }
+    if args.has_flag("fast") {
+        opts.sweep = 3;
+        opts.solve = SolveOpts {
+            beam_width: 16,
+            anneal_iters: 300,
+            lagrange_iters: 6,
+            ..Default::default()
+        };
+    }
+    opts
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let cfg = model_for(args.get_or("model", "gpt2-mini"));
+    let cluster = cluster_for(args.get_or("cluster", "fig5"));
+    let g = gpt2(&cfg);
+    let dev = DeviceModel::a100_80gb();
+    let opts = opts_from(args);
+    let plan = autoparallelize(&g, &cluster, &dev, &opts)?;
+    println!("== plan ==");
+    println!("mesh shape     : {:?}", plan.mesh.shape);
+    println!("device order   : {:?}", plan.mesh.devices);
+    println!("iter time      : {:.3} ms", plan.iter_time * 1e3);
+    println!("achieved       : {:.3} PFLOPS", plan.pflops);
+    println!("mem/device     : {:.2} GB", plan.mem_per_device / 1e9);
+    println!("sweep point n  : {}", plan.sweep_n);
+    println!("comm inserts   : {}", plan.plan.comms.len());
+    let mut comms = plan.plan.comms.clone();
+    comms.sort_by(|a, b| b.time.partial_cmp(&a.time).unwrap());
+    for c in comms.iter().take(8) {
+        println!(
+            "  {:>8.2} ms  {:?}  {}",
+            c.time * 1e3,
+            c.reason,
+            c.describe
+        );
+    }
+    if args.has_flag("codegen") {
+        println!("\n== generated code ==\n{}", plan.plan.codegen(&g));
+    }
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let cluster = cluster_for(args.get_or("cluster", "fig5"));
+    let info = detect(&cluster, args.get_usize("seed", 42) as u64);
+    println!("devices: {}", info.n);
+    println!(
+        "bandwidth tiers (GB/s): {:?}",
+        info.tiers
+            .iter()
+            .map(|t| (t / 1e9 * 10.0).round() / 10.0)
+            .collect::<Vec<_>>()
+    );
+    for t in 0..info.tiers.len() {
+        println!("  tier {t} groups: {:?}", info.groups_at_tier(t));
+    }
+    for shape in DeviceMesh::candidate_shapes(info.n) {
+        if let Some(mesh) = DeviceMesh::build(&info, &shape) {
+            println!(
+                "mesh {:?}: devices {:?}, axis bw {:?} GB/s",
+                mesh.shape,
+                mesh.devices,
+                mesh.axis_beta
+                    .iter()
+                    .map(|b| (b / 1e9).round())
+                    .collect::<Vec<_>>()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let cfg = model_for(args.get_or("model", "gpt2-mini"));
+    let t0 = std::time::Instant::now();
+    let g = gpt2(&cfg);
+    let p = profile(&g);
+    println!(
+        "model          : {} nodes, {:.3}B params",
+        g.len(),
+        g.param_count() as f64 / 1e9
+    );
+    println!(
+        "profile time   : {:.1} ms (symbolic)",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    println!("fwd flops      : {:.3e}", p.fwd_flops);
+    println!("bwd flops      : {:.3e}", p.bwd_flops);
+    println!("model data     : {:.3} GB", p.model_bytes as f64 / 1e9);
+    println!("saved act      : {:.3} GB", p.saved_activation as f64 / 1e9);
+    println!(
+        "fwd act peak   : {:.3} GB ({})",
+        p.peak_fwd_activation as f64 / 1e9,
+        g.node(p.peak_node).name
+    );
+    println!("train peak est : {:.3} GB", p.peak_training as f64 / 1e9);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut rt = Runtime::open(
+        args.get_or("artifacts", Runtime::default_dir().to_str().unwrap()),
+    )?;
+    println!("platform: {}", rt.platform());
+    let devices = args.get_usize("devices", 4);
+    let steps = args.get_usize("steps", 50);
+    let rep = train_dp(&mut rt, devices, steps, 7)?;
+    for (i, l) in rep.losses.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == rep.losses.len() {
+            println!("step {i:>4}  loss {l:.4}");
+        }
+    }
+    println!(
+        "{} steps on {} logical devices in {:.1}s ({:.0} tok/s), loss {:.3} -> {:.3}",
+        rep.steps,
+        rep.devices,
+        rep.wall.as_secs_f64(),
+        rep.steps as f64 * rep.tokens_per_step as f64
+            / rep.wall.as_secs_f64(),
+        rep.first_loss(),
+        rep.last_loss()
+    );
+    Ok(())
+}
+
+fn cmd_tp_check(args: &Args) -> Result<()> {
+    let mut rt = Runtime::open(
+        args.get_or("artifacts", Runtime::default_dir().to_str().unwrap()),
+    )?;
+    let cfg = rt.manifest.config.clone();
+    let tp = args.get_usize("tp", 4);
+    let params = BlockParams::random(cfg.d_model, cfg.d_ff, 11);
+    let mut rng = Rng::new(13);
+    let x = HostTensor::randn(
+        vec![cfg.batch, cfg.seq, cfg.d_model],
+        0.5,
+        &mut rng,
+    );
+    let serial = serial_block_forward(&mut rt, &x, &params)?;
+    let par = tp_block_forward(&mut rt, &x, &params, cfg.n_head, tp)?;
+    let diff = serial.max_abs_diff(&par);
+    println!("tp={tp}: max |serial - parallel| = {diff:.2e}");
+    if diff < 1e-3 {
+        println!("TP NUMERICS OK");
+        Ok(())
+    } else {
+        Err(anyhow!("tensor-parallel mismatch: {diff}"))
+    }
+}
+
+fn cmd_table4(args: &Args) -> Result<()> {
+    let dev = DeviceModel::a100_80gb();
+    let fast = args.has_flag("fast");
+    println!("| exp | #GPU | DDP | Megatron-1D | Optimus-2D | 3D-TP | ours |");
+    println!("|-----|------|-----|-------------|------------|-------|------|");
+    for (exp, n) in
+        [("alpha", 1usize), ("beta", 2), ("gamma", 4), ("delta", 8)]
+    {
+        let cfg = Gpt2Cfg::paper(exp);
+        let g = gpt2(&cfg);
+        let prof = profile(&g);
+        let cluster = fig5_prefix(n);
+        let info = detect(&cluster, 1);
+        // the paper reports PFLOPS with the 6·N·T convention on the
+        // Table-3 (untied-head) parameter count
+        let metric_flops = 6.0
+            * cfg.n_params_table3() as f64
+            * (cfg.batch * cfg.seq) as f64;
+        let scale = metric_flops / prof.total_flops();
+        let fmt = |r: &baselines::SimReport| {
+            if r.feasible {
+                format!("{:.3}", r.pflops * scale)
+            } else {
+                "-".into()
+            }
+        };
+        let mut opts = PipelineOpts::default();
+        if fast {
+            opts.sweep = 2;
+            opts.solve = SolveOpts {
+                beam_width: 12,
+                anneal_iters: 200,
+                lagrange_iters: 4,
+                ..Default::default()
+            };
+        }
+        let ours = autoparallelize(&g, &cluster, &dev, &opts)
+            .map(|p| format!("{:.3}", p.pflops * scale))
+            .unwrap_or_else(|_| "-".into());
+        println!(
+            "| {exp} | {n} | {} | {} | {} | {} | {} |",
+            fmt(&baselines::ddp(&cfg, &g, &prof, &info, &dev)),
+            fmt(&baselines::megatron_1d(&cfg, &g, &prof, &info, &dev)),
+            fmt(&baselines::optimus_2d(&cfg, &g, &prof, &info, &dev)),
+            fmt(&baselines::tp_3d(&cfg, &g, &prof, &info, &dev)),
+            ours,
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    if std::env::var("AUTOMAP_DEBUG").map(|v| v == "1").unwrap_or(false) {
+        automap::util::logger::set_level(2);
+    }
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("plan") => cmd_plan(&args),
+        Some("cluster") => cmd_cluster(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("train") => cmd_train(&args),
+        Some("tp-check") => cmd_tp_check(&args),
+        Some("table4") => cmd_table4(&args),
+        _ => {
+            println!(
+                "usage: automap <plan|cluster|profile|train|tp-check|table4> [--options]"
+            );
+            println!("see rust/src/main.rs header for details");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Per-node cost model: the paper's five-bucket memory decomposition
+//! (fwd_in / fwd_tmp / fwd_out / bwd_tmp / bwd_out, §4.1 Fig. 3) plus
+//! forward/backward FLOPs — all derived symbolically from op + metas.
+
+use crate::graph::infer::{bwd_flops, fwd_flops};
+use crate::graph::meta::TensorMeta;
+use crate::graph::op::{EwUnary, Op};
+use crate::graph::{Graph, NodeId};
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NodeCost {
+    pub fwd_flops: f64,
+    pub bwd_flops: f64,
+    /// Bytes of input tensors *saved for backward* by this op.
+    pub fwd_in: usize,
+    /// Transient bytes alive only during the forward kernel.
+    pub fwd_tmp: usize,
+    /// Bytes of this op's forward output.
+    pub fwd_out: usize,
+    /// Transient bytes alive only during the backward kernel.
+    pub bwd_tmp: usize,
+    /// Bytes of gradients this op emits (≈ fwd_in, as the paper notes).
+    pub bwd_out: usize,
+}
+
+impl NodeCost {
+    pub fn total_flops(&self) -> f64 {
+        self.fwd_flops + self.bwd_flops
+    }
+
+    /// Activation bytes that persist from forward until this op's backward
+    /// has run (what checkpointing can reclaim).
+    pub fn saved_bytes(&self) -> usize {
+        self.fwd_in
+    }
+}
+
+/// Which inputs an op must stash for its backward pass.
+///
+/// Mirrors torch autograd's saved-tensor behaviour for the op classes we
+/// model; `in_place` consumers instead borrow their producer's storage,
+/// which `profile::GraphProfile` accounts for at the graph level.
+fn saved_input_bytes(op: &Op, ins: &[&TensorMeta]) -> usize {
+    let b = |i: usize| ins[i].bytes();
+    match op {
+        // GEMM-family saves both operands (dX needs W, dW needs X).
+        Op::Matmul | Op::BatchMatmul | Op::Conv2d { .. } => b(0) + b(1),
+        // gather: only ids (int, small) are needed
+        Op::Embedding => b(1),
+        // normalizations save x (+ per-row stats, counted in bwd_tmp)
+        Op::LayerNorm | Op::BatchNorm => b(0),
+        // softmax / tanh / gelu save their *output* (same bytes as input)
+        Op::Softmax { .. } => b(0),
+        Op::EwUnary { kind, .. } => match kind {
+            EwUnary::Relu => b(0) / 4, // bool mask is enough (byte/elem)
+            EwUnary::Neg | EwUnary::Cast => 0,
+            _ => b(0),
+        },
+        // add/sub need nothing; mul/div/where save operands
+        Op::EwBinary { kind, .. } => match kind {
+            crate::graph::op::EwBinary::Add
+            | crate::graph::op::EwBinary::Sub => 0,
+            crate::graph::op::EwBinary::Where => b(1), // mask only
+            _ => b(0) + b(1),
+        },
+        Op::Reduce { .. } | Op::Pool2d { .. } => 0,
+        Op::CrossEntropy => b(0) + b(1), // logits + targets
+        Op::Reshape { .. }
+        | Op::Transpose { .. }
+        | Op::Slice { .. }
+        | Op::Concat { .. }
+        | Op::Placeholder(_)
+        | Op::Output => 0,
+    }
+}
+
+fn fwd_tmp_bytes(op: &Op, ins: &[&TensorMeta], out: &TensorMeta) -> usize {
+    match op {
+        // row statistics (mean, rstd) in f32
+        Op::LayerNorm => {
+            let rows = ins[0].numel() / ins[0].shape.last().unwrap();
+            2 * rows * 4
+        }
+        Op::BatchNorm => 2 * ins[0].shape[1] * 4,
+        // softmax runs in-place on its output buffer (matches both the
+        // instrumented interpreter and torch's eager kernel)
+        Op::Softmax { .. } => 0,
+        Op::CrossEntropy => ins[0].bytes(), // log-softmax buffer
+        _ => 0,
+    }
+}
+
+fn bwd_tmp_bytes(op: &Op, ins: &[&TensorMeta], out: &TensorMeta) -> usize {
+    match op {
+        // dSoftmax materializes p * dy
+        Op::Softmax { .. } => out.bytes(),
+        Op::LayerNorm => ins[0].bytes(), // xhat recompute buffer
+        Op::CrossEntropy => ins[0].bytes(),
+        _ => 0,
+    }
+}
+
+fn grad_out_bytes(op: &Op, ins: &[&TensorMeta]) -> usize {
+    match op {
+        Op::Placeholder(_) | Op::Output => 0,
+        // grads flow to every differentiable input
+        _ => ins
+            .iter()
+            .filter(|t| t.dtype.differentiable())
+            .map(|t| t.bytes())
+            .sum(),
+    }
+}
+
+/// Symbolically profile one node (meta-execution: no storage touched).
+pub fn node_cost(g: &Graph, id: NodeId) -> NodeCost {
+    let n = g.node(id);
+    let ins: Vec<&TensorMeta> =
+        n.inputs.iter().map(|&i| &g.node(i).out).collect();
+    let out = &n.out;
+    match n.op {
+        Op::Placeholder(_) | Op::Output => NodeCost::default(),
+        _ => NodeCost {
+            fwd_flops: fwd_flops(&n.op, &ins, out),
+            bwd_flops: bwd_flops(&n.op, &ins, out),
+            fwd_in: saved_input_bytes(&n.op, &ins),
+            fwd_tmp: fwd_tmp_bytes(&n.op, &ins, out),
+            fwd_out: out.bytes(),
+            bwd_tmp: bwd_tmp_bytes(&n.op, &ins, out),
+            bwd_out: grad_out_bytes(&n.op, &ins),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn matmul_saves_both_operands() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![4, 8]);
+        let w = b.param("w", vec![8, 2]);
+        let y = b.matmul("y", x, w);
+        b.output(&[y]);
+        let g = b.finish().unwrap();
+        let c = node_cost(&g, y);
+        assert_eq!(c.fwd_in, (4 * 8 + 8 * 2) * 4);
+        assert_eq!(c.fwd_out, 4 * 2 * 4);
+        assert_eq!(c.bwd_out, (4 * 8 + 8 * 2) * 4);
+        assert_eq!(c.fwd_flops, 2.0 * 4.0 * 2.0 * 8.0);
+        assert_eq!(c.bwd_flops, 2.0 * c.fwd_flops);
+    }
+
+    #[test]
+    fn add_saves_nothing() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![16, 16]);
+        let y = b.input("y", vec![16, 16]);
+        let z = b.add_t("z", x, y);
+        b.output(&[z]);
+        let g = b.finish().unwrap();
+        let c = node_cost(&g, z);
+        assert_eq!(c.fwd_in, 0);
+        assert_eq!(c.bwd_out, 2 * 16 * 16 * 4);
+    }
+
+    #[test]
+    fn relu_saves_mask_only() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![16, 16]);
+        let r = b.ew_unary("r", EwUnary::Relu, x);
+        b.output(&[r]);
+        let g = b.finish().unwrap();
+        let c = node_cost(&g, r);
+        assert_eq!(c.fwd_in, 16 * 16); // 1 byte per element
+    }
+
+    #[test]
+    fn layernorm_has_stat_temporaries() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![8, 64, 128]);
+        let gm = b.param("g", vec![128]);
+        let bt = b.param("b", vec![128]);
+        let y = b.layernorm("ln", x, gm, bt);
+        b.output(&[y]);
+        let g = b.finish().unwrap();
+        let c = node_cost(&g, y);
+        assert_eq!(c.fwd_tmp, 2 * 8 * 64 * 4);
+        assert_eq!(c.bwd_tmp, 8 * 64 * 128 * 4);
+    }
+
+    #[test]
+    fn placeholders_cost_nothing() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![4]);
+        b.output(&[x]);
+        let g = b.finish().unwrap();
+        assert_eq!(node_cost(&g, x), NodeCost::default());
+    }
+}

@@ -1,0 +1,13 @@
+//! Symbolic profiler (§4.1) + real-execution comparator.
+//!
+//! `cost` gives the per-node five-bucket decomposition, `profile` the
+//! whole-graph liveness scan, and `interp` the instrumented interpreter
+//! that "really executes" graphs for the Fig. 2 / Fig. 4 comparisons.
+
+pub mod cost;
+pub mod interp;
+pub mod profile;
+
+pub use cost::{node_cost, NodeCost};
+pub use interp::{execute, random_feeds, Buf, ExecResult};
+pub use profile::{profile, GraphProfile};

@@ -1,0 +1,85 @@
+//! Rust-side collectives over host tensors: the logical-device layer that
+//! stitches per-shard PJRT executions into one parallel step (the paper's
+//! inserted communication nodes, executed for real).
+
+use anyhow::Result;
+
+use super::tensor::HostTensor;
+
+/// In-place sum across replicas (ring all-reduce semantics).
+pub fn all_reduce_sum(replicas: &mut [HostTensor]) -> Result<()> {
+    let n = replicas.len();
+    if n <= 1 {
+        return Ok(());
+    }
+    let len = replicas[0].numel();
+    let mut acc = vec![0f32; len];
+    for r in replicas.iter() {
+        for (a, &v) in acc.iter_mut().zip(r.as_f32()?) {
+            *a += v;
+        }
+    }
+    for r in replicas.iter_mut() {
+        r.as_f32_mut()?.copy_from_slice(&acc);
+    }
+    Ok(())
+}
+
+/// In-place mean across replicas (gradient averaging for DP).
+pub fn all_reduce_mean(replicas: &mut [HostTensor]) -> Result<()> {
+    let n = replicas.len() as f32;
+    all_reduce_sum(replicas)?;
+    for r in replicas.iter_mut() {
+        for v in r.as_f32_mut()? {
+            *v /= n;
+        }
+    }
+    Ok(())
+}
+
+/// Gather shards along `axis` into the full tensor (returned once).
+pub fn all_gather_concat(shards: &[HostTensor], axis: usize)
+                         -> Result<HostTensor> {
+    HostTensor::concat(shards, axis)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_and_mean() {
+        let mut r = vec![
+            HostTensor::f32(vec![2], vec![1.0, 2.0]),
+            HostTensor::f32(vec![2], vec![3.0, 4.0]),
+        ];
+        all_reduce_sum(&mut r).unwrap();
+        assert_eq!(r[0].as_f32().unwrap(), &[4.0, 6.0]);
+        assert_eq!(r[0], r[1]);
+
+        let mut r = vec![
+            HostTensor::f32(vec![1], vec![1.0]),
+            HostTensor::f32(vec![1], vec![3.0]),
+        ];
+        all_reduce_mean(&mut r).unwrap();
+        assert_eq!(r[0].as_f32().unwrap(), &[2.0]);
+    }
+
+    #[test]
+    fn gather() {
+        let shards = vec![
+            HostTensor::f32(vec![1, 2], vec![1.0, 2.0]),
+            HostTensor::f32(vec![1, 2], vec![3.0, 4.0]),
+        ];
+        let full = all_gather_concat(&shards, 0).unwrap();
+        assert_eq!(full.shape, vec![2, 2]);
+        assert_eq!(full.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn single_replica_noop() {
+        let mut r = vec![HostTensor::f32(vec![1], vec![7.0])];
+        all_reduce_sum(&mut r).unwrap();
+        assert_eq!(r[0].as_f32().unwrap(), &[7.0]);
+    }
+}

@@ -1,0 +1,185 @@
+//! `artifacts/manifest.json` reader — the contract between `aot.py` and
+//! the rust runtime (artifact names, files, and positional signatures).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub kind: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub batch: usize,
+    pub n_params: usize,
+    pub lr: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub param_names: Vec<String>,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+fn tensor_spec(v: &Json, idx: usize) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: v
+            .get("name")
+            .as_str()
+            .unwrap_or(&format!("out{idx}"))
+            .to_string(),
+        shape: v
+            .get("shape")
+            .usize_vec()
+            .ok_or_else(|| anyhow!("bad shape"))?,
+        dtype: v.get("dtype").as_str().unwrap_or("float32").to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let c = v.get("config");
+        let grab = |k: &str| -> Result<usize> {
+            c.get(k)
+                .as_usize()
+                .ok_or_else(|| anyhow!("config.{k} missing"))
+        };
+        let config = ModelConfig {
+            vocab: grab("vocab")?,
+            seq: grab("seq")?,
+            d_model: grab("d_model")?,
+            n_layer: grab("n_layer")?,
+            n_head: grab("n_head")?,
+            d_ff: grab("d_ff")?,
+            batch: grab("batch")?,
+            n_params: grab("n_params")?,
+            lr: c.get("lr").as_f64().unwrap_or(0.05),
+        };
+        let param_names = v
+            .get("param_names")
+            .as_arr()
+            .ok_or_else(|| anyhow!("param_names missing"))?
+            .iter()
+            .map(|s| s.as_str().unwrap_or("").to_string())
+            .collect();
+        let artifacts = v
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts missing"))?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactInfo {
+                    name: a
+                        .get("name")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("artifact name"))?
+                        .to_string(),
+                    file: a
+                        .get("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("artifact file"))?
+                        .to_string(),
+                    inputs: a
+                        .get("inputs")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .enumerate()
+                        .map(|(i, t)| tensor_spec(t, i))
+                        .collect::<Result<_>>()?,
+                    outputs: a
+                        .get("outputs")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .enumerate()
+                        .map(|(i, t)| tensor_spec(t, i))
+                        .collect::<Result<_>>()?,
+                    kind: a
+                        .get("meta")
+                        .get("kind")
+                        .as_str()
+                        .unwrap_or("")
+                        .to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { config, param_names, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "config": {"vocab": 512, "seq": 64, "d_model": 128, "n_layer": 2,
+                 "n_head": 4, "d_ff": 512, "batch": 8,
+                 "n_params": 470528, "lr": 0.05},
+      "param_names": ["a", "b"],
+      "artifacts": [
+        {"name": "f", "file": "f.hlo.txt",
+         "inputs": [{"name": "x", "shape": [2, 3], "dtype": "float32"}],
+         "outputs": [{"shape": [], "dtype": "float32"}],
+         "meta": {"kind": "forward"}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config.d_model, 128);
+        assert_eq!(m.param_names, vec!["a", "b"]);
+        let a = m.artifact("f").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(a.kind, "forward");
+        assert!(m.artifact("missing").is_none());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert_eq!(m.config.n_params, 470_528);
+            assert!(m.artifact("gpt2_grad_step_b2").is_some());
+            assert!(m.artifact("tp4_attn_shard").is_some());
+        }
+    }
+}

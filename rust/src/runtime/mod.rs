@@ -1,0 +1,134 @@
+//! PJRT runtime (Layer-3 hot path): loads the HLO-text artifacts produced
+//! by `python/compile/aot.py`, compiles them once on the PJRT CPU client,
+//! and executes them on N *logical devices* with rust-side collectives.
+//!
+//! Python never runs here — the binary is self-contained after
+//! `make artifacts`.
+
+pub mod collective;
+pub mod manifest;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+pub use collective::{all_gather_concat, all_reduce_mean, all_reduce_sum};
+pub use manifest::{ArtifactInfo, Manifest};
+pub use tensor::HostTensor;
+
+/// Compiled-artifact registry over one PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative executions (perf counter).
+    pub exec_count: usize,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (manifest.json + *.hlo.txt). Executables compile
+    /// lazily on first use and are cached for the process lifetime.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?}"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            exes: HashMap::new(),
+            exec_count: 0,
+        })
+    }
+
+    /// Default artifacts directory relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let info = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = self.dir.join(&info.file);
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with host tensors; returns host tensors.
+    /// Artifacts are lowered with return_tuple=True, so the single result
+    /// literal is a tuple that we decompose positionally per the manifest.
+    pub fn exec(&mut self, name: &str, inputs: &[HostTensor])
+                -> Result<Vec<HostTensor>> {
+        self.compile(name)?;
+        let info = self.manifest.artifact(name).unwrap().clone();
+        anyhow::ensure!(
+            inputs.len() == info.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            info.inputs.len(),
+            inputs.len()
+        );
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&info.inputs)
+            .map(|(t, spec)| {
+                anyhow::ensure!(
+                    t.shape == spec.shape,
+                    "{name}/{}: shape {:?} != manifest {:?}",
+                    spec.name,
+                    t.shape,
+                    spec.shape
+                );
+                t.to_literal()
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.exes.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        self.exec_count += 1;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == info.outputs.len(),
+            "{name}: {} outputs vs manifest {}",
+            parts.len(),
+            info.outputs.len()
+        );
+        parts
+            .iter()
+            .zip(&info.outputs)
+            .map(|(l, spec)| HostTensor::from_literal(l, &spec.shape))
+            .collect()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.exes.len()
+    }
+}

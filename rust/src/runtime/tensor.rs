@@ -1,0 +1,197 @@
+//! Host-side tensors crossing the rust ⇄ PJRT boundary.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: HostData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data: HostData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data: HostData::I32(data) }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor::f32(shape, vec![0.0; n])
+    }
+
+    /// Gaussian init (params).
+    pub fn randn(shape: Vec<usize>, scale: f32, rng: &mut Rng) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor::f32(
+            shape,
+            (0..n).map(|_| rng.normal() as f32 * scale).collect(),
+        )
+    }
+
+    /// Uniform ints in [0, hi) (token ids).
+    pub fn randint(shape: Vec<usize>, hi: i32, rng: &mut Rng) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor::i32(
+            shape,
+            (0..n).map(|_| rng.below(hi as usize) as i32).collect(),
+        )
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            HostData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            HostData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        anyhow::ensure!(v.len() == 1, "not a scalar: {:?}", self.shape);
+        Ok(v[0])
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            HostData::F32(v) => xla::Literal::vec1(v),
+            HostData::I32(v) => xla::Literal::vec1(v),
+        };
+        if self.shape.len() == 1 {
+            return Ok(lit);
+        }
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize])
+                        -> Result<HostTensor> {
+        let ty = lit.ty().map_err(|e| anyhow!("{e:?}"))?;
+        let t = match ty {
+            xla::ElementType::F32 => HostTensor {
+                shape: shape.to_vec(),
+                data: HostData::F32(
+                    lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+                ),
+            },
+            xla::ElementType::S32 => HostTensor {
+                shape: shape.to_vec(),
+                data: HostData::I32(
+                    lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+                ),
+            },
+            other => return Err(anyhow!("unsupported dtype {other:?}")),
+        };
+        anyhow::ensure!(
+            t.numel() == shape.iter().product::<usize>(),
+            "literal size mismatch"
+        );
+        Ok(t)
+    }
+
+    /// Slice along `axis` — used to build TP parameter shards in rust.
+    pub fn slice_axis(&self, axis: usize, start: usize, len: usize)
+                      -> Result<HostTensor> {
+        let v = self.as_f32()?;
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let outer: usize = self.shape[..axis].iter().product();
+        let d = self.shape[axis];
+        anyhow::ensure!(start + len <= d, "slice out of range");
+        let mut out = Vec::with_capacity(outer * len * inner);
+        for o in 0..outer {
+            let base = (o * d + start) * inner;
+            out.extend_from_slice(&v[base..base + len * inner]);
+        }
+        let mut shape = self.shape.clone();
+        shape[axis] = len;
+        Ok(HostTensor::f32(shape, out))
+    }
+
+    /// Concatenate along `axis`.
+    pub fn concat(parts: &[HostTensor], axis: usize) -> Result<HostTensor> {
+        anyhow::ensure!(!parts.is_empty());
+        let first = &parts[0];
+        let inner: usize = first.shape[axis + 1..].iter().product();
+        let outer: usize = first.shape[..axis].iter().product();
+        let mut total_d = 0;
+        for p in parts {
+            total_d += p.shape[axis];
+        }
+        let mut out = Vec::with_capacity(outer * total_d * inner);
+        for o in 0..outer {
+            for p in parts {
+                let v = p.as_f32()?;
+                let d = p.shape[axis];
+                out.extend_from_slice(&v[o * d * inner..(o + 1) * d * inner]);
+            }
+        }
+        let mut shape = first.shape.clone();
+        shape[axis] = total_d;
+        Ok(HostTensor::f32(shape, out))
+    }
+
+    pub fn max_abs_diff(&self, other: &HostTensor) -> f32 {
+        let (a, b) = (self.as_f32().unwrap(), other.as_f32().unwrap());
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_and_concat_roundtrip() {
+        let t = HostTensor::f32(
+            vec![2, 4],
+            vec![0., 1., 2., 3., 4., 5., 6., 7.],
+        );
+        let a = t.slice_axis(1, 0, 2).unwrap();
+        let b = t.slice_axis(1, 2, 2).unwrap();
+        assert_eq!(a.as_f32().unwrap(), &[0., 1., 4., 5.]);
+        let back = HostTensor::concat(&[a, b], 1).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn randn_scale() {
+        let mut rng = Rng::new(0);
+        let t = HostTensor::randn(vec![1000], 0.02, &mut rng);
+        let v = t.as_f32().unwrap();
+        let std =
+            (v.iter().map(|x| x * x).sum::<f32>() / 1000.0).sqrt();
+        assert!((std - 0.02).abs() < 0.005);
+    }
+
+    #[test]
+    fn scalar_guard() {
+        let t = HostTensor::zeros(vec![2]);
+        assert!(t.scalar().is_err());
+        assert_eq!(HostTensor::zeros(vec![]).scalar().unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,323 @@
+//! Manually-designed parallelism baselines (§7 / Table 4): DDP, Megatron
+//! 1-D TP, Optimus 2-D TP, and 3-D TP, costed analytically on the detected
+//! cluster — including their blindness to the fine-grained topology, which
+//! is exactly what the paper's Table 4 exposes.
+
+use crate::cluster::ClusterInfo;
+use crate::graph::models::Gpt2Cfg;
+use crate::graph::{Graph, op::Op};
+use crate::profiler::{cost::node_cost, GraphProfile};
+
+use super::device::DeviceModel;
+
+/// Bytes of persistent model data per parameter under the paper's
+/// training recipe (mixed-precision Adam: fp16 param + grad, fp32 master
+/// + two moments) — what makes DDP OOM as the problem grows.
+pub const MODEL_DATA_BYTES_PER_PARAM: f64 = 16.0;
+
+/// Fraction of device memory actually usable for model data + activations
+/// (allocator fragmentation, cuDNN/cuBLAS workspaces, CUDA context).
+pub const USABLE_MEM_FRACTION: f64 = 0.90;
+
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub name: String,
+    pub n_devices: usize,
+    /// Per-iteration wall time (seconds).
+    pub iter_time: f64,
+    /// Aggregate achieved PFLOPS (the Table-4 metric).
+    pub pflops: f64,
+    pub mem_per_device: f64,
+    pub feasible: bool,
+    pub note: String,
+}
+
+impl SimReport {
+    fn oom(name: &str, n: usize, mem: f64, note: &str) -> SimReport {
+        SimReport {
+            name: name.into(),
+            n_devices: n,
+            iter_time: f64::INFINITY,
+            pflops: 0.0,
+            mem_per_device: mem,
+            feasible: false,
+            note: note.into(),
+        }
+    }
+
+    fn na(name: &str, n: usize, note: &str) -> SimReport {
+        SimReport {
+            name: name.into(),
+            n_devices: n,
+            iter_time: f64::INFINITY,
+            pflops: 0.0,
+            mem_per_device: 0.0,
+            feasible: false,
+            note: note.into(),
+        }
+    }
+}
+
+/// Serial single-device step time under the same per-node roofline the
+/// planner uses (GEMMs at tensor-core efficiency, everything else
+/// memory-bound) — so baselines and "ours" are costed identically.
+pub fn serial_compute_time(g: &Graph, dev: &DeviceModel) -> f64 {
+    g.nodes
+        .iter()
+        .map(|n| {
+            if matches!(n.op, Op::Placeholder(_) | Op::Output) {
+                return 0.0;
+            }
+            let c = node_cost(g, n.id);
+            dev.kernel_time(
+                c.total_flops(),
+                3.0 * (c.fwd_in + c.fwd_out) as f64,
+                n.op.compute_intensive(),
+            )
+        })
+        .sum()
+}
+
+/// Ring all-reduce time over a device group at its weakest-link bandwidth.
+fn all_reduce_time(info: &ClusterInfo, group: &[usize], bytes: f64) -> f64 {
+    let n = group.len() as f64;
+    if n <= 1.0 {
+        return 0.0;
+    }
+    let bw = info.bus_bandwidth(group);
+    let alpha = info.group_alpha(group);
+    2.0 * (n - 1.0) / n * bytes / bw + 2.0 * (n - 1.0) * alpha
+}
+
+fn report(
+    name: &str,
+    n: usize,
+    compute: f64,
+    comm: f64,
+    bwd_compute: f64,
+    overlappable_comm: f64,
+    mem: f64,
+    dev: &DeviceModel,
+    prof: &GraphProfile,
+    note: &str,
+) -> SimReport {
+    if mem > dev.memory * USABLE_MEM_FRACTION {
+        return SimReport::oom(name, n, mem, "out of memory");
+    }
+    // gradient-sync communication overlaps with backward compute (§7:
+    // "communication ... could overlap with the backward computation")
+    let hidden = overlappable_comm.min(0.7 * bwd_compute);
+    let iter = compute + comm - hidden;
+    SimReport {
+        name: name.into(),
+        n_devices: n,
+        iter_time: iter,
+        pflops: prof.total_flops() / iter / 1e15,
+        mem_per_device: mem,
+        feasible: true,
+        note: note.into(),
+    }
+}
+
+/// Pure data parallelism: batch sharded, full model replicated, one big
+/// gradient all-reduce over every device.
+pub fn ddp(
+    cfg: &Gpt2Cfg,
+    g: &Graph,
+    prof: &GraphProfile,
+    info: &ClusterInfo,
+    dev: &DeviceModel,
+) -> SimReport {
+    let n = info.n;
+    let all: Vec<usize> = (0..n).collect();
+    let p_bytes = prof.model_bytes as f64;
+    let compute = serial_compute_time(g, dev) / n as f64;
+    let comm = all_reduce_time(info, &all, p_bytes);
+    let n_params = p_bytes / 4.0;
+    let mem = MODEL_DATA_BYTES_PER_PARAM * n_params
+        + prof.saved_activation as f64 / n as f64;
+    let bwd = compute * 2.0 / 3.0;
+    let _ = cfg;
+    report("DDP", n, compute, comm, bwd, comm, mem, dev, prof,
+           "batch-sharded, model replicated")
+}
+
+/// Megatron-LM 1-D tensor parallelism: weights column/row split across
+/// ALL devices; 4 activation all-reduces per layer per iteration (2 fwd +
+/// 2 bwd), each over the full device group — the bottleneck link gates
+/// them (§7 "1D TP").
+pub fn megatron_1d(
+    cfg: &Gpt2Cfg,
+    g: &Graph,
+    prof: &GraphProfile,
+    info: &ClusterInfo,
+    dev: &DeviceModel,
+) -> SimReport {
+    let n = info.n;
+    let all: Vec<usize> = (0..n).collect();
+    let act_bytes = (cfg.batch * cfg.seq * cfg.d_model * 4) as f64;
+    let comm =
+        cfg.n_layer as f64 * 4.0 * all_reduce_time(info, &all, act_bytes);
+    let compute = serial_compute_time(g, dev) / n as f64;
+    // per-device: embeddings replicated, block weights 1/n
+    let emb = (cfg.vocab + cfg.seq) as f64 * cfg.d_model as f64 * 4.0;
+    let blocks = prof.model_bytes as f64 - emb;
+    let mem = MODEL_DATA_BYTES_PER_PARAM / 4.0
+        * (emb + blocks / n as f64)
+        + prof.saved_activation as f64 / n as f64;
+    report("Megatron-1D", n, compute, comm, compute * 2.0 / 3.0, 0.0, mem,
+           dev, prof, "activation all-reduce crosses the weakest link")
+}
+
+/// Optimus 2-D TP: requires n = q^2. SUMMA-style: per layer ~6 collective
+/// phases of activation shards over rows/cols of the naive q×q grid.
+pub fn optimus_2d(
+    cfg: &Gpt2Cfg,
+    g: &Graph,
+    prof: &GraphProfile,
+    info: &ClusterInfo,
+    dev: &DeviceModel,
+) -> SimReport {
+    let n = info.n;
+    let q = (n as f64).sqrt().round() as usize;
+    if q * q != n || q < 2 {
+        return SimReport::na(
+            "Optimus-2D",
+            n,
+            "requires a square device count",
+        );
+    }
+    // naive assignment: row i = devices [i*q, (i+1)*q)
+    let rows: Vec<Vec<usize>> =
+        (0..q).map(|i| (i * q..(i + 1) * q).collect()).collect();
+    let cols: Vec<Vec<usize>> =
+        (0..q).map(|j| (0..q).map(|i| i * q + j).collect()).collect();
+    let shard_bytes =
+        (cfg.batch * cfg.seq * cfg.d_model * 4) as f64 / q as f64;
+    let worst_row = rows
+        .iter()
+        .map(|g| all_reduce_time(info, g, shard_bytes))
+        .fold(0.0, f64::max);
+    let worst_col = cols
+        .iter()
+        .map(|g| all_reduce_time(info, g, shard_bytes))
+        .fold(0.0, f64::max);
+    let comm = cfg.n_layer as f64 * 3.0 * (worst_row + worst_col);
+    let compute = serial_compute_time(g, dev) / n as f64;
+    let mem = MODEL_DATA_BYTES_PER_PARAM / 4.0 * prof.model_bytes as f64
+        / n as f64
+        + prof.saved_activation as f64 / n as f64;
+    report("Optimus-2D", n, compute, comm, compute * 2.0 / 3.0, 0.0, mem,
+           dev, prof, "q x q SUMMA grid, naive device assignment")
+}
+
+/// 3-D TP: requires n = c^3; collective phases over the three axes of the
+/// naive c×c×c grid with c-sized groups.
+pub fn tp_3d(
+    cfg: &Gpt2Cfg,
+    g: &Graph,
+    prof: &GraphProfile,
+    info: &ClusterInfo,
+    dev: &DeviceModel,
+) -> SimReport {
+    let n = info.n;
+    let c = (n as f64).cbrt().round() as usize;
+    if c * c * c != n || c < 2 {
+        return SimReport::na("3D-TP", n, "requires a cubic device count");
+    }
+    let shard_bytes = (cfg.batch * cfg.seq * cfg.d_model * 4) as f64
+        / (c * c) as f64;
+    // axis groups under naive assignment, stride 1 / c / c^2
+    let mut worst = 0.0f64;
+    for stride in [1usize, c, c * c] {
+        for start in 0..n {
+            if (start / stride) % c != 0 {
+                continue;
+            }
+            let group: Vec<usize> =
+                (0..c).map(|k| start + k * stride).collect();
+            if group.iter().all(|&d| d < n) {
+                worst = worst
+                    .max(all_reduce_time(info, &group, shard_bytes));
+            }
+        }
+    }
+    let comm = cfg.n_layer as f64 * 8.0 * worst;
+    let compute = serial_compute_time(g, dev) / n as f64;
+    let mem = MODEL_DATA_BYTES_PER_PARAM / 4.0 * prof.model_bytes as f64
+        / n as f64
+        + prof.saved_activation as f64 / n as f64;
+    report("3D-TP", n, compute, comm, compute * 2.0 / 3.0, 0.0, mem, dev,
+           prof, "c^3 grid, naive device assignment")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{detect, SimCluster};
+    use crate::graph::models::gpt2;
+    use crate::profiler::profile;
+
+    fn setup(n: usize, exp: &str)
+             -> (Gpt2Cfg, Graph, GraphProfile, ClusterInfo) {
+        let cfg = Gpt2Cfg::paper(exp);
+        let g = gpt2(&cfg);
+        let prof = profile(&g);
+        let cluster = match n {
+            1 => SimCluster::single(),
+            _ => {
+                let full = SimCluster::partially_connected_8gpu();
+                // take the first n devices of the fig5 box
+                let mut c = full.clone();
+                c.n = n;
+                c.latency.truncate(n);
+                c.bandwidth.truncate(n);
+                for row in c.latency.iter_mut() {
+                    row.truncate(n);
+                }
+                for row in c.bandwidth.iter_mut() {
+                    row.truncate(n);
+                }
+                c
+            }
+        };
+        (cfg, g, prof, detect(&cluster, 1))
+    }
+
+    #[test]
+    fn ddp_ooms_as_problem_grows() {
+        let dev = DeviceModel::a100_80gb();
+        let (cfg, g, prof, info) = setup(4, "gamma");
+        let r = ddp(&cfg, &g, &prof, &info, &dev);
+        assert!(!r.feasible, "gamma (4B params) must OOM under DDP: {:.1} GB", r.mem_per_device / 1e9);
+        let (cfg_a, g_a, prof_a, info_a) = setup(1, "alpha");
+        assert!(ddp(&cfg_a, &g_a, &prof_a, &info_a, &dev).feasible);
+    }
+
+    #[test]
+    fn validity_rules_match_paper() {
+        let (cfg, g, prof, info) = setup(8, "delta");
+        let dev = DeviceModel::a100_80gb();
+        assert!(!optimus_2d(&cfg, &g, &prof, &info, &dev).feasible);
+        assert!(tp_3d(&cfg, &g, &prof, &info, &dev).feasible); // 8 == 2^3
+        let (cfg4, g4, prof4, info4) = setup(4, "gamma");
+        assert!(optimus_2d(&cfg4, &g4, &prof4, &info4, &dev).feasible);
+        assert!(!tp_3d(&cfg4, &g4, &prof4, &info4, &dev).feasible);
+    }
+
+    #[test]
+    fn megatron_pflops_degrades_with_scale() {
+        let dev = DeviceModel::a100_80gb();
+        // per-GPU PFLOPS should fall as more (worse-connected) gpus join
+        let per_gpu: Vec<f64> = [("beta", 2), ("gamma", 4), ("delta", 8)]
+            .iter()
+            .map(|(e, n)| {
+                let (cfg, g, prof, info) = setup(*n, e);
+                let r = megatron_1d(&cfg, &g, &prof, &info, &dev);
+                r.pflops / *n as f64
+            })
+            .collect();
+        assert!(per_gpu[0] > per_gpu[1], "{per_gpu:?}");
+        assert!(per_gpu[1] > per_gpu[2], "{per_gpu:?}");
+    }
+}

@@ -1,0 +1,73 @@
+//! Device compute model: a roofline for one accelerator, used to turn
+//! profiled FLOPs/bytes into estimated execution time.
+
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceModel {
+    /// Peak dense-matmul throughput (FLOP/s) for the training dtype.
+    pub peak_flops: f64,
+    /// HBM bandwidth (bytes/s).
+    pub hbm_bw: f64,
+    /// Achievable fraction of peak for large GEMMs (efficiency knob).
+    pub gemm_efficiency: f64,
+    /// Achievable fraction of peak for non-GEMM (vector) work.
+    pub vector_efficiency: f64,
+    /// Device memory capacity in bytes (the solver's default budget).
+    pub memory: f64,
+    /// Fixed per-kernel launch overhead (seconds).
+    pub kernel_overhead: f64,
+}
+
+impl DeviceModel {
+    /// NVIDIA A100-80GB, fp16/bf16 tensor-core training (paper testbed).
+    pub fn a100_80gb() -> DeviceModel {
+        DeviceModel {
+            peak_flops: 312e12,
+            hbm_bw: 2.0e12,
+            gemm_efficiency: 0.55,
+            vector_efficiency: 0.08,
+            memory: 80e9,
+            kernel_overhead: 6e-6,
+        }
+    }
+
+    /// Roofline time for a kernel doing `flops` work over `bytes` of
+    /// traffic: max(compute-bound, memory-bound) + launch overhead.
+    pub fn kernel_time(&self, flops: f64, bytes: f64, is_gemm: bool) -> f64 {
+        let eff = if is_gemm {
+            self.gemm_efficiency
+        } else {
+            self.vector_efficiency
+        };
+        let compute = flops / (self.peak_flops * eff);
+        let mem = bytes / self.hbm_bw;
+        compute.max(mem) + self.kernel_overhead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn big_gemm_is_compute_bound() {
+        let d = DeviceModel::a100_80gb();
+        // 4096^3 GEMM: 137 GFLOP over ~200 MB
+        let t = d.kernel_time(2.0 * 4096f64.powi(3), 3.0 * 4096.0 * 4096.0 * 2.0, true);
+        let ideal = 2.0 * 4096f64.powi(3) / (312e12 * 0.55);
+        assert!((t / ideal - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn elementwise_is_memory_bound() {
+        let d = DeviceModel::a100_80gb();
+        // gelu on 1 GB: 10 flops/elem but 2 GB of traffic
+        let t = d.kernel_time(10.0 * 2.5e8, 2e9, false);
+        assert!((t - 1e-3).abs() / 1e-3 < 0.1, "t = {t}");
+    }
+
+    #[test]
+    fn overhead_floors_tiny_kernels() {
+        let d = DeviceModel::a100_80gb();
+        assert!(d.kernel_time(1.0, 1.0, false) >= 6e-6);
+    }
+}

@@ -1,0 +1,8 @@
+//! Execution simulator: device roofline model and the manually-designed
+//! baselines the paper compares against (Table 4).
+
+pub mod baselines;
+pub mod device;
+
+pub use baselines::{ddp, megatron_1d, optimus_2d, tp_3d, SimReport};
+pub use device::DeviceModel;

@@ -1,0 +1,653 @@
+//! Intra-op parallelism solver (§5.1): minimize Σ S_nᵀ(C_n + B_n +
+//! Σ_p R(p, S_p, n)) subject to Σ S_nᵀ M_n ≤ budget  — Eq. (1).
+//!
+//! Exact branch-and-bound handles small graphs (and validates the scalable
+//! path in tests); production solves use beam search under a Lagrangian
+//! sweep of the memory constraint, plus simulated-annealing refinement.
+
+pub mod sgraph;
+
+use crate::util::rng::Rng;
+
+pub use sgraph::{Edge, SolverGraph};
+
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// Chosen strategy index per solver node.
+    pub choice: Vec<usize>,
+    /// Total per-iteration time (compute + comm + resharding), seconds.
+    pub time: f64,
+    /// Σ per-device memory of the chosen strategies, bytes.
+    pub mem: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SolveOpts {
+    pub beam_width: usize,
+    pub anneal_iters: usize,
+    pub lagrange_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for SolveOpts {
+    fn default() -> Self {
+        SolveOpts {
+            beam_width: 64,
+            anneal_iters: 4000,
+            lagrange_iters: 12,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Evaluate a full assignment.
+pub fn evaluate(sg: &SolverGraph, choice: &[usize]) -> (f64, f64) {
+    let mut time = 0.0;
+    let mut mem = 0.0;
+    for (i, set) in sg.sets.iter().enumerate() {
+        let s = &set.strategies[choice[i]];
+        time += s.compute_time + s.comm_time + s.grad_comm;
+        mem += s.mem_bytes;
+    }
+    for e in &sg.edges {
+        time += e.cost[choice[e.from]][choice[e.to]];
+    }
+    (time, mem)
+}
+
+/// Exact branch-and-bound (reference solver; exponential worst case —
+/// call only on small graphs).
+pub fn solve_exact(sg: &SolverGraph, budget: f64) -> Option<Solution> {
+    let n = sg.len();
+    // per-node lower bounds on remaining time and memory
+    let min_time: Vec<f64> = sg
+        .sets
+        .iter()
+        .map(|s| {
+            s.strategies
+                .iter()
+                .map(|st| st.compute_time + st.comm_time + st.grad_comm)
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
+    let min_mem = sg.min_mem();
+    let mut suffix_time = vec![0.0; n + 1];
+    let mut suffix_mem = vec![0.0; n + 1];
+    for i in (0..n).rev() {
+        suffix_time[i] = suffix_time[i + 1] + min_time[i];
+        suffix_mem[i] = suffix_mem[i + 1] + min_mem[i];
+    }
+    // incoming edges per node index (from < to in topo construction order)
+    let mut in_edges: Vec<Vec<&Edge>> = vec![Vec::new(); n];
+    for e in &sg.edges {
+        if e.from < e.to {
+            in_edges[e.to].push(e);
+        } else {
+            in_edges[e.from].push(e); // defensive; shouldn't happen
+        }
+    }
+
+    let mut best: Option<Solution> = None;
+    let mut choice = vec![0usize; n];
+
+    fn rec(
+        sg: &SolverGraph,
+        in_edges: &[Vec<&Edge>],
+        suffix_time: &[f64],
+        suffix_mem: &[f64],
+        budget: f64,
+        i: usize,
+        time: f64,
+        mem: f64,
+        choice: &mut Vec<usize>,
+        best: &mut Option<Solution>,
+    ) {
+        if let Some(b) = best {
+            if time + suffix_time[i] >= b.time {
+                return;
+            }
+        }
+        if mem + suffix_mem[i] > budget {
+            return;
+        }
+        if i == sg.len() {
+            let sol = Solution { choice: choice.clone(), time, mem };
+            if best.as_ref().map(|b| sol.time < b.time).unwrap_or(true) {
+                *best = Some(sol);
+            }
+            return;
+        }
+        // order strategies by local cost for better pruning
+        let mut order: Vec<usize> =
+            (0..sg.sets[i].strategies.len()).collect();
+        order.sort_by(|&a, &b| {
+            let sa = &sg.sets[i].strategies[a];
+            let sb = &sg.sets[i].strategies[b];
+            (sa.compute_time + sa.comm_time)
+                .partial_cmp(&(sb.compute_time + sb.comm_time))
+                .unwrap()
+        });
+        for s in order {
+            choice[i] = s;
+            let st = &sg.sets[i].strategies[s];
+            let mut t =
+                time + st.compute_time + st.comm_time + st.grad_comm;
+            for e in &in_edges[i] {
+                t += e.cost[choice[e.from]][s];
+            }
+            rec(
+                sg, in_edges, suffix_time, suffix_mem, budget, i + 1, t,
+                mem + st.mem_bytes, choice, best,
+            );
+        }
+    }
+
+    rec(
+        sg, &in_edges, &suffix_time, &suffix_mem, budget, 0, 0.0, 0.0,
+        &mut choice, &mut best,
+    );
+    best
+}
+
+/// Beam search minimizing time + λ·mem over *compute* nodes in topo
+/// order. Placeholder nodes (params/inputs/consts) are eliminated from
+/// the search: they carry no compute and typically one consumer edge, so
+/// their best strategy is chosen greedily once consumers are fixed —
+/// without this the beam spends its width permuting parameter layouts
+/// before any differentiating edge cost appears.
+fn beam(sg: &SolverGraph, lambda: f64, width: usize) -> Solution {
+    let n = sg.len();
+    let is_free: Vec<bool> = sg
+        .sets
+        .iter()
+        .map(|set| {
+            set.strategies
+                .iter()
+                .all(|s| s.compute_time == 0.0 && s.comm_time == 0.0
+                    && s.grad_comm == 0.0)
+                && set.strategies.len() > 1
+        })
+        .collect();
+    let order: Vec<usize> = (0..n).filter(|&i| !is_free[i]).collect();
+    let pos: Vec<Option<usize>> = {
+        let mut p = vec![None; n];
+        for (k, &i) in order.iter().enumerate() {
+            p[i] = Some(k);
+        }
+        p
+    };
+    // edges between two beam nodes, keyed by the later one
+    let mut in_edges: Vec<Vec<&Edge>> = vec![Vec::new(); order.len()];
+    for e in &sg.edges {
+        if let (Some(pf), Some(pt)) = (pos[e.from], pos[e.to]) {
+            in_edges[pf.max(pt)].push(e);
+        }
+    }
+
+    #[derive(Clone)]
+    struct State {
+        choice: Vec<usize>,
+        time: f64,
+        mem: f64,
+    }
+    let mut states =
+        vec![State { choice: Vec::new(), time: 0.0, mem: 0.0 }];
+    for (k, &i) in order.iter().enumerate() {
+        let mut next: Vec<State> = Vec::with_capacity(
+            states.len() * sg.sets[i].strategies.len(),
+        );
+        for st in &states {
+            for (si, s) in sg.sets[i].strategies.iter().enumerate() {
+                let mut t =
+                    st.time + s.compute_time + s.comm_time + s.grad_comm;
+                for e in &in_edges[k] {
+                    let (f, ti) = if pos[e.to] == Some(k) {
+                        (st.choice[pos[e.from].unwrap()], si)
+                    } else {
+                        (si, st.choice[pos[e.to].unwrap()])
+                    };
+                    t += e.cost[f][ti];
+                }
+                let mut c = st.choice.clone();
+                c.push(si);
+                next.push(State {
+                    choice: c,
+                    time: t,
+                    mem: st.mem + s.mem_bytes,
+                });
+            }
+        }
+        next.sort_by(|a, b| {
+            (a.time + lambda * a.mem)
+                .partial_cmp(&(b.time + lambda * b.mem))
+                .unwrap()
+        });
+        next.truncate(width);
+        states = next;
+    }
+    let best = states.into_iter().next().expect("beam never empty");
+    // materialize the full choice vector; placeholders picked greedily
+    let mut choice = vec![usize::MAX; n];
+    for (k, &i) in order.iter().enumerate() {
+        choice[i] = best.choice[k];
+    }
+    for i in 0..n {
+        if choice[i] == usize::MAX {
+            choice[i] = 0;
+        }
+    }
+    // greedy placeholder assignment by incident edge cost + λ·mem
+    for i in 0..n {
+        if !is_free[i] {
+            continue;
+        }
+        let mut best_si = 0;
+        let mut best_cost = f64::INFINITY;
+        for si in 0..sg.sets[i].strategies.len() {
+            let mut c =
+                lambda * sg.sets[i].strategies[si].mem_bytes;
+            for e in &sg.edges {
+                if e.from == i {
+                    c += e.cost[si][choice[e.to]];
+                } else if e.to == i {
+                    c += e.cost[choice[e.from]][si];
+                }
+            }
+            if c < best_cost {
+                best_cost = c;
+                best_si = si;
+            }
+        }
+        choice[i] = best_si;
+    }
+    let (time, mem) = evaluate(sg, &choice);
+    let mut sol = Solution { choice, time, mem };
+    icm(sg, &mut sol, lambda);
+    icm2(sg, &mut sol, lambda);
+    sol
+}
+
+/// Iterated conditional modes: sweep nodes in order, setting each to the
+/// argmin of (local + incident edge costs + λ·mem) with neighbours fixed.
+/// Deterministic; converges in a few sweeps; escapes the "chain mismatch"
+/// minima single-site annealing gets stuck in when combined with restarts.
+fn icm(sg: &SolverGraph, sol: &mut Solution, lambda: f64) {
+    let n = sg.len();
+    let mut out_edges: Vec<Vec<&Edge>> = vec![Vec::new(); n];
+    let mut in_edges: Vec<Vec<&Edge>> = vec![Vec::new(); n];
+    for e in &sg.edges {
+        out_edges[e.from].push(e);
+        in_edges[e.to].push(e);
+    }
+    for _sweep in 0..24 {
+        let mut changed = false;
+        for i in 0..n {
+            let cur = sol.choice[i];
+            let mut best_si = cur;
+            let mut best_cost = f64::INFINITY;
+            for (si, s) in sg.sets[i].strategies.iter().enumerate() {
+                let mut c = s.compute_time
+                    + s.comm_time
+                    + s.grad_comm
+                    + lambda * s.mem_bytes;
+                for e in &in_edges[i] {
+                    c += e.cost[sol.choice[e.from]][si];
+                }
+                for e in &out_edges[i] {
+                    c += e.cost[si][sol.choice[e.to]];
+                }
+                if c < best_cost {
+                    best_cost = c;
+                    best_si = si;
+                }
+            }
+            if best_si != cur {
+                sol.choice[i] = best_si;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let (t, m) = evaluate(sg, &sol.choice);
+    sol.time = t;
+    sol.mem = m;
+}
+
+/// Pairwise ICM over edges: jointly reassign both endpoints of each edge
+/// (captures coupled moves like "flip fc1 column-parallel + fc2
+/// row-parallel together" that single-site sweeps cannot make).
+fn icm2(sg: &SolverGraph, sol: &mut Solution, lambda: f64) {
+    let n = sg.len();
+    let mut incident: Vec<Vec<&Edge>> = vec![Vec::new(); n];
+    for e in &sg.edges {
+        incident[e.from].push(e);
+        incident[e.to].push(e);
+    }
+    let local = |i: usize, si: usize| {
+        let s = &sg.sets[i].strategies[si];
+        s.compute_time + s.comm_time + s.grad_comm + lambda * s.mem_bytes
+    };
+    for _sweep in 0..8 {
+        let mut changed = false;
+        for e0 in &sg.edges {
+            let (u, v) = (e0.from, e0.to);
+            let (cu, cv) = (sol.choice[u], sol.choice[v]);
+            // factor the objective: cost(su, sv) = mu[su] + mv[sv] +
+            // coupling(su, sv), where mu/mv fold local cost plus every
+            // incident edge whose other endpoint is fixed. This turns the
+            // O(s_u * s_v * deg) inner loop into O((s_u + s_v) * deg +
+            // s_u * s_v) — the perf-pass optimization logged in
+            // EXPERIMENTS.md §Perf.
+            let nu = sg.sets[u].strategies.len();
+            let nv = sg.sets[v].strategies.len();
+            let mut mu: Vec<f64> = (0..nu).map(|si| local(u, si)).collect();
+            for e in &incident[u] {
+                if e.from == u && e.to == v || e.from == v && e.to == u {
+                    continue; // handled as coupling
+                }
+                for (si, m) in mu.iter_mut().enumerate() {
+                    *m += if e.from == u {
+                        e.cost[si][sol.choice[e.to]]
+                    } else {
+                        e.cost[sol.choice[e.from]][si]
+                    };
+                }
+            }
+            let mut mv: Vec<f64> = (0..nv).map(|si| local(v, si)).collect();
+            for e in &incident[v] {
+                if e.from == u && e.to == v || e.from == v && e.to == u {
+                    continue;
+                }
+                for (si, m) in mv.iter_mut().enumerate() {
+                    *m += if e.from == v {
+                        e.cost[si][sol.choice[e.to]]
+                    } else {
+                        e.cost[sol.choice[e.from]][si]
+                    };
+                }
+            }
+            // coupling: ALL edges directly connecting u and v
+            let couplings: Vec<&&Edge> = incident[u]
+                .iter()
+                .filter(|e| {
+                    (e.from == u && e.to == v) || (e.from == v && e.to == u)
+                })
+                .collect();
+            let mut best = (cu, cv);
+            let mut best_cost = f64::INFINITY;
+            for (su, mu_s) in mu.iter().enumerate() {
+                for (sv, mv_s) in mv.iter().enumerate() {
+                    let mut c = mu_s + mv_s;
+                    for e in &couplings {
+                        c += if e.from == u {
+                            e.cost[su][sv]
+                        } else {
+                            e.cost[sv][su]
+                        };
+                    }
+                    if c < best_cost {
+                        best_cost = c;
+                        best = (su, sv);
+                    }
+                }
+            }
+            if best != (cu, cv) {
+                sol.choice[u] = best.0;
+                sol.choice[v] = best.1;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+        icm(sg, sol, lambda);
+    }
+    let (t, m) = evaluate(sg, &sol.choice);
+    sol.time = t;
+    sol.mem = m;
+}
+
+/// Single-node random reassignment annealing on the penalized objective.
+fn anneal(
+    sg: &SolverGraph,
+    start: Solution,
+    lambda: f64,
+    iters: usize,
+    seed: u64,
+) -> Solution {
+    let mut rng = Rng::new(seed);
+    let mut cur = start.choice.clone();
+    let (mut ct, mut cm) = evaluate(sg, &cur);
+    let mut best = Solution { choice: cur.clone(), time: ct, mem: cm };
+    let pen = |t: f64, m: f64| t + lambda * m;
+    let mut cur_pen = pen(ct, cm);
+    let mut best_pen = cur_pen;
+    for it in 0..iters {
+        let node = rng.below(sg.len());
+        let ns = sg.sets[node].strategies.len();
+        if ns <= 1 {
+            continue;
+        }
+        let old = cur[node];
+        let new = rng.below(ns);
+        if new == old {
+            continue;
+        }
+        cur[node] = new;
+        let (t, m) = evaluate(sg, &cur);
+        let p = pen(t, m);
+        let temp = 0.3 * (1.0 - it as f64 / iters as f64) + 1e-9;
+        let accept = p < cur_pen
+            || rng.f64() < (-(p - cur_pen) / (cur_pen * temp + 1e-30)).exp();
+        if accept {
+            cur_pen = p;
+            ct = t;
+            cm = m;
+            if p < best_pen {
+                best_pen = p;
+                best = Solution { choice: cur.clone(), time: ct, mem: cm };
+            }
+        } else {
+            cur[node] = old;
+        }
+    }
+    icm(sg, &mut best, lambda);
+    icm2(sg, &mut best, lambda);
+    best
+}
+
+/// Production solve: Lagrangian bisection on λ around the memory budget,
+/// beam + anneal at each λ; returns the best budget-feasible solution.
+pub fn solve(sg: &SolverGraph, budget: f64, opts: SolveOpts)
+             -> Option<Solution> {
+    if sg.is_empty() {
+        return Some(Solution { choice: vec![], time: 0.0, mem: 0.0 });
+    }
+    // infeasible even at minimum memory?
+    if sg.min_mem().iter().sum::<f64>() > budget {
+        return None;
+    }
+    let mut best: Option<Solution> = None;
+    let consider = |s: Solution, best: &mut Option<Solution>| {
+        if s.mem <= budget
+            && best.as_ref().map(|b| s.time < b.time).unwrap_or(true)
+        {
+            *best = Some(s);
+        }
+    };
+
+    // λ = 0: pure-time optimum (feasible when memory is plentiful)
+    let s0 = anneal(
+        sg,
+        beam(sg, 0.0, opts.beam_width),
+        0.0,
+        opts.anneal_iters,
+        opts.seed,
+    );
+    let needs_lagrange = s0.mem > budget;
+    consider(s0, &mut best);
+    if !needs_lagrange {
+        return best;
+    }
+
+    // bisect λ until the beam lands under budget
+    let (mut lo, mut hi) = (0.0f64, 1e-6);
+    // grow hi until feasible
+    for _ in 0..40 {
+        let s = beam(sg, hi, opts.beam_width);
+        if s.mem <= budget {
+            break;
+        }
+        hi *= 8.0;
+    }
+    for it in 0..opts.lagrange_iters {
+        let mid = 0.5 * (lo + hi);
+        let s = anneal(
+            sg,
+            beam(sg, mid, opts.beam_width),
+            mid,
+            opts.anneal_iters / 4,
+            opts.seed ^ it as u64,
+        );
+        if s.mem <= budget {
+            hi = mid;
+            consider(s, &mut best);
+        } else {
+            lo = mid;
+        }
+    }
+    // final polish at hi
+    let s = anneal(
+        sg,
+        beam(sg, hi, opts.beam_width),
+        hi,
+        opts.anneal_iters,
+        opts.seed ^ 0xABCD,
+    );
+    consider(s, &mut best);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeviceMesh;
+    use crate::graph::models::{gpt2, mlp, Gpt2Cfg};
+    use crate::layout::LayoutManager;
+    use crate::sim::DeviceModel;
+
+    fn mesh(shape: &[usize]) -> DeviceMesh {
+        let n: usize = shape.iter().product();
+        DeviceMesh {
+            shape: shape.to_vec(),
+            devices: (0..n).collect(),
+            axis_alpha: vec![1e-6; shape.len()],
+            axis_beta: vec![1e11; shape.len()],
+        }
+    }
+
+    fn build(g: &crate::graph::Graph, m: &DeviceMesh) -> SolverGraph {
+        let mut lm = LayoutManager::new(m.clone());
+        SolverGraph::build(g, m, &DeviceModel::a100_80gb(), &mut lm)
+    }
+
+    #[test]
+    fn beam_matches_exact_on_small_graph() {
+        let g = mlp(64, &[256, 128, 64, 10]);
+        let m = mesh(&[4]);
+        let sg = build(&g, &m);
+        let budget = 1e12; // unconstrained
+        let exact = solve_exact(&sg, budget).unwrap();
+        let approx = solve(&sg, budget, SolveOpts::default()).unwrap();
+        assert!(
+            approx.time <= exact.time * 1.02 + 1e-12,
+            "beam {} vs exact {}",
+            approx.time,
+            exact.time
+        );
+    }
+
+    #[test]
+    fn solution_prefers_parallelism_over_serial() {
+        let g = mlp(512, &[4096, 4096, 4096, 10]);
+        let m = mesh(&[4]);
+        let sg = build(&g, &m);
+        let sol = solve(&sg, 1e12, SolveOpts::default()).unwrap();
+        // serial everything = every node replicated; solution must beat it
+        let serial: Vec<usize> = sg
+            .sets
+            .iter()
+            .map(|s| {
+                s.strategies
+                    .iter()
+                    .position(|st| {
+                        st.out_spec.used_axes().is_empty()
+                            && st
+                                .in_specs
+                                .iter()
+                                .all(|i| i.used_axes().is_empty())
+                    })
+                    .unwrap_or(0)
+            })
+            .collect();
+        let (serial_time, _) = evaluate(&sg, &serial);
+        assert!(
+            sol.time < serial_time * 0.6,
+            "sol {} vs serial {serial_time}",
+            sol.time
+        );
+    }
+
+    #[test]
+    fn memory_budget_is_respected() {
+        let g = mlp(64, &[512, 512, 512, 10]);
+        let m = mesh(&[4]);
+        let sg = build(&g, &m);
+        let unconstrained =
+            solve(&sg, 1e15, SolveOpts::default()).unwrap();
+        // force a tight budget: below the unconstrained answer's memory
+        let tight = unconstrained.mem * 0.6;
+        let min_possible: f64 = sg.min_mem().iter().sum();
+        if min_possible <= tight {
+            let sol = solve(&sg, tight, SolveOpts::default()).unwrap();
+            assert!(sol.mem <= tight);
+            assert!(sol.time >= unconstrained.time * 0.99);
+        }
+        // impossible budget -> None
+        assert!(solve(&sg, min_possible * 0.5, SolveOpts::default())
+            .is_none());
+    }
+
+    #[test]
+    fn gpt2_mini_solves_in_reasonable_time() {
+        let g = gpt2(&Gpt2Cfg::mini());
+        let m = mesh(&[2, 2]);
+        let t0 = std::time::Instant::now();
+        let sg = build(&g, &m);
+        let sol = solve(
+            &sg,
+            1e12,
+            SolveOpts { anneal_iters: 500, ..Default::default() },
+        )
+        .unwrap();
+        assert!(sol.time > 0.0);
+        assert!(
+            t0.elapsed().as_secs() < 60,
+            "solve took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn evaluate_is_consistent_with_solver_report() {
+        let g = mlp(64, &[128, 64, 10]);
+        let m = mesh(&[2]);
+        let sg = build(&g, &m);
+        let sol = solve(&sg, 1e12, SolveOpts::default()).unwrap();
+        let (t, mem) = evaluate(&sg, &sol.choice);
+        assert!((t - sol.time).abs() < 1e-12);
+        assert!((mem - sol.mem).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,268 @@
+//! Solver graph: the merged computation graph the ILP actually optimizes
+//! (§5.1's preprocessing).  Computationally-trivial single-input nodes
+//! (reshape / transpose / slice) are folded into edges as "spec adapters";
+//! scalar-only nodes are dropped; what remains are solver nodes with
+//! strategy sets and edges carrying dense resharding-cost matrices
+//! R(p, S_p, n).
+
+use crate::cluster::DeviceMesh;
+use crate::graph::op::Op;
+use crate::graph::{Graph, NodeId};
+use crate::layout::LayoutManager;
+use crate::sim::DeviceModel;
+use crate::spec::ShardingSpec;
+use crate::strategy::{generate, propagate_spec, StrategySet};
+
+/// Ops folded into edges (single-input, zero-FLOP).
+fn mergeable(op: &Op) -> bool {
+    matches!(
+        op,
+        Op::Reshape { .. } | Op::Transpose { .. } | Op::Slice { .. }
+    )
+}
+
+#[derive(Debug, Clone)]
+pub struct Edge {
+    pub from: usize,
+    pub to: usize,
+    /// Index of the consumer's input this edge feeds.
+    pub to_input: usize,
+    /// cost\[s_from\]\[s_to\] = resharding seconds for that strategy pair.
+    pub cost: Vec<Vec<f64>>,
+}
+
+pub struct SolverGraph {
+    /// Solver-node -> original anchor node.
+    pub anchors: Vec<NodeId>,
+    /// Original node -> solver node (usize::MAX for folded/dropped nodes).
+    pub solver_of: Vec<usize>,
+    pub sets: Vec<StrategySet>,
+    pub edges: Vec<Edge>,
+}
+
+impl SolverGraph {
+    pub fn len(&self) -> usize {
+        self.anchors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.anchors.is_empty()
+    }
+
+    /// Per-node minimum memory (for infeasibility pruning).
+    pub fn min_mem(&self) -> Vec<f64> {
+        self.sets
+            .iter()
+            .map(|s| {
+                s.strategies
+                    .iter()
+                    .map(|st| st.mem_bytes)
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect()
+    }
+
+    /// Build from a computation graph: generate strategies for every
+    /// solver node, fold trivial chains, and price every edge's
+    /// (producer strategy, consumer strategy) resharding with the layout
+    /// manager (costs land in its cache — §4.3 "solver supports").
+    pub fn build(
+        g: &Graph,
+        mesh: &DeviceMesh,
+        dev: &DeviceModel,
+        layout: &mut LayoutManager,
+    ) -> SolverGraph {
+        let mut anchors = Vec::new();
+        let mut solver_of = vec![usize::MAX; g.len()];
+        for n in &g.nodes {
+            if mergeable(&n.op) || matches!(n.op, Op::Output) {
+                continue;
+            }
+            // scalar-only nodes (e.g. attn scale consts) are kept: they
+            // are placeholders with a single replicated strategy — cheap.
+            solver_of[n.id] = anchors.len();
+            anchors.push(n.id);
+        }
+
+        let sets: Vec<StrategySet> = crate::util::pool::parallel_map(
+            &anchors,
+            |&id| generate(g, id, mesh, dev),
+        );
+
+        // walk each solver node's inputs back through trivial chains
+        let mut edges = Vec::new();
+        for (to_sn, &to_id) in anchors.iter().enumerate() {
+            let node = g.node(to_id);
+            for (to_input, &inp) in node.inputs.iter().enumerate() {
+                // collect the adapter chain (forward order)
+                let mut chain: Vec<NodeId> = Vec::new();
+                let mut cur = inp;
+                while mergeable(&g.node(cur).op) {
+                    chain.push(cur);
+                    cur = g.node(cur).inputs[0];
+                }
+                chain.reverse();
+                let from_sn = solver_of[cur];
+                if from_sn == usize::MAX {
+                    continue;
+                }
+                let cost = price_edge(
+                    g, mesh, layout, &sets[from_sn], &sets[to_sn],
+                    to_input, cur, &chain, to_id,
+                );
+                edges.push(Edge { from: from_sn, to: to_sn, to_input, cost });
+            }
+        }
+
+        SolverGraph { anchors, solver_of, sets, edges }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn price_edge(
+    g: &Graph,
+    mesh: &DeviceMesh,
+    layout: &mut LayoutManager,
+    from_set: &StrategySet,
+    to_set: &StrategySet,
+    to_input: usize,
+    producer: NodeId,
+    chain: &[NodeId],
+    consumer: NodeId,
+) -> Vec<Vec<f64>> {
+    let consumer_in_meta = {
+        let n = g.node(consumer);
+        &g.node(n.inputs[to_input]).out
+    };
+    let prod_meta = &g.node(producer).out;
+    let elem = prod_meta.dtype.bytes();
+
+    let mut cost =
+        vec![vec![0.0; to_set.strategies.len()]; from_set.strategies.len()];
+    for (si, s) in from_set.strategies.iter().enumerate() {
+        // propagate producer's out spec through the trivial chain
+        let mut spec = Some(s.out_spec.clone());
+        let mut shape = prod_meta.shape.clone();
+        for &t in chain {
+            let tn = g.node(t);
+            spec = spec.and_then(|sp| {
+                propagate_spec(&tn.op, &sp, &shape, &tn.out.shape)
+            });
+            shape = tn.out.shape.clone();
+        }
+        for (ti, t) in to_set.strategies.iter().enumerate() {
+            let want: &ShardingSpec = if to_input < t.in_specs.len() {
+                &t.in_specs[to_input]
+            } else {
+                // placeholder-ish consumer: no required spec
+                continue;
+            };
+            cost[si][ti] = match &spec {
+                Some(sp) => {
+                    layout
+                        .convert(sp, want, &consumer_in_meta.shape, elem)
+                        .comm_time
+                }
+                None => {
+                    // sharding broken mid-chain: gather at the producer,
+                    // then shard to the consumer's need (shard is free)
+                    let repl =
+                        ShardingSpec::replicated(prod_meta.shape.len());
+                    let gather = layout
+                        .convert(&s.out_spec, &repl, &prod_meta.shape, elem)
+                        .comm_time;
+                    let want_r =
+                        ShardingSpec::replicated(want.rank());
+                    let shard_in = layout
+                        .convert(&want_r, want, &consumer_in_meta.shape, elem)
+                        .comm_time;
+                    gather + shard_in
+                }
+            };
+        }
+    }
+    let _ = mesh;
+    cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models::{gpt2, mlp, Gpt2Cfg};
+
+    fn mesh4() -> DeviceMesh {
+        DeviceMesh {
+            shape: vec![4],
+            devices: (0..4).collect(),
+            axis_alpha: vec![1e-6],
+            axis_beta: vec![1e11],
+        }
+    }
+
+    #[test]
+    fn mlp_solver_graph_has_no_trivial_nodes() {
+        let g = mlp(32, &[128, 64, 10]);
+        let mut lm = LayoutManager::new(mesh4());
+        let sg = SolverGraph::build(
+            &g,
+            &mesh4(),
+            &DeviceModel::a100_80gb(),
+            &mut lm,
+        );
+        for &a in &sg.anchors {
+            assert!(!mergeable(&g.node(a).op));
+        }
+        assert!(!sg.edges.is_empty());
+    }
+
+    #[test]
+    fn gpt2_merges_reshape_transpose_chains() {
+        let g = gpt2(&Gpt2Cfg::mini());
+        let trivial = g
+            .nodes
+            .iter()
+            .filter(|n| mergeable(&n.op))
+            .count();
+        assert!(trivial > 10, "gpt2 has many trivial nodes: {trivial}");
+        let mut lm = LayoutManager::new(mesh4());
+        let sg = SolverGraph::build(
+            &g,
+            &mesh4(),
+            &DeviceModel::a100_80gb(),
+            &mut lm,
+        );
+        // solver graph is strictly smaller
+        assert!(sg.len() + trivial + 1 == g.len());
+        // every edge endpoints valid + cost matrices match set sizes
+        for e in &sg.edges {
+            assert!(e.from < sg.len() && e.to < sg.len());
+            assert_eq!(e.cost.len(), sg.sets[e.from].strategies.len());
+            assert_eq!(
+                e.cost[0].len(),
+                sg.sets[e.to].strategies.len()
+            );
+        }
+        // layout cache should have been populated heavily
+        assert!(lm.cache_len() > 10);
+    }
+
+    #[test]
+    fn edge_costs_zero_for_matching_specs() {
+        let g = mlp(32, &[128, 64, 10]);
+        let mut lm = LayoutManager::new(mesh4());
+        let sg = SolverGraph::build(
+            &g,
+            &mesh4(),
+            &DeviceModel::a100_80gb(),
+            &mut lm,
+        );
+        // for every edge there must exist at least one zero-cost pair
+        for e in &sg.edges {
+            let any_zero = e
+                .cost
+                .iter()
+                .any(|row| row.iter().any(|&c| c == 0.0));
+            assert!(any_zero, "edge {e:?} has no compatible pair");
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Sharding specs (§2.1): for an N-D tensor, spec = X₀X₁…Xₙ₋₁ with
+//! Xᵢ ∈ {R, S_j, S_jk…} — S with multiple subscripts shards dim i along
+//! several device-mesh axes at once.
+
+use std::fmt;
+
+use crate::cluster::DeviceMesh;
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum DimSpec {
+    Replica,
+    /// Mesh axes sharding this tensor dim, in application order.
+    Shard(Vec<usize>),
+}
+
+impl DimSpec {
+    pub fn axes(&self) -> &[usize] {
+        match self {
+            DimSpec::Replica => &[],
+            DimSpec::Shard(a) => a,
+        }
+    }
+
+    pub fn is_replica(&self) -> bool {
+        matches!(self, DimSpec::Replica)
+    }
+}
+
+impl fmt::Display for DimSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DimSpec::Replica => write!(f, "R"),
+            DimSpec::Shard(axes) => {
+                write!(f, "S")?;
+                for a in axes {
+                    write!(f, "{a}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ShardingSpec {
+    pub dims: Vec<DimSpec>,
+}
+
+impl fmt::Display for ShardingSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for d in &self.dims {
+            write!(f, "{d}")?;
+        }
+        Ok(())
+    }
+}
+
+impl ShardingSpec {
+    pub fn replicated(rank: usize) -> ShardingSpec {
+        ShardingSpec { dims: vec![DimSpec::Replica; rank] }
+    }
+
+    /// Shorthand constructor: `spec(&[&[], &[0], &[0,1]])` = R S0 S01.
+    pub fn new(dims: &[&[usize]]) -> ShardingSpec {
+        ShardingSpec {
+            dims: dims
+                .iter()
+                .map(|a| {
+                    if a.is_empty() {
+                        DimSpec::Replica
+                    } else {
+                        DimSpec::Shard(a.to_vec())
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Remove mesh axes of size 1 (sharding by them is a no-op and would
+    /// otherwise create distinct-but-equivalent specs the layout search
+    /// cannot reach).
+    pub fn normalized(&self, mesh: &DeviceMesh) -> ShardingSpec {
+        ShardingSpec {
+            dims: self
+                .dims
+                .iter()
+                .map(|d| {
+                    let axes: Vec<usize> = d
+                        .axes()
+                        .iter()
+                        .filter(|&&a| mesh.axis_size(a) > 1)
+                        .copied()
+                        .collect();
+                    if axes.is_empty() {
+                        DimSpec::Replica
+                    } else {
+                        DimSpec::Shard(axes)
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// Mesh axes used anywhere in this spec.
+    pub fn used_axes(&self) -> Vec<usize> {
+        let mut used: Vec<usize> =
+            self.dims.iter().flat_map(|d| d.axes().to_vec()).collect();
+        used.sort_unstable();
+        used
+    }
+
+    /// Each mesh axis may shard at most one tensor dim, and every sharded
+    /// dim must divide evenly by the product of its axis sizes.
+    pub fn is_valid(&self, shape: &[usize], mesh: &DeviceMesh) -> bool {
+        if shape.len() != self.dims.len() {
+            return false;
+        }
+        let used = self.used_axes();
+        for w in used.windows(2) {
+            if w[0] == w[1] {
+                return false; // axis reused
+            }
+        }
+        if used.iter().any(|&a| a >= mesh.n_axes()) {
+            return false;
+        }
+        for (dim, d) in self.dims.iter().enumerate() {
+            let factor: usize =
+                d.axes().iter().map(|&a| mesh.axis_size(a)).product();
+            if factor > 0 && shape[dim] % factor != 0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Local shard shape of a `shape`-d tensor under this spec.
+    pub fn shard_shape(&self, shape: &[usize], mesh: &DeviceMesh)
+                       -> Vec<usize> {
+        shape
+            .iter()
+            .zip(&self.dims)
+            .map(|(&s, d)| {
+                let f: usize =
+                    d.axes().iter().map(|&a| mesh.axis_size(a)).product();
+                s / f.max(1)
+            })
+            .collect()
+    }
+
+    /// Bytes of one device's shard (elements * 4 for f32).
+    pub fn shard_numel(&self, shape: &[usize], mesh: &DeviceMesh) -> usize {
+        self.shard_shape(shape, mesh).iter().product()
+    }
+
+    /// Fraction of devices holding distinct data (1 / replication degree).
+    pub fn sharding_factor(&self, mesh: &DeviceMesh) -> usize {
+        self.used_axes()
+            .iter()
+            .map(|&a| mesh.axis_size(a))
+            .product::<usize>()
+            .max(1)
+    }
+
+    /// Enumerate every valid spec for (shape, mesh): each mesh axis is
+    /// assigned to one tensor dim or left unused — (rank+1)^n_axes
+    /// assignments, filtered by divisibility.
+    pub fn enumerate(shape: &[usize], mesh: &DeviceMesh)
+                     -> Vec<ShardingSpec> {
+        let rank = shape.len();
+        let n_axes = mesh.n_axes();
+        let mut out = Vec::new();
+        let choices = rank + 1; // dim index or "unused"
+        let total = choices.pow(n_axes as u32);
+        for code in 0..total {
+            let mut dims: Vec<Vec<usize>> = vec![Vec::new(); rank];
+            let mut c = code;
+            for axis in 0..n_axes {
+                let pick = c % choices;
+                c /= choices;
+                if pick < rank && mesh.axis_size(axis) > 1 {
+                    dims[pick].push(axis);
+                }
+            }
+            let spec = ShardingSpec {
+                dims: dims
+                    .into_iter()
+                    .map(|a| {
+                        if a.is_empty() {
+                            DimSpec::Replica
+                        } else {
+                            DimSpec::Shard(a)
+                        }
+                    })
+                    .collect(),
+            };
+            if spec.is_valid(shape, mesh) {
+                out.push(spec);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mesh2x4() -> DeviceMesh {
+        DeviceMesh {
+            shape: vec![2, 4],
+            devices: (0..8).collect(),
+            axis_alpha: vec![1e-6, 1e-6],
+            axis_beta: vec![1e10, 2e11],
+        }
+    }
+
+    #[test]
+    fn display_matches_paper_notation() {
+        assert_eq!(ShardingSpec::new(&[&[0], &[]]).to_string(), "S0R");
+        assert_eq!(ShardingSpec::new(&[&[0, 1], &[]]).to_string(), "S01R");
+        assert_eq!(ShardingSpec::new(&[&[], &[1]]).to_string(), "RS1");
+    }
+
+    #[test]
+    fn validity_checks_divisibility_and_axis_reuse() {
+        let mesh = mesh2x4();
+        let s0r = ShardingSpec::new(&[&[0], &[]]);
+        assert!(s0r.is_valid(&[8, 6], &mesh));
+        assert!(!s0r.is_valid(&[7, 6], &mesh)); // 7 % 2 != 0
+        let reuse = ShardingSpec::new(&[&[0], &[0]]);
+        assert!(!reuse.is_valid(&[8, 8], &mesh));
+        let s01 = ShardingSpec::new(&[&[0, 1], &[]]);
+        assert!(s01.is_valid(&[8, 6], &mesh)); // 8 % (2*4) == 0
+        assert!(!s01.is_valid(&[4, 6], &mesh)); // 4 % 8 != 0
+    }
+
+    #[test]
+    fn shard_shape_divides() {
+        let mesh = mesh2x4();
+        let spec = ShardingSpec::new(&[&[1], &[0]]);
+        assert_eq!(spec.shard_shape(&[16, 8], &mesh), vec![4, 4]);
+        let full = ShardingSpec::new(&[&[0, 1], &[]]);
+        assert_eq!(full.shard_shape(&[16, 8], &mesh), vec![2, 8]);
+    }
+
+    #[test]
+    fn enumerate_counts_match_combinatorics() {
+        let mesh = mesh2x4();
+        // rank-2 tensor, 2 axes: (2+1)^2 = 9 assignments, all divisible
+        let specs = ShardingSpec::enumerate(&[8, 8], &mesh);
+        assert_eq!(specs.len(), 9);
+        // indivisible dim prunes: dim1 size 6 not divisible by axis1 (4)
+        let specs = ShardingSpec::enumerate(&[8, 6], &mesh);
+        assert!(specs.len() < 9);
+        assert!(specs
+            .iter()
+            .all(|s| s.is_valid(&[8, 6], &mesh)));
+    }
+
+    #[test]
+    fn sharding_factor_counts_devices() {
+        let mesh = mesh2x4();
+        assert_eq!(
+            ShardingSpec::new(&[&[0], &[1]]).sharding_factor(&mesh),
+            8
+        );
+        assert_eq!(
+            ShardingSpec::replicated(2).sharding_factor(&mesh),
+            1
+        );
+    }
+}

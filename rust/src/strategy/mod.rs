@@ -1,0 +1,716 @@
+//! Strategy generators (§5.1): every node is dispatched by op class to a
+//! generator that enumerates its feasible SPMD sharding strategies with
+//! per-strategy compute time (C_n), correctness-communication time (B_n),
+//! and per-device memory (M_n) — the vectors of the ILP in Eq. (1).
+//!
+//! Fewer than 20 generators cover every op in the GPT-2 / ViT / ResNet
+//! family, mirroring the paper's node dispatcher.
+
+pub mod propagate;
+
+use crate::cluster::{Collective, DeviceMesh};
+use crate::graph::meta::TensorMeta;
+use crate::graph::op::{Op, PlaceholderKind};
+use crate::graph::{Graph, NodeId};
+use crate::profiler::cost::node_cost;
+use crate::sim::device::DeviceModel;
+use crate::spec::{DimSpec, ShardingSpec};
+
+pub use propagate::propagate_spec;
+
+/// Cap on strategies kept per node (lowest compute+comm kept).
+pub const MAX_STRATEGIES: usize = 48;
+
+#[derive(Debug, Clone)]
+pub struct Strategy {
+    pub name: String,
+    pub in_specs: Vec<ShardingSpec>,
+    pub out_spec: ShardingSpec,
+    /// Estimated fwd+bwd compute time per iteration (C_n), seconds.
+    pub compute_time: f64,
+    /// Correctness communication (B_n): partial-sum all-reduce on the
+    /// critical path (fwd and bwd). Seconds.
+    pub comm_time: f64,
+    /// Gradient-sync communication that the runtime overlaps with
+    /// backward compute (dW/table all-reduce over data-parallel axes).
+    pub grad_comm: f64,
+    /// Per-device persistent bytes (saved activations + outputs; for
+    /// params: weights + grads).
+    pub mem_bytes: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct StrategySet {
+    pub node: NodeId,
+    pub strategies: Vec<Strategy>,
+}
+
+struct Ctx<'a> {
+    g: &'a Graph,
+    mesh: &'a DeviceMesh,
+    dev: &'a DeviceModel,
+}
+
+fn factor(mesh: &DeviceMesh, axes: &[usize]) -> f64 {
+    axes.iter().map(|&a| mesh.axis_size(a) as f64).product()
+}
+
+fn spec_of(rank: usize, assign: &[(usize, Vec<usize>)], mesh: &DeviceMesh)
+           -> ShardingSpec {
+    let mut dims = vec![DimSpec::Replica; rank];
+    for (d, axes) in assign {
+        if !axes.is_empty() {
+            dims[*d] = DimSpec::Shard(axes.clone());
+        }
+    }
+    ShardingSpec { dims }.normalized(mesh)
+}
+
+/// Enumerate assignments of each mesh axis to one of `roles` slots (or
+/// unused): returns per-assignment role->axes lists.
+fn axis_assignments(n_axes: usize, roles: usize) -> Vec<Vec<Vec<usize>>> {
+    let choices = roles + 1;
+    let total = choices.pow(n_axes as u32);
+    let mut out = Vec::with_capacity(total);
+    for code in 0..total {
+        let mut r: Vec<Vec<usize>> = vec![Vec::new(); roles];
+        let mut c = code;
+        for axis in 0..n_axes {
+            let pick = c % choices;
+            c /= choices;
+            if pick < roles {
+                r[pick].push(axis);
+            }
+        }
+        out.push(r);
+    }
+    out
+}
+
+impl<'a> Ctx<'a> {
+    /// GEMM-family generator: roles (M, K, N) over x(..., K) @ w(K, N).
+    /// K-sharding produces a partial sum -> fwd all-reduce of the output;
+    /// M-sharding (data parallel) needs a bwd all-reduce of dW.
+    fn matmul(&self, id: NodeId) -> Vec<Strategy> {
+        let n = self.g.node(id);
+        let x = &self.g.node(n.inputs[0]).out;
+        let w = &self.g.node(n.inputs[1]).out;
+        let out = &n.out;
+        let cost = node_cost(self.g, id);
+        let mut res = Vec::new();
+        for roles in axis_assignments(self.mesh.n_axes(), 3) {
+            let (m_ax, k_ax, n_ax) = (&roles[0], &roles[1], &roles[2]);
+            let x_spec = spec_of(x.rank(),
+                &[(0, m_ax.clone()), (x.rank() - 1, k_ax.clone())], self.mesh);
+            let w_spec =
+                spec_of(2, &[(0, k_ax.clone()), (1, n_ax.clone())], self.mesh);
+            let o_spec = spec_of(out.rank(),
+                &[(0, m_ax.clone()), (out.rank() - 1, n_ax.clone())], self.mesh);
+            if !x_spec.is_valid(&x.shape, self.mesh)
+                || !w_spec.is_valid(&w.shape, self.mesh)
+                || !o_spec.is_valid(&out.shape, self.mesh)
+            {
+                continue;
+            }
+            let shard = factor(self.mesh, m_ax)
+                * factor(self.mesh, k_ax)
+                * factor(self.mesh, n_ax);
+            let traffic = (x.bytes() + w.bytes() + out.bytes()) as f64 / shard;
+            let compute = self.dev.kernel_time(
+                cost.total_flops() / shard,
+                3.0 * traffic, // fwd + two bwd GEMMs
+                true,
+            );
+            // fwd partial-sum all-reduce over K axes
+            let out_shard =
+                out.bytes() as f64 / (factor(self.mesh, m_ax) * factor(self.mesh, n_ax));
+            let mut comm = 0.0;
+            for &ax in k_ax {
+                comm += self.mesh.collective_time(
+                    Collective::AllReduce,
+                    out_shard,
+                    ax,
+                );
+            }
+            // bwd dW all-reduce over M (data-parallel) axes — overlappable
+            // (gradients travel as bf16 buckets: half the fp32 bytes)
+            let w_shard = 0.5 * w.bytes() as f64
+                / (factor(self.mesh, k_ax) * factor(self.mesh, n_ax));
+            let mut grad_comm = 0.0;
+            for &ax in m_ax {
+                grad_comm += self.mesh.collective_time(
+                    Collective::AllReduce,
+                    w_shard,
+                    ax,
+                );
+            }
+            let mem = x.bytes() as f64
+                / (factor(self.mesh, m_ax) * factor(self.mesh, k_ax))
+                + out_shard;
+            res.push(Strategy {
+                name: format!("mm[M{m_ax:?}K{k_ax:?}N{n_ax:?}]"),
+                in_specs: vec![x_spec, w_spec],
+                out_spec: o_spec,
+                compute_time: compute,
+                comm_time: comm,
+                grad_comm,
+                mem_bytes: mem,
+            });
+        }
+        res
+    }
+
+    /// Batched GEMM: roles (B, M, K, N) over a(B.., M, K) @ b(B.., K, N).
+    fn bmm(&self, id: NodeId) -> Vec<Strategy> {
+        let n = self.g.node(id);
+        let a = &self.g.node(n.inputs[0]).out;
+        let out = &n.out;
+        let r = a.rank();
+        let cost = node_cost(self.g, id);
+        let mut res = Vec::new();
+        for roles in axis_assignments(self.mesh.n_axes(), 4) {
+            let (b_ax, m_ax, k_ax, n_ax) =
+                (&roles[0], &roles[1], &roles[2], &roles[3]);
+            let a_spec = spec_of(r,
+                &[(0, b_ax.clone()), (r - 2, m_ax.clone()), (r - 1, k_ax.clone())], self.mesh);
+            let b_spec = spec_of(r,
+                &[(0, b_ax.clone()), (r - 2, k_ax.clone()), (r - 1, n_ax.clone())], self.mesh);
+            let o_spec = spec_of(r,
+                &[(0, b_ax.clone()), (r - 2, m_ax.clone()), (r - 1, n_ax.clone())], self.mesh);
+            let bm = &self.g.node(n.inputs[1]).out;
+            if !a_spec.is_valid(&a.shape, self.mesh)
+                || !b_spec.is_valid(&bm.shape, self.mesh)
+                || !o_spec.is_valid(&out.shape, self.mesh)
+            {
+                continue;
+            }
+            let shard = factor(self.mesh, b_ax)
+                * factor(self.mesh, m_ax)
+                * factor(self.mesh, k_ax)
+                * factor(self.mesh, n_ax);
+            let traffic =
+                (a.bytes() + bm.bytes() + out.bytes()) as f64 / shard;
+            let compute = self.dev.kernel_time(
+                cost.total_flops() / shard,
+                3.0 * traffic,
+                true,
+            );
+            let out_shard = out.bytes() as f64
+                / (factor(self.mesh, b_ax)
+                    * factor(self.mesh, m_ax)
+                    * factor(self.mesh, n_ax));
+            let mut comm = 0.0;
+            for &ax in k_ax {
+                comm += self.mesh.collective_time(
+                    Collective::AllReduce,
+                    out_shard,
+                    ax,
+                );
+            }
+            let mem = (a.bytes() + bm.bytes()) as f64 / shard + out_shard;
+            res.push(Strategy {
+                name: format!("bmm[B{b_ax:?}M{m_ax:?}K{k_ax:?}N{n_ax:?}]"),
+                in_specs: vec![a_spec, b_spec],
+                out_spec: o_spec,
+                compute_time: compute,
+                comm_time: comm,
+                grad_comm: 0.0,
+                mem_bytes: mem,
+            });
+        }
+        res
+    }
+
+    /// Conv2d: roles (N batch, C in-channel partial-sum, O out-channel).
+    fn conv(&self, id: NodeId) -> Vec<Strategy> {
+        let n = self.g.node(id);
+        let x = &self.g.node(n.inputs[0]).out;
+        let w = &self.g.node(n.inputs[1]).out;
+        let out = &n.out;
+        let cost = node_cost(self.g, id);
+        let mut res = Vec::new();
+        for roles in axis_assignments(self.mesh.n_axes(), 3) {
+            let (n_ax, c_ax, o_ax) = (&roles[0], &roles[1], &roles[2]);
+            let x_spec =
+                spec_of(4, &[(0, n_ax.clone()), (1, c_ax.clone())], self.mesh);
+            let w_spec =
+                spec_of(4, &[(0, o_ax.clone()), (1, c_ax.clone())], self.mesh);
+            let o_spec =
+                spec_of(4, &[(0, n_ax.clone()), (1, o_ax.clone())], self.mesh);
+            if !x_spec.is_valid(&x.shape, self.mesh)
+                || !w_spec.is_valid(&w.shape, self.mesh)
+                || !o_spec.is_valid(&out.shape, self.mesh)
+            {
+                continue;
+            }
+            let shard = factor(self.mesh, n_ax)
+                * factor(self.mesh, c_ax)
+                * factor(self.mesh, o_ax);
+            let traffic = (x.bytes() + w.bytes() + out.bytes()) as f64 / shard;
+            let compute = self.dev.kernel_time(
+                cost.total_flops() / shard,
+                3.0 * traffic,
+                true,
+            );
+            let out_shard = out.bytes() as f64
+                / (factor(self.mesh, n_ax) * factor(self.mesh, o_ax));
+            let mut comm = 0.0;
+            for &ax in c_ax {
+                comm += self.mesh.collective_time(
+                    Collective::AllReduce,
+                    out_shard,
+                    ax,
+                );
+            }
+            let w_shard = 0.5 * w.bytes() as f64
+                / (factor(self.mesh, c_ax) * factor(self.mesh, o_ax));
+            let mut grad_comm = 0.0;
+            for &ax in n_ax {
+                grad_comm += self.mesh.collective_time(
+                    Collective::AllReduce,
+                    w_shard,
+                    ax,
+                );
+            }
+            let mem = x.bytes() as f64
+                / (factor(self.mesh, n_ax) * factor(self.mesh, c_ax))
+                + out_shard;
+            res.push(Strategy {
+                name: format!("conv[N{n_ax:?}C{c_ax:?}O{o_ax:?}]"),
+                in_specs: vec![x_spec, w_spec],
+                out_spec: o_spec,
+                compute_time: compute,
+                comm_time: comm,
+                grad_comm,
+                mem_bytes: mem,
+            });
+        }
+        res
+    }
+
+    /// Embedding (table (V, D), ids (..)): batch-shard ids and/or shard D.
+    fn embedding(&self, id: NodeId) -> Vec<Strategy> {
+        let n = self.g.node(id);
+        let ids = &self.g.node(n.inputs[1]).out;
+        let table = &self.g.node(n.inputs[0]).out;
+        let out = &n.out;
+        let cost = node_cost(self.g, id);
+        let mut res = Vec::new();
+        for roles in axis_assignments(self.mesh.n_axes(), 2) {
+            let (b_ax, d_ax) = (&roles[0], &roles[1]);
+            let ids_spec = spec_of(ids.rank(), &[(0, b_ax.clone())], self.mesh);
+            let table_spec = spec_of(2, &[(1, d_ax.clone())], self.mesh);
+            let o_spec = spec_of(out.rank(),
+                &[(0, b_ax.clone()), (out.rank() - 1, d_ax.clone())], self.mesh);
+            if !ids_spec.is_valid(&ids.shape, self.mesh)
+                || !table_spec.is_valid(&table.shape, self.mesh)
+                || !o_spec.is_valid(&out.shape, self.mesh)
+            {
+                continue;
+            }
+            let shard = factor(self.mesh, b_ax) * factor(self.mesh, d_ax);
+            let compute = self.dev.kernel_time(
+                cost.total_flops() / shard,
+                2.0 * out.bytes() as f64 / shard,
+                false,
+            );
+            // grad(table) all-reduce across the batch axes — overlappable
+            let mut grad_comm = 0.0;
+            let table_shard =
+                0.5 * table.bytes() as f64 / factor(self.mesh, d_ax);
+            for &ax in b_ax {
+                grad_comm += self.mesh.collective_time(
+                    Collective::AllReduce,
+                    table_shard,
+                    ax,
+                );
+            }
+            res.push(Strategy {
+                name: format!("emb[B{b_ax:?}D{d_ax:?}]"),
+                in_specs: vec![table_spec, ids_spec],
+                out_spec: o_spec.clone(),
+                compute_time: compute,
+                comm_time: 0.0,
+                grad_comm,
+                mem_bytes: out.bytes() as f64 / shard,
+            });
+        }
+        res
+    }
+
+    /// Shape-preserving generator for elementwise / norm / softmax /
+    /// reduce / pool / xent: enumerate output specs whose sharded dims
+    /// avoid the op's "protected" axes, and derive broadcast-compatible
+    /// input specs.
+    fn elementwise(&self, id: NodeId) -> Vec<Strategy> {
+        let n = self.g.node(id);
+        let out = &n.out;
+        let cost = node_cost(self.g, id);
+        let protected: Vec<usize> = match &n.op {
+            Op::LayerNorm => vec![out.rank() - 1],
+            Op::Softmax { axis } => vec![*axis],
+            Op::Reduce { axes, .. } => axes.clone(),
+            Op::CrossEntropy => {
+                let lrank = self.g.node(n.inputs[0]).out.rank();
+                vec![lrank - 1]
+            }
+            Op::BatchNorm => vec![0], // stats over batch
+            _ => vec![],
+        };
+        // anchor shape: logits for xent (output is scalar), else output
+        let anchor: TensorMeta = match n.op {
+            Op::CrossEntropy => self.g.node(n.inputs[0]).out.clone(),
+            _ => out.clone(),
+        };
+        let mut res = Vec::new();
+        for spec in ShardingSpec::enumerate(&anchor.shape, self.mesh) {
+            if spec
+                .dims
+                .iter()
+                .enumerate()
+                .any(|(d, ds)| !ds.is_replica() && protected.contains(&d))
+            {
+                continue;
+            }
+            let shard = spec.sharding_factor(self.mesh) as f64;
+            // derive input specs by broadcast alignment
+            let mut in_specs = Vec::with_capacity(n.inputs.len());
+            let mut ok = true;
+            for &i in &n.inputs {
+                let im = &self.g.node(i).out;
+                match broadcast_in_spec(&spec, &anchor.shape, &im.shape) {
+                    Some(s) if s.is_valid(&im.shape, self.mesh) => {
+                        in_specs.push(s)
+                    }
+                    _ => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                continue;
+            }
+            let out_spec = match n.op {
+                Op::CrossEntropy => ShardingSpec::replicated(0),
+                _ => spec.clone(),
+            };
+            let traffic = (anchor.bytes() * 2) as f64 / shard;
+            let compute = self.dev.kernel_time(
+                cost.total_flops() / shard,
+                2.0 * traffic,
+                false,
+            );
+            // xent with batch sharding: scalar loss all-reduce (tiny) +
+            // replicated-param grad sync is handled at the param edge.
+            let mem = (cost.fwd_in + cost.fwd_out) as f64 / shard;
+            res.push(Strategy {
+                name: format!("ew[{spec}]"),
+                in_specs,
+                out_spec,
+                compute_time: compute,
+                comm_time: 0.0,
+                grad_comm: 0.0,
+                mem_bytes: mem,
+            });
+        }
+        res
+    }
+
+    /// Placeholders: params enumerate shard layouts (weights + grads
+    /// follow the spec — ZeRO-like choices); inputs shard batch dims;
+    /// consts replicate.
+    fn placeholder(&self, id: NodeId, kind: PlaceholderKind)
+                   -> Vec<Strategy> {
+        let n = self.g.node(id);
+        let out = &n.out;
+        match kind {
+            PlaceholderKind::Const => vec![Strategy {
+                name: "const[R]".into(),
+                in_specs: vec![],
+                out_spec: ShardingSpec::replicated(out.rank()),
+                compute_time: 0.0,
+                comm_time: 0.0,
+                grad_comm: 0.0,
+                mem_bytes: out.bytes() as f64,
+            }],
+            PlaceholderKind::Input => {
+                // batch dim (0) shardable
+                let mut res = Vec::new();
+                for roles in axis_assignments(self.mesh.n_axes(), 1) {
+                    let spec =
+                        spec_of(out.rank().max(1), &[(0, roles[0].clone())], self.mesh);
+                    let spec = if out.rank() == 0 {
+                        ShardingSpec::replicated(0)
+                    } else {
+                        spec
+                    };
+                    if out.rank() > 0 && !spec.is_valid(&out.shape, self.mesh)
+                    {
+                        continue;
+                    }
+                    let shard = spec.sharding_factor(self.mesh) as f64;
+                    res.push(Strategy {
+                        name: format!("in[{spec}]"),
+                        in_specs: vec![],
+                        out_spec: spec,
+                        compute_time: 0.0,
+                        comm_time: 0.0,
+                        grad_comm: 0.0,
+                        mem_bytes: out.bytes() as f64 / shard,
+                    });
+                }
+                res
+            }
+            PlaceholderKind::Param => {
+                let mut res = Vec::new();
+                for spec in ShardingSpec::enumerate(&out.shape, self.mesh) {
+                    let shard = spec.sharding_factor(self.mesh) as f64;
+                    // param + grad persist per device
+                    res.push(Strategy {
+                        name: format!("param[{spec}]"),
+                        in_specs: vec![],
+                        out_spec: spec,
+                        compute_time: 0.0,
+                        comm_time: 0.0,
+                        grad_comm: 0.0,
+                        mem_bytes: 2.0 * out.bytes() as f64 / shard,
+                    });
+                }
+                res
+            }
+        }
+    }
+}
+
+/// Align `spec` (over `out_shape`) onto a broadcast input of `in_shape`:
+/// suffix alignment; broadcast (size-1 or missing) dims become Replica.
+pub fn broadcast_in_spec(
+    spec: &ShardingSpec,
+    out_shape: &[usize],
+    in_shape: &[usize],
+) -> Option<ShardingSpec> {
+    if in_shape.len() > out_shape.len() {
+        return None;
+    }
+    let off = out_shape.len() - in_shape.len();
+    let dims = in_shape
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| {
+            if d == out_shape[off + i] {
+                spec.dims[off + i].clone()
+            } else {
+                DimSpec::Replica
+            }
+        })
+        .collect();
+    Some(ShardingSpec { dims })
+}
+
+/// Generate the strategy set for one node (the "node dispatcher").
+pub fn generate(g: &Graph, id: NodeId, mesh: &DeviceMesh,
+                dev: &DeviceModel) -> StrategySet {
+    let ctx = Ctx { g, mesh, dev };
+    let n = g.node(id);
+    let mut strategies = match &n.op {
+        Op::Placeholder(k) => ctx.placeholder(id, *k),
+        Op::Matmul => ctx.matmul(id),
+        Op::BatchMatmul => ctx.bmm(id),
+        Op::Conv2d { .. } => ctx.conv(id),
+        Op::Embedding => ctx.embedding(id),
+        Op::EwUnary { .. }
+        | Op::EwBinary { .. }
+        | Op::LayerNorm
+        | Op::BatchNorm
+        | Op::Softmax { .. }
+        | Op::Reduce { .. }
+        | Op::Pool2d { .. }
+        | Op::CrossEntropy => ctx.elementwise(id),
+        // trivial ops are merged by the solver; give them a pass-through
+        // replicated fallback so a standalone solve still works
+        Op::Reshape { .. }
+        | Op::Transpose { .. }
+        | Op::Slice { .. }
+        | Op::Concat { .. }
+        | Op::Output => vec![Strategy {
+            name: "passthrough[R]".into(),
+            in_specs: n
+                .inputs
+                .iter()
+                .map(|&i| ShardingSpec::replicated(g.node(i).out.rank()))
+                .collect(),
+            out_spec: ShardingSpec::replicated(n.out.rank()),
+            compute_time: 0.0,
+            comm_time: 0.0,
+            grad_comm: 0.0,
+            mem_bytes: 0.0,
+        }],
+    };
+    // dedup by (in_specs, out_spec) signature keeping the cheapest
+    strategies.sort_by(|a, b| {
+        (a.compute_time + a.comm_time)
+            .partial_cmp(&(b.compute_time + b.comm_time))
+            .unwrap()
+    });
+    let mut seen = std::collections::HashSet::new();
+    strategies.retain(|s| {
+        let sig = format!(
+            "{}|{}",
+            s.in_specs
+                .iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join(","),
+            s.out_spec
+        );
+        seen.insert(sig)
+    });
+    strategies.truncate(MAX_STRATEGIES);
+    assert!(
+        !strategies.is_empty(),
+        "no strategy for node {} ({})",
+        n.name,
+        n.op
+    );
+    StrategySet { node: id, strategies }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn mesh(shape: &[usize]) -> DeviceMesh {
+        let n: usize = shape.iter().product();
+        DeviceMesh {
+            shape: shape.to_vec(),
+            devices: (0..n).collect(),
+            axis_alpha: vec![1e-6; shape.len()],
+            axis_beta: vec![1e11; shape.len()],
+        }
+    }
+
+    fn mm_graph() -> (Graph, NodeId) {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![64, 128]);
+        let w = b.param("w", vec![128, 256]);
+        let y = b.matmul("y", x, w);
+        b.output(&[y]);
+        (b.finish().unwrap(), y)
+    }
+
+    #[test]
+    fn matmul_strategies_cover_mkn() {
+        let (g, y) = mm_graph();
+        let m = mesh(&[4]);
+        let dev = DeviceModel::a100_80gb();
+        let set = generate(&g, y, &m, &dev);
+        let names: Vec<&str> =
+            set.strategies.iter().map(|s| s.name.as_str()).collect();
+        // serial, row-parallel (M), col-parallel (N), contraction (K)
+        assert!(set.strategies.len() >= 4, "{names:?}");
+        let has = |f: &dyn Fn(&Strategy) -> bool| {
+            set.strategies.iter().any(|s| f(s))
+        };
+        assert!(has(&|s| s.out_spec.to_string() == "RR"
+            && s.in_specs[0].to_string() == "RR"));
+        assert!(has(&|s| s.in_specs[0].to_string() == "S0R")); // DP
+        assert!(has(&|s| s.in_specs[1].to_string() == "RS0")); // col-par
+        assert!(has(&|s| s.in_specs[1].to_string() == "S0R"
+            && s.comm_time > 0.0)); // K-shard pays all-reduce
+    }
+
+    #[test]
+    fn sharded_matmul_is_faster_but_k_pays_comm() {
+        let (g, y) = mm_graph();
+        let m = mesh(&[4]);
+        let dev = DeviceModel::a100_80gb();
+        let set = generate(&g, y, &m, &dev);
+        let serial = set
+            .strategies
+            .iter()
+            .find(|s| s.out_spec.to_string() == "RR" && s.comm_time == 0.0)
+            .unwrap();
+        let dp = set
+            .strategies
+            .iter()
+            .find(|s| s.in_specs[0].to_string() == "S0R")
+            .unwrap();
+        assert!(dp.compute_time < serial.compute_time);
+        assert!(dp.mem_bytes < serial.mem_bytes);
+    }
+
+    #[test]
+    fn layernorm_never_shards_feature_dim() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![8, 64, 128]);
+        let gm = b.param("g", vec![128]);
+        let bt = b.param("b", vec![128]);
+        let y = b.layernorm("ln", x, gm, bt);
+        b.output(&[y]);
+        let g = b.finish().unwrap();
+        let m = mesh(&[2, 2]);
+        let set = generate(&g, y, &m, &DeviceModel::a100_80gb());
+        for s in &set.strategies {
+            assert!(
+                s.out_spec.dims[2].is_replica(),
+                "ln sharded feature dim: {}",
+                s.out_spec
+            );
+        }
+        assert!(set.strategies.len() > 1);
+    }
+
+    #[test]
+    fn softmax_protects_its_axis() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", vec![32, 64, 64]);
+        let y = b.softmax("sm", x, 2);
+        b.output(&[y]);
+        let g = b.finish().unwrap();
+        let m = mesh(&[2]);
+        let set = generate(&g, y, &m, &DeviceModel::a100_80gb());
+        for s in &set.strategies {
+            assert!(s.out_spec.dims[2].is_replica());
+        }
+    }
+
+    #[test]
+    fn param_strategies_include_zero_like_sharding() {
+        let (g, _) = mm_graph();
+        let w = g.params()[0];
+        let m = mesh(&[4]);
+        let set = generate(&g, w, &m, &DeviceModel::a100_80gb());
+        let mems: Vec<f64> =
+            set.strategies.iter().map(|s| s.mem_bytes).collect();
+        let max = mems.iter().cloned().fold(0.0, f64::max);
+        let min = mems.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min >= 3.9, "sharding must quarter param memory");
+    }
+
+    #[test]
+    fn binary_broadcast_gets_replica_on_bcast_dim() {
+        let spec = ShardingSpec::new(&[&[0], &[], &[1]]);
+        let got =
+            broadcast_in_spec(&spec, &[8, 64, 128], &[128]).unwrap();
+        assert_eq!(got.to_string(), "S1");
+        let got2 =
+            broadcast_in_spec(&spec, &[8, 64, 128], &[64, 128]).unwrap();
+        assert_eq!(got2.to_string(), "RS1");
+    }
+
+    #[test]
+    fn every_gpt2_node_has_strategies() {
+        let g = crate::graph::models::gpt2(
+            &crate::graph::models::Gpt2Cfg::mini(),
+        );
+        let m = mesh(&[2, 2]);
+        let dev = DeviceModel::a100_80gb();
+        for n in &g.nodes {
+            let set = generate(&g, n.id, &m, &dev);
+            assert!(!set.strategies.is_empty(), "{}", n.name);
+            assert!(set.strategies.len() <= MAX_STRATEGIES);
+        }
+    }
+}

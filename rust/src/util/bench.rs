@@ -1,0 +1,178 @@
+//! Bench harness (criterion is unavailable offline).
+//!
+//! Each file in `rust/benches/` is a `harness = false` binary that uses
+//! this module: warmup + N timed iterations, robust stats (median, p95),
+//! and a markdown table printer so bench output can be pasted into
+//! EXPERIMENTS.md verbatim.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(name: &str, mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let idx = (p * (ns.len() - 1) as f64).round() as usize;
+            ns[idx]
+        };
+        Stats {
+            name: name.to_string(),
+            iters: ns.len(),
+            min_ns: ns[0],
+            median_ns: q(0.5),
+            mean_ns: ns.iter().sum::<f64>() / ns.len() as f64,
+            p95_ns: q(0.95),
+            max_ns: *ns.last().unwrap(),
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+/// `f` must return something observable to defeat dead-code elimination;
+/// we black-box it through `std::hint::black_box`.
+pub fn bench<R>(name: &str, warmup: usize, iters: usize,
+                mut f: impl FnMut() -> R) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    Stats::from_samples(name, samples)
+}
+
+/// Quick-mode switch: `AUTOMAP_BENCH_QUICK=1` (or --quick in argv) shrinks
+/// iteration counts so `cargo bench` stays fast on the 1-core box.
+pub fn quick() -> bool {
+    std::env::var("AUTOMAP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick")
+}
+
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn stats_row(&mut self, s: &Stats) {
+        self.rows.push(vec![
+            s.name.clone(),
+            s.iters.to_string(),
+            fmt_ns(s.median_ns),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p95_ns),
+        ]);
+    }
+
+    pub fn print(&self) {
+        println!("\n### {}\n", self.title);
+        let widths: Vec<usize> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain(std::iter::once(h.len()))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let line = |cells: &[String]| {
+            let padded: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            println!("| {} |", padded.join(" | "));
+        };
+        line(&self.headers);
+        println!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+pub fn stats_headers() -> Vec<&'static str> {
+    vec!["case", "iters", "median", "mean", "p95"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = Stats::from_samples("t", vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.median_ns, 3.0);
+        assert_eq!(s.max_ns, 5.0);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench("spin", 1, 5, || {
+            (0..1000u64).fold(0u64, |a, b| a.wrapping_add(b * b))
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.min_ns > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.0e9), "3.000 s");
+    }
+}

@@ -1,0 +1,79 @@
+//! Tiny leveled logger with per-phase timers.
+//!
+//! The coordinator uses `Phase` spans as the coarse profiler called for in
+//! the performance pass (flamegraph tooling is unavailable offline).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(1); // 0 quiet, 1 info, 2 debug
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::logger::level() >= 1 {
+            println!("[info] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::logger::level() >= 2 {
+            println!("[debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// RAII phase timer: prints elapsed wall time on drop (level >= 1).
+pub struct Phase {
+    name: String,
+    start: Instant,
+}
+
+impl Phase {
+    pub fn new(name: &str) -> Phase {
+        Phase { name: name.to_string(), start: Instant::now() }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Drop for Phase {
+    fn drop(&mut self) {
+        if level() >= 1 {
+            println!("[phase] {}: {:.1} ms", self.name, self.elapsed_ms());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_measures_time() {
+        let p = Phase::new("t");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(p.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn level_roundtrip() {
+        let old = level();
+        set_level(2);
+        assert_eq!(level(), 2);
+        set_level(old);
+    }
+}

@@ -1,0 +1,11 @@
+//! From-scratch substrates the environment does not provide offline:
+//! JSON, CLI parsing, RNG, a thread pool, a bench harness, and a
+//! property-testing mini-framework.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod pool;
+pub mod prop;
+pub mod rng;

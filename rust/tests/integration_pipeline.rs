@@ -1,0 +1,236 @@
+//! Integration + property tests over the planning pipeline (no PJRT
+//! needed): plan validity invariants across random clusters, models,
+//! and budgets — the coordinator-level guarantees of the system.
+
+use automap::cluster::{detect, DeviceMesh, SimCluster};
+use automap::coordinator::{autoparallelize, PipelineOpts};
+use automap::graph::models::{gpt2, mlp, Gpt2Cfg};
+use automap::graph::op::Op;
+use automap::layout::LayoutManager;
+use automap::profiler::profile;
+use automap::sim::DeviceModel;
+use automap::solver::{solve, SolveOpts, SolverGraph};
+use automap::spec::ShardingSpec;
+use automap::util::prop::{forall_res, shape};
+use automap::util::rng::Rng;
+
+fn fast() -> PipelineOpts {
+    PipelineOpts {
+        sweep: 2,
+        solve: SolveOpts {
+            beam_width: 12,
+            anneal_iters: 150,
+            lagrange_iters: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn plan_exists_for_every_cluster_family() {
+    let g = gpt2(&Gpt2Cfg::mini());
+    let dev = DeviceModel::a100_80gb();
+    for cluster in [
+        SimCluster::single(),
+        SimCluster::fully_connected(2),
+        SimCluster::fully_connected(4),
+        SimCluster::partially_connected_8gpu(),
+        SimCluster::multi_node(2, 2, 100.0),
+    ] {
+        let plan = autoparallelize(&g, &cluster, &dev, &fast())
+            .unwrap_or_else(|e| panic!("{}: {e}", cluster.name));
+        assert!(plan.iter_time.is_finite() && plan.iter_time > 0.0);
+        assert_eq!(plan.mesh.n_devices(), cluster.n);
+    }
+}
+
+#[test]
+fn more_devices_never_plan_slower() {
+    // big enough that compute dominates per-kernel launch overhead
+    let g = gpt2(&Gpt2Cfg {
+        vocab: 8192,
+        seq: 256,
+        d_model: 1024,
+        n_layer: 2,
+        n_head: 8,
+        d_ff: 4096,
+        batch: 8,
+    });
+    let dev = DeviceModel::a100_80gb();
+    let t1 = autoparallelize(&g, &SimCluster::single(), &dev, &fast())
+        .unwrap()
+        .iter_time;
+    let t4 =
+        autoparallelize(&g, &SimCluster::fully_connected(4), &dev, &fast())
+            .unwrap()
+            .iter_time;
+    assert!(
+        t4 < t1,
+        "4 NVLinked devices must beat 1 device: {t4} vs {t1}"
+    );
+}
+
+#[test]
+fn plan_decisions_use_valid_specs_and_respect_mesh() {
+    let g = gpt2(&Gpt2Cfg::mini());
+    let dev = DeviceModel::a100_80gb();
+    let plan = autoparallelize(
+        &g,
+        &SimCluster::partially_connected_8gpu(),
+        &dev,
+        &fast(),
+    )
+    .unwrap();
+    for (id, d) in &plan.plan.decisions {
+        let node = g.node(*id);
+        assert!(
+            d.out_spec.is_valid(&node.out.shape, &plan.mesh),
+            "{}: invalid spec {} for {:?}",
+            node.name,
+            d.out_spec,
+            node.out.shape
+        );
+    }
+    // every placeholder param has a decision (param-shard pass coverage)
+    for n in &g.nodes {
+        if matches!(n.op, Op::Placeholder(_)) {
+            assert!(
+                plan.plan.decisions.contains_key(&n.id),
+                "{} missing decision",
+                n.name
+            );
+        }
+    }
+}
+
+#[test]
+fn codegen_includes_checkpoint_annotations_under_pressure() {
+    let g = gpt2(&Gpt2Cfg::mini());
+    let dev = DeviceModel::a100_80gb();
+    let prof = profile(&g);
+    let mut opts = fast();
+    opts.budget =
+        Some(prof.model_bytes as f64 * 2.0 + prof.saved_activation as f64 * 0.5);
+    let plan =
+        autoparallelize(&g, &SimCluster::fully_connected(4), &dev, &opts)
+            .unwrap();
+    let code = plan.plan.codegen(&g);
+    assert!(code.contains("activation checkpoint blocks"));
+    assert!(plan.plan.ckpt.is_some());
+}
+
+#[test]
+fn property_solver_never_violates_budget() {
+    // random small MLPs, random 1-2D meshes, random budgets: any returned
+    // solution respects the memory constraint and beats nothing silently
+    let dev = DeviceModel::a100_80gb();
+    forall_res(
+        0xBEEF,
+        12,
+        |rng: &mut Rng| {
+            let layers = rng.range(2, 4);
+            let mut dims = vec![8 * rng.range(4, 16)];
+            for _ in 0..layers {
+                dims.push(8 * rng.range(4, 16));
+            }
+            let mesh_shape = if rng.bool() { vec![4] } else { vec![2, 2] };
+            let frac = rng.range_f64(0.3, 1.2);
+            (dims, mesh_shape, frac)
+        },
+        |(dims, mesh_shape, frac)| {
+            let g = mlp(32, dims);
+            let n: usize = mesh_shape.iter().product();
+            let mesh = DeviceMesh {
+                shape: mesh_shape.clone(),
+                devices: (0..n).collect(),
+                axis_alpha: vec![1e-6; mesh_shape.len()],
+                axis_beta: vec![1e11; mesh_shape.len()],
+            };
+            let mut lm = LayoutManager::new(mesh.clone());
+            let sg = SolverGraph::build(&g, &mesh, &dev, &mut lm);
+            let unconstrained = solve(
+                &sg,
+                1e18,
+                SolveOpts { anneal_iters: 100, beam_width: 8, ..Default::default() },
+            )
+            .ok_or("unconstrained solve failed")?;
+            let budget = unconstrained.mem * frac;
+            if let Some(sol) = solve(
+                &sg,
+                budget,
+                SolveOpts { anneal_iters: 100, beam_width: 8, ..Default::default() },
+            ) {
+                if sol.mem > budget * (1.0 + 1e-9) {
+                    return Err(format!(
+                        "budget violated: {} > {budget}",
+                        sol.mem
+                    ));
+                }
+                if sol.time + 1e-12 < unconstrained.time {
+                    return Err(
+                        "constrained beat unconstrained time".to_string()
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_layout_paths_reach_target_and_costs_are_finite() {
+    forall_res(
+        0xCAFE,
+        20,
+        |rng: &mut Rng| {
+            let tshape = shape(rng, 2, 8, 64);
+            let seed = rng.next_u64();
+            (tshape, seed)
+        },
+        |(tshape, seed)| {
+            let mesh = DeviceMesh {
+                shape: vec![2, 2],
+                devices: (0..4).collect(),
+                axis_alpha: vec![1e-6; 2],
+                axis_beta: vec![1e11; 2],
+            };
+            let mut lm = LayoutManager::new(mesh.clone());
+            let specs = ShardingSpec::enumerate(tshape, &mesh);
+            let mut rng = Rng::new(*seed);
+            for _ in 0..6 {
+                let a = rng.choice(&specs).clone();
+                let b = rng.choice(&specs).clone();
+                let p = lm.convert(&a, &b, tshape, 4);
+                if !p.comm_time.is_finite() {
+                    return Err("non-finite comm".into());
+                }
+                if a != b {
+                    let last = p
+                        .steps
+                        .last()
+                        .map(|(_, s)| s.clone())
+                        .ok_or("empty path for distinct specs")?;
+                    if last != b {
+                        return Err(format!("path ends at {last}, want {b}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn detector_is_robust_across_seeds() {
+    // property: fig5 topology recovery never depends on probe noise seed
+    for seed in [1u64, 7, 42, 1234, 99999] {
+        let info = detect(&SimCluster::partially_connected_8gpu(), seed);
+        assert_eq!(info.tiers.len(), 3, "seed {seed}");
+        assert_eq!(
+            info.groups_at_tier(0),
+            vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]],
+            "seed {seed}"
+        );
+    }
+}

@@ -1,0 +1,260 @@
+//! Property tests over *randomly generated* computation graphs — the
+//! strongest invariants in the system hold for arbitrary models, not just
+//! the curated builders:
+//!
+//!   * symbolic peak-memory estimate ≈ instrumented real execution,
+//!   * linearization partitions the differentiable nodes, in topo order,
+//!   * rotor time is monotone in the memory budget,
+//!   * the solver returns valid, budget-respecting plans.
+
+use automap::ckpt::{build_stages, common_nodes, linearize, RotorSolver};
+use automap::cluster::DeviceMesh;
+use automap::graph::{EwBinary, EwUnary, Graph, GraphBuilder};
+use automap::layout::LayoutManager;
+use automap::profiler::{execute, profile, random_feeds};
+use automap::sim::DeviceModel;
+use automap::solver::{solve, SolveOpts, SolverGraph};
+use automap::util::prop::forall_res;
+use automap::util::rng::Rng;
+
+/// Random layered DAG: dense layers with random widths, random skip
+/// connections (residual adds), random unary activations, optional
+/// layernorm, ending in cross-entropy. Always valid by construction.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let mut b = GraphBuilder::new("rand");
+    let batch = 4 * rng.range(1, 4);
+    let mut width = 8 * rng.range(2, 8);
+    let x = b.input("x", vec![batch, width]);
+    let depth = rng.range(2, 6);
+    let mut cur = x;
+    let mut skip_pool = vec![(x, width)];
+    for li in 0..depth {
+        let next_w = 8 * rng.range(2, 8);
+        let w = b.param(&format!("l{li}.w"), vec![width, next_w]);
+        let mut h = b.matmul(&format!("l{li}.mm"), cur, w);
+        if rng.bool() {
+            let bias = b.param(&format!("l{li}.b"), vec![next_w]);
+            h = b.ew_binary(&format!("l{li}.bias"), EwBinary::Add, h, bias);
+        }
+        match rng.below(4) {
+            0 => h = b.ew_unary(&format!("l{li}.relu"), EwUnary::Relu, h),
+            1 => h = b.ew_unary(&format!("l{li}.gelu"), EwUnary::Gelu, h),
+            2 => {
+                let g = b.param(&format!("l{li}.ln.g"), vec![next_w]);
+                let bb = b.param(&format!("l{li}.ln.b"), vec![next_w]);
+                h = b.layernorm(&format!("l{li}.ln"), h, g, bb);
+            }
+            _ => {}
+        }
+        // random residual to an earlier same-width tensor
+        let skip = skip_pool
+            .iter()
+            .find(|(_, w)| *w == next_w)
+            .map(|&(src, _)| src);
+        if let Some(src) = skip {
+            if rng.bool() {
+                h = b.add_t(&format!("l{li}.res"), h, src);
+            }
+        }
+        skip_pool.push((h, next_w));
+        cur = h;
+        width = next_w;
+    }
+    let classes = 8 * rng.range(1, 4);
+    let w = b.param("head.w", vec![width, classes]);
+    let logits = b.matmul("head", cur, w);
+    let t = b.input_ids("targets", vec![batch]);
+    let loss = b.cross_entropy("loss", logits, t);
+    b.output(&[loss]);
+    b.finish().expect("random graph must be valid by construction")
+}
+
+#[test]
+fn property_symbolic_peak_matches_real_execution() {
+    forall_res(
+        0xF16,
+        15,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let g = random_graph(&mut rng);
+            let sym = profile(&g).peak_fwd_activation as f64;
+            let real = execute(&g, random_feeds(&g, seed, 8))
+                .map_err(|e| format!("exec failed: {e}"))?
+                .peak_activation as f64;
+            let rel = (sym - real).abs() / real.max(1.0);
+            if rel > 0.35 {
+                return Err(format!(
+                    "graph {}: symbolic {sym} vs real {real} ({rel:.2})",
+                    g.name
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_linearization_partitions_differentiable_nodes() {
+    forall_res(
+        0xA162,
+        25,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let g = random_graph(&mut rng);
+            let common = common_nodes(&g);
+            let groups = linearize(&g, &common);
+            // covered exactly once
+            let mut seen = vec![false; g.len()];
+            for grp in &groups {
+                for &n in grp {
+                    if seen[n] {
+                        return Err(format!("node {n} in two groups"));
+                    }
+                    seen[n] = true;
+                }
+            }
+            for n in &g.nodes {
+                let excluded = common[n.id]
+                    || matches!(
+                        n.op,
+                        automap::graph::Op::Placeholder(_)
+                            | automap::graph::Op::Output
+                    );
+                if excluded != !seen[n.id] {
+                    return Err(format!(
+                        "node {} coverage mismatch",
+                        n.name
+                    ));
+                }
+            }
+            // topo-contiguous: group max < next group min
+            let mut last = 0usize;
+            for grp in &groups {
+                let mn = *grp.iter().min().unwrap();
+                let mx = *grp.iter().max().unwrap();
+                if mn < last {
+                    return Err("groups out of topo order".into());
+                }
+                last = mx;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_rotor_time_monotone_in_budget() {
+    let dev = DeviceModel::a100_80gb();
+    forall_res(
+        0x0707,
+        12,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let g = random_graph(&mut rng);
+            let groups = linearize(&g, &common_nodes(&g));
+            if groups.len() < 2 {
+                return Ok(());
+            }
+            let stages = build_stages(&g, &groups, &dev, None);
+            let r = RotorSolver::new(stages);
+            let base = r.no_checkpoint_mem();
+            let mut last = f64::INFINITY;
+            for frac in [0.35, 0.5, 0.7, 0.9, 1.3] {
+                if let Some(sol) = r.solve(base * frac) {
+                    if sol.time > last * (1.0 + 1e-9) {
+                        return Err(format!(
+                            "time increased with budget at {frac}"
+                        ));
+                    }
+                    // blocks partition the chain
+                    let mut next = 0;
+                    for b in &sol.blocks {
+                        if b.start != next {
+                            return Err("blocks don't partition".into());
+                        }
+                        next = b.end + 1;
+                    }
+                    if next != r.stages.len() {
+                        return Err("blocks don't cover chain".into());
+                    }
+                    last = sol.time;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_solver_plans_random_graphs_validly() {
+    let dev = DeviceModel::a100_80gb();
+    forall_res(
+        0x501E,
+        8,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let g = random_graph(&mut rng);
+            let mesh = DeviceMesh {
+                shape: vec![2, 2],
+                devices: (0..4).collect(),
+                axis_alpha: vec![1e-6; 2],
+                axis_beta: vec![1e11; 2],
+            };
+            let mut lm = LayoutManager::new(mesh.clone());
+            let sg = SolverGraph::build(&g, &mesh, &dev, &mut lm);
+            let sol = solve(
+                &sg,
+                1e15,
+                SolveOpts {
+                    beam_width: 8,
+                    anneal_iters: 100,
+                    lagrange_iters: 2,
+                    ..Default::default()
+                },
+            )
+            .ok_or("no solution at infinite budget")?;
+            if !sol.time.is_finite() || sol.time < 0.0 {
+                return Err("non-finite plan time".into());
+            }
+            // every chosen strategy's out spec is valid for its node
+            for (i, &anchor) in sg.anchors.iter().enumerate() {
+                let s = &sg.sets[i].strategies[sol.choice[i]];
+                let node = g.node(anchor);
+                if !s.out_spec.is_valid(&node.out.shape, &mesh) {
+                    return Err(format!(
+                        "invalid spec {} at {}",
+                        s.out_spec, node.name
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_random_graphs_have_finite_losses() {
+    // the interpreter executes every random graph to a finite scalar loss
+    forall_res(
+        0x10555,
+        10,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let g = random_graph(&mut rng);
+            let r = execute(&g, random_feeds(&g, seed ^ 1, 8))
+                .map_err(|e| format!("{e}"))?;
+            let loss = r.outputs[0]
+                .f32()
+                .map_err(|e| format!("{e}"))?[0];
+            if !loss.is_finite() || loss < 0.0 {
+                return Err(format!("bad loss {loss}"));
+            }
+            Ok(())
+        },
+    );
+}
