@@ -1,14 +1,17 @@
 //! Cluster detection + plan adaptation demo (Fig. 5 + §7 "Ours").
 //!
-//! Shows that (a) the detector recovers the partially-connected NVLink
-//! topology from probing alone, and (b) the searched plan *changes* with
-//! the interconnect: the same model gets a different mesh/plan on a
-//! fully-NVLinked box vs the Fig-5 box vs a 2-node cluster.
+//! Shows that (a) the detect stage recovers the partially-connected
+//! NVLink topology from probing alone, and (b) the searched plan
+//! *changes* with the interconnect: the same model gets a different
+//! mesh/plan on a fully-NVLinked box vs the Fig-5 box vs a 2-node
+//! cluster. Uses the staged `Planner` so each stage artifact can be
+//! printed as it is produced.
 //!
 //! Run: cargo run --release --example cluster_planner
 
-use automap::cluster::{detect, DeviceMesh, SimCluster};
-use automap::coordinator::{autoparallelize_with_info, PipelineOpts};
+use automap::api::Planner;
+use automap::cluster::SimCluster;
+use automap::coordinator::PipelineOpts;
 use automap::graph::models::{gpt2, Gpt2Cfg};
 use automap::sim::DeviceModel;
 use automap::solver::SolveOpts;
@@ -32,33 +35,34 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
 
-    for (name, cluster) in clusters {
+    for (name, cluster) in &clusters {
         println!("=== {name} ===");
-        let info = detect(&cluster, 42);
+        let mut planner = Planner::new(&model, cluster, &dev)
+            .with_opts(opts.clone());
+        let report = planner.detect()?;
         println!(
             "  detected {} bandwidth tier(s): {:?} GB/s",
-            info.tiers.len(),
-            info.tiers
+            report.info.tiers.len(),
+            report.info.tiers
                 .iter()
                 .map(|t| (t / 1e9).round())
                 .collect::<Vec<_>>()
         );
-        for t in 0..info.tiers.len() {
-            println!("    tier {t}: {:?}", info.groups_at_tier(t));
+        for t in 0..report.info.tiers.len() {
+            println!("    tier {t}: {:?}", report.info.groups_at_tier(t));
         }
-        for shape in DeviceMesh::candidate_shapes(info.n) {
-            if let Some(m) = DeviceMesh::build(&info, &shape) {
-                println!(
-                    "    mesh {:?}: axis bw {:?} GB/s",
-                    m.shape,
-                    m.axis_beta
-                        .iter()
-                        .map(|b| (b / 1e9).round())
-                        .collect::<Vec<_>>()
-                );
-            }
+        let candidates = planner.meshes()?;
+        for m in &candidates.meshes {
+            println!(
+                "    mesh {:?}: axis bw {:?} GB/s",
+                m.shape,
+                m.axis_beta
+                    .iter()
+                    .map(|b| (b / 1e9).round())
+                    .collect::<Vec<_>>()
+            );
         }
-        match autoparallelize_with_info(&model, &info, &dev, &opts) {
+        match planner.lower() {
             Ok(plan) => println!(
                 "  plan: mesh {:?}, iter {:.1} ms, {:.3} PFLOPS, {} comm ops\n",
                 plan.mesh.shape,

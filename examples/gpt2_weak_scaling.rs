@@ -1,35 +1,20 @@
 //! Table 3 + Table 4 reproduction: GPT-2 weak scaling on the Fig-5 box.
 //!
-//! For each experiment (alpha..delta) plan with the full pipeline and
-//! compare against the manually-designed baselines. See EXPERIMENTS.md
-//! for the paper-vs-measured discussion.
+//! For each experiment (alpha..delta) plan with the staged `Planner`;
+//! the manual baselines run through the same pluggable-backend slot
+//! (`BaselineSolve`) as the real solver. See EXPERIMENTS.md for the
+//! paper-vs-measured discussion.
 //!
 //! Run: cargo run --release --example gpt2_weak_scaling [-- --fast]
 
+use automap::api::{BaselineSolve, Planner};
 use automap::cluster::{detect, SimCluster};
-use automap::coordinator::{autoparallelize, PipelineOpts};
+use automap::coordinator::PipelineOpts;
 use automap::graph::models::{gpt2, Gpt2Cfg};
 use automap::profiler::profile;
-use automap::sim::{baselines, DeviceModel};
+use automap::sim::DeviceModel;
 use automap::solver::SolveOpts;
 use automap::util::cli::Args;
-
-fn fig5_prefix(n: usize) -> SimCluster {
-    if n == 1 {
-        return SimCluster::single();
-    }
-    let mut c = SimCluster::partially_connected_8gpu();
-    c.n = n;
-    c.latency.truncate(n);
-    c.bandwidth.truncate(n);
-    for row in c.latency.iter_mut() {
-        row.truncate(n);
-    }
-    for row in c.bandwidth.iter_mut() {
-        row.truncate(n);
-    }
-    c
-}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
@@ -55,18 +40,23 @@ fn main() -> anyhow::Result<()> {
         let cfg = Gpt2Cfg::paper(exp);
         let g = gpt2(&cfg);
         let prof = profile(&g);
-        let info = detect(&fig5_prefix(n), 1);
+        let cluster = SimCluster::fig5_prefix(n);
         let metric = 6.0
             * cfg.n_params_table3() as f64
             * (cfg.batch * cfg.seq) as f64;
         let scale = metric / prof.total_flops();
-        let fmt = |r: &baselines::SimReport| {
-            if r.feasible {
-                format!("{:.3}", r.pflops * scale)
-            } else {
-                "-".into()
-            }
-        };
+        // probe and profile once per row, shared by all four baselines
+        let info = detect(&cluster, 1);
+        let mut baseline_cols = Vec::new();
+        for backend in BaselineSolve::all(cfg) {
+            let col = Planner::with_info(&g, info.clone(), &dev)
+                .with_profile(prof.clone())
+                .with_backend(backend)
+                .lower()
+                .map(|p| format!("{:.3}", p.pflops * scale))
+                .unwrap_or_else(|_| "-".into());
+            baseline_cols.push(col);
+        }
         let mut opts = PipelineOpts::default();
         if args.has_flag("fast") {
             opts.sweep = 2;
@@ -78,7 +68,7 @@ fn main() -> anyhow::Result<()> {
             };
         }
         let (ours, mesh) =
-            match autoparallelize(&g, &fig5_prefix(n), &dev, &opts) {
+            match Planner::new(&g, &cluster, &dev).with_opts(opts).lower() {
                 Ok(p) => (
                     format!("{:.3}", p.pflops * scale),
                     format!("{:?}", p.mesh.shape),
@@ -87,10 +77,10 @@ fn main() -> anyhow::Result<()> {
             };
         println!(
             "| {exp} | {n} | {} | {} | {} | {} | {} | {} |",
-            fmt(&baselines::ddp(&cfg, &g, &prof, &info, &dev)),
-            fmt(&baselines::megatron_1d(&cfg, &g, &prof, &info, &dev)),
-            fmt(&baselines::optimus_2d(&cfg, &g, &prof, &info, &dev)),
-            fmt(&baselines::tp_3d(&cfg, &g, &prof, &info, &dev)),
+            baseline_cols[0],
+            baseline_cols[1],
+            baseline_cols[2],
+            baseline_cols[3],
             ours,
             mesh,
         );

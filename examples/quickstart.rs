@@ -1,13 +1,17 @@
-//! Quickstart: the paper's one-line `autoparallelize(model)` experience.
+//! Quickstart: the staged `Planner` compilation API.
 //!
-//! Builds a GPT-2 graph from serial "user code", probes the (simulated)
-//! Fig-5 cluster, runs the 2-stage solver, and prints the searched plan
-//! plus a snippet of the generated code.
+//! Builds a GPT-2 graph from serial "user code", then walks the five
+//! pipeline stages explicitly — probing the (simulated) Fig-5 cluster,
+//! enumerating meshes, solving the intra-op sharding sweep, scheduling
+//! activation checkpoints, and lowering — inspecting each artifact along
+//! the way. The legacy one-liner `autoparallelize(model)` wraps exactly
+//! this sequence.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use automap::api::{Planner, ProgressEvent};
 use automap::cluster::SimCluster;
-use automap::coordinator::{autoparallelize, PipelineOpts};
+use automap::coordinator::PipelineOpts;
 use automap::graph::models::{gpt2, Gpt2Cfg};
 use automap::sim::DeviceModel;
 use automap::solver::SolveOpts;
@@ -24,8 +28,9 @@ fn main() -> anyhow::Result<()> {
 
     // 2. the cluster (8 GPUs, NVLink only between adjacent pairs — Fig. 5)
     let cluster = SimCluster::partially_connected_8gpu();
+    let dev = DeviceModel::a100_80gb();
 
-    // 3. one call: profile -> detect -> solve -> checkpoint -> generate
+    // 3. the staged compiler, with a progress hook narrating each stage
     let opts = PipelineOpts {
         sweep: 4,
         solve: SolveOpts {
@@ -35,9 +40,37 @@ fn main() -> anyhow::Result<()> {
         },
         ..Default::default()
     };
-    let plan =
-        autoparallelize(&model, &cluster, &DeviceModel::a100_80gb(), &opts)?;
+    let mut planner = Planner::new(&model, &cluster, &dev)
+        .with_opts(opts)
+        .on_progress(|ev| {
+            if let ProgressEvent::StageDone { stage, ms } = ev {
+                println!("  [stage] {:<14} {ms:>7.1} ms", stage.name());
+            }
+        });
 
+    // stage 1+2: what did the probe see, and which meshes are buildable?
+    let report = planner.detect()?;
+    println!(
+        "\ndetected {} devices, {} bandwidth tier(s)",
+        report.info.n,
+        report.info.tiers.len()
+    );
+    let meshes = planner.meshes()?;
+    println!(
+        "candidate meshes: {:?}",
+        meshes.meshes.iter().map(|m| m.shape.clone()).collect::<Vec<_>>()
+    );
+
+    // stage 3: every feasible (mesh, sweep point) strategy assignment
+    let sharding = planner.solve_sharding()?;
+    println!(
+        "sharding candidates: {} (backend: {})",
+        sharding.candidates.len(),
+        sharding.backend
+    );
+
+    // stage 4+5: joint rotor ranking, then generator lowering
+    let plan = planner.lower()?;
     println!("\nsearched execution plan:");
     println!(
         "  mesh            : {:?} over devices {:?}",

@@ -1,18 +1,21 @@
 //! Bench: intra-op solver (Eq. 1) scaling + §5.3 two-stage ablation.
 //!
-//! Part 1: solve time and plan quality vs graph size and beam width, with
-//! the exact branch-and-bound as quality reference on the small case.
+//! Part 1: solve time and plan quality vs graph size and beam width,
+//! driven through the `api::Solve` backend trait so the exact
+//! branch-and-bound and the production beam path are interchangeable —
+//! the exact backend is the quality reference on the small case.
 //! Part 2: the two-stage budget sweep [(1+α)^n] — intra-op budget vs
 //! total (intra-op + checkpoint) time, the ablation DESIGN.md calls out.
 //!
 //! `cargo bench --bench solver_ablation [-- --quick]`
 
+use automap::api::{BeamSolve, ExactSolve, Solve};
 use automap::ckpt::{build_stages, common_nodes, linearize, RotorSolver};
 use automap::cluster::{DeviceMesh, GB};
 use automap::graph::models::{gpt2, mlp, Gpt2Cfg};
 use automap::layout::LayoutManager;
 use automap::sim::DeviceModel;
-use automap::solver::{solve, solve_exact, SolveOpts, SolverGraph};
+use automap::solver::{SolveOpts, SolverGraph};
 use automap::util::bench::{quick, Table};
 
 fn mesh(shape: &[usize]) -> DeviceMesh {
@@ -29,17 +32,17 @@ fn main() {
     let q = quick();
     let dev = DeviceModel::a100_80gb();
 
-    // --- part 1: scaling + beam-width quality -------------------------
+    // --- part 1: scaling + beam-width quality, via Solve backends ------
     let mut t = Table::new(
         "intra-op solver scaling (unconstrained budget)",
-        &["graph", "anchors", "strategies", "beam", "time ms", "plan s",
-          "vs exact"],
+        &["graph", "anchors", "strategies", "backend", "time ms",
+          "plan s", "vs exact"],
     );
     let m4 = mesh(&[4]);
     let small = mlp(64, &[512, 256, 128, 10]);
     let mut lm = LayoutManager::new(m4.clone());
     let sg_small = SolverGraph::build(&small, &m4, &dev, &mut lm);
-    let exact = solve_exact(&sg_small, 1e15).unwrap();
+    let exact = ExactSolve.solve(&sg_small, 1e15).unwrap();
 
     for (name, g, msh) in [
         ("mlp-3", small.clone(), m4.clone()),
@@ -55,18 +58,20 @@ fn main() {
         let sg = SolverGraph::build(&g, &msh, &dev, &mut lm);
         let n_strats: usize =
             sg.sets.iter().map(|s| s.strategies.len()).sum();
+        let mut backends: Vec<Box<dyn Solve>> = Vec::new();
         for beam in if q { vec![16] } else { vec![8, 64] } {
+            backends.push(Box::new(BeamSolve(SolveOpts {
+                beam_width: beam,
+                anneal_iters: if q { 100 } else { 2000 },
+                ..Default::default()
+            })));
+        }
+        if name == "mlp-3" {
+            backends.push(Box::new(ExactSolve));
+        }
+        for backend in &backends {
             let t0 = std::time::Instant::now();
-            let sol = solve(
-                &sg,
-                1e15,
-                SolveOpts {
-                    beam_width: beam,
-                    anneal_iters: if q { 100 } else { 2000 },
-                    ..Default::default()
-                },
-            )
-            .unwrap();
+            let sol = backend.solve(&sg, 1e15).unwrap();
             let vs_exact = if name == "mlp-3" {
                 format!("{:.3}x", sol.time / exact.time)
             } else {
@@ -76,7 +81,7 @@ fn main() {
                 name.into(),
                 sg.len().to_string(),
                 n_strats.to_string(),
-                beam.to_string(),
+                backend.name(),
                 format!("{:.0}", t0.elapsed().as_secs_f64() * 1e3),
                 format!("{:.5}", sol.time),
                 vs_exact,
@@ -103,18 +108,15 @@ fn main() {
     );
     let alpha = 0.3f64;
     let device_budget = base_budget; // what must finally fit
+    let sweep_backend = BeamSolve(SolveOpts {
+        beam_width: if q { 8 } else { 32 },
+        anneal_iters: if q { 100 } else { 1000 },
+        ..Default::default()
+    });
     let mut best: Option<(usize, f64)> = None;
     for n in 0..if q { 4 } else { 8 } {
         let intra_budget = device_budget * (1.0 + alpha).powi(n as i32);
-        let Some(sol) = solve(
-            &sg,
-            intra_budget,
-            SolveOpts {
-                beam_width: if q { 8 } else { 32 },
-                anneal_iters: if q { 100 } else { 1000 },
-                ..Default::default()
-            },
-        ) else {
+        let Some(sol) = sweep_backend.solve(&sg, intra_budget) else {
             continue;
         };
         let stages = build_stages(&g, &groups, &dev, None);

@@ -1,0 +1,774 @@
+//! Serializable stage artifacts for the staged [`Planner`](super::Planner).
+//!
+//! Every stage boundary is a first-class value that can be saved to disk,
+//! diffed across runs, and fed back into a planner to resume compilation
+//! without re-running the stages that produced it. Serialization is JSON
+//! via [`util::json`](crate::util::json) (serde is unavailable offline);
+//! each artifact carries a `kind` tag and schema version so cached plans
+//! fail loudly instead of deserializing garbage.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::ckpt::{Block, RotorSolution};
+use crate::cluster::{detect, ClusterInfo, DeviceMesh, SimCluster};
+use crate::gen::{CommInsert, CommReason, ExecutionPlan, NodeDecision};
+use crate::sim::SimReport;
+use crate::spec::{DimSpec, ShardingSpec};
+use crate::util::json::{arr, num, obj, s, Json};
+
+pub const ARTIFACT_VERSION: usize = 1;
+
+/// Common save/load surface. `to_json`/`from_json` are total: every field
+/// that affects re-lowering round-trips losslessly (f64 uses Rust's
+/// shortest-roundtrip `Display`).
+pub trait Artifact: Sized {
+    /// The `kind` tag stored in the JSON header.
+    const KIND: &'static str;
+
+    fn to_json(&self) -> Json;
+    fn from_json(v: &Json) -> Result<Self>;
+
+    fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut text = String::new();
+        crate::util::json::write_json(&self.to_json(), &mut text);
+        std::fs::write(path.as_ref(), text).map_err(|e| {
+            anyhow!("writing {}: {e}", path.as_ref().display())
+        })
+    }
+
+    fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            anyhow!("reading {}: {e}", path.as_ref().display())
+        })?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow!("{}: {e}", path.as_ref().display()))?;
+        Self::from_json(&v)
+    }
+}
+
+/// Header check shared by every `from_json`.
+fn expect_kind(v: &Json, kind: &str) -> Result<()> {
+    match v.get("kind").as_str() {
+        Some(k) if k == kind => {}
+        Some(k) => bail!("artifact kind mismatch: got '{k}', want '{kind}'"),
+        None => bail!("not an artifact (missing 'kind' tag)"),
+    }
+    let ver = v.get("version").as_usize().unwrap_or(0);
+    if ver != ARTIFACT_VERSION {
+        bail!("unsupported {kind} artifact version {ver}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// low-level JSON helpers (non-finite floats are JSON-illegal -> tag strings)
+
+fn jnum(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("nan".into())
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+fn jf(v: &Json, what: &str) -> Result<f64> {
+    match v {
+        Json::Num(n) => Ok(*n),
+        Json::Str(t) if t == "inf" => Ok(f64::INFINITY),
+        Json::Str(t) if t == "-inf" => Ok(f64::NEG_INFINITY),
+        Json::Str(t) if t == "nan" => Ok(f64::NAN),
+        _ => Err(anyhow!("expected number for {what}")),
+    }
+}
+
+fn jusize(v: &Json, what: &str) -> Result<usize> {
+    v.as_usize().ok_or_else(|| anyhow!("expected integer for {what}"))
+}
+
+fn jbool(v: &Json, what: &str) -> Result<bool> {
+    v.as_bool().ok_or_else(|| anyhow!("expected bool for {what}"))
+}
+
+fn jstr(v: &Json, what: &str) -> Result<String> {
+    Ok(v.as_str()
+        .ok_or_else(|| anyhow!("expected string for {what}"))?
+        .to_string())
+}
+
+fn usize_arr(xs: &[usize]) -> Json {
+    arr(xs.iter().map(|&x| num(x as f64)).collect())
+}
+
+fn f64_arr(xs: &[f64]) -> Json {
+    arr(xs.iter().map(|&x| jnum(x)).collect())
+}
+
+fn f64_mat(m: &[Vec<f64>]) -> Json {
+    arr(m.iter().map(|row| f64_arr(row)).collect())
+}
+
+fn read_usize_arr(v: &Json, what: &str) -> Result<Vec<usize>> {
+    v.usize_vec().ok_or_else(|| anyhow!("expected int array for {what}"))
+}
+
+fn read_f64_arr(v: &Json, what: &str) -> Result<Vec<f64>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array for {what}"))?
+        .iter()
+        .map(|x| jf(x, what))
+        .collect()
+}
+
+fn read_f64_mat(v: &Json, what: &str) -> Result<Vec<Vec<f64>>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected matrix for {what}"))?
+        .iter()
+        .map(|row| read_f64_arr(row, what))
+        .collect()
+}
+
+fn read_usize_mat(v: &Json, what: &str) -> Result<Vec<Vec<usize>>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected matrix for {what}"))?
+        .iter()
+        .map(|row| read_usize_arr(row, what))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// shared sub-objects
+
+fn spec_to_json(spec: &ShardingSpec) -> Json {
+    arr(spec
+        .dims
+        .iter()
+        .map(|d| usize_arr(d.axes()))
+        .collect())
+}
+
+fn spec_from_json(v: &Json) -> Result<ShardingSpec> {
+    let dims = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("sharding spec must be an array"))?
+        .iter()
+        .map(|d| {
+            let axes = read_usize_arr(d, "spec dim")?;
+            Ok(if axes.is_empty() {
+                DimSpec::Replica
+            } else {
+                DimSpec::Shard(axes)
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ShardingSpec { dims })
+}
+
+fn mesh_to_json(m: &DeviceMesh) -> Json {
+    obj(vec![
+        ("shape", usize_arr(&m.shape)),
+        ("devices", usize_arr(&m.devices)),
+        ("axis_alpha", f64_arr(&m.axis_alpha)),
+        ("axis_beta", f64_arr(&m.axis_beta)),
+    ])
+}
+
+fn mesh_from_json(v: &Json) -> Result<DeviceMesh> {
+    Ok(DeviceMesh {
+        shape: read_usize_arr(v.get("shape"), "mesh.shape")?,
+        devices: read_usize_arr(v.get("devices"), "mesh.devices")?,
+        axis_alpha: read_f64_arr(v.get("axis_alpha"), "mesh.axis_alpha")?,
+        axis_beta: read_f64_arr(v.get("axis_beta"), "mesh.axis_beta")?,
+    })
+}
+
+fn rotor_to_json(r: &RotorSolution) -> Json {
+    obj(vec![
+        ("time", jnum(r.time)),
+        ("budget", jnum(r.budget)),
+        (
+            "blocks",
+            arr(r.blocks
+                .iter()
+                .map(|b| {
+                    obj(vec![
+                        ("start", num(b.start as f64)),
+                        ("end", num(b.end as f64)),
+                        ("checkpointed", Json::Bool(b.checkpointed)),
+                    ])
+                })
+                .collect()),
+        ),
+    ])
+}
+
+fn rotor_from_json(v: &Json) -> Result<RotorSolution> {
+    let blocks = v
+        .get("blocks")
+        .as_arr()
+        .ok_or_else(|| anyhow!("rotor.blocks must be an array"))?
+        .iter()
+        .map(|b| {
+            Ok(Block {
+                start: jusize(b.get("start"), "block.start")?,
+                end: jusize(b.get("end"), "block.end")?,
+                checkpointed: jbool(
+                    b.get("checkpointed"),
+                    "block.checkpointed",
+                )?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(RotorSolution {
+        time: jf(v.get("time"), "rotor.time")?,
+        budget: jf(v.get("budget"), "rotor.budget")?,
+        blocks,
+    })
+}
+
+fn report_to_json(r: &SimReport) -> Json {
+    obj(vec![
+        ("name", s(&r.name)),
+        ("n_devices", num(r.n_devices as f64)),
+        ("iter_time", jnum(r.iter_time)),
+        ("pflops", jnum(r.pflops)),
+        ("mem_per_device", jnum(r.mem_per_device)),
+        ("feasible", Json::Bool(r.feasible)),
+        ("note", s(&r.note)),
+    ])
+}
+
+fn report_from_json(v: &Json) -> Result<SimReport> {
+    Ok(SimReport {
+        name: jstr(v.get("name"), "report.name")?,
+        n_devices: jusize(v.get("n_devices"), "report.n_devices")?,
+        iter_time: jf(v.get("iter_time"), "report.iter_time")?,
+        pflops: jf(v.get("pflops"), "report.pflops")?,
+        mem_per_device: jf(v.get("mem_per_device"), "report.mem")?,
+        feasible: jbool(v.get("feasible"), "report.feasible")?,
+        note: jstr(v.get("note"), "report.note")?,
+    })
+}
+
+fn reason_str(r: CommReason) -> &'static str {
+    match r {
+        CommReason::Correctness => "correctness",
+        CommReason::Resharding => "resharding",
+        CommReason::GradSync => "grad-sync",
+    }
+}
+
+fn reason_from_str(t: &str) -> Result<CommReason> {
+    Ok(match t {
+        "correctness" => CommReason::Correctness,
+        "resharding" => CommReason::Resharding,
+        "grad-sync" => CommReason::GradSync,
+        other => bail!("unknown comm reason '{other}'"),
+    })
+}
+
+fn exec_plan_to_json(p: &ExecutionPlan) -> Json {
+    let decisions = arr(p
+        .decisions
+        .values()
+        .map(|d| {
+            obj(vec![
+                ("node", num(d.node as f64)),
+                ("strategy", s(&d.strategy)),
+                ("out_spec", spec_to_json(&d.out_spec)),
+                ("compute_time", jnum(d.compute_time)),
+                ("comm_time", jnum(d.comm_time)),
+                ("mem_bytes", jnum(d.mem_bytes)),
+            ])
+        })
+        .collect());
+    let comms = arr(p
+        .comms
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("after", num(c.after as f64)),
+                (
+                    "for_consumer",
+                    match c.for_consumer {
+                        Some(n) => num(n as f64),
+                        None => Json::Null,
+                    },
+                ),
+                ("reason", s(reason_str(c.reason))),
+                ("describe", s(&c.describe)),
+                ("time", jnum(c.time)),
+            ])
+        })
+        .collect());
+    let local_shapes = arr(p
+        .local_shapes
+        .iter()
+        .map(|(id, shape)| {
+            obj(vec![
+                ("node", num(*id as f64)),
+                ("shape", usize_arr(shape)),
+            ])
+        })
+        .collect());
+    obj(vec![
+        ("mesh_shape", usize_arr(&p.mesh_shape)),
+        ("decisions", decisions),
+        ("comms", comms),
+        ("local_shapes", local_shapes),
+        (
+            "ckpt",
+            match &p.ckpt {
+                Some(r) => rotor_to_json(r),
+                None => Json::Null,
+            },
+        ),
+        ("iter_time", jnum(p.iter_time)),
+        ("mem_per_device", jnum(p.mem_per_device)),
+    ])
+}
+
+fn exec_plan_from_json(v: &Json) -> Result<ExecutionPlan> {
+    let mut decisions = BTreeMap::new();
+    for d in v
+        .get("decisions")
+        .as_arr()
+        .ok_or_else(|| anyhow!("plan.decisions must be an array"))?
+    {
+        let node = jusize(d.get("node"), "decision.node")?;
+        decisions.insert(node, NodeDecision {
+            node,
+            strategy: jstr(d.get("strategy"), "decision.strategy")?,
+            out_spec: spec_from_json(d.get("out_spec"))?,
+            compute_time: jf(d.get("compute_time"), "decision.compute")?,
+            comm_time: jf(d.get("comm_time"), "decision.comm")?,
+            mem_bytes: jf(d.get("mem_bytes"), "decision.mem")?,
+        });
+    }
+    let comms = v
+        .get("comms")
+        .as_arr()
+        .ok_or_else(|| anyhow!("plan.comms must be an array"))?
+        .iter()
+        .map(|c| {
+            Ok(CommInsert {
+                after: jusize(c.get("after"), "comm.after")?,
+                for_consumer: match c.get("for_consumer") {
+                    Json::Null => None,
+                    other => Some(jusize(other, "comm.for_consumer")?),
+                },
+                reason: reason_from_str(
+                    c.get("reason")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("comm.reason missing"))?,
+                )?,
+                describe: jstr(c.get("describe"), "comm.describe")?,
+                time: jf(c.get("time"), "comm.time")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut local_shapes = BTreeMap::new();
+    for e in v
+        .get("local_shapes")
+        .as_arr()
+        .ok_or_else(|| anyhow!("plan.local_shapes must be an array"))?
+    {
+        local_shapes.insert(
+            jusize(e.get("node"), "local_shape.node")?,
+            read_usize_arr(e.get("shape"), "local_shape.shape")?,
+        );
+    }
+    Ok(ExecutionPlan {
+        mesh_shape: read_usize_arr(v.get("mesh_shape"), "plan.mesh_shape")?,
+        decisions,
+        comms,
+        local_shapes,
+        ckpt: match v.get("ckpt") {
+            Json::Null => None,
+            other => Some(rotor_from_json(other)?),
+        },
+        iter_time: jf(v.get("iter_time"), "plan.iter_time")?,
+        mem_per_device: jf(v.get("mem_per_device"), "plan.mem")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// stage 1: ClusterReport
+
+/// Output of the detect stage: the probed topology (per-pair α/β estimates,
+/// bandwidth tiers) plus the probe seed for reproducibility.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub info: ClusterInfo,
+    pub seed: u64,
+}
+
+impl ClusterReport {
+    /// Probe a (simulated) cluster — usable standalone, and what
+    /// [`Planner::detect`](super::Planner::detect) delegates to.
+    pub fn probe(cluster: &SimCluster, seed: u64) -> ClusterReport {
+        ClusterReport { info: detect(cluster, seed), seed }
+    }
+
+    /// Wrap an already-detected topology (the legacy
+    /// `autoparallelize_with_info` entrypoint).
+    pub fn from_info(info: ClusterInfo) -> ClusterReport {
+        ClusterReport { info, seed: 0 }
+    }
+}
+
+impl Artifact for ClusterReport {
+    const KIND: &'static str = "cluster-report";
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", s(Self::KIND)),
+            ("version", num(ARTIFACT_VERSION as f64)),
+            ("seed", num(self.seed as f64)),
+            ("n", num(self.info.n as f64)),
+            ("alpha", f64_mat(&self.info.alpha)),
+            ("beta", f64_mat(&self.info.beta)),
+            ("tiers", f64_arr(&self.info.tiers)),
+            (
+                "tier_of",
+                arr(self
+                    .info
+                    .tier_of
+                    .iter()
+                    .map(|r| usize_arr(r))
+                    .collect()),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        expect_kind(v, Self::KIND)?;
+        Ok(ClusterReport {
+            seed: jusize(v.get("seed"), "seed")? as u64,
+            info: ClusterInfo {
+                n: jusize(v.get("n"), "n")?,
+                alpha: read_f64_mat(v.get("alpha"), "alpha")?,
+                beta: read_f64_mat(v.get("beta"), "beta")?,
+                tiers: read_f64_arr(v.get("tiers"), "tiers")?,
+                tier_of: read_usize_mat(v.get("tier_of"), "tier_of")?,
+            },
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stage 2: MeshCandidates
+
+/// Output of the mesh stage: every buildable logical mesh over the detected
+/// cluster (optionally restricted to caller-supplied shapes).
+#[derive(Debug, Clone)]
+pub struct MeshCandidates {
+    /// Shapes that were requested (before buildability filtering).
+    pub shapes: Vec<Vec<usize>>,
+    /// Meshes that could actually be built, in trial order.
+    pub meshes: Vec<DeviceMesh>,
+}
+
+impl MeshCandidates {
+    /// Enumerate candidate meshes for a report — usable standalone, and
+    /// what [`Planner::meshes`](super::Planner::meshes) delegates to.
+    pub fn enumerate(
+        report: &ClusterReport,
+        restrict: Option<&[Vec<usize>]>,
+    ) -> MeshCandidates {
+        let shapes: Vec<Vec<usize>> = match restrict {
+            Some(s) => s.to_vec(),
+            None => DeviceMesh::candidate_shapes(report.info.n),
+        };
+        let meshes = shapes
+            .iter()
+            .filter_map(|sh| DeviceMesh::build(&report.info, sh))
+            .collect();
+        MeshCandidates { shapes, meshes }
+    }
+}
+
+impl Artifact for MeshCandidates {
+    const KIND: &'static str = "mesh-candidates";
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", s(Self::KIND)),
+            ("version", num(ARTIFACT_VERSION as f64)),
+            (
+                "shapes",
+                arr(self.shapes.iter().map(|sh| usize_arr(sh)).collect()),
+            ),
+            (
+                "meshes",
+                arr(self.meshes.iter().map(mesh_to_json).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        expect_kind(v, Self::KIND)?;
+        Ok(MeshCandidates {
+            shapes: read_usize_mat(v.get("shapes"), "shapes")?,
+            meshes: v
+                .get("meshes")
+                .as_arr()
+                .ok_or_else(|| anyhow!("meshes must be an array"))?
+                .iter()
+                .map(mesh_from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stage 3: ShardingSolution
+
+/// One feasible (mesh, §5.3 sweep point) strategy assignment.
+#[derive(Debug, Clone)]
+pub struct ShardingCandidate {
+    pub mesh: DeviceMesh,
+    /// Which sweep point n produced this (intra budget = budget·(1+α)^n).
+    pub sweep_n: usize,
+    pub intra_budget: f64,
+    /// Chosen strategy index per solver-graph node (rebuildable
+    /// deterministically from graph + mesh + device model).
+    pub choice: Vec<usize>,
+    /// Solver objective time, seconds.
+    pub time: f64,
+    /// Solver per-device memory, bytes.
+    pub mem: f64,
+}
+
+/// Output of the sharding stage. Assignment backends produce `candidates`;
+/// analytic (baseline) backends produce `analytic` instead.
+#[derive(Debug, Clone)]
+pub struct ShardingSolution {
+    pub backend: String,
+    /// The device memory budget the sweep was run against, bytes.
+    pub budget: f64,
+    pub candidates: Vec<ShardingCandidate>,
+    pub analytic: Option<SimReport>,
+}
+
+impl Artifact for ShardingSolution {
+    const KIND: &'static str = "sharding-solution";
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", s(Self::KIND)),
+            ("version", num(ARTIFACT_VERSION as f64)),
+            ("backend", s(&self.backend)),
+            ("budget", jnum(self.budget)),
+            (
+                "candidates",
+                arr(self
+                    .candidates
+                    .iter()
+                    .map(|c| {
+                        obj(vec![
+                            ("mesh", mesh_to_json(&c.mesh)),
+                            ("sweep_n", num(c.sweep_n as f64)),
+                            ("intra_budget", jnum(c.intra_budget)),
+                            ("choice", usize_arr(&c.choice)),
+                            ("time", jnum(c.time)),
+                            ("mem", jnum(c.mem)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            (
+                "analytic",
+                match &self.analytic {
+                    Some(r) => report_to_json(r),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        expect_kind(v, Self::KIND)?;
+        let candidates = v
+            .get("candidates")
+            .as_arr()
+            .ok_or_else(|| anyhow!("candidates must be an array"))?
+            .iter()
+            .map(|c| {
+                Ok(ShardingCandidate {
+                    mesh: mesh_from_json(c.get("mesh"))?,
+                    sweep_n: jusize(c.get("sweep_n"), "sweep_n")?,
+                    intra_budget: jf(c.get("intra_budget"), "intra")?,
+                    choice: read_usize_arr(c.get("choice"), "choice")?,
+                    time: jf(c.get("time"), "cand.time")?,
+                    mem: jf(c.get("mem"), "cand.mem")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardingSolution {
+            backend: jstr(v.get("backend"), "backend")?,
+            budget: jf(v.get("budget"), "budget")?,
+            candidates,
+            analytic: match v.get("analytic") {
+                Json::Null => None,
+                other => Some(report_from_json(other)?),
+            },
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stage 4: CkptSchedule
+
+/// Output of the checkpoint stage: the winning sharding candidate plus its
+/// communication-aware rotor schedule and final cost model.
+#[derive(Debug, Clone)]
+pub struct CkptSchedule {
+    /// Index into [`ShardingSolution::candidates`] (0 for analytic plans).
+    pub winner: usize,
+    /// Rotor segmentation; `None` for analytic (baseline) plans.
+    pub rotor: Option<RotorSolution>,
+    /// Activation budget the rotor ran under (budget − model data), bytes.
+    pub act_budget: f64,
+    /// Full per-iteration time: ckpt DP + resharding + exposed grad-sync.
+    pub iter_time: f64,
+    pub mem_per_device: f64,
+}
+
+impl Artifact for CkptSchedule {
+    const KIND: &'static str = "ckpt-schedule";
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", s(Self::KIND)),
+            ("version", num(ARTIFACT_VERSION as f64)),
+            ("winner", num(self.winner as f64)),
+            (
+                "rotor",
+                match &self.rotor {
+                    Some(r) => rotor_to_json(r),
+                    None => Json::Null,
+                },
+            ),
+            ("act_budget", jnum(self.act_budget)),
+            ("iter_time", jnum(self.iter_time)),
+            ("mem_per_device", jnum(self.mem_per_device)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        expect_kind(v, Self::KIND)?;
+        Ok(CkptSchedule {
+            winner: jusize(v.get("winner"), "winner")?,
+            rotor: match v.get("rotor") {
+                Json::Null => None,
+                other => Some(rotor_from_json(other)?),
+            },
+            act_budget: jf(v.get("act_budget"), "act_budget")?,
+            iter_time: jf(v.get("iter_time"), "iter_time")?,
+            mem_per_device: jf(v.get("mem_per_device"), "mem")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stage 5: CompiledPlan
+
+/// The final artifact: mesh + lowered execution plan + headline numbers.
+/// Self-contained — loading one reproduces `iter_time`, `pflops`, and the
+/// comm-insert list without re-running any solver stage.
+#[derive(Debug, Clone)]
+pub struct CompiledPlan {
+    pub backend: String,
+    /// Node count of the graph this plan was compiled for — a cheap
+    /// identity check so replaying against the wrong model fails loudly.
+    pub graph_nodes: usize,
+    pub mesh: DeviceMesh,
+    pub plan: ExecutionPlan,
+    /// Per-iteration time including checkpoint recomputation, seconds.
+    pub iter_time: f64,
+    /// Aggregate achieved PFLOPS on this plan.
+    pub pflops: f64,
+    pub mem_per_device: f64,
+    /// Which sweep point n won (intra-op budget = budget·(1+α)^n).
+    pub sweep_n: usize,
+}
+
+impl Artifact for CompiledPlan {
+    const KIND: &'static str = "compiled-plan";
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", s(Self::KIND)),
+            ("version", num(ARTIFACT_VERSION as f64)),
+            ("backend", s(&self.backend)),
+            ("graph_nodes", num(self.graph_nodes as f64)),
+            ("mesh", mesh_to_json(&self.mesh)),
+            ("plan", exec_plan_to_json(&self.plan)),
+            ("iter_time", jnum(self.iter_time)),
+            ("pflops", jnum(self.pflops)),
+            ("mem_per_device", jnum(self.mem_per_device)),
+            ("sweep_n", num(self.sweep_n as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        expect_kind(v, Self::KIND)?;
+        Ok(CompiledPlan {
+            backend: jstr(v.get("backend"), "backend")?,
+            graph_nodes: jusize(v.get("graph_nodes"), "graph_nodes")?,
+            mesh: mesh_from_json(v.get("mesh"))?,
+            plan: exec_plan_from_json(v.get("plan"))?,
+            iter_time: jf(v.get("iter_time"), "iter_time")?,
+            pflops: jf(v.get("pflops"), "pflops")?,
+            mem_per_device: jf(v.get("mem_per_device"), "mem")?,
+            sweep_n: jusize(v.get("sweep_n"), "sweep_n")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::SimCluster;
+
+    #[test]
+    fn cluster_report_roundtrips_exactly() {
+        let r = ClusterReport::probe(
+            &SimCluster::partially_connected_8gpu(),
+            42,
+        );
+        let back =
+            ClusterReport::from_json(&r.to_json()).expect("roundtrip");
+        assert_eq!(back.info.n, r.info.n);
+        assert_eq!(back.info.alpha, r.info.alpha);
+        assert_eq!(back.info.beta, r.info.beta);
+        assert_eq!(back.info.tiers, r.info.tiers);
+        assert_eq!(back.info.tier_of, r.info.tier_of);
+        assert_eq!(back.seed, 42);
+    }
+
+    #[test]
+    fn mesh_candidates_handle_infinite_beta() {
+        let r = ClusterReport::probe(&SimCluster::single(), 1);
+        let mc = MeshCandidates::enumerate(&r, None);
+        let back =
+            MeshCandidates::from_json(&mc.to_json()).expect("roundtrip");
+        assert_eq!(back.meshes.len(), mc.meshes.len());
+        // single-device mesh has axis_beta = inf; must survive the trip
+        assert!(back.meshes[0].axis_beta[0].is_infinite());
+    }
+
+    #[test]
+    fn kind_tag_is_checked() {
+        let r = ClusterReport::probe(&SimCluster::single(), 1);
+        assert!(MeshCandidates::from_json(&r.to_json()).is_err());
+        assert!(ClusterReport::from_json(&Json::Null).is_err());
+    }
+}

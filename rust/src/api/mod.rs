@@ -1,0 +1,937 @@
+//! Staged planning API — the compiler surface over the paper's pipeline.
+//!
+//! The monolithic `autoparallelize(model)` one-liner is retained as a
+//! compatibility wrapper (see [`crate::coordinator`]), but the pipeline
+//! itself is now five explicit stages with artifact-passing boundaries:
+//!
+//! ```text
+//! Planner::new(graph, cluster, device)
+//!     .detect()          -> ClusterReport     (§4.2 topology probe)
+//!     .meshes()          -> MeshCandidates    (bandwidth-aware meshes)
+//!     .solve_sharding()  -> ShardingSolution  (§5.1 Eq.1 × §5.3 sweep)
+//!     .schedule_ckpt()   -> CkptSchedule      (§5.2 comm-aware rotor)
+//!     .lower()           -> CompiledPlan      (§6 generator passes)
+//! ```
+//!
+//! Every artifact is JSON-serializable ([`Artifact`]) so plans can be
+//! cached to disk, diffed across runs, and replayed without re-solving.
+//! Stages run lazily and at most once: each stage runs its missing
+//! predecessors, and a stage loaded from disk (`load_sharding`, …) is
+//! *not* recomputed — `lower()` after `load_sharding` re-prices only the
+//! checkpoint DP and the generator passes, both deterministic.
+//!
+//! Solver backends are pluggable through the [`Solve`] trait
+//! ([`with_backend`](Planner::with_backend)): the exact branch-and-bound,
+//! the production beam + Lagrangian + annealing path, and the Table-4
+//! analytic baselines (DDP, Megatron-1D, Optimus-2D, 3D-TP) are all
+//! interchangeable. Per-stage progress callbacks
+//! ([`on_progress`](Planner::on_progress)) feed the CLI and benches.
+//!
+//! See `rust/src/api/README.md` for the artifact formats.
+
+pub mod artifacts;
+pub mod progress;
+pub mod solve;
+
+pub use self::artifacts::{Artifact, CkptSchedule, ClusterReport,
+                          CompiledPlan, MeshCandidates, ShardingCandidate,
+                          ShardingSolution, ARTIFACT_VERSION};
+pub use self::progress::{PlanStage, ProgressEvent};
+pub use self::solve::{Baseline, BaselineSolve, BeamSolve, ExactSolve,
+                      Solve, SolveCtx};
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::ckpt::{build_stages, common_nodes, linearize, NodeTimes,
+                  RotorSolver};
+use crate::cluster::{ClusterInfo, DeviceMesh, SimCluster};
+use crate::gen::{self, ExecutionPlan};
+use crate::graph::op::Op;
+use crate::graph::{Graph, NodeId};
+use crate::layout::LayoutManager;
+use crate::profiler::{profile, GraphProfile};
+use crate::sim::DeviceModel;
+use crate::solver::{Solution, SolveOpts, SolverGraph};
+use crate::util::logger::Phase;
+
+use self::progress::{emit, ProgressFn};
+
+/// Planner configuration (the former `PipelineOpts`, re-exported from
+/// `coordinator` under that name for compatibility).
+#[derive(Debug, Clone)]
+pub struct PlanOpts {
+    /// Per-device memory budget in bytes (defaults to the device model).
+    pub budget: Option<f64>,
+    /// §5.3 expansion coefficient α.
+    pub alpha: f64,
+    /// Number of sweep points n ∈ [0, sweep).
+    pub sweep: usize,
+    /// Options for the default beam backend (ignored when a custom
+    /// backend is installed via [`Planner::with_backend`]).
+    pub solve: SolveOpts,
+    /// Restrict mesh candidates (None = all factorizations).
+    pub mesh_shapes: Option<Vec<Vec<usize>>>,
+    /// Seed for the topology probe.
+    pub seed: u64,
+}
+
+impl Default for PlanOpts {
+    fn default() -> Self {
+        PlanOpts {
+            budget: None,
+            alpha: 0.3,
+            sweep: 10,
+            solve: SolveOpts::default(),
+            mesh_shapes: None,
+            seed: 42,
+        }
+    }
+}
+
+/// Split a solver solution into per-node times + memory scales for the
+/// checkpoint stage (fwd:bwd ≈ 1:2 for GEMM-dominated training).
+fn node_times(
+    g: &Graph,
+    sg: &SolverGraph,
+    sol: &Solution,
+    mesh: &DeviceMesh,
+) -> NodeTimes {
+    let mut t = NodeTimes {
+        fwd: vec![0.0; g.len()],
+        bwd: vec![0.0; g.len()],
+        fwd_comm: vec![0.0; g.len()],
+        bwd_comm: vec![0.0; g.len()],
+        mem_scale: vec![1.0; g.len()],
+    };
+    for (i, &anchor) in sg.anchors.iter().enumerate() {
+        let s = &sg.sets[i].strategies[sol.choice[i]];
+        t.fwd[anchor] = s.compute_time / 3.0;
+        t.bwd[anchor] = s.compute_time * 2.0 / 3.0;
+        // partial-sum comm sits on the critical path of both sweeps;
+        // gradient sync is excluded here — overlap is applied at the
+        // plan level (the solver itself stays overlap-blind, §5.1)
+        t.fwd_comm[anchor] = s.comm_time / 3.0;
+        t.bwd_comm[anchor] = s.comm_time * 2.0 / 3.0;
+        t.mem_scale[anchor] =
+            s.out_spec.sharding_factor(mesh).max(1) as f64;
+    }
+    t
+}
+
+/// Parameter-memory share of a solution (placeholder anchors).
+fn param_mem(g: &Graph, sg: &SolverGraph, sol: &Solution) -> f64 {
+    sg.anchors
+        .iter()
+        .enumerate()
+        .filter(|(_, &a)| matches!(g.node(a).op, Op::Placeholder(_)))
+        .map(|(i, _)| sg.sets[i].strategies[sol.choice[i]].mem_bytes)
+        .sum()
+}
+
+/// A choice vector only makes sense against the solver graph it was
+/// produced from; stale artifacts must fail loudly, not index-panic.
+fn validate_choice(sg: &SolverGraph, choice: &[usize]) -> Result<()> {
+    if choice.len() != sg.len() {
+        bail!(
+            "sharding candidate has {} choices but the solver graph has \
+             {} nodes (stale plan artifact?)",
+            choice.len(),
+            sg.len()
+        );
+    }
+    for (i, &c) in choice.iter().enumerate() {
+        if c >= sg.sets[i].strategies.len() {
+            bail!(
+                "sharding candidate picks strategy {c} of {} at node {i} \
+                 (stale plan artifact?)",
+                sg.sets[i].strategies.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Per-mesh runtime state (not an artifact): the solver graph and layout
+/// cache are deterministic functions of (graph, mesh, device) and are
+/// rebuilt on demand when resuming from deserialized artifacts.
+struct MeshCtx {
+    mesh: DeviceMesh,
+    layout: LayoutManager,
+    sg: SolverGraph,
+}
+
+/// Staged planning compiler. See the module docs for the stage diagram.
+pub struct Planner<'a> {
+    graph: &'a Graph,
+    cluster: Option<&'a SimCluster>,
+    dev: &'a DeviceModel,
+    opts: PlanOpts,
+    /// None = default beam backend built from `opts.solve` at solve time.
+    backend: Option<Box<dyn Solve + 'a>>,
+    progress: Option<ProgressFn<'a>>,
+    prof: Option<GraphProfile>,
+    groups: Option<Vec<Vec<NodeId>>>,
+    mesh_ctxs: Vec<MeshCtx>,
+    // stage artifacts
+    report: Option<ClusterReport>,
+    meshes: Option<MeshCandidates>,
+    sharding: Option<ShardingSolution>,
+    ckpt: Option<CkptSchedule>,
+}
+
+impl<'a> Planner<'a> {
+    pub fn new(
+        graph: &'a Graph,
+        cluster: &'a SimCluster,
+        dev: &'a DeviceModel,
+    ) -> Planner<'a> {
+        Planner {
+            graph,
+            cluster: Some(cluster),
+            dev,
+            opts: PlanOpts::default(),
+            backend: None,
+            progress: None,
+            prof: None,
+            groups: None,
+            mesh_ctxs: Vec::new(),
+            report: None,
+            meshes: None,
+            sharding: None,
+            ckpt: None,
+        }
+    }
+
+    /// Start from an already-detected topology (skips the probe stage).
+    pub fn with_info(
+        graph: &'a Graph,
+        info: ClusterInfo,
+        dev: &'a DeviceModel,
+    ) -> Planner<'a> {
+        Planner {
+            graph,
+            cluster: None,
+            dev,
+            opts: PlanOpts::default(),
+            backend: None,
+            progress: None,
+            prof: None,
+            groups: None,
+            mesh_ctxs: Vec::new(),
+            report: Some(ClusterReport::from_info(info)),
+            meshes: None,
+            sharding: None,
+            ckpt: None,
+        }
+    }
+
+    // -- builder ----------------------------------------------------------
+
+    pub fn with_opts(mut self, opts: PlanOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Override the per-device memory budget (bytes).
+    pub fn with_budget(mut self, budget: f64) -> Self {
+        self.opts.budget = Some(budget);
+        self
+    }
+
+    /// Install a solver backend (default: [`BeamSolve`] from `opts.solve`).
+    pub fn with_backend(mut self, backend: impl Solve + 'a) -> Self {
+        self.backend = Some(Box::new(backend));
+        self
+    }
+
+    /// Seed the profile cache with an already-computed [`GraphProfile`]
+    /// (callers that profiled the graph themselves avoid a re-profile).
+    pub fn with_profile(mut self, prof: GraphProfile) -> Self {
+        self.prof = Some(prof);
+        self
+    }
+
+    /// Register a per-stage progress callback.
+    pub fn on_progress(
+        mut self,
+        f: impl FnMut(&ProgressEvent) + 'a,
+    ) -> Self {
+        self.progress = Some(Box::new(f));
+        self
+    }
+
+    // -- artifact injection (resume from cache) ---------------------------
+
+    /// Seed the detect stage from a cached [`ClusterReport`].
+    pub fn load_cluster(mut self, report: ClusterReport) -> Self {
+        self.report = Some(report);
+        self
+    }
+
+    /// Seed the sharding stage from a cached [`ShardingSolution`]; the
+    /// solve is skipped entirely and later stages re-price against it.
+    pub fn load_sharding(mut self, sharding: ShardingSolution) -> Self {
+        self.sharding = Some(sharding);
+        self
+    }
+
+    /// Seed the checkpoint stage from a cached [`CkptSchedule`]
+    /// (requires a sharding solution, loaded or solved).
+    pub fn load_ckpt(mut self, ckpt: CkptSchedule) -> Self {
+        self.ckpt = Some(ckpt);
+        self
+    }
+
+    // -- artifact accessors ------------------------------------------------
+
+    pub fn cluster_report(&self) -> Option<&ClusterReport> {
+        self.report.as_ref()
+    }
+
+    pub fn mesh_candidates(&self) -> Option<&MeshCandidates> {
+        self.meshes.as_ref()
+    }
+
+    pub fn sharding_solution(&self) -> Option<&ShardingSolution> {
+        self.sharding.as_ref()
+    }
+
+    pub fn ckpt_schedule(&self) -> Option<&CkptSchedule> {
+        self.ckpt.as_ref()
+    }
+
+    /// Symbolic whole-graph profile (computed once, reused by stages).
+    pub fn profile(&mut self) -> &GraphProfile {
+        if self.prof.is_none() {
+            self.prof = Some(profile(self.graph));
+        }
+        self.prof.as_ref().unwrap()
+    }
+
+    /// Move the cached profile out (for callers assembling their own
+    /// result type after `lower()` — avoids re-profiling the graph).
+    pub fn take_profile(&mut self) -> GraphProfile {
+        self.profile();
+        self.prof.take().unwrap()
+    }
+
+    fn backend_name(&self) -> String {
+        match &self.backend {
+            Some(b) => b.name(),
+            None => BeamSolve(self.opts.solve).name(),
+        }
+    }
+
+    fn effective_budget(&self) -> f64 {
+        self.opts.budget.unwrap_or(self.dev.memory * 0.9)
+    }
+
+    /// Find-or-build the solver graph + layout cache for a mesh.
+    fn ctx_index(&mut self, mesh: &DeviceMesh) -> usize {
+        if let Some(i) = self.mesh_ctxs.iter().position(|c| {
+            c.mesh.shape == mesh.shape && c.mesh.devices == mesh.devices
+        }) {
+            return i;
+        }
+        let mut layout = LayoutManager::new(mesh.clone());
+        let tb = std::time::Instant::now();
+        let sg =
+            SolverGraph::build(self.graph, mesh, self.dev, &mut layout);
+        crate::debug!(
+            "sgraph build {:?}: {:.0} ms ({} nodes, {} edges, cache {})",
+            mesh.shape,
+            tb.elapsed().as_secs_f64() * 1e3,
+            sg.len(),
+            sg.edges.len(),
+            layout.cache_len()
+        );
+        self.mesh_ctxs.push(MeshCtx { mesh: mesh.clone(), layout, sg });
+        self.mesh_ctxs.len() - 1
+    }
+
+    // -- stage 1: detect ---------------------------------------------------
+
+    /// Probe the cluster topology (§4.2). No-op if a report is loaded.
+    pub fn detect(&mut self) -> Result<&ClusterReport> {
+        if self.report.is_none() {
+            let cluster = self.cluster.ok_or_else(|| {
+                anyhow!(
+                    "no cluster to probe: construct with Planner::new or \
+                     load a ClusterReport"
+                )
+            })?;
+            emit(&mut self.progress, ProgressEvent::StageStart {
+                stage: PlanStage::Detect,
+            });
+            let t = Phase::new("cluster-detect");
+            let report = ClusterReport::probe(cluster, self.opts.seed);
+            let ms = t.elapsed_ms();
+            drop(t);
+            self.report = Some(report);
+            emit(&mut self.progress, ProgressEvent::StageDone {
+                stage: PlanStage::Detect,
+                ms,
+            });
+        }
+        Ok(self.report.as_ref().unwrap())
+    }
+
+    // -- stage 2: meshes ---------------------------------------------------
+
+    /// Enumerate buildable device meshes over the detected topology.
+    pub fn meshes(&mut self) -> Result<&MeshCandidates> {
+        if self.meshes.is_none() {
+            self.detect()?;
+            emit(&mut self.progress, ProgressEvent::StageStart {
+                stage: PlanStage::Meshes,
+            });
+            let t0 = std::time::Instant::now();
+            let mc = MeshCandidates::enumerate(
+                self.report.as_ref().unwrap(),
+                self.opts.mesh_shapes.as_deref(),
+            );
+            self.meshes = Some(mc);
+            emit(&mut self.progress, ProgressEvent::StageDone {
+                stage: PlanStage::Meshes,
+                ms: t0.elapsed().as_secs_f64() * 1e3,
+            });
+        }
+        Ok(self.meshes.as_ref().unwrap())
+    }
+
+    // -- stage 3: solve sharding ------------------------------------------
+
+    /// Run the intra-op strategy search (Eq. 1) across every mesh × §5.3
+    /// sweep point, collecting every feasible candidate. Analytic
+    /// backends produce a closed-form report instead.
+    pub fn solve_sharding(&mut self) -> Result<&ShardingSolution> {
+        if self.sharding.is_some() {
+            return Ok(self.sharding.as_ref().unwrap());
+        }
+        self.detect()?;
+        let analytic = self
+            .backend
+            .as_ref()
+            .map(|b| b.is_analytic())
+            .unwrap_or(false);
+        if !analytic {
+            // run (and time) the mesh stage before opening the sharding
+            // stage so progress events arrive in pipeline order and the
+            // sharding wall time excludes mesh enumeration
+            self.meshes()?;
+        }
+        let budget = self.effective_budget();
+        emit(&mut self.progress, ProgressEvent::StageStart {
+            stage: PlanStage::Sharding,
+        });
+        let t0 = std::time::Instant::now();
+        if analytic {
+            self.profile();
+            let ctx = SolveCtx {
+                graph: self.graph,
+                profile: self.prof.as_ref().unwrap(),
+                info: &self.report.as_ref().unwrap().info,
+                dev: self.dev,
+            };
+            let rep = self
+                .backend
+                .as_ref()
+                .unwrap()
+                .analytic(&ctx)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "analytic backend '{}' produced no report",
+                        self.backend_name()
+                    )
+                })?;
+            self.sharding = Some(ShardingSolution {
+                backend: self.backend_name(),
+                budget,
+                candidates: Vec::new(),
+                analytic: Some(rep),
+            });
+        } else {
+            let meshes: Vec<DeviceMesh> =
+                self.meshes.as_ref().unwrap().meshes.clone();
+            let mut candidates: Vec<ShardingCandidate> = Vec::new();
+            for mesh in &meshes {
+                emit(&mut self.progress, ProgressEvent::MeshStart {
+                    shape: mesh.shape.clone(),
+                });
+                let _p = Phase::new(&format!("mesh {:?}", mesh.shape));
+                let ci = self.ctx_index(mesh);
+                for n in 0..self.opts.sweep {
+                    let intra =
+                        budget * (1.0 + self.opts.alpha).powi(n as i32);
+                    let ts = std::time::Instant::now();
+                    let sol = match &self.backend {
+                        Some(b) => b.solve(&self.mesh_ctxs[ci].sg, intra),
+                        None => crate::solver::solve(
+                            &self.mesh_ctxs[ci].sg,
+                            intra,
+                            self.opts.solve,
+                        ),
+                    };
+                    crate::debug!(
+                        "solve n={n}: {:.0} ms",
+                        ts.elapsed().as_secs_f64() * 1e3
+                    );
+                    match sol {
+                        None => {
+                            emit(
+                                &mut self.progress,
+                                ProgressEvent::SweepPoint {
+                                    shape: mesh.shape.clone(),
+                                    n,
+                                    feasible: false,
+                                    time: 0.0,
+                                    mem: 0.0,
+                                },
+                            );
+                        }
+                        Some(sol) => {
+                            emit(
+                                &mut self.progress,
+                                ProgressEvent::SweepPoint {
+                                    shape: mesh.shape.clone(),
+                                    n,
+                                    feasible: true,
+                                    time: sol.time,
+                                    mem: sol.mem,
+                                },
+                            );
+                            let fits = sol.mem <= budget;
+                            candidates.push(ShardingCandidate {
+                                mesh: mesh.clone(),
+                                sweep_n: n,
+                                intra_budget: intra,
+                                choice: sol.choice,
+                                time: sol.time,
+                                mem: sol.mem,
+                            });
+                            // if even this sweep point fit without
+                            // checkpointing help, larger intra-op budgets
+                            // change nothing for this mesh
+                            if fits {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            self.sharding = Some(ShardingSolution {
+                backend: self.backend_name(),
+                budget,
+                candidates,
+                analytic: None,
+            });
+        }
+        emit(&mut self.progress, ProgressEvent::StageDone {
+            stage: PlanStage::Sharding,
+            ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        Ok(self.sharding.as_ref().unwrap())
+    }
+
+    // -- stage 4: schedule checkpoints ------------------------------------
+
+    /// Run the communication-aware rotor DP (§5.2) for every sharding
+    /// candidate under what the model data leaves free, and pick the
+    /// fastest feasible (mesh, sweep point, schedule) jointly.
+    pub fn schedule_ckpt(&mut self) -> Result<&CkptSchedule> {
+        if self.ckpt.is_some() {
+            return Ok(self.ckpt.as_ref().unwrap());
+        }
+        self.solve_sharding()?;
+        emit(&mut self.progress, ProgressEvent::StageStart {
+            stage: PlanStage::Ckpt,
+        });
+        let t0 = std::time::Instant::now();
+        let sharding = self.sharding.clone().unwrap();
+
+        if let Some(rep) = &sharding.analytic {
+            if !rep.feasible {
+                bail!("{}: infeasible — {}", rep.name, rep.note);
+            }
+            self.ckpt = Some(CkptSchedule {
+                winner: 0,
+                rotor: None,
+                act_budget: 0.0,
+                iter_time: rep.iter_time,
+                mem_per_device: rep.mem_per_device,
+            });
+        } else {
+            let budget = sharding.budget;
+            if self.groups.is_none() {
+                self.groups = Some(linearize(
+                    self.graph,
+                    &common_nodes(self.graph),
+                ));
+            }
+            let groups = self.groups.clone().unwrap();
+            let mut best: Option<CkptSchedule> = None;
+            self.rank_candidates(
+                0,
+                &sharding.candidates,
+                budget,
+                &groups,
+                &mut best,
+            )?;
+            if best.is_none() {
+                // every budget-fitting candidate failed the rotor DP.
+                // The sweep stops early once a solution fits the device
+                // budget, but the legacy pipeline kept sweeping in that
+                // situation — resume at looser intra-op budgets before
+                // declaring infeasibility.
+                let extra =
+                    self.extend_sweep(&sharding.candidates, budget);
+                if !extra.is_empty() {
+                    self.rank_candidates(
+                        sharding.candidates.len(),
+                        &extra,
+                        budget,
+                        &groups,
+                        &mut best,
+                    )?;
+                    if let Some(s) = self.sharding.as_mut() {
+                        s.candidates.extend(extra);
+                    }
+                }
+            }
+            self.ckpt = Some(best.ok_or_else(|| {
+                anyhow!(
+                    "no feasible plan for any mesh under the memory budget"
+                )
+            })?);
+        }
+        emit(&mut self.progress, ProgressEvent::StageDone {
+            stage: PlanStage::Ckpt,
+            ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        Ok(self.ckpt.as_ref().unwrap())
+    }
+
+    /// Rotor-rank a batch of sharding candidates, updating `best`.
+    /// `offset` is the index of `cands[0]` within the full candidate
+    /// list, so winner indices stay global.
+    fn rank_candidates(
+        &mut self,
+        offset: usize,
+        cands: &[ShardingCandidate],
+        budget: f64,
+        groups: &[Vec<NodeId>],
+        best: &mut Option<CkptSchedule>,
+    ) -> Result<()> {
+        for (k, cand) in cands.iter().enumerate() {
+            let i = offset + k;
+            let ci = self.ctx_index(&cand.mesh);
+            let (g, dev) = (self.graph, self.dev);
+            let sg = &self.mesh_ctxs[ci].sg;
+            validate_choice(sg, &cand.choice)?;
+            let sol = Solution {
+                choice: cand.choice.clone(),
+                time: cand.time,
+                mem: cand.mem,
+            };
+            let times = node_times(g, sg, &sol, &cand.mesh);
+            let stages = build_stages(g, groups, dev, Some(&times));
+            let rotor = RotorSolver::new(stages);
+            let pm = param_mem(g, sg, &sol);
+            let act_budget = budget - pm;
+            if act_budget <= 0.0 {
+                continue;
+            }
+            let Some(ck) = rotor.solve(act_budget) else {
+                continue;
+            };
+            // rotor covers the grouped (differentiable) nodes; add the
+            // resharding costs the stages don't see
+            let edge_comm: f64 = sg
+                .edges
+                .iter()
+                .map(|e| e.cost[sol.choice[e.from]][sol.choice[e.to]])
+                .sum();
+            // the runtime overlaps gradient-sync collectives with the
+            // backward sweep (§7: the low-bandwidth DP all-reduce hides
+            // behind backward compute)
+            let grad_comm: f64 = sg
+                .anchors
+                .iter()
+                .enumerate()
+                .map(|(j, _)| {
+                    sg.sets[j].strategies[sol.choice[j]].grad_comm
+                })
+                .sum();
+            let bwd_compute: f64 = sg
+                .anchors
+                .iter()
+                .enumerate()
+                .map(|(j, _)| {
+                    sg.sets[j].strategies[sol.choice[j]].compute_time
+                        * 2.0
+                        / 3.0
+                })
+                .sum();
+            let exposed_grad = (grad_comm - 0.7 * bwd_compute).max(0.0);
+            let iter_time = ck.time + edge_comm + exposed_grad;
+            crate::debug!(
+                "mesh {:?} n={}: sol.time {:.1}ms (mem {:.1}GB) ck {:.1}ms edge {:.1}ms grad {:.1}ms exposed {:.1}ms",
+                cand.mesh.shape,
+                cand.sweep_n,
+                sol.time * 1e3,
+                sol.mem / 1e9,
+                ck.time * 1e3,
+                edge_comm * 1e3,
+                grad_comm * 1e3,
+                exposed_grad * 1e3
+            );
+            let mem = pm + rotor.no_checkpoint_mem().min(act_budget);
+            let better = best
+                .as_ref()
+                .map(|b| iter_time < b.iter_time)
+                .unwrap_or(true);
+            emit(&mut self.progress, ProgressEvent::CandidateRanked {
+                index: i,
+                iter_time,
+                best: better,
+            });
+            if better {
+                *best = Some(CkptSchedule {
+                    winner: i,
+                    rotor: Some(ck),
+                    act_budget,
+                    iter_time,
+                    mem_per_device: mem,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Continue the §5.3 sweep past the early-exit point for every mesh
+    /// whose sweep stopped at a budget-fitting candidate — the rescue
+    /// path when no candidate was checkpoint-feasible.
+    fn extend_sweep(
+        &mut self,
+        existing: &[ShardingCandidate],
+        budget: f64,
+    ) -> Vec<ShardingCandidate> {
+        // distinct meshes with the highest sweep point tried and whether
+        // that point fit the device budget (= the sweep broke early)
+        let mut tails: Vec<(DeviceMesh, usize, bool)> = Vec::new();
+        for c in existing {
+            match tails.iter_mut().find(|(m, _, _)| {
+                m.shape == c.mesh.shape && m.devices == c.mesh.devices
+            }) {
+                Some(t) => {
+                    if c.sweep_n >= t.1 {
+                        t.1 = c.sweep_n;
+                        t.2 = c.mem <= budget;
+                    }
+                }
+                None => tails.push((
+                    c.mesh.clone(),
+                    c.sweep_n,
+                    c.mem <= budget,
+                )),
+            }
+        }
+        let mut extra = Vec::new();
+        for (mesh, last_n, broke) in tails {
+            if !broke {
+                continue; // this mesh's sweep already ran to exhaustion
+            }
+            let ci = self.ctx_index(&mesh);
+            for n in last_n + 1..self.opts.sweep {
+                let intra =
+                    budget * (1.0 + self.opts.alpha).powi(n as i32);
+                let sol = match &self.backend {
+                    Some(b) => b.solve(&self.mesh_ctxs[ci].sg, intra),
+                    None => crate::solver::solve(
+                        &self.mesh_ctxs[ci].sg,
+                        intra,
+                        self.opts.solve,
+                    ),
+                };
+                let Some(sol) = sol else { continue };
+                emit(&mut self.progress, ProgressEvent::SweepPoint {
+                    shape: mesh.shape.clone(),
+                    n,
+                    feasible: true,
+                    time: sol.time,
+                    mem: sol.mem,
+                });
+                extra.push(ShardingCandidate {
+                    mesh: mesh.clone(),
+                    sweep_n: n,
+                    intra_budget: intra,
+                    choice: sol.choice,
+                    time: sol.time,
+                    mem: sol.mem,
+                });
+            }
+        }
+        extra
+    }
+
+    // -- stage 5: lower ----------------------------------------------------
+
+    /// Lower the winning candidate through the §6 generator passes and
+    /// assemble the final [`CompiledPlan`].
+    pub fn lower(&mut self) -> Result<CompiledPlan> {
+        self.schedule_ckpt()?;
+        emit(&mut self.progress, ProgressEvent::StageStart {
+            stage: PlanStage::Lower,
+        });
+        let t0 = std::time::Instant::now();
+        self.profile();
+        let total_flops = self.prof.as_ref().unwrap().total_flops();
+        let sharding = self.sharding.clone().ok_or_else(|| {
+            anyhow!(
+                "ckpt schedule loaded without a sharding solution \
+                 (call load_sharding first)"
+            )
+        })?;
+        let ck = self.ckpt.clone().unwrap();
+
+        let compiled = if let Some(rep) = &sharding.analytic {
+            let n = rep.n_devices;
+            CompiledPlan {
+                backend: sharding.backend.clone(),
+                graph_nodes: self.graph.len(),
+                mesh: DeviceMesh {
+                    shape: vec![n],
+                    devices: (0..n).collect(),
+                    axis_alpha: vec![0.0],
+                    axis_beta: vec![f64::INFINITY],
+                },
+                plan: ExecutionPlan {
+                    mesh_shape: vec![n],
+                    decisions: BTreeMap::new(),
+                    comms: Vec::new(),
+                    local_shapes: BTreeMap::new(),
+                    ckpt: None,
+                    iter_time: rep.iter_time,
+                    mem_per_device: rep.mem_per_device,
+                },
+                iter_time: rep.iter_time,
+                pflops: rep.pflops,
+                mem_per_device: rep.mem_per_device,
+                sweep_n: 0,
+            }
+        } else {
+            let cand = sharding
+                .candidates
+                .get(ck.winner)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "ckpt schedule references candidate {} but only \
+                         {} exist",
+                        ck.winner,
+                        sharding.candidates.len()
+                    )
+                })?;
+            let ci = self.ctx_index(&cand.mesh);
+            validate_choice(&self.mesh_ctxs[ci].sg, &cand.choice)?;
+            let sol = Solution {
+                choice: cand.choice.clone(),
+                time: cand.time,
+                mem: cand.mem,
+            };
+            let g = self.graph;
+            let ctx = &mut self.mesh_ctxs[ci];
+            let plan = gen::lower(
+                g,
+                &ctx.sg,
+                &sol,
+                &cand.mesh,
+                &mut ctx.layout,
+                ck.rotor.clone(),
+            );
+            CompiledPlan {
+                backend: sharding.backend.clone(),
+                graph_nodes: g.len(),
+                mesh: cand.mesh.clone(),
+                plan,
+                iter_time: ck.iter_time,
+                pflops: total_flops / ck.iter_time / 1e15,
+                mem_per_device: ck.mem_per_device,
+                sweep_n: cand.sweep_n,
+            }
+        };
+        emit(&mut self.progress, ProgressEvent::StageDone {
+            stage: PlanStage::Lower,
+            ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        Ok(compiled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models::{gpt2, Gpt2Cfg};
+
+    fn fast_opts() -> PlanOpts {
+        PlanOpts {
+            sweep: 3,
+            solve: SolveOpts {
+                beam_width: 16,
+                anneal_iters: 200,
+                lagrange_iters: 6,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn stages_run_lazily_and_once() {
+        let g = gpt2(&Gpt2Cfg::mini());
+        let cluster = SimCluster::fully_connected(2);
+        let dev = DeviceModel::a100_80gb();
+        let starts = std::cell::RefCell::new(Vec::new());
+        {
+            let mut p = Planner::new(&g, &cluster, &dev)
+                .with_opts(fast_opts())
+                .on_progress(|ev| {
+                    if let ProgressEvent::StageStart { stage } = ev {
+                        starts.borrow_mut().push(*stage);
+                    }
+                });
+            // lower() pulls every predecessor exactly once
+            let plan = p.lower().unwrap();
+            assert!(plan.iter_time > 0.0);
+            // a second lower() re-runs nothing upstream
+            let again = p.lower().unwrap();
+            assert_eq!(again.iter_time, plan.iter_time);
+        }
+        let seen = starts.into_inner();
+        let lowers = seen
+            .iter()
+            .filter(|s| **s == PlanStage::Lower)
+            .count();
+        assert_eq!(
+            seen.iter().filter(|s| **s == PlanStage::Sharding).count(),
+            1
+        );
+        assert_eq!(lowers, 2, "lower is the only re-run stage");
+        assert_eq!(seen[0], PlanStage::Detect);
+    }
+
+    #[test]
+    fn exact_backend_plugs_in() {
+        use crate::graph::models::mlp;
+        let g = mlp(64, &[128, 64, 10]);
+        let cluster = SimCluster::fully_connected(2);
+        let dev = DeviceModel::a100_80gb();
+        let mut p = Planner::new(&g, &cluster, &dev)
+            .with_opts(PlanOpts { sweep: 2, ..fast_opts() })
+            .with_backend(ExactSolve);
+        let plan = p.lower().unwrap();
+        assert_eq!(plan.backend, "exact-bnb");
+        assert!(plan.iter_time.is_finite() && plan.iter_time > 0.0);
+    }
+}

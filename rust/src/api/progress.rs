@@ -1,0 +1,63 @@
+//! Per-stage progress events emitted by the [`Planner`](super::Planner).
+//!
+//! The CLI uses these to narrate long solves; benches use them to attribute
+//! wall time to stages without instrumenting the planner internals.
+
+/// The five pipeline stages, in order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanStage {
+    Detect,
+    Meshes,
+    Sharding,
+    Ckpt,
+    Lower,
+}
+
+impl PlanStage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanStage::Detect => "detect",
+            PlanStage::Meshes => "meshes",
+            PlanStage::Sharding => "solve-sharding",
+            PlanStage::Ckpt => "schedule-ckpt",
+            PlanStage::Lower => "lower",
+        }
+    }
+}
+
+/// Events delivered to the callback registered with
+/// [`Planner::on_progress`](super::Planner::on_progress).
+#[derive(Debug, Clone)]
+pub enum ProgressEvent {
+    /// A stage began running (stages run at most once per planner).
+    StageStart { stage: PlanStage },
+    /// A stage finished; `ms` is its wall time.
+    StageDone { stage: PlanStage, ms: f64 },
+    /// The sharding stage started work on one mesh candidate.
+    MeshStart { shape: Vec<usize> },
+    /// One §5.3 sweep point was solved (or found infeasible) on a mesh.
+    SweepPoint {
+        shape: Vec<usize>,
+        n: usize,
+        feasible: bool,
+        /// Solver objective time (seconds) when feasible.
+        time: f64,
+        /// Solver per-device memory (bytes) when feasible.
+        mem: f64,
+    },
+    /// The checkpoint stage ranked one sharding candidate.
+    CandidateRanked {
+        index: usize,
+        iter_time: f64,
+        /// True when this candidate is the best seen so far.
+        best: bool,
+    },
+}
+
+pub(crate) type ProgressFn<'a> = Box<dyn FnMut(&ProgressEvent) + 'a>;
+
+pub(crate) fn emit(p: &mut Option<ProgressFn<'_>>, ev: ProgressEvent) {
+    if let Some(f) = p.as_mut() {
+        f(&ev);
+    }
+}

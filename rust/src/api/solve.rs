@@ -1,0 +1,161 @@
+//! Pluggable solver backends behind the [`Solve`] trait.
+//!
+//! Two families plug into the same [`Planner`](super::Planner) slot:
+//!
+//! * **Assignment backends** pick one strategy per solver-graph node under a
+//!   memory budget — the paper's Eq. (1). [`BeamSolve`] is the production
+//!   beam + Lagrangian + annealing path; [`ExactSolve`] is the
+//!   branch-and-bound reference for small graphs.
+//! * **Analytic backends** ([`BaselineSolve`]) are the manually-designed
+//!   Table-4 baselines (DDP, Megatron-1D, Optimus-2D, 3D-TP). They derive a
+//!   closed-form plan from the profile and detected cluster, bypassing mesh
+//!   enumeration entirely — which is exactly how the paper costs them.
+
+use crate::cluster::ClusterInfo;
+use crate::graph::models::Gpt2Cfg;
+use crate::graph::Graph;
+use crate::profiler::GraphProfile;
+use crate::sim::{baselines, DeviceModel, SimReport};
+use crate::solver::{solve, solve_exact, Solution, SolveOpts, SolverGraph};
+
+/// Everything an analytic backend may consult.
+pub struct SolveCtx<'a> {
+    pub graph: &'a Graph,
+    pub profile: &'a GraphProfile,
+    pub info: &'a ClusterInfo,
+    pub dev: &'a DeviceModel,
+}
+
+/// A solver backend selectable through
+/// [`Planner::with_backend`](super::Planner::with_backend).
+pub trait Solve {
+    /// Backend name recorded in the [`ShardingSolution`]
+    /// (super::ShardingSolution) artifact.
+    fn name(&self) -> String;
+
+    /// Assignment backends: choose one strategy per solver node so that
+    /// per-device memory stays under `budget` bytes. Analytic backends
+    /// return `None`.
+    fn solve(&self, sg: &SolverGraph, budget: f64) -> Option<Solution>;
+
+    /// Analytic backends: derive a whole-plan report without touching the
+    /// solver graph. Assignment backends keep the default `None`.
+    fn analytic(&self, ctx: &SolveCtx<'_>) -> Option<SimReport> {
+        let _ = ctx;
+        None
+    }
+
+    /// True when [`Solve::analytic`] is the operative path.
+    fn is_analytic(&self) -> bool {
+        false
+    }
+}
+
+/// Production path: beam search under a Lagrangian sweep of the memory
+/// constraint, refined by simulated annealing (the default backend).
+#[derive(Debug, Clone, Copy)]
+pub struct BeamSolve(pub SolveOpts);
+
+impl Default for BeamSolve {
+    fn default() -> Self {
+        BeamSolve(SolveOpts::default())
+    }
+}
+
+impl Solve for BeamSolve {
+    fn name(&self) -> String {
+        format!("beam({})+lagrange+anneal", self.0.beam_width)
+    }
+
+    fn solve(&self, sg: &SolverGraph, budget: f64) -> Option<Solution> {
+        solve(sg, budget, self.0)
+    }
+}
+
+/// Exact branch-and-bound reference (exponential worst case — use on small
+/// graphs only, e.g. for solver-quality ablations).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExactSolve;
+
+impl Solve for ExactSolve {
+    fn name(&self) -> String {
+        "exact-bnb".into()
+    }
+
+    fn solve(&self, sg: &SolverGraph, budget: f64) -> Option<Solution> {
+        solve_exact(sg, budget)
+    }
+}
+
+/// Which Table-4 baseline an analytic backend models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    Ddp,
+    Megatron1d,
+    Optimus2d,
+    Tp3d,
+}
+
+/// Analytic baseline backend. Carries the model config because the
+/// baseline cost formulas (activation all-reduce sizes, embedding split)
+/// are defined on the GPT-2 family, not on arbitrary graphs.
+#[derive(Debug, Clone, Copy)]
+pub struct BaselineSolve {
+    pub kind: Baseline,
+    pub cfg: Gpt2Cfg,
+}
+
+impl BaselineSolve {
+    pub fn new(kind: Baseline, cfg: Gpt2Cfg) -> BaselineSolve {
+        BaselineSolve { kind, cfg }
+    }
+
+    /// All four baselines, in the Table-4 column order.
+    pub fn all(cfg: Gpt2Cfg) -> Vec<BaselineSolve> {
+        [Baseline::Ddp, Baseline::Megatron1d, Baseline::Optimus2d,
+         Baseline::Tp3d]
+            .into_iter()
+            .map(|kind| BaselineSolve { kind, cfg })
+            .collect()
+    }
+}
+
+impl Solve for BaselineSolve {
+    fn name(&self) -> String {
+        match self.kind {
+            Baseline::Ddp => "DDP",
+            Baseline::Megatron1d => "Megatron-1D",
+            Baseline::Optimus2d => "Optimus-2D",
+            Baseline::Tp3d => "3D-TP",
+        }
+        .into()
+    }
+
+    fn solve(&self, _sg: &SolverGraph, _budget: f64) -> Option<Solution> {
+        None
+    }
+
+    fn analytic(&self, ctx: &SolveCtx<'_>) -> Option<SimReport> {
+        let r = match self.kind {
+            Baseline::Ddp => {
+                baselines::ddp(&self.cfg, ctx.graph, ctx.profile, ctx.info,
+                               ctx.dev)
+            }
+            Baseline::Megatron1d => baselines::megatron_1d(
+                &self.cfg, ctx.graph, ctx.profile, ctx.info, ctx.dev,
+            ),
+            Baseline::Optimus2d => baselines::optimus_2d(
+                &self.cfg, ctx.graph, ctx.profile, ctx.info, ctx.dev,
+            ),
+            Baseline::Tp3d => {
+                baselines::tp_3d(&self.cfg, ctx.graph, ctx.profile,
+                                 ctx.info, ctx.dev)
+            }
+        };
+        Some(r)
+    }
+
+    fn is_analytic(&self) -> bool {
+        true
+    }
+}

@@ -91,6 +91,31 @@ impl SimCluster {
         SimCluster::uniform("single", 1, 0.0, f64::INFINITY)
     }
 
+    /// The first `n` devices of the Fig-5 box — the paper's sub-cluster
+    /// configurations for experiments alpha (1), beta (2), gamma (4),
+    /// delta (8).
+    pub fn fig5_prefix(n: usize) -> SimCluster {
+        assert!(
+            (1..=8).contains(&n),
+            "fig5 has 8 devices, asked for {n}"
+        );
+        if n == 1 {
+            return SimCluster::single();
+        }
+        let mut c = SimCluster::partially_connected_8gpu();
+        c.name = format!("fig5-prefix-{n}");
+        c.n = n;
+        c.latency.truncate(n);
+        c.bandwidth.truncate(n);
+        for row in c.latency.iter_mut() {
+            row.truncate(n);
+        }
+        for row in c.bandwidth.iter_mut() {
+            row.truncate(n);
+        }
+        c
+    }
+
     /// Simulated p2p transfer time for `bytes` between `src` and `dst`,
     /// with multiplicative noise — what a real ping-pong benchmark returns.
     pub fn measure(&self, src: usize, dst: usize, bytes: usize,
@@ -161,6 +186,21 @@ mod tests {
             c.bottleneck_bandwidth(&(0..8).collect::<Vec<_>>()),
             10.0 * GB
         );
+    }
+
+    #[test]
+    fn fig5_prefix_matches_full_box() {
+        let full = SimCluster::partially_connected_8gpu();
+        let c4 = SimCluster::fig5_prefix(4);
+        assert_eq!(c4.n, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(c4.bandwidth[i][j], full.bandwidth[i][j]);
+                assert_eq!(c4.latency[i][j], full.latency[i][j]);
+            }
+        }
+        assert_eq!(SimCluster::fig5_prefix(1).n, 1);
+        assert_eq!(SimCluster::fig5_prefix(8).n, 8);
     }
 
     #[test]

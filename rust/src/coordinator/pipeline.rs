@@ -1,48 +1,20 @@
-//! End-to-end planning pipeline — the paper's `autoparallelize(model)`
-//! one-liner (§3): cluster detection → mesh candidates → intra-op ILP
-//! under the §5.3 budget sweep [(1+α)^n] → communication-aware rotor →
-//! generator lowering.  Returns the fastest feasible `FullPlan`.
+//! Compatibility wrappers for the paper's `autoparallelize(model)`
+//! one-liner (§3). The pipeline itself now lives in [`crate::api`] as the
+//! staged `Planner` (detect → meshes → solve_sharding → schedule_ckpt →
+//! lower, with serializable artifacts and pluggable solver backends);
+//! these functions preserve the original entrypoints and result shape.
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
-use crate::ckpt::{build_stages, common_nodes, linearize, NodeTimes,
-                  RotorSolver};
-use crate::cluster::{detect, ClusterInfo, DeviceMesh, SimCluster};
-use crate::gen::{lower, ExecutionPlan};
-use crate::graph::op::Op;
+use crate::api::{PlanOpts, Planner};
+use crate::cluster::{ClusterInfo, DeviceMesh, SimCluster};
+use crate::gen::ExecutionPlan;
+use crate::profiler::GraphProfile;
 use crate::graph::Graph;
-use crate::layout::LayoutManager;
-use crate::profiler::{profile, GraphProfile};
 use crate::sim::DeviceModel;
-use crate::solver::{solve, Solution, SolveOpts, SolverGraph};
-use crate::util::logger::Phase;
 
-#[derive(Debug, Clone)]
-pub struct PipelineOpts {
-    /// Per-device memory budget in bytes (defaults to the device model).
-    pub budget: Option<f64>,
-    /// §5.3 expansion coefficient α.
-    pub alpha: f64,
-    /// Number of sweep points n ∈ [0, sweep).
-    pub sweep: usize,
-    pub solve: SolveOpts,
-    /// Restrict mesh candidates (None = all factorizations).
-    pub mesh_shapes: Option<Vec<Vec<usize>>>,
-    pub seed: u64,
-}
-
-impl Default for PipelineOpts {
-    fn default() -> Self {
-        PipelineOpts {
-            budget: None,
-            alpha: 0.3,
-            sweep: 10,
-            solve: SolveOpts::default(),
-            mesh_shapes: None,
-            seed: 42,
-        }
-    }
-}
+/// Legacy name for the planner options.
+pub type PipelineOpts = PlanOpts;
 
 #[derive(Debug, Clone)]
 pub struct FullPlan {
@@ -58,46 +30,6 @@ pub struct FullPlan {
     pub profile: GraphProfile,
 }
 
-/// Split a solver solution into per-node times + memory scales for the
-/// checkpoint stage (fwd:bwd ≈ 1:2 for GEMM-dominated training).
-fn node_times(
-    g: &Graph,
-    sg: &SolverGraph,
-    sol: &Solution,
-    mesh: &DeviceMesh,
-) -> NodeTimes {
-    let mut t = NodeTimes {
-        fwd: vec![0.0; g.len()],
-        bwd: vec![0.0; g.len()],
-        fwd_comm: vec![0.0; g.len()],
-        bwd_comm: vec![0.0; g.len()],
-        mem_scale: vec![1.0; g.len()],
-    };
-    for (i, &anchor) in sg.anchors.iter().enumerate() {
-        let s = &sg.sets[i].strategies[sol.choice[i]];
-        t.fwd[anchor] = s.compute_time / 3.0;
-        t.bwd[anchor] = s.compute_time * 2.0 / 3.0;
-        // partial-sum comm sits on the critical path of both sweeps;
-        // gradient sync is excluded here — overlap is applied at the
-        // plan level (the solver itself stays overlap-blind, §5.1)
-        t.fwd_comm[anchor] = s.comm_time / 3.0;
-        t.bwd_comm[anchor] = s.comm_time * 2.0 / 3.0;
-        t.mem_scale[anchor] =
-            s.out_spec.sharding_factor(mesh).max(1) as f64;
-    }
-    t
-}
-
-/// Parameter-memory share of a solution (placeholder anchors).
-fn param_mem(g: &Graph, sg: &SolverGraph, sol: &Solution) -> f64 {
-    sg.anchors
-        .iter()
-        .enumerate()
-        .filter(|(_, &a)| matches!(g.node(a).op, Op::Placeholder(_)))
-        .map(|(i, _)| sg.sets[i].strategies[sol.choice[i]].mem_bytes)
-        .sum()
-}
-
 /// Run the full 2-stage pipeline against a (simulated) cluster.
 pub fn autoparallelize(
     g: &Graph,
@@ -105,147 +37,46 @@ pub fn autoparallelize(
     dev: &DeviceModel,
     opts: &PipelineOpts,
 ) -> Result<FullPlan> {
-    let info = {
-        let _p = Phase::new("cluster-detect");
-        detect(cluster, opts.seed)
-    };
-    autoparallelize_with_info(g, &info, dev, opts)
+    let mut planner =
+        Planner::new(g, cluster, dev).with_opts(opts.clone());
+    let compiled = planner.lower()?;
+    Ok(finish(compiled, planner.take_profile()))
 }
 
+/// Same, starting from an already-detected topology.
 pub fn autoparallelize_with_info(
     g: &Graph,
     info: &ClusterInfo,
     dev: &DeviceModel,
     opts: &PipelineOpts,
 ) -> Result<FullPlan> {
-    let prof = profile(g);
-    let budget = opts.budget.unwrap_or(dev.memory * 0.9);
-    let shapes = opts
-        .mesh_shapes
-        .clone()
-        .unwrap_or_else(|| DeviceMesh::candidate_shapes(info.n));
+    let mut planner =
+        Planner::with_info(g, info.clone(), dev).with_opts(opts.clone());
+    let compiled = planner.lower()?;
+    Ok(finish(compiled, planner.take_profile()))
+}
 
-    let groups = linearize(g, &common_nodes(g));
-    let mut best: Option<FullPlan> = None;
-
-    for shape in shapes {
-        let mesh = match DeviceMesh::build(info, &shape) {
-            Some(m) => m,
-            None => continue,
-        };
-        let _p = Phase::new(&format!("mesh {shape:?}"));
-        let mut layout = LayoutManager::new(mesh.clone());
-        let tb = std::time::Instant::now();
-        let sg = SolverGraph::build(g, &mesh, dev, &mut layout);
-        crate::debug!(
-            "sgraph build {:?}: {:.0} ms ({} nodes, {} edges, cache {})",
-            shape,
-            tb.elapsed().as_secs_f64() * 1e3,
-            sg.len(),
-            sg.edges.len(),
-            layout.cache_len()
-        );
-
-        for n in 0..opts.sweep {
-            let intra_budget =
-                budget * (1.0 + opts.alpha).powi(n as i32);
-            let ts = std::time::Instant::now();
-            let sol = match solve(&sg, intra_budget, opts.solve) {
-                Some(s) => s,
-                None => continue,
-            };
-            crate::debug!(
-                "solve n={n}: {:.0} ms",
-                ts.elapsed().as_secs_f64() * 1e3
-            );
-            // stage 2: activation checkpointing under what's left after
-            // model data
-            let times = node_times(g, &sg, &sol, &mesh);
-            let stages = build_stages(g, &groups, dev, Some(&times));
-            let rotor = RotorSolver::new(stages);
-            let act_budget = budget - param_mem(g, &sg, &sol);
-            if act_budget <= 0.0 {
-                continue;
-            }
-            let Some(ck) = rotor.solve(act_budget) else {
-                continue;
-            };
-            // rotor covers the grouped (differentiable) nodes; add the
-            // resharding costs the stages don't see
-            let edge_comm: f64 = sg
-                .edges
-                .iter()
-                .map(|e| e.cost[sol.choice[e.from]][sol.choice[e.to]])
-                .sum();
-            // the runtime overlaps gradient-sync collectives with the
-            // backward sweep (§7: the low-bandwidth DP all-reduce hides
-            // behind backward compute)
-            let grad_comm: f64 = sg
-                .anchors
-                .iter()
-                .enumerate()
-                .map(|(i, _)| {
-                    sg.sets[i].strategies[sol.choice[i]].grad_comm
-                })
-                .sum();
-            let bwd_compute: f64 = sg
-                .anchors
-                .iter()
-                .enumerate()
-                .map(|(i, _)| {
-                    sg.sets[i].strategies[sol.choice[i]].compute_time
-                        * 2.0 / 3.0
-                })
-                .sum();
-            let exposed_grad =
-                (grad_comm - 0.7 * bwd_compute).max(0.0);
-            let iter_time = ck.time + edge_comm + exposed_grad;
-            crate::debug!(
-                "mesh {:?} n={n}: sol.time {:.1}ms (mem {:.1}GB) ck {:.1}ms edge {:.1}ms grad {:.1}ms exposed {:.1}ms",
-                mesh.shape,
-                sol.time * 1e3,
-                sol.mem / 1e9,
-                ck.time * 1e3,
-                edge_comm * 1e3,
-                grad_comm * 1e3,
-                exposed_grad * 1e3
-            );
-            let mem = param_mem(g, &sg, &sol)
-                + rotor.no_checkpoint_mem().min(act_budget);
-            let better = best
-                .as_ref()
-                .map(|b| iter_time < b.iter_time)
-                .unwrap_or(true);
-            if better {
-                let plan = lower(
-                    g, &sg, &sol, &mesh, &mut layout, Some(ck),
-                );
-                best = Some(FullPlan {
-                    mesh: mesh.clone(),
-                    plan,
-                    iter_time,
-                    pflops: prof.total_flops() / iter_time / 1e15,
-                    mem_per_device: mem,
-                    sweep_n: n,
-                    profile: prof.clone(),
-                });
-            }
-            // if even the unconstrained sweep point fit without
-            // checkpointing, larger budgets change nothing
-            if sol.mem <= budget {
-                break;
-            }
-        }
+fn finish(
+    compiled: crate::api::CompiledPlan,
+    profile: GraphProfile,
+) -> FullPlan {
+    FullPlan {
+        mesh: compiled.mesh,
+        plan: compiled.plan,
+        iter_time: compiled.iter_time,
+        pflops: compiled.pflops,
+        mem_per_device: compiled.mem_per_device,
+        sweep_n: compiled.sweep_n,
+        profile,
     }
-    best.ok_or_else(|| {
-        anyhow!("no feasible plan for any mesh under the memory budget")
-    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::models::{gpt2, Gpt2Cfg};
+    use crate::profiler::profile;
+    use crate::solver::SolveOpts;
 
     fn fast_opts() -> PipelineOpts {
         PipelineOpts {

@@ -2,6 +2,7 @@
 //! Parallel Training For Foundation Models" (Colossal-Auto), as a
 //! rust coordinator + JAX/Pallas AOT stack.
 
+pub mod api;
 pub mod ckpt;
 pub mod coordinator;
 pub mod cluster;

@@ -1,28 +1,40 @@
-//! `automap` CLI — the Layer-3 leader entrypoint.
+//! `automap` CLI — the Layer-3 leader entrypoint, built on the staged
+//! `api::Planner` compiler (detect → meshes → solve_sharding →
+//! schedule_ckpt → lower; see rust/src/api/README.md).
 //!
 //! Subcommands:
 //!   plan      --model gpt2-mini|alpha..delta --cluster fig5|nvlink<N>|single
-//!             [--budget-gb G] [--fast] [--codegen] : run the full 2-stage
-//!             pipeline and print the plan (+ generated code).
-//!   cluster   --cluster fig5 : probe the simulated cluster and print the
-//!             detected topology and candidate meshes.
+//!             [--budget-gb G] [--fast] [--codegen] [--progress]
+//!             [--backend beam|exact|ddp|megatron-1d|optimus-2d|3d-tp]
+//!             [--json] [--save-plan p.json] [--load-plan p.json] :
+//!             run the staged pipeline and print the plan. --save-plan
+//!             caches the serializable CompiledPlan artifact; --load-plan
+//!             replays one, skipping every solve stage; --json emits the
+//!             artifact on stdout instead of the human summary.
+//!   cluster   --cluster fig5 [--json] : probe the simulated cluster and
+//!             print the ClusterReport + MeshCandidates artifacts.
 //!   profile   --model ... : symbolic profile (FLOPs, memory buckets).
 //!   train     [--devices N] [--steps K] : real data-parallel training on
 //!             logical PJRT devices via the AOT artifacts.
 //!   tp-check  [--tp 2|4] : tensor-parallel numerics vs the serial block.
-//!   table4    [--fast] : weak-scaling comparison (ours vs baselines).
+//!   table4    [--fast] : weak-scaling comparison — baselines run through
+//!             the same pluggable-backend slot as "ours".
 
 use anyhow::{anyhow, Result};
 
-use automap::cluster::{detect, DeviceMesh, SimCluster};
+use automap::api::{Artifact, Baseline, BaselineSolve, ClusterReport,
+                   CompiledPlan, ExactSolve, MeshCandidates, Planner,
+                   ProgressEvent};
+use automap::cluster::{detect, SimCluster};
 use automap::coordinator::tp::{serial_block_forward, tp_block_forward,
                                BlockParams};
 use automap::coordinator::trainer::train_dp;
-use automap::coordinator::{autoparallelize, PipelineOpts};
+use automap::coordinator::PipelineOpts;
 use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::graph::Graph;
 use automap::profiler::profile;
 use automap::runtime::{HostTensor, Runtime};
-use automap::sim::{baselines, DeviceModel};
+use automap::sim::DeviceModel;
 use automap::solver::SolveOpts;
 use automap::util::cli::Args;
 use automap::util::rng::Rng;
@@ -50,25 +62,6 @@ fn cluster_for(name: &str) -> SimCluster {
     }
 }
 
-/// Take the first `n` devices of the Fig-5 box (the paper's sub-cluster
-/// configurations for experiments alpha/beta/gamma).
-pub fn fig5_prefix(n: usize) -> SimCluster {
-    if n == 1 {
-        return SimCluster::single();
-    }
-    let mut c = SimCluster::partially_connected_8gpu();
-    c.n = n;
-    c.latency.truncate(n);
-    c.bandwidth.truncate(n);
-    for row in c.latency.iter_mut() {
-        row.truncate(n);
-    }
-    for row in c.bandwidth.iter_mut() {
-        row.truncate(n);
-    }
-    c
-}
-
 fn opts_from(args: &Args) -> PipelineOpts {
     let mut opts = PipelineOpts::default();
     if let Some(gb) = args.get("budget-gb") {
@@ -86,14 +79,13 @@ fn opts_from(args: &Args) -> PipelineOpts {
     opts
 }
 
-fn cmd_plan(args: &Args) -> Result<()> {
-    let cfg = model_for(args.get_or("model", "gpt2-mini"));
-    let cluster = cluster_for(args.get_or("cluster", "fig5"));
-    let g = gpt2(&cfg);
-    let dev = DeviceModel::a100_80gb();
-    let opts = opts_from(args);
-    let plan = autoparallelize(&g, &cluster, &dev, &opts)?;
+fn print_plan(g: &Graph, plan: &CompiledPlan, args: &Args) -> Result<()> {
+    if args.has_flag("json") {
+        println!("{}", plan.to_json());
+        return Ok(());
+    }
     println!("== plan ==");
+    println!("backend        : {}", plan.backend);
     println!("mesh shape     : {:?}", plan.mesh.shape);
     println!("device order   : {:?}", plan.mesh.devices);
     println!("iter time      : {:.3} ms", plan.iter_time * 1e3);
@@ -112,14 +104,94 @@ fn cmd_plan(args: &Args) -> Result<()> {
         );
     }
     if args.has_flag("codegen") {
-        println!("\n== generated code ==\n{}", plan.plan.codegen(&g));
+        println!("\n== generated code ==\n{}", plan.plan.codegen(g));
     }
     Ok(())
 }
 
+fn cmd_plan(args: &Args) -> Result<()> {
+    let cfg = model_for(args.get_or("model", "gpt2-mini"));
+    let g = gpt2(&cfg);
+
+    // replay path: the artifact already holds the full lowered plan
+    if let Some(path) = args.get("load-plan") {
+        let plan = CompiledPlan::load(path)?;
+        if plan.graph_nodes != g.len() {
+            return Err(anyhow!(
+                "{path} was compiled for a {}-node graph but --model \
+                 {} builds {} nodes — pass the model the plan was \
+                 saved with",
+                plan.graph_nodes,
+                args.get_or("model", "gpt2-mini"),
+                g.len()
+            ));
+        }
+        eprintln!("loaded plan from {path} (solve stages skipped)");
+        return print_plan(&g, &plan, args);
+    }
+
+    let cluster = cluster_for(args.get_or("cluster", "fig5"));
+    let dev = DeviceModel::a100_80gb();
+    let mut planner =
+        Planner::new(&g, &cluster, &dev).with_opts(opts_from(args));
+    planner = match args.get_or("backend", "beam") {
+        "beam" => planner,
+        "exact" => planner.with_backend(ExactSolve),
+        "ddp" => planner
+            .with_backend(BaselineSolve::new(Baseline::Ddp, cfg)),
+        "megatron-1d" => planner
+            .with_backend(BaselineSolve::new(Baseline::Megatron1d, cfg)),
+        "optimus-2d" => planner
+            .with_backend(BaselineSolve::new(Baseline::Optimus2d, cfg)),
+        "3d-tp" => planner
+            .with_backend(BaselineSolve::new(Baseline::Tp3d, cfg)),
+        other => {
+            return Err(anyhow!(
+                "unknown backend {other} \
+                 (beam|exact|ddp|megatron-1d|optimus-2d|3d-tp)"
+            ))
+        }
+    };
+    if args.has_flag("progress") {
+        planner = planner.on_progress(|ev| match ev {
+            ProgressEvent::StageStart { stage } => {
+                eprintln!("[stage] {} ...", stage.name());
+            }
+            ProgressEvent::StageDone { stage, ms } => {
+                eprintln!("[stage] {} done ({ms:.0} ms)", stage.name());
+            }
+            ProgressEvent::SweepPoint { shape, n, feasible, time, .. } => {
+                if *feasible {
+                    eprintln!(
+                        "  mesh {shape:?} n={n}: {:.2} ms",
+                        time * 1e3
+                    );
+                } else {
+                    eprintln!("  mesh {shape:?} n={n}: infeasible");
+                }
+            }
+            _ => {}
+        });
+    }
+    let plan = planner.lower()?;
+    if let Some(path) = args.get("save-plan") {
+        plan.save(path)?;
+        eprintln!("plan saved to {path}");
+    }
+    print_plan(&g, &plan, args)
+}
+
 fn cmd_cluster(args: &Args) -> Result<()> {
     let cluster = cluster_for(args.get_or("cluster", "fig5"));
-    let info = detect(&cluster, args.get_usize("seed", 42) as u64);
+    let report =
+        ClusterReport::probe(&cluster, args.get_usize("seed", 42) as u64);
+    let candidates = MeshCandidates::enumerate(&report, None);
+    if args.has_flag("json") {
+        println!("{}", report.to_json());
+        println!("{}", candidates.to_json());
+        return Ok(());
+    }
+    let info = &report.info;
     println!("devices: {}", info.n);
     println!(
         "bandwidth tiers (GB/s): {:?}",
@@ -131,18 +203,16 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     for t in 0..info.tiers.len() {
         println!("  tier {t} groups: {:?}", info.groups_at_tier(t));
     }
-    for shape in DeviceMesh::candidate_shapes(info.n) {
-        if let Some(mesh) = DeviceMesh::build(&info, &shape) {
-            println!(
-                "mesh {:?}: devices {:?}, axis bw {:?} GB/s",
-                mesh.shape,
-                mesh.devices,
-                mesh.axis_beta
-                    .iter()
-                    .map(|b| (b / 1e9).round())
-                    .collect::<Vec<_>>()
-            );
-        }
+    for mesh in &candidates.meshes {
+        println!(
+            "mesh {:?}: devices {:?}, axis bw {:?} GB/s",
+            mesh.shape,
+            mesh.devices,
+            mesh.axis_beta
+                .iter()
+                .map(|b| (b / 1e9).round())
+                .collect::<Vec<_>>()
+        );
     }
     Ok(())
 }
@@ -236,21 +306,26 @@ fn cmd_table4(args: &Args) -> Result<()> {
         let cfg = Gpt2Cfg::paper(exp);
         let g = gpt2(&cfg);
         let prof = profile(&g);
-        let cluster = fig5_prefix(n);
-        let info = detect(&cluster, 1);
+        let cluster = SimCluster::fig5_prefix(n);
         // the paper reports PFLOPS with the 6·N·T convention on the
         // Table-3 (untied-head) parameter count
         let metric_flops = 6.0
             * cfg.n_params_table3() as f64
             * (cfg.batch * cfg.seq) as f64;
         let scale = metric_flops / prof.total_flops();
-        let fmt = |r: &baselines::SimReport| {
-            if r.feasible {
-                format!("{:.3}", r.pflops * scale)
-            } else {
-                "-".into()
-            }
-        };
+        // the four manual baselines run through the same pluggable
+        // backend slot as the real solver; probe and profile once per row
+        let info = detect(&cluster, 1);
+        let mut baseline_cols = Vec::new();
+        for backend in BaselineSolve::all(cfg) {
+            let mut p = Planner::with_info(&g, info.clone(), &dev)
+                .with_profile(prof.clone())
+                .with_backend(backend);
+            baseline_cols.push(match p.lower() {
+                Ok(plan) => format!("{:.3}", plan.pflops * scale),
+                Err(_) => "-".into(),
+            });
+        }
         let mut opts = PipelineOpts::default();
         if fast {
             opts.sweep = 2;
@@ -261,15 +336,17 @@ fn cmd_table4(args: &Args) -> Result<()> {
                 ..Default::default()
             };
         }
-        let ours = autoparallelize(&g, &cluster, &dev, &opts)
+        let ours = Planner::new(&g, &cluster, &dev)
+            .with_opts(opts)
+            .lower()
             .map(|p| format!("{:.3}", p.pflops * scale))
             .unwrap_or_else(|_| "-".into());
         println!(
             "| {exp} | {n} | {} | {} | {} | {} | {} |",
-            fmt(&baselines::ddp(&cfg, &g, &prof, &info, &dev)),
-            fmt(&baselines::megatron_1d(&cfg, &g, &prof, &info, &dev)),
-            fmt(&baselines::optimus_2d(&cfg, &g, &prof, &info, &dev)),
-            fmt(&baselines::tp_3d(&cfg, &g, &prof, &info, &dev)),
+            baseline_cols[0],
+            baseline_cols[1],
+            baseline_cols[2],
+            baseline_cols[3],
             ours,
         );
     }

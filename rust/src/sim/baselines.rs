@@ -263,25 +263,7 @@ mod tests {
         let cfg = Gpt2Cfg::paper(exp);
         let g = gpt2(&cfg);
         let prof = profile(&g);
-        let cluster = match n {
-            1 => SimCluster::single(),
-            _ => {
-                let full = SimCluster::partially_connected_8gpu();
-                // take the first n devices of the fig5 box
-                let mut c = full.clone();
-                c.n = n;
-                c.latency.truncate(n);
-                c.bandwidth.truncate(n);
-                for row in c.latency.iter_mut() {
-                    row.truncate(n);
-                }
-                for row in c.bandwidth.iter_mut() {
-                    row.truncate(n);
-                }
-                c
-            }
-        };
-        (cfg, g, prof, detect(&cluster, 1))
+        (cfg, g, prof, detect(&SimCluster::fig5_prefix(n), 1))
     }
 
     #[test]

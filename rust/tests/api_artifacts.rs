@@ -1,0 +1,249 @@
+//! Artifact round-trip + compatibility tests for the staged `Planner`:
+//! serialize → deserialize → re-lower each stage artifact and assert the
+//! identical plan comes back, and check the legacy `autoparallelize`
+//! wrapper agrees with the staged API bit-for-bit.
+
+use automap::api::{Artifact, Baseline, BaselineSolve, CkptSchedule,
+                   ClusterReport, CompiledPlan, MeshCandidates, Planner,
+                   ShardingSolution};
+use automap::cluster::SimCluster;
+use automap::coordinator::{autoparallelize, PipelineOpts};
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::profiler::profile;
+use automap::sim::{baselines, DeviceModel};
+use automap::solver::SolveOpts;
+use automap::util::json::Json;
+
+fn fast() -> PipelineOpts {
+    PipelineOpts {
+        sweep: 2,
+        solve: SolveOpts {
+            beam_width: 12,
+            anneal_iters: 150,
+            lagrange_iters: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// JSON text -> value -> text must be stable (the artifact cache diffs
+/// files textually).
+fn roundtrip_text(j: &Json) -> Json {
+    let text = j.to_string();
+    Json::parse(&text).expect("artifact JSON must reparse")
+}
+
+#[test]
+fn cluster_report_roundtrips_through_text() {
+    let cluster = SimCluster::partially_connected_8gpu();
+    let report = ClusterReport::probe(&cluster, 42);
+    let back =
+        ClusterReport::from_json(&roundtrip_text(&report.to_json()))
+            .unwrap();
+    assert_eq!(back.info.n, report.info.n);
+    assert_eq!(back.info.alpha, report.info.alpha);
+    assert_eq!(back.info.beta, report.info.beta);
+    assert_eq!(back.info.tiers, report.info.tiers);
+    assert_eq!(back.info.tier_of, report.info.tier_of);
+}
+
+#[test]
+fn mesh_candidates_roundtrip_through_text() {
+    let report =
+        ClusterReport::probe(&SimCluster::partially_connected_8gpu(), 7);
+    let mc = MeshCandidates::enumerate(&report, None);
+    let back =
+        MeshCandidates::from_json(&roundtrip_text(&mc.to_json())).unwrap();
+    assert_eq!(back.shapes, mc.shapes);
+    assert_eq!(back.meshes.len(), mc.meshes.len());
+    for (a, b) in back.meshes.iter().zip(&mc.meshes) {
+        assert_eq!(a.shape, b.shape);
+        assert_eq!(a.devices, b.devices);
+        assert_eq!(a.axis_alpha, b.axis_alpha);
+        assert_eq!(a.axis_beta, b.axis_beta);
+    }
+}
+
+#[test]
+fn sharding_solution_roundtrip_relowers_identically() {
+    let g = gpt2(&Gpt2Cfg::mini());
+    let cluster = SimCluster::fully_connected(4);
+    let dev = DeviceModel::a100_80gb();
+
+    // reference: one straight run through all stages
+    let mut p = Planner::new(&g, &cluster, &dev).with_opts(fast());
+    let sharding_json = p.solve_sharding().unwrap().to_json();
+    let reference = p.lower().unwrap();
+
+    // resume: deserialize the stage-3 artifact into a fresh planner and
+    // re-run only ckpt + lower
+    let sharding =
+        ShardingSolution::from_json(&roundtrip_text(&sharding_json))
+            .unwrap();
+    assert!(!sharding.candidates.is_empty());
+    let mut p2 = Planner::new(&g, &cluster, &dev)
+        .with_opts(fast())
+        .load_sharding(sharding);
+    let replay = p2.lower().unwrap();
+
+    assert_eq!(replay.iter_time, reference.iter_time);
+    assert_eq!(replay.mem_per_device, reference.mem_per_device);
+    assert_eq!(replay.sweep_n, reference.sweep_n);
+    assert_eq!(replay.mesh.shape, reference.mesh.shape);
+    assert_eq!(replay.plan.comms.len(), reference.plan.comms.len());
+}
+
+#[test]
+fn ckpt_schedule_roundtrip_relowers_identically() {
+    let g = gpt2(&Gpt2Cfg::mini());
+    let cluster = SimCluster::fully_connected(4);
+    let dev = DeviceModel::a100_80gb();
+
+    let mut p = Planner::new(&g, &cluster, &dev).with_opts(fast());
+    let sharding_json = p.solve_sharding().unwrap().to_json();
+    let ckpt_json = p.schedule_ckpt().unwrap().to_json();
+    let reference = p.lower().unwrap();
+
+    let mut p2 = Planner::new(&g, &cluster, &dev)
+        .with_opts(fast())
+        .load_sharding(
+            ShardingSolution::from_json(&roundtrip_text(&sharding_json))
+                .unwrap(),
+        )
+        .load_ckpt(
+            CkptSchedule::from_json(&roundtrip_text(&ckpt_json)).unwrap(),
+        );
+    let replay = p2.lower().unwrap();
+    assert_eq!(replay.iter_time, reference.iter_time);
+    assert_eq!(replay.mem_per_device, reference.mem_per_device);
+    assert_eq!(
+        replay.plan.ckpt.as_ref().unwrap().blocks.len(),
+        reference.plan.ckpt.as_ref().unwrap().blocks.len()
+    );
+}
+
+#[test]
+fn compiled_plan_roundtrips_every_reported_number() {
+    let g = gpt2(&Gpt2Cfg::mini());
+    let cluster = SimCluster::partially_connected_8gpu();
+    let dev = DeviceModel::a100_80gb();
+    let plan = Planner::new(&g, &cluster, &dev)
+        .with_opts(fast())
+        .lower()
+        .unwrap();
+    let back =
+        CompiledPlan::from_json(&roundtrip_text(&plan.to_json())).unwrap();
+
+    // the save -> load acceptance: same iter_time, pflops, comm inserts
+    assert_eq!(back.iter_time, plan.iter_time);
+    assert_eq!(back.pflops, plan.pflops);
+    assert_eq!(back.plan.comms.len(), plan.plan.comms.len());
+    assert_eq!(back.mem_per_device, plan.mem_per_device);
+    assert_eq!(back.sweep_n, plan.sweep_n);
+    assert_eq!(back.mesh.shape, plan.mesh.shape);
+    assert_eq!(back.mesh.devices, plan.mesh.devices);
+    assert_eq!(back.backend, plan.backend);
+    assert_eq!(back.graph_nodes, g.len());
+
+    // decisions + specs survive (codegen must reproduce too)
+    assert_eq!(back.plan.decisions.len(), plan.plan.decisions.len());
+    for (id, d) in &plan.plan.decisions {
+        let bd = &back.plan.decisions[id];
+        assert_eq!(bd.strategy, d.strategy);
+        assert_eq!(bd.out_spec, d.out_spec);
+        assert_eq!(bd.mem_bytes, d.mem_bytes);
+    }
+    for (c, bc) in plan.plan.comms.iter().zip(&back.plan.comms) {
+        assert_eq!(c.after, bc.after);
+        assert_eq!(c.reason, bc.reason);
+        assert_eq!(c.time, bc.time);
+        assert_eq!(c.describe, bc.describe);
+    }
+    assert_eq!(back.plan.local_shapes, plan.plan.local_shapes);
+    assert_eq!(back.plan.codegen(&g), plan.plan.codegen(&g));
+}
+
+#[test]
+fn compiled_plan_saves_and_loads_from_disk() {
+    let g = gpt2(&Gpt2Cfg::mini());
+    let cluster = SimCluster::fully_connected(2);
+    let dev = DeviceModel::a100_80gb();
+    let plan = Planner::new(&g, &cluster, &dev)
+        .with_opts(fast())
+        .lower()
+        .unwrap();
+    let path = std::env::temp_dir().join("automap_plan_test.json");
+    plan.save(&path).unwrap();
+    let back = CompiledPlan::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back.iter_time, plan.iter_time);
+    assert_eq!(back.pflops, plan.pflops);
+    assert_eq!(back.plan.comms.len(), plan.plan.comms.len());
+}
+
+#[test]
+fn legacy_wrapper_matches_staged_planner_on_fig5() {
+    // the acceptance check: gpt2-mini on fig5, wrapper vs staged API
+    let g = gpt2(&Gpt2Cfg::mini());
+    let cluster = SimCluster::partially_connected_8gpu();
+    let dev = DeviceModel::a100_80gb();
+
+    let legacy = autoparallelize(&g, &cluster, &dev, &fast()).unwrap();
+    let staged = Planner::new(&g, &cluster, &dev)
+        .with_opts(fast())
+        .lower()
+        .unwrap();
+
+    assert_eq!(legacy.iter_time, staged.iter_time);
+    assert_eq!(legacy.pflops, staged.pflops);
+    assert_eq!(legacy.mem_per_device, staged.mem_per_device);
+    assert_eq!(legacy.sweep_n, staged.sweep_n);
+    assert_eq!(legacy.mesh.shape, staged.mesh.shape);
+    assert_eq!(legacy.mesh.devices, staged.mesh.devices);
+    assert_eq!(legacy.plan.comms.len(), staged.plan.comms.len());
+    for (id, d) in &legacy.plan.decisions {
+        assert_eq!(staged.plan.decisions[id].strategy, d.strategy);
+        assert_eq!(staged.plan.decisions[id].out_spec, d.out_spec);
+    }
+}
+
+#[test]
+fn baseline_backends_reproduce_the_sim_reports() {
+    // Planner with a baseline backend == the raw Table-4 simulator
+    let cfg = Gpt2Cfg::mini();
+    let g = gpt2(&cfg);
+    let prof = profile(&g);
+    let cluster = SimCluster::fig5_prefix(4);
+    let dev = DeviceModel::a100_80gb();
+    let info = automap::cluster::detect(&cluster, 1);
+
+    let direct = baselines::megatron_1d(&cfg, &g, &prof, &info, &dev);
+    assert!(direct.feasible);
+    let via_planner = Planner::new(&g, &cluster, &dev)
+        .with_opts(PipelineOpts { seed: 1, ..Default::default() })
+        .with_backend(BaselineSolve::new(Baseline::Megatron1d, cfg))
+        .lower()
+        .unwrap();
+    assert_eq!(via_planner.backend, "Megatron-1D");
+    assert_eq!(via_planner.iter_time, direct.iter_time);
+    assert_eq!(via_planner.pflops, direct.pflops);
+    assert_eq!(via_planner.mem_per_device, direct.mem_per_device);
+
+    // infeasible baselines surface as planner errors (table4 prints "-")
+    let tp3d = Planner::new(&g, &cluster, &dev)
+        .with_opts(PipelineOpts { seed: 1, ..Default::default() })
+        .with_backend(BaselineSolve::new(Baseline::Tp3d, cfg))
+        .lower();
+    assert!(tp3d.is_err(), "3D-TP needs a cubic device count");
+
+    // analytic artifacts round-trip too
+    let mut p = Planner::new(&g, &cluster, &dev)
+        .with_opts(PipelineOpts { seed: 1, ..Default::default() })
+        .with_backend(BaselineSolve::new(Baseline::Ddp, cfg));
+    let sharding_json = p.solve_sharding().unwrap().to_json();
+    let back = ShardingSolution::from_json(&sharding_json).unwrap();
+    let rep = back.analytic.expect("baseline solutions are analytic");
+    assert_eq!(rep.name, "DDP");
+    assert_eq!(rep.n_devices, 4);
+}

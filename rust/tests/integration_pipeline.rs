@@ -1,9 +1,13 @@
 //! Integration + property tests over the planning pipeline (no PJRT
 //! needed): plan validity invariants across random clusters, models,
-//! and budgets — the coordinator-level guarantees of the system.
+//! and budgets — the coordinator-level guarantees of the system, now
+//! exercised through the staged `api::Planner` (with the legacy
+//! `autoparallelize` wrapper covered by the parity test in
+//! `api_artifacts.rs`).
 
+use automap::api::Planner;
 use automap::cluster::{detect, DeviceMesh, SimCluster};
-use automap::coordinator::{autoparallelize, PipelineOpts};
+use automap::coordinator::PipelineOpts;
 use automap::graph::models::{gpt2, mlp, Gpt2Cfg};
 use automap::graph::op::Op;
 use automap::layout::LayoutManager;
@@ -38,7 +42,9 @@ fn plan_exists_for_every_cluster_family() {
         SimCluster::partially_connected_8gpu(),
         SimCluster::multi_node(2, 2, 100.0),
     ] {
-        let plan = autoparallelize(&g, &cluster, &dev, &fast())
+        let plan = Planner::new(&g, &cluster, &dev)
+            .with_opts(fast())
+            .lower()
             .unwrap_or_else(|e| panic!("{}: {e}", cluster.name));
         assert!(plan.iter_time.is_finite() && plan.iter_time > 0.0);
         assert_eq!(plan.mesh.n_devices(), cluster.n);
@@ -58,13 +64,18 @@ fn more_devices_never_plan_slower() {
         batch: 8,
     });
     let dev = DeviceModel::a100_80gb();
-    let t1 = autoparallelize(&g, &SimCluster::single(), &dev, &fast())
+    let single = SimCluster::single();
+    let t1 = Planner::new(&g, &single, &dev)
+        .with_opts(fast())
+        .lower()
         .unwrap()
         .iter_time;
-    let t4 =
-        autoparallelize(&g, &SimCluster::fully_connected(4), &dev, &fast())
-            .unwrap()
-            .iter_time;
+    let four = SimCluster::fully_connected(4);
+    let t4 = Planner::new(&g, &four, &dev)
+        .with_opts(fast())
+        .lower()
+        .unwrap()
+        .iter_time;
     assert!(
         t4 < t1,
         "4 NVLinked devices must beat 1 device: {t4} vs {t1}"
@@ -75,13 +86,11 @@ fn more_devices_never_plan_slower() {
 fn plan_decisions_use_valid_specs_and_respect_mesh() {
     let g = gpt2(&Gpt2Cfg::mini());
     let dev = DeviceModel::a100_80gb();
-    let plan = autoparallelize(
-        &g,
-        &SimCluster::partially_connected_8gpu(),
-        &dev,
-        &fast(),
-    )
-    .unwrap();
+    let cluster = SimCluster::partially_connected_8gpu();
+    let plan = Planner::new(&g, &cluster, &dev)
+        .with_opts(fast())
+        .lower()
+        .unwrap();
     for (id, d) in &plan.plan.decisions {
         let node = g.node(*id);
         assert!(
@@ -109,15 +118,37 @@ fn codegen_includes_checkpoint_annotations_under_pressure() {
     let g = gpt2(&Gpt2Cfg::mini());
     let dev = DeviceModel::a100_80gb();
     let prof = profile(&g);
-    let mut opts = fast();
-    opts.budget =
-        Some(prof.model_bytes as f64 * 2.0 + prof.saved_activation as f64 * 0.5);
-    let plan =
-        autoparallelize(&g, &SimCluster::fully_connected(4), &dev, &opts)
-            .unwrap();
+    let cluster = SimCluster::fully_connected(4);
+    let plan = Planner::new(&g, &cluster, &dev)
+        .with_opts(fast())
+        .with_budget(
+            prof.model_bytes as f64 * 2.0
+                + prof.saved_activation as f64 * 0.5,
+        )
+        .lower()
+        .unwrap();
     let code = plan.plan.codegen(&g);
     assert!(code.contains("activation checkpoint blocks"));
     assert!(plan.plan.ckpt.is_some());
+}
+
+#[test]
+fn staged_accessors_expose_intermediate_artifacts() {
+    let g = gpt2(&Gpt2Cfg::mini());
+    let dev = DeviceModel::a100_80gb();
+    let cluster = SimCluster::partially_connected_8gpu();
+    let mut p = Planner::new(&g, &cluster, &dev).with_opts(fast());
+    assert!(p.cluster_report().is_none(), "stages run lazily");
+    let n_meshes = p.meshes().unwrap().meshes.len();
+    assert!(n_meshes >= 4, "8 devices factorize to >= 4 meshes");
+    let n_cands = p.solve_sharding().unwrap().candidates.len();
+    assert!(n_cands >= 1);
+    let ck = p.schedule_ckpt().unwrap();
+    assert!(ck.winner < n_cands);
+    assert!(ck.rotor.is_some());
+    let plan = p.lower().unwrap();
+    // the ckpt stage's joint objective is what the plan reports
+    assert_eq!(plan.iter_time, p.ckpt_schedule().unwrap().iter_time);
 }
 
 #[test]
