@@ -1,0 +1,99 @@
+//! `PlanService` demo: concurrent batch planning with a content-addressed
+//! plan cache.
+//!
+//! Submits a batch of (model, cluster) requests — including a duplicate —
+//! to the service, which plans them concurrently over the thread pool
+//! while sharing the topology probe across requests on the same cluster.
+//! A second identical batch is then served entirely from the cache, and a
+//! partial resume shows re-lowering from the cached sharding solution
+//! after a plan entry is invalidated.
+//!
+//! Run: cargo run --release --example plan_service
+
+use automap::api::{PlanOpts, PlanRequest, PlanService, PlanSource,
+                   ProgressEvent};
+use automap::cluster::SimCluster;
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::sim::DeviceModel;
+use automap::solver::SolveOpts;
+
+fn main() -> anyhow::Result<()> {
+    let opts = PlanOpts {
+        sweep: 2,
+        solve: SolveOpts {
+            beam_width: 16,
+            anneal_iters: 300,
+            lagrange_iters: 6,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let dev = DeviceModel::a100_80gb();
+    let request = |tag: &str, cluster: SimCluster| {
+        PlanRequest::new(tag, gpt2(&Gpt2Cfg::mini()), cluster, dev)
+            .with_opts(opts.clone())
+    };
+    let reqs = vec![
+        request("mini@fig5", SimCluster::partially_connected_8gpu()),
+        request("mini@nvlink4", SimCluster::fully_connected(4)),
+        request("mini@2x4", SimCluster::multi_node(2, 4, 100.0)),
+        // identical to the first request: planned once, served twice
+        request("mini@fig5-again", SimCluster::partially_connected_8gpu()),
+    ];
+
+    // the disk tier is what allows partial resume (sharding artifacts
+    // persist there) and reuse across processes
+    let cache_dir = std::env::temp_dir().join("automap_plan_service_demo");
+    let service = PlanService::with_dir(&cache_dir)?.on_progress(|ev| {
+        if let ProgressEvent::CacheLookup { fingerprint, source } = ev {
+            println!("  [cache] {:<14} {}", source.name(),
+                     &fingerprint[..16]);
+        }
+    });
+    service.cache().clear()?; // start cold for the demo
+    println!("cache dir: {}\n", cache_dir.display());
+
+    println!("== batch 1: cold ==");
+    let t0 = std::time::Instant::now();
+    for (req, result) in reqs.iter().zip(service.plan_batch(&reqs)) {
+        let out = result?;
+        println!(
+            "  {:<18} {:<13} mesh {:?}, iter {:.2} ms",
+            req.tag,
+            out.source.name(),
+            out.plan.mesh.shape,
+            out.plan.iter_time * 1e3
+        );
+    }
+    println!("  ({:.2}s)", t0.elapsed().as_secs_f64());
+
+    println!("\n== batch 2: warm (same requests) ==");
+    let t1 = std::time::Instant::now();
+    let mut fingerprint = String::new();
+    for (req, result) in reqs.iter().zip(service.plan_batch(&reqs)) {
+        let out = result?;
+        assert!(out.source.is_hit(), "second batch must be all hits");
+        println!("  {:<18} {}", req.tag, out.source.name());
+        fingerprint = out.fingerprint;
+    }
+    println!("  ({:.4}s)", t1.elapsed().as_secs_f64());
+
+    println!("\n== partial resume after plan invalidation ==");
+    service.cache().drop_plan(&fingerprint)?;
+    let out = service.plan(&reqs[3])?;
+    assert_eq!(out.source, PlanSource::PartialResume);
+    println!(
+        "  re-lowered {} from the cached sharding (iter {:.2} ms)",
+        reqs[3].tag,
+        out.plan.iter_time * 1e3
+    );
+
+    let s = service.stats();
+    println!(
+        "\ncache stats: {} memory hit(s), {} disk hit(s), {} partial \
+         resume(s), {} miss(es), {} eviction(s)",
+        s.memory_hits, s.disk_hits, s.partial_resumes, s.misses,
+        s.evictions
+    );
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Bench: `PlanService` cold solve vs warm cache-hit vs disk hit vs
+//! partial resume, on the Fig-5 sub-clusters.
+//!
+//! "Cold" runs the full staged pipeline (detect → meshes → sharding
+//! sweep → ckpt DP → lower). "Warm" serves the identical request from
+//! the in-memory tier (no solver stage runs). "Disk" restarts the
+//! service over the same cache directory (simulated new process) so the
+//! plan deserializes from disk. "Partial" drops the plan entry but keeps
+//! the sharding artifact, so only the deterministic ckpt + lowering
+//! stages re-run. The last column is the headline cold/warm speedup.
+//!
+//! `cargo bench --bench plan_cache [-- --quick]`
+
+use std::time::Instant;
+
+use automap::api::{PlanOpts, PlanRequest, PlanService, PlanSource};
+use automap::cluster::SimCluster;
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::sim::DeviceModel;
+use automap::solver::SolveOpts;
+use automap::util::bench::{bench, quick, Table};
+
+fn bench_opts(q: bool) -> PlanOpts {
+    PlanOpts {
+        sweep: if q { 2 } else { 4 },
+        solve: SolveOpts {
+            beam_width: if q { 12 } else { 32 },
+            anneal_iters: if q { 150 } else { 800 },
+            lagrange_iters: if q { 4 } else { 8 },
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let q = quick();
+    let iters = if q { 3 } else { 10 };
+    let mut table = Table::new(
+        "plan cache: cold solve vs warm hit vs disk hit vs partial \
+         resume (gpt2-mini on fig5 sub-clusters)",
+        &["cluster", "cold ms", "warm ms", "disk ms", "partial ms",
+          "cold/warm"],
+    );
+    let mut worst_speedup = f64::INFINITY;
+
+    for n in [2usize, 4, 8] {
+        let dir = std::env::temp_dir().join(format!(
+            "automap_bench_plan_cache_{}_{n}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let req = PlanRequest::new(
+            format!("fig5-{n}"),
+            gpt2(&Gpt2Cfg::mini()),
+            SimCluster::fig5_prefix(n),
+            DeviceModel::a100_80gb(),
+        )
+        .with_opts(bench_opts(q));
+
+        let svc = PlanService::with_dir(&dir).expect("cache dir");
+        let t0 = Instant::now();
+        let cold = svc.plan(&req).expect("cold solve");
+        let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(cold.source, PlanSource::Solved);
+
+        // warm: in-memory hit, same service
+        let warm = bench(&format!("warm-{n}"), 1, iters, || {
+            let out = svc.plan(&req).expect("warm hit");
+            assert!(out.source.is_hit());
+            out.plan.iter_time
+        });
+        let warm_ms = warm.median_ns / 1e6;
+
+        // disk: a fresh service per iteration = new-process replay
+        let disk = bench(&format!("disk-{n}"), 1, iters, || {
+            let fresh = PlanService::with_dir(&dir).expect("cache dir");
+            let out = fresh.plan(&req).expect("disk hit");
+            assert_eq!(out.source, PlanSource::DiskHit);
+            out.plan.iter_time
+        });
+
+        // partial: drop the plan (keep sharding) before each resolve
+        let partial = bench(&format!("partial-{n}"), 1, iters, || {
+            svc.cache().drop_plan(&cold.fingerprint).expect("drop");
+            let out = svc.plan(&req).expect("partial resume");
+            assert_eq!(out.source, PlanSource::PartialResume);
+            out.plan.iter_time
+        });
+
+        let speedup = cold_ms / warm_ms.max(1e-9);
+        worst_speedup = worst_speedup.min(speedup);
+        table.row(vec![
+            format!("fig5-{n}"),
+            format!("{cold_ms:.1}"),
+            format!("{warm_ms:.4}"),
+            format!("{:.3}", disk.median_ns / 1e6),
+            format!("{:.1}", partial.median_ns / 1e6),
+            format!("{speedup:.0}x"),
+        ]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    table.print();
+    println!(
+        "\nworst warm-hit speedup over cold solve: {worst_speedup:.0}x \
+         (target >= 10x: {})",
+        if worst_speedup >= 10.0 { "PASS" } else { "FAIL" }
+    );
+}

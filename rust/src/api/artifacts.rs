@@ -31,12 +31,14 @@ pub trait Artifact: Sized {
     fn to_json(&self) -> Json;
     fn from_json(v: &Json) -> Result<Self>;
 
+    /// Atomic write: concurrent savers (e.g. batch plan-cache workers)
+    /// may race on the same path, and a reader must never observe a torn
+    /// file — so the JSON goes to a unique temp file in the target
+    /// directory and is renamed into place.
     fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut text = String::new();
         crate::util::json::write_json(&self.to_json(), &mut text);
-        std::fs::write(path.as_ref(), text).map_err(|e| {
-            anyhow!("writing {}: {e}", path.as_ref().display())
-        })
+        atomic_write(path.as_ref(), text.as_bytes())
     }
 
     fn load(path: impl AsRef<Path>) -> Result<Self> {
@@ -47,6 +49,31 @@ pub trait Artifact: Sized {
             .map_err(|e| anyhow!("{}: {e}", path.as_ref().display()))?;
         Self::from_json(&v)
     }
+}
+
+/// Write `bytes` to `path` atomically: a unique temp file (pid + counter
+/// disambiguate concurrent writers) in the same directory, then a rename,
+/// which POSIX guarantees replaces the target in one step. Readers see
+/// either the old complete file or the new complete file, never a prefix.
+pub(crate) fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let name = path
+        .file_name()
+        .ok_or_else(|| anyhow!("cannot write to {}", path.display()))?
+        .to_string_lossy()
+        .into_owned();
+    let tmp = path.with_file_name(format!(
+        "{name}.tmp.{}.{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::write(&tmp, bytes)
+        .map_err(|e| anyhow!("writing {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow!("renaming {} -> {}: {e}", tmp.display(), path.display())
+    })
 }
 
 /// Header check shared by every `from_json`.
@@ -770,5 +797,57 @@ mod tests {
         let r = ClusterReport::probe(&SimCluster::single(), 1);
         assert!(MeshCandidates::from_json(&r.to_json()).is_err());
         assert!(ClusterReport::from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn save_is_atomic_under_concurrent_writers() {
+        let dir = std::env::temp_dir().join(format!(
+            "automap_atomic_save_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("report.json");
+
+        // N threads race saves of distinct-but-valid artifacts at one
+        // path while a reader loads in a loop: every successful load
+        // must be a complete, valid artifact (no torn prefix).
+        let reports: Vec<ClusterReport> = (0..4)
+            .map(|s| {
+                ClusterReport::probe(
+                    &SimCluster::partially_connected_8gpu(),
+                    s,
+                )
+            })
+            .collect();
+        reports[0].save(&path).unwrap();
+        std::thread::scope(|scope| {
+            for r in &reports {
+                let p = path.clone();
+                scope.spawn(move || {
+                    for _ in 0..20 {
+                        r.save(&p).unwrap();
+                    }
+                });
+            }
+            let p = path.clone();
+            scope.spawn(move || {
+                for _ in 0..80 {
+                    let back = ClusterReport::load(&p)
+                        .expect("reader must never see a torn file");
+                    assert_eq!(back.info.n, 8);
+                }
+            });
+        });
+
+        // no temp droppings left behind
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.file_name().to_string_lossy().contains(".tmp.")
+            })
+            .collect();
+        assert!(leftovers.is_empty(), "stale temp files: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,424 @@
+//! Content-addressed plan cache backing [`PlanService`](super::PlanService).
+//!
+//! Keys are 128-bit hex fingerprints of (graph, cluster, device model,
+//! `PlanOpts`, backend) — see [`PlanService::fingerprint`]
+//! (super::PlanService::fingerprint). Two tiers:
+//!
+//! * **memory** — an LRU-capped map of deserialized [`CompiledPlan`]s,
+//!   shared across batch workers behind a mutex;
+//! * **disk** — one `<fingerprint>.plan.json` plus one
+//!   `<fingerprint>.sharding.json` per solved request, written through the
+//!   atomic [`Artifact::save`] path so concurrent workers can never leave
+//!   torn entries.
+//!
+//! The sharding artifact is what makes *partial resume* possible: if the
+//! plan file is gone (evicted, invalidated by a generator change) but the
+//! solution survives, the service re-runs only the deterministic
+//! checkpoint-DP + lowering stages via `Planner::load_sharding` instead of
+//! the full solver sweep.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::{Artifact, CompiledPlan, ShardingSolution};
+
+/// Where a served plan came from. `Solved` means a cache miss: the full
+/// pipeline ran and the result was inserted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanSource {
+    MemoryHit,
+    DiskHit,
+    PartialResume,
+    Solved,
+}
+
+impl PlanSource {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanSource::MemoryHit => "memory-hit",
+            PlanSource::DiskHit => "disk-hit",
+            PlanSource::PartialResume => "partial-resume",
+            PlanSource::Solved => "solved",
+        }
+    }
+
+    /// True when no solver stage ran at all (full plan served).
+    pub fn is_hit(&self) -> bool {
+        matches!(self, PlanSource::MemoryHit | PlanSource::DiskHit)
+    }
+}
+
+/// Counter snapshot (see the field docs for what each event means).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Full plans served from the in-memory tier.
+    pub memory_hits: u64,
+    /// Full plans served from disk (and promoted to memory).
+    pub disk_hits: u64,
+    /// Sharding artifact found without a plan: ckpt + lower re-ran.
+    pub partial_resumes: u64,
+    /// Nothing cached: the full pipeline ran.
+    pub misses: u64,
+    /// In-memory entries dropped to respect the capacity cap.
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hits(&self) -> u64 {
+        self.memory_hits + self.disk_hits
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.hits() + self.partial_resumes + self.misses
+    }
+}
+
+/// Result of a tiered lookup (counters already updated).
+pub enum Lookup {
+    /// Full plan available; no stage needs to run. The final field lists
+    /// fingerprints the memory tier evicted while promoting a disk hit
+    /// (always empty on a memory hit).
+    Plan(CompiledPlan, PlanSource, Vec<String>),
+    /// Only the sharding solution survived; resume from stage 4.
+    Sharding(ShardingSolution),
+    Miss,
+}
+
+struct MemEntry {
+    plan: CompiledPlan,
+    last_used: u64,
+}
+
+struct MemTier {
+    entries: HashMap<String, MemEntry>,
+    clock: u64,
+}
+
+/// One on-disk cache file (for `automap cache stats`).
+#[derive(Debug, Clone)]
+pub struct DiskEntry {
+    pub fingerprint: String,
+    /// "plan" or "sharding".
+    pub kind: &'static str,
+    pub bytes: u64,
+}
+
+pub struct PlanCache {
+    dir: Option<PathBuf>,
+    capacity: usize,
+    mem: Mutex<MemTier>,
+    memory_hits: AtomicU64,
+    disk_hits: AtomicU64,
+    partial_resumes: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// Default in-memory plan capacity (plans are a few hundred KB of JSON
+/// worth of structs; 64 keeps a busy batch comfortably resident).
+pub const DEFAULT_MEMORY_CAPACITY: usize = 64;
+
+const PLAN_SUFFIX: &str = ".plan.json";
+const SHARDING_SUFFIX: &str = ".sharding.json";
+
+impl PlanCache {
+    /// Memory-only cache (no persistence across processes).
+    pub fn in_memory() -> PlanCache {
+        PlanCache {
+            dir: None,
+            capacity: DEFAULT_MEMORY_CAPACITY,
+            mem: Mutex::new(MemTier { entries: HashMap::new(), clock: 0 }),
+            memory_hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            partial_resumes: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Memory + disk cache rooted at `dir` (created if missing).
+    pub fn with_dir(dir: impl AsRef<Path>) -> Result<PlanCache> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).map_err(|e| {
+            anyhow!("creating cache dir {}: {e}", dir.display())
+        })?;
+        let mut c = PlanCache::in_memory();
+        c.dir = Some(dir);
+        Ok(c)
+    }
+
+    /// Override the in-memory LRU capacity (entries, not bytes).
+    pub fn with_capacity(mut self, capacity: usize) -> PlanCache {
+        self.capacity = capacity.max(1);
+        self
+    }
+
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            memory_hits: self.memory_hits.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            partial_resumes: self.partial_resumes.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    fn plan_path(&self, key: &str) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(format!("{key}{PLAN_SUFFIX}")))
+    }
+
+    fn sharding_path(&self, key: &str) -> Option<PathBuf> {
+        self.dir
+            .as_ref()
+            .map(|d| d.join(format!("{key}{SHARDING_SUFFIX}")))
+    }
+
+    /// Tiered lookup: memory, then disk plan (promoting into memory),
+    /// then disk sharding. Updates the hit/partial/miss counters.
+    pub fn lookup(&self, key: &str) -> Lookup {
+        {
+            let mut mem = self.mem.lock().unwrap();
+            mem.clock += 1;
+            let clock = mem.clock;
+            if let Some(e) = mem.entries.get_mut(key) {
+                e.last_used = clock;
+                self.memory_hits.fetch_add(1, Ordering::Relaxed);
+                return Lookup::Plan(
+                    e.plan.clone(),
+                    PlanSource::MemoryHit,
+                    Vec::new(),
+                );
+            }
+        }
+        if let Some(path) = self.plan_path(key) {
+            if path.exists() {
+                // a torn/garbage file is impossible through the atomic
+                // save path, but a foreign file with the right name is
+                // not — treat unparseable as absent, not fatal
+                if let Ok(plan) = CompiledPlan::load(&path) {
+                    self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                    let evicted = self.insert_memory(key, plan.clone());
+                    return Lookup::Plan(plan, PlanSource::DiskHit, evicted);
+                }
+            }
+        }
+        if let Some(path) = self.sharding_path(key) {
+            if path.exists() {
+                if let Ok(sh) = ShardingSolution::load(&path) {
+                    self.partial_resumes.fetch_add(1, Ordering::Relaxed);
+                    return Lookup::Sharding(sh);
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Lookup::Miss
+    }
+
+    /// Insert a solved request: plan into both tiers, sharding solution
+    /// onto disk (the partial-resume seed). Returns fingerprints evicted
+    /// from the memory tier, if any.
+    pub fn insert(
+        &self,
+        key: &str,
+        sharding: Option<&ShardingSolution>,
+        plan: &CompiledPlan,
+    ) -> Result<Vec<String>> {
+        if let Some(path) = self.plan_path(key) {
+            plan.save(&path)?;
+        }
+        if let (Some(path), Some(sh)) = (self.sharding_path(key), sharding)
+        {
+            sh.save(&path)?;
+        }
+        Ok(self.insert_memory(key, plan.clone()))
+    }
+
+    fn insert_memory(&self, key: &str, plan: CompiledPlan) -> Vec<String> {
+        let mut mem = self.mem.lock().unwrap();
+        mem.clock += 1;
+        let clock = mem.clock;
+        mem.entries
+            .insert(key.to_string(), MemEntry { plan, last_used: clock });
+        let mut evicted = Vec::new();
+        while mem.entries.len() > self.capacity {
+            let oldest = mem
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty over capacity");
+            mem.entries.remove(&oldest);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            evicted.push(oldest);
+        }
+        evicted
+    }
+
+    /// Invalidate the *plan* for a key (memory + disk) while keeping the
+    /// sharding artifact, forcing the next request into a partial resume
+    /// — how a caller re-lowers everything after a generator change.
+    pub fn drop_plan(&self, key: &str) -> Result<()> {
+        self.mem.lock().unwrap().entries.remove(key);
+        if let Some(path) = self.plan_path(key) {
+            if path.exists() {
+                std::fs::remove_file(&path).map_err(|e| {
+                    anyhow!("removing {}: {e}", path.display())
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop every in-memory entry (disk untouched).
+    pub fn clear_memory(&self) {
+        self.mem.lock().unwrap().entries.clear();
+    }
+
+    /// Enumerate the on-disk tier (empty when memory-only).
+    pub fn disk_entries(&self) -> Result<Vec<DiskEntry>> {
+        let Some(dir) = &self.dir else { return Ok(Vec::new()) };
+        let mut out = Vec::new();
+        let rd = std::fs::read_dir(dir)
+            .map_err(|e| anyhow!("reading {}: {e}", dir.display()))?;
+        for entry in rd {
+            let entry = entry.map_err(|e| anyhow!("cache dir: {e}"))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let kind = if name.ends_with(PLAN_SUFFIX) {
+                "plan"
+            } else if name.ends_with(SHARDING_SUFFIX) {
+                "sharding"
+            } else {
+                continue;
+            };
+            let suffix =
+                if kind == "plan" { PLAN_SUFFIX } else { SHARDING_SUFFIX };
+            let bytes =
+                entry.metadata().map(|m| m.len()).unwrap_or_default();
+            out.push(DiskEntry {
+                fingerprint: name[..name.len() - suffix.len()].to_string(),
+                kind,
+                bytes,
+            });
+        }
+        out.sort_by(|a, b| {
+            (&a.fingerprint, a.kind).cmp(&(&b.fingerprint, b.kind))
+        });
+        Ok(out)
+    }
+
+    /// Delete every cache file on disk and clear memory; returns how many
+    /// files were removed.
+    pub fn clear(&self) -> Result<usize> {
+        self.clear_memory();
+        let Some(dir) = &self.dir else { return Ok(0) };
+        let mut removed = 0;
+        for e in self.disk_entries()? {
+            let suffix =
+                if e.kind == "plan" { PLAN_SUFFIX } else { SHARDING_SUFFIX };
+            let path = dir.join(format!("{}{suffix}", e.fingerprint));
+            std::fs::remove_file(&path).map_err(|err| {
+                anyhow!("removing {}: {err}", path.display())
+            })?;
+            removed += 1;
+        }
+        Ok(removed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeviceMesh;
+    use crate::gen::ExecutionPlan;
+    use std::collections::BTreeMap;
+
+    fn dummy_plan(iter_time: f64) -> CompiledPlan {
+        CompiledPlan {
+            backend: "test".into(),
+            graph_nodes: 3,
+            mesh: DeviceMesh {
+                shape: vec![1],
+                devices: vec![0],
+                axis_alpha: vec![0.0],
+                axis_beta: vec![f64::INFINITY],
+            },
+            plan: ExecutionPlan {
+                mesh_shape: vec![1],
+                decisions: BTreeMap::new(),
+                comms: Vec::new(),
+                local_shapes: BTreeMap::new(),
+                ckpt: None,
+                iter_time,
+                mem_per_device: 1.0,
+            },
+            iter_time,
+            pflops: 1.0,
+            mem_per_device: 1.0,
+            sweep_n: 0,
+        }
+    }
+
+    #[test]
+    fn memory_tier_hits_and_counts() {
+        let c = PlanCache::in_memory();
+        assert!(matches!(c.lookup("k1"), Lookup::Miss));
+        c.insert("k1", None, &dummy_plan(0.5)).unwrap();
+        match c.lookup("k1") {
+            Lookup::Plan(p, PlanSource::MemoryHit, _) => {
+                assert_eq!(p.iter_time, 0.5)
+            }
+            _ => panic!("expected memory hit"),
+        }
+        let s = c.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.memory_hits, 1);
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn lru_eviction_respects_capacity_and_recency() {
+        let c = PlanCache::in_memory().with_capacity(2);
+        c.insert("a", None, &dummy_plan(1.0)).unwrap();
+        c.insert("b", None, &dummy_plan(2.0)).unwrap();
+        // touch "a" so "b" is the LRU victim
+        assert!(matches!(c.lookup("a"), Lookup::Plan(..)));
+        let evicted = c.insert("c", None, &dummy_plan(3.0)).unwrap();
+        assert_eq!(evicted, vec!["b".to_string()]);
+        assert!(matches!(c.lookup("a"), Lookup::Plan(..)));
+        assert!(matches!(c.lookup("b"), Lookup::Miss));
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn disk_tier_survives_memory_clear_and_enumerates() {
+        let dir = std::env::temp_dir().join(format!(
+            "automap_cache_unit_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let c = PlanCache::with_dir(&dir).unwrap();
+        c.insert("deadbeef", None, &dummy_plan(0.25)).unwrap();
+        c.clear_memory();
+        match c.lookup("deadbeef") {
+            Lookup::Plan(p, PlanSource::DiskHit, _) => {
+                assert_eq!(p.iter_time, 0.25)
+            }
+            _ => panic!("expected disk hit"),
+        }
+        let entries = c.disk_entries().unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].kind, "plan");
+        assert_eq!(entries[0].fingerprint, "deadbeef");
+        assert_eq!(c.clear().unwrap(), 1);
+        assert!(matches!(c.lookup("deadbeef"), Lookup::Miss));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -22,23 +22,36 @@
 //!
 //! Solver backends are pluggable through the [`Solve`] trait
 //! ([`with_backend`](Planner::with_backend)): the exact branch-and-bound,
-//! the production beam + Lagrangian + annealing path, and the Table-4
-//! analytic baselines (DDP, Megatron-1D, Optimus-2D, 3D-TP) are all
-//! interchangeable. Per-stage progress callbacks
-//! ([`on_progress`](Planner::on_progress)) feed the CLI and benches.
+//! the production beam + Lagrangian + annealing path, the portfolio race
+//! ([`PortfolioSolve`]), and the Table-4 analytic baselines (DDP,
+//! Megatron-1D, Optimus-2D, 3D-TP) are all interchangeable. Per-stage
+//! progress callbacks ([`on_progress`](Planner::on_progress)) feed the
+//! CLI and benches.
+//!
+//! `Planner` compiles one request. The serving layer above it is
+//! [`PlanService`] (see [`service`]): a concurrent front-end that
+//! fingerprints requests, caches compiled plans in memory + on disk
+//! ([`PlanCache`]), partially resumes from cached sharding solutions, and
+//! batch-plans many requests over the thread pool. `autoparallelize` and
+//! the CLI are thin clients of the service.
 //!
 //! See `rust/src/api/README.md` for the artifact formats.
 
 pub mod artifacts;
+pub mod cache;
 pub mod progress;
+pub mod service;
 pub mod solve;
 
 pub use self::artifacts::{Artifact, CkptSchedule, ClusterReport,
                           CompiledPlan, MeshCandidates, ShardingCandidate,
                           ShardingSolution, ARTIFACT_VERSION};
+pub use self::cache::{CacheStats, DiskEntry, PlanCache, PlanSource};
 pub use self::progress::{PlanStage, ProgressEvent};
+pub use self::service::{BackendSpec, ClusterSpec, PlanOutcome,
+                        PlanRequest, PlanService};
 pub use self::solve::{Baseline, BaselineSolve, BeamSolve, ExactSolve,
-                      Solve, SolveCtx};
+                      PortfolioSolve, Solve, SolveCtx};
 
 use std::collections::BTreeMap;
 
@@ -210,6 +223,17 @@ impl<'a> Planner<'a> {
         info: ClusterInfo,
         dev: &'a DeviceModel,
     ) -> Planner<'a> {
+        Planner::from_report(graph, ClusterReport::from_info(info), dev)
+    }
+
+    /// Start from a cached [`ClusterReport`] artifact — no live cluster
+    /// handle needed (how [`PlanService`](service::PlanService) replays
+    /// detection for requests carrying a serialized report).
+    pub fn from_report(
+        graph: &'a Graph,
+        report: ClusterReport,
+        dev: &'a DeviceModel,
+    ) -> Planner<'a> {
         Planner {
             graph,
             cluster: None,
@@ -220,7 +244,7 @@ impl<'a> Planner<'a> {
             prof: None,
             groups: None,
             mesh_ctxs: Vec::new(),
-            report: Some(ClusterReport::from_info(info)),
+            report: Some(report),
             meshes: None,
             sharding: None,
             ckpt: None,
@@ -267,6 +291,13 @@ impl<'a> Planner<'a> {
     /// Seed the detect stage from a cached [`ClusterReport`].
     pub fn load_cluster(mut self, report: ClusterReport) -> Self {
         self.report = Some(report);
+        self
+    }
+
+    /// Seed the mesh stage from cached [`MeshCandidates`] — batch drivers
+    /// enumerate once per cluster and share the result across requests.
+    pub fn load_meshes(mut self, meshes: MeshCandidates) -> Self {
+        self.meshes = Some(meshes);
         self
     }
 

@@ -1,7 +1,13 @@
-//! Per-stage progress events emitted by the [`Planner`](super::Planner).
+//! Per-stage progress events emitted by the [`Planner`](super::Planner)
+//! and the [`PlanService`](super::PlanService).
 //!
 //! The CLI uses these to narrate long solves; benches use them to attribute
-//! wall time to stages without instrumenting the planner internals.
+//! wall time to stages without instrumenting the planner internals. The
+//! service adds cache-level events (lookups, evictions, per-request batch
+//! completion) on the same channel so a single callback observes both the
+//! cache tier and the stages running beneath it.
+
+use super::cache::PlanSource;
 
 /// The five pipeline stages, in order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,6 +58,15 @@ pub enum ProgressEvent {
         /// True when this candidate is the best seen so far.
         best: bool,
     },
+    /// A [`PlanService`](super::PlanService) cache lookup resolved.
+    /// `PlanSource::Solved` means a miss (the full pipeline is about to
+    /// run); the hit/partial variants mean stages were skipped.
+    CacheLookup { fingerprint: String, source: PlanSource },
+    /// The in-memory plan tier evicted an entry to stay under capacity.
+    CacheEvicted { fingerprint: String },
+    /// One request of a [`plan_batch`](super::PlanService::plan_batch)
+    /// call finished; `index` is its position in the submitted slice.
+    RequestDone { index: usize, source: PlanSource, ms: f64 },
 }
 
 pub(crate) type ProgressFn<'a> = Box<dyn FnMut(&ProgressEvent) + 'a>;

@@ -1,0 +1,658 @@
+//! `PlanService` — the long-lived, concurrent, cache-backed planning
+//! front-end over the staged [`Planner`].
+//!
+//! Colossal-Auto's value is ahead-of-time compilation: once a (model,
+//! cluster, opts) triple is solved, the plan is a reusable artifact.
+//! Callers submit a [`PlanRequest`] and get back a [`PlanOutcome`] whose
+//! [`CompiledPlan`] either came straight from the cache (no solver stage
+//! ran), from a *partial resume* (the cached
+//! [`ShardingSolution`](super::ShardingSolution) seeded
+//! `Planner::load_sharding`, so only the deterministic checkpoint DP and
+//! generator passes re-ran), or from a full solve (which populates the
+//! cache for everyone after).
+//!
+//! ```text
+//! PlanRequest { graph, cluster, dev, opts, backend }
+//!        │ fingerprint (stable 128-bit content hash)
+//!        ▼
+//! PlanCache: memory LRU ──> disk plan ──> disk sharding ──> full solve
+//!            (hit)          (hit)         (partial resume)   (miss)
+//! ```
+//!
+//! [`plan_batch`](PlanService::plan_batch) drives many requests
+//! concurrently over [`util::pool`](crate::util::pool) (bounded by
+//! `AUTOMAP_THREADS`), deduplicating identical requests and sharing the
+//! probed [`ClusterReport`] + enumerated [`MeshCandidates`] across
+//! requests that target the same cluster. Cache activity (hits, misses,
+//! partial resumes, evictions) is reported through the same
+//! [`ProgressEvent`] channel the planner stages use, and as counter
+//! totals via [`stats`](PlanService::stats).
+//!
+//! `Planner` remains the single-compilation engine; `autoparallelize` and
+//! the CLI are thin clients of this service.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::SimCluster;
+use crate::graph::models::Gpt2Cfg;
+use crate::graph::Graph;
+use crate::sim::DeviceModel;
+use crate::solver::SolveOpts;
+use crate::util::json::{hash_json, StableHasher};
+use crate::util::pool::parallel_map;
+
+use super::artifacts::{Artifact, ClusterReport, CompiledPlan,
+                       MeshCandidates};
+use super::cache::{CacheStats, Lookup, PlanCache, PlanSource};
+use super::progress::ProgressEvent;
+use super::solve::{Baseline, BaselineSolve, ExactSolve, PortfolioSolve};
+use super::{PlanOpts, Planner};
+
+/// The cluster half of a request: a live (simulated) cluster to probe, or
+/// an already-detected topology report.
+#[derive(Debug, Clone)]
+pub enum ClusterSpec {
+    Sim(SimCluster),
+    Report(ClusterReport),
+}
+
+/// Serializable description of which solver backend to run — the
+/// service needs a *value* (clonable, hashable into the fingerprint,
+/// shippable across batch worker threads), not a `dyn Solve` object.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// Default beam + Lagrangian + annealing, configured by `opts.solve`.
+    Beam,
+    /// Exact branch-and-bound (small graphs only).
+    Exact,
+    /// A Table-4 analytic baseline.
+    Baseline(Baseline, Gpt2Cfg),
+    /// Portfolio race over explicit beam configurations.
+    Portfolio(Vec<SolveOpts>),
+}
+
+/// How many configs `BackendSpec::parse("portfolio", ..)` spreads over.
+pub const PORTFOLIO_DEFAULT_CONFIGS: usize = 4;
+
+impl BackendSpec {
+    /// CLI-name parser shared by `automap plan` and `automap batch`.
+    /// `cfg` feeds the analytic baselines; `base_solve` seeds the
+    /// portfolio spread.
+    pub fn parse(
+        name: &str,
+        cfg: Gpt2Cfg,
+        base_solve: SolveOpts,
+    ) -> Result<BackendSpec> {
+        Ok(match name {
+            "beam" => BackendSpec::Beam,
+            "exact" => BackendSpec::Exact,
+            "portfolio" => BackendSpec::Portfolio(
+                PortfolioSolve::spread(base_solve, PORTFOLIO_DEFAULT_CONFIGS)
+                    .configs,
+            ),
+            "ddp" => BackendSpec::Baseline(Baseline::Ddp, cfg),
+            "megatron-1d" => {
+                BackendSpec::Baseline(Baseline::Megatron1d, cfg)
+            }
+            "optimus-2d" => BackendSpec::Baseline(Baseline::Optimus2d, cfg),
+            "3d-tp" => BackendSpec::Baseline(Baseline::Tp3d, cfg),
+            other => bail!(
+                "unknown backend {other} \
+                 (beam|exact|portfolio|ddp|megatron-1d|optimus-2d|3d-tp)"
+            ),
+        })
+    }
+
+    /// Short display name (batch summary tables).
+    pub fn describe(&self) -> String {
+        match self {
+            BackendSpec::Beam => "beam".into(),
+            BackendSpec::Exact => "exact".into(),
+            BackendSpec::Baseline(kind, _) => match kind {
+                Baseline::Ddp => "ddp".into(),
+                Baseline::Megatron1d => "megatron-1d".into(),
+                Baseline::Optimus2d => "optimus-2d".into(),
+                Baseline::Tp3d => "3d-tp".into(),
+            },
+            BackendSpec::Portfolio(configs) => {
+                format!("portfolio({})", configs.len())
+            }
+        }
+    }
+
+    fn install<'a>(&self, p: Planner<'a>) -> Planner<'a> {
+        match self {
+            BackendSpec::Beam => p,
+            BackendSpec::Exact => p.with_backend(ExactSolve),
+            BackendSpec::Baseline(kind, cfg) => {
+                p.with_backend(BaselineSolve::new(*kind, *cfg))
+            }
+            BackendSpec::Portfolio(configs) => {
+                p.with_backend(PortfolioSolve::new(configs.clone()))
+            }
+        }
+    }
+
+    fn hash_into(&self, h: &mut StableHasher) {
+        h.write_str(&self.describe());
+        match self {
+            BackendSpec::Beam | BackendSpec::Exact => {}
+            BackendSpec::Baseline(_, cfg) => {
+                for x in [cfg.vocab, cfg.seq, cfg.d_model, cfg.n_layer,
+                          cfg.n_head, cfg.d_ff, cfg.batch]
+                {
+                    h.write_usize(x);
+                }
+            }
+            BackendSpec::Portfolio(configs) => {
+                h.write_usize(configs.len());
+                for o in configs {
+                    hash_solve_opts(h, o);
+                }
+            }
+        }
+    }
+}
+
+fn hash_solve_opts(h: &mut StableHasher, o: &SolveOpts) {
+    h.write_usize(o.beam_width);
+    h.write_usize(o.anneal_iters);
+    h.write_usize(o.lagrange_iters);
+    h.write_u64(o.seed);
+}
+
+/// One planning job: everything the staged pipeline consumes, as owned
+/// values so batches can ship requests across worker threads.
+#[derive(Debug, Clone)]
+pub struct PlanRequest {
+    /// Display label for logs and batch summary tables (not part of the
+    /// cache fingerprint).
+    pub tag: String,
+    pub graph: Graph,
+    pub cluster: ClusterSpec,
+    pub dev: DeviceModel,
+    pub opts: PlanOpts,
+    pub backend: BackendSpec,
+}
+
+impl PlanRequest {
+    pub fn new(
+        tag: impl Into<String>,
+        graph: Graph,
+        cluster: SimCluster,
+        dev: DeviceModel,
+    ) -> PlanRequest {
+        PlanRequest {
+            tag: tag.into(),
+            graph,
+            cluster: ClusterSpec::Sim(cluster),
+            dev,
+            opts: PlanOpts::default(),
+            backend: BackendSpec::Beam,
+        }
+    }
+
+    pub fn with_opts(mut self, opts: PlanOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: BackendSpec) -> Self {
+        self.backend = backend;
+        self
+    }
+}
+
+/// A resolved request: the compiled plan plus where it came from.
+#[derive(Debug, Clone)]
+pub struct PlanOutcome {
+    pub fingerprint: String,
+    pub source: PlanSource,
+    pub plan: CompiledPlan,
+    /// Wall time this request took inside the service, milliseconds.
+    pub wall_ms: f64,
+}
+
+/// Detect + mesh state shared across batch requests on the same cluster.
+struct SharedCluster {
+    report: ClusterReport,
+    meshes: MeshCandidates,
+}
+
+/// Lazily-populated per-batch map: cluster key -> probed state. The lock
+/// is held across the probe so a cluster is probed exactly once even when
+/// several workers want it simultaneously (probes are milliseconds).
+struct SharedClusters(Mutex<BTreeMap<String, Arc<SharedCluster>>>);
+
+impl SharedClusters {
+    fn new() -> SharedClusters {
+        SharedClusters(Mutex::new(BTreeMap::new()))
+    }
+
+    fn get_or_probe(&self, req: &PlanRequest) -> Arc<SharedCluster> {
+        let key = cluster_key(req);
+        let mut map = self.0.lock().unwrap();
+        if let Some(sc) = map.get(&key) {
+            return Arc::clone(sc);
+        }
+        let report = match &req.cluster {
+            ClusterSpec::Sim(c) => ClusterReport::probe(c, req.opts.seed),
+            ClusterSpec::Report(r) => r.clone(),
+        };
+        let meshes = MeshCandidates::enumerate(
+            &report,
+            req.opts.mesh_shapes.as_deref(),
+        );
+        let sc = Arc::new(SharedCluster { report, meshes });
+        map.insert(key, Arc::clone(&sc));
+        sc
+    }
+}
+
+/// Key for detect/mesh sharing: everything those two stages depend on.
+fn cluster_key(req: &PlanRequest) -> String {
+    let mut h = StableHasher::new();
+    hash_cluster(&mut h, &req.cluster);
+    h.write_u64(req.opts.seed);
+    hash_mesh_shapes(&mut h, req.opts.mesh_shapes.as_deref());
+    h.hex()
+}
+
+fn hash_cluster(h: &mut StableHasher, cluster: &ClusterSpec) {
+    match cluster {
+        ClusterSpec::Sim(c) => {
+            h.write_str("sim-cluster");
+            h.write_usize(c.n);
+            h.write_f64(c.noise);
+            for row in &c.latency {
+                for &x in row {
+                    h.write_f64(x);
+                }
+            }
+            for row in &c.bandwidth {
+                for &x in row {
+                    h.write_f64(x);
+                }
+            }
+        }
+        ClusterSpec::Report(r) => {
+            h.write_str("cluster-report");
+            // reuse the canonical artifact JSON; cheap relative to a solve
+            h.write_str(&hash_json(&r.to_json()));
+        }
+    }
+}
+
+fn hash_mesh_shapes(h: &mut StableHasher, shapes: Option<&[Vec<usize>]>) {
+    match shapes {
+        None => h.write_str("mesh-shapes-all"),
+        Some(shapes) => {
+            h.write_str("mesh-shapes");
+            h.write_usize(shapes.len());
+            for s in shapes {
+                h.write_usize(s.len());
+                for &x in s {
+                    h.write_usize(x);
+                }
+            }
+        }
+    }
+}
+
+type ServiceProgressFn = Box<dyn Fn(&ProgressEvent) + Send + Sync>;
+
+/// The planning front-end. Construct once, submit many requests; safe to
+/// share across threads (`plan_batch` does exactly that internally).
+pub struct PlanService {
+    cache: PlanCache,
+    progress: Option<ServiceProgressFn>,
+}
+
+impl Default for PlanService {
+    fn default() -> Self {
+        PlanService::new()
+    }
+}
+
+impl PlanService {
+    /// Memory-only service (plans cached for this process's lifetime).
+    pub fn new() -> PlanService {
+        PlanService { cache: PlanCache::in_memory(), progress: None }
+    }
+
+    /// Service with a persistent on-disk tier rooted at `dir`.
+    pub fn with_dir(dir: impl AsRef<Path>) -> Result<PlanService> {
+        Ok(PlanService { cache: PlanCache::with_dir(dir)?, progress: None })
+    }
+
+    /// Full control over the cache (capacity, placement).
+    pub fn with_cache(cache: PlanCache) -> PlanService {
+        PlanService { cache, progress: None }
+    }
+
+    /// Register a progress callback. It receives both the service-level
+    /// cache events and the per-stage planner events of every request, so
+    /// it must be thread-safe (batch workers call it concurrently).
+    pub fn on_progress(
+        mut self,
+        f: impl Fn(&ProgressEvent) + Send + Sync + 'static,
+    ) -> Self {
+        self.progress = Some(Box::new(f));
+        self
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// Counter snapshot: hits, misses, partial resumes, evictions.
+    pub fn stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// The deterministic cache key of a request: a 128-bit content hash
+    /// of (graph structure, cluster topology, device model, `PlanOpts`,
+    /// backend). Stable across process restarts — it hashes values, never
+    /// addresses or container iteration order.
+    pub fn fingerprint(req: &PlanRequest) -> String {
+        let mut h = StableHasher::new();
+        h.write_str("automap-plan-request-v1");
+        // model: node structure + tensor metadata decide the search space
+        h.write_usize(req.graph.len());
+        for n in &req.graph.nodes {
+            h.write_str(&n.name);
+            h.write_str(&format!("{:?}", n.op));
+            h.write_usize(n.inputs.len());
+            for &i in &n.inputs {
+                h.write_usize(i);
+            }
+            h.write_str(&format!("{:?}", n.out));
+        }
+        hash_cluster(&mut h, &req.cluster);
+        // the device model feeds both the cost model and the default
+        // memory budget
+        let d = &req.dev;
+        for x in [d.peak_flops, d.hbm_bw, d.gemm_efficiency,
+                  d.vector_efficiency, d.memory, d.kernel_overhead]
+        {
+            h.write_f64(x);
+        }
+        let o = &req.opts;
+        match o.budget {
+            Some(b) => {
+                h.write_str("budget");
+                h.write_f64(b);
+            }
+            None => h.write_str("budget-default"),
+        }
+        h.write_f64(o.alpha);
+        h.write_usize(o.sweep);
+        hash_solve_opts(&mut h, &o.solve);
+        hash_mesh_shapes(&mut h, o.mesh_shapes.as_deref());
+        h.write_u64(o.seed);
+        req.backend.hash_into(&mut h);
+        h.hex()
+    }
+
+    fn emit(&self, ev: ProgressEvent) {
+        if let Some(f) = &self.progress {
+            f(&ev);
+        }
+    }
+
+    /// Resolve one request: cache hit, partial resume, or full solve.
+    pub fn plan(&self, req: &PlanRequest) -> Result<PlanOutcome> {
+        self.plan_shared(req, None)
+    }
+
+    fn plan_shared(
+        &self,
+        req: &PlanRequest,
+        shared: Option<&SharedCluster>,
+    ) -> Result<PlanOutcome> {
+        let fingerprint = Self::fingerprint(req);
+        let t0 = Instant::now();
+        match self.cache.lookup(&fingerprint) {
+            Lookup::Plan(plan, source, evicted) => {
+                self.emit_evictions(evicted);
+                self.emit(ProgressEvent::CacheLookup {
+                    fingerprint: fingerprint.clone(),
+                    source,
+                });
+                Ok(PlanOutcome {
+                    fingerprint,
+                    source,
+                    plan,
+                    wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                })
+            }
+            Lookup::Sharding(sharding) => {
+                self.emit(ProgressEvent::CacheLookup {
+                    fingerprint: fingerprint.clone(),
+                    source: PlanSource::PartialResume,
+                });
+                let mut planner =
+                    self.planner_for(req, shared).load_sharding(sharding);
+                let plan = planner.lower().map_err(|e| {
+                    anyhow!("{} (partial resume): {e}", req.tag)
+                })?;
+                // the sharding artifact is already on disk; restore the
+                // plan entry so the next lookup is a full hit
+                let evicted = self.cache.insert(&fingerprint, None, &plan)?;
+                self.emit_evictions(evicted);
+                Ok(PlanOutcome {
+                    fingerprint,
+                    source: PlanSource::PartialResume,
+                    plan,
+                    wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                })
+            }
+            Lookup::Miss => {
+                self.emit(ProgressEvent::CacheLookup {
+                    fingerprint: fingerprint.clone(),
+                    source: PlanSource::Solved,
+                });
+                let mut planner = self.planner_for(req, shared);
+                let plan = planner
+                    .lower()
+                    .map_err(|e| anyhow!("{}: {e}", req.tag))?;
+                let sharding = planner.sharding_solution().cloned();
+                let evicted = self.cache.insert(
+                    &fingerprint,
+                    sharding.as_ref(),
+                    &plan,
+                )?;
+                self.emit_evictions(evicted);
+                Ok(PlanOutcome {
+                    fingerprint,
+                    source: PlanSource::Solved,
+                    plan,
+                    wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                })
+            }
+        }
+    }
+
+    fn emit_evictions(&self, evicted: Vec<String>) {
+        for fingerprint in evicted {
+            self.emit(ProgressEvent::CacheEvicted { fingerprint });
+        }
+    }
+
+    /// Build the staged planner for a request, seeding it with shared
+    /// detect/mesh state when the batch driver already probed the
+    /// cluster, and forwarding stage progress to the service callback.
+    fn planner_for<'a>(
+        &'a self,
+        req: &'a PlanRequest,
+        shared: Option<&SharedCluster>,
+    ) -> Planner<'a> {
+        let mut p = match &req.cluster {
+            ClusterSpec::Sim(c) => Planner::new(&req.graph, c, &req.dev),
+            ClusterSpec::Report(r) => {
+                Planner::from_report(&req.graph, r.clone(), &req.dev)
+            }
+        };
+        p = p.with_opts(req.opts.clone());
+        if let Some(sc) = shared {
+            p = p
+                .load_cluster(sc.report.clone())
+                .load_meshes(sc.meshes.clone());
+        }
+        p = req.backend.install(p);
+        if let Some(f) = &self.progress {
+            p = p.on_progress(move |ev| f(ev));
+        }
+        p
+    }
+
+    /// Plan many requests concurrently over the `util::pool` workers
+    /// (bounded by `AUTOMAP_THREADS`). Identical requests are
+    /// deduplicated — the first occurrence solves, later occurrences are
+    /// served as cache hits — and requests sharing a cluster reuse one
+    /// topology probe + mesh enumeration. Output order matches input
+    /// order; per-request failures do not abort the batch.
+    pub fn plan_batch(
+        &self,
+        reqs: &[PlanRequest],
+    ) -> Vec<Result<PlanOutcome>> {
+        let shared = SharedClusters::new();
+        let fps: Vec<String> =
+            reqs.iter().map(Self::fingerprint).collect();
+        let mut first_of: BTreeMap<&str, usize> = BTreeMap::new();
+        let mut unique: Vec<usize> = Vec::new();
+        for (i, fp) in fps.iter().enumerate() {
+            first_of.entry(fp.as_str()).or_insert_with(|| {
+                unique.push(i);
+                i
+            });
+        }
+
+        let unique_results: Vec<Result<PlanOutcome>> =
+            parallel_map(&unique, |&i| {
+                let sc = shared.get_or_probe(&reqs[i]);
+                self.plan_indexed(i, &reqs[i], Some(&sc))
+            });
+
+        let mut slots: Vec<Option<Result<PlanOutcome>>> =
+            (0..reqs.len()).map(|_| None).collect();
+        for (i, r) in unique.iter().zip(unique_results) {
+            slots[*i] = Some(r);
+        }
+        // duplicates resolve after their primary: a cache hit when it
+        // succeeded, a mirrored error when it failed (identical inputs
+        // would only fail identically — don't re-solve to prove it)
+        for i in 0..reqs.len() {
+            if slots[i].is_some() {
+                continue;
+            }
+            let primary = first_of[fps[i].as_str()];
+            let failed = matches!(&slots[primary], Some(Err(_)));
+            slots[i] = Some(if failed {
+                let msg = match &slots[primary] {
+                    Some(Err(e)) => e.to_string(),
+                    _ => unreachable!(),
+                };
+                Err(anyhow!("duplicate of failed request #{primary}: {msg}"))
+            } else {
+                self.plan_indexed(i, &reqs[i], None)
+            });
+        }
+        slots.into_iter().map(|s| s.expect("slot filled")).collect()
+    }
+
+    fn plan_indexed(
+        &self,
+        index: usize,
+        req: &PlanRequest,
+        shared: Option<&SharedCluster>,
+    ) -> Result<PlanOutcome> {
+        let r = self.plan_shared(req, shared);
+        if let Ok(o) = &r {
+            self.emit(ProgressEvent::RequestDone {
+                index,
+                source: o.source,
+                ms: o.wall_ms,
+            });
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models::gpt2;
+
+    fn fast_opts() -> PlanOpts {
+        PlanOpts {
+            sweep: 2,
+            solve: SolveOpts {
+                beam_width: 12,
+                anneal_iters: 150,
+                lagrange_iters: 4,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    fn mini_request(devices: usize) -> PlanRequest {
+        PlanRequest::new(
+            "mini",
+            gpt2(&Gpt2Cfg::mini()),
+            SimCluster::fully_connected(devices),
+            DeviceModel::a100_80gb(),
+        )
+        .with_opts(fast_opts())
+    }
+
+    #[test]
+    fn fingerprint_is_pure_and_input_sensitive() {
+        let a = PlanService::fingerprint(&mini_request(2));
+        let b = PlanService::fingerprint(&mini_request(2));
+        assert_eq!(a, b, "fresh identical requests must agree");
+        let c = PlanService::fingerprint(&mini_request(4));
+        assert_ne!(a, c, "cluster size must change the key");
+        let mut d = mini_request(2);
+        d.opts.sweep += 1;
+        assert_ne!(a, PlanService::fingerprint(&d));
+        let e = mini_request(2).with_backend(BackendSpec::Exact);
+        assert_ne!(a, PlanService::fingerprint(&e));
+    }
+
+    #[test]
+    fn tag_does_not_affect_the_fingerprint() {
+        let mut a = mini_request(2);
+        a.tag = "first".into();
+        let mut b = mini_request(2);
+        b.tag = "second".into();
+        assert_eq!(
+            PlanService::fingerprint(&a),
+            PlanService::fingerprint(&b)
+        );
+    }
+
+    #[test]
+    fn memory_service_serves_second_request_from_cache() {
+        let svc = PlanService::new();
+        let req = mini_request(2);
+        let first = svc.plan(&req).unwrap();
+        assert_eq!(first.source, PlanSource::Solved);
+        let second = svc.plan(&req).unwrap();
+        assert_eq!(second.source, PlanSource::MemoryHit);
+        assert_eq!(
+            second.plan.to_json().to_string(),
+            first.plan.to_json().to_string(),
+            "cache hit must be byte-identical"
+        );
+        let s = svc.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.memory_hits, 1);
+    }
+}

@@ -17,6 +17,7 @@ use crate::graph::Graph;
 use crate::profiler::GraphProfile;
 use crate::sim::{baselines, DeviceModel, SimReport};
 use crate::solver::{solve, solve_exact, Solution, SolveOpts, SolverGraph};
+use crate::util::pool::parallel_map;
 
 /// Everything an analytic backend may consult.
 pub struct SolveCtx<'a> {
@@ -84,6 +85,70 @@ impl Solve for ExactSolve {
 
     fn solve(&self, sg: &SolverGraph, budget: f64) -> Option<Solution> {
         solve_exact(sg, budget)
+    }
+}
+
+/// Portfolio backend: races several beam configurations across the
+/// `util::pool` worker threads and keeps the best feasible solution.
+///
+/// The beam + annealing path is seed- and width-sensitive; rather than
+/// hand-tuning one configuration, a portfolio runs a diverse spread in
+/// parallel and takes the minimum-objective result. Deterministic for a
+/// fixed config list: `parallel_map` preserves input order and ties
+/// resolve to the first (lowest-index) config.
+#[derive(Debug, Clone)]
+pub struct PortfolioSolve {
+    pub configs: Vec<SolveOpts>,
+}
+
+impl PortfolioSolve {
+    pub fn new(configs: Vec<SolveOpts>) -> PortfolioSolve {
+        assert!(!configs.is_empty(), "portfolio needs >= 1 config");
+        PortfolioSolve { configs }
+    }
+
+    /// A diversity spread around `base`: the base config itself, then
+    /// wider-beam/short-anneal, narrower-beam/long-anneal, and
+    /// deeper-Lagrangian variants, each reseeded.
+    pub fn spread(base: SolveOpts, k: usize) -> PortfolioSolve {
+        let mut configs = Vec::with_capacity(k.max(1));
+        for i in 0..k.max(1) {
+            let mut o = base;
+            match i % 4 {
+                0 => {}
+                1 => {
+                    o.beam_width = (base.beam_width * 2).max(8);
+                    o.anneal_iters = (base.anneal_iters / 2).max(50);
+                }
+                2 => {
+                    o.beam_width = (base.beam_width / 2).max(4);
+                    o.anneal_iters = base.anneal_iters * 2;
+                }
+                _ => {
+                    o.lagrange_iters = base.lagrange_iters + 4;
+                }
+            }
+            o.seed = base
+                .seed
+                .wrapping_add(0x9e37_79b9_7f4a_7c15u64.wrapping_mul(i as u64));
+            configs.push(o);
+        }
+        PortfolioSolve { configs }
+    }
+}
+
+impl Solve for PortfolioSolve {
+    fn name(&self) -> String {
+        format!("portfolio({})", self.configs.len())
+    }
+
+    fn solve(&self, sg: &SolverGraph, budget: f64) -> Option<Solution> {
+        parallel_map(&self.configs, |o| solve(sg, budget, *o))
+            .into_iter()
+            .flatten()
+            .min_by(|a, b| {
+                a.time.partial_cmp(&b.time).expect("finite solver times")
+            })
     }
 }
 

@@ -3,15 +3,29 @@
 //! staged `Planner` (detect → meshes → solve_sharding → schedule_ckpt →
 //! lower, with serializable artifacts and pluggable solver backends);
 //! these functions preserve the original entrypoints and result shape.
+//!
+//! Both wrappers route through a process-wide [`PlanService`] with an
+//! in-memory cache, so repeated identical calls in one process are served
+//! without re-solving (planning is deterministic, so cached and fresh
+//! results are identical).
+
+use std::sync::OnceLock;
 
 use anyhow::Result;
 
-use crate::api::{PlanOpts, Planner};
+use crate::api::{BackendSpec, ClusterSpec, PlanOpts, PlanRequest,
+                 PlanService};
 use crate::cluster::{ClusterInfo, DeviceMesh, SimCluster};
 use crate::gen::ExecutionPlan;
-use crate::profiler::GraphProfile;
+use crate::profiler::{profile, GraphProfile};
 use crate::graph::Graph;
 use crate::sim::DeviceModel;
+
+/// The shared service behind the legacy wrappers.
+fn service() -> &'static PlanService {
+    static SERVICE: OnceLock<PlanService> = OnceLock::new();
+    SERVICE.get_or_init(PlanService::new)
+}
 
 /// Legacy name for the planner options.
 pub type PipelineOpts = PlanOpts;
@@ -37,10 +51,7 @@ pub fn autoparallelize(
     dev: &DeviceModel,
     opts: &PipelineOpts,
 ) -> Result<FullPlan> {
-    let mut planner =
-        Planner::new(g, cluster, dev).with_opts(opts.clone());
-    let compiled = planner.lower()?;
-    Ok(finish(compiled, planner.take_profile()))
+    plan_via_service(g, ClusterSpec::Sim(cluster.clone()), dev, opts)
 }
 
 /// Same, starting from an already-detected topology.
@@ -50,32 +61,42 @@ pub fn autoparallelize_with_info(
     dev: &DeviceModel,
     opts: &PipelineOpts,
 ) -> Result<FullPlan> {
-    let mut planner =
-        Planner::with_info(g, info.clone(), dev).with_opts(opts.clone());
-    let compiled = planner.lower()?;
-    Ok(finish(compiled, planner.take_profile()))
+    let report = crate::api::ClusterReport::from_info(info.clone());
+    plan_via_service(g, ClusterSpec::Report(report), dev, opts)
 }
 
-fn finish(
-    compiled: crate::api::CompiledPlan,
-    profile: GraphProfile,
-) -> FullPlan {
-    FullPlan {
+fn plan_via_service(
+    g: &Graph,
+    cluster: ClusterSpec,
+    dev: &DeviceModel,
+    opts: &PipelineOpts,
+) -> Result<FullPlan> {
+    let req = PlanRequest {
+        tag: g.name.clone(),
+        graph: g.clone(),
+        cluster,
+        dev: *dev,
+        opts: opts.clone(),
+        backend: BackendSpec::Beam,
+    };
+    let compiled = service().plan(&req)?.plan;
+    // the profile is symbolic (milliseconds) and not part of the cached
+    // artifact; recompute it for the legacy result shape
+    Ok(FullPlan {
         mesh: compiled.mesh,
         plan: compiled.plan,
         iter_time: compiled.iter_time,
         pflops: compiled.pflops,
         mem_per_device: compiled.mem_per_device,
         sweep_n: compiled.sweep_n,
-        profile,
-    }
+        profile: profile(g),
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::models::{gpt2, Gpt2Cfg};
-    use crate::profiler::profile;
     use crate::solver::SolveOpts;
 
     fn fast_opts() -> PipelineOpts {

@@ -1,16 +1,28 @@
-//! `automap` CLI — the Layer-3 leader entrypoint, built on the staged
-//! `api::Planner` compiler (detect → meshes → solve_sharding →
-//! schedule_ckpt → lower; see rust/src/api/README.md).
+//! `automap` CLI — the Layer-3 leader entrypoint. Single-plan commands
+//! are thin clients of the `api::PlanService` (cache-backed, concurrent)
+//! which drives the staged `api::Planner` compiler (detect → meshes →
+//! solve_sharding → schedule_ckpt → lower; see rust/src/api/README.md).
 //!
 //! Subcommands:
 //!   plan      --model gpt2-mini|alpha..delta --cluster fig5|nvlink<N>|single
 //!             [--budget-gb G] [--fast] [--codegen] [--progress]
-//!             [--backend beam|exact|ddp|megatron-1d|optimus-2d|3d-tp]
-//!             [--json] [--save-plan p.json] [--load-plan p.json] :
-//!             run the staged pipeline and print the plan. --save-plan
-//!             caches the serializable CompiledPlan artifact; --load-plan
+//!             [--backend beam|exact|portfolio|ddp|megatron-1d|optimus-2d|3d-tp]
+//!             [--json] [--save-plan p.json] [--load-plan p.json]
+//!             [--cache-dir DIR] :
+//!             plan through the service and print the result. --cache-dir
+//!             persists plans on disk (repeat runs are cache hits);
+//!             --save-plan copies the CompiledPlan artifact; --load-plan
 //!             replays one, skipping every solve stage; --json emits the
 //!             artifact on stdout instead of the human summary.
+//!   batch     <manifest.json> [--cache-dir DIR] [--out-dir DIR]
+//!             [--progress] [--json] : plan a JSON list of requests
+//!             concurrently (AUTOMAP_THREADS workers) with per-request
+//!             cache hit/miss status and a summary table. Manifest
+//!             entries: {"model": .., "cluster": .., "backend": ..,
+//!             "budget_gb": .., "fast": .., "sweep": .., "seed": ..,
+//!             "tag": ..} — only "model"/"cluster" are required.
+//!   cache     stats|clear [--cache-dir DIR] : inspect or empty the
+//!             on-disk plan cache.
 //!   cluster   --cluster fig5 [--json] : probe the simulated cluster and
 //!             print the ClusterReport + MeshCandidates artifacts.
 //!   profile   --model ... : symbolic profile (FLOPs, memory buckets).
@@ -22,43 +34,63 @@
 
 use anyhow::{anyhow, Result};
 
-use automap::api::{Artifact, Baseline, BaselineSolve, ClusterReport,
-                   CompiledPlan, ExactSolve, MeshCandidates, Planner,
-                   ProgressEvent};
+use automap::api::{Artifact, BackendSpec, BaselineSolve, ClusterReport,
+                   CompiledPlan, MeshCandidates, PlanOutcome, PlanRequest,
+                   PlanService, Planner, ProgressEvent};
 use automap::cluster::{detect, SimCluster};
 use automap::coordinator::tp::{serial_block_forward, tp_block_forward,
                                BlockParams};
 use automap::coordinator::trainer::train_dp;
-use automap::coordinator::PipelineOpts;
+use automap::coordinator::{autoparallelize, PipelineOpts};
 use automap::graph::models::{gpt2, Gpt2Cfg};
 use automap::graph::Graph;
 use automap::profiler::profile;
 use automap::runtime::{HostTensor, Runtime};
 use automap::sim::DeviceModel;
 use automap::solver::SolveOpts;
+use automap::util::bench::Table;
 use automap::util::cli::Args;
+use automap::util::json::Json;
 use automap::util::rng::Rng;
 
-fn model_for(name: &str) -> Gpt2Cfg {
-    match name {
+/// Default on-disk cache location for `batch` and `cache`.
+const DEFAULT_CACHE_DIR: &str = ".automap-cache";
+
+fn model_for(name: &str) -> Result<Gpt2Cfg> {
+    Ok(match name {
         "gpt2-mini" | "mini" => Gpt2Cfg::mini(),
         "alpha" | "beta" | "gamma" | "delta" => Gpt2Cfg::paper(name),
-        other => panic!("unknown model {other} (gpt2-mini|alpha..delta)"),
-    }
+        other => {
+            return Err(anyhow!(
+                "unknown model {other} (gpt2-mini|alpha..delta)"
+            ))
+        }
+    })
 }
 
-fn cluster_for(name: &str) -> SimCluster {
+fn cluster_for(name: &str) -> Result<SimCluster> {
     if name == "fig5" {
-        SimCluster::partially_connected_8gpu()
+        Ok(SimCluster::partially_connected_8gpu())
     } else if name == "single" {
-        SimCluster::single()
+        Ok(SimCluster::single())
     } else if let Some(n) = name.strip_prefix("nvlink") {
-        SimCluster::fully_connected(n.parse().expect("nvlink<N>"))
+        let n = n
+            .parse()
+            .map_err(|_| anyhow!("nvlink<N> needs an integer, got {n}"))?;
+        Ok(SimCluster::fully_connected(n))
     } else if let Some(spec) = name.strip_prefix("multinode") {
-        let (a, b) = spec.split_once('x').expect("multinode<N>x<M>");
-        SimCluster::multi_node(a.parse().unwrap(), b.parse().unwrap(), 100.0)
+        let (a, b) = spec
+            .split_once('x')
+            .ok_or_else(|| anyhow!("multinode<N>x<M>, got {spec}"))?;
+        Ok(SimCluster::multi_node(
+            a.parse().map_err(|_| anyhow!("bad node count {a}"))?,
+            b.parse().map_err(|_| anyhow!("bad per-node count {b}"))?,
+            100.0,
+        ))
     } else {
-        panic!("unknown cluster {name} (fig5|single|nvlink<N>|multinode<NxM>)")
+        Err(anyhow!(
+            "unknown cluster {name} (fig5|single|nvlink<N>|multinode<NxM>)"
+        ))
     }
 }
 
@@ -109,12 +141,79 @@ fn print_plan(g: &Graph, plan: &CompiledPlan, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Stderr narration shared by `plan --progress` and `batch --progress`.
+fn narrate(ev: &ProgressEvent) {
+    match ev {
+        ProgressEvent::StageStart { stage } => {
+            eprintln!("[stage] {} ...", stage.name());
+        }
+        ProgressEvent::StageDone { stage, ms } => {
+            eprintln!("[stage] {} done ({ms:.0} ms)", stage.name());
+        }
+        ProgressEvent::SweepPoint { shape, n, feasible, time, .. } => {
+            if *feasible {
+                eprintln!("  mesh {shape:?} n={n}: {:.2} ms", time * 1e3);
+            } else {
+                eprintln!("  mesh {shape:?} n={n}: infeasible");
+            }
+        }
+        ProgressEvent::CacheLookup { fingerprint, source } => {
+            eprintln!("[cache] {} {}", source.name(), &fingerprint[..16]);
+        }
+        ProgressEvent::CacheEvicted { fingerprint } => {
+            eprintln!("[cache] evicted {}", &fingerprint[..16]);
+        }
+        ProgressEvent::RequestDone { index, source, ms } => {
+            eprintln!("[batch] request #{index}: {} ({ms:.0} ms)",
+                      source.name());
+        }
+        _ => {}
+    }
+}
+
+/// Build the service for a command: on-disk when `--cache-dir` is given
+/// (or `default_dir` is set), memory-only otherwise.
+fn service_for(
+    args: &Args,
+    default_dir: Option<&str>,
+) -> Result<PlanService> {
+    let dir = args.get("cache-dir").or(default_dir);
+    let svc = match dir {
+        Some(d) => PlanService::with_dir(d)?,
+        None => PlanService::new(),
+    };
+    Ok(if args.has_flag("progress") {
+        svc.on_progress(narrate)
+    } else {
+        svc
+    })
+}
+
+fn request_for(
+    tag: &str,
+    model: &str,
+    cluster: &str,
+    backend: &str,
+    opts: PipelineOpts,
+) -> Result<PlanRequest> {
+    let cfg = model_for(model)?;
+    let backend = BackendSpec::parse(backend, cfg, opts.solve)?;
+    Ok(PlanRequest::new(
+        tag,
+        gpt2(&cfg),
+        cluster_for(cluster)?,
+        DeviceModel::a100_80gb(),
+    )
+    .with_opts(opts)
+    .with_backend(backend))
+}
+
 fn cmd_plan(args: &Args) -> Result<()> {
-    let cfg = model_for(args.get_or("model", "gpt2-mini"));
-    let g = gpt2(&cfg);
+    let model = args.get_or("model", "gpt2-mini");
 
     // replay path: the artifact already holds the full lowered plan
     if let Some(path) = args.get("load-plan") {
+        let g = gpt2(&model_for(model)?);
         let plan = CompiledPlan::load(path)?;
         if plan.graph_nodes != g.len() {
             return Err(anyhow!(
@@ -122,7 +221,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
                  {} builds {} nodes — pass the model the plan was \
                  saved with",
                 plan.graph_nodes,
-                args.get_or("model", "gpt2-mini"),
+                model,
                 g.len()
             ));
         }
@@ -130,59 +229,264 @@ fn cmd_plan(args: &Args) -> Result<()> {
         return print_plan(&g, &plan, args);
     }
 
-    let cluster = cluster_for(args.get_or("cluster", "fig5"));
-    let dev = DeviceModel::a100_80gb();
-    let mut planner =
-        Planner::new(&g, &cluster, &dev).with_opts(opts_from(args));
-    planner = match args.get_or("backend", "beam") {
-        "beam" => planner,
-        "exact" => planner.with_backend(ExactSolve),
-        "ddp" => planner
-            .with_backend(BaselineSolve::new(Baseline::Ddp, cfg)),
-        "megatron-1d" => planner
-            .with_backend(BaselineSolve::new(Baseline::Megatron1d, cfg)),
-        "optimus-2d" => planner
-            .with_backend(BaselineSolve::new(Baseline::Optimus2d, cfg)),
-        "3d-tp" => planner
-            .with_backend(BaselineSolve::new(Baseline::Tp3d, cfg)),
-        other => {
-            return Err(anyhow!(
-                "unknown backend {other} \
-                 (beam|exact|ddp|megatron-1d|optimus-2d|3d-tp)"
-            ))
-        }
-    };
-    if args.has_flag("progress") {
-        planner = planner.on_progress(|ev| match ev {
-            ProgressEvent::StageStart { stage } => {
-                eprintln!("[stage] {} ...", stage.name());
-            }
-            ProgressEvent::StageDone { stage, ms } => {
-                eprintln!("[stage] {} done ({ms:.0} ms)", stage.name());
-            }
-            ProgressEvent::SweepPoint { shape, n, feasible, time, .. } => {
-                if *feasible {
-                    eprintln!(
-                        "  mesh {shape:?} n={n}: {:.2} ms",
-                        time * 1e3
-                    );
-                } else {
-                    eprintln!("  mesh {shape:?} n={n}: infeasible");
-                }
-            }
-            _ => {}
-        });
-    }
-    let plan = planner.lower()?;
+    let req = request_for(
+        model,
+        model,
+        args.get_or("cluster", "fig5"),
+        args.get_or("backend", "beam"),
+        opts_from(args),
+    )?;
+    let service = service_for(args, None)?;
+    let out = service.plan(&req)?;
+    eprintln!(
+        "cache: {} (fingerprint {})",
+        out.source.name(),
+        out.fingerprint
+    );
     if let Some(path) = args.get("save-plan") {
-        plan.save(path)?;
+        out.plan.save(path)?;
         eprintln!("plan saved to {path}");
     }
-    print_plan(&g, &plan, args)
+    print_plan(&req.graph, &out.plan, args)
+}
+
+/// One parsed `automap batch` manifest entry (strings feed `request_for`).
+struct ManifestEntry {
+    tag: String,
+    model: String,
+    cluster: String,
+    backend: String,
+    opts: PipelineOpts,
+}
+
+fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let v = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+    let items = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("manifest must be a JSON array"))?;
+    let mut out = Vec::new();
+    for (i, item) in items.iter().enumerate() {
+        if item.as_obj().is_none() {
+            return Err(anyhow!("manifest entry {i} must be an object"));
+        }
+        let model = item
+            .get("model")
+            .as_str()
+            .unwrap_or("gpt2-mini")
+            .to_string();
+        let cluster = item
+            .get("cluster")
+            .as_str()
+            .unwrap_or("fig5")
+            .to_string();
+        let backend = item
+            .get("backend")
+            .as_str()
+            .unwrap_or("beam")
+            .to_string();
+        let mut opts = PipelineOpts::default();
+        if item.get("fast").as_bool().unwrap_or(false) {
+            opts.sweep = 3;
+            opts.solve = SolveOpts {
+                beam_width: 16,
+                anneal_iters: 300,
+                lagrange_iters: 6,
+                ..Default::default()
+            };
+        }
+        if let Some(gb) = item.get("budget_gb").as_f64() {
+            opts.budget = Some(gb * 1e9);
+        }
+        if let Some(sweep) = item.get("sweep").as_usize() {
+            opts.sweep = sweep;
+        }
+        if let Some(seed) = item.get("seed").as_usize() {
+            opts.seed = seed as u64;
+        }
+        let tag = item
+            .get("tag")
+            .as_str()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("{model}@{cluster}/{backend}"));
+        out.push(ManifestEntry { tag, model, cluster, backend, opts });
+    }
+    Ok(out)
+}
+
+fn cmd_batch(args: &Args) -> Result<()> {
+    let manifest_path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: automap batch <manifest.json>"))?;
+    let text = std::fs::read_to_string(manifest_path)
+        .map_err(|e| anyhow!("reading {manifest_path}: {e}"))?;
+    let entries = parse_manifest(&text)?;
+    if entries.is_empty() {
+        return Err(anyhow!("{manifest_path} holds no requests"));
+    }
+    let reqs = entries
+        .iter()
+        .map(|e| {
+            request_for(&e.tag, &e.model, &e.cluster, &e.backend,
+                        e.opts.clone())
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let service = service_for(args, Some(DEFAULT_CACHE_DIR))?;
+    let cache_dir = service
+        .cache()
+        .dir()
+        .expect("batch service always has a disk tier")
+        .to_path_buf();
+    eprintln!(
+        "planning {} request(s) over {} worker thread(s), cache at {}",
+        reqs.len(),
+        automap::util::pool::threads().min(reqs.len()),
+        cache_dir.display()
+    );
+    let t0 = std::time::Instant::now();
+    let results = service.plan_batch(&reqs);
+    let wall = t0.elapsed().as_secs_f64();
+
+    // optionally copy each plan artifact out of the cache
+    let out_dir = args.get("out-dir");
+    if let Some(d) = out_dir {
+        std::fs::create_dir_all(d)
+            .map_err(|e| anyhow!("creating {d}: {e}"))?;
+    }
+    let path_of = |i: usize, out: &PlanOutcome| -> Result<String> {
+        match out_dir {
+            Some(d) => {
+                let p = format!("{d}/req{i:03}.plan.json");
+                out.plan.save(&p)?;
+                Ok(p)
+            }
+            None => Ok(cache_dir
+                .join(format!("{}.plan.json", out.fingerprint))
+                .display()
+                .to_string()),
+        }
+    };
+
+    let mut failures = 0usize;
+    if args.has_flag("json") {
+        let mut rows = Vec::new();
+        for (i, (e, r)) in entries.iter().zip(&results).enumerate() {
+            rows.push(match r {
+                Ok(out) => automap::util::json::obj(vec![
+                    ("tag", automap::util::json::s(&e.tag)),
+                    ("fingerprint",
+                     automap::util::json::s(&out.fingerprint)),
+                    ("status", automap::util::json::s(out.source.name())),
+                    ("iter_time",
+                     automap::util::json::num(out.plan.iter_time)),
+                    ("pflops", automap::util::json::num(out.plan.pflops)),
+                    ("plan_path",
+                     automap::util::json::s(&path_of(i, out)?)),
+                ]),
+                Err(err) => {
+                    failures += 1;
+                    automap::util::json::obj(vec![
+                        ("tag", automap::util::json::s(&e.tag)),
+                        ("error",
+                         automap::util::json::s(&err.to_string())),
+                    ])
+                }
+            });
+        }
+        println!("{}", Json::Arr(rows));
+        if failures > 0 {
+            return Err(anyhow!("{failures} request(s) failed"));
+        }
+        return Ok(());
+    }
+
+    let mut table = Table::new(
+        "batch planning",
+        &["#", "tag", "status", "iter ms", "PFLOPS", "plan file"],
+    );
+    for (i, (e, r)) in entries.iter().zip(&results).enumerate() {
+        match r {
+            Ok(out) => table.row(vec![
+                i.to_string(),
+                e.tag.clone(),
+                out.source.name().to_string(),
+                format!("{:.3}", out.plan.iter_time * 1e3),
+                format!("{:.3}", out.plan.pflops),
+                path_of(i, out)?,
+            ]),
+            Err(err) => {
+                failures += 1;
+                table.row(vec![
+                    i.to_string(),
+                    e.tag.clone(),
+                    "FAILED".into(),
+                    "-".into(),
+                    "-".into(),
+                    err.to_string(),
+                ]);
+            }
+        }
+    }
+    table.print();
+    let s = service.stats();
+    println!(
+        "\n{} request(s) in {:.2}s — {} memory hit(s), {} disk hit(s), \
+         {} partial resume(s), {} solve(s), {} eviction(s), {} failure(s)",
+        results.len(),
+        wall,
+        s.memory_hits,
+        s.disk_hits,
+        s.partial_resumes,
+        s.misses,
+        s.evictions,
+        failures
+    );
+    if failures > 0 {
+        return Err(anyhow!("{failures} request(s) failed"));
+    }
+    Ok(())
+}
+
+fn cmd_cache(args: &Args) -> Result<()> {
+    let dir = args.get_or("cache-dir", DEFAULT_CACHE_DIR);
+    let action = args.positional.first().map(String::as_str);
+    let service = PlanService::with_dir(dir)?;
+    match action {
+        Some("stats") | None => {
+            let entries = service.cache().disk_entries()?;
+            let plans =
+                entries.iter().filter(|e| e.kind == "plan").count();
+            let shardings =
+                entries.iter().filter(|e| e.kind == "sharding").count();
+            let bytes: u64 = entries.iter().map(|e| e.bytes).sum();
+            println!("cache dir      : {dir}");
+            println!("plan entries   : {plans}");
+            println!("sharding seeds : {shardings}");
+            println!("total size     : {:.2} MB", bytes as f64 / 1e6);
+            for e in entries {
+                println!(
+                    "  {} {:>9} {:>8.1} KB",
+                    e.fingerprint,
+                    e.kind,
+                    e.bytes as f64 / 1e3
+                );
+            }
+            Ok(())
+        }
+        Some("clear") => {
+            let removed = service.cache().clear()?;
+            println!("removed {removed} cache file(s) from {dir}");
+            Ok(())
+        }
+        Some(other) => {
+            Err(anyhow!("unknown cache action {other} (stats|clear)"))
+        }
+    }
 }
 
 fn cmd_cluster(args: &Args) -> Result<()> {
-    let cluster = cluster_for(args.get_or("cluster", "fig5"));
+    let cluster = cluster_for(args.get_or("cluster", "fig5"))?;
     let report =
         ClusterReport::probe(&cluster, args.get_usize("seed", 42) as u64);
     let candidates = MeshCandidates::enumerate(&report, None);
@@ -218,7 +522,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 }
 
 fn cmd_profile(args: &Args) -> Result<()> {
-    let cfg = model_for(args.get_or("model", "gpt2-mini"));
+    let cfg = model_for(args.get_or("model", "gpt2-mini"))?;
     let t0 = std::time::Instant::now();
     let g = gpt2(&cfg);
     let p = profile(&g);
@@ -336,9 +640,8 @@ fn cmd_table4(args: &Args) -> Result<()> {
                 ..Default::default()
             };
         }
-        let ours = Planner::new(&g, &cluster, &dev)
-            .with_opts(opts)
-            .lower()
+        // "ours" goes through the legacy wrapper, i.e. the PlanService
+        let ours = autoparallelize(&g, &cluster, &dev, &opts)
             .map(|p| format!("{:.3}", p.pflops * scale))
             .unwrap_or_else(|_| "-".into());
         println!(
@@ -360,6 +663,8 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("plan") => cmd_plan(&args),
+        Some("batch") => cmd_batch(&args),
+        Some("cache") => cmd_cache(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("profile") => cmd_profile(&args),
         Some("train") => cmd_train(&args),
@@ -367,7 +672,8 @@ fn main() -> Result<()> {
         Some("table4") => cmd_table4(&args),
         _ => {
             println!(
-                "usage: automap <plan|cluster|profile|train|tp-check|table4> [--options]"
+                "usage: automap <plan|batch|cache|cluster|profile|train|\
+                 tp-check|table4> [--options]"
             );
             println!("see rust/src/main.rs header for details");
             Ok(())

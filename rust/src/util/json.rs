@@ -348,6 +348,84 @@ pub fn write_json(v: &Json, out: &mut String) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// stable hashing (cache fingerprints)
+
+/// Process-independent 128-bit content hasher (two FNV-1a lanes with
+/// distinct offset bases). Used for plan-cache fingerprints, so the
+/// contract is *stability*: the same byte stream must produce the same
+/// hex digest across runs, processes, and machines. Never feed it
+/// addresses, iteration order of non-deterministic containers, or
+/// `{:p}`-style formatting.
+#[derive(Debug, Clone, Copy)]
+pub struct StableHasher {
+    a: u64,
+    b: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Default for StableHasher {
+    fn default() -> Self {
+        StableHasher::new()
+    }
+}
+
+impl StableHasher {
+    pub fn new() -> StableHasher {
+        StableHasher {
+            a: FNV_OFFSET,
+            b: FNV_OFFSET ^ 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &x in bytes {
+            self.a = (self.a ^ x as u64).wrapping_mul(FNV_PRIME);
+            self.b = (self.b ^ x as u64).wrapping_mul(FNV_PRIME);
+            // keep the lanes from shadowing each other
+            self.b = self.b.rotate_left(1);
+        }
+    }
+
+    pub fn write_str(&mut self, s: &str) {
+        self.write(s.as_bytes());
+        // length-prefix-free framing: terminate so "ab"+"c" != "a"+"bc"
+        self.write(&[0xff]);
+    }
+
+    pub fn write_u64(&mut self, x: u64) {
+        self.write(&x.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, x: usize) {
+        self.write_u64(x as u64);
+    }
+
+    /// Bit-exact float hashing (distinguishes -0.0/0.0, hashes NaN
+    /// payloads as-is — fingerprint inputs are deterministic anyway).
+    pub fn write_f64(&mut self, x: f64) {
+        self.write_u64(x.to_bits());
+    }
+
+    /// 32-hex-char digest, safe for use as a filename.
+    pub fn hex(&self) -> String {
+        format!("{:016x}{:016x}", self.a, self.b)
+    }
+}
+
+/// Digest of a JSON value via its canonical text form (the writer sorts
+/// object keys and uses shortest-roundtrip floats, so equal values always
+/// produce equal digests).
+pub fn hash_json(v: &Json) -> String {
+    let mut text = String::new();
+    write_json(v, &mut text);
+    let mut h = StableHasher::new();
+    h.write_str(&text);
+    h.hex()
+}
+
 /// Convenience constructors used by report writers.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -416,5 +494,41 @@ mod tests {
         let v = Json::parse("[8, 64, 128]").unwrap();
         assert_eq!(v.usize_vec(), Some(vec![8, 64, 128]));
         assert_eq!(Json::parse("[1, \"x\"]").unwrap().usize_vec(), None);
+    }
+
+    #[test]
+    fn stable_hasher_is_deterministic_and_framed() {
+        let mut h1 = StableHasher::new();
+        h1.write_str("ab");
+        h1.write_str("c");
+        let mut h2 = StableHasher::new();
+        h2.write_str("ab");
+        h2.write_str("c");
+        assert_eq!(h1.hex(), h2.hex());
+        // string framing: ("ab","c") must differ from ("a","bc")
+        let mut h3 = StableHasher::new();
+        h3.write_str("a");
+        h3.write_str("bc");
+        assert_ne!(h1.hex(), h3.hex());
+        assert_eq!(h1.hex().len(), 32);
+        assert!(h1.hex().chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn stable_hasher_distinguishes_floats_bitwise() {
+        let mut a = StableHasher::new();
+        a.write_f64(0.0);
+        let mut b = StableHasher::new();
+        b.write_f64(-0.0);
+        assert_ne!(a.hex(), b.hex());
+    }
+
+    #[test]
+    fn hash_json_matches_for_equal_values() {
+        let a = Json::parse(r#"{"x": 1, "y": [2, 3]}"#).unwrap();
+        let b = Json::parse(r#"{ "y":[2,3], "x": 1 }"#).unwrap();
+        assert_eq!(hash_json(&a), hash_json(&b), "key order is canonical");
+        let c = Json::parse(r#"{"x": 1, "y": [2, 4]}"#).unwrap();
+        assert_ne!(hash_json(&a), hash_json(&c));
     }
 }

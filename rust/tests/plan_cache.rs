@@ -1,0 +1,357 @@
+//! PlanService / PlanCache integration tests: cache keying, warm-hit
+//! semantics (byte-identical plan, no solver invocation), disk-tier
+//! survival across service instances (simulated process restart),
+//! partial resume from the sharding artifact, the concurrent batch
+//! driver, and the portfolio backend.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use automap::api::{Artifact, BackendSpec, BeamSolve, PlanCache, PlanOpts,
+                   PlanRequest, PlanService, PlanSource, PlanStage,
+                   Planner, PortfolioSolve, ProgressEvent, Solve};
+use automap::cluster::SimCluster;
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::layout::LayoutManager;
+use automap::sim::DeviceModel;
+use automap::solver::{SolveOpts, SolverGraph};
+
+fn fast_opts() -> PlanOpts {
+    PlanOpts {
+        sweep: 2,
+        solve: SolveOpts {
+            beam_width: 12,
+            anneal_iters: 150,
+            lagrange_iters: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn mini_request(tag: &str, devices: usize) -> PlanRequest {
+    PlanRequest::new(
+        tag,
+        gpt2(&Gpt2Cfg::mini()),
+        SimCluster::fully_connected(devices),
+        DeviceModel::a100_80gb(),
+    )
+    .with_opts(fast_opts())
+}
+
+/// Fresh per-test scratch directory under the system temp dir.
+fn scratch(name: &str) -> PathBuf {
+    static UNIQUE: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "automap_plan_cache_{}_{}_{}",
+        name,
+        std::process::id(),
+        UNIQUE.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn warm_hit_is_byte_identical_and_runs_no_solver_stage() {
+    let stages: Arc<Mutex<Vec<PlanStage>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let seen = Arc::clone(&stages);
+    let svc = PlanService::new().on_progress(move |ev| {
+        if let ProgressEvent::StageStart { stage } = ev {
+            seen.lock().unwrap().push(*stage);
+        }
+    });
+    let req = mini_request("mini", 2);
+
+    let cold = svc.plan(&req).unwrap();
+    assert_eq!(cold.source, PlanSource::Solved);
+    let cold_stages = stages.lock().unwrap().len();
+    assert!(cold_stages >= 4, "cold solve runs the full pipeline");
+
+    let warm = svc.plan(&req).unwrap();
+    assert_eq!(warm.source, PlanSource::MemoryHit);
+    assert_eq!(
+        stages.lock().unwrap().len(),
+        cold_stages,
+        "a warm hit must not start any pipeline stage (no Solve backend \
+         invocation)"
+    );
+    assert_eq!(
+        warm.plan.to_json().to_string(),
+        cold.plan.to_json().to_string(),
+        "warm cache-hit must return a byte-identical CompiledPlan"
+    );
+    assert_eq!(warm.fingerprint, cold.fingerprint);
+
+    let s = svc.stats();
+    assert_eq!(s.misses, 1);
+    assert_eq!(s.memory_hits, 1);
+    assert_eq!(s.partial_resumes, 0);
+}
+
+#[test]
+fn cache_key_misses_on_model_cluster_or_opts_change() {
+    let base = PlanService::fingerprint(&mini_request("a", 2));
+
+    // identical request built from scratch -> identical key
+    assert_eq!(base, PlanService::fingerprint(&mini_request("b", 2)));
+
+    // model spec change (one more layer)
+    let mut cfg = Gpt2Cfg::mini();
+    cfg.n_layer += 1;
+    let bigger = PlanRequest::new(
+        "bigger",
+        gpt2(&cfg),
+        SimCluster::fully_connected(2),
+        DeviceModel::a100_80gb(),
+    )
+    .with_opts(fast_opts());
+    assert_ne!(base, PlanService::fingerprint(&bigger));
+
+    // cluster topology change (same device count, different wiring)
+    let two_nodes = PlanRequest::new(
+        "multinode",
+        gpt2(&Gpt2Cfg::mini()),
+        SimCluster::multi_node(2, 1, 100.0),
+        DeviceModel::a100_80gb(),
+    )
+    .with_opts(fast_opts());
+    assert_ne!(base, PlanService::fingerprint(&two_nodes));
+
+    // every PlanOpts knob participates
+    let tweaks: [fn(&mut PlanOpts); 6] = [
+        |o| o.sweep += 1,
+        |o| o.alpha += 0.1,
+        |o| o.budget = Some(1e9),
+        |o| o.seed += 1,
+        |o| o.solve.beam_width += 1,
+        |o| o.mesh_shapes = Some(vec![vec![2]]),
+    ];
+    for tweak in tweaks {
+        let mut req = mini_request("tweaked", 2);
+        tweak(&mut req.opts);
+        assert_ne!(
+            base,
+            PlanService::fingerprint(&req),
+            "an opts change must change the fingerprint"
+        );
+    }
+
+    // device model change
+    let mut req = mini_request("smaller-dev", 2);
+    req.dev.memory /= 2.0;
+    assert_ne!(base, PlanService::fingerprint(&req));
+
+    // backend change
+    let req = mini_request("exact", 2).with_backend(BackendSpec::Exact);
+    assert_ne!(base, PlanService::fingerprint(&req));
+}
+
+#[test]
+fn disk_tier_serves_a_fresh_service_instance() {
+    let dir = scratch("restart");
+    let req = mini_request("mini", 2);
+
+    let first = PlanService::with_dir(&dir).unwrap();
+    let cold = first.plan(&req).unwrap();
+    assert_eq!(cold.source, PlanSource::Solved);
+    drop(first);
+
+    // a new service over the same directory — the "process restart".
+    // The fingerprint must re-derive identically and find the file.
+    let second = PlanService::with_dir(&dir).unwrap();
+    let warm = second.plan(&req).unwrap();
+    assert_eq!(warm.source, PlanSource::DiskHit);
+    assert_eq!(warm.fingerprint, cold.fingerprint);
+    assert_eq!(
+        warm.plan.to_json().to_string(),
+        cold.plan.to_json().to_string()
+    );
+    // promoted to memory: third lookup is a memory hit
+    let third = second.plan(&req).unwrap();
+    assert_eq!(third.source, PlanSource::MemoryHit);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn partial_resume_skips_the_solver_but_not_the_lowering() {
+    let dir = scratch("partial");
+    let req = mini_request("mini", 2);
+
+    let svc = PlanService::with_dir(&dir).unwrap();
+    let cold = svc.plan(&req).unwrap();
+
+    // invalidate the plan (e.g. after a generator change) but keep the
+    // sharding artifact
+    svc.cache().drop_plan(&cold.fingerprint).unwrap();
+    let resumed = svc.plan(&req).unwrap();
+    assert_eq!(resumed.source, PlanSource::PartialResume);
+    assert_eq!(
+        resumed.plan.to_json().to_string(),
+        cold.plan.to_json().to_string(),
+        "re-lowering from the cached sharding must reproduce the plan"
+    );
+    assert_eq!(svc.stats().partial_resumes, 1);
+
+    // the resume restored the plan entry: next request is a hit again
+    let warm = svc.plan(&req).unwrap();
+    assert!(warm.source.is_hit());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn batch_plans_concurrently_and_reports_per_request_status() {
+    // saturate a small pool deterministically
+    std::env::set_var("AUTOMAP_THREADS", "4");
+    let dir = scratch("batch");
+    let svc = PlanService::with_dir(&dir).unwrap();
+
+    let mut sweep3 = mini_request("nvlink2-sweep3", 2);
+    sweep3.opts.sweep = 3;
+    let reqs = vec![
+        mini_request("nvlink2", 2),
+        mini_request("nvlink4", 4),
+        PlanRequest::new(
+            "fig5-2",
+            gpt2(&Gpt2Cfg::mini()),
+            SimCluster::fig5_prefix(2),
+            DeviceModel::a100_80gb(),
+        )
+        .with_opts(fast_opts()),
+        sweep3,
+        // duplicates of request 0: served from cache, not re-solved
+        mini_request("nvlink2-dup", 2),
+        mini_request("nvlink2-dup2", 2),
+    ];
+
+    let results = svc.plan_batch(&reqs);
+    assert_eq!(results.len(), reqs.len());
+    let outcomes: Vec<_> =
+        results.into_iter().map(|r| r.unwrap()).collect();
+
+    // 4 distinct fingerprints solved, 2 duplicates served as hits
+    for o in &outcomes[..4] {
+        assert_eq!(o.source, PlanSource::Solved, "{}", o.fingerprint);
+    }
+    for o in &outcomes[4..] {
+        assert!(o.source.is_hit(), "duplicate must be a cache hit");
+        assert_eq!(o.fingerprint, outcomes[0].fingerprint);
+        assert_eq!(
+            o.plan.to_json().to_string(),
+            outcomes[0].plan.to_json().to_string()
+        );
+    }
+    let s = svc.stats();
+    assert_eq!(s.misses, 4);
+    assert_eq!(s.hits(), 2);
+
+    // a second identical batch is served entirely from cache
+    let again = svc.plan_batch(&reqs);
+    for (r, first) in again.into_iter().zip(&outcomes) {
+        let o = r.unwrap();
+        assert!(o.source.is_hit());
+        assert_eq!(o.fingerprint, first.fingerprint);
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn batch_failures_do_not_abort_the_rest() {
+    let svc = PlanService::new();
+    // an impossibly tight budget is infeasible on every mesh
+    let mut doomed = mini_request("doomed", 2);
+    doomed.opts.budget = Some(1.0);
+    let reqs = vec![mini_request("ok", 2), doomed];
+    let results = svc.plan_batch(&reqs);
+    assert!(results[0].is_ok());
+    assert!(results[1].is_err());
+}
+
+#[test]
+fn eviction_is_counted_and_reported() {
+    let svc = PlanService::with_cache(
+        PlanCache::in_memory().with_capacity(1),
+    );
+    svc.plan(&mini_request("a", 2)).unwrap();
+    svc.plan(&mini_request("b", 4)).unwrap();
+    assert_eq!(svc.stats().evictions, 1, "capacity 1 evicts the first");
+    // "b" is resident, "a" was evicted (memory-only service -> re-solve)
+    let b = svc.plan(&mini_request("b2", 4)).unwrap();
+    assert_eq!(b.source, PlanSource::MemoryHit);
+    let a = svc.plan(&mini_request("a2", 2)).unwrap();
+    assert_eq!(a.source, PlanSource::Solved);
+}
+
+#[test]
+fn portfolio_backend_is_at_least_as_good_as_its_base_config() {
+    let g = gpt2(&Gpt2Cfg::mini());
+    let dev = DeviceModel::a100_80gb();
+    let mesh = automap::cluster::DeviceMesh {
+        shape: vec![4],
+        devices: (0..4).collect(),
+        axis_alpha: vec![2e-6; 1],
+        axis_beta: vec![100e9; 1],
+    };
+    let mut lm = LayoutManager::new(mesh.clone());
+    let sg = SolverGraph::build(&g, &mesh, &dev, &mut lm);
+    let base = SolveOpts {
+        beam_width: 8,
+        anneal_iters: 100,
+        lagrange_iters: 4,
+        ..Default::default()
+    };
+    let single = BeamSolve(base).solve(&sg, 1e15).unwrap();
+    let portfolio = PortfolioSolve::spread(base, 4);
+    assert_eq!(portfolio.name(), "portfolio(4)");
+    let best = portfolio.solve(&sg, 1e15).unwrap();
+    assert!(
+        best.time <= single.time + 1e-12,
+        "portfolio races the base config, so it can only improve: \
+         {} vs {}",
+        best.time,
+        single.time
+    );
+    // determinism: the race resolves identically on every run
+    let again = portfolio.solve(&sg, 1e15).unwrap();
+    assert_eq!(again.time, best.time);
+    assert_eq!(again.choice, best.choice);
+}
+
+#[test]
+fn portfolio_plugs_into_the_service_and_planner() {
+    let base = SolveOpts {
+        beam_width: 8,
+        anneal_iters: 100,
+        lagrange_iters: 4,
+        ..Default::default()
+    };
+    let g = gpt2(&Gpt2Cfg::mini());
+    let cluster = SimCluster::fully_connected(2);
+    let dev = DeviceModel::a100_80gb();
+
+    // directly on the staged planner
+    let plan = Planner::new(&g, &cluster, &dev)
+        .with_opts(PlanOpts { sweep: 2, solve: base, ..Default::default() })
+        .with_backend(PortfolioSolve::spread(base, 2))
+        .lower()
+        .unwrap();
+    assert_eq!(plan.backend, "portfolio(2)");
+    assert!(plan.iter_time.is_finite() && plan.iter_time > 0.0);
+
+    // through the service, with a distinct fingerprint from beam
+    let mut req = mini_request("portfolio", 2);
+    req.backend =
+        BackendSpec::Portfolio(PortfolioSolve::spread(base, 2).configs);
+    assert_ne!(
+        PlanService::fingerprint(&req),
+        PlanService::fingerprint(&mini_request("beam", 2))
+    );
+    let svc = PlanService::new();
+    let out = svc.plan(&req).unwrap();
+    assert_eq!(out.plan.backend, "portfolio(2)");
+}
