@@ -91,9 +91,10 @@ fn main() -> anyhow::Result<()> {
     let s = service.stats();
     println!(
         "\ncache stats: {} memory hit(s), {} disk hit(s), {} partial \
-         resume(s), {} miss(es), {} eviction(s)",
+         resume(s), {} miss(es), {} eviction(s); {} solver graph(s) \
+         built, {} shared",
         s.memory_hits, s.disk_hits, s.partial_resumes, s.misses,
-        s.evictions
+        s.evictions, s.sgraph_builds, s.sgraph_reuses
     );
     Ok(())
 }

@@ -97,7 +97,7 @@ fn main() {
     let m = mesh(&[2, 4]);
     let tshape = vec![64usize, 128];
     let specs = ShardingSpec::enumerate(&tshape, &m);
-    let mut lm = LayoutManager::new(m);
+    let lm = LayoutManager::new(m);
     let s = bench("convert-with-cache(2x4)", 1, if q { 50 } else { 2000 }, || {
         let mut acc = 0.0;
         for a in specs.iter().take(6) {
@@ -113,7 +113,7 @@ fn main() {
     println!(
         "cache: {} entries, {} hits / {} misses",
         lm.cache_len(),
-        lm.cache_hits,
-        lm.cache_misses
+        lm.cache_hits(),
+        lm.cache_misses()
     );
 }

@@ -1,0 +1,131 @@
+//! Bench: solver-graph construction (§5.1 preprocessing — the compile-
+//! time bottleneck the interned middle-end attacks). Three regimes on
+//! the fig5 clusters:
+//!
+//! * **cold-seq**  — fresh `LayoutManager` + `SolverGraph::build` with
+//!   `AUTOMAP_THREADS=1` (the pre-refactor sequential edge pricing);
+//! * **cold-par**  — same build with the default thread pool (parallel
+//!   strategy generation + parallel edge-matrix pricing);
+//! * **shared**    — `SolverGraphStore::get_or_build` on a warm store
+//!   (what every concurrent `plan_batch` request after the first pays).
+//!
+//! Results are printed as a table and recorded in `BENCH_sgraph.json`
+//! at the working directory root.
+//!
+//! `cargo bench --bench sgraph_build [-- --quick]`
+
+use automap::api::{graph_fingerprint, ClusterReport, MeshCandidates,
+                   SolverGraphStore};
+use automap::cluster::{DeviceMesh, SimCluster};
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::layout::LayoutManager;
+use automap::sim::DeviceModel;
+use automap::solver::SolverGraph;
+use automap::util::bench::{bench, quick, Table};
+use automap::util::json::{arr, num, obj, s, write_json, Json};
+
+/// The widest mesh the cluster supports (most axes; ties to the first),
+/// i.e. the most edge-pricing work per build.
+fn widest_mesh(meshes: &[DeviceMesh]) -> &DeviceMesh {
+    meshes
+        .iter()
+        .max_by_key(|m| m.shape.len())
+        .expect("fig5 clusters always yield at least one mesh")
+}
+
+fn main() {
+    let q = quick();
+    let iters = if q { 2 } else { 8 };
+    let dev = DeviceModel::a100_80gb();
+    let g = gpt2(&Gpt2Cfg::mini());
+    let fp = graph_fingerprint(&g);
+
+    let mut table = Table::new(
+        "solver-graph build: sequential vs parallel pricing vs shared store",
+        &["cluster", "mesh", "nodes", "edges", "cold-seq ms",
+          "cold-par ms", "shared µs", "par speedup"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    for n in [4usize, 8] {
+        let cluster = SimCluster::fig5_prefix(n);
+        let report = ClusterReport::probe(&cluster, 42);
+        let meshes = MeshCandidates::enumerate(&report, None).meshes;
+        let mesh = widest_mesh(&meshes).clone();
+
+        // sequential baseline: pin the pool to one worker (restoring any
+        // user-set thread pin afterwards)
+        let prior_threads = std::env::var("AUTOMAP_THREADS").ok();
+        std::env::set_var("AUTOMAP_THREADS", "1");
+        let seq = bench(&format!("cold-seq fig5-{n}"), 1, iters, || {
+            let lm = LayoutManager::new(mesh.clone());
+            SolverGraph::build(&g, &mesh, &dev, &lm).edges.len()
+        });
+        match &prior_threads {
+            Some(v) => std::env::set_var("AUTOMAP_THREADS", v),
+            None => std::env::remove_var("AUTOMAP_THREADS"),
+        }
+
+        let par = bench(&format!("cold-par fig5-{n}"), 1, iters, || {
+            let lm = LayoutManager::new(mesh.clone());
+            SolverGraph::build(&g, &mesh, &dev, &lm).edges.len()
+        });
+
+        let store = SolverGraphStore::new();
+        let (ctx, _) = store.get_or_build(&fp, &g, &mesh, &dev); // warm
+        let (nodes, edges) = (ctx.sg.len(), ctx.sg.edges.len());
+        let shared =
+            bench(&format!("shared fig5-{n}"), 1, iters.max(100), || {
+                store.get_or_build(&fp, &g, &mesh, &dev).0.sg.len()
+            });
+        assert_eq!(store.builds(), 1, "warm store must never rebuild");
+
+        let seq_ms = seq.median_ns / 1e6;
+        let par_ms = par.median_ns / 1e6;
+        let shared_us = shared.median_ns / 1e3;
+        table.row(vec![
+            format!("fig5-{n}"),
+            format!("{:?}", mesh.shape),
+            nodes.to_string(),
+            edges.to_string(),
+            format!("{seq_ms:.1}"),
+            format!("{par_ms:.1}"),
+            format!("{shared_us:.2}"),
+            format!("{:.2}x", seq_ms / par_ms.max(1e-9)),
+        ]);
+        rows.push(obj(vec![
+            ("cluster", s(&format!("fig5-{n}"))),
+            (
+                "mesh",
+                arr(mesh
+                    .shape
+                    .iter()
+                    .map(|&x| num(x as f64))
+                    .collect()),
+            ),
+            ("nodes", num(nodes as f64)),
+            ("edges", num(edges as f64)),
+            ("cold_sequential_ms", num(seq_ms)),
+            ("cold_parallel_ms", num(par_ms)),
+            ("shared_store_us", num(shared_us)),
+            ("parallel_speedup", num(seq_ms / par_ms.max(1e-9))),
+        ]));
+    }
+    table.print();
+
+    let out = obj(vec![
+        ("bench", s("sgraph_build")),
+        ("model", s("gpt2-mini")),
+        ("threads", num(automap::util::pool::threads() as f64)),
+        ("quick", Json::Bool(q)),
+        ("results", arr(rows)),
+    ]);
+    let mut text = String::new();
+    write_json(&out, &mut text);
+    text.push('\n');
+    if let Err(e) = std::fs::write("BENCH_sgraph.json", &text) {
+        eprintln!("could not write BENCH_sgraph.json: {e}");
+    } else {
+        println!("\nrecorded -> BENCH_sgraph.json");
+    }
+}

@@ -40,8 +40,8 @@ fn main() {
     );
     let m4 = mesh(&[4]);
     let small = mlp(64, &[512, 256, 128, 10]);
-    let mut lm = LayoutManager::new(m4.clone());
-    let sg_small = SolverGraph::build(&small, &m4, &dev, &mut lm);
+    let lm = LayoutManager::new(m4.clone());
+    let sg_small = SolverGraph::build(&small, &m4, &dev, &lm);
     let exact = ExactSolve.solve(&sg_small, 1e15).unwrap();
 
     for (name, g, msh) in [
@@ -54,8 +54,8 @@ fn main() {
             mesh(&[2, 4]),
         ),
     ] {
-        let mut lm = LayoutManager::new(msh.clone());
-        let sg = SolverGraph::build(&g, &msh, &dev, &mut lm);
+        let lm = LayoutManager::new(msh.clone());
+        let sg = SolverGraph::build(&g, &msh, &dev, &lm);
         let n_strats: usize =
             sg.sets.iter().map(|s| s.strategies.len()).sum();
         let mut backends: Vec<Box<dyn Solve>> = Vec::new();
@@ -93,8 +93,8 @@ fn main() {
     // --- part 2: §5.3 two-stage budget sweep ---------------------------
     let g = gpt2(&Gpt2Cfg::mini());
     let msh = mesh(&[2, 2]);
-    let mut lm = LayoutManager::new(msh.clone());
-    let sg = SolverGraph::build(&g, &msh, &dev, &mut lm);
+    let lm = LayoutManager::new(msh.clone());
+    let sg = SolverGraph::build(&g, &msh, &dev, &lm);
     let groups = linearize(&g, &common_nodes(&g));
     let base_budget = {
         // minimal feasible intra-op memory x headroom

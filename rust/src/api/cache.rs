@@ -65,6 +65,12 @@ pub struct CacheStats {
     pub misses: u64,
     /// In-memory entries dropped to respect the capacity cap.
     pub evictions: u64,
+    /// Solver graphs actually constructed by the service's shared
+    /// [`SolverGraphStore`](super::SolverGraphStore) (zero for a bare
+    /// `PlanCache`, which has no store).
+    pub sgraph_builds: u64,
+    /// Solver-graph requests served by an already-built shared graph.
+    pub sgraph_reuses: u64,
 }
 
 impl CacheStats {
@@ -168,6 +174,8 @@ impl PlanCache {
             partial_resumes: self.partial_resumes.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            sgraph_builds: 0,
+            sgraph_reuses: 0,
         }
     }
 
@@ -179,6 +187,16 @@ impl PlanCache {
         self.dir
             .as_ref()
             .map(|d| d.join(format!("{key}{SHARDING_SUFFIX}")))
+    }
+
+    /// Non-counting peek: is a full plan present in either tier? (Used
+    /// by the batch driver to decide which requests are worth pre-warming
+    /// solver graphs for — a peek must not skew the hit/miss counters.)
+    pub fn contains_plan(&self, key: &str) -> bool {
+        if self.mem.lock().unwrap().entries.contains_key(key) {
+            return true;
+        }
+        self.plan_path(key).map(|p| p.exists()).unwrap_or(false)
     }
 
     /// Tiered lookup: memory, then disk plan (promoting into memory),

@@ -35,6 +35,13 @@
 //! batch-plans many requests over the thread pool. `autoparallelize` and
 //! the CLI are thin clients of the service.
 //!
+//! Below both sits the interned middle-end: sharding specs are interned
+//! to copyable [`SpecId`](crate::spec::SpecId)s, the layout manager's
+//! path cache is sharded and `&self`, and solver graphs live in a
+//! [`SolverGraphStore`] — a build-once-per-(graph, mesh, device) map of
+//! immutable `Arc<MeshGraph>`s that every concurrent planner on the same
+//! service shares (see `store`).
+//!
 //! See `rust/src/api/README.md` for the artifact formats.
 
 pub mod artifacts;
@@ -42,6 +49,7 @@ pub mod cache;
 pub mod progress;
 pub mod service;
 pub mod solve;
+pub mod store;
 
 pub use self::artifacts::{Artifact, CkptSchedule, ClusterReport,
                           CompiledPlan, MeshCandidates, ShardingCandidate,
@@ -52,8 +60,10 @@ pub use self::service::{BackendSpec, ClusterSpec, PlanOutcome,
                         PlanRequest, PlanService};
 pub use self::solve::{Baseline, BaselineSolve, BeamSolve, ExactSolve,
                       PortfolioSolve, Solve, SolveCtx};
+pub use self::store::{graph_fingerprint, MeshGraph, SolverGraphStore};
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -63,7 +73,6 @@ use crate::cluster::{ClusterInfo, DeviceMesh, SimCluster};
 use crate::gen::{self, ExecutionPlan};
 use crate::graph::op::Op;
 use crate::graph::{Graph, NodeId};
-use crate::layout::LayoutManager;
 use crate::profiler::{profile, GraphProfile};
 use crate::sim::DeviceModel;
 use crate::solver::{Solution, SolveOpts, SolverGraph};
@@ -166,16 +175,13 @@ fn validate_choice(sg: &SolverGraph, choice: &[usize]) -> Result<()> {
     Ok(())
 }
 
-/// Per-mesh runtime state (not an artifact): the solver graph and layout
-/// cache are deterministic functions of (graph, mesh, device) and are
-/// rebuilt on demand when resuming from deserialized artifacts.
-struct MeshCtx {
-    mesh: DeviceMesh,
-    layout: LayoutManager,
-    sg: SolverGraph,
-}
-
 /// Staged planning compiler. See the module docs for the stage diagram.
+///
+/// Per-mesh solver state (solver graph + layout cache) is not owned by
+/// the planner: it is fetched from a [`SolverGraphStore`] — private by
+/// default, shared via [`with_store`](Planner::with_store) — so
+/// concurrent planners over the same (graph, mesh, device) solve against
+/// one immutable `Arc<MeshGraph>`.
 pub struct Planner<'a> {
     graph: &'a Graph,
     cluster: Option<&'a SimCluster>,
@@ -186,7 +192,12 @@ pub struct Planner<'a> {
     progress: Option<ProgressFn<'a>>,
     prof: Option<GraphProfile>,
     groups: Option<Vec<Vec<NodeId>>>,
-    mesh_ctxs: Vec<MeshCtx>,
+    store: Arc<SolverGraphStore>,
+    /// Lazily-computed [`graph_fingerprint`] (the store-key prefix).
+    graph_fp: Option<String>,
+    /// Contexts this planner has pulled from the store, in first-use
+    /// order (indices into this vec are what the stages pass around).
+    mesh_ctxs: Vec<Arc<MeshGraph>>,
     // stage artifacts
     report: Option<ClusterReport>,
     meshes: Option<MeshCandidates>,
@@ -209,6 +220,8 @@ impl<'a> Planner<'a> {
             progress: None,
             prof: None,
             groups: None,
+            store: Arc::new(SolverGraphStore::new()),
+            graph_fp: None,
             mesh_ctxs: Vec::new(),
             report: None,
             meshes: None,
@@ -243,6 +256,8 @@ impl<'a> Planner<'a> {
             progress: None,
             prof: None,
             groups: None,
+            store: Arc::new(SolverGraphStore::new()),
+            graph_fp: None,
             mesh_ctxs: Vec::new(),
             report: Some(report),
             meshes: None,
@@ -267,6 +282,26 @@ impl<'a> Planner<'a> {
     /// Install a solver backend (default: [`BeamSolve`] from `opts.solve`).
     pub fn with_backend(mut self, backend: impl Solve + 'a) -> Self {
         self.backend = Some(Box::new(backend));
+        self
+    }
+
+    /// Share a [`SolverGraphStore`] with other planners: every
+    /// (graph, mesh, device) solver graph is then built at most once
+    /// across all of them ([`PlanService`] installs its own store on
+    /// every planner it runs).
+    pub fn with_store(mut self, store: Arc<SolverGraphStore>) -> Self {
+        self.store = store;
+        self
+    }
+
+    /// Seed the [`graph_fingerprint`] digest when the caller already
+    /// computed it (the service hashes the graph for the cache key; this
+    /// avoids a second full-graph hash inside the planner). Crate-only:
+    /// a wrong digest would alias store keys onto the wrong graph, so
+    /// the seeding is restricted to the service, and debug builds verify
+    /// the digest at first store access.
+    pub(crate) fn with_graph_fingerprint(mut self, fp: String) -> Self {
+        self.graph_fp = Some(fp);
         self
     }
 
@@ -359,26 +394,37 @@ impl<'a> Planner<'a> {
         self.opts.budget.unwrap_or(self.dev.memory * 0.9)
     }
 
-    /// Find-or-build the solver graph + layout cache for a mesh.
+    /// Find-or-fetch the shared solver context for a mesh. The store
+    /// builds each (graph, mesh, device) context exactly once; when
+    /// another planner on the same store got there first (or is building
+    /// right now), this call blocks briefly and then shares its result.
     fn ctx_index(&mut self, mesh: &DeviceMesh) -> usize {
         if let Some(i) = self.mesh_ctxs.iter().position(|c| {
             c.mesh.shape == mesh.shape && c.mesh.devices == mesh.devices
         }) {
             return i;
         }
-        let mut layout = LayoutManager::new(mesh.clone());
+        if self.graph_fp.is_none() {
+            self.graph_fp = Some(graph_fingerprint(self.graph));
+        } else if self.mesh_ctxs.is_empty() {
+            // first store access with a seeded digest: catch a stale or
+            // mismatched fingerprint before it aliases store keys
+            debug_assert_eq!(
+                self.graph_fp.as_deref(),
+                Some(graph_fingerprint(self.graph).as_str()),
+                "seeded graph fingerprint does not match the graph"
+            );
+        }
+        let fp = self.graph_fp.as_ref().unwrap();
         let tb = std::time::Instant::now();
-        let sg =
-            SolverGraph::build(self.graph, mesh, self.dev, &mut layout);
-        crate::debug!(
-            "sgraph build {:?}: {:.0} ms ({} nodes, {} edges, cache {})",
-            mesh.shape,
-            tb.elapsed().as_secs_f64() * 1e3,
-            sg.len(),
-            sg.edges.len(),
-            layout.cache_len()
-        );
-        self.mesh_ctxs.push(MeshCtx { mesh: mesh.clone(), layout, sg });
+        let (ctx, built) =
+            self.store.get_or_build(fp, self.graph, mesh, self.dev);
+        emit(&mut self.progress, ProgressEvent::SgraphBuild {
+            shape: mesh.shape.clone(),
+            ms: tb.elapsed().as_secs_f64() * 1e3,
+            shared: !built,
+        });
+        self.mesh_ctxs.push(ctx);
         self.mesh_ctxs.len() - 1
     }
 
@@ -682,7 +728,7 @@ impl<'a> Planner<'a> {
             let edge_comm: f64 = sg
                 .edges
                 .iter()
-                .map(|e| e.cost[sol.choice[e.from]][sol.choice[e.to]])
+                .map(|e| e.cost(sol.choice[e.from], sol.choice[e.to]))
                 .sum();
             // the runtime overlaps gradient-sync collectives with the
             // backward sweep (§7: the low-bandwidth DP all-reduce hides
@@ -872,13 +918,13 @@ impl<'a> Planner<'a> {
                 mem: cand.mem,
             };
             let g = self.graph;
-            let ctx = &mut self.mesh_ctxs[ci];
+            let ctx = &self.mesh_ctxs[ci];
             let plan = gen::lower(
                 g,
                 &ctx.sg,
                 &sol,
                 &cand.mesh,
-                &mut ctx.layout,
+                &ctx.layout,
                 ck.rotor.clone(),
             );
             CompiledPlan {

@@ -58,6 +58,12 @@ pub enum ProgressEvent {
         /// True when this candidate is the best seen so far.
         best: bool,
     },
+    /// The planner resolved the solver graph for one (graph, mesh) pair
+    /// through the [`SolverGraphStore`](super::SolverGraphStore).
+    /// `shared` is true when an already-built graph was reused; false
+    /// when this planner ran the build. `ms` is the wall time spent
+    /// waiting either way.
+    SgraphBuild { shape: Vec<usize>, ms: f64, shared: bool },
     /// A [`PlanService`](super::PlanService) cache lookup resolved.
     /// `PlanSource::Solved` means a miss (the full pipeline is about to
     /// run); the hit/partial variants mean stages were skipped.

@@ -31,7 +31,7 @@
 //! `Planner` remains the single-compilation engine; `autoparallelize` and
 //! the CLI are thin clients of this service.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -51,6 +51,7 @@ use super::artifacts::{Artifact, ClusterReport, CompiledPlan,
 use super::cache::{CacheStats, Lookup, PlanCache, PlanSource};
 use super::progress::ProgressEvent;
 use super::solve::{Baseline, BaselineSolve, ExactSolve, PortfolioSolve};
+use super::store::{graph_fingerprint, SolverGraphStore};
 use super::{PlanOpts, Planner};
 
 /// The cluster half of a request: a live (simulated) cluster to probe, or
@@ -308,8 +309,12 @@ type ServiceProgressFn = Box<dyn Fn(&ProgressEvent) + Send + Sync>;
 
 /// The planning front-end. Construct once, submit many requests; safe to
 /// share across threads (`plan_batch` does exactly that internally).
+/// Every planner the service runs shares one [`SolverGraphStore`], so
+/// concurrent requests on the same (graph, mesh, device) trigger exactly
+/// one solver-graph build.
 pub struct PlanService {
     cache: PlanCache,
+    store: Arc<SolverGraphStore>,
     progress: Option<ServiceProgressFn>,
 }
 
@@ -322,17 +327,29 @@ impl Default for PlanService {
 impl PlanService {
     /// Memory-only service (plans cached for this process's lifetime).
     pub fn new() -> PlanService {
-        PlanService { cache: PlanCache::in_memory(), progress: None }
+        PlanService {
+            cache: PlanCache::in_memory(),
+            store: Arc::new(SolverGraphStore::new()),
+            progress: None,
+        }
     }
 
     /// Service with a persistent on-disk tier rooted at `dir`.
     pub fn with_dir(dir: impl AsRef<Path>) -> Result<PlanService> {
-        Ok(PlanService { cache: PlanCache::with_dir(dir)?, progress: None })
+        Ok(PlanService {
+            cache: PlanCache::with_dir(dir)?,
+            store: Arc::new(SolverGraphStore::new()),
+            progress: None,
+        })
     }
 
     /// Full control over the cache (capacity, placement).
     pub fn with_cache(cache: PlanCache) -> PlanService {
-        PlanService { cache, progress: None }
+        PlanService {
+            cache,
+            store: Arc::new(SolverGraphStore::new()),
+            progress: None,
+        }
     }
 
     /// Register a progress callback. It receives both the service-level
@@ -350,9 +367,19 @@ impl PlanService {
         &self.cache
     }
 
-    /// Counter snapshot: hits, misses, partial resumes, evictions.
+    /// The shared solver-graph store (exposed so callers can pre-warm it
+    /// or inspect build counts directly).
+    pub fn store(&self) -> &Arc<SolverGraphStore> {
+        &self.store
+    }
+
+    /// Counter snapshot: hits, misses, partial resumes, evictions, plus
+    /// the shared store's solver-graph build/reuse totals.
     pub fn stats(&self) -> CacheStats {
-        self.cache.stats()
+        let mut s = self.cache.stats();
+        s.sgraph_builds = self.store.builds();
+        s.sgraph_reuses = self.store.reuses();
+        s
     }
 
     /// The deterministic cache key of a request: a 128-bit content hash
@@ -360,19 +387,18 @@ impl PlanService {
     /// backend). Stable across process restarts — it hashes values, never
     /// addresses or container iteration order.
     pub fn fingerprint(req: &PlanRequest) -> String {
+        Self::fingerprint_with(req, &graph_fingerprint(&req.graph))
+    }
+
+    /// `fingerprint` with the graph digest precomputed (the service
+    /// hashes each request's graph exactly once and reuses the digest
+    /// for the planner's store key).
+    fn fingerprint_with(req: &PlanRequest, graph_fp: &str) -> String {
         let mut h = StableHasher::new();
-        h.write_str("automap-plan-request-v1");
+        h.write_str("automap-plan-request-v2");
         // model: node structure + tensor metadata decide the search space
-        h.write_usize(req.graph.len());
-        for n in &req.graph.nodes {
-            h.write_str(&n.name);
-            h.write_str(&format!("{:?}", n.op));
-            h.write_usize(n.inputs.len());
-            for &i in &n.inputs {
-                h.write_usize(i);
-            }
-            h.write_str(&format!("{:?}", n.out));
-        }
+        // (the same digest keys the shared SolverGraphStore)
+        h.write_str(graph_fp);
         hash_cluster(&mut h, &req.cluster);
         // the device model feeds both the cost model and the default
         // memory budget
@@ -407,15 +433,21 @@ impl PlanService {
 
     /// Resolve one request: cache hit, partial resume, or full solve.
     pub fn plan(&self, req: &PlanRequest) -> Result<PlanOutcome> {
-        self.plan_shared(req, None)
+        let graph_fp = graph_fingerprint(&req.graph);
+        let fingerprint = Self::fingerprint_with(req, &graph_fp);
+        self.plan_keyed(req, None, &fingerprint, &graph_fp)
     }
 
-    fn plan_shared(
+    /// `plan` with both digests precomputed — the batch driver hashes
+    /// each request exactly once and reuses the digests here.
+    fn plan_keyed(
         &self,
         req: &PlanRequest,
         shared: Option<&SharedCluster>,
+        fingerprint: &str,
+        graph_fp: &str,
     ) -> Result<PlanOutcome> {
-        let fingerprint = Self::fingerprint(req);
+        let fingerprint = fingerprint.to_string();
         let t0 = Instant::now();
         match self.cache.lookup(&fingerprint) {
             Lookup::Plan(plan, source, evicted) => {
@@ -436,8 +468,9 @@ impl PlanService {
                     fingerprint: fingerprint.clone(),
                     source: PlanSource::PartialResume,
                 });
-                let mut planner =
-                    self.planner_for(req, shared).load_sharding(sharding);
+                let mut planner = self
+                    .planner_for(req, graph_fp, shared)
+                    .load_sharding(sharding);
                 let plan = planner.lower().map_err(|e| {
                     anyhow!("{} (partial resume): {e}", req.tag)
                 })?;
@@ -457,7 +490,7 @@ impl PlanService {
                     fingerprint: fingerprint.clone(),
                     source: PlanSource::Solved,
                 });
-                let mut planner = self.planner_for(req, shared);
+                let mut planner = self.planner_for(req, graph_fp, shared);
                 let plan = planner
                     .lower()
                     .map_err(|e| anyhow!("{}: {e}", req.tag))?;
@@ -490,6 +523,7 @@ impl PlanService {
     fn planner_for<'a>(
         &'a self,
         req: &'a PlanRequest,
+        graph_fp: &str,
         shared: Option<&SharedCluster>,
     ) -> Planner<'a> {
         let mut p = match &req.cluster {
@@ -504,6 +538,9 @@ impl PlanService {
                 .load_cluster(sc.report.clone())
                 .load_meshes(sc.meshes.clone());
         }
+        p = p
+            .with_store(Arc::clone(&self.store))
+            .with_graph_fingerprint(graph_fp.to_string());
         p = req.backend.install(p);
         if let Some(f) = &self.progress {
             p = p.on_progress(move |ev| f(ev));
@@ -522,8 +559,17 @@ impl PlanService {
         reqs: &[PlanRequest],
     ) -> Vec<Result<PlanOutcome>> {
         let shared = SharedClusters::new();
-        let fps: Vec<String> =
-            reqs.iter().map(Self::fingerprint).collect();
+        // hash every request's graph exactly once; both the dedup keys
+        // and the per-request planners reuse these digests
+        let graph_fps: Vec<String> = reqs
+            .iter()
+            .map(|r| graph_fingerprint(&r.graph))
+            .collect();
+        let fps: Vec<String> = reqs
+            .iter()
+            .zip(&graph_fps)
+            .map(|(r, gfp)| Self::fingerprint_with(r, gfp))
+            .collect();
         let mut first_of: BTreeMap<&str, usize> = BTreeMap::new();
         let mut unique: Vec<usize> = Vec::new();
         for (i, fp) in fps.iter().enumerate() {
@@ -533,10 +579,18 @@ impl PlanService {
             });
         }
 
+        // build the batch's solver graphs HERE, on the calling thread:
+        // inside the worker fan-out the pool-nesting guard caps each
+        // build at one thread, and all workers sharing one (graph, mesh)
+        // would idle behind a sequential build
+        self.prewarm_store(reqs, &unique, &fps, &graph_fps, &shared);
+
         let unique_results: Vec<Result<PlanOutcome>> =
             parallel_map(&unique, |&i| {
                 let sc = shared.get_or_probe(&reqs[i]);
-                self.plan_indexed(i, &reqs[i], Some(&sc))
+                self.plan_indexed(
+                    i, &reqs[i], Some(&sc), &fps[i], &graph_fps[i],
+                )
             });
 
         let mut slots: Vec<Option<Result<PlanOutcome>>> =
@@ -560,19 +614,70 @@ impl PlanService {
                 };
                 Err(anyhow!("duplicate of failed request #{primary}: {msg}"))
             } else {
-                self.plan_indexed(i, &reqs[i], None)
+                self.plan_indexed(
+                    i, &reqs[i], None, &fps[i], &graph_fps[i],
+                )
             });
         }
         slots.into_iter().map(|s| s.expect("slot filled")).collect()
     }
 
+    /// Pre-build the solver graphs a batch's cache-missing requests will
+    /// need, one key at a time with the full thread pool (strategy
+    /// generation and edge pricing parallelize internally), before the
+    /// worker fan-out caps nested parallelism. Analytic-baseline
+    /// requests and requests already served by a cached plan are
+    /// skipped.
+    fn prewarm_store(
+        &self,
+        reqs: &[PlanRequest],
+        unique: &[usize],
+        fps: &[String],
+        graph_fps: &[String],
+        shared: &SharedClusters,
+    ) {
+        let mut seen: HashSet<String> = HashSet::new();
+        for &i in unique {
+            let req = &reqs[i];
+            if matches!(req.backend, BackendSpec::Baseline(..)) {
+                continue; // analytic backends never touch a solver graph
+            }
+            if self.cache.contains_plan(&fps[i]) {
+                continue; // full hit: no planner will run
+            }
+            let sc = shared.get_or_probe(req);
+            for mesh in &sc.meshes.meshes {
+                let key =
+                    SolverGraphStore::key(&graph_fps[i], mesh, &req.dev);
+                if !seen.insert(key) {
+                    continue;
+                }
+                let tb = Instant::now();
+                let (_, built) = self.store.get_or_build(
+                    &graph_fps[i],
+                    &req.graph,
+                    mesh,
+                    &req.dev,
+                );
+                self.emit(ProgressEvent::SgraphBuild {
+                    shape: mesh.shape.clone(),
+                    ms: tb.elapsed().as_secs_f64() * 1e3,
+                    shared: !built,
+                });
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn plan_indexed(
         &self,
         index: usize,
         req: &PlanRequest,
         shared: Option<&SharedCluster>,
+        fingerprint: &str,
+        graph_fp: &str,
     ) -> Result<PlanOutcome> {
-        let r = self.plan_shared(req, shared);
+        let r = self.plan_keyed(req, shared, fingerprint, graph_fp);
         if let Ok(o) = &r {
             self.emit(ProgressEvent::RequestDone {
                 index,
@@ -654,5 +759,34 @@ mod tests {
         let s = svc.stats();
         assert_eq!(s.misses, 1);
         assert_eq!(s.memory_hits, 1);
+        // the solve built solver graphs through the shared store; the
+        // cache hit built none
+        assert!(s.sgraph_builds >= 1);
+        assert_eq!(svc.store().builds(), s.sgraph_builds);
+    }
+
+    #[test]
+    fn distinct_requests_on_one_graph_share_solver_graphs() {
+        let svc = PlanService::new();
+        let a = mini_request(2);
+        let mut b = mini_request(2);
+        // a different solver seed changes the fingerprint (cache miss)
+        // but not the (graph, mesh, device) solver-graph key
+        b.opts.solve.seed ^= 1;
+        assert_ne!(
+            PlanService::fingerprint(&a),
+            PlanService::fingerprint(&b)
+        );
+        svc.plan(&a).unwrap();
+        let builds = svc.stats().sgraph_builds;
+        assert!(builds >= 1);
+        let out = svc.plan(&b).unwrap();
+        assert_eq!(out.source, PlanSource::Solved);
+        assert_eq!(
+            svc.stats().sgraph_builds,
+            builds,
+            "second request must reuse every shared solver graph"
+        );
+        assert!(svc.stats().sgraph_reuses >= 1);
     }
 }

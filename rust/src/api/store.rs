@@ -1,0 +1,270 @@
+//! Shared solver-graph store: build-once-per-(graph, mesh, device) cells.
+//!
+//! Constructing a [`SolverGraph`] — strategy enumeration plus Algorithm-1
+//! pricing of every dense resharding matrix — dominates the ahead-of-time
+//! compile budget (the same ILP-preprocessing bottleneck Alpa reports).
+//! It is also a pure function of (graph, mesh, device model). The store
+//! exploits that: each key maps to a `OnceLock` cell, so when N
+//! concurrent [`PlanService`](super::PlanService) workers (or racing
+//! [`PortfolioSolve`](super::PortfolioSolve) configs) want the same
+//! (graph, mesh), exactly one thread builds while the rest block on the
+//! cell and then share the immutable `Arc<MeshGraph>`.
+//!
+//! Keys reuse [`StableHasher`](crate::util::json::StableHasher) — the
+//! same content-hash machinery as the plan-cache fingerprints — so equal
+//! inputs collide onto one cell regardless of which request got there
+//! first.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::cluster::DeviceMesh;
+use crate::graph::Graph;
+use crate::layout::LayoutManager;
+use crate::sim::DeviceModel;
+use crate::solver::SolverGraph;
+use crate::util::json::StableHasher;
+
+/// Stable content hash of a graph's planning-relevant structure (node
+/// names, ops, wiring, tensor metadata). Shared by the plan-cache
+/// fingerprint and the solver-graph store key.
+pub fn graph_fingerprint(g: &Graph) -> String {
+    let mut h = StableHasher::new();
+    h.write_str("automap-graph-v1");
+    h.write_usize(g.len());
+    for n in &g.nodes {
+        h.write_str(&n.name);
+        h.write_str(&format!("{:?}", n.op));
+        h.write_usize(n.inputs.len());
+        for &i in &n.inputs {
+            h.write_usize(i);
+        }
+        h.write_str(&format!("{:?}", n.out));
+    }
+    h.hex()
+}
+
+/// An immutable, shareable per-(graph, mesh) planning context: the solver
+/// graph plus the layout manager whose path cache priced it (lowering
+/// re-derives transform paths from the same cache). The layout cache uses
+/// interior mutability, so `&MeshGraph` is all any stage needs.
+pub struct MeshGraph {
+    pub mesh: DeviceMesh,
+    pub layout: LayoutManager,
+    pub sg: SolverGraph,
+}
+
+type Cell = Arc<OnceLock<Arc<MeshGraph>>>;
+
+/// Build-once store of [`MeshGraph`]s, keyed by
+/// (graph fingerprint, mesh, device model).
+///
+/// Deliberately eviction-free: a cell is only correct to drop when no
+/// planner holds its `Arc`, and the working set is one entry per distinct
+/// (model, mesh, device) triple — small for a service planning a model
+/// zoo, and exactly what a batch driver wants resident. A long-lived
+/// daemon fed unboundedly many *distinct* models should recycle its
+/// `PlanService` (and with it this store) at its own checkpoint
+/// boundaries; the plan cache's disk tier persists across that. (The
+/// process-global `SpecId`/shape-class interners are not reclaimed by
+/// recycling, but their entries are a few dozen bytes each and bounded
+/// by distinct (rank, axis-assignment) and (shape, dtype) combinations —
+/// noise next to one retained dense edge-cost matrix.)
+pub struct SolverGraphStore {
+    cells: Mutex<HashMap<String, Cell>>,
+    builds: AtomicU64,
+    reuses: AtomicU64,
+}
+
+impl Default for SolverGraphStore {
+    fn default() -> Self {
+        SolverGraphStore::new()
+    }
+}
+
+impl SolverGraphStore {
+    pub fn new() -> SolverGraphStore {
+        SolverGraphStore {
+            cells: Mutex::new(HashMap::new()),
+            builds: AtomicU64::new(0),
+            reuses: AtomicU64::new(0),
+        }
+    }
+
+    /// Store key for one (graph, mesh, device) triple.
+    pub fn key(
+        graph_fp: &str,
+        mesh: &DeviceMesh,
+        dev: &DeviceModel,
+    ) -> String {
+        let mut h = StableHasher::new();
+        h.write_str("automap-sgraph-v1");
+        h.write_str(graph_fp);
+        h.write_usize(mesh.shape.len());
+        for &x in &mesh.shape {
+            h.write_usize(x);
+        }
+        h.write_usize(mesh.devices.len());
+        for &d in &mesh.devices {
+            h.write_usize(d);
+        }
+        for &a in &mesh.axis_alpha {
+            h.write_f64(a);
+        }
+        for &b in &mesh.axis_beta {
+            h.write_f64(b);
+        }
+        for x in [dev.peak_flops, dev.hbm_bw, dev.gemm_efficiency,
+                  dev.vector_efficiency, dev.memory, dev.kernel_overhead]
+        {
+            h.write_f64(x);
+        }
+        h.hex()
+    }
+
+    /// The shared context for (graph, mesh, device), building it exactly
+    /// once per key: concurrent callers for the same key block on the
+    /// cell until the single builder finishes, then share its `Arc`.
+    /// Returns `(ctx, built)` where `built` is true iff *this* call ran
+    /// the build.
+    pub fn get_or_build(
+        &self,
+        graph_fp: &str,
+        g: &Graph,
+        mesh: &DeviceMesh,
+        dev: &DeviceModel,
+    ) -> (Arc<MeshGraph>, bool) {
+        let key = Self::key(graph_fp, mesh, dev);
+        let cell: Cell = {
+            let mut cells = self.cells.lock().unwrap();
+            Arc::clone(
+                cells
+                    .entry(key)
+                    .or_insert_with(|| Arc::new(OnceLock::new())),
+            )
+        };
+        let mut built = false;
+        let ctx = cell.get_or_init(|| {
+            built = true;
+            let layout = LayoutManager::new(mesh.clone());
+            let tb = std::time::Instant::now();
+            let sg = SolverGraph::build(g, mesh, dev, &layout);
+            crate::debug!(
+                "sgraph build {:?}: {:.0} ms ({} nodes, {} edges, cache {})",
+                mesh.shape,
+                tb.elapsed().as_secs_f64() * 1e3,
+                sg.len(),
+                sg.edges.len(),
+                layout.cache_len()
+            );
+            Arc::new(MeshGraph { mesh: mesh.clone(), layout, sg })
+        });
+        if built {
+            self.builds.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.reuses.fetch_add(1, Ordering::Relaxed);
+        }
+        (Arc::clone(ctx), built)
+    }
+
+    /// How many solver graphs this store has actually constructed.
+    pub fn builds(&self) -> u64 {
+        self.builds.load(Ordering::Relaxed)
+    }
+
+    /// How many `get_or_build` calls were served by an existing cell.
+    pub fn reuses(&self) -> u64 {
+        self.reuses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct (graph, mesh, device) keys seen.
+    pub fn len(&self) -> usize {
+        self.cells.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models::mlp;
+
+    fn mesh4() -> DeviceMesh {
+        DeviceMesh {
+            shape: vec![4],
+            devices: (0..4).collect(),
+            axis_alpha: vec![1e-6],
+            axis_beta: vec![1e11],
+        }
+    }
+
+    #[test]
+    fn store_builds_once_and_shares() {
+        let g = mlp(32, &[128, 64, 10]);
+        let dev = DeviceModel::a100_80gb();
+        let store = SolverGraphStore::new();
+        let fp = graph_fingerprint(&g);
+        let (a, built_a) = store.get_or_build(&fp, &g, &mesh4(), &dev);
+        let (b, built_b) = store.get_or_build(&fp, &g, &mesh4(), &dev);
+        assert!(built_a && !built_b);
+        assert!(Arc::ptr_eq(&a, &b), "same key must share one context");
+        assert_eq!(store.builds(), 1);
+        assert_eq!(store.reuses(), 1);
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_callers_trigger_exactly_one_build() {
+        let g = mlp(32, &[128, 64, 10]);
+        let dev = DeviceModel::a100_80gb();
+        let store = SolverGraphStore::new();
+        let fp = graph_fingerprint(&g);
+        let ctxs: Vec<Arc<MeshGraph>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let (store, g, fp) = (&store, &g, &fp);
+                    scope.spawn(move || {
+                        store.get_or_build(fp, g, &mesh4(), &dev).0
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(store.builds(), 1, "racing callers must share a build");
+        assert_eq!(store.reuses(), 3);
+        for c in &ctxs[1..] {
+            assert!(Arc::ptr_eq(&ctxs[0], c));
+        }
+    }
+
+    #[test]
+    fn distinct_meshes_get_distinct_cells() {
+        let g = mlp(32, &[128, 64, 10]);
+        let dev = DeviceModel::a100_80gb();
+        let store = SolverGraphStore::new();
+        let fp = graph_fingerprint(&g);
+        let m2 = DeviceMesh {
+            shape: vec![2],
+            devices: vec![0, 1],
+            axis_alpha: vec![1e-6],
+            axis_beta: vec![1e11],
+        };
+        store.get_or_build(&fp, &g, &mesh4(), &dev);
+        store.get_or_build(&fp, &g, &m2, &dev);
+        assert_eq!(store.builds(), 2);
+        assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn graph_fingerprint_is_structural() {
+        let a = mlp(32, &[128, 64, 10]);
+        let b = mlp(32, &[128, 64, 10]);
+        let c = mlp(32, &[128, 32, 10]);
+        assert_eq!(graph_fingerprint(&a), graph_fingerprint(&b));
+        assert_ne!(graph_fingerprint(&a), graph_fingerprint(&c));
+    }
+}

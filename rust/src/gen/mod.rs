@@ -58,12 +58,14 @@ pub struct ExecutionPlan {
 }
 
 /// Lower a solver solution to an `ExecutionPlan` (passes of §6.1).
+/// `layout` is only read (its path cache has interior mutability), so the
+/// same shared manager that priced the solver graph serves lowering too.
 pub fn lower(
     g: &Graph,
     sg: &SolverGraph,
     sol: &Solution,
     mesh: &DeviceMesh,
-    layout: &mut LayoutManager,
+    layout: &LayoutManager,
     ckpt: Option<RotorSolution>,
 ) -> ExecutionPlan {
     let mut decisions = BTreeMap::new();
@@ -74,8 +76,8 @@ pub fn lower(
         let s = &sg.sets[i].strategies[sol.choice[i]];
         decisions.insert(anchor, NodeDecision {
             node: anchor,
-            strategy: s.name.clone(),
-            out_spec: s.out_spec.clone(),
+            strategy: s.name.to_string(),
+            out_spec: s.out_spec.spec().as_ref().clone(),
             compute_time: s.compute_time,
             comm_time: s.comm_time + s.grad_comm,
             mem_bytes: s.mem_bytes,
@@ -95,7 +97,8 @@ pub fn lower(
                 reason,
                 describe: format!(
                     "all_reduce(partial/grad) for {} [{}]",
-                    g.node(anchor).name, s.name
+                    g.node(anchor).name,
+                    s.name
                 ),
                 time: s.comm_time + s.grad_comm,
             });
@@ -104,7 +107,7 @@ pub fn lower(
 
     // --- resharding comm (communication-insertion pass) -----------------
     for e in &sg.edges {
-        let c = e.cost[sol.choice[e.from]][sol.choice[e.to]];
+        let c = e.cost(sol.choice[e.from], sol.choice[e.to]);
         if c > 0.0 {
             let from_id = sg.anchors[e.from];
             let to_id = sg.anchors[e.to];
@@ -116,10 +119,11 @@ pub fn lower(
                 .map(|s| s.to_string())
                 .unwrap_or_else(|| "?".into());
             // re-derive the transform path for a readable description
+            // (a cache hit: the edge pricer already walked this pair)
             let meta = &g.node(g.node(to_id).inputs[e.to_input]).out;
-            let path = layout.convert(
-                &src.out_spec,
-                &dst.in_specs[e.to_input.min(dst.in_specs.len() - 1)],
+            let path = layout.convert_ids(
+                src.out_spec,
+                dst.in_specs[e.to_input.min(dst.in_specs.len() - 1)],
                 &meta.shape,
                 meta.dtype.bytes(),
             );
@@ -156,14 +160,15 @@ pub fn lower(
 
     // --- reshape-conversion pass: local shapes for trivial chains ------
     let mut local_shapes = BTreeMap::new();
+    let users = g.users();
     for (i, &anchor) in sg.anchors.iter().enumerate() {
         let s = &sg.sets[i].strategies[sol.choice[i]];
         let n = g.node(anchor);
+        let out_spec = s.out_spec.spec();
         local_shapes
-            .insert(anchor, s.out_spec.shard_shape(&n.out.shape, mesh));
+            .insert(anchor, out_spec.shard_shape(&n.out.shape, mesh));
         // propagate through downstream trivial chains
-        let users = g.users();
-        let mut frontier = vec![(anchor, s.out_spec.clone())];
+        let mut frontier = vec![(anchor, out_spec.as_ref().clone())];
         while let Some((id, spec)) = frontier.pop() {
             for &u in &users[id] {
                 let un = g.node(u);
@@ -318,16 +323,16 @@ mod tests {
     }
 
     fn plan_for(g: &Graph, m: &DeviceMesh) -> ExecutionPlan {
-        let mut lm = LayoutManager::new(m.clone());
+        let lm = LayoutManager::new(m.clone());
         let sg =
-            SolverGraph::build(g, m, &DeviceModel::a100_80gb(), &mut lm);
+            SolverGraph::build(g, m, &DeviceModel::a100_80gb(), &lm);
         let sol = solve(
             &sg,
             1e13,
             SolveOpts { anneal_iters: 300, ..Default::default() },
         )
         .unwrap();
-        lower(g, &sg, &sol, m, &mut lm, None)
+        lower(g, &sg, &sol, m, &lm, None)
     }
 
     #[test]

@@ -2,11 +2,19 @@
 //! via a heuristic search over one-step transforms (Algorithm 1), with the
 //! α-β cost of each emitted collective, a conversion-path cache, and the
 //! two baselines the paper compares against (enumeration, dim-by-dim).
+//!
+//! The path cache is keyed on interned ids — `(SpecId, SpecId,
+//! shape-class)` — and sharded behind `RwLock` segments, so `convert`
+//! takes `&self` and a single `LayoutManager` can price conversions from
+//! many solver threads at once (the prerequisite for the shared
+//! [`SolverGraphStore`](crate::api::SolverGraphStore)).
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
 
 use crate::cluster::{Collective, DeviceMesh};
-use crate::spec::{DimSpec, ShardingSpec};
+use crate::spec::{DimSpec, Interner, ShardingSpec, SpecId};
 
 /// One primitive layout transform (§4.3 "One-step transform").
 #[derive(Debug, Clone, PartialEq)]
@@ -21,7 +29,8 @@ pub enum TransformOp {
 
 #[derive(Debug, Clone, Default)]
 pub struct TransformPath {
-    pub steps: Vec<(TransformOp, ShardingSpec)>,
+    /// Each step's op and the (interned) spec it produces.
+    pub steps: Vec<(TransformOp, SpecId)>,
     /// Estimated α-β communication time of the whole path (seconds).
     pub comm_time: f64,
 }
@@ -37,36 +46,66 @@ impl TransformPath {
 }
 
 /// Heuristic weights (§4.3): all-gather is cross-device so it must cost
-/// more than the on-chip shard; a step penalty discourages long paths.
+/// more than the on-chip shard; an all-to-all is one cross-device
+/// collective, cheaper than the gather+shard pair it replaces; a step
+/// penalty discourages long paths.
 const COST_ALL_GATHER: f64 = 4.0;
 const COST_SHARD: f64 = 1.0;
-#[allow(dead_code)]
-const COST_ALL_TO_ALL: f64 = 4.5; // reserved for a future all-to-all-aware dim_diff
+const COST_ALL_TO_ALL: f64 = 4.5;
 const STEP_PENALTY: f64 = 2.0;
 const MAX_GREEDY_STEPS: usize = 24;
 
-/// Difference between two dim specs (the paper's `dim_diff`).
-fn dim_diff(s: &DimSpec, t: &DimSpec) -> f64 {
+/// Per-dim difference (the paper's `dim_diff`), decomposed: the axes that
+/// must be gathered off `s` and the axes that must be sharded on for `t`
+/// (everything beyond the surviving common prefix), plus the same-dim
+/// multi-operation penalty (e.g. S0 -> S1 within one dim).
+fn dim_diff(s: &DimSpec, t: &DimSpec) -> (Vec<usize>, Vec<usize>, f64) {
     if s == t {
-        return 0.0;
+        return (Vec::new(), Vec::new(), 0.0);
     }
     let sa = s.axes();
     let ta = t.axes();
-    // longest common prefix survives; the rest must be gathered off `s`
-    // and sharded on for `t`
     let common = sa.iter().zip(ta).take_while(|(a, b)| a == b).count();
-    let gathers = (sa.len() - common) as f64;
-    let shards = (ta.len() - common) as f64;
-    let mut cost = gathers * COST_ALL_GATHER + shards * COST_SHARD;
-    if gathers > 0.0 && shards > 0.0 {
-        cost += STEP_PENALTY; // multi-operation conversion, e.g. S0 -> S1
-    }
-    cost
+    let gathers = sa[common..].to_vec();
+    let shards = ta[common..].to_vec();
+    let pen = if !gathers.is_empty() && !shards.is_empty() {
+        STEP_PENALTY
+    } else {
+        0.0
+    };
+    (gathers, shards, pen)
 }
 
-/// Heuristic distance between two sharding specs: Σᵢ dim_diff(s[i], t[i]).
+/// Heuristic distance between two sharding specs. All-to-all-aware: an
+/// axis that leaves one tensor dim and lands on a *different* dim moves
+/// in a single `AllToAll` (priced `COST_ALL_TO_ALL`) rather than as the
+/// gather+shard pair the per-dim view would suggest.
 pub fn spec_distance(s: &ShardingSpec, t: &ShardingSpec) -> f64 {
-    s.dims.iter().zip(&t.dims).map(|(a, b)| dim_diff(a, b)).sum()
+    let mut gath: Vec<(usize, usize)> = Vec::new(); // (axis, dim)
+    let mut shrd: Vec<(usize, usize)> = Vec::new();
+    let mut cost = 0.0;
+    for (dim, (a, b)) in s.dims.iter().zip(&t.dims).enumerate() {
+        let (g, h, pen) = dim_diff(a, b);
+        cost += pen;
+        gath.extend(g.into_iter().map(|ax| (ax, dim)));
+        shrd.extend(h.into_iter().map(|ax| (ax, dim)));
+    }
+    let mut moved = 0usize;
+    let mut gathers = 0usize;
+    for &(ax, from) in &gath {
+        if let Some(k) = shrd
+            .iter()
+            .position(|&(bx, to)| bx == ax && to != from)
+        {
+            shrd.remove(k);
+            moved += 1;
+        } else {
+            gathers += 1;
+        }
+    }
+    cost + moved as f64 * COST_ALL_TO_ALL
+        + gathers as f64 * COST_ALL_GATHER
+        + shrd.len() as f64 * COST_SHARD
 }
 
 /// All one-step transforms from `spec` that are valid for (shape, mesh).
@@ -163,53 +202,110 @@ pub fn step_time(
     }
 }
 
+/// Shape-class interner: conversion paths depend on the tensor shape only
+/// through divisibility and total bytes, so the cache keys the interned
+/// (shape, elem_bytes) pair — one more copyable `u32` alongside the two
+/// `SpecId`s.
+fn shape_classes() -> &'static Interner<(Vec<usize>, usize)> {
+    static SHAPES: OnceLock<Interner<(Vec<usize>, usize)>> =
+        OnceLock::new();
+    SHAPES.get_or_init(Interner::new)
+}
+
+fn shape_class(shape: &[usize], elem_bytes: usize) -> u32 {
+    shape_classes().intern(&(shape.to_vec(), elem_bytes))
+}
+
+fn empty_path() -> Arc<TransformPath> {
+    static EMPTY: OnceLock<Arc<TransformPath>> = OnceLock::new();
+    Arc::clone(EMPTY.get_or_init(|| Arc::new(TransformPath::default())))
+}
+
+type PathKey = (SpecId, SpecId, u32);
+type Segment = RwLock<HashMap<PathKey, Arc<TransformPath>>>;
+
+const SEGMENTS: usize = 16;
+
 /// Tensor layout manager with the Algorithm-1 greedy search and a
-/// (src, dst, shape) -> path cache (§4.3 "cache dictionary").
+/// sharded, read-mostly (src, dst, shape-class) -> path cache (§4.3
+/// "cache dictionary"). All methods take `&self`: one manager serves
+/// concurrent solver threads.
 pub struct LayoutManager {
     pub mesh: DeviceMesh,
-    // structural keys: String formatting here dominated solver-graph
-    // construction before the perf pass (EXPERIMENTS.md §Perf)
-    cache: HashMap<(ShardingSpec, ShardingSpec, Vec<usize>), TransformPath>,
-    pub cache_hits: usize,
-    pub cache_misses: usize,
+    segments: [Segment; SEGMENTS],
+    hits: AtomicUsize,
+    misses: AtomicUsize,
 }
 
 impl LayoutManager {
     pub fn new(mesh: DeviceMesh) -> LayoutManager {
         LayoutManager {
             mesh,
-            cache: HashMap::new(),
-            cache_hits: 0,
-            cache_misses: 0,
+            segments: std::array::from_fn(|_| {
+                RwLock::new(HashMap::new())
+            }),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
         }
+    }
+
+    fn segment(&self, key: &PathKey) -> &Segment {
+        let h = key.0.index() as usize * 31
+            + key.1.index() as usize * 17
+            + key.2 as usize;
+        &self.segments[h % SEGMENTS]
     }
 
     /// Find a conversion path src -> dst (Algorithm 1: greedy best-first
     /// on the heuristic, with a visited set; falls back to BFS if the
-    /// greedy walk stalls). Returns None if src == dst needs no work.
+    /// greedy walk stalls). Identity conversions return the shared empty
+    /// path without touching the cache.
     pub fn convert(
-        &mut self,
+        &self,
         src: &ShardingSpec,
         dst: &ShardingSpec,
         shape: &[usize],
         elem_bytes: usize,
-    ) -> TransformPath {
+    ) -> Arc<TransformPath> {
         if src == dst {
-            return TransformPath::default(); // identity: skip the cache
+            return empty_path();
         }
-        let key = (src.clone(), dst.clone(), shape.to_vec());
-        if let Some(p) = self.cache.get(&key) {
-            self.cache_hits += 1;
-            return p.clone();
+        self.convert_ids(src.id(), dst.id(), shape, elem_bytes)
+    }
+
+    /// Id-keyed fast path for callers that already hold interned specs
+    /// (the solver-graph edge pricer).
+    pub fn convert_ids(
+        &self,
+        src: SpecId,
+        dst: SpecId,
+        shape: &[usize],
+        elem_bytes: usize,
+    ) -> Arc<TransformPath> {
+        if src == dst {
+            return empty_path();
         }
-        self.cache_misses += 1;
+        let key = (src, dst, shape_class(shape, elem_bytes));
+        let seg = self.segment(&key);
+        if let Some(p) = seg.read().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(p);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let (s, d) = (src.spec(), dst.spec());
         let path = self
-            .greedy_search(src, dst, shape, elem_bytes)
+            .greedy_search(&s, &d, shape, elem_bytes)
             .unwrap_or_else(|| {
-                self.bfs_search(src, dst, shape, elem_bytes)
+                self.bfs_search(&s, &d, shape, elem_bytes)
                     .expect("spec space is connected; BFS must succeed")
             });
-        self.cache.insert(key, path.clone());
+        let path = Arc::new(path);
+        // racing computers produce identical paths (the search is
+        // deterministic); either insert wins
+        seg.write()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| Arc::clone(&path));
         path
     }
 
@@ -232,7 +328,7 @@ impl LayoutManager {
                 return Some(path);
             }
             let candidates = one_step_transforms(&cur, shape, &self.mesh);
-            let best = candidates
+            let (op, next) = candidates
                 .into_iter()
                 .filter(|(_, s)| !visited.contains(s))
                 .min_by(|a, b| {
@@ -241,10 +337,10 @@ impl LayoutManager {
                         .unwrap()
                 })?;
             path.comm_time +=
-                step_time(&best.0, &best.1, bytes_global, &self.mesh);
-            visited.insert(best.1.clone());
-            cur = best.1.clone();
-            path.steps.push(best);
+                step_time(&op, &next, bytes_global, &self.mesh);
+            visited.insert(next.clone());
+            path.steps.push((op, next.id()));
+            cur = next;
         }
         (cur == *dst).then_some(path)
     }
@@ -278,7 +374,7 @@ impl LayoutManager {
                 let mut p = path.clone();
                 p.comm_time +=
                     step_time(&op, &next, bytes_global, &self.mesh);
-                p.steps.push((op, next.clone()));
+                p.steps.push((op, next.id()));
                 if next == *dst {
                     return Some(p);
                 }
@@ -315,7 +411,7 @@ impl LayoutManager {
                 let op = TransformOp::AllGather { dim, axis };
                 path.comm_time +=
                     step_time(&op, &cur, bytes_global, &self.mesh);
-                path.steps.push((op, cur.clone()));
+                path.steps.push((op, cur.id()));
             }
         }
         for dim in 0..cur.rank() {
@@ -327,7 +423,7 @@ impl LayoutManager {
                 let op = TransformOp::Shard { dim, axis };
                 path.comm_time +=
                     step_time(&op, &cur, bytes_global, &self.mesh);
-                path.steps.push((op, cur.clone()));
+                path.steps.push((op, cur.id()));
             }
         }
         debug_assert_eq!(&cur, dst);
@@ -335,7 +431,18 @@ impl LayoutManager {
     }
 
     pub fn cache_len(&self) -> usize {
-        self.cache.len()
+        self.segments
+            .iter()
+            .map(|s| s.read().unwrap().len())
+            .sum()
+    }
+
+    pub fn cache_hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
     }
 }
 
@@ -372,18 +479,18 @@ mod tests {
     fn greedy_solves_s0_to_s1() {
         // paper worked example: S0 -> S1 needs gather + shard
         let m = mesh(&[2, 2]);
-        let mut lm = LayoutManager::new(m);
+        let lm = LayoutManager::new(m);
         let src = ShardingSpec::new(&[&[0], &[]]);
         let dst = ShardingSpec::new(&[&[1], &[]]);
         let p = lm.convert(&src, &dst, &[8, 8], 4);
         assert!(!p.is_empty() && p.len() <= 2, "path: {:?}", p.steps);
-        assert_eq!(p.steps.last().unwrap().1, dst);
+        assert_eq!(p.steps.last().unwrap().1, dst.id());
     }
 
     #[test]
     fn identity_conversion_is_empty() {
         let m = mesh(&[2, 2]);
-        let mut lm = LayoutManager::new(m);
+        let lm = LayoutManager::new(m);
         let s = ShardingSpec::new(&[&[0], &[1]]);
         let p = lm.convert(&s, &s, &[8, 8], 4);
         assert!(p.is_empty());
@@ -393,7 +500,7 @@ mod tests {
     #[test]
     fn greedy_never_worse_than_dim_by_dim() {
         let m = mesh(&[2, 4]);
-        let mut lm = LayoutManager::new(m);
+        let lm = LayoutManager::new(m);
         let shape = [32, 64];
         let specs = ShardingSpec::enumerate(&shape, &lm.mesh);
         for src in &specs {
@@ -413,7 +520,7 @@ mod tests {
     #[test]
     fn greedy_reaches_every_target_on_3d_mesh() {
         let m = mesh(&[2, 2, 2]);
-        let mut lm = LayoutManager::new(m);
+        let lm = LayoutManager::new(m);
         let shape = [16, 16, 16];
         let specs = ShardingSpec::enumerate(&shape, &lm.mesh);
         assert!(specs.len() > 20);
@@ -421,7 +528,7 @@ mod tests {
         for dst in &specs {
             let p = lm.convert(&src, dst, &shape, 4);
             if dst != &src {
-                assert_eq!(&p.steps.last().unwrap().1, dst);
+                assert_eq!(p.steps.last().unwrap().1, dst.id());
             }
         }
     }
@@ -429,14 +536,51 @@ mod tests {
     #[test]
     fn cache_hits_on_repeat_queries() {
         let m = mesh(&[2, 2]);
-        let mut lm = LayoutManager::new(m);
+        let lm = LayoutManager::new(m);
         let src = ShardingSpec::new(&[&[0], &[]]);
         let dst = ShardingSpec::new(&[&[], &[0]]);
         lm.convert(&src, &dst, &[8, 8], 4);
-        let misses = lm.cache_misses;
+        let misses = lm.cache_misses();
         lm.convert(&src, &dst, &[8, 8], 4);
-        assert_eq!(lm.cache_misses, misses);
-        assert!(lm.cache_hits >= 1);
+        assert_eq!(lm.cache_misses(), misses);
+        assert!(lm.cache_hits() >= 1);
+    }
+
+    #[test]
+    fn concurrent_converts_agree_and_share_the_cache() {
+        let m = mesh(&[2, 4]);
+        let lm = LayoutManager::new(m);
+        let shape = [32, 64];
+        let specs = ShardingSpec::enumerate(&shape, &lm.mesh);
+        let times: Vec<Vec<f64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let (lm, specs) = (&lm, &specs);
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        for a in specs {
+                            for b in specs {
+                                out.push(
+                                    lm.convert(a, b, &shape, 4).comm_time,
+                                );
+                            }
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for w in times.windows(2) {
+            assert_eq!(w[0], w[1], "threads must see identical paths");
+        }
+        // every distinct non-identity pair cached at most once
+        let pairs = specs.len() * specs.len() - specs.len();
+        assert!(lm.cache_len() <= pairs);
+        // a repeat query is now a guaranteed hit
+        let hits = lm.cache_hits();
+        lm.convert(&specs[0], &specs[1], &shape, 4);
+        assert_eq!(lm.cache_hits(), hits + 1);
     }
 
     #[test]
@@ -463,5 +607,39 @@ mod tests {
         let p = lm.greedy_search(&src, &dst, &[16, 16], 4).unwrap();
         assert_eq!(p.len(), 1, "path: {:?}", p.steps);
         assert!(matches!(p.steps[0].0, TransformOp::AllToAll { .. }));
+    }
+
+    #[test]
+    fn all_to_all_aware_distance_prices_axis_move() {
+        // S0R -> RS0 is one axis move: the distance must price a single
+        // AllToAll, strictly cheaper than the gather+shard pair the
+        // dim-by-dim baseline emits
+        let src = ShardingSpec::new(&[&[0], &[]]);
+        let dst = ShardingSpec::new(&[&[], &[0]]);
+        let d = spec_distance(&src, &dst);
+        assert_eq!(d, COST_ALL_TO_ALL);
+        assert!(d < COST_ALL_GATHER + COST_SHARD);
+
+        // and the two execution paths reflect it: greedy emits the one
+        // AllToAll where dim-by-dim pays gather-then-shard — half the
+        // collective launches for no more communication time
+        let m = mesh(&[4]);
+        let lm = LayoutManager::new(m);
+        let greedy = lm.greedy_search(&src, &dst, &[16, 16], 4).unwrap();
+        let dxd = lm.dim_by_dim(&src, &dst, &[16, 16], 4);
+        assert_eq!(greedy.len(), 1);
+        assert!(matches!(greedy.steps[0].0, TransformOp::AllToAll { .. }));
+        assert_eq!(dxd.len(), 2, "baseline: gather then shard");
+        assert!(
+            greedy.comm_time <= dxd.comm_time + 1e-12,
+            "all-to-all {} must not exceed gather+shard {}",
+            greedy.comm_time,
+            dxd.comm_time
+        );
+
+        // a same-dim re-shard (S01 -> S0 prefix survives) is NOT a move
+        let a = ShardingSpec::new(&[&[0, 1], &[]]);
+        let b = ShardingSpec::new(&[&[0], &[]]);
+        assert_eq!(spec_distance(&a, &b), COST_ALL_GATHER);
     }
 }

@@ -167,6 +167,12 @@ fn narrate(ev: &ProgressEvent) {
             eprintln!("[batch] request #{index}: {} ({ms:.0} ms)",
                       source.name());
         }
+        ProgressEvent::SgraphBuild { shape, ms, shared } => {
+            eprintln!(
+                "[sgraph] mesh {shape:?}: {} ({ms:.0} ms)",
+                if *shared { "shared" } else { "built" }
+            );
+        }
         _ => {}
     }
 }
@@ -432,7 +438,8 @@ fn cmd_batch(args: &Args) -> Result<()> {
     let s = service.stats();
     println!(
         "\n{} request(s) in {:.2}s — {} memory hit(s), {} disk hit(s), \
-         {} partial resume(s), {} solve(s), {} eviction(s), {} failure(s)",
+         {} partial resume(s), {} solve(s), {} eviction(s), {} failure(s); \
+         {} solver graph(s) built, {} shared",
         results.len(),
         wall,
         s.memory_hits,
@@ -440,7 +447,9 @@ fn cmd_batch(args: &Args) -> Result<()> {
         s.partial_resumes,
         s.misses,
         s.evictions,
-        failures
+        failures,
+        s.sgraph_builds,
+        s.sgraph_reuses
     );
     if failures > 0 {
         return Err(anyhow!("{failures} request(s) failed"));

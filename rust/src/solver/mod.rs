@@ -40,17 +40,18 @@ impl Default for SolveOpts {
     }
 }
 
-/// Evaluate a full assignment.
+/// Evaluate a full assignment. Per-strategy local sums come from the
+/// arrays precomputed at [`SolverGraph::build`] time instead of being
+/// re-derived from the strategy structs on every call.
 pub fn evaluate(sg: &SolverGraph, choice: &[usize]) -> (f64, f64) {
     let mut time = 0.0;
     let mut mem = 0.0;
-    for (i, set) in sg.sets.iter().enumerate() {
-        let s = &set.strategies[choice[i]];
-        time += s.compute_time + s.comm_time + s.grad_comm;
-        mem += s.mem_bytes;
+    for i in 0..sg.len() {
+        time += sg.strat_time[i][choice[i]];
+        mem += sg.strat_mem[i][choice[i]];
     }
     for e in &sg.edges {
-        time += e.cost[choice[e.from]][choice[e.to]];
+        time += e.cost(choice[e.from], choice[e.to]);
     }
     (time, mem)
 }
@@ -61,14 +62,9 @@ pub fn solve_exact(sg: &SolverGraph, budget: f64) -> Option<Solution> {
     let n = sg.len();
     // per-node lower bounds on remaining time and memory
     let min_time: Vec<f64> = sg
-        .sets
+        .strat_time
         .iter()
-        .map(|s| {
-            s.strategies
-                .iter()
-                .map(|st| st.compute_time + st.comm_time + st.grad_comm)
-                .fold(f64::INFINITY, f64::min)
-        })
+        .map(|t| t.iter().copied().fold(f64::INFINITY, f64::min))
         .collect();
     let min_mem = sg.min_mem();
     let mut suffix_time = vec![0.0; n + 1];
@@ -120,6 +116,8 @@ pub fn solve_exact(sg: &SolverGraph, budget: f64) -> Option<Solution> {
         // order strategies by local cost for better pruning
         let mut order: Vec<usize> =
             (0..sg.sets[i].strategies.len()).collect();
+        // keep the original pruning key (compute + comm, grad excluded)
+        // so tie-broken optima match the pre-refactor explorer
         order.sort_by(|&a, &b| {
             let sa = &sg.sets[i].strategies[a];
             let sb = &sg.sets[i].strategies[b];
@@ -129,15 +127,13 @@ pub fn solve_exact(sg: &SolverGraph, budget: f64) -> Option<Solution> {
         });
         for s in order {
             choice[i] = s;
-            let st = &sg.sets[i].strategies[s];
-            let mut t =
-                time + st.compute_time + st.comm_time + st.grad_comm;
+            let mut t = time + sg.strat_time[i][s];
             for e in &in_edges[i] {
-                t += e.cost[choice[e.from]][s];
+                t += e.cost(choice[e.from], s);
             }
             rec(
                 sg, in_edges, suffix_time, suffix_mem, budget, i + 1, t,
-                mem + st.mem_bytes, choice, best,
+                mem + sg.strat_mem[i][s], choice, best,
             );
         }
     }
@@ -158,15 +154,9 @@ pub fn solve_exact(sg: &SolverGraph, budget: f64) -> Option<Solution> {
 fn beam(sg: &SolverGraph, lambda: f64, width: usize) -> Solution {
     let n = sg.len();
     let is_free: Vec<bool> = sg
-        .sets
+        .strat_time
         .iter()
-        .map(|set| {
-            set.strategies
-                .iter()
-                .all(|s| s.compute_time == 0.0 && s.comm_time == 0.0
-                    && s.grad_comm == 0.0)
-                && set.strategies.len() > 1
-        })
+        .map(|t| t.iter().all(|&x| x == 0.0) && t.len() > 1)
         .collect();
     let order: Vec<usize> = (0..n).filter(|&i| !is_free[i]).collect();
     let pos: Vec<Option<usize>> = {
@@ -197,23 +187,22 @@ fn beam(sg: &SolverGraph, lambda: f64, width: usize) -> Solution {
             states.len() * sg.sets[i].strategies.len(),
         );
         for st in &states {
-            for (si, s) in sg.sets[i].strategies.iter().enumerate() {
-                let mut t =
-                    st.time + s.compute_time + s.comm_time + s.grad_comm;
+            for si in 0..sg.sets[i].strategies.len() {
+                let mut t = st.time + sg.strat_time[i][si];
                 for e in &in_edges[k] {
                     let (f, ti) = if pos[e.to] == Some(k) {
                         (st.choice[pos[e.from].unwrap()], si)
                     } else {
                         (si, st.choice[pos[e.to].unwrap()])
                     };
-                    t += e.cost[f][ti];
+                    t += e.cost(f, ti);
                 }
                 let mut c = st.choice.clone();
                 c.push(si);
                 next.push(State {
                     choice: c,
                     time: t,
-                    mem: st.mem + s.mem_bytes,
+                    mem: st.mem + sg.strat_mem[i][si],
                 });
             }
         }
@@ -244,13 +233,12 @@ fn beam(sg: &SolverGraph, lambda: f64, width: usize) -> Solution {
         let mut best_si = 0;
         let mut best_cost = f64::INFINITY;
         for si in 0..sg.sets[i].strategies.len() {
-            let mut c =
-                lambda * sg.sets[i].strategies[si].mem_bytes;
+            let mut c = lambda * sg.strat_mem[i][si];
             for e in &sg.edges {
                 if e.from == i {
-                    c += e.cost[si][choice[e.to]];
+                    c += e.cost(si, choice[e.to]);
                 } else if e.to == i {
-                    c += e.cost[choice[e.from]][si];
+                    c += e.cost(choice[e.from], si);
                 }
             }
             if c < best_cost {
@@ -285,16 +273,14 @@ fn icm(sg: &SolverGraph, sol: &mut Solution, lambda: f64) {
             let cur = sol.choice[i];
             let mut best_si = cur;
             let mut best_cost = f64::INFINITY;
-            for (si, s) in sg.sets[i].strategies.iter().enumerate() {
-                let mut c = s.compute_time
-                    + s.comm_time
-                    + s.grad_comm
-                    + lambda * s.mem_bytes;
+            for si in 0..sg.sets[i].strategies.len() {
+                let mut c = sg.strat_time[i][si]
+                    + lambda * sg.strat_mem[i][si];
                 for e in &in_edges[i] {
-                    c += e.cost[sol.choice[e.from]][si];
+                    c += e.cost(sol.choice[e.from], si);
                 }
                 for e in &out_edges[i] {
-                    c += e.cost[si][sol.choice[e.to]];
+                    c += e.cost(si, sol.choice[e.to]);
                 }
                 if c < best_cost {
                     best_cost = c;
@@ -326,8 +312,7 @@ fn icm2(sg: &SolverGraph, sol: &mut Solution, lambda: f64) {
         incident[e.to].push(e);
     }
     let local = |i: usize, si: usize| {
-        let s = &sg.sets[i].strategies[si];
-        s.compute_time + s.comm_time + s.grad_comm + lambda * s.mem_bytes
+        sg.strat_time[i][si] + lambda * sg.strat_mem[i][si]
     };
     for _sweep in 0..8 {
         let mut changed = false;
@@ -349,9 +334,9 @@ fn icm2(sg: &SolverGraph, sol: &mut Solution, lambda: f64) {
                 }
                 for (si, m) in mu.iter_mut().enumerate() {
                     *m += if e.from == u {
-                        e.cost[si][sol.choice[e.to]]
+                        e.cost(si, sol.choice[e.to])
                     } else {
-                        e.cost[sol.choice[e.from]][si]
+                        e.cost(sol.choice[e.from], si)
                     };
                 }
             }
@@ -362,9 +347,9 @@ fn icm2(sg: &SolverGraph, sol: &mut Solution, lambda: f64) {
                 }
                 for (si, m) in mv.iter_mut().enumerate() {
                     *m += if e.from == v {
-                        e.cost[si][sol.choice[e.to]]
+                        e.cost(si, sol.choice[e.to])
                     } else {
-                        e.cost[sol.choice[e.from]][si]
+                        e.cost(sol.choice[e.from], si)
                     };
                 }
             }
@@ -382,9 +367,9 @@ fn icm2(sg: &SolverGraph, sol: &mut Solution, lambda: f64) {
                     let mut c = mu_s + mv_s;
                     for e in &couplings {
                         c += if e.from == u {
-                            e.cost[su][sv]
+                            e.cost(su, sv)
                         } else {
-                            e.cost[sv][su]
+                            e.cost(sv, su)
                         };
                     }
                     if c < best_cost {
@@ -549,8 +534,8 @@ mod tests {
     }
 
     fn build(g: &crate::graph::Graph, m: &DeviceMesh) -> SolverGraph {
-        let mut lm = LayoutManager::new(m.clone());
-        SolverGraph::build(g, m, &DeviceModel::a100_80gb(), &mut lm)
+        let lm = LayoutManager::new(m.clone());
+        SolverGraph::build(g, m, &DeviceModel::a100_80gb(), &lm)
     }
 
     #[test]

@@ -4,13 +4,19 @@
 //! scalar-only nodes are dropped; what remains are solver nodes with
 //! strategy sets and edges carrying dense resharding-cost matrices
 //! R(p, S_p, n).
+//!
+//! Edge matrices are priced in parallel over [`util::pool`]
+//! (crate::util::pool) against a shared `&LayoutManager` — building the
+//! graph never needs `&mut` anything, so one build can serve every
+//! concurrent solver (see [`api::SolverGraphStore`]
+//! (crate::api::SolverGraphStore)).
 
 use crate::cluster::DeviceMesh;
 use crate::graph::op::Op;
 use crate::graph::{Graph, NodeId};
 use crate::layout::LayoutManager;
 use crate::sim::DeviceModel;
-use crate::spec::ShardingSpec;
+use crate::spec::{ShardingSpec, SpecId};
 use crate::strategy::{generate, propagate_spec, StrategySet};
 
 /// Ops folded into edges (single-input, zero-FLOP).
@@ -21,14 +27,60 @@ fn mergeable(op: &Op) -> bool {
     )
 }
 
+/// Solver edge with its dense resharding-cost matrix, stored row-major
+/// (`costs[s_from * n_to + s_to]`) — one contiguous allocation instead of
+/// the former `Vec<Vec<f64>>` row boxes.
 #[derive(Debug, Clone)]
 pub struct Edge {
     pub from: usize,
     pub to: usize,
     /// Index of the consumer's input this edge feeds.
     pub to_input: usize,
-    /// cost\[s_from\]\[s_to\] = resharding seconds for that strategy pair.
-    pub cost: Vec<Vec<f64>>,
+    n_to: usize,
+    costs: Vec<f64>,
+}
+
+impl Edge {
+    pub fn new(
+        from: usize,
+        to: usize,
+        to_input: usize,
+        n_to: usize,
+        costs: Vec<f64>,
+    ) -> Edge {
+        debug_assert!(n_to > 0 && costs.len() % n_to == 0);
+        Edge { from, to, to_input, n_to, costs }
+    }
+
+    /// Resharding seconds for the (producer strategy, consumer strategy)
+    /// pair.
+    #[inline]
+    pub fn cost(&self, s_from: usize, s_to: usize) -> f64 {
+        self.costs[s_from * self.n_to + s_to]
+    }
+
+    /// Producer-side strategy count (matrix rows).
+    pub fn n_from(&self) -> usize {
+        self.costs.len() / self.n_to
+    }
+
+    /// Consumer-side strategy count (matrix columns / row stride).
+    pub fn n_to(&self) -> usize {
+        self.n_to
+    }
+}
+
+/// Flattened-chain description of one edge, built sequentially and priced
+/// in parallel.
+struct EdgeDesc {
+    from_sn: usize,
+    to_sn: usize,
+    to_input: usize,
+    /// The real producer node (after walking back through the chain).
+    producer: NodeId,
+    /// Trivial adapter chain, in forward order.
+    chain: Vec<NodeId>,
+    consumer: NodeId,
 }
 
 pub struct SolverGraph {
@@ -38,6 +90,12 @@ pub struct SolverGraph {
     pub solver_of: Vec<usize>,
     pub sets: Vec<StrategySet>,
     pub edges: Vec<Edge>,
+    /// Precomputed per-node, per-strategy local time
+    /// (compute + correctness comm + grad sync), seconds — the hot sums
+    /// `evaluate` and the beam scorer used to recompute on every call.
+    pub strat_time: Vec<Vec<f64>>,
+    /// Precomputed per-node, per-strategy per-device memory, bytes.
+    pub strat_mem: Vec<Vec<f64>>,
 }
 
 impl SolverGraph {
@@ -51,26 +109,24 @@ impl SolverGraph {
 
     /// Per-node minimum memory (for infeasibility pruning).
     pub fn min_mem(&self) -> Vec<f64> {
-        self.sets
+        self.strat_mem
             .iter()
-            .map(|s| {
-                s.strategies
-                    .iter()
-                    .map(|st| st.mem_bytes)
-                    .fold(f64::INFINITY, f64::min)
-            })
+            .map(|m| m.iter().copied().fold(f64::INFINITY, f64::min))
             .collect()
     }
 
     /// Build from a computation graph: generate strategies for every
     /// solver node, fold trivial chains, and price every edge's
     /// (producer strategy, consumer strategy) resharding with the layout
-    /// manager (costs land in its cache — §4.3 "solver supports").
+    /// manager (costs land in its shared cache — §4.3 "solver supports").
+    /// Strategy generation and edge pricing both fan out over the thread
+    /// pool; `layout` is only read-locked, so a single manager serves
+    /// every worker.
     pub fn build(
         g: &Graph,
         mesh: &DeviceMesh,
         dev: &DeviceModel,
-        layout: &mut LayoutManager,
+        layout: &LayoutManager,
     ) -> SolverGraph {
         let mut anchors = Vec::new();
         let mut solver_of = vec![usize::MAX; g.len()];
@@ -90,7 +146,7 @@ impl SolverGraph {
         );
 
         // walk each solver node's inputs back through trivial chains
-        let mut edges = Vec::new();
+        let mut descs = Vec::new();
         for (to_sn, &to_id) in anchors.iter().enumerate() {
             let node = g.node(to_id);
             for (to_input, &inp) in node.inputs.iter().enumerate() {
@@ -106,30 +162,64 @@ impl SolverGraph {
                 if from_sn == usize::MAX {
                     continue;
                 }
-                let cost = price_edge(
-                    g, mesh, layout, &sets[from_sn], &sets[to_sn],
-                    to_input, cur, &chain, to_id,
-                );
-                edges.push(Edge { from: from_sn, to: to_sn, to_input, cost });
+                descs.push(EdgeDesc {
+                    from_sn,
+                    to_sn,
+                    to_input,
+                    producer: cur,
+                    chain,
+                    consumer: to_id,
+                });
             }
         }
+        let edges: Vec<Edge> =
+            crate::util::pool::parallel_map(&descs, |d| {
+                let costs = price_edge(
+                    g, layout, &sets[d.from_sn], &sets[d.to_sn],
+                    d.to_input, d.producer, &d.chain, d.consumer,
+                );
+                Edge::new(
+                    d.from_sn,
+                    d.to_sn,
+                    d.to_input,
+                    sets[d.to_sn].strategies.len(),
+                    costs,
+                )
+            });
 
-        SolverGraph { anchors, solver_of, sets, edges }
+        let strat_time: Vec<Vec<f64>> = sets
+            .iter()
+            .map(|set| {
+                set.strategies
+                    .iter()
+                    .map(|s| s.compute_time + s.comm_time + s.grad_comm)
+                    .collect()
+            })
+            .collect();
+        let strat_mem: Vec<Vec<f64>> = sets
+            .iter()
+            .map(|set| {
+                set.strategies.iter().map(|s| s.mem_bytes).collect()
+            })
+            .collect();
+
+        SolverGraph { anchors, solver_of, sets, edges, strat_time, strat_mem }
     }
 }
 
+/// Price one edge's dense matrix, row-major over (producer strategy,
+/// consumer strategy).
 #[allow(clippy::too_many_arguments)]
 fn price_edge(
     g: &Graph,
-    mesh: &DeviceMesh,
-    layout: &mut LayoutManager,
+    layout: &LayoutManager,
     from_set: &StrategySet,
     to_set: &StrategySet,
     to_input: usize,
     producer: NodeId,
     chain: &[NodeId],
     consumer: NodeId,
-) -> Vec<Vec<f64>> {
+) -> Vec<f64> {
     let consumer_in_meta = {
         let n = g.node(consumer);
         &g.node(n.inputs[to_input]).out
@@ -137,11 +227,12 @@ fn price_edge(
     let prod_meta = &g.node(producer).out;
     let elem = prod_meta.dtype.bytes();
 
-    let mut cost =
-        vec![vec![0.0; to_set.strategies.len()]; from_set.strategies.len()];
+    let n_to = to_set.strategies.len();
+    let mut costs = vec![0.0; from_set.strategies.len() * n_to];
     for (si, s) in from_set.strategies.iter().enumerate() {
         // propagate producer's out spec through the trivial chain
-        let mut spec = Some(s.out_spec.clone());
+        let mut spec: Option<ShardingSpec> =
+            Some(s.out_spec.spec().as_ref().clone());
         let mut shape = prod_meta.shape.clone();
         for &t in chain {
             let tn = g.node(t);
@@ -150,39 +241,45 @@ fn price_edge(
             });
             shape = tn.out.shape.clone();
         }
+        let spec_id: Option<SpecId> = spec.map(|sp| sp.id());
+        let row = &mut costs[si * n_to..(si + 1) * n_to];
         for (ti, t) in to_set.strategies.iter().enumerate() {
-            let want: &ShardingSpec = if to_input < t.in_specs.len() {
-                &t.in_specs[to_input]
+            let want: SpecId = if to_input < t.in_specs.len() {
+                t.in_specs[to_input]
             } else {
                 // placeholder-ish consumer: no required spec
                 continue;
             };
-            cost[si][ti] = match &spec {
+            row[ti] = match spec_id {
                 Some(sp) => {
                     layout
-                        .convert(sp, want, &consumer_in_meta.shape, elem)
+                        .convert_ids(
+                            sp, want, &consumer_in_meta.shape, elem,
+                        )
                         .comm_time
                 }
                 None => {
                     // sharding broken mid-chain: gather at the producer,
                     // then shard to the consumer's need (shard is free)
                     let repl =
-                        ShardingSpec::replicated(prod_meta.shape.len());
+                        SpecId::replicated(prod_meta.shape.len());
                     let gather = layout
-                        .convert(&s.out_spec, &repl, &prod_meta.shape, elem)
+                        .convert_ids(
+                            s.out_spec, repl, &prod_meta.shape, elem,
+                        )
                         .comm_time;
-                    let want_r =
-                        ShardingSpec::replicated(want.rank());
+                    let want_r = SpecId::replicated(want.rank());
                     let shard_in = layout
-                        .convert(&want_r, want, &consumer_in_meta.shape, elem)
+                        .convert_ids(
+                            want_r, want, &consumer_in_meta.shape, elem,
+                        )
                         .comm_time;
                     gather + shard_in
                 }
             };
         }
     }
-    let _ = mesh;
-    cost
+    costs
 }
 
 #[cfg(test)]
@@ -202,12 +299,12 @@ mod tests {
     #[test]
     fn mlp_solver_graph_has_no_trivial_nodes() {
         let g = mlp(32, &[128, 64, 10]);
-        let mut lm = LayoutManager::new(mesh4());
+        let lm = LayoutManager::new(mesh4());
         let sg = SolverGraph::build(
             &g,
             &mesh4(),
             &DeviceModel::a100_80gb(),
-            &mut lm,
+            &lm,
         );
         for &a in &sg.anchors {
             assert!(!mergeable(&g.node(a).op));
@@ -224,23 +321,20 @@ mod tests {
             .filter(|n| mergeable(&n.op))
             .count();
         assert!(trivial > 10, "gpt2 has many trivial nodes: {trivial}");
-        let mut lm = LayoutManager::new(mesh4());
+        let lm = LayoutManager::new(mesh4());
         let sg = SolverGraph::build(
             &g,
             &mesh4(),
             &DeviceModel::a100_80gb(),
-            &mut lm,
+            &lm,
         );
         // solver graph is strictly smaller
         assert!(sg.len() + trivial + 1 == g.len());
         // every edge endpoints valid + cost matrices match set sizes
         for e in &sg.edges {
             assert!(e.from < sg.len() && e.to < sg.len());
-            assert_eq!(e.cost.len(), sg.sets[e.from].strategies.len());
-            assert_eq!(
-                e.cost[0].len(),
-                sg.sets[e.to].strategies.len()
-            );
+            assert_eq!(e.n_from(), sg.sets[e.from].strategies.len());
+            assert_eq!(e.n_to(), sg.sets[e.to].strategies.len());
         }
         // layout cache should have been populated heavily
         assert!(lm.cache_len() > 10);
@@ -249,20 +343,41 @@ mod tests {
     #[test]
     fn edge_costs_zero_for_matching_specs() {
         let g = mlp(32, &[128, 64, 10]);
-        let mut lm = LayoutManager::new(mesh4());
+        let lm = LayoutManager::new(mesh4());
         let sg = SolverGraph::build(
             &g,
             &mesh4(),
             &DeviceModel::a100_80gb(),
-            &mut lm,
+            &lm,
         );
         // for every edge there must exist at least one zero-cost pair
         for e in &sg.edges {
-            let any_zero = e
-                .cost
-                .iter()
-                .any(|row| row.iter().any(|&c| c == 0.0));
+            let any_zero = (0..e.n_from()).any(|si| {
+                (0..e.n_to()).any(|ti| e.cost(si, ti) == 0.0)
+            });
             assert!(any_zero, "edge {e:?} has no compatible pair");
+        }
+    }
+
+    #[test]
+    fn precomputed_strategy_arrays_match_the_sets() {
+        let g = mlp(32, &[128, 64, 10]);
+        let lm = LayoutManager::new(mesh4());
+        let sg = SolverGraph::build(
+            &g,
+            &mesh4(),
+            &DeviceModel::a100_80gb(),
+            &lm,
+        );
+        for (i, set) in sg.sets.iter().enumerate() {
+            assert_eq!(sg.strat_time[i].len(), set.strategies.len());
+            for (si, s) in set.strategies.iter().enumerate() {
+                assert_eq!(
+                    sg.strat_time[i][si],
+                    s.compute_time + s.comm_time + s.grad_comm
+                );
+                assert_eq!(sg.strat_mem[i][si], s.mem_bytes);
+            }
         }
     }
 }

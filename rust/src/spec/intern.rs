@@ -1,0 +1,191 @@
+//! Spec interning: every distinct [`ShardingSpec`] in the process maps to
+//! a small copyable [`SpecId`], so the layout cache, strategy sets, and
+//! solver-graph edges can key and compare specs with a `u32` instead of
+//! cloning `Vec<DimSpec>`s or formatting strings. The interner is global
+//! (one id space per process) and append-only: ids are never reused, so a
+//! `SpecId` captured on one thread resolves identically on every other —
+//! the property the shared [`SolverGraphStore`](crate::api::SolverGraphStore)
+//! relies on when concurrent planners exchange solver graphs.
+//!
+//! Ids are assigned in first-intern order, which can differ across runs
+//! and thread schedules. They are therefore process-local handles only:
+//! artifacts serialize the structural spec (see `api::artifacts`), never
+//! the id.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::hash::Hash;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::cluster::DeviceMesh;
+use crate::spec::ShardingSpec;
+
+/// Generic append-only interner with a read-mostly fast path. `intern` is
+/// `&self` (double-checked under an `RwLock`), so it can sit behind a
+/// `static` and be shared freely across worker threads.
+pub struct Interner<T: Eq + Hash + Clone> {
+    map: RwLock<HashMap<T, u32>>,
+    items: RwLock<Vec<Arc<T>>>,
+}
+
+impl<T: Eq + Hash + Clone> Default for Interner<T> {
+    fn default() -> Self {
+        Interner::new()
+    }
+}
+
+impl<T: Eq + Hash + Clone> Interner<T> {
+    pub fn new() -> Interner<T> {
+        Interner {
+            map: RwLock::new(HashMap::new()),
+            items: RwLock::new(Vec::new()),
+        }
+    }
+
+    /// Id of `value`, allocating one on first sight. Hot path is a single
+    /// read-lock probe; the write path re-checks under the lock so racing
+    /// interners agree on the id.
+    pub fn intern(&self, value: &T) -> u32 {
+        if let Some(&id) = self.map.read().unwrap().get(value) {
+            return id;
+        }
+        let mut map = self.map.write().unwrap();
+        if let Some(&id) = map.get(value) {
+            return id;
+        }
+        let mut items = self.items.write().unwrap();
+        let id = items.len() as u32;
+        items.push(Arc::new(value.clone()));
+        map.insert(value.clone(), id);
+        id
+    }
+
+    /// Resolve an id minted by this interner. Panics on a foreign id —
+    /// ids are only created by `intern`, so that is a logic error.
+    pub fn get(&self, id: u32) -> Arc<T> {
+        Arc::clone(&self.items.read().unwrap()[id as usize])
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn specs() -> &'static Interner<ShardingSpec> {
+    static SPECS: OnceLock<Interner<ShardingSpec>> = OnceLock::new();
+    SPECS.get_or_init(Interner::new)
+}
+
+/// Process-wide interned handle to a [`ShardingSpec`]. Copy-cheap, and
+/// `a == b` iff the underlying specs are structurally equal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SpecId(u32);
+
+impl SpecId {
+    pub fn intern(spec: &ShardingSpec) -> SpecId {
+        SpecId(specs().intern(spec))
+    }
+
+    /// Interned fully-replicated spec of the given rank.
+    pub fn replicated(rank: usize) -> SpecId {
+        SpecId::intern(&ShardingSpec::replicated(rank))
+    }
+
+    /// The structural spec behind this id.
+    pub fn spec(self) -> Arc<ShardingSpec> {
+        specs().get(self.0)
+    }
+
+    /// Raw index (stable for the process lifetime) — used for cache
+    /// segment selection, never serialized.
+    pub fn index(self) -> u32 {
+        self.0
+    }
+
+    // -- delegating conveniences for hot call sites ----------------------
+
+    pub fn rank(self) -> usize {
+        self.spec().rank()
+    }
+
+    pub fn used_axes(self) -> Vec<usize> {
+        self.spec().used_axes()
+    }
+
+    pub fn sharding_factor(self, mesh: &DeviceMesh) -> usize {
+        self.spec().sharding_factor(mesh)
+    }
+
+    pub fn shard_shape(self, shape: &[usize], mesh: &DeviceMesh)
+                       -> Vec<usize> {
+        self.spec().shard_shape(shape, mesh)
+    }
+
+    pub fn is_valid(self, shape: &[usize], mesh: &DeviceMesh) -> bool {
+        self.spec().is_valid(shape, mesh)
+    }
+}
+
+impl fmt::Display for SpecId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.spec())
+    }
+}
+
+impl ShardingSpec {
+    /// Intern this spec (see [`SpecId`]).
+    pub fn id(&self) -> SpecId {
+        SpecId::intern(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_idempotent_and_structural() {
+        let a = ShardingSpec::new(&[&[0], &[]]);
+        let b = ShardingSpec::new(&[&[0], &[]]);
+        let c = ShardingSpec::new(&[&[], &[0]]);
+        assert_eq!(a.id(), b.id());
+        assert_ne!(a.id(), c.id());
+        assert_eq!(a.id().spec().as_ref(), &a);
+        assert_eq!(a.id().to_string(), "S0R");
+    }
+
+    #[test]
+    fn concurrent_interners_agree() {
+        let specs: Vec<ShardingSpec> = (0..6)
+            .map(|i| {
+                ShardingSpec::new(&[&[i], &[], &[i + 1]])
+            })
+            .collect();
+        let ids: Vec<Vec<SpecId>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let specs = &specs;
+                    scope.spawn(move || {
+                        specs.iter().map(|s| s.id()).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for w in ids.windows(2) {
+            assert_eq!(w[0], w[1], "racing threads must mint equal ids");
+        }
+    }
+
+    #[test]
+    fn delegates_match_the_spec() {
+        let s = ShardingSpec::new(&[&[0], &[1]]);
+        let id = s.id();
+        assert_eq!(id.rank(), 2);
+        assert_eq!(id.used_axes(), vec![0, 1]);
+    }
+}

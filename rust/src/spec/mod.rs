@@ -2,6 +2,10 @@
 //! Xᵢ ∈ {R, S_j, S_jk…} — S with multiple subscripts shards dim i along
 //! several device-mesh axes at once.
 
+pub mod intern;
+
+pub use intern::{Interner, SpecId};
+
 use std::fmt;
 
 use crate::cluster::DeviceMesh;

@@ -8,24 +8,96 @@
 
 pub mod propagate;
 
+use std::fmt;
+
 use crate::cluster::{Collective, DeviceMesh};
 use crate::graph::meta::TensorMeta;
 use crate::graph::op::{Op, PlaceholderKind};
 use crate::graph::{Graph, NodeId};
 use crate::profiler::cost::node_cost;
 use crate::sim::device::DeviceModel;
-use crate::spec::{DimSpec, ShardingSpec};
+use crate::spec::{DimSpec, ShardingSpec, SpecId};
 
 pub use propagate::propagate_spec;
 
 /// Cap on strategies kept per node (lowest compute+comm kept).
 pub const MAX_STRATEGIES: usize = 48;
 
+/// Which role-based generator produced a strategy (the display prefix and
+/// per-role letters reproduce the legacy string names exactly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoleOp {
+    Matmul,
+    BatchMatmul,
+    Conv2d,
+    Embedding,
+}
+
+impl RoleOp {
+    pub fn prefix(self) -> &'static str {
+        match self {
+            RoleOp::Matmul => "mm",
+            RoleOp::BatchMatmul => "bmm",
+            RoleOp::Conv2d => "conv",
+            RoleOp::Embedding => "emb",
+        }
+    }
+
+    pub fn letters(self) -> &'static [&'static str] {
+        match self {
+            RoleOp::Matmul => &["M", "K", "N"],
+            RoleOp::BatchMatmul => &["B", "M", "K", "N"],
+            RoleOp::Conv2d => &["N", "C", "O"],
+            RoleOp::Embedding => &["B", "D"],
+        }
+    }
+}
+
+/// Structured strategy name: a tag plus the axis assignment, replacing
+/// the per-strategy `String` the generators used to format eagerly.
+/// Rendering (via `Display`) reproduces the legacy strings — e.g.
+/// `mm[M[0]K[]N[1]]`, `ew[S0R]`, `param[RS1]` — so serialized plans and
+/// log lines are unchanged.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StrategyName {
+    /// Role-axis assignment of a GEMM-family generator.
+    Roles { op: RoleOp, roles: Vec<Vec<usize>> },
+    /// Elementwise-family strategy, tagged by its anchor spec.
+    Ew(SpecId),
+    /// Input placeholder strategy.
+    Input(SpecId),
+    /// Parameter placeholder strategy (ZeRO-like layout choice).
+    Param(SpecId),
+    /// Constant placeholder (always replicated).
+    Const,
+    /// Pass-through fallback for trivial ops solved standalone.
+    Passthrough,
+}
+
+impl fmt::Display for StrategyName {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StrategyName::Roles { op, roles } => {
+                write!(f, "{}[", op.prefix())?;
+                for (letter, axes) in op.letters().iter().zip(roles) {
+                    write!(f, "{letter}{axes:?}")?;
+                }
+                write!(f, "]")
+            }
+            StrategyName::Ew(spec) => write!(f, "ew[{spec}]"),
+            StrategyName::Input(spec) => write!(f, "in[{spec}]"),
+            StrategyName::Param(spec) => write!(f, "param[{spec}]"),
+            StrategyName::Const => write!(f, "const[R]"),
+            StrategyName::Passthrough => write!(f, "passthrough[R]"),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Strategy {
-    pub name: String,
-    pub in_specs: Vec<ShardingSpec>,
-    pub out_spec: ShardingSpec,
+    pub name: StrategyName,
+    pub in_specs: Vec<SpecId>,
+    pub out_spec: SpecId,
     /// Estimated fwd+bwd compute time per iteration (C_n), seconds.
     pub compute_time: f64,
     /// Correctness communication (B_n): partial-sum all-reduce on the
@@ -148,9 +220,12 @@ impl<'a> Ctx<'a> {
                 / (factor(self.mesh, m_ax) * factor(self.mesh, k_ax))
                 + out_shard;
             res.push(Strategy {
-                name: format!("mm[M{m_ax:?}K{k_ax:?}N{n_ax:?}]"),
-                in_specs: vec![x_spec, w_spec],
-                out_spec: o_spec,
+                name: StrategyName::Roles {
+                    op: RoleOp::Matmul,
+                    roles: roles.clone(),
+                },
+                in_specs: vec![x_spec.id(), w_spec.id()],
+                out_spec: o_spec.id(),
                 compute_time: compute,
                 comm_time: comm,
                 grad_comm,
@@ -209,9 +284,12 @@ impl<'a> Ctx<'a> {
             }
             let mem = (a.bytes() + bm.bytes()) as f64 / shard + out_shard;
             res.push(Strategy {
-                name: format!("bmm[B{b_ax:?}M{m_ax:?}K{k_ax:?}N{n_ax:?}]"),
-                in_specs: vec![a_spec, b_spec],
-                out_spec: o_spec,
+                name: StrategyName::Roles {
+                    op: RoleOp::BatchMatmul,
+                    roles: roles.clone(),
+                },
+                in_specs: vec![a_spec.id(), b_spec.id()],
+                out_spec: o_spec.id(),
                 compute_time: compute,
                 comm_time: comm,
                 grad_comm: 0.0,
@@ -276,9 +354,12 @@ impl<'a> Ctx<'a> {
                 / (factor(self.mesh, n_ax) * factor(self.mesh, c_ax))
                 + out_shard;
             res.push(Strategy {
-                name: format!("conv[N{n_ax:?}C{c_ax:?}O{o_ax:?}]"),
-                in_specs: vec![x_spec, w_spec],
-                out_spec: o_spec,
+                name: StrategyName::Roles {
+                    op: RoleOp::Conv2d,
+                    roles: roles.clone(),
+                },
+                in_specs: vec![x_spec.id(), w_spec.id()],
+                out_spec: o_spec.id(),
                 compute_time: compute,
                 comm_time: comm,
                 grad_comm,
@@ -326,9 +407,12 @@ impl<'a> Ctx<'a> {
                 );
             }
             res.push(Strategy {
-                name: format!("emb[B{b_ax:?}D{d_ax:?}]"),
-                in_specs: vec![table_spec, ids_spec],
-                out_spec: o_spec.clone(),
+                name: StrategyName::Roles {
+                    op: RoleOp::Embedding,
+                    roles: roles.clone(),
+                },
+                in_specs: vec![table_spec.id(), ids_spec.id()],
+                out_spec: o_spec.id(),
                 compute_time: compute,
                 comm_time: 0.0,
                 grad_comm,
@@ -380,7 +464,7 @@ impl<'a> Ctx<'a> {
                 let im = &self.g.node(i).out;
                 match broadcast_in_spec(&spec, &anchor.shape, &im.shape) {
                     Some(s) if s.is_valid(&im.shape, self.mesh) => {
-                        in_specs.push(s)
+                        in_specs.push(s.id())
                     }
                     _ => {
                         ok = false;
@@ -392,8 +476,8 @@ impl<'a> Ctx<'a> {
                 continue;
             }
             let out_spec = match n.op {
-                Op::CrossEntropy => ShardingSpec::replicated(0),
-                _ => spec.clone(),
+                Op::CrossEntropy => SpecId::replicated(0),
+                _ => spec.id(),
             };
             let traffic = (anchor.bytes() * 2) as f64 / shard;
             let compute = self.dev.kernel_time(
@@ -405,7 +489,7 @@ impl<'a> Ctx<'a> {
             // replicated-param grad sync is handled at the param edge.
             let mem = (cost.fwd_in + cost.fwd_out) as f64 / shard;
             res.push(Strategy {
-                name: format!("ew[{spec}]"),
+                name: StrategyName::Ew(spec.id()),
                 in_specs,
                 out_spec,
                 compute_time: compute,
@@ -426,9 +510,9 @@ impl<'a> Ctx<'a> {
         let out = &n.out;
         match kind {
             PlaceholderKind::Const => vec![Strategy {
-                name: "const[R]".into(),
+                name: StrategyName::Const,
                 in_specs: vec![],
-                out_spec: ShardingSpec::replicated(out.rank()),
+                out_spec: SpecId::replicated(out.rank()),
                 compute_time: 0.0,
                 comm_time: 0.0,
                 grad_comm: 0.0,
@@ -450,8 +534,9 @@ impl<'a> Ctx<'a> {
                         continue;
                     }
                     let shard = spec.sharding_factor(self.mesh) as f64;
+                    let spec = spec.id();
                     res.push(Strategy {
-                        name: format!("in[{spec}]"),
+                        name: StrategyName::Input(spec),
                         in_specs: vec![],
                         out_spec: spec,
                         compute_time: 0.0,
@@ -467,8 +552,9 @@ impl<'a> Ctx<'a> {
                 for spec in ShardingSpec::enumerate(&out.shape, self.mesh) {
                     let shard = spec.sharding_factor(self.mesh) as f64;
                     // param + grad persist per device
+                    let spec = spec.id();
                     res.push(Strategy {
-                        name: format!("param[{spec}]"),
+                        name: StrategyName::Param(spec),
                         in_specs: vec![],
                         out_spec: spec,
                         compute_time: 0.0,
@@ -534,13 +620,13 @@ pub fn generate(g: &Graph, id: NodeId, mesh: &DeviceMesh,
         | Op::Slice { .. }
         | Op::Concat { .. }
         | Op::Output => vec![Strategy {
-            name: "passthrough[R]".into(),
+            name: StrategyName::Passthrough,
             in_specs: n
                 .inputs
                 .iter()
-                .map(|&i| ShardingSpec::replicated(g.node(i).out.rank()))
+                .map(|&i| SpecId::replicated(g.node(i).out.rank()))
                 .collect(),
-            out_spec: ShardingSpec::replicated(n.out.rank()),
+            out_spec: SpecId::replicated(n.out.rank()),
             compute_time: 0.0,
             comm_time: 0.0,
             grad_comm: 0.0,
@@ -553,19 +639,10 @@ pub fn generate(g: &Graph, id: NodeId, mesh: &DeviceMesh,
             .partial_cmp(&(b.compute_time + b.comm_time))
             .unwrap()
     });
-    let mut seen = std::collections::HashSet::new();
-    strategies.retain(|s| {
-        let sig = format!(
-            "{}|{}",
-            s.in_specs
-                .iter()
-                .map(|x| x.to_string())
-                .collect::<Vec<_>>()
-                .join(","),
-            s.out_spec
-        );
-        seen.insert(sig)
-    });
+    // interned ids make the signature a cheap Copy tuple, not a String
+    let mut seen: std::collections::HashSet<(Vec<SpecId>, SpecId)> =
+        std::collections::HashSet::new();
+    strategies.retain(|s| seen.insert((s.in_specs.clone(), s.out_spec)));
     strategies.truncate(MAX_STRATEGIES);
     assert!(
         !strategies.is_empty(),
@@ -606,8 +683,8 @@ mod tests {
         let m = mesh(&[4]);
         let dev = DeviceModel::a100_80gb();
         let set = generate(&g, y, &m, &dev);
-        let names: Vec<&str> =
-            set.strategies.iter().map(|s| s.name.as_str()).collect();
+        let names: Vec<String> =
+            set.strategies.iter().map(|s| s.name.to_string()).collect();
         // serial, row-parallel (M), col-parallel (N), contraction (K)
         assert!(set.strategies.len() >= 4, "{names:?}");
         let has = |f: &dyn Fn(&Strategy) -> bool| {
@@ -654,7 +731,7 @@ mod tests {
         let set = generate(&g, y, &m, &DeviceModel::a100_80gb());
         for s in &set.strategies {
             assert!(
-                s.out_spec.dims[2].is_replica(),
+                s.out_spec.spec().dims[2].is_replica(),
                 "ln sharded feature dim: {}",
                 s.out_spec
             );
@@ -672,7 +749,7 @@ mod tests {
         let m = mesh(&[2]);
         let set = generate(&g, y, &m, &DeviceModel::a100_80gb());
         for s in &set.strategies {
-            assert!(s.out_spec.dims[2].is_replica());
+            assert!(s.out_spec.spec().dims[2].is_replica());
         }
     }
 
@@ -687,6 +764,24 @@ mod tests {
         let max = mems.iter().cloned().fold(0.0, f64::max);
         let min = mems.iter().cloned().fold(f64::INFINITY, f64::min);
         assert!(max / min >= 3.9, "sharding must quarter param memory");
+    }
+
+    #[test]
+    fn strategy_names_render_legacy_strings() {
+        let mm = StrategyName::Roles {
+            op: RoleOp::Matmul,
+            roles: vec![vec![0], vec![], vec![1]],
+        };
+        assert_eq!(mm.to_string(), "mm[M[0]K[]N[1]]");
+        let bmm = StrategyName::Roles {
+            op: RoleOp::BatchMatmul,
+            roles: vec![vec![0], vec![], vec![], vec![1]],
+        };
+        assert_eq!(bmm.to_string(), "bmm[B[0]M[]K[]N[1]]");
+        let ew = StrategyName::Ew(ShardingSpec::new(&[&[0], &[]]).id());
+        assert_eq!(ew.to_string(), "ew[S0R]");
+        assert_eq!(StrategyName::Const.to_string(), "const[R]");
+        assert_eq!(StrategyName::Passthrough.to_string(), "passthrough[R]");
     }
 
     #[test]

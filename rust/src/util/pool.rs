@@ -3,6 +3,20 @@
 //! The coordinator and solvers use this for embarrassingly parallel work
 //! (per-node strategy generation, per-budget solver sweeps). On the 1-core
 //! CI box it degrades to sequential execution with no overhead surprises.
+//!
+//! Nesting is bounded to one level: a `parallel_map` reached from inside
+//! another `parallel_map`'s worker runs sequentially on that worker.
+//! Without this, N batch-planning workers each spawning N edge-pricing
+//! threads would oversubscribe the machine with up to N² compute-bound
+//! threads.
+
+use std::cell::Cell;
+
+thread_local! {
+    /// True on threads spawned by `parallel_map` (fresh scoped threads,
+    /// so the flag dies with the worker — no cleanup needed).
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
 
 /// Apply `f` to every item, splitting the index range over worker threads.
 /// Preserves input order in the output.
@@ -13,7 +27,7 @@ where
     F: Fn(&T) -> R + Sync,
 {
     let workers = threads().min(items.len().max(1));
-    if workers <= 1 || items.len() < 2 {
+    if workers <= 1 || items.len() < 2 || IN_POOL.with(|p| p.get()) {
         return items.iter().map(&f).collect();
     }
     let chunk = items.len().div_ceil(workers);
@@ -27,6 +41,7 @@ where
             let f = &f;
             let _ = ci;
             handles.push(scope.spawn(move || {
+                IN_POOL.with(|p| p.set(true));
                 for (slot, item) in head.iter_mut().zip(chunk_items) {
                     *slot = Some(f(item));
                 }
@@ -67,6 +82,28 @@ mod tests {
         let empty: Vec<usize> = vec![];
         assert!(parallel_map(&empty, |x| *x).is_empty());
         assert_eq!(parallel_map(&[41], |x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn nested_maps_stay_on_their_worker_thread() {
+        // an inner parallel_map reached from a pool worker must not
+        // fan out again (N^2 oversubscription guard)
+        let items: Vec<usize> = (0..8).collect();
+        let out = parallel_map(&items, |&x| {
+            let inner: Vec<usize> = (0..8).collect();
+            let tids: std::collections::HashSet<std::thread::ThreadId> =
+                parallel_map(&inner, |_| std::thread::current().id())
+                    .into_iter()
+                    .collect();
+            (x * 2, tids.len())
+        });
+        for (i, (doubled, distinct_tids)) in out.iter().enumerate() {
+            assert_eq!(*doubled, i * 2);
+            assert_eq!(
+                *distinct_tids, 1,
+                "inner map must run sequentially on its worker"
+            );
+        }
     }
 
     #[test]

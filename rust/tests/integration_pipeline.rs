@@ -178,8 +178,8 @@ fn property_solver_never_violates_budget() {
                 axis_alpha: vec![1e-6; mesh_shape.len()],
                 axis_beta: vec![1e11; mesh_shape.len()],
             };
-            let mut lm = LayoutManager::new(mesh.clone());
-            let sg = SolverGraph::build(&g, &mesh, &dev, &mut lm);
+            let lm = LayoutManager::new(mesh.clone());
+            let sg = SolverGraph::build(&g, &mesh, &dev, &lm);
             let unconstrained = solve(
                 &sg,
                 1e18,
@@ -226,7 +226,7 @@ fn property_layout_paths_reach_target_and_costs_are_finite() {
                 axis_alpha: vec![1e-6; 2],
                 axis_beta: vec![1e11; 2],
             };
-            let mut lm = LayoutManager::new(mesh.clone());
+            let lm = LayoutManager::new(mesh.clone());
             let specs = ShardingSpec::enumerate(tshape, &mesh);
             let mut rng = Rng::new(*seed);
             for _ in 0..6 {
@@ -240,9 +240,9 @@ fn property_layout_paths_reach_target_and_costs_are_finite() {
                     let last = p
                         .steps
                         .last()
-                        .map(|(_, s)| s.clone())
+                        .map(|(_, s)| *s)
                         .ok_or("empty path for distinct specs")?;
-                    if last != b {
+                    if last != b.id() {
                         return Err(format!("path ends at {last}, want {b}"));
                     }
                 }

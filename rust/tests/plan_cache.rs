@@ -297,8 +297,8 @@ fn portfolio_backend_is_at_least_as_good_as_its_base_config() {
         axis_alpha: vec![2e-6; 1],
         axis_beta: vec![100e9; 1],
     };
-    let mut lm = LayoutManager::new(mesh.clone());
-    let sg = SolverGraph::build(&g, &mesh, &dev, &mut lm);
+    let lm = LayoutManager::new(mesh.clone());
+    let sg = SolverGraph::build(&g, &mesh, &dev, &lm);
     let base = SolveOpts {
         beam_width: 8,
         anneal_iters: 100,

@@ -204,8 +204,8 @@ fn property_solver_plans_random_graphs_validly() {
                 axis_alpha: vec![1e-6; 2],
                 axis_beta: vec![1e11; 2],
             };
-            let mut lm = LayoutManager::new(mesh.clone());
-            let sg = SolverGraph::build(&g, &mesh, &dev, &mut lm);
+            let lm = LayoutManager::new(mesh.clone());
+            let sg = SolverGraph::build(&g, &mesh, &dev, &lm);
             let sol = solve(
                 &sg,
                 1e15,

@@ -1,0 +1,172 @@
+//! Shared-solver-graph concurrency tests: N concurrent `plan_batch`
+//! requests on the same (graph, mesh, device) must trigger exactly one
+//! `SolverGraph` build — observed both through `CacheStats`
+//! (`sgraph_builds` / `sgraph_reuses`) and through the
+//! `ProgressEvent::SgraphBuild` instrumentation — and a plan produced
+//! through the shared store must be byte-identical to one compiled by an
+//! isolated planner that built its own graph.
+//!
+//! Timing-sensitive: the batch workers must actually overlap inside the
+//! store for the `OnceLock` path to be exercised, which is why CI also
+//! runs the test suite under `--release`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use automap::api::{Artifact, PlanOpts, PlanRequest, PlanService, Planner,
+                   ProgressEvent};
+use automap::cluster::SimCluster;
+use automap::graph::models::mlp;
+use automap::graph::Graph;
+use automap::sim::DeviceModel;
+use automap::solver::SolveOpts;
+
+fn model() -> Graph {
+    mlp(64, &[256, 128, 64, 10])
+}
+
+/// Small-but-real options; `mesh_shapes` is pinned to a single mesh so
+/// the expected build count is exactly one.
+fn fast_opts(seed: u64) -> PlanOpts {
+    PlanOpts {
+        sweep: 2,
+        mesh_shapes: Some(vec![vec![4]]),
+        solve: SolveOpts {
+            beam_width: 8,
+            anneal_iters: 100,
+            lagrange_iters: 3,
+            seed,
+        },
+        ..Default::default()
+    }
+}
+
+fn request(tag: &str, seed: u64) -> PlanRequest {
+    PlanRequest::new(
+        tag,
+        model(),
+        SimCluster::fully_connected(4),
+        DeviceModel::a100_80gb(),
+    )
+    .with_opts(fast_opts(seed))
+}
+
+#[test]
+fn concurrent_plan_batch_builds_the_solver_graph_exactly_once() {
+    // distinct solver seeds => distinct plan fingerprints (no cache
+    // dedup, every request really solves) but the same (graph, mesh,
+    // device) => one shared SolverGraph
+    let builds_seen = Arc::new(AtomicU64::new(0));
+    let shares_seen = Arc::new(AtomicU64::new(0));
+    let (b, r) = (Arc::clone(&builds_seen), Arc::clone(&shares_seen));
+    let svc = PlanService::new().on_progress(move |ev| {
+        if let ProgressEvent::SgraphBuild { shared, .. } = ev {
+            if *shared {
+                r.fetch_add(1, Ordering::Relaxed);
+            } else {
+                b.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    });
+    let reqs: Vec<PlanRequest> = (0..4)
+        .map(|i| request(&format!("req-{i}"), 1000 + i as u64))
+        .collect();
+    let outs = svc.plan_batch(&reqs);
+    for (i, o) in outs.iter().enumerate() {
+        assert!(o.is_ok(), "request {i} failed: {:?}", o.as_ref().err());
+    }
+
+    let s = svc.stats();
+    assert_eq!(s.misses, 4, "distinct fingerprints must all solve");
+    assert_eq!(
+        s.sgraph_builds, 1,
+        "one (graph, mesh, device) => exactly one SolverGraph build"
+    );
+    // the batch prewarm performs the single build at full pool width;
+    // all four workers then solve against the shared Arc
+    assert_eq!(s.sgraph_reuses, 4, "every request shares the one build");
+    assert_eq!(builds_seen.load(Ordering::Relaxed), 1);
+    assert_eq!(shares_seen.load(Ordering::Relaxed), 4);
+    assert_eq!(svc.store().len(), 1);
+}
+
+#[test]
+fn deduplicated_identical_requests_also_share_one_build() {
+    let svc = PlanService::new();
+    let reqs =
+        vec![request("a", 7), request("b", 7), request("c", 7)];
+    let outs = svc.plan_batch(&reqs);
+    assert!(outs.iter().all(|o| o.is_ok()));
+    let s = svc.stats();
+    assert_eq!(s.misses, 1, "identical requests dedup to one solve");
+    assert_eq!(s.hits(), 2);
+    assert_eq!(s.sgraph_builds, 1);
+    // the prewarm built it, the one solving planner reused it; dedup'd
+    // duplicates are cache hits and never touch the store
+    assert_eq!(s.sgraph_reuses, 1);
+}
+
+#[test]
+fn shared_store_plan_is_byte_identical_to_isolated_build() {
+    let svc = PlanService::new();
+    // warm the store through an unrelated-seed request so the request
+    // under test provably runs against a *reused* solver graph
+    svc.plan(&request("warm", 9001)).unwrap();
+    assert_eq!(svc.stats().sgraph_builds, 1);
+
+    let shared = svc.plan(&request("probe", 77)).unwrap();
+    let s = svc.stats();
+    assert_eq!(s.sgraph_builds, 1, "probe must reuse the warm build");
+    assert!(s.sgraph_reuses >= 1);
+
+    // isolated planner: private store, builds its own graph from scratch
+    let g = model();
+    let cluster = SimCluster::fully_connected(4);
+    let dev = DeviceModel::a100_80gb();
+    let mut p =
+        Planner::new(&g, &cluster, &dev).with_opts(fast_opts(77));
+    let isolated = p.lower().unwrap();
+
+    assert_eq!(
+        shared.plan.to_json().to_string(),
+        isolated.to_json().to_string(),
+        "shared-build plan must be byte-identical to an isolated build"
+    );
+}
+
+#[test]
+fn layout_manager_converts_through_a_shared_reference() {
+    // the refactor's prerequisite, pinned as API: `convert` takes &self
+    use automap::cluster::DeviceMesh;
+    use automap::layout::LayoutManager;
+    use automap::spec::ShardingSpec;
+
+    let mesh = DeviceMesh {
+        shape: vec![2, 2],
+        devices: (0..4).collect(),
+        axis_alpha: vec![1e-6; 2],
+        axis_beta: vec![1e11; 2],
+    };
+    let lm = LayoutManager::new(mesh.clone()); // immutable binding
+    let specs = ShardingSpec::enumerate(&[16, 16], &mesh);
+    let totals: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let (lm, specs) = (&lm, &specs);
+                scope.spawn(move || {
+                    let mut acc = 0.0;
+                    for a in specs {
+                        for b in specs {
+                            acc += lm.convert(a, b, &[16, 16], 4).comm_time;
+                        }
+                    }
+                    acc
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for w in totals.windows(2) {
+        assert_eq!(w[0], w[1], "concurrent converts must agree");
+    }
+}
