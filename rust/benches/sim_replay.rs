@@ -1,0 +1,157 @@
+//! Bench: discrete-event plan replay (`sim::exec`) — the verify-stage
+//! hot path. Three regimes per fig5 cluster on gpt2-mini:
+//!
+//! * **cold compile+replay** — fresh `SolverGraphStore` every iteration:
+//!   the full staged solve (including the solver-graph build) plus one
+//!   replay — what a from-scratch `plan` + `verify` costs;
+//! * **warm compile+replay** — the shared store already holds every
+//!   (graph, mesh) solver graph, so the solve skips the build: the
+//!   steady-state cost of re-planning + replaying on a long-lived
+//!   `PlanService`;
+//! * **replay only** — `CompiledPlan::replay_sim` on a resident
+//!   artifact: rebuild stage times + per-device programs, run the event
+//!   loop. This is the marginal cost the `sim-measure` backend pays per
+//!   candidate during ranking, and what `automap verify` pays after
+//!   loading a plan.
+//!
+//! Results print as a table and land in `BENCH_sim.json` at the repo
+//! root. `cargo bench --bench sim_replay [-- --quick]`
+//!
+//! The point of the measured backend is that ranking N candidates costs
+//! N × (replay only), not N × (compile) — the last column makes that
+//! ratio visible.
+
+use std::sync::Arc;
+
+use automap::api::{BeamSolve, CompiledPlan, PlanOpts, Planner,
+                   SolverGraphStore};
+use automap::cluster::SimCluster;
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::graph::Graph;
+use automap::sim::DeviceModel;
+use automap::solver::SolveOpts;
+use automap::util::bench::{bench, quick, Table};
+use automap::util::json::{arr, num, obj, s, write_json, Json};
+
+fn fast_opts() -> PlanOpts {
+    PlanOpts {
+        sweep: 2,
+        solve: SolveOpts {
+            beam_width: 12,
+            anneal_iters: 150,
+            lagrange_iters: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn compile(
+    g: &Graph,
+    cluster: &SimCluster,
+    dev: &DeviceModel,
+    store: &Arc<SolverGraphStore>,
+) -> CompiledPlan {
+    let mut p = Planner::new(g, cluster, dev)
+        .with_opts(fast_opts())
+        .with_backend(BeamSolve(fast_opts().solve))
+        .with_store(Arc::clone(store));
+    p.lower().expect("bench plan compiles")
+}
+
+fn main() {
+    let q = quick();
+    let compile_iters = if q { 1 } else { 3 };
+    let replay_iters = if q { 10 } else { 50 };
+    let dev = DeviceModel::a100_80gb();
+    let g = gpt2(&Gpt2Cfg::mini());
+
+    let mut table = Table::new(
+        "sim replay: cold vs warm-store compile+replay vs replay only",
+        &["cluster", "mesh", "events/dev", "cold ms", "warm ms",
+          "replay ms", "replay/cold"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    for n in [4usize, 8] {
+        let cluster = SimCluster::fig5_prefix(n);
+        let warm_store = Arc::new(SolverGraphStore::new());
+        let plan = compile(&g, &cluster, &dev, &warm_store); // warms it
+        let events = plan
+            .replay_sim(&g, &dev)
+            .expect("bench replay")
+            .devices[0]
+            .events
+            .len();
+
+        let cold = bench(
+            &format!("cold compile+replay fig5-{n}"),
+            0,
+            compile_iters,
+            || {
+                let store = Arc::new(SolverGraphStore::new());
+                let p = compile(&g, &cluster, &dev, &store);
+                p.replay_sim(&g, &dev).unwrap().devices.len()
+            },
+        );
+        let warm = bench(
+            &format!("warm compile+replay fig5-{n}"),
+            0,
+            compile_iters,
+            || {
+                let p = compile(&g, &cluster, &dev, &warm_store);
+                p.replay_sim(&g, &dev).unwrap().devices.len()
+            },
+        );
+        let replay =
+            bench(&format!("replay fig5-{n}"), 1, replay_iters, || {
+                plan.replay_sim(&g, &dev).unwrap().step_time
+            });
+
+        let cold_ms = cold.median_ns / 1e6;
+        let warm_ms = warm.median_ns / 1e6;
+        let replay_ms = replay.median_ns / 1e6;
+        table.row(vec![
+            format!("fig5-{n}"),
+            format!("{:?}", plan.mesh.shape),
+            events.to_string(),
+            format!("{cold_ms:.1}"),
+            format!("{warm_ms:.1}"),
+            format!("{replay_ms:.2}"),
+            format!("{:.3}x", replay_ms / cold_ms.max(1e-9)),
+        ]);
+        rows.push(obj(vec![
+            ("cluster", s(&format!("fig5-{n}"))),
+            (
+                "mesh",
+                arr(plan
+                    .mesh
+                    .shape
+                    .iter()
+                    .map(|&x| num(x as f64))
+                    .collect()),
+            ),
+            ("events_per_device", num(events as f64)),
+            ("cold_compile_replay_ms", num(cold_ms)),
+            ("warm_compile_replay_ms", num(warm_ms)),
+            ("replay_only_ms", num(replay_ms)),
+            ("replay_over_cold", num(replay_ms / cold_ms.max(1e-9))),
+        ]));
+    }
+    table.print();
+
+    let out = obj(vec![
+        ("bench", s("sim_replay")),
+        ("model", s("gpt2-mini")),
+        ("quick", Json::Bool(q)),
+        ("results", arr(rows)),
+    ]);
+    let mut text = String::new();
+    write_json(&out, &mut text);
+    text.push('\n');
+    if let Err(e) = std::fs::write("BENCH_sim.json", &text) {
+        eprintln!("could not write BENCH_sim.json: {e}");
+    } else {
+        println!("\nrecorded -> BENCH_sim.json");
+    }
+}

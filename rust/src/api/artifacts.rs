@@ -311,6 +311,7 @@ fn exec_plan_to_json(p: &ExecutionPlan) -> Json {
                 ("out_spec", spec_to_json(&d.out_spec)),
                 ("compute_time", jnum(d.compute_time)),
                 ("comm_time", jnum(d.comm_time)),
+                ("grad_comm", jnum(d.grad_comm)),
                 ("mem_bytes", jnum(d.mem_bytes)),
             ])
         })
@@ -375,6 +376,16 @@ fn exec_plan_from_json(v: &Json) -> Result<ExecutionPlan> {
             out_spec: spec_from_json(d.get("out_spec"))?,
             compute_time: jf(d.get("compute_time"), "decision.compute")?,
             comm_time: jf(d.get("comm_time"), "decision.comm")?,
+            // absent in pre-split artifacts, where grad sync was folded
+            // into comm_time. Defaulting to 0 keeps per-node totals
+            // intact but prices that grad sync as serial correctness
+            // comm on replay (no overlap credit), so old plans replay
+            // conservatively — slower than their recorded prediction,
+            // never faster.
+            grad_comm: match d.get("grad_comm") {
+                Json::Null => 0.0,
+                other => jf(other, "decision.grad_comm")?,
+            },
             mem_bytes: jf(d.get("mem_bytes"), "decision.mem")?,
         });
     }
@@ -723,8 +734,55 @@ pub struct CompiledPlan {
     /// Aggregate achieved PFLOPS on this plan.
     pub pflops: f64,
     pub mem_per_device: f64,
+    /// Device memory budget the plan was compiled against, bytes
+    /// (0 = unknown, for artifacts saved before the field existed).
+    /// `automap verify` checks the simulated peak against it.
+    pub budget: f64,
     /// Which sweep point n won (intra-op budget = budget·(1+α)^n).
     pub sweep_n: usize,
+}
+
+impl CompiledPlan {
+    /// Artifact-level structural validation (no graph needed): node
+    /// references in range, specs confined to the mesh, collective
+    /// durations finite, checkpoint blocks contiguous. See
+    /// [`sim::exec::validate_exec`](crate::sim::exec::validate_exec).
+    pub fn validate(&self) -> Result<()> {
+        crate::sim::exec::validate_exec(
+            self.graph_nodes,
+            &self.mesh,
+            &self.plan,
+        )
+    }
+
+    /// Replay this plan through the discrete-event executor
+    /// ([`sim::exec`](crate::sim::exec)) and return the trace. Analytic
+    /// (baseline) plans carry no per-node schedule and replay as one
+    /// aggregate step flagged `analytic`.
+    pub fn replay_sim(
+        &self,
+        g: &crate::graph::Graph,
+        dev: &crate::sim::DeviceModel,
+    ) -> Result<crate::sim::SimTrace> {
+        if self.graph_nodes != g.len() {
+            bail!(
+                "plan was compiled for a {}-node graph but got {} nodes \
+                 — replay against the model it was saved with",
+                self.graph_nodes,
+                g.len()
+            );
+        }
+        if self.plan.decisions.is_empty() {
+            return crate::sim::exec::replay_analytic(
+                &self.mesh.shape,
+                self.mesh.n_devices(),
+                self.iter_time,
+                self.mem_per_device,
+            );
+        }
+        self.validate()?;
+        crate::sim::exec::replay_exec(g, &self.mesh, &self.plan, dev)
+    }
 }
 
 impl Artifact for CompiledPlan {
@@ -741,6 +799,7 @@ impl Artifact for CompiledPlan {
             ("iter_time", jnum(self.iter_time)),
             ("pflops", jnum(self.pflops)),
             ("mem_per_device", jnum(self.mem_per_device)),
+            ("budget", jnum(self.budget)),
             ("sweep_n", num(self.sweep_n as f64)),
         ])
     }
@@ -755,8 +814,38 @@ impl Artifact for CompiledPlan {
             iter_time: jf(v.get("iter_time"), "iter_time")?,
             pflops: jf(v.get("pflops"), "pflops")?,
             mem_per_device: jf(v.get("mem_per_device"), "mem")?,
+            budget: match v.get("budget") {
+                Json::Null => 0.0, // pre-verify artifacts
+                other => jf(other, "budget")?,
+            },
             sweep_n: jusize(v.get("sweep_n"), "sweep_n")?,
         })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sim trace (verify stage)
+
+/// The replay trace is an artifact like every stage output: kind-tagged,
+/// versioned, canonical JSON — which is what makes the golden-trace
+/// regression fixtures byte-comparable. The field encoding lives with
+/// the trace type in [`sim::trace`](crate::sim::trace).
+impl Artifact for crate::sim::SimTrace {
+    const KIND: &'static str = "sim-trace";
+
+    fn to_json(&self) -> Json {
+        let mut o = match self.to_json_value() {
+            Json::Obj(o) => o,
+            _ => unreachable!("trace serializes to an object"),
+        };
+        o.insert("kind".into(), s(Self::KIND));
+        o.insert("version".into(), num(ARTIFACT_VERSION as f64));
+        Json::Obj(o)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        expect_kind(v, Self::KIND)?;
+        crate::sim::SimTrace::from_json_value(v)
     }
 }
 

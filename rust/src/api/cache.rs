@@ -380,6 +380,7 @@ mod tests {
             iter_time,
             pflops: 1.0,
             mem_per_device: 1.0,
+            budget: 0.0,
             sweep_n: 0,
         }
     }

@@ -23,10 +23,17 @@
 //! Solver backends are pluggable through the [`Solve`] trait
 //! ([`with_backend`](Planner::with_backend)): the exact branch-and-bound,
 //! the production beam + Lagrangian + annealing path, the portfolio race
-//! ([`PortfolioSolve`]), and the Table-4 analytic baselines (DDP,
-//! Megatron-1D, Optimus-2D, 3D-TP) are all interchangeable. Per-stage
-//! progress callbacks ([`on_progress`](Planner::on_progress)) feed the
-//! CLI and benches.
+//! ([`PortfolioSolve`]), the measured [`SimMeasureSolve`] (candidates
+//! ranked by discrete-event replay instead of the cost model), and the
+//! Table-4 analytic baselines (DDP, Megatron-1D, Optimus-2D, 3D-TP) are
+//! all interchangeable. Per-stage progress callbacks
+//! ([`on_progress`](Planner::on_progress)) feed the CLI and benches.
+//!
+//! Past `lower()` sits the verify stage: a [`CompiledPlan`] replays
+//! through the discrete-event executor
+//! ([`replay_sim`](CompiledPlan::replay_sim) / `automap verify`), which
+//! checks the schedule's simulated peak memory and step time against
+//! what the solvers promised — see [`crate::sim::exec`].
 //!
 //! `Planner` compiles one request. The serving layer above it is
 //! [`PlanService`] (see [`service`]): a concurrent front-end that
@@ -59,7 +66,7 @@ pub use self::progress::{PlanStage, ProgressEvent};
 pub use self::service::{BackendSpec, ClusterSpec, PlanOutcome,
                         PlanRequest, PlanService};
 pub use self::solve::{Baseline, BaselineSolve, BeamSolve, ExactSolve,
-                      PortfolioSolve, Solve, SolveCtx};
+                      PortfolioSolve, SimMeasureSolve, Solve, SolveCtx};
 pub use self::store::{graph_fingerprint, MeshGraph, SolverGraphStore};
 
 use std::collections::BTreeMap;
@@ -120,24 +127,18 @@ fn node_times(
     sol: &Solution,
     mesh: &DeviceMesh,
 ) -> NodeTimes {
-    let mut t = NodeTimes {
-        fwd: vec![0.0; g.len()],
-        bwd: vec![0.0; g.len()],
-        fwd_comm: vec![0.0; g.len()],
-        bwd_comm: vec![0.0; g.len()],
-        mem_scale: vec![1.0; g.len()],
-    };
+    let mut t = NodeTimes::zeroed(g.len());
     for (i, &anchor) in sg.anchors.iter().enumerate() {
         let s = &sg.sets[i].strategies[sol.choice[i]];
-        t.fwd[anchor] = s.compute_time / 3.0;
-        t.bwd[anchor] = s.compute_time * 2.0 / 3.0;
         // partial-sum comm sits on the critical path of both sweeps;
         // gradient sync is excluded here — overlap is applied at the
         // plan level (the solver itself stays overlap-blind, §5.1)
-        t.fwd_comm[anchor] = s.comm_time / 3.0;
-        t.bwd_comm[anchor] = s.comm_time * 2.0 / 3.0;
-        t.mem_scale[anchor] =
-            s.out_spec.sharding_factor(mesh).max(1) as f64;
+        t.set_split(
+            anchor,
+            s.compute_time,
+            s.comm_time,
+            s.out_spec.sharding_factor(mesh) as f64,
+        );
     }
     t
 }
@@ -701,11 +702,19 @@ impl<'a> Planner<'a> {
         groups: &[Vec<NodeId>],
         best: &mut Option<CkptSchedule>,
     ) -> Result<()> {
+        // measured backends rank by replaying each candidate's lowered
+        // schedule through sim::exec instead of trusting the cost model
+        let by_sim = self
+            .backend
+            .as_ref()
+            .map(|b| b.ranks_by_simulation())
+            .unwrap_or(false);
         for (k, cand) in cands.iter().enumerate() {
             let i = offset + k;
             let ci = self.ctx_index(&cand.mesh);
+            let ctx = Arc::clone(&self.mesh_ctxs[ci]);
             let (g, dev) = (self.graph, self.dev);
-            let sg = &self.mesh_ctxs[ci].sg;
+            let sg = &ctx.sg;
             validate_choice(sg, &cand.choice)?;
             let sol = Solution {
                 choice: cand.choice.clone(),
@@ -746,13 +755,15 @@ impl<'a> Planner<'a> {
                 .iter()
                 .enumerate()
                 .map(|(j, _)| {
-                    sg.sets[j].strategies[sol.choice[j]].compute_time
-                        * 2.0
-                        / 3.0
+                    crate::ckpt::bwd_share(
+                        sg.sets[j].strategies[sol.choice[j]].compute_time,
+                    )
                 })
                 .sum();
-            let exposed_grad = (grad_comm - 0.7 * bwd_compute).max(0.0);
-            let iter_time = ck.time + edge_comm + exposed_grad;
+            let exposed_grad =
+                crate::sim::exec::exposed_grad(grad_comm, bwd_compute);
+            let mut iter_time = ck.time + edge_comm + exposed_grad;
+            let mut mem = pm + rotor.no_checkpoint_mem().min(act_budget);
             crate::debug!(
                 "mesh {:?} n={}: sol.time {:.1}ms (mem {:.1}GB) ck {:.1}ms edge {:.1}ms grad {:.1}ms exposed {:.1}ms",
                 cand.mesh.shape,
@@ -764,7 +775,40 @@ impl<'a> Planner<'a> {
                 grad_comm * 1e3,
                 exposed_grad * 1e3
             );
-            let mem = pm + rotor.no_checkpoint_mem().min(act_budget);
+            if by_sim {
+                let ep = gen::lower(
+                    g,
+                    sg,
+                    &sol,
+                    &cand.mesh,
+                    &ctx.layout,
+                    Some(ck.clone()),
+                );
+                let trace = crate::sim::exec::replay_exec(
+                    g, &cand.mesh, &ep, dev,
+                )
+                .map_err(|e| {
+                    anyhow!(
+                        "sim-measure replay of candidate {i} failed: {e}"
+                    )
+                })?;
+                emit(
+                    &mut self.progress,
+                    ProgressEvent::CandidateReplayed {
+                        index: i,
+                        step_time: trace.step_time,
+                        peak_mem: trace.peak_mem,
+                    },
+                );
+                if trace.peak_mem > budget {
+                    // the schedule as actually executed blows the
+                    // device budget — measured infeasibility the
+                    // analytic model missed
+                    continue;
+                }
+                iter_time = trace.step_time;
+                mem = trace.peak_mem;
+            }
             let better = best
                 .as_ref()
                 .map(|b| iter_time < b.iter_time)
@@ -896,6 +940,7 @@ impl<'a> Planner<'a> {
                 iter_time: rep.iter_time,
                 pflops: rep.pflops,
                 mem_per_device: rep.mem_per_device,
+                budget: sharding.budget,
                 sweep_n: 0,
             }
         } else {
@@ -935,6 +980,7 @@ impl<'a> Planner<'a> {
                 iter_time: ck.iter_time,
                 pflops: total_flops / ck.iter_time / 1e15,
                 mem_per_device: ck.mem_per_device,
+                budget: sharding.budget,
                 sweep_n: cand.sweep_n,
             }
         };

@@ -58,6 +58,15 @@ pub enum ProgressEvent {
         /// True when this candidate is the best seen so far.
         best: bool,
     },
+    /// A measured backend (`sim-measure`) replayed one candidate's
+    /// lowered schedule through the discrete-event executor.
+    CandidateReplayed {
+        index: usize,
+        /// Simulated step time, seconds.
+        step_time: f64,
+        /// Simulated peak memory, bytes.
+        peak_mem: f64,
+    },
     /// The planner resolved the solver graph for one (graph, mesh) pair
     /// through the [`SolverGraphStore`](super::SolverGraphStore).
     /// `shared` is true when an already-built graph was reused; false

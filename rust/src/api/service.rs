@@ -50,7 +50,8 @@ use super::artifacts::{Artifact, ClusterReport, CompiledPlan,
                        MeshCandidates};
 use super::cache::{CacheStats, Lookup, PlanCache, PlanSource};
 use super::progress::ProgressEvent;
-use super::solve::{Baseline, BaselineSolve, ExactSolve, PortfolioSolve};
+use super::solve::{Baseline, BaselineSolve, ExactSolve, PortfolioSolve,
+                   SimMeasureSolve};
 use super::store::{graph_fingerprint, SolverGraphStore};
 use super::{PlanOpts, Planner};
 
@@ -75,6 +76,9 @@ pub enum BackendSpec {
     Baseline(Baseline, Gpt2Cfg),
     /// Portfolio race over explicit beam configurations.
     Portfolio(Vec<SolveOpts>),
+    /// Measured backend: beam-proposed candidates ranked by replaying
+    /// each lowered schedule through the discrete-event executor.
+    Sim(SolveOpts),
 }
 
 /// How many configs `BackendSpec::parse("portfolio", ..)` spreads over.
@@ -96,6 +100,7 @@ impl BackendSpec {
                 PortfolioSolve::spread(base_solve, PORTFOLIO_DEFAULT_CONFIGS)
                     .configs,
             ),
+            "sim" => BackendSpec::Sim(base_solve),
             "ddp" => BackendSpec::Baseline(Baseline::Ddp, cfg),
             "megatron-1d" => {
                 BackendSpec::Baseline(Baseline::Megatron1d, cfg)
@@ -104,7 +109,8 @@ impl BackendSpec {
             "3d-tp" => BackendSpec::Baseline(Baseline::Tp3d, cfg),
             other => bail!(
                 "unknown backend {other} \
-                 (beam|exact|portfolio|ddp|megatron-1d|optimus-2d|3d-tp)"
+                 (beam|exact|portfolio|sim|ddp|megatron-1d|optimus-2d|\
+                 3d-tp)"
             ),
         })
     }
@@ -123,6 +129,7 @@ impl BackendSpec {
             BackendSpec::Portfolio(configs) => {
                 format!("portfolio({})", configs.len())
             }
+            BackendSpec::Sim(_) => "sim".into(),
         }
     }
 
@@ -135,6 +142,9 @@ impl BackendSpec {
             }
             BackendSpec::Portfolio(configs) => {
                 p.with_backend(PortfolioSolve::new(configs.clone()))
+            }
+            BackendSpec::Sim(opts) => {
+                p.with_backend(SimMeasureSolve::new(*opts))
             }
         }
     }
@@ -156,6 +166,7 @@ impl BackendSpec {
                     hash_solve_opts(h, o);
                 }
             }
+            BackendSpec::Sim(opts) => hash_solve_opts(h, opts),
         }
     }
 }

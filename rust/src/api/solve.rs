@@ -50,6 +50,16 @@ pub trait Solve {
     fn is_analytic(&self) -> bool {
         false
     }
+
+    /// True when the planner should rank this backend's candidates by
+    /// *replaying* each lowered schedule through the discrete-event
+    /// executor ([`sim::exec`](crate::sim::exec)) instead of the
+    /// analytic `rotor + resharding + exposed-grad` cost model. The
+    /// winning plan's `iter_time`/`mem_per_device` are then simulated,
+    /// not predicted.
+    fn ranks_by_simulation(&self) -> bool {
+        false
+    }
 }
 
 /// Production path: beam search under a Lagrangian sweep of the memory
@@ -149,6 +159,41 @@ impl Solve for PortfolioSolve {
             .min_by(|a, b| {
                 a.time.partial_cmp(&b.time).expect("finite solver times")
             })
+    }
+}
+
+/// Cost-model-free measured backend (`--backend sim`): candidate
+/// generation still runs the beam search (some search heuristic must
+/// propose assignments), but *selection* is by simulated execution — the
+/// planner lowers every candidate and replays it through
+/// [`sim::exec`](crate::sim::exec), keeping the plan with the smallest
+/// simulated step time whose simulated peak memory fits the device
+/// budget. This is the offline analogue of Alpa-style measured
+/// compilation: the roofline/rotor predictions propose, the executor
+/// disposes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimMeasureSolve {
+    /// Configuration of the inner beam search that proposes candidates.
+    pub inner: SolveOpts,
+}
+
+impl SimMeasureSolve {
+    pub fn new(inner: SolveOpts) -> SimMeasureSolve {
+        SimMeasureSolve { inner }
+    }
+}
+
+impl Solve for SimMeasureSolve {
+    fn name(&self) -> String {
+        format!("sim-measure(beam {})", self.inner.beam_width)
+    }
+
+    fn solve(&self, sg: &SolverGraph, budget: f64) -> Option<Solution> {
+        solve(sg, budget, self.inner)
+    }
+
+    fn ranks_by_simulation(&self) -> bool {
+        true
     }
 }
 

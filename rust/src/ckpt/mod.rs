@@ -5,5 +5,5 @@ pub mod linearize;
 pub mod rotor;
 
 pub use linearize::{common_nodes, linearize};
-pub use rotor::{build_stages, Block, NodeTimes, RotorSolution, RotorSolver,
-                Stage};
+pub use rotor::{build_stages, bwd_share, Block, NodeTimes, RotorSolution,
+                RotorSolver, Stage};

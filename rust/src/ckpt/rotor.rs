@@ -37,6 +37,48 @@ pub struct NodeTimes {
     pub mem_scale: Vec<f64>,
 }
 
+/// Backward share of a node's fwd+bwd total under the pipeline's
+/// fwd:bwd ≈ 1:2 split. Everything that splits per-node totals
+/// ([`NodeTimes::set_split`]) or re-aggregates backward compute (the
+/// planner's exposed-grad pricing, the `sim::exec` replayer) must go
+/// through this one definition, or predicted and simulated step times
+/// drift apart at the ulp level and the differential oracle's
+/// `sim ≤ predicted` bound stops being exact.
+pub fn bwd_share(total: f64) -> f64 {
+    total * 2.0 / 3.0
+}
+
+impl NodeTimes {
+    /// No-override times for an `n`-node graph (zero cost, scale 1).
+    pub fn zeroed(n: usize) -> NodeTimes {
+        NodeTimes {
+            fwd: vec![0.0; n],
+            bwd: vec![0.0; n],
+            fwd_comm: vec![0.0; n],
+            bwd_comm: vec![0.0; n],
+            mem_scale: vec![1.0; n],
+        }
+    }
+
+    /// Record one node's priced totals using the [`bwd_share`] split
+    /// (GEMM-dominated training). The planner's candidate ranking and
+    /// the `sim::exec` replayer both price through here, so the
+    /// differential oracle always compares like with like.
+    pub fn set_split(
+        &mut self,
+        id: NodeId,
+        compute: f64,
+        comm: f64,
+        mem_scale: f64,
+    ) {
+        self.fwd[id] = compute / 3.0;
+        self.bwd[id] = bwd_share(compute);
+        self.fwd_comm[id] = comm / 3.0;
+        self.bwd_comm[id] = bwd_share(comm);
+        self.mem_scale[id] = mem_scale.max(1.0);
+    }
+}
+
 /// Build stage costs from the graph, its linearization, and (optionally)
 /// the intra-op plan's per-node times.
 pub fn build_stages(
@@ -133,6 +175,22 @@ pub struct RotorSolution {
     /// Top-level checkpoint segmentation (for the code generator).
     pub blocks: Vec<Block>,
     pub budget: f64,
+}
+
+impl RotorSolution {
+    /// True when `blocks` exactly partition stages `0..n_stages` — the
+    /// invariant the code generator and the `sim::exec` replayer rely
+    /// on. Deserialized schedules must be checked before use.
+    pub fn partitions(&self, n_stages: usize) -> bool {
+        let mut next = 0usize;
+        for b in &self.blocks {
+            if b.start != next || b.end < b.start {
+                return false;
+            }
+            next = b.end + 1;
+        }
+        next == n_stages
+    }
 }
 
 pub struct RotorSolver {
@@ -399,6 +457,25 @@ mod tests {
             next = b.end + 1;
         }
         assert_eq!(next, r.stages.len());
+        assert!(sol.partitions(r.stages.len()));
+        assert!(!sol.partitions(r.stages.len() + 1));
+    }
+
+    #[test]
+    fn partitions_rejects_gaps_overlaps_and_empty_mismatch() {
+        let sol = RotorSolution {
+            time: 0.0,
+            budget: 0.0,
+            blocks: vec![
+                Block { start: 0, end: 1, checkpointed: true },
+                Block { start: 3, end: 4, checkpointed: false },
+            ],
+        };
+        assert!(!sol.partitions(5), "gap at stage 2 must be rejected");
+        let empty =
+            RotorSolution { time: 0.0, budget: 0.0, blocks: vec![] };
+        assert!(empty.partitions(0));
+        assert!(!empty.partitions(1));
     }
 
     #[test]

@@ -39,7 +39,12 @@ pub struct NodeDecision {
     pub strategy: String,
     pub out_spec: ShardingSpec,
     pub compute_time: f64,
+    /// Correctness (partial-sum) communication on the critical path.
     pub comm_time: f64,
+    /// Gradient-sync communication the runtime overlaps with backward
+    /// compute. Kept separate from `comm_time` so the `sim::exec`
+    /// replayer can apply the same overlap model the planner priced.
+    pub grad_comm: f64,
     pub mem_bytes: f64,
 }
 
@@ -79,7 +84,8 @@ pub fn lower(
             strategy: s.name.to_string(),
             out_spec: s.out_spec.spec().as_ref().clone(),
             compute_time: s.compute_time,
-            comm_time: s.comm_time + s.grad_comm,
+            comm_time: s.comm_time,
+            grad_comm: s.grad_comm,
             mem_bytes: s.mem_bytes,
         });
         if s.comm_time + s.grad_comm > 0.0 {

@@ -6,7 +6,8 @@
 //! Subcommands:
 //!   plan      --model gpt2-mini|alpha..delta --cluster fig5|nvlink<N>|single
 //!             [--budget-gb G] [--fast] [--codegen] [--progress]
-//!             [--backend beam|exact|portfolio|ddp|megatron-1d|optimus-2d|3d-tp]
+//!             [--backend beam|exact|portfolio|sim|ddp|megatron-1d|
+//!              optimus-2d|3d-tp]
 //!             [--json] [--save-plan p.json] [--load-plan p.json]
 //!             [--cache-dir DIR] :
 //!             plan through the service and print the result. --cache-dir
@@ -14,6 +15,22 @@
 //!             --save-plan copies the CompiledPlan artifact; --load-plan
 //!             replays one, skipping every solve stage; --json emits the
 //!             artifact on stdout instead of the human summary.
+//!             --backend sim ranks candidates by replaying each lowered
+//!             schedule through the discrete-event executor (measured,
+//!             cost-model-free selection).
+//!   verify    <plan.json> [--model M | --manifest artifacts/manifest.json]
+//!             [--budget-gb G] [--strict] [--save-trace t.json] [--json] :
+//!             structurally validate a saved CompiledPlan artifact, then
+//!             replay it tick-by-tick through sim::exec. Exits nonzero on
+//!             corrupt artifacts (mismatched collectives, broken ckpt
+//!             schedules), simulated deadlocks, or simulated peak memory
+//!             over the budget; --strict additionally fails when the
+//!             simulated step time drifts >10% from the plan's recorded
+//!             prediction (note: artifacts saved before the grad_comm
+//!             split replay conservatively — their gradient sync gets
+//!             no overlap credit — and can exceed the strict bound
+//!             despite being healthy). --save-trace writes the SimTrace
+//!             artifact; --json prints it on stdout.
 //!   batch     <manifest.json> [--cache-dir DIR] [--out-dir DIR]
 //!             [--progress] [--json] : plan a JSON list of requests
 //!             concurrently (AUTOMAP_THREADS workers) with per-request
@@ -38,6 +55,7 @@ use automap::api::{Artifact, BackendSpec, BaselineSolve, ClusterReport,
                    CompiledPlan, MeshCandidates, PlanOutcome, PlanRequest,
                    PlanService, Planner, ProgressEvent};
 use automap::cluster::{detect, SimCluster};
+use automap::runtime::Manifest;
 use automap::coordinator::tp::{serial_block_forward, tp_block_forward,
                                BlockParams};
 use automap::coordinator::trainer::train_dp;
@@ -173,6 +191,13 @@ fn narrate(ev: &ProgressEvent) {
                 if *shared { "shared" } else { "built" }
             );
         }
+        ProgressEvent::CandidateReplayed { index, step_time, peak_mem } => {
+            eprintln!(
+                "[sim] candidate #{index}: {:.3} ms, peak {:.2} GB",
+                step_time * 1e3,
+                peak_mem / 1e9
+            );
+        }
         _ => {}
     }
 }
@@ -254,6 +279,105 @@ fn cmd_plan(args: &Args) -> Result<()> {
         eprintln!("plan saved to {path}");
     }
     print_plan(&req.graph, &out.plan, args)
+}
+
+/// Step-time drift (relative) above which `verify --strict` fails.
+const VERIFY_MAX_DRIFT: f64 = 0.10;
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let path = args.positional.first().ok_or_else(|| {
+        anyhow!(
+            "usage: automap verify <plan.json> [--model M | --manifest \
+             artifacts/manifest.json] [--budget-gb G] [--strict] \
+             [--save-trace t.json] [--json]"
+        )
+    })?;
+    let plan = CompiledPlan::load(path)?;
+    // structural validation first: a corrupt artifact (mismatched
+    // collective, broken ckpt schedule, out-of-mesh spec) must fail
+    // loudly before any model binding
+    plan.validate()
+        .map_err(|e| anyhow!("verify FAILED: {path}: {e}"))?;
+
+    let cfg = match args.get("manifest") {
+        Some(m) => Manifest::load(std::path::Path::new(m))?
+            .config
+            .gpt2_cfg(),
+        None => model_for(args.get_or("model", "gpt2-mini"))?,
+    };
+    let g = gpt2(&cfg);
+    let dev = DeviceModel::a100_80gb();
+    let trace = plan
+        .replay_sim(&g, &dev)
+        .map_err(|e| anyhow!("verify FAILED: {path}: {e}"))?;
+
+    let budget = match args.get("budget-gb") {
+        Some(gb) => gb.parse::<f64>().map_err(|_| {
+            anyhow!("--budget-gb needs a number, got {gb}")
+        })? * 1e9,
+        None if plan.budget > 0.0 => plan.budget,
+        None => dev.memory * 0.9,
+    };
+    let drift = trace.drift(plan.iter_time);
+
+    if let Some(p) = args.get("save-trace") {
+        trace.save(p)?;
+        eprintln!("trace saved to {p}");
+    }
+    if args.has_flag("json") {
+        println!("{}", trace.to_json());
+    } else {
+        println!("== verify {path} ==");
+        println!("backend          : {}", plan.backend);
+        println!("mesh shape       : {:?}", trace.mesh_shape);
+        if trace.analytic {
+            println!("replay           : analytic (aggregate step)");
+        }
+        println!(
+            "sim step time    : {:.3} ms (plan predicted {:.3} ms, \
+             drift {:+.2}%)",
+            trace.step_time * 1e3,
+            plan.iter_time * 1e3,
+            drift * 100.0
+        );
+        println!(
+            "sim peak memory  : {:.3} GB of {:.3} GB budget",
+            trace.peak_mem / 1e9,
+            budget / 1e9
+        );
+        println!(
+            "breakdown        : compute {:.3} ms, comm {:.3} ms, \
+             recompute {:.3} ms, exposed grad {:.3} ms",
+            trace.compute_time * 1e3,
+            trace.comm_time * 1e3,
+            trace.recompute_time * 1e3,
+            trace.exposed_grad_time * 1e3
+        );
+    }
+
+    if trace.peak_mem > budget {
+        return Err(anyhow!(
+            "verify FAILED: simulated peak memory {:.3} GB exceeds the \
+             {:.3} GB device budget",
+            trace.peak_mem / 1e9,
+            budget / 1e9
+        ));
+    }
+    if args.has_flag("strict") && drift.abs() > VERIFY_MAX_DRIFT {
+        return Err(anyhow!(
+            "verify FAILED: simulated step time {:.3} ms drifts \
+             {:+.2}% from the recorded {:.3} ms (--strict allows \
+             ±{:.0}%)",
+            trace.step_time * 1e3,
+            drift * 100.0,
+            plan.iter_time * 1e3,
+            VERIFY_MAX_DRIFT * 100.0
+        ));
+    }
+    if !args.has_flag("json") {
+        println!("VERIFY OK");
+    }
+    Ok(())
 }
 
 /// One parsed `automap batch` manifest entry (strings feed `request_for`).
@@ -672,6 +796,7 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("plan") => cmd_plan(&args),
+        Some("verify") => cmd_verify(&args),
         Some("batch") => cmd_batch(&args),
         Some("cache") => cmd_cache(&args),
         Some("cluster") => cmd_cluster(&args),
@@ -681,8 +806,8 @@ fn main() -> Result<()> {
         Some("table4") => cmd_table4(&args),
         _ => {
             println!(
-                "usage: automap <plan|batch|cache|cluster|profile|train|\
-                 tp-check|table4> [--options]"
+                "usage: automap <plan|verify|batch|cache|cluster|profile|\
+                 train|tp-check|table4> [--options]"
             );
             println!("see rust/src/main.rs header for details");
             Ok(())

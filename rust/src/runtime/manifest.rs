@@ -36,6 +36,23 @@ pub struct ModelConfig {
     pub lr: f64,
 }
 
+impl ModelConfig {
+    /// The graph-builder config this manifest's model was lowered from —
+    /// `automap verify --manifest` uses it to rebuild the exact graph a
+    /// saved plan must bind to, instead of trusting a `--model` name.
+    pub fn gpt2_cfg(&self) -> crate::graph::models::Gpt2Cfg {
+        crate::graph::models::Gpt2Cfg {
+            vocab: self.vocab,
+            seq: self.seq,
+            d_model: self.d_model,
+            n_layer: self.n_layer,
+            n_head: self.n_head,
+            d_ff: self.d_ff,
+            batch: self.batch,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub config: ModelConfig,
@@ -158,6 +175,13 @@ mod tests {
          "meta": {"kind": "forward"}}
       ]
     }"#;
+
+    #[test]
+    fn model_config_maps_onto_gpt2_cfg() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let cfg = m.config.gpt2_cfg();
+        assert_eq!(cfg, crate::graph::models::Gpt2Cfg::mini());
+    }
 
     #[test]
     fn parses_sample() {

@@ -1,8 +1,15 @@
-//! Execution simulator: device roofline model and the manually-designed
-//! baselines the paper compares against (Table 4).
+//! Execution simulation: the per-accelerator roofline model, the
+//! manually-designed Table-4 baselines, and the discrete-event plan
+//! executor (`exec`) that replays lowered plans tick-by-tick as a
+//! cost-model-free oracle.
 
 pub mod baselines;
 pub mod device;
+pub mod exec;
+pub mod trace;
 
 pub use baselines::{ddp, megatron_1d, optimus_2d, tp_3d, SimReport};
 pub use device::DeviceModel;
+pub use exec::{exposed_grad, replay_analytic, replay_exec, run_programs,
+               simulate_schedule, validate_exec, SimOp, OVERLAP_FRAC};
+pub use trace::{DeviceTimeline, EventKind, SimTrace, TraceEvent};

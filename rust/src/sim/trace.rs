@@ -1,0 +1,290 @@
+//! `SimTrace` — the artifact produced by the discrete-event executor
+//! ([`sim::exec`](super::exec)): per-device timelines, the byte-accurate
+//! memory ledger's peak, and the simulated step time.
+//!
+//! Serialization goes through [`util::json`](crate::util::json) like every
+//! other artifact (the `Artifact` trait impl lives in `api::artifacts`,
+//! next to the other kind-tagged formats, because the trait is defined
+//! there). The JSON writer is canonical (sorted keys, shortest-roundtrip
+//! floats), so equal traces always serialize byte-identically — the
+//! property the golden-trace regression fixtures rely on.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// What a timeline event represents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Forward compute of one linearized stage.
+    FwdCompute,
+    /// Backward compute of one linearized stage.
+    BwdCompute,
+    /// Forward re-execution of a checkpointed stage during backward.
+    Recompute,
+    /// A collective on the critical path (correctness / resharding).
+    Comm,
+    /// Gradient-sync communication not hidden behind backward compute.
+    GradSync,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::FwdCompute => "fwd",
+            EventKind::BwdCompute => "bwd",
+            EventKind::Recompute => "recompute",
+            EventKind::Comm => "comm",
+            EventKind::GradSync => "grad-sync",
+        }
+    }
+
+    pub fn parse(t: &str) -> Result<EventKind> {
+        Ok(match t {
+            "fwd" => EventKind::FwdCompute,
+            "bwd" => EventKind::BwdCompute,
+            "recompute" => EventKind::Recompute,
+            "comm" => EventKind::Comm,
+            "grad-sync" => EventKind::GradSync,
+            other => bail!("unknown trace event kind '{other}'"),
+        })
+    }
+}
+
+/// One interval on a device's timeline.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    pub label: String,
+    /// Start / end of the interval, seconds since step start.
+    pub t0: f64,
+    pub t1: f64,
+    /// Absolute resident memory (params + activations) when the event
+    /// completed, bytes. Transient highs inside the event feed the peak
+    /// but are not recorded per event.
+    pub mem: f64,
+}
+
+/// Timeline + ledger summary of one simulated device.
+#[derive(Debug, Clone)]
+pub struct DeviceTimeline {
+    /// Logical device index (row-major position in the mesh).
+    pub device: usize,
+    /// Highest resident memory observed on this device, bytes.
+    pub peak_mem: f64,
+    pub events: Vec<TraceEvent>,
+}
+
+/// Full replay result: what `automap verify` inspects and the golden
+/// fixtures snapshot.
+#[derive(Debug, Clone)]
+pub struct SimTrace {
+    pub mesh_shape: Vec<usize>,
+    /// True when the plan came from an analytic (closed-form) backend and
+    /// the replay is a single aggregate step, not a real schedule.
+    pub analytic: bool,
+    /// Wall time of one training iteration, seconds (max over devices).
+    pub step_time: f64,
+    /// Peak resident memory over all devices, bytes.
+    pub peak_mem: f64,
+    /// Parameter + gradient memory resident for the whole step, bytes.
+    pub param_mem: f64,
+    /// Per-category totals for one device's queue (SPMD: identical on
+    /// every device), seconds.
+    pub compute_time: f64,
+    pub comm_time: f64,
+    pub recompute_time: f64,
+    pub exposed_grad_time: f64,
+    pub devices: Vec<DeviceTimeline>,
+}
+
+impl SimTrace {
+    /// Simulated-minus-recorded step-time drift, relative to `predicted`.
+    pub fn drift(&self, predicted: f64) -> f64 {
+        if predicted <= 0.0 {
+            return 0.0;
+        }
+        (self.step_time - predicted) / predicted
+    }
+
+    pub fn to_json_value(&self) -> Json {
+        let devices = arr(self
+            .devices
+            .iter()
+            .map(|d| {
+                obj(vec![
+                    ("device", num(d.device as f64)),
+                    ("peak_mem", num(d.peak_mem)),
+                    (
+                        "events",
+                        arr(d
+                            .events
+                            .iter()
+                            .map(|e| {
+                                obj(vec![
+                                    ("kind", s(e.kind.name())),
+                                    ("label", s(&e.label)),
+                                    ("t0", num(e.t0)),
+                                    ("t1", num(e.t1)),
+                                    ("mem", num(e.mem)),
+                                ])
+                            })
+                            .collect()),
+                    ),
+                ])
+            })
+            .collect());
+        obj(vec![
+            (
+                "mesh_shape",
+                arr(self
+                    .mesh_shape
+                    .iter()
+                    .map(|&x| num(x as f64))
+                    .collect()),
+            ),
+            ("analytic", Json::Bool(self.analytic)),
+            ("step_time", num(self.step_time)),
+            ("peak_mem", num(self.peak_mem)),
+            ("param_mem", num(self.param_mem)),
+            ("compute_time", num(self.compute_time)),
+            ("comm_time", num(self.comm_time)),
+            ("recompute_time", num(self.recompute_time)),
+            ("exposed_grad_time", num(self.exposed_grad_time)),
+            ("devices", devices),
+        ])
+    }
+
+    pub fn from_json_value(v: &Json) -> Result<SimTrace> {
+        let f = |k: &str| -> Result<f64> {
+            v.get(k)
+                .as_f64()
+                .ok_or_else(|| anyhow!("trace.{k} must be a number"))
+        };
+        let mut devices = Vec::new();
+        for d in v
+            .get("devices")
+            .as_arr()
+            .ok_or_else(|| anyhow!("trace.devices must be an array"))?
+        {
+            let mut events = Vec::new();
+            for e in d
+                .get("events")
+                .as_arr()
+                .ok_or_else(|| anyhow!("device.events must be an array"))?
+            {
+                events.push(TraceEvent {
+                    kind: EventKind::parse(
+                        e.get("kind")
+                            .as_str()
+                            .ok_or_else(|| anyhow!("event.kind missing"))?,
+                    )?,
+                    label: e
+                        .get("label")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("event.label missing"))?
+                        .to_string(),
+                    t0: e
+                        .get("t0")
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("event.t0 missing"))?,
+                    t1: e
+                        .get("t1")
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("event.t1 missing"))?,
+                    mem: e
+                        .get("mem")
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("event.mem missing"))?,
+                });
+            }
+            devices.push(DeviceTimeline {
+                device: d
+                    .get("device")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("device.device missing"))?,
+                peak_mem: d
+                    .get("peak_mem")
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("device.peak_mem missing"))?,
+                events,
+            });
+        }
+        Ok(SimTrace {
+            mesh_shape: v
+                .get("mesh_shape")
+                .usize_vec()
+                .ok_or_else(|| anyhow!("trace.mesh_shape missing"))?,
+            analytic: v.get("analytic").as_bool().unwrap_or(false),
+            step_time: f("step_time")?,
+            peak_mem: f("peak_mem")?,
+            param_mem: f("param_mem")?,
+            compute_time: f("compute_time")?,
+            comm_time: f("comm_time")?,
+            recompute_time: f("recompute_time")?,
+            exposed_grad_time: f("exposed_grad_time")?,
+            devices,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SimTrace {
+        SimTrace {
+            mesh_shape: vec![2],
+            analytic: false,
+            step_time: 0.25,
+            peak_mem: 1536.0,
+            param_mem: 512.0,
+            compute_time: 0.2,
+            comm_time: 0.05,
+            recompute_time: 0.0,
+            exposed_grad_time: 0.0,
+            devices: vec![DeviceTimeline {
+                device: 0,
+                peak_mem: 1536.0,
+                events: vec![TraceEvent {
+                    kind: EventKind::FwdCompute,
+                    label: "fwd s0".into(),
+                    t0: 0.0,
+                    t1: 0.2,
+                    mem: 1024.0,
+                }],
+            }],
+        }
+    }
+
+    #[test]
+    fn trace_roundtrips_through_json() {
+        let t = sample();
+        let back = SimTrace::from_json_value(&t.to_json_value()).unwrap();
+        assert_eq!(back.mesh_shape, t.mesh_shape);
+        assert_eq!(back.step_time, t.step_time);
+        assert_eq!(back.peak_mem, t.peak_mem);
+        assert_eq!(back.devices.len(), 1);
+        assert_eq!(back.devices[0].events[0].label, "fwd s0");
+        assert_eq!(back.devices[0].events[0].kind, EventKind::FwdCompute);
+        // canonical writer: a second serialization is byte-identical
+        assert_eq!(
+            t.to_json_value().to_string(),
+            back.to_json_value().to_string()
+        );
+    }
+
+    #[test]
+    fn event_kind_names_roundtrip() {
+        for k in [
+            EventKind::FwdCompute,
+            EventKind::BwdCompute,
+            EventKind::Recompute,
+            EventKind::Comm,
+            EventKind::GradSync,
+        ] {
+            assert_eq!(EventKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(EventKind::parse("warp").is_err());
+    }
+}

@@ -12,7 +12,7 @@ use automap::cluster::DeviceMesh;
 use automap::graph::{EwBinary, EwUnary, Graph, GraphBuilder};
 use automap::layout::LayoutManager;
 use automap::profiler::{execute, profile, random_feeds};
-use automap::sim::DeviceModel;
+use automap::sim::{simulate_schedule, DeviceModel};
 use automap::solver::{solve, SolveOpts, SolverGraph};
 use automap::util::prop::forall_res;
 use automap::util::rng::Rng;
@@ -182,6 +182,96 @@ fn property_rotor_time_monotone_in_budget() {
                     }
                     last = sol.time;
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_sim_replay_agrees_with_rotor_predictions() {
+    // the discrete-event replay of a rotor schedule must (a) reproduce
+    // the no-checkpoint peak memory within tolerance, (b) never beat the
+    // DP's predicted time (the DP may nest recomputation the flattened
+    // torch.utils.checkpoint semantics do not), and (c) be monotone
+    // non-increasing in the memory budget within a 10% tolerance.
+    let dev = DeviceModel::a100_80gb();
+    forall_res(
+        0x51A1,
+        10,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let g = random_graph(&mut rng);
+            let groups = linearize(&g, &common_nodes(&g));
+            if groups.len() < 2 {
+                return Ok(());
+            }
+            let stages = build_stages(&g, &groups, &dev, None);
+            let r = RotorSolver::new(stages.clone());
+            let ncm = r.no_checkpoint_mem();
+
+            // (a) unconstrained replay reproduces the predicted peak
+            let free = simulate_schedule(&stages, None, 0.0)
+                .map_err(|e| e.to_string())?;
+            if free.peak_mem > ncm * (1.0 + 1e-9) {
+                return Err(format!(
+                    "no-ckpt sim peak {} above predicted {ncm}",
+                    free.peak_mem
+                ));
+            }
+            if free.peak_mem < ncm * 0.5 {
+                return Err(format!(
+                    "no-ckpt sim peak {} implausibly below predicted \
+                     {ncm}",
+                    free.peak_mem
+                ));
+            }
+            let base_time = r.no_checkpoint_time();
+            if (free.step_time - base_time).abs() / base_time > 1e-9 {
+                return Err("no-ckpt sim time != rotor baseline".into());
+            }
+
+            // (b) + (c) across budgets
+            let mut last_sim = f64::INFINITY;
+            for frac in [0.4, 0.55, 0.75, 1.3] {
+                let budget = ncm * frac;
+                let Some(sol) = r.solve(budget) else { continue };
+                let t = simulate_schedule(&stages, Some(&sol), 0.0)
+                    .map_err(|e| e.to_string())?;
+                if t.step_time > sol.time * (1.0 + 1e-9) {
+                    return Err(format!(
+                        "sim time {} beats^-1 the DP's {} at frac {frac}",
+                        t.step_time, sol.time
+                    ));
+                }
+                let ckpt = sol.blocks.iter().any(|b| b.checkpointed);
+                if ckpt != (t.recompute_time > 0.0) {
+                    return Err(format!(
+                        "recompute time {} disagrees with schedule at \
+                         frac {frac}",
+                        t.recompute_time
+                    ));
+                }
+                // single-stage checkpoint blocks replay with the DP's
+                // own leaf policy: budget compliance is exact there
+                // (modulo the DP's conservative quantization slack)
+                let flat = sol
+                    .blocks
+                    .iter()
+                    .all(|b| !b.checkpointed || b.start == b.end);
+                if flat && t.peak_mem > budget * 1.05 + 4096.0 {
+                    return Err(format!(
+                        "sim peak {} over budget {budget} at frac {frac}",
+                        t.peak_mem
+                    ));
+                }
+                if t.step_time > last_sim * 1.10 + 1e-12 {
+                    return Err(format!(
+                        "sim time not monotone in budget at frac {frac}"
+                    ));
+                }
+                last_sim = t.step_time;
             }
             Ok(())
         },

@@ -1,0 +1,131 @@
+//! Golden-trace regression fixtures: replaying a checked-in plan
+//! artifact must reproduce its checked-in `SimTrace` snapshot
+//! byte-identically. The trace bytes depend on the linearization, the
+//! per-node cost accounting (`profiler::cost`), the checkpoint
+//! semantics, and the simulator itself — so any silent drift in those
+//! shows up as a byte diff here, long before it skews a Table-4 number.
+//!
+//! Snapshot protocol: missing fixture files are *blessed* (written) on
+//! first run and should be committed; once present they are enforced.
+//! Delete a fixture pair to intentionally re-bless after a deliberate
+//! cost-model change. Byte-identity is well-defined because everything
+//! in the chain is deterministic: the beam/anneal solver is seeded, the
+//! canonical JSON writer sorts keys and prints shortest-roundtrip
+//! floats, and the simulator consults no wall clock.
+
+use std::fs;
+use std::path::PathBuf;
+
+use automap::api::{Artifact, BeamSolve, CompiledPlan, PlanOpts, Planner};
+use automap::cluster::SimCluster;
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::profiler::profile;
+use automap::sim::DeviceModel;
+use automap::solver::SolveOpts;
+
+fn fixtures_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures")
+}
+
+/// Mirrors the proven-feasible fast options used across the test suite.
+fn fast_solve() -> SolveOpts {
+    SolveOpts {
+        beam_width: 16,
+        anneal_iters: 200,
+        lagrange_iters: 6,
+        ..Default::default()
+    }
+}
+
+fn golden(name: &str, devices: usize, budget: Option<f64>) {
+    let g = gpt2(&Gpt2Cfg::mini());
+    let cluster = SimCluster::fully_connected(devices);
+    let dev = DeviceModel::a100_80gb();
+    let dir = fixtures_dir();
+    fs::create_dir_all(&dir).unwrap();
+    let plan_path = dir.join(format!("sim_{name}.plan.json"));
+    let trace_path = dir.join(format!("sim_{name}.trace.json"));
+
+    let plan = if plan_path.exists() {
+        CompiledPlan::load(&plan_path).expect("fixture plan loads")
+    } else {
+        let opts = PlanOpts {
+            budget,
+            sweep: 3,
+            solve: fast_solve(),
+            ..Default::default()
+        };
+        let mut p = Planner::new(&g, &cluster, &dev)
+            .with_opts(opts)
+            .with_backend(BeamSolve(fast_solve()));
+        let plan = p.lower().expect("golden plan compiles");
+        plan.save(&plan_path).unwrap();
+        eprintln!("blessed plan fixture {}", plan_path.display());
+        plan
+    };
+    plan.validate().expect("fixture plan validates");
+
+    let trace = plan.replay_sim(&g, &dev).expect("fixture plan replays");
+    let text = trace.to_json().to_string();
+
+    // determinism inside one process: an independent second replay of
+    // the same artifact is byte-identical (this always runs, fixture or
+    // not — it is the precondition for snapshots being meaningful)
+    let again = plan.replay_sim(&g, &dev).unwrap();
+    assert_eq!(
+        text,
+        again.to_json().to_string(),
+        "{name}: replay must be bit-deterministic"
+    );
+
+    if trace_path.exists() {
+        let want = fs::read_to_string(&trace_path).unwrap();
+        assert_eq!(
+            want,
+            text,
+            "{name}: replaying the checked-in plan no longer reproduces \
+             its golden trace — linearization, cost accounting, or the \
+             simulator drifted. If the change is intentional, delete \
+             {} to re-bless.",
+            trace_path.display()
+        );
+    } else {
+        fs::write(&trace_path, &text).unwrap();
+        eprintln!("blessed trace fixture {}", trace_path.display());
+    }
+}
+
+#[test]
+fn golden_trace_no_checkpoint() {
+    // default (huge) budget: the rotor keeps everything, no recompute
+    golden("nockpt", 2, None);
+}
+
+#[test]
+fn golden_trace_tight_budget() {
+    // the budget shape the pipeline tests prove feasible: model data
+    // fits, activations only partially, so checkpointing must engage
+    let prof = profile(&gpt2(&Gpt2Cfg::mini()));
+    let budget = prof.model_bytes as f64 * 2.0
+        + prof.saved_activation as f64 * 0.6;
+    golden("tight", 4, Some(budget));
+}
+
+#[test]
+fn committed_corrupt_fixture_is_rejected() {
+    // hand-corrupted artifact: a collective referencing a node that has
+    // no strategy decision. It must parse (the corruption is semantic,
+    // not syntactic) and then fail structural validation — the same
+    // path `automap verify` takes, and what CI drives the binary with.
+    let p = fixtures_dir().join("corrupt_mismatched_collective.plan.json");
+    let plan =
+        CompiledPlan::load(&p).expect("corrupt fixture still parses");
+    let err = plan.validate().unwrap_err().to_string();
+    assert!(err.contains("mismatched collective"), "{err}");
+    // and replay refuses it too, regardless of the model bound
+    let g = gpt2(&Gpt2Cfg::mini());
+    assert!(plan
+        .replay_sim(&g, &DeviceModel::a100_80gb())
+        .is_err());
+}

@@ -1,0 +1,254 @@
+//! Differential oracle: every `Solve` backend's compiled plan is replayed
+//! through the discrete-event executor (`sim::exec`), and the simulation
+//! must agree with the backend's own accounting:
+//!
+//!   * simulated peak memory ≤ the device budget the plan was compiled
+//!     against;
+//!   * simulated step time within the stated tolerance of the backend's
+//!     predicted cost — bounded above by the prediction (the rotor DP may
+//!     nest recomputation the flattened schedule does not), and at least
+//!     half of it (the schedule cannot be mostly imaginary);
+//!   * the `sim-measure` backend, whose *selection* is the simulation,
+//!     replays to exactly its recorded step time, and never loses to the
+//!     beam backend under the same inner search.
+
+use automap::api::{Artifact, BaselineSolve, BeamSolve, CompiledPlan,
+                   ExactSolve, PlanOpts, Planner, PortfolioSolve,
+                   SimMeasureSolve, Solve};
+use automap::cluster::SimCluster;
+use automap::graph::models::{gpt2, mlp, Gpt2Cfg};
+use automap::graph::Graph;
+use automap::sim::DeviceModel;
+use automap::solver::SolveOpts;
+use automap::util::json::Json;
+
+/// Simulated time may exceed the prediction only by float noise.
+const UPPER_TOL: f64 = 1e-6;
+/// Simulated time must recover at least this fraction of the prediction.
+const LOWER_FRAC: f64 = 0.5;
+
+fn fast_opts() -> PlanOpts {
+    PlanOpts {
+        sweep: 2,
+        solve: SolveOpts {
+            beam_width: 12,
+            anneal_iters: 150,
+            lagrange_iters: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn check_oracle(tag: &str, g: &Graph, plan: &CompiledPlan) {
+    let dev = DeviceModel::a100_80gb();
+    let trace = plan.replay_sim(g, &dev).expect(tag);
+    assert!(
+        trace.step_time.is_finite() && trace.step_time > 0.0,
+        "{tag}: bad simulated step time {}",
+        trace.step_time
+    );
+    let budget = if plan.budget > 0.0 {
+        plan.budget
+    } else {
+        dev.memory * 0.9
+    };
+    // flattened torch.utils.checkpoint replay of a *multi-stage*
+    // checkpointed block may retain more than the rotor DP's nested
+    // policy budgeted for — allow the same 5% slack the property test
+    // states; single-stage blocks (and no checkpointing at all, the
+    // case every default-budget plan here hits) are exact.
+    let flat = plan
+        .plan
+        .ckpt
+        .as_ref()
+        .map(|r| {
+            r.blocks
+                .iter()
+                .all(|b| !b.checkpointed || b.start == b.end)
+        })
+        .unwrap_or(true);
+    let peak_cap = if flat { budget } else { budget * 1.05 };
+    assert!(
+        trace.peak_mem <= peak_cap,
+        "{tag}: simulated peak {:.3} GB exceeds the {:.3} GB budget",
+        trace.peak_mem / 1e9,
+        budget / 1e9
+    );
+    assert!(
+        trace.step_time <= plan.iter_time * (1.0 + UPPER_TOL),
+        "{tag}: simulated {:.6} ms exceeds predicted {:.6} ms",
+        trace.step_time * 1e3,
+        plan.iter_time * 1e3
+    );
+    assert!(
+        trace.step_time >= plan.iter_time * LOWER_FRAC,
+        "{tag}: simulated {:.6} ms implausibly below predicted {:.6} ms",
+        trace.step_time * 1e3,
+        plan.iter_time * 1e3
+    );
+}
+
+#[test]
+fn beam_plans_replay_within_tolerance_on_fig5_clusters() {
+    let g = gpt2(&Gpt2Cfg::mini());
+    let dev = DeviceModel::a100_80gb();
+    for n in [2usize, 4] {
+        let cluster = SimCluster::fig5_prefix(n);
+        let mut p = Planner::new(&g, &cluster, &dev)
+            .with_opts(fast_opts())
+            .with_backend(BeamSolve(fast_opts().solve));
+        let plan = p.lower().expect("beam plan");
+        check_oracle(&format!("beam/fig5-{n}"), &g, &plan);
+    }
+}
+
+#[test]
+fn portfolio_plan_replays_within_tolerance() {
+    let g = gpt2(&Gpt2Cfg::mini());
+    let dev = DeviceModel::a100_80gb();
+    let cluster = SimCluster::fully_connected(2);
+    let mut p = Planner::new(&g, &cluster, &dev)
+        .with_opts(fast_opts())
+        .with_backend(PortfolioSolve::spread(fast_opts().solve, 2));
+    let plan = p.lower().expect("portfolio plan");
+    check_oracle("portfolio/nvlink2", &g, &plan);
+}
+
+#[test]
+fn exact_plan_replays_within_tolerance() {
+    let g = mlp(64, &[128, 64, 10]);
+    let dev = DeviceModel::a100_80gb();
+    let cluster = SimCluster::fully_connected(2);
+    let mut p = Planner::new(&g, &cluster, &dev)
+        .with_opts(fast_opts())
+        .with_backend(ExactSolve);
+    let plan = p.lower().expect("exact plan");
+    assert_eq!(plan.backend, "exact-bnb");
+    check_oracle("exact/nvlink2", &g, &plan);
+}
+
+#[test]
+fn analytic_baselines_replay_as_aggregate_steps() {
+    let g = gpt2(&Gpt2Cfg::mini());
+    let dev = DeviceModel::a100_80gb();
+    let cluster = SimCluster::fig5_prefix(2);
+    let mut any = 0;
+    for backend in BaselineSolve::all(Gpt2Cfg::mini()) {
+        let name = backend.name();
+        let mut p = Planner::new(&g, &cluster, &dev)
+            .with_opts(fast_opts())
+            .with_backend(backend);
+        let Ok(plan) = p.lower() else {
+            continue; // baseline infeasible on this cluster: fine
+        };
+        any += 1;
+        let trace = plan.replay_sim(&g, &dev).expect("analytic replay");
+        assert!(trace.analytic, "{name}: baseline must replay analytic");
+        assert_eq!(trace.step_time, plan.iter_time, "{name}");
+        assert_eq!(trace.peak_mem, plan.mem_per_device, "{name}");
+        assert!(
+            trace.peak_mem <= dev.memory,
+            "{name}: baseline exceeds device memory"
+        );
+    }
+    assert!(any > 0, "no baseline was feasible on fig5-2");
+}
+
+#[test]
+fn sim_backend_records_its_own_simulation_and_beats_beam() {
+    let g = gpt2(&Gpt2Cfg::mini());
+    let dev = DeviceModel::a100_80gb();
+    let cluster = SimCluster::fig5_prefix(4);
+
+    let mut pb = Planner::new(&g, &cluster, &dev)
+        .with_opts(fast_opts())
+        .with_backend(BeamSolve(fast_opts().solve));
+    let beam_plan = pb.lower().expect("beam plan");
+
+    let mut ps = Planner::new(&g, &cluster, &dev)
+        .with_opts(fast_opts())
+        .with_backend(SimMeasureSolve::new(fast_opts().solve));
+    let sim_plan = ps.lower().expect("sim plan");
+    assert!(sim_plan.backend.starts_with("sim-measure"));
+
+    // the sim backend's recorded iter_time IS a simulation result:
+    // replaying the plan must reproduce it bit-for-bit
+    let sim_trace = sim_plan.replay_sim(&g, &dev).unwrap();
+    assert_eq!(
+        sim_trace.step_time, sim_plan.iter_time,
+        "sim backend must record the simulated step time"
+    );
+    assert_eq!(sim_trace.peak_mem, sim_plan.mem_per_device);
+
+    // measured selection over the same candidate pool can only match or
+    // beat the cost-model selection, judged by the oracle itself
+    let beam_trace = beam_plan.replay_sim(&g, &dev).unwrap();
+    assert!(
+        sim_trace.step_time <= beam_trace.step_time * (1.0 + 1e-9),
+        "sim backend ({:.6} ms) lost to beam ({:.6} ms) under its own \
+         oracle",
+        sim_trace.step_time * 1e3,
+        beam_trace.step_time * 1e3
+    );
+}
+
+/// Mutate one field of a serialized plan artifact.
+fn corrupt(plan: &CompiledPlan, f: impl FnOnce(&mut Json)) -> CompiledPlan {
+    let mut v = plan.to_json();
+    f(&mut v);
+    CompiledPlan::from_json(&v).expect("corrupted artifact still parses")
+}
+
+#[test]
+fn corrupted_artifacts_fail_validation_loudly() {
+    let g = mlp(64, &[128, 64, 10]);
+    let dev = DeviceModel::a100_80gb();
+    let cluster = SimCluster::fully_connected(2);
+    let mut p = Planner::new(&g, &cluster, &dev).with_opts(fast_opts());
+    let plan = p.lower().expect("plan");
+    plan.validate().expect("healthy plan validates");
+
+    // (a) a collective referencing a node with no strategy decision
+    let bad = corrupt(&plan, |v| {
+        let Json::Obj(o) = v else { unreachable!() };
+        let Json::Obj(pl) = o.get_mut("plan").unwrap() else {
+            unreachable!()
+        };
+        let Json::Arr(comms) = pl.get_mut("comms").unwrap() else {
+            unreachable!()
+        };
+        comms.push(Json::parse(
+            r#"{"after": 9999, "for_consumer": null,
+                "reason": "resharding", "describe": "bogus",
+                "time": 0.001}"#,
+        )
+        .unwrap());
+    });
+    let err = bad.validate().unwrap_err().to_string();
+    assert!(err.contains("mismatched collective"), "{err}");
+
+    // (b) a decision sharding on a mesh axis the mesh does not have
+    let bad = corrupt(&plan, |v| {
+        let Json::Obj(o) = v else { unreachable!() };
+        let Json::Obj(pl) = o.get_mut("plan").unwrap() else {
+            unreachable!()
+        };
+        let Json::Arr(ds) = pl.get_mut("decisions").unwrap() else {
+            unreachable!()
+        };
+        let Json::Obj(d0) = &mut ds[0] else { unreachable!() };
+        d0.insert(
+            "out_spec".into(),
+            Json::parse("[[9],[]]").unwrap(),
+        );
+    });
+    let err = bad.validate().unwrap_err().to_string();
+    assert!(err.contains("mesh axis 9"), "{err}");
+
+    // (c) replay against the wrong model is refused
+    let wrong = mlp(64, &[32, 10]);
+    let err =
+        plan.replay_sim(&wrong, &dev).unwrap_err().to_string();
+    assert!(err.contains("compiled for"), "{err}");
+}
