@@ -1,0 +1,143 @@
+//! Bench: two-level pipeline planning (`Planner::solve_pipeline`) on
+//! `fig5_prefix` clusters — the inter-op hot path.
+//!
+//! Per cluster, three numbers:
+//!
+//! * **cold solve** — fresh `SolverGraphStore` every iteration: every
+//!   candidate stage cell builds its own solver graph before solving.
+//! * **warm solve** — a shared store already holding every
+//!   (stage-subgraph, submesh) solver graph from a previous solve: the
+//!   steady-state cost of re-partitioning on a long-lived service, and
+//!   the direct measure of what the store-sharing buys the cell fan-out.
+//! * **pipeline vs single-stage** — the chosen pipeline's simulated 1F1B
+//!   step next to the best single-stage plan's replayed step on the same
+//!   cluster (the scenario-diversity claim in numbers; on clusters where
+//!   intra-op is comm-bound the pipeline column should win).
+//!
+//! Results print as a table and land in `BENCH_pp.json` at the repo
+//! root. `cargo bench --bench pp_plan [-- --quick]`
+
+use std::sync::Arc;
+
+use automap::api::{PipelineSolution, PlanOpts, Planner, PpOpts,
+                   SolverGraphStore};
+use automap::cluster::SimCluster;
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::graph::Graph;
+use automap::sim::DeviceModel;
+use automap::solver::SolveOpts;
+use automap::util::bench::{bench, quick, Table};
+use automap::util::json::{arr, num, obj, s, write_json, Json};
+
+fn fast_opts() -> PlanOpts {
+    PlanOpts {
+        sweep: 2,
+        solve: SolveOpts {
+            beam_width: 12,
+            anneal_iters: 150,
+            lagrange_iters: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn solve_pp(
+    g: &Graph,
+    cluster: &SimCluster,
+    dev: &DeviceModel,
+    store: &Arc<SolverGraphStore>,
+) -> PipelineSolution {
+    let mut opts = fast_opts();
+    opts.pp = Some(PpOpts {
+        min_stages: 2,
+        max_stages: 2,
+        microbatches: vec![2, 4, 8],
+        ..Default::default()
+    });
+    let mut p = Planner::new(g, cluster, dev)
+        .with_opts(opts)
+        .with_store(Arc::clone(store));
+    p.solve_pipeline().expect("bench pipeline solves").clone()
+}
+
+fn main() {
+    let q = quick();
+    let iters = if q { 1 } else { 2 };
+    let dev = DeviceModel::a100_80gb();
+    let g = gpt2(&Gpt2Cfg::mini());
+    let sizes: &[usize] = if q { &[4] } else { &[4, 8] };
+
+    let mut table = Table::new(
+        "pp plan: cold vs warm-store two-level solve, pipeline vs \
+         single-stage step",
+        &["cluster", "stages", "B", "cold ms", "warm ms", "pp step ms",
+          "1-stage step ms"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    for &n in sizes {
+        let cluster = SimCluster::fig5_prefix(n);
+
+        // single-stage reference: best intra-op plan, replayed
+        let single_step = {
+            let mut p = Planner::new(&g, &cluster, &dev)
+                .with_opts(fast_opts());
+            let plan = p.lower().expect("single-stage plan");
+            plan.replay_sim(&g, &dev).expect("replay").step_time
+        };
+
+        let warm_store = Arc::new(SolverGraphStore::new());
+        let sol = solve_pp(&g, &cluster, &dev, &warm_store); // warms it
+
+        let cold = bench(&format!("cold pp solve fig5-{n}"), 0, iters, || {
+            let store = Arc::new(SolverGraphStore::new());
+            solve_pp(&g, &cluster, &dev, &store).iter_time
+        });
+        let warm = bench(&format!("warm pp solve fig5-{n}"), 0, iters, || {
+            solve_pp(&g, &cluster, &dev, &warm_store).iter_time
+        });
+
+        let cold_ms = cold.median_ns / 1e6;
+        let warm_ms = warm.median_ns / 1e6;
+        table.row(vec![
+            format!("fig5-{n}"),
+            sol.stages.len().to_string(),
+            sol.microbatches.to_string(),
+            format!("{cold_ms:.1}"),
+            format!("{warm_ms:.1}"),
+            format!("{:.3}", sol.iter_time * 1e3),
+            format!("{:.3}", single_step * 1e3),
+        ]);
+        rows.push(obj(vec![
+            ("cluster", s(&format!("fig5-{n}"))),
+            ("stages", num(sol.stages.len() as f64)),
+            ("microbatches", num(sol.microbatches as f64)),
+            ("cold_solve_ms", num(cold_ms)),
+            ("warm_solve_ms", num(warm_ms)),
+            ("warm_over_cold", num(warm_ms / cold_ms.max(1e-9))),
+            ("pp_step_ms", num(sol.iter_time * 1e3)),
+            ("single_stage_step_ms", num(single_step * 1e3)),
+            (
+                "pp_over_single",
+                num(sol.iter_time / single_step.max(1e-12)),
+            ),
+        ]));
+    }
+    table.print();
+
+    let out = obj(vec![
+        ("bench", s("pp_plan")),
+        ("model", s("gpt2-mini")),
+        ("quick", Json::Bool(q)),
+        ("results", arr(rows)),
+    ]);
+    let mut text = String::new();
+    write_json(&out, &mut text);
+    text.push('\n');
+    if let Err(e) = std::fs::write("BENCH_pp.json", &text) {
+        eprintln!("could not write BENCH_pp.json: {e}");
+    } else {
+        println!("\nrecorded -> BENCH_pp.json");
+    }
+}

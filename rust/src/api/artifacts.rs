@@ -824,6 +824,358 @@ impl Artifact for CompiledPlan {
 }
 
 // ---------------------------------------------------------------------------
+// pipeline stage: PipelineSolution
+
+fn p2p_to_json(t: &crate::gen::P2pTransfer) -> Json {
+    obj(vec![
+        ("from_stage", num(t.from_stage as f64)),
+        ("to_stage", num(t.to_stage as f64)),
+        ("bytes_fwd", jnum(t.bytes_fwd)),
+        ("bytes_bwd", jnum(t.bytes_bwd)),
+        ("alpha", jnum(t.alpha)),
+        ("beta", jnum(t.beta)),
+        ("streams", num(t.streams as f64)),
+    ])
+}
+
+fn p2p_from_json(v: &Json) -> Result<crate::gen::P2pTransfer> {
+    Ok(crate::gen::P2pTransfer {
+        from_stage: jusize(v.get("from_stage"), "p2p.from_stage")?,
+        to_stage: jusize(v.get("to_stage"), "p2p.to_stage")?,
+        bytes_fwd: jf(v.get("bytes_fwd"), "p2p.bytes_fwd")?,
+        bytes_bwd: jf(v.get("bytes_bwd"), "p2p.bytes_bwd")?,
+        alpha: jf(v.get("alpha"), "p2p.alpha")?,
+        beta: jf(v.get("beta"), "p2p.beta")?,
+        streams: jusize(v.get("streams"), "p2p.streams")?,
+    })
+}
+
+/// One stage of a compiled pipeline: a full intra-op [`CompiledPlan`]
+/// over the stage's submesh, the phase aggregates the 1F1B replay
+/// consumes, and the incoming boundary transfer.
+#[derive(Debug, Clone)]
+pub struct PipelineStagePlan {
+    /// Linearized-group span `[lo, hi)` this stage owns.
+    pub span: (usize, usize),
+    /// Global device ids of the stage submesh (contiguous slice of the
+    /// cluster, in order). The nested `plan.mesh` uses local ids
+    /// `0..devices.len()`.
+    pub devices: Vec<usize>,
+    pub plan: CompiledPlan,
+    /// Full-batch forward / backward sweep times (recompute included).
+    pub fwd: f64,
+    pub bwd: f64,
+    /// Exposed gradient-sync tail, once per step.
+    pub exposed_grad: f64,
+    /// Full-batch retained activation between a microbatch's fwd and bwd.
+    pub act_bytes: f64,
+    pub fwd_transient: f64,
+    pub bwd_transient: f64,
+    pub param_bytes: f64,
+    /// Microbatches resident on this stage in 1F1B steady state
+    /// (`min(S - s, B)`).
+    pub in_flight: usize,
+    /// Boundary transfer from the previous stage (`None` for stage 0).
+    pub p2p_in: Option<crate::gen::P2pTransfer>,
+}
+
+impl PipelineStagePlan {
+    /// The replayer-facing view of this stage.
+    pub fn spec(&self) -> crate::sim::pipeline::PipelineStageSpec {
+        crate::sim::pipeline::PipelineStageSpec {
+            phases: crate::sim::pipeline::StagePhases {
+                fwd: self.fwd,
+                bwd: self.bwd,
+                exposed_grad: self.exposed_grad,
+                act_bytes: self.act_bytes,
+                fwd_transient: self.fwd_transient,
+                bwd_transient: self.bwd_transient,
+                param_bytes: self.param_bytes,
+            },
+            p2p_in: self.p2p_in.clone(),
+        }
+    }
+
+    /// Full-batch stage time as the partitioner priced it: fwd + bwd
+    /// plus the incoming boundary's round trip.
+    pub fn stage_time(&self) -> f64 {
+        self.fwd
+            + self.bwd
+            + self.p2p_in.as_ref().map(|l| l.round_trip()).unwrap_or(0.0)
+    }
+}
+
+/// The inter-op planning artifact: stage cuts over cluster slices, a
+/// nested intra-op `CompiledPlan` per stage, the chosen microbatch
+/// count, and the simulated 1F1B step time. Kind `pipeline-solution`.
+///
+/// Self-contained for replay: [`replay_1f1b`](Self::replay_1f1b) needs
+/// no model graph. Binding a model back
+/// ([`verify_against`](Self::verify_against)) re-derives the stage
+/// subgraphs from the recorded spans and replays every stage's intra-op
+/// schedule tick-by-tick as well.
+#[derive(Debug, Clone)]
+pub struct PipelineSolution {
+    pub backend: String,
+    /// Node count of the full model graph (identity check on rebind).
+    pub graph_nodes: usize,
+    /// Length of the linearized group chain the spans index into.
+    pub n_groups: usize,
+    pub microbatches: usize,
+    /// Per-device memory budget every stage compiled under, bytes.
+    pub budget: f64,
+    pub stages: Vec<PipelineStagePlan>,
+    /// Simulated 1F1B step time (the replay's number, not a formula).
+    pub iter_time: f64,
+    /// The partitioner's closed-form latency estimate for the winner.
+    pub predicted_time: f64,
+    pub pflops: f64,
+    /// Worst per-stage simulated peak memory, bytes.
+    pub max_stage_mem: f64,
+}
+
+impl PipelineSolution {
+    /// Artifact-level structural validation: spans partition the group
+    /// chain, device slices are disjoint and non-empty, boundary links
+    /// sit exactly on the interior cuts, and every nested stage plan
+    /// passes its own [`CompiledPlan::validate`].
+    pub fn validate(&self) -> Result<()> {
+        if self.stages.is_empty() {
+            bail!("pipeline solution has no stages");
+        }
+        if self.microbatches == 0 {
+            bail!("pipeline solution has zero microbatches");
+        }
+        let mut next_group = 0usize;
+        let mut seen_devs: Vec<usize> = Vec::new();
+        for (s, st) in self.stages.iter().enumerate() {
+            let (lo, hi) = st.span;
+            if lo != next_group || hi <= lo {
+                bail!(
+                    "stage {s} span [{lo}, {hi}) breaks the group \
+                     partition at {next_group}"
+                );
+            }
+            next_group = hi;
+            if st.devices.is_empty() {
+                bail!("stage {s} owns no devices");
+            }
+            for &d in &st.devices {
+                if seen_devs.contains(&d) {
+                    bail!("device {d} assigned to two stages");
+                }
+                seen_devs.push(d);
+            }
+            if st.devices.len() != st.plan.mesh.n_devices() {
+                bail!(
+                    "stage {s} lists {} device(s) but its plan's mesh \
+                     has {}",
+                    st.devices.len(),
+                    st.plan.mesh.n_devices()
+                );
+            }
+            if (s == 0) != st.p2p_in.is_none() {
+                bail!(
+                    "stage {s}: boundary transfer present iff the stage \
+                     has a predecessor"
+                );
+            }
+            for x in [st.fwd, st.bwd, st.exposed_grad, st.act_bytes,
+                      st.fwd_transient, st.bwd_transient,
+                      st.param_bytes]
+            {
+                if !x.is_finite() || x < 0.0 {
+                    bail!("stage {s}: non-finite or negative phase cost");
+                }
+            }
+            st.plan.validate().map_err(|e| {
+                anyhow!("stage {s} plan invalid: {e}")
+            })?;
+        }
+        if next_group != self.n_groups {
+            bail!(
+                "stage spans cover {next_group} of {} groups",
+                self.n_groups
+            );
+        }
+        Ok(())
+    }
+
+    /// Replay the microbatched 1F1B schedule from the artifact alone
+    /// (per-stage device programs, P2P rendezvous, per-microbatch memory
+    /// ledger). `devices[s]` of the trace is stage `s`'s queue.
+    pub fn replay_1f1b(&self) -> Result<crate::sim::SimTrace> {
+        let specs: Vec<_> =
+            self.stages.iter().map(|s| s.spec()).collect();
+        crate::sim::pipeline::replay_1f1b(&specs, self.microbatches)
+    }
+
+    /// Bind the artifact back to a model graph and verify the whole
+    /// chain: re-derive the linearization, re-extract every stage's
+    /// subgraph from its recorded span, replay each stage's intra-op
+    /// plan tick-by-tick (peaks returned per stage), then run the 1F1B
+    /// replay. Returns (per-stage intra-op peak memory, pipeline trace).
+    pub fn verify_against(
+        &self,
+        g: &crate::graph::Graph,
+        dev: &crate::sim::DeviceModel,
+    ) -> Result<(Vec<f64>, crate::sim::SimTrace)> {
+        self.validate()?;
+        if self.graph_nodes != g.len() {
+            bail!(
+                "pipeline was compiled for a {}-node graph but got {} \
+                 nodes — verify against the model it was saved with",
+                self.graph_nodes,
+                g.len()
+            );
+        }
+        let common = crate::ckpt::common_nodes(g);
+        let groups = crate::ckpt::linearize(g, &common);
+        if groups.len() != self.n_groups {
+            bail!(
+                "model linearizes into {} groups but the pipeline was \
+                 cut over {}",
+                groups.len(),
+                self.n_groups
+            );
+        }
+        let mut peaks = Vec::with_capacity(self.stages.len());
+        for (s, st) in self.stages.iter().enumerate() {
+            let (lo, hi) = st.span;
+            let full = lo == 0 && hi == groups.len();
+            let owned;
+            let sub: &crate::graph::Graph = if full {
+                g
+            } else {
+                owned = crate::pp::stage_subgraph(
+                    g, &common, &groups, lo, hi,
+                )?;
+                &owned.graph
+            };
+            let trace = st.plan.replay_sim(sub, dev).map_err(|e| {
+                anyhow!("stage {s} intra-op replay failed: {e}")
+            })?;
+            peaks.push(trace.peak_mem);
+        }
+        let trace = self.replay_1f1b()?;
+        Ok((peaks, trace))
+    }
+}
+
+impl Artifact for PipelineSolution {
+    const KIND: &'static str = "pipeline-solution";
+
+    fn to_json(&self) -> Json {
+        let stages = arr(self
+            .stages
+            .iter()
+            .map(|st| {
+                obj(vec![
+                    ("span_lo", num(st.span.0 as f64)),
+                    ("span_hi", num(st.span.1 as f64)),
+                    ("devices", usize_arr(&st.devices)),
+                    ("plan", st.plan.to_json()),
+                    ("fwd", jnum(st.fwd)),
+                    ("bwd", jnum(st.bwd)),
+                    ("exposed_grad", jnum(st.exposed_grad)),
+                    ("act_bytes", jnum(st.act_bytes)),
+                    ("fwd_transient", jnum(st.fwd_transient)),
+                    ("bwd_transient", jnum(st.bwd_transient)),
+                    ("param_bytes", jnum(st.param_bytes)),
+                    ("in_flight", num(st.in_flight as f64)),
+                    (
+                        "p2p_in",
+                        match &st.p2p_in {
+                            Some(t) => p2p_to_json(t),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect());
+        obj(vec![
+            ("kind", s(Self::KIND)),
+            ("version", num(ARTIFACT_VERSION as f64)),
+            ("backend", s(&self.backend)),
+            ("graph_nodes", num(self.graph_nodes as f64)),
+            ("n_groups", num(self.n_groups as f64)),
+            ("microbatches", num(self.microbatches as f64)),
+            ("budget", jnum(self.budget)),
+            ("stages", stages),
+            ("iter_time", jnum(self.iter_time)),
+            ("predicted_time", jnum(self.predicted_time)),
+            ("pflops", jnum(self.pflops)),
+            ("max_stage_mem", jnum(self.max_stage_mem)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        expect_kind(v, Self::KIND)?;
+        let stages = v
+            .get("stages")
+            .as_arr()
+            .ok_or_else(|| anyhow!("pipeline.stages must be an array"))?
+            .iter()
+            .map(|st| {
+                Ok(PipelineStagePlan {
+                    span: (
+                        jusize(st.get("span_lo"), "stage.span_lo")?,
+                        jusize(st.get("span_hi"), "stage.span_hi")?,
+                    ),
+                    devices: read_usize_arr(
+                        st.get("devices"),
+                        "stage.devices",
+                    )?,
+                    plan: CompiledPlan::from_json(st.get("plan"))?,
+                    fwd: jf(st.get("fwd"), "stage.fwd")?,
+                    bwd: jf(st.get("bwd"), "stage.bwd")?,
+                    exposed_grad: jf(
+                        st.get("exposed_grad"),
+                        "stage.exposed_grad",
+                    )?,
+                    act_bytes: jf(st.get("act_bytes"), "stage.act")?,
+                    fwd_transient: jf(
+                        st.get("fwd_transient"),
+                        "stage.fwd_transient",
+                    )?,
+                    bwd_transient: jf(
+                        st.get("bwd_transient"),
+                        "stage.bwd_transient",
+                    )?,
+                    param_bytes: jf(
+                        st.get("param_bytes"),
+                        "stage.param_bytes",
+                    )?,
+                    in_flight: jusize(
+                        st.get("in_flight"),
+                        "stage.in_flight",
+                    )?,
+                    p2p_in: match st.get("p2p_in") {
+                        Json::Null => None,
+                        other => Some(p2p_from_json(other)?),
+                    },
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PipelineSolution {
+            backend: jstr(v.get("backend"), "backend")?,
+            graph_nodes: jusize(v.get("graph_nodes"), "graph_nodes")?,
+            n_groups: jusize(v.get("n_groups"), "n_groups")?,
+            microbatches: jusize(v.get("microbatches"), "microbatches")?,
+            budget: jf(v.get("budget"), "budget")?,
+            stages,
+            iter_time: jf(v.get("iter_time"), "iter_time")?,
+            predicted_time: jf(
+                v.get("predicted_time"),
+                "predicted_time",
+            )?,
+            pflops: jf(v.get("pflops"), "pflops")?,
+            max_stage_mem: jf(v.get("max_stage_mem"), "max_stage_mem")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // sim trace (verify stage)
 
 /// The replay trace is an artifact like every stage output: kind-tagged,

@@ -13,6 +13,13 @@
 //!     .lower()           -> CompiledPlan      (§6 generator passes)
 //! ```
 //!
+//! Orthogonal to the five intra-op stages sits the inter-op stage:
+//! [`solve_pipeline`](Planner::solve_pipeline) produces a
+//! [`PipelineSolution`] — stage cuts over cluster slices, a nested
+//! `CompiledPlan` per stage, and a microbatch count chosen by 1F1B
+//! latency — by running the intra-op pipeline once per candidate stage
+//! (see [`crate::pp`]).
+//!
 //! Every artifact is JSON-serializable ([`Artifact`]) so plans can be
 //! cached to disk, diffed across runs, and replayed without re-solving.
 //! Stages run lazily and at most once: each stage runs its missing
@@ -59,8 +66,10 @@ pub mod solve;
 pub mod store;
 
 pub use self::artifacts::{Artifact, CkptSchedule, ClusterReport,
-                          CompiledPlan, MeshCandidates, ShardingCandidate,
+                          CompiledPlan, MeshCandidates, PipelineSolution,
+                          PipelineStagePlan, ShardingCandidate,
                           ShardingSolution, ARTIFACT_VERSION};
+pub use crate::pp::PpOpts;
 pub use self::cache::{CacheStats, DiskEntry, PlanCache, PlanSource};
 pub use self::progress::{PlanStage, ProgressEvent};
 pub use self::service::{BackendSpec, ClusterSpec, PlanOutcome,
@@ -104,6 +113,10 @@ pub struct PlanOpts {
     pub mesh_shapes: Option<Vec<Vec<usize>>>,
     /// Seed for the topology probe.
     pub seed: u64,
+    /// Inter-op pipeline options for [`Planner::solve_pipeline`]
+    /// (`None` = defaults when that stage runs; the intra-op stages
+    /// ignore this field entirely).
+    pub pp: Option<crate::pp::PpOpts>,
 }
 
 impl Default for PlanOpts {
@@ -115,6 +128,7 @@ impl Default for PlanOpts {
             solve: SolveOpts::default(),
             mesh_shapes: None,
             seed: 42,
+            pp: None,
         }
     }
 }
@@ -204,6 +218,7 @@ pub struct Planner<'a> {
     meshes: Option<MeshCandidates>,
     sharding: Option<ShardingSolution>,
     ckpt: Option<CkptSchedule>,
+    pipeline: Option<PipelineSolution>,
 }
 
 impl<'a> Planner<'a> {
@@ -228,6 +243,7 @@ impl<'a> Planner<'a> {
             meshes: None,
             sharding: None,
             ckpt: None,
+            pipeline: None,
         }
     }
 
@@ -264,6 +280,7 @@ impl<'a> Planner<'a> {
             meshes: None,
             sharding: None,
             ckpt: None,
+            pipeline: None,
         }
     }
 
@@ -989,6 +1006,62 @@ impl<'a> Planner<'a> {
             ms: t0.elapsed().as_secs_f64() * 1e3,
         });
         Ok(compiled)
+    }
+
+    // -- stage 6: inter-op pipeline ----------------------------------------
+
+    /// Two-level (stage × intra-op × ckpt) pipeline planning: cut the
+    /// model into stages over cluster slices, compile each candidate
+    /// stage with the full intra-op pipeline (sharding sweep + per-stage
+    /// rotor DP, nested planners sharing this planner's
+    /// [`SolverGraphStore`]), and pick stage cuts, submeshes, and
+    /// microbatch count minimizing the 1F1B latency. The winner is
+    /// confirmed by the microbatched discrete-event replay
+    /// ([`sim::pipeline`](crate::sim::pipeline)); its simulated step
+    /// time is the artifact's headline number.
+    ///
+    /// Orthogonal to `lower()`: the intra-op stages plan one mesh, this
+    /// stage plans a chain of them. Options come from
+    /// [`PlanOpts::pp`] (defaults if unset). Runs at most once per
+    /// planner, like every other stage. Nested stage compiles use the
+    /// default beam backend configured by `opts.solve` (a custom
+    /// [`Solve`] backend installed on this planner does not propagate —
+    /// backends are not clonable across the cell fan-out).
+    pub fn solve_pipeline(&mut self) -> Result<&PipelineSolution> {
+        if self.pipeline.is_some() {
+            return Ok(self.pipeline.as_ref().unwrap());
+        }
+        self.detect()?;
+        self.profile();
+        emit(&mut self.progress, ProgressEvent::StageStart {
+            stage: PlanStage::Pipeline,
+        });
+        let t0 = std::time::Instant::now();
+        let budget = self.effective_budget();
+        let total_flops = self.prof.as_ref().unwrap().total_flops();
+        let ppopts = self.opts.pp.clone().unwrap_or_default();
+        let info = self.report.as_ref().unwrap().info.clone();
+        // hand the callback to the partitioner without aliasing `self`
+        let mut progress = self.progress.take();
+        let result = crate::pp::solve(
+            self.graph,
+            &info,
+            self.dev,
+            &self.opts,
+            &ppopts,
+            budget,
+            total_flops,
+            &self.store,
+            &mut |ev| emit(&mut progress, ev),
+        );
+        self.progress = progress;
+        let sol = result?;
+        emit(&mut self.progress, ProgressEvent::StageDone {
+            stage: PlanStage::Pipeline,
+            ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        self.pipeline = Some(sol);
+        Ok(self.pipeline.as_ref().unwrap())
     }
 }
 

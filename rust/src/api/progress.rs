@@ -9,7 +9,9 @@
 
 use super::cache::PlanSource;
 
-/// The five pipeline stages, in order.
+/// The intra-op compile stages, in order, plus the inter-op pipeline
+/// stage (`Planner::solve_pipeline`, which nests the intra-op stages
+/// once per candidate pipeline stage).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PlanStage {
     Detect,
@@ -17,6 +19,7 @@ pub enum PlanStage {
     Sharding,
     Ckpt,
     Lower,
+    Pipeline,
 }
 
 impl PlanStage {
@@ -27,6 +30,7 @@ impl PlanStage {
             PlanStage::Sharding => "solve-sharding",
             PlanStage::Ckpt => "schedule-ckpt",
             PlanStage::Lower => "lower",
+            PlanStage::Pipeline => "solve-pipeline",
         }
     }
 }
@@ -82,6 +86,26 @@ pub enum ProgressEvent {
     /// One request of a [`plan_batch`](super::PlanService::plan_batch)
     /// call finished; `index` is its position in the submitted slice.
     RequestDone { index: usize, source: PlanSource, ms: f64 },
+    /// The inter-op partitioner finished one candidate stage cell: the
+    /// nested intra-op compile of group span `span` on device range
+    /// `devices` (`[a, b)` global ids). `feasible` is false when the
+    /// stage could not be compiled under the budget.
+    PipelineCellSolved {
+        span: (usize, usize),
+        devices: (usize, usize),
+        feasible: bool,
+        ms: f64,
+    },
+    /// The inter-op DP picked its winner and the 1F1B replay confirmed
+    /// it: `predicted` is the DP's closed-form latency estimate,
+    /// `simulated` the microbatched replay's step time (the number the
+    /// artifact records).
+    PipelineChosen {
+        stages: usize,
+        microbatches: usize,
+        predicted: f64,
+        simulated: f64,
+    },
 }
 
 pub(crate) type ProgressFn<'a> = Box<dyn FnMut(&ProgressEvent) + 'a>;

@@ -406,7 +406,7 @@ impl PlanService {
     /// for the planner's store key).
     fn fingerprint_with(req: &PlanRequest, graph_fp: &str) -> String {
         let mut h = StableHasher::new();
-        h.write_str("automap-plan-request-v2");
+        h.write_str("automap-plan-request-v3");
         // model: node structure + tensor metadata decide the search space
         // (the same digest keys the shared SolverGraphStore)
         h.write_str(graph_fp);
@@ -432,6 +432,20 @@ impl PlanService {
         hash_solve_opts(&mut h, &o.solve);
         hash_mesh_shapes(&mut h, o.mesh_shapes.as_deref());
         h.write_u64(o.seed);
+        match &o.pp {
+            None => h.write_str("pp-none"),
+            Some(pp) => {
+                h.write_str("pp");
+                h.write_usize(pp.max_stages);
+                h.write_usize(pp.min_stages);
+                h.write_f64(pp.balance);
+                let mb = pp.microbatch_candidates();
+                h.write_usize(mb.len());
+                for b in mb {
+                    h.write_usize(b);
+                }
+            }
+        }
         req.backend.hash_into(&mut h);
         h.hex()
     }

@@ -75,6 +75,32 @@ impl ClusterInfo {
         }
         worst
     }
+
+    /// Restrict the detected topology to a device subset (renumbered
+    /// `0..devs.len()` in the given order). The pipeline partitioner
+    /// hands each candidate stage a sliced view of the cluster so the
+    /// per-stage intra-op solve sees exactly the submesh it would own;
+    /// the global `tiers` list is kept as-is (tier indices stay
+    /// comparable across slices of one probe).
+    pub fn slice(&self, devs: &[usize]) -> ClusterInfo {
+        let pick = |m: &Vec<Vec<f64>>| -> Vec<Vec<f64>> {
+            devs.iter()
+                .map(|&i| devs.iter().map(|&j| m[i][j]).collect())
+                .collect()
+        };
+        ClusterInfo {
+            n: devs.len(),
+            alpha: pick(&self.alpha),
+            beta: pick(&self.beta),
+            tiers: self.tiers.clone(),
+            tier_of: devs
+                .iter()
+                .map(|&i| {
+                    devs.iter().map(|&j| self.tier_of[i][j]).collect()
+                })
+                .collect(),
+        }
+    }
 }
 
 /// Probe every pair with small (latency) and large (bandwidth) messages —
@@ -195,6 +221,23 @@ mod tests {
         let info = detect(&c, 5);
         assert_eq!(info.tiers.len(), 1);
         assert_eq!(info.groups_at_tier(0).len(), 1);
+    }
+
+    #[test]
+    fn slice_restricts_and_renumbers() {
+        let c = SimCluster::partially_connected_8gpu();
+        let info = detect(&c, 42);
+        let quad = info.slice(&[4, 5, 6, 7]);
+        assert_eq!(quad.n, 4);
+        // (4,5) is an NVLink pair in the full box -> (0,1) in the slice
+        assert_eq!(quad.beta[0][1], info.beta[4][5]);
+        assert_eq!(quad.alpha[2][3], info.alpha[6][7]);
+        assert_eq!(quad.tier_of[0][2], info.tier_of[4][6]);
+        // tiers stay global so tier indices remain comparable
+        assert_eq!(quad.tiers, info.tiers);
+        let one = info.slice(&[3]);
+        assert_eq!(one.n, 1);
+        assert_eq!(one.beta.len(), 1);
     }
 
     #[test]

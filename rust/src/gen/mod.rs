@@ -33,6 +33,109 @@ pub struct CommInsert {
     pub time: f64,
 }
 
+/// An inter-stage point-to-point transfer the pipeline generator inserts
+/// at a stage boundary: the boundary activation travels downstream on the
+/// forward sweep, its gradient travels back upstream on the backward
+/// sweep. Unlike [`CommInsert`] (a collective over a mesh axis), a P2P
+/// transfer crosses *between* two submeshes and is priced with the α-β
+/// link model in [`runtime::collective`](crate::runtime::collective).
+#[derive(Debug, Clone)]
+pub struct P2pTransfer {
+    /// Producing stage index (activations flow `from_stage → to_stage`).
+    pub from_stage: usize,
+    pub to_stage: usize,
+    /// Full-batch boundary activation bytes (forward direction).
+    pub bytes_fwd: f64,
+    /// Full-batch boundary gradient bytes (backward direction).
+    pub bytes_bwd: f64,
+    /// Worst-pair link latency between the two stage device sets, s.
+    pub alpha: f64,
+    /// Weakest-link bandwidth between the two stage device sets, B/s.
+    pub beta: f64,
+    /// Concurrent point-to-point streams (min of the two stage widths):
+    /// each sender/receiver pair moves its shard in parallel.
+    pub streams: usize,
+}
+
+impl P2pTransfer {
+    fn link_bw(&self) -> f64 {
+        self.beta * self.streams.max(1) as f64
+    }
+
+    /// Forward activation transfer time for one of `microbatches` chunks.
+    pub fn fwd_time(&self, microbatches: usize) -> f64 {
+        crate::runtime::collective::p2p_time(
+            self.alpha,
+            self.link_bw(),
+            self.bytes_fwd / microbatches.max(1) as f64,
+        )
+    }
+
+    /// Backward gradient transfer time for one microbatch chunk.
+    pub fn bwd_time(&self, microbatches: usize) -> f64 {
+        crate::runtime::collective::p2p_time(
+            self.alpha,
+            self.link_bw(),
+            self.bytes_bwd / microbatches.max(1) as f64,
+        )
+    }
+
+    /// Combined `send_forward_recv_backward` rendezvous (1F1B steady
+    /// state): full-duplex, so the pair costs max, not sum.
+    pub fn fb_time(&self, microbatches: usize) -> f64 {
+        let b = microbatches.max(1) as f64;
+        crate::runtime::collective::send_recv_time(
+            self.alpha,
+            self.link_bw(),
+            self.bytes_fwd / b,
+            self.bytes_bwd / b,
+        )
+    }
+
+    /// Full-batch round trip (fwd + bwd), the partitioner's estimate of
+    /// what this boundary adds to the downstream stage's step time.
+    pub fn round_trip(&self) -> f64 {
+        self.fwd_time(1) + self.bwd_time(1)
+    }
+}
+
+/// Build the P2P transfer for the boundary between two pipeline stages:
+/// `bytes` is the full-batch activation crossing the cut (the gradient
+/// mirrors it), and the link is the *weakest* pair between the two device
+/// sets widened by `min(|prev|, |next|)` concurrent streams — the
+/// pessimistic flat-ring the runtime can always realize.
+pub fn stage_boundary_p2p(
+    info: &crate::cluster::ClusterInfo,
+    from_stage: usize,
+    to_stage: usize,
+    prev_devs: &[usize],
+    next_devs: &[usize],
+    bytes: f64,
+) -> P2pTransfer {
+    let mut alpha: f64 = 0.0;
+    let mut beta = f64::INFINITY;
+    for &a in prev_devs {
+        for &b in next_devs {
+            alpha = alpha.max(info.alpha[a][b]);
+            beta = beta.min(info.beta[a][b]);
+        }
+    }
+    if !beta.is_finite() || prev_devs.is_empty() || next_devs.is_empty() {
+        // degenerate (same-device or empty) boundary: free link
+        alpha = 0.0;
+        beta = f64::INFINITY;
+    }
+    P2pTransfer {
+        from_stage,
+        to_stage,
+        bytes_fwd: bytes,
+        bytes_bwd: bytes,
+        alpha,
+        beta,
+        streams: prev_devs.len().min(next_devs.len()).max(1),
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct NodeDecision {
     pub node: NodeId,
@@ -373,6 +476,30 @@ mod tests {
                 assert!(gdim % l == 0);
             }
         }
+    }
+
+    #[test]
+    fn stage_boundary_p2p_prices_the_weakest_cross_link() {
+        use crate::cluster::{detect, SimCluster};
+        let info = detect(&SimCluster::partially_connected_8gpu(), 42);
+        // NUMA quad 0..4 feeding NUMA quad 4..8: the cross-NUMA links
+        // (~10 GB/s) gate the boundary, widened by 4 parallel streams
+        let t = stage_boundary_p2p(&info, 0, 1, &[0, 1, 2, 3],
+                                   &[4, 5, 6, 7], 4e9);
+        assert_eq!(t.streams, 4);
+        assert!(t.beta < 15e9, "weakest link must be cross-NUMA");
+        let full = t.fwd_time(1);
+        let chunk = t.fwd_time(4);
+        // chunking divides the serialization term but keeps latency
+        assert!(chunk < full && chunk > full / 4.0);
+        // the combined rendezvous overlaps the two directions
+        assert!(t.fb_time(4) < t.fwd_time(4) + t.bwd_time(4));
+        assert!(t.fb_time(4) >= t.fwd_time(4).max(t.bwd_time(4)));
+        assert!(t.round_trip() > 0.0 && t.round_trip().is_finite());
+        // uneven widths: streams follow the narrow side
+        let n =
+            stage_boundary_p2p(&info, 1, 2, &[0, 1, 2, 3], &[4], 1e9);
+        assert_eq!(n.streams, 1);
     }
 
     #[test]

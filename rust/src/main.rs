@@ -4,12 +4,15 @@
 //! solve_sharding → schedule_ckpt → lower; see rust/src/api/README.md).
 //!
 //! Subcommands:
-//!   plan      --model gpt2-mini|alpha..delta --cluster fig5|nvlink<N>|single
+//!   plan      --model gpt2-mini|alpha..delta
+//!             --cluster fig5|single|nvlink<N>|multinode<NxM>
 //!             [--budget-gb G] [--fast] [--codegen] [--progress]
 //!             [--backend beam|exact|portfolio|sim|ddp|megatron-1d|
 //!              optimus-2d|3d-tp]
 //!             [--json] [--save-plan p.json] [--load-plan p.json]
-//!             [--cache-dir DIR] :
+//!             [--cache-dir DIR]
+//!             [--pp [--max-stages K] [--min-stages K]
+//!              [--microbatches 1,2,4,8]] :
 //!             plan through the service and print the result. --cache-dir
 //!             persists plans on disk (repeat runs are cache hits);
 //!             --save-plan copies the CompiledPlan artifact; --load-plan
@@ -18,6 +21,13 @@
 //!             --backend sim ranks candidates by replaying each lowered
 //!             schedule through the discrete-event executor (measured,
 //!             cost-model-free selection).
+//!             --pp runs the two-level inter-op planner instead: stage
+//!             cuts × submesh slices × microbatch count minimizing 1F1B
+//!             latency, each stage solved by the intra-op pipeline; the
+//!             result is a PipelineSolution artifact whose recorded step
+//!             time is the microbatched 1F1B replay's. --load-plan
+//!             detects the artifact kind, so saved pipeline plans reload
+//!             the same way compiled plans do.
 //!   verify    <plan.json> [--model M | --manifest artifacts/manifest.json]
 //!             [--budget-gb G] [--strict] [--save-trace t.json] [--json] :
 //!             structurally validate a saved CompiledPlan artifact, then
@@ -31,6 +41,12 @@
 //!             no overlap credit — and can exceed the strict bound
 //!             despite being healthy). --save-trace writes the SimTrace
 //!             artifact; --json prints it on stdout.
+//!             PipelineSolution artifacts are detected by kind and get
+//!             the pipeline treatment: structural validation, the 1F1B
+//!             replay (P2P deadlock / per-stage budget checks), and —
+//!             when --model/--manifest binds a model — a per-stage
+//!             intra-op replay of every nested stage plan against its
+//!             re-extracted subgraph.
 //!   batch     <manifest.json> [--cache-dir DIR] [--out-dir DIR]
 //!             [--progress] [--json] : plan a JSON list of requests
 //!             concurrently (AUTOMAP_THREADS workers) with per-request
@@ -52,8 +68,9 @@
 use anyhow::{anyhow, Result};
 
 use automap::api::{Artifact, BackendSpec, BaselineSolve, ClusterReport,
-                   CompiledPlan, MeshCandidates, PlanOutcome, PlanRequest,
-                   PlanService, Planner, ProgressEvent};
+                   CompiledPlan, MeshCandidates, PipelineSolution,
+                   PlanOutcome, PlanRequest, PlanService, Planner,
+                   PpOpts, ProgressEvent};
 use automap::cluster::{detect, SimCluster};
 use automap::runtime::Manifest;
 use automap::coordinator::tp::{serial_block_forward, tp_block_forward,
@@ -198,6 +215,34 @@ fn narrate(ev: &ProgressEvent) {
                 peak_mem / 1e9
             );
         }
+        ProgressEvent::PipelineCellSolved {
+            span,
+            devices,
+            feasible,
+            ms,
+        } => {
+            eprintln!(
+                "[pp] stage [{}, {}) on devs [{}, {}): {} ({ms:.0} ms)",
+                span.0,
+                span.1,
+                devices.0,
+                devices.1,
+                if *feasible { "solved" } else { "infeasible" }
+            );
+        }
+        ProgressEvent::PipelineChosen {
+            stages,
+            microbatches,
+            predicted,
+            simulated,
+        } => {
+            eprintln!(
+                "[pp] chose {stages} stage(s) x {microbatches} \
+                 microbatch(es): predicted {:.3} ms, simulated {:.3} ms",
+                predicted * 1e3,
+                simulated * 1e3
+            );
+        }
         _ => {}
     }
 }
@@ -239,11 +284,128 @@ fn request_for(
     .with_backend(backend))
 }
 
+/// Read an artifact's `kind` tag without committing to a type.
+fn artifact_kind(path: &str) -> Result<String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {path}: {e}"))?;
+    let v = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    Ok(v.get("kind").as_str().unwrap_or("").to_string())
+}
+
+fn pp_opts_from(args: &Args) -> Result<PpOpts> {
+    let mut pp = PpOpts::default();
+    if let Some(k) = args.get("max-stages") {
+        pp.max_stages = k
+            .parse()
+            .map_err(|_| anyhow!("--max-stages needs an integer"))?;
+    }
+    if let Some(k) = args.get("min-stages") {
+        pp.min_stages = k
+            .parse()
+            .map_err(|_| anyhow!("--min-stages needs an integer"))?;
+    }
+    if let Some(mb) = args.get("microbatches") {
+        pp.microbatches = mb
+            .split(',')
+            .map(|x| {
+                x.trim().parse().map_err(|_| {
+                    anyhow!("--microbatches wants e.g. 1,2,4,8, got {x}")
+                })
+            })
+            .collect::<Result<Vec<usize>>>()?;
+    }
+    Ok(pp)
+}
+
+fn print_pipeline(sol: &PipelineSolution, args: &Args) -> Result<()> {
+    if args.has_flag("json") {
+        println!("{}", sol.to_json());
+        return Ok(());
+    }
+    println!("== pipeline plan ==");
+    println!("backend        : {}", sol.backend);
+    println!("stages         : {}", sol.stages.len());
+    println!("microbatches   : {}", sol.microbatches);
+    println!(
+        "sim step time  : {:.3} ms (predicted {:.3} ms)",
+        sol.iter_time * 1e3,
+        sol.predicted_time * 1e3
+    );
+    println!("achieved       : {:.3} PFLOPS", sol.pflops);
+    println!(
+        "max stage mem  : {:.2} GB of {:.2} GB budget",
+        sol.max_stage_mem / 1e9,
+        sol.budget / 1e9
+    );
+    for (s, st) in sol.stages.iter().enumerate() {
+        let p2p = st
+            .p2p_in
+            .as_ref()
+            .map(|l| format!("{:.3} ms in", l.round_trip() * 1e3))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "  stage {s}: groups [{}, {}), devs {:?}, mesh {:?}, \
+             t {:.3} ms, act {:.2} GB x{} in flight, p2p {}",
+            st.span.0,
+            st.span.1,
+            st.devices,
+            st.plan.mesh.shape,
+            st.stage_time() * 1e3,
+            st.act_bytes / 1e9,
+            st.in_flight,
+            p2p
+        );
+    }
+    Ok(())
+}
+
+fn cmd_plan_pp(args: &Args, model: &str) -> Result<()> {
+    // fail loudly instead of silently planning with different settings:
+    // stage solves are beam-only and pipeline plans bypass the cache
+    if let Some(b) = args.get("backend") {
+        if b != "beam" {
+            return Err(anyhow!(
+                "--pp solves every stage with the beam backend; \
+                 --backend {b} is not supported with --pp yet"
+            ));
+        }
+    }
+    if args.get("cache-dir").is_some() {
+        return Err(anyhow!(
+            "--pp plans are not served from the plan cache; drop \
+             --cache-dir (use --save-plan/--load-plan to persist them)"
+        ));
+    }
+    let cfg = model_for(model)?;
+    let g = gpt2(&cfg);
+    let cluster = cluster_for(args.get_or("cluster", "fig5"))?;
+    let dev = DeviceModel::a100_80gb();
+    let mut opts = opts_from(args);
+    opts.pp = Some(pp_opts_from(args)?);
+    let mut p = Planner::new(&g, &cluster, &dev).with_opts(opts);
+    if args.has_flag("progress") {
+        p = p.on_progress(narrate);
+    }
+    let sol = p.solve_pipeline()?.clone();
+    if let Some(path) = args.get("save-plan") {
+        sol.save(path)?;
+        eprintln!("pipeline plan saved to {path}");
+    }
+    print_pipeline(&sol, args)
+}
+
 fn cmd_plan(args: &Args) -> Result<()> {
     let model = args.get_or("model", "gpt2-mini");
 
     // replay path: the artifact already holds the full lowered plan
     if let Some(path) = args.get("load-plan") {
+        if artifact_kind(path)? == PipelineSolution::KIND {
+            let sol = PipelineSolution::load(path)?;
+            eprintln!(
+                "loaded pipeline plan from {path} (solve stages skipped)"
+            );
+            return print_pipeline(&sol, args);
+        }
         let g = gpt2(&model_for(model)?);
         let plan = CompiledPlan::load(path)?;
         if plan.graph_nodes != g.len() {
@@ -258,6 +420,11 @@ fn cmd_plan(args: &Args) -> Result<()> {
         }
         eprintln!("loaded plan from {path} (solve stages skipped)");
         return print_plan(&g, &plan, args);
+    }
+
+    // inter-op path: two-level stage x intra-op x ckpt planning
+    if args.has_flag("pp") {
+        return cmd_plan_pp(args, model);
     }
 
     let req = request_for(
@@ -284,14 +451,120 @@ fn cmd_plan(args: &Args) -> Result<()> {
 /// Step-time drift (relative) above which `verify --strict` fails.
 const VERIFY_MAX_DRIFT: f64 = 0.10;
 
+/// Verify a `pipeline-solution` artifact: structural validation, the
+/// microbatched 1F1B replay (P2P deadlock + per-stage budget checks),
+/// and — when a model is bound — a tick-by-tick intra-op replay of every
+/// nested stage plan against its re-extracted subgraph.
+fn cmd_verify_pipeline(path: &str, args: &Args) -> Result<()> {
+    let sol = PipelineSolution::load(path)?;
+    sol.validate()
+        .map_err(|e| anyhow!("verify FAILED: {path}: {e}"))?;
+    let dev = DeviceModel::a100_80gb();
+    let bound = args.get("model").is_some() || args.get("manifest").is_some();
+    let (stage_peaks, trace) = if bound {
+        let cfg = match args.get("manifest") {
+            Some(m) => Manifest::load(std::path::Path::new(m))?
+                .config
+                .gpt2_cfg(),
+            None => model_for(args.get_or("model", "gpt2-mini"))?,
+        };
+        let g = gpt2(&cfg);
+        sol.verify_against(&g, &dev)
+            .map_err(|e| anyhow!("verify FAILED: {path}: {e}"))?
+    } else {
+        let trace = sol
+            .replay_1f1b()
+            .map_err(|e| anyhow!("verify FAILED: {path}: {e}"))?;
+        (Vec::new(), trace)
+    };
+    let budget = match args.get("budget-gb") {
+        Some(gb) => gb.parse::<f64>().map_err(|_| {
+            anyhow!("--budget-gb needs a number, got {gb}")
+        })? * 1e9,
+        None => sol.budget,
+    };
+    let drift = trace.drift(sol.iter_time);
+
+    if let Some(p) = args.get("save-trace") {
+        trace.save(p)?;
+        eprintln!("trace saved to {p}");
+    }
+    if args.has_flag("json") {
+        println!("{}", trace.to_json());
+    } else {
+        println!("== verify {path} ==");
+        println!("backend          : {}", sol.backend);
+        println!(
+            "pipeline         : {} stage(s) x {} microbatch(es)",
+            sol.stages.len(),
+            sol.microbatches
+        );
+        println!(
+            "sim step time    : {:.3} ms (plan recorded {:.3} ms, \
+             drift {:+.2}%)",
+            trace.step_time * 1e3,
+            sol.iter_time * 1e3,
+            drift * 100.0
+        );
+        for (s, d) in trace.devices.iter().enumerate() {
+            println!(
+                "  stage {s} peak  : {:.3} GB of {:.3} GB budget",
+                d.peak_mem / 1e9,
+                budget / 1e9
+            );
+        }
+    }
+    for (s, d) in trace.devices.iter().enumerate() {
+        if d.peak_mem > budget {
+            return Err(anyhow!(
+                "verify FAILED: stage {s} simulated peak {:.3} GB \
+                 exceeds the {:.3} GB per-device budget",
+                d.peak_mem / 1e9,
+                budget / 1e9
+            ));
+        }
+    }
+    // full-batch intra-op replays of the nested plans: the flattened
+    // torch.utils.checkpoint replay of a multi-stage checkpointed block
+    // may retain slightly more than the nested rotor policy budgeted
+    // for, so allow the oracle's 5% slack
+    for (s, pk) in stage_peaks.iter().enumerate() {
+        if *pk > budget * 1.05 {
+            return Err(anyhow!(
+                "verify FAILED: stage {s} intra-op replay peak {:.3} GB \
+                 exceeds the {:.3} GB budget",
+                pk / 1e9,
+                budget / 1e9
+            ));
+        }
+    }
+    if args.has_flag("strict") && drift.abs() > VERIFY_MAX_DRIFT {
+        return Err(anyhow!(
+            "verify FAILED: simulated step time {:.3} ms drifts \
+             {:+.2}% from the recorded {:.3} ms (--strict allows ±{:.0}%)",
+            trace.step_time * 1e3,
+            drift * 100.0,
+            sol.iter_time * 1e3,
+            VERIFY_MAX_DRIFT * 100.0
+        ));
+    }
+    if !args.has_flag("json") {
+        println!("VERIFY OK");
+    }
+    Ok(())
+}
+
 fn cmd_verify(args: &Args) -> Result<()> {
     let path = args.positional.first().ok_or_else(|| {
         anyhow!(
-            "usage: automap verify <plan.json> [--model M | --manifest \
-             artifacts/manifest.json] [--budget-gb G] [--strict] \
-             [--save-trace t.json] [--json]"
+            "usage: automap verify <plan.json|pipeline.json> [--model M \
+             | --manifest artifacts/manifest.json] [--budget-gb G] \
+             [--strict] [--save-trace t.json] [--json]"
         )
     })?;
+    if artifact_kind(path)? == PipelineSolution::KIND {
+        return cmd_verify_pipeline(path, args);
+    }
     let plan = CompiledPlan::load(path)?;
     // structural validation first: a corrupt artifact (mismatched
     // collective, broken ckpt schedule, out-of-mesh spec) must fail
@@ -809,7 +1082,22 @@ fn main() -> Result<()> {
                 "usage: automap <plan|verify|batch|cache|cluster|profile|\
                  train|tp-check|table4> [--options]"
             );
-            println!("see rust/src/main.rs header for details");
+            println!(
+                "  plan     compile a plan (--pp for two-level pipeline \
+                 parallelism)"
+            );
+            println!(
+                "  verify   replay a saved CompiledPlan or \
+                 PipelineSolution artifact"
+            );
+            println!("  batch    plan a JSON manifest of requests concurrently");
+            println!("  cache    inspect/clear the on-disk plan cache");
+            println!("  cluster  probe a simulated cluster topology");
+            println!("  profile  symbolic model profile (FLOPs, memory)");
+            println!("  train    data-parallel training on logical PJRT devices");
+            println!("  tp-check tensor-parallel numerics vs serial");
+            println!("  table4   weak-scaling baseline comparison");
+            println!("see rust/src/main.rs header for per-command flags");
             Ok(())
         }
     }

@@ -1,0 +1,107 @@
+//! Inter-op pipeline parallelism (`pp`): the two-level planner that cuts
+//! the model into stages over cluster slices and runs the existing
+//! intra-op machinery *inside each stage*.
+//!
+//! The repo's staged [`Planner`](crate::api::Planner) automates the
+//! paper's intra-op dimension (sharding × activation checkpointing) on
+//! one device mesh. This module adds the missing inter-op dimension the
+//! abstract promises and Alpa (Zheng et al. 2022) formalizes: a dynamic
+//! program over the checkpoint linearization's group chain that jointly
+//! chooses
+//!
+//! * **stage cuts** — contiguous spans of linearized groups, carved into
+//!   free-standing graphs by [`subgraph::stage_subgraph`];
+//! * **submesh slices** — contiguous device ranges of the probed
+//!   cluster ([`ClusterInfo::slice`](crate::cluster::ClusterInfo::slice)),
+//!   one per stage, assigned in order;
+//! * **microbatch count** — minimizing the 1F1B pipeline latency
+//!   `(Σ tₛ + (B−1)·max tₛ)/B + max gₛ`, where `tₛ` is the stage's
+//!   full-batch fwd+bwd time (checkpoint recomputation and boundary P2P
+//!   included) and `gₛ` its exposed gradient-sync tail.
+//!
+//! Every candidate (span, device range) cell runs the *existing* staged
+//! compiler — intra-op sweep, per-stage rotor checkpoint DP under the
+//! per-stage budget, generator lowering — through a nested `Planner`
+//! sharing the caller's [`SolverGraphStore`](crate::api::SolverGraphStore),
+//! fanned out over [`util::pool`](crate::util::pool). Per Korthikanti et
+//! al. 2022, the checkpoint schedule is re-derived per stage: each
+//! stage's rotor sees only its own activation pressure, so cuts change
+//! what gets recomputed.
+//!
+//! The winning cut is *simulated*, not just predicted: the microbatched
+//! 1F1B replay ([`sim::pipeline`](crate::sim::pipeline)) reruns the
+//! chosen stages with P2P rendezvous between submeshes and a
+//! per-microbatch memory ledger, and the artifact records that simulated
+//! step time. A forced single-stage solve degenerates to exactly the
+//! staged planner's plan, byte for byte (property-tested).
+
+pub mod partition;
+pub mod subgraph;
+
+pub use partition::solve;
+pub use subgraph::{stage_subgraph, StageSubgraph};
+
+/// Inter-op planning options ([`PlanOpts::pp`](crate::api::PlanOpts)).
+#[derive(Debug, Clone)]
+pub struct PpOpts {
+    /// Candidate microbatch counts the partitioner may choose from.
+    pub microbatches: Vec<usize>,
+    /// Most stages a pipeline may have (clamped to devices and groups).
+    pub max_stages: usize,
+    /// Fewest stages allowed (tests force ≥ 2 to exercise real cuts;
+    /// 1 admits the degenerate single-stage plan).
+    pub min_stages: usize,
+    /// Work-balance pruning tolerance: a (span, range) cell is only
+    /// solved when the span's serial-work fraction is within this factor
+    /// of the range's device fraction. 1.0 = perfectly proportional
+    /// cells only; larger admits more skew.
+    pub balance: f64,
+}
+
+impl Default for PpOpts {
+    fn default() -> Self {
+        PpOpts {
+            microbatches: vec![1, 2, 4, 8],
+            max_stages: 4,
+            min_stages: 1,
+            balance: 4.0,
+        }
+    }
+}
+
+impl PpOpts {
+    /// Candidate microbatch counts, sanitized: deduplicated, sorted
+    /// ascending (ties in predicted latency resolve to fewer
+    /// microbatches), zeros dropped, never empty.
+    pub fn microbatch_candidates(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .microbatches
+            .iter()
+            .copied()
+            .filter(|&x| x > 0)
+            .collect();
+        if b.is_empty() {
+            b.push(1);
+        }
+        b.sort_unstable();
+        b.dedup();
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn microbatch_candidates_are_sane() {
+        let o = PpOpts {
+            microbatches: vec![4, 0, 2, 4, 1],
+            ..Default::default()
+        };
+        assert_eq!(o.microbatch_candidates(), vec![1, 2, 4]);
+        let empty =
+            PpOpts { microbatches: vec![0], ..Default::default() };
+        assert_eq!(empty.microbatch_candidates(), vec![1]);
+    }
+}

@@ -1,0 +1,543 @@
+//! The inter-op dynamic program: cut the linearized group chain into
+//! stages over contiguous cluster slices, solve each candidate stage with
+//! the existing intra-op compiler, and pick the (cuts, submeshes,
+//! microbatch count) tuple minimizing 1F1B pipeline latency.
+//!
+//! Shape of the search (Alpa's two-level decomposition, adapted):
+//!
+//! 1. **Cells.** A cell is a candidate stage: a group span `[i, j)` on a
+//!    device range `[a, a+k)`. Cells are enumerated by forward
+//!    reachability under the stage-count bounds, pruned by work balance
+//!    (a span doing 5% of the FLOPs never gets half the cluster), and
+//!    each surviving cell runs a full nested staged compile — intra-op
+//!    sweep, per-stage rotor checkpoint DP, lowering — in parallel over
+//!    the thread pool, sharing the caller's solver-graph store.
+//! 2. **Composition.** A forward DP walks group index × devices used ×
+//!    stage count, keeping a Pareto frontier over `(Σ t, max t, max g)`
+//!    per state — the three statistics the 1F1B latency
+//!    `(Σ t + (B−1)·max t)/B + max g` needs — so one DP serves every
+//!    candidate microbatch count. Boundary P2P (priced with the α-β
+//!    link model) is folded into the downstream stage's `t` at
+//!    composition time, when both sides of the cut are known.
+//! 3. **Selection.** Every completed frontier entry × microbatch count
+//!    is scored; the winner is *replayed* through the microbatched 1F1B
+//!    simulator and the artifact records the simulated step time.
+//!
+//! Determinism: cells are enumerated into a `BTreeSet`, evaluated with
+//! the order-preserving `parallel_map`, and the DP iterates states and
+//! cells in fixed order with first-wins tie-breaking.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::api::{BeamSolve, CompiledPlan, PipelineSolution,
+                 PipelineStagePlan, PlanOpts, Planner, ProgressEvent,
+                 Solve, SolverGraphStore};
+use crate::ckpt::{build_stages, common_nodes, linearize};
+use crate::cluster::ClusterInfo;
+use crate::gen::stage_boundary_p2p;
+use crate::graph::Graph;
+use crate::sim::pipeline::{replay_1f1b, stage_phases, StagePhases};
+use crate::sim::DeviceModel;
+use crate::util::pool::parallel_map;
+
+use super::{stage_subgraph, PpOpts};
+
+/// Target cap on nested stage solves per pipeline compile; when the
+/// enumeration exceeds it, the balance tolerance tightens
+/// (deterministically) until the cell count fits or the tolerance
+/// bottoms out at 1.2× — near-proportional cells are never pruned away
+/// entirely, so the cap is a strong lever, not a hard guarantee.
+const MAX_CELLS: usize = 192;
+
+/// A cell key: group span `[i, j)` on device range `[a, a+k)`.
+type CellKey = (usize, usize, usize, usize);
+
+/// A solved candidate stage.
+struct Cell {
+    plan: CompiledPlan,
+    phases: StagePhases,
+    boundary_in: f64,
+}
+
+struct CellOut {
+    cell: Option<Cell>,
+    ms: f64,
+}
+
+/// One Pareto-frontier entry of the composition DP.
+struct Entry {
+    /// Σ of stage times so far (fwd + bwd + boundary P2P, full batch).
+    sum: f64,
+    /// max stage time so far.
+    mx: f64,
+    /// max exposed gradient-sync tail so far.
+    mg: f64,
+    /// Index into the cell key list for this entry's last stage.
+    cell: usize,
+    /// Previous entry in the chain (None = this is the first stage).
+    prev: Option<usize>,
+    /// Stages in the chain including this one.
+    stages: usize,
+}
+
+fn dominates(a: &Entry, b: &Entry) -> bool {
+    a.sum <= b.sum && a.mx <= b.mx && a.mg <= b.mg
+}
+
+/// Insert `e` into `slot` unless an incumbent dominates it (ties favor
+/// the incumbent — first wins); evict incumbents `e` dominates.
+fn pareto_push(arena: &mut Vec<Entry>, slot: &mut Vec<usize>, e: Entry) {
+    if slot.iter().any(|&i| dominates(&arena[i], &e)) {
+        return;
+    }
+    slot.retain(|&i| !dominates(&e, &arena[i]));
+    arena.push(e);
+    slot.push(arena.len() - 1);
+}
+
+fn enumerate_cells(
+    n_groups: usize,
+    n_devs: usize,
+    min_s: usize,
+    max_s: usize,
+    work: &[f64],
+    bal: f64,
+) -> Vec<CellKey> {
+    let total: f64 = work.iter().sum();
+    let mut pre = vec![0.0; n_groups + 1];
+    for i in 0..n_groups {
+        pre[i + 1] = pre[i] + work[i];
+    }
+    let balanced = |i: usize, j: usize, k: usize| -> bool {
+        if total <= 0.0 || (i == 0 && j == n_groups && k == n_devs) {
+            return true;
+        }
+        let wf = (pre[j] - pre[i]) / total;
+        let df = k as f64 / n_devs as f64;
+        wf <= df * bal + 1e-12 && wf * bal + 1e-12 >= df
+    };
+    let mut keys: BTreeSet<CellKey> = BTreeSet::new();
+    let mut level: BTreeSet<(usize, usize)> = BTreeSet::new();
+    level.insert((0, 0));
+    for s in 0..max_s {
+        let mut next: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for &(i, d) in &level {
+            for j in i + 1..=n_groups {
+                for k in 1..=(n_devs - d) {
+                    let complete = j == n_groups;
+                    if complete {
+                        if d + k != n_devs || s + 1 < min_s {
+                            continue;
+                        }
+                    } else if s + 1 >= max_s || d + k >= n_devs {
+                        continue;
+                    }
+                    if !balanced(i, j, k) {
+                        continue;
+                    }
+                    keys.insert((i, j, d, k));
+                    if !complete {
+                        next.insert((j, d + k));
+                    }
+                }
+            }
+        }
+        level = next;
+        if level.is_empty() {
+            break;
+        }
+    }
+    keys.into_iter().collect()
+}
+
+/// Solve the two-level pipeline plan. `budget` is the per-device memory
+/// budget every stage compiles under; `total_flops` feeds the headline
+/// PFLOPS. Progress events (`PipelineCellSolved`, `PipelineChosen`) go
+/// to `on_ev`.
+#[allow(clippy::too_many_arguments)]
+pub fn solve(
+    g: &Graph,
+    info: &ClusterInfo,
+    dev: &DeviceModel,
+    opts: &PlanOpts,
+    pp: &PpOpts,
+    budget: f64,
+    total_flops: f64,
+    store: &Arc<SolverGraphStore>,
+    on_ev: &mut dyn FnMut(ProgressEvent),
+) -> Result<PipelineSolution> {
+    let common = common_nodes(g);
+    let groups = linearize(g, &common);
+    let n_groups = groups.len();
+    let n_devs = info.n;
+    if n_groups == 0 {
+        bail!("'{}' has no differentiable stages to pipeline", g.name);
+    }
+    if n_devs == 0 {
+        bail!("cannot pipeline over an empty cluster");
+    }
+    let max_s = pp.max_stages.min(n_devs).min(n_groups).max(1);
+    let min_s = pp.min_stages.max(1).min(max_s);
+
+    // serial per-group work drives the balance pruning
+    let serial = build_stages(g, &groups, dev, None);
+    let work: Vec<f64> = serial
+        .iter()
+        .map(|s| s.uf + s.uf_comm + s.ub + s.ub_comm)
+        .collect();
+
+    let mut bal = pp.balance.max(1.0);
+    let key_list: Vec<CellKey> = loop {
+        let keys =
+            enumerate_cells(n_groups, n_devs, min_s, max_s, &work, bal);
+        if keys.len() <= MAX_CELLS || bal <= 1.2 {
+            break keys;
+        }
+        bal = (bal * 0.7).max(1.2);
+    };
+    if key_list.is_empty() {
+        bail!(
+            "no candidate pipeline stages for {n_groups} groups over \
+             {n_devs} device(s) (min {min_s}, max {max_s} stages)"
+        );
+    }
+
+    // nested stage compiles use the default beam backend under the same
+    // intra-op options, with the budget pinned explicitly. Any
+    // `mesh_shapes` restriction is dropped: those shapes are sized for
+    // the full cluster and would be unrealizable on smaller stage
+    // submeshes, silently killing every multi-stage cell.
+    let nested = PlanOpts {
+        pp: None,
+        budget: Some(budget),
+        mesh_shapes: None,
+        ..opts.clone()
+    };
+
+    let cells: Vec<CellOut> = parallel_map(&key_list, |&(i, j, a, k)| {
+        let t0 = std::time::Instant::now();
+        let ms = |t0: std::time::Instant| t0.elapsed().as_secs_f64() * 1e3;
+        let full = i == 0 && j == n_groups;
+        let owned;
+        let (graph, boundary_in): (&Graph, f64) = if full {
+            // the degenerate full-span stage is the original graph —
+            // not a copy — so a 1-stage pipeline reproduces the staged
+            // planner's compile byte for byte
+            (g, 0.0)
+        } else {
+            match stage_subgraph(g, &common, &groups, i, j) {
+                Ok(s) => {
+                    owned = s;
+                    (&owned.graph, owned.boundary_in_bytes)
+                }
+                Err(_) => return CellOut { cell: None, ms: ms(t0) },
+            }
+        };
+        let devs: Vec<usize> = (a..a + k).collect();
+        let sliced = info.slice(&devs);
+        let mut planner = Planner::with_info(graph, sliced, dev)
+            .with_opts(nested.clone())
+            .with_store(Arc::clone(store));
+        let plan = match planner.lower() {
+            Ok(p) => p,
+            Err(_) => return CellOut { cell: None, ms: ms(t0) },
+        };
+        let phases =
+            match stage_phases(graph, &plan.mesh, &plan.plan, dev) {
+                Ok(p) => p,
+                Err(_) => return CellOut { cell: None, ms: ms(t0) },
+            };
+        CellOut {
+            cell: Some(Cell { plan, phases, boundary_in }),
+            ms: ms(t0),
+        }
+    });
+    for (ci, &(i, j, a, k)) in key_list.iter().enumerate() {
+        on_ev(ProgressEvent::PipelineCellSolved {
+            span: (i, j),
+            devices: (a, a + k),
+            feasible: cells[ci].cell.is_some(),
+            ms: cells[ci].ms,
+        });
+    }
+
+    // -- composition DP ---------------------------------------------------
+    // Frontier states carry (next group, devices used, last stage's
+    // device count): the next boundary's P2P price depends on the last
+    // stage's device *range*, so dominance pruning is only sound among
+    // entries with identical boundary context. (Completed entries have
+    // no further boundary, so `done` is one frontier.)
+    let mut arena: Vec<Entry> = Vec::new();
+    let mut done: Vec<usize> = Vec::new();
+    let mut frontier: BTreeMap<(usize, usize, usize), Vec<usize>> =
+        BTreeMap::new();
+    for s in 0..max_s {
+        let states: Vec<((usize, usize, usize), Vec<Option<usize>>)> =
+            if s == 0 {
+                vec![((0, 0, 0), vec![None])]
+            } else {
+                std::mem::take(&mut frontier)
+                    .into_iter()
+                    .map(|(st, v)| {
+                        (st, v.into_iter().map(Some).collect())
+                    })
+                    .collect()
+            };
+        if states.is_empty() {
+            break;
+        }
+        for ((i, d, _last_k), parents) in states {
+            for (ci, &(ki, kj, ka, kk)) in key_list.iter().enumerate() {
+                if ki != i || ka != d {
+                    continue;
+                }
+                let Some(cell) = cells[ci].cell.as_ref() else {
+                    continue;
+                };
+                let complete = kj == n_groups;
+                if complete {
+                    if d + kk != n_devs || s + 1 < min_s {
+                        continue;
+                    }
+                } else if s + 1 >= max_s || d + kk >= n_devs {
+                    continue;
+                }
+                let these: Vec<usize> = (ka..ka + kk).collect();
+                for &prev in &parents {
+                    let (psum, pmx, pmg, p2p) = match prev {
+                        None => (0.0, 0.0, 0.0, 0.0),
+                        Some(pi) => {
+                            let (_, _, pa, pk) =
+                                key_list[arena[pi].cell];
+                            let prev_devs: Vec<usize> =
+                                (pa..pa + pk).collect();
+                            let link = stage_boundary_p2p(
+                                info,
+                                s - 1,
+                                s,
+                                &prev_devs,
+                                &these,
+                                cell.boundary_in,
+                            );
+                            (
+                                arena[pi].sum,
+                                arena[pi].mx,
+                                arena[pi].mg,
+                                link.round_trip(),
+                            )
+                        }
+                    };
+                    let t = cell.phases.fwd + cell.phases.bwd + p2p;
+                    let e = Entry {
+                        sum: psum + t,
+                        mx: pmx.max(t),
+                        mg: pmg.max(cell.phases.exposed_grad),
+                        cell: ci,
+                        prev,
+                        stages: s + 1,
+                    };
+                    if complete {
+                        pareto_push(&mut arena, &mut done, e);
+                    } else {
+                        let slot = frontier
+                            .entry((kj, d + kk, kk))
+                            .or_default();
+                        pareto_push(&mut arena, slot, e);
+                    }
+                }
+            }
+        }
+    }
+    if done.is_empty() {
+        bail!(
+            "no feasible pipeline partition of '{}' over {n_devs} \
+             device(s) under the {:.2} GB budget",
+            g.name,
+            budget / 1e9
+        );
+    }
+
+    // -- selection --------------------------------------------------------
+    let micro = pp.microbatch_candidates();
+    let mut best: Option<(f64, usize, usize)> = None; // (lat, B, entry)
+    for &ei in &done {
+        let e = &arena[ei];
+        for &b in &micro {
+            let lat =
+                (e.sum + (b as f64 - 1.0) * e.mx) / b as f64 + e.mg;
+            if best.map(|(bl, _, _)| lat < bl).unwrap_or(true) {
+                best = Some((lat, b, ei));
+            }
+        }
+    }
+    let (predicted, microbatches, mut ei) =
+        best.ok_or_else(|| anyhow!("empty microbatch candidate list"))?;
+
+    let mut chain: Vec<usize> = Vec::new();
+    loop {
+        chain.push(ei);
+        match arena[ei].prev {
+            Some(p) => ei = p,
+            None => break,
+        }
+    }
+    chain.reverse();
+    let s_total = chain.len();
+
+    let mut stages_out: Vec<PipelineStagePlan> = Vec::new();
+    for (s, &aei) in chain.iter().enumerate() {
+        let ci = arena[aei].cell;
+        let (i, j, a, k) = key_list[ci];
+        let cell = cells[ci].cell.as_ref().unwrap();
+        let devices: Vec<usize> = (a..a + k).collect();
+        let p2p_in = if s == 0 {
+            None
+        } else {
+            Some(stage_boundary_p2p(
+                info,
+                s - 1,
+                s,
+                &stages_out[s - 1].devices,
+                &devices,
+                cell.boundary_in,
+            ))
+        };
+        stages_out.push(PipelineStagePlan {
+            span: (i, j),
+            devices,
+            plan: cell.plan.clone(),
+            fwd: cell.phases.fwd,
+            bwd: cell.phases.bwd,
+            exposed_grad: cell.phases.exposed_grad,
+            act_bytes: cell.phases.act_bytes,
+            fwd_transient: cell.phases.fwd_transient,
+            bwd_transient: cell.phases.bwd_transient,
+            param_bytes: cell.phases.param_bytes,
+            in_flight: (s_total - s).min(microbatches),
+            p2p_in,
+        });
+    }
+
+    // the winner is simulated, not just predicted: the artifact records
+    // the 1F1B replay's step time as its headline number
+    let specs: Vec<_> = stages_out.iter().map(|s| s.spec()).collect();
+    let trace = replay_1f1b(&specs, microbatches)?;
+    let max_stage_mem = trace
+        .devices
+        .iter()
+        .map(|d| d.peak_mem)
+        .fold(0.0, f64::max);
+
+    on_ev(ProgressEvent::PipelineChosen {
+        stages: s_total,
+        microbatches,
+        predicted,
+        simulated: trace.step_time,
+    });
+
+    Ok(PipelineSolution {
+        backend: format!("pp+{}", BeamSolve(opts.solve).name()),
+        graph_nodes: g.len(),
+        n_groups,
+        microbatches,
+        budget,
+        stages: stages_out,
+        iter_time: trace.step_time,
+        predicted_time: predicted,
+        pflops: total_flops / trace.step_time.max(1e-12) / 1e15,
+        max_stage_mem,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{detect, SimCluster};
+    use crate::graph::models::mlp;
+    use crate::solver::SolveOpts;
+
+    fn fast() -> PlanOpts {
+        PlanOpts {
+            sweep: 2,
+            solve: SolveOpts {
+                beam_width: 8,
+                anneal_iters: 60,
+                lagrange_iters: 3,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn forced_two_stage_mlp_partitions_groups_and_devices() {
+        let g = mlp(16, &[64, 64, 64, 64, 10]);
+        let info = detect(&SimCluster::fully_connected(2), 42);
+        let dev = DeviceModel::a100_80gb();
+        let store = Arc::new(SolverGraphStore::new());
+        let pp = PpOpts {
+            min_stages: 2,
+            max_stages: 2,
+            microbatches: vec![2, 4],
+            ..Default::default()
+        };
+        let budget = dev.memory * 0.9;
+        let mut events = 0usize;
+        let sol = solve(
+            &g,
+            &info,
+            &dev,
+            &fast(),
+            &pp,
+            budget,
+            1e12,
+            &store,
+            &mut |_| events += 1,
+        )
+        .expect("two-stage mlp pipeline");
+        assert_eq!(sol.stages.len(), 2);
+        assert!(events > 0, "cell events must be emitted");
+        // spans partition the chain, devices partition the cluster
+        assert_eq!(sol.stages[0].span.0, 0);
+        assert_eq!(sol.stages[0].span.1, sol.stages[1].span.0);
+        assert_eq!(sol.stages[1].span.1, sol.n_groups);
+        assert_eq!(sol.stages[0].devices, vec![0]);
+        assert_eq!(sol.stages[1].devices, vec![1]);
+        // stage 1 carries the boundary link; stage 0 does not
+        assert!(sol.stages[0].p2p_in.is_none());
+        let link = sol.stages[1].p2p_in.as_ref().expect("boundary");
+        assert!(link.bytes_fwd > 0.0);
+        // in-flight follows min(S - s, B)
+        assert_eq!(sol.stages[0].in_flight, 2);
+        assert_eq!(sol.stages[1].in_flight, 1);
+        // the replay produced the headline number
+        assert!(sol.iter_time > 0.0 && sol.iter_time.is_finite());
+        assert!(sol.max_stage_mem <= budget * 1.05);
+    }
+
+    #[test]
+    fn impossible_forcing_fails_loudly() {
+        let g = mlp(16, &[32, 10]);
+        let info = detect(&SimCluster::single(), 1);
+        let dev = DeviceModel::a100_80gb();
+        let store = Arc::new(SolverGraphStore::new());
+        // an absurd budget: every cell's intra-op solve must fail
+        let err = solve(
+            &g,
+            &info,
+            &dev,
+            &fast(),
+            &PpOpts::default(),
+            64.0,
+            1e12,
+            &store,
+            &mut |_| {},
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("no feasible pipeline"), "{err}");
+    }
+}

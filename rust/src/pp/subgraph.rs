@@ -1,0 +1,296 @@
+//! Stage subgraph extraction: carve a contiguous span of linearized
+//! groups out of the model graph so the existing intra-op machinery
+//! (solver graph, rotor DP, generator) can compile it as a free-standing
+//! model.
+//!
+//! The cut respects the same structure the checkpoint linearization
+//! established: a stage owns the differentiable nodes of its groups, and
+//! it *copies* the support set those nodes need — parameters, constants,
+//! and common (non-differentiable) ancestors per Lemma 5.4 — because
+//! support tensors are stage-resident state, not pipeline traffic.
+//! Activations produced by earlier groups become fresh `Input`
+//! placeholders (the tensors the previous stage will P2P-send every
+//! microbatch), and values consumed by later groups feed a synthesized
+//! `Output` sink (what this stage sends downstream).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::graph::op::{Op, PlaceholderKind};
+use crate::graph::{Graph, Node, NodeId};
+
+/// One extracted stage: the free-standing graph plus the boundary
+/// bookkeeping the partitioner prices.
+#[derive(Debug, Clone)]
+pub struct StageSubgraph {
+    pub graph: Graph,
+    /// Group span `[lo, hi)` this stage owns.
+    pub span: (usize, usize),
+    /// Original node id -> subgraph node id, for every copied node.
+    pub node_map: BTreeMap<NodeId, NodeId>,
+    /// Bytes of activations entering from earlier groups (full batch) —
+    /// the forward P2P payload of this stage's upstream boundary.
+    pub boundary_in_bytes: f64,
+    /// Bytes of activations leaving to later groups (full batch).
+    pub boundary_out_bytes: f64,
+}
+
+/// Extract the subgraph for groups `[lo, hi)` of `groups`. `common` is
+/// the Lemma-5.4 common-node marking of `g` (the same one `linearize`
+/// consumed — pass the identical vector or the cut will disagree with
+/// the chain it is cutting).
+pub fn stage_subgraph(
+    g: &Graph,
+    common: &[bool],
+    groups: &[Vec<NodeId>],
+    lo: usize,
+    hi: usize,
+) -> Result<StageSubgraph> {
+    if lo >= hi || hi > groups.len() {
+        bail!("invalid stage span [{lo}, {hi}) of {} groups", groups.len());
+    }
+    let n = g.len();
+    let mut in_span = vec![false; n];
+    for grp in &groups[lo..hi] {
+        for &id in grp {
+            in_span[id] = true;
+        }
+    }
+    let last_span = hi == groups.len();
+
+    // keep = span nodes + the support closure (placeholders and common
+    // nodes reachable walking *up* through support-only edges). A common
+    // node fed by a non-common activation outside the span is cut like
+    // any other activation (stub below).
+    let supportable = |id: NodeId| -> bool {
+        common[id] || matches!(g.node(id).op, Op::Placeholder(_))
+    };
+    let mut keep = in_span.clone();
+    // the original Output sink rides with the last stage
+    if last_span {
+        for out in g.outputs() {
+            keep[out] = true;
+        }
+    }
+    let mut stack: Vec<NodeId> =
+        (0..n).filter(|&id| keep[id]).collect();
+    while let Some(id) = stack.pop() {
+        for &inp in &g.node(id).inputs {
+            if !keep[inp] && supportable(inp) {
+                keep[inp] = true;
+                stack.push(inp);
+            }
+        }
+    }
+
+    // stubs: kept nodes consuming a non-kept producer get an Input
+    // placeholder in the producer's topological slot
+    let mut stub = vec![false; n];
+    for id in 0..n {
+        if !keep[id] {
+            continue;
+        }
+        for &inp in &g.node(id).inputs {
+            if !keep[inp] {
+                stub[inp] = true;
+            }
+        }
+    }
+
+    // emit in original topological order; ids are positional
+    let mut node_map: BTreeMap<NodeId, NodeId> = BTreeMap::new();
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut boundary_in = 0.0;
+    for id in 0..n {
+        if stub[id] {
+            let src = g.node(id);
+            boundary_in += src.out.bytes() as f64;
+            let nid = nodes.len();
+            node_map.insert(id, nid);
+            nodes.push(Node {
+                id: nid,
+                name: format!("pp_in.{}", src.name),
+                op: Op::Placeholder(PlaceholderKind::Input),
+                inputs: Vec::new(),
+                out: src.out.clone(),
+            });
+        } else if keep[id] {
+            let src = g.node(id);
+            let nid = nodes.len();
+            let inputs = src
+                .inputs
+                .iter()
+                .map(|i| node_map[i])
+                .collect::<Vec<_>>();
+            node_map.insert(id, nid);
+            nodes.push(Node {
+                id: nid,
+                name: src.name.clone(),
+                op: src.op.clone(),
+                inputs,
+                out: src.out.clone(),
+            });
+        }
+    }
+
+    // boundary out: kept span nodes with a consumer that was not copied
+    let users = g.users();
+    let mut boundary_out = 0.0;
+    let mut out_ids: Vec<NodeId> = Vec::new();
+    for id in 0..n {
+        if !in_span[id] || stub[id] {
+            continue;
+        }
+        if users[id].iter().any(|&u| !keep[u]) {
+            out_ids.push(node_map[&id]);
+            boundary_out += g.node(id).out.bytes() as f64;
+        }
+    }
+    if !last_span {
+        if out_ids.is_empty() {
+            bail!(
+                "stage [{lo}, {hi}) produces nothing for later stages — \
+                 not a valid pipeline cut"
+            );
+        }
+        let nid = nodes.len();
+        let meta = nodes[out_ids[0]].out.clone();
+        nodes.push(Node {
+            id: nid,
+            name: format!("pp_out.{lo}_{hi}"),
+            op: Op::Output,
+            inputs: out_ids,
+            out: meta,
+        });
+    }
+
+    let graph = Graph {
+        nodes,
+        name: format!("{}.pp{lo}_{hi}", g.name),
+    };
+    graph.validate().map_err(|e| {
+        anyhow::anyhow!("stage [{lo}, {hi}) subgraph invalid: {e}")
+    })?;
+    Ok(StageSubgraph {
+        graph,
+        span: (lo, hi),
+        node_map,
+        boundary_in_bytes: boundary_in,
+        boundary_out_bytes: boundary_out,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::{common_nodes, linearize};
+    use crate::graph::models::{gpt2, mlp, Gpt2Cfg};
+
+    fn cut_all(g: &Graph) -> (Vec<bool>, Vec<Vec<NodeId>>) {
+        let common = common_nodes(g);
+        let groups = linearize(g, &common);
+        (common, groups)
+    }
+
+    #[test]
+    fn two_way_cut_of_an_mlp_partitions_the_chain() {
+        let g = mlp(8, &[32, 32, 32, 10]);
+        let (common, groups) = cut_all(&g);
+        let mid = groups.len() / 2;
+        let a = stage_subgraph(&g, &common, &groups, 0, mid).unwrap();
+        let b = stage_subgraph(&g, &common, &groups, mid, groups.len())
+            .unwrap();
+        // stage 0 starts from the model input (no stubs), stage 1 from a
+        // boundary stub of matching bytes
+        assert_eq!(a.boundary_in_bytes, 0.0);
+        assert!(a.boundary_out_bytes > 0.0);
+        assert_eq!(b.boundary_in_bytes, a.boundary_out_bytes);
+        // both stages validate and own disjoint matmuls covering the
+        // original count
+        let mm = |g: &Graph| {
+            g.nodes
+                .iter()
+                .filter(|n| matches!(n.op, Op::Matmul))
+                .count()
+        };
+        assert_eq!(mm(&a.graph) + mm(&b.graph), mm(&g));
+        // stage params partition the model params
+        assert_eq!(
+            a.graph.param_bytes() + b.graph.param_bytes(),
+            g.param_bytes()
+        );
+    }
+
+    #[test]
+    fn full_span_copies_the_graph_losslessly() {
+        let g = mlp(8, &[16, 16, 10]);
+        let (common, groups) = cut_all(&g);
+        let s =
+            stage_subgraph(&g, &common, &groups, 0, groups.len()).unwrap();
+        assert_eq!(s.graph.len(), g.len());
+        assert_eq!(s.boundary_in_bytes, 0.0);
+        for (a, b) in s.graph.nodes.iter().zip(&g.nodes) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.inputs, b.inputs);
+        }
+    }
+
+    #[test]
+    fn gpt2_stage_copies_masks_not_activations() {
+        let g = gpt2(&Gpt2Cfg::mini());
+        let (common, groups) = cut_all(&g);
+        // cut right after the first group: every attention block lands
+        // in the tail, so the mask must be copied there
+        let mid = 1;
+        let s =
+            stage_subgraph(&g, &common, &groups, mid, groups.len())
+                .unwrap();
+        // the causal mask is support state: copied, not stubbed
+        assert!(
+            s.graph
+                .nodes
+                .iter()
+                .any(|n| n.name == "causal_mask"),
+            "common const must be copied into the stage"
+        );
+        // exactly the residual-stream activations arrive as stubs
+        let stubs: Vec<&str> = s
+            .graph
+            .nodes
+            .iter()
+            .filter(|n| n.name.starts_with("pp_in."))
+            .map(|n| n.name.as_str())
+            .collect();
+        assert!(!stubs.is_empty(), "mid-model stage needs inputs");
+        assert!(s.boundary_in_bytes > 0.0);
+        s.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn every_two_way_gpt2_cut_is_valid() {
+        let g = gpt2(&Gpt2Cfg::mini());
+        let (common, groups) = cut_all(&g);
+        for mid in 1..groups.len() {
+            let a = stage_subgraph(&g, &common, &groups, 0, mid)
+                .unwrap_or_else(|e| panic!("cut {mid} head: {e}"));
+            let b =
+                stage_subgraph(&g, &common, &groups, mid, groups.len())
+                    .unwrap_or_else(|e| panic!("cut {mid} tail: {e}"));
+            assert_eq!(a.boundary_out_bytes, b.boundary_in_bytes,
+                       "boundary mismatch at cut {mid}");
+        }
+    }
+
+    #[test]
+    fn bad_spans_are_rejected() {
+        let g = mlp(8, &[16, 10]);
+        let (common, groups) = cut_all(&g);
+        assert!(stage_subgraph(&g, &common, &groups, 1, 1).is_err());
+        assert!(
+            stage_subgraph(&g, &common, &groups, 0, groups.len() + 1)
+                .is_err()
+        );
+    }
+}

@@ -1,10 +1,42 @@
 //! Rust-side collectives over host tensors: the logical-device layer that
 //! stitches per-shard PJRT executions into one parallel step (the paper's
-//! inserted communication nodes, executed for real).
+//! inserted communication nodes, executed for real) — plus the α-β
+//! pricing for point-to-point send/recv, the one communication pattern
+//! collectives don't cover. Collectives are priced per mesh axis in
+//! [`DeviceMesh::collective_time`](crate::cluster::DeviceMesh::collective_time);
+//! P2P has no axis (it crosses *between* meshes — pipeline-stage
+//! boundaries), so its pricing lives here with the transport layer.
 
 use anyhow::Result;
 
 use super::tensor::HostTensor;
+
+/// α-β time for a point-to-point transfer of `bytes` over one link:
+/// latency `alpha` (seconds) plus `bytes / bandwidth`. This is the price
+/// of the inter-stage activation/gradient sends the pipeline planner
+/// inserts (a collective never models these: only two ranks talk).
+/// Zero-byte messages still pay the latency term — a microbatch
+/// rendezvous is never free.
+pub fn p2p_time(alpha: f64, bandwidth: f64, bytes: f64) -> f64 {
+    if bandwidth <= 0.0 {
+        return f64::INFINITY;
+    }
+    alpha + bytes.max(0.0) / bandwidth
+}
+
+/// Paired send/recv in one rendezvous (1F1B's
+/// `send_forward_recv_backward`): the link is full-duplex, so the two
+/// directions overlap and the pair costs one latency plus the *larger*
+/// of the two serialization times — never cheaper than either transfer
+/// alone, never as expensive as running them back to back.
+pub fn send_recv_time(
+    alpha: f64,
+    bandwidth: f64,
+    send_bytes: f64,
+    recv_bytes: f64,
+) -> f64 {
+    p2p_time(alpha, bandwidth, send_bytes.max(recv_bytes))
+}
 
 /// In-place sum across replicas (ring all-reduce semantics).
 pub fn all_reduce_sum(replicas: &mut [HostTensor]) -> Result<()> {
@@ -81,5 +113,28 @@ mod tests {
         let mut r = vec![HostTensor::f32(vec![1], vec![7.0])];
         all_reduce_sum(&mut r).unwrap();
         assert_eq!(r[0].as_f32().unwrap(), &[7.0]);
+    }
+
+    #[test]
+    fn p2p_pricing_is_alpha_beta() {
+        // 1 GB over 10 GB/s + 5 µs latency = 100.005 ms
+        let t = p2p_time(5e-6, 10e9, 1e9);
+        assert!((t - 0.100_005).abs() < 1e-12, "{t}");
+        // zero bytes still pay latency
+        assert_eq!(p2p_time(5e-6, 10e9, 0.0), 5e-6);
+        // dead link is infinitely expensive, not a panic
+        assert!(p2p_time(1e-6, 0.0, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn send_recv_overlaps_full_duplex() {
+        let a = 2e-6;
+        let bw = 1e9;
+        let pair = send_recv_time(a, bw, 8e6, 2e6);
+        // bounded below by the larger one-way transfer, above by the sum
+        assert_eq!(pair, p2p_time(a, bw, 8e6));
+        assert!(pair < p2p_time(a, bw, 8e6) + p2p_time(a, bw, 2e6));
+        // symmetric in direction
+        assert_eq!(pair, send_recv_time(a, bw, 2e6, 8e6));
     }
 }

@@ -14,7 +14,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
-pub use collective::{all_gather_concat, all_reduce_mean, all_reduce_sum};
+pub use collective::{all_gather_concat, all_reduce_mean, all_reduce_sum,
+                     p2p_time, send_recv_time};
 pub use manifest::{ArtifactInfo, Manifest};
 pub use tensor::HostTensor;
 

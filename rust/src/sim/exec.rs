@@ -98,7 +98,7 @@ pub enum SimOp {
     },
 }
 
-fn coll_sig(label: &str, secs: f64, group: &[usize]) -> String {
+pub(crate) fn coll_sig(label: &str, secs: f64, group: &[usize]) -> String {
     let mut h = StableHasher::new();
     h.write_str(label);
     h.write_f64(secs);
@@ -658,7 +658,7 @@ pub fn validate_exec(
 /// Rebuild the per-node times the checkpoint stage derived from the
 /// sharding solution — replay must price stages exactly as the planner
 /// did, or the oracle would compare apples to oranges.
-fn times_from_plan(
+pub(crate) fn times_from_plan(
     g: &Graph,
     ep: &ExecutionPlan,
     mesh: &DeviceMesh,

@@ -6,10 +6,13 @@
 pub mod baselines;
 pub mod device;
 pub mod exec;
+pub mod pipeline;
 pub mod trace;
 
 pub use baselines::{ddp, megatron_1d, optimus_2d, tp_3d, SimReport};
 pub use device::DeviceModel;
 pub use exec::{exposed_grad, replay_analytic, replay_exec, run_programs,
                simulate_schedule, validate_exec, SimOp, OVERLAP_FRAC};
+pub use pipeline::{replay_1f1b, stage_phases, PipelineStageSpec,
+                   StagePhases};
 pub use trace::{DeviceTimeline, EventKind, SimTrace, TraceEvent};

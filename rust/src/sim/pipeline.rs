@@ -1,0 +1,590 @@
+//! Microbatched 1F1B pipeline replay — the inter-op extension of the
+//! discrete-event executor (`sim::exec`).
+//!
+//! The intra-op replayer models one SPMD mesh: every device runs the same
+//! program and collectives rendezvous along mesh axes. Pipeline
+//! parallelism breaks that symmetry — each *stage* owns a submesh and a
+//! slice of the model, and stages talk through point-to-point transfers,
+//! not collectives. This module models each stage as one logical queue
+//! (SPMD *within* a stage means one queue per stage suffices), emits the
+//! standard non-interleaved 1F1B schedule per stage — warmup forwards,
+//! steady one-forward-one-backward with Megatron-style *combined*
+//! `send_forward_recv_backward` rendezvous, cooldown backwards — and runs
+//! it through the same [`run_programs`] engine, so P2P deadlocks and
+//! mismatched boundary transfers are detected exactly like collective
+//! bugs are in the intra-op replay.
+//!
+//! The combined steady-state ops are not an optimization nicety: with
+//! strict in-order rendezvous, separate send-forward and recv-backward
+//! ops on one boundary interleave differently on the two sides and
+//! deadlock. Pairing them (as Megatron's schedule does) makes both sides
+//! post the boundary's ops in one agreed total order — which this module
+//! relies on and the oracle tests exercise for many (stages,
+//! microbatches) shapes.
+//!
+//! Memory is a per-microbatch ledger: a forward retains `act/B` (the
+//! stage's full-batch retained set split over `B` microbatches), the
+//! matching backward frees it, and 1F1B's in-flight bound
+//! `min(S - s, B)` emerges from the schedule rather than being assumed.
+//! Per-stage parameters are allocated up front by a zero-time op, so one
+//! trace "device" ledger per stage starts at that stage's own resident
+//! model data.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::ckpt::{build_stages, common_nodes, linearize, Block};
+use crate::cluster::DeviceMesh;
+use crate::gen::{CommReason, ExecutionPlan, P2pTransfer};
+use crate::graph::op::Op;
+use crate::graph::Graph;
+use crate::sim::DeviceModel;
+
+use super::exec::{coll_sig, exposed_grad, run_programs, times_from_plan,
+                  validate_exec, SimOp};
+use super::trace::{EventKind, SimTrace};
+
+/// Aggregate phase costs of one compiled pipeline stage, derived from its
+/// lowered intra-op plan with exactly the planner's accounting (so the
+/// per-stage numbers the 1F1B replay consumes are the ones the intra-op
+/// oracle already validates).
+#[derive(Debug, Clone, Default)]
+pub struct StagePhases {
+    /// Full-batch forward sweep: stage compute + correctness comm +
+    /// resharding collectives (run once, on the forward, per the shared
+    /// modeling contract).
+    pub fwd: f64,
+    /// Full-batch backward sweep: backward compute + correctness comm +
+    /// checkpoint recomputation.
+    pub bwd: f64,
+    /// Gradient-sync time left exposed after overlap, once per step.
+    pub exposed_grad: f64,
+    /// Bytes retained between a microbatch's forward and backward at
+    /// full batch: kept saved-sets plus checkpointed entry boundaries.
+    pub act_bytes: f64,
+    /// Worst transient high during a forward (o_f, ckpt internals), B.
+    pub fwd_transient: f64,
+    /// Worst transient high during a backward (o_b, recompute retention,
+    /// the boundary gradient δ), bytes.
+    pub bwd_transient: f64,
+    /// Parameter + resident-input memory of the stage, bytes.
+    pub param_bytes: f64,
+}
+
+/// Derive [`StagePhases`] from a lowered plan. The decomposition sums to
+/// the single-device replay's step time (`fwd + bwd + exposed_grad` ==
+/// `replay_exec(..).step_time`); a unit test pins that identity.
+pub fn stage_phases(
+    g: &Graph,
+    mesh: &DeviceMesh,
+    ep: &ExecutionPlan,
+    dev: &DeviceModel,
+) -> Result<StagePhases> {
+    validate_exec(g.len(), mesh, ep)?;
+    let groups = linearize(g, &common_nodes(g));
+    let times = times_from_plan(g, ep, mesh);
+    let stages = build_stages(g, &groups, dev, Some(&times));
+    let ln = stages.len();
+    let blocks: Vec<Block> = match &ep.ckpt {
+        Some(r) => {
+            ensure!(
+                r.partitions(ln),
+                "invalid checkpoint schedule: blocks do not partition \
+                 the {ln}-stage linearization of '{}'",
+                g.name
+            );
+            r.blocks.clone()
+        }
+        None if ln == 0 => Vec::new(),
+        None => vec![Block { start: 0, end: ln - 1, checkpointed: false }],
+    };
+
+    let wa_in =
+        |s: usize| if s == 0 { 0.0 } else { stages[s - 1].wa_out };
+    let wd = stages.last().map(|s| s.wa_out).unwrap_or(0.0);
+
+    let mut p = StagePhases::default();
+    for st in &stages {
+        p.fwd += st.uf + st.uf_comm;
+        p.bwd += st.ub + st.ub_comm;
+    }
+    for c in &ep.comms {
+        if c.reason == CommReason::Resharding {
+            p.fwd += c.time; // resharding runs once, on the forward sweep
+        }
+    }
+    for blk in &blocks {
+        if blk.checkpointed {
+            // the block re-runs its forward once during backward and
+            // briefly re-retains its saved sets while doing so
+            let mut re_retained = 0.0;
+            for s in blk.start..=blk.end {
+                p.bwd += stages[s].uf + stages[s].uf_comm;
+                re_retained += stages[s].wbar;
+            }
+            p.bwd_transient = p.bwd_transient.max(re_retained);
+            p.act_bytes += wa_in(blk.start);
+            for s in blk.start..=blk.end {
+                let internal = wa_in(s) + stages[s].wa_out + stages[s].of;
+                p.fwd_transient = p.fwd_transient.max(internal);
+            }
+        } else {
+            for s in blk.start..=blk.end {
+                p.act_bytes += stages[s].wbar;
+                p.fwd_transient = p.fwd_transient.max(stages[s].of);
+            }
+        }
+        for s in blk.start..=blk.end {
+            p.bwd_transient = p.bwd_transient.max(stages[s].ob);
+        }
+    }
+    // the boundary gradient δ lives only through a microbatch's backward
+    p.bwd_transient += wd;
+
+    let grad_total: f64 =
+        ep.decisions.values().map(|d| d.grad_comm).sum();
+    let bwd_compute: f64 = ep
+        .decisions
+        .values()
+        .map(|d| crate::ckpt::bwd_share(d.compute_time))
+        .sum();
+    p.exposed_grad = exposed_grad(grad_total, bwd_compute);
+
+    p.param_bytes = ep
+        .decisions
+        .iter()
+        .filter(|(id, _)| matches!(g.node(**id).op, Op::Placeholder(_)))
+        .map(|(_, d)| d.mem_bytes)
+        .sum();
+    Ok(p)
+}
+
+/// Everything the 1F1B replayer needs to know about one pipeline stage —
+/// artifact-shaped so a saved `PipelineSolution` replays without the
+/// model graph.
+#[derive(Debug, Clone)]
+pub struct PipelineStageSpec {
+    pub phases: StagePhases,
+    /// Incoming boundary transfer from the previous stage (`None` only
+    /// for stage 0).
+    pub p2p_in: Option<P2pTransfer>,
+}
+
+// -- 1F1B program emission --------------------------------------------------
+
+fn compute_op(
+    kind: EventKind,
+    label: String,
+    secs: f64,
+    alloc: f64,
+    transient: f64,
+    free: f64,
+) -> SimOp {
+    SimOp::Compute { kind, label, secs, alloc, transient, free }
+}
+
+/// A boundary rendezvous between stage `b` and `b+1`. Both sides MUST
+/// construct their op through this one function so labels, durations and
+/// signatures agree bit-for-bit.
+fn boundary_op(
+    b: usize,
+    label: String,
+    secs: f64,
+) -> SimOp {
+    let group = vec![b, b + 1];
+    let sig = coll_sig(&label, secs, &group);
+    SimOp::Collective {
+        kind: EventKind::Comm,
+        label,
+        secs,
+        group,
+        sig,
+    }
+}
+
+/// Replay a stage chain under the non-interleaved 1F1B schedule with
+/// `microbatches` microbatches. Returns a [`SimTrace`] whose "devices"
+/// are the stage queues (`devices[s].peak_mem` is stage `s`'s per-device
+/// peak); `step_time` is the pipeline-latency of one training step.
+pub fn replay_1f1b(
+    stages: &[PipelineStageSpec],
+    microbatches: usize,
+) -> Result<SimTrace> {
+    let ns = stages.len();
+    ensure!(ns > 0, "cannot replay an empty pipeline");
+    ensure!(microbatches > 0, "need at least one microbatch");
+    let nb = microbatches;
+    let bf = nb as f64;
+    for (s, st) in stages.iter().enumerate() {
+        for x in [st.phases.fwd, st.phases.bwd, st.phases.exposed_grad,
+                  st.phases.act_bytes, st.phases.fwd_transient,
+                  st.phases.bwd_transient, st.phases.param_bytes]
+        {
+            ensure!(
+                x.is_finite() && x >= 0.0,
+                "stage {s}: non-finite or negative phase cost"
+            );
+        }
+        if s == 0 {
+            ensure!(
+                st.p2p_in.is_none(),
+                "stage 0 cannot have an incoming boundary"
+            );
+        } else {
+            ensure!(
+                st.p2p_in.is_some(),
+                "stage {s} is missing its incoming boundary transfer"
+            );
+        }
+    }
+
+    // boundary b sits between stage b and b+1; its link data lives on
+    // the downstream stage's spec
+    let link = |b: usize| stages[b + 1].p2p_in.as_ref().unwrap();
+    let fwd_op = |b: usize, mb: usize| {
+        boundary_op(
+            b,
+            format!("p2p fwd mb{mb} b{b}"),
+            link(b).fwd_time(nb),
+        )
+    };
+    let bwd_op = |b: usize, mb: usize| {
+        boundary_op(
+            b,
+            format!("p2p bwd mb{mb} b{b}"),
+            link(b).bwd_time(nb),
+        )
+    };
+    let fb_op = |b: usize, f_mb: usize, b_mb: usize| {
+        boundary_op(
+            b,
+            format!("p2p fwd mb{f_mb} bwd mb{b_mb} b{b}"),
+            link(b).fb_time(nb),
+        )
+    };
+
+    let mut progs: Vec<Vec<SimOp>> = Vec::with_capacity(ns);
+    for (s, st) in stages.iter().enumerate() {
+        let p = &st.phases;
+        let (f_mb, b_mb) = (p.fwd / bf, p.bwd / bf);
+        let act_mb = p.act_bytes / bf;
+        let warm = (ns - 1 - s).min(nb);
+        let steady = nb - warm;
+        let mut prog = Vec::new();
+        if p.param_bytes > 0.0 {
+            prog.push(compute_op(
+                EventKind::FwdCompute,
+                format!("params s{s}"),
+                0.0,
+                p.param_bytes,
+                0.0,
+                0.0,
+            ));
+        }
+        let fwd = |i: usize| {
+            compute_op(
+                EventKind::FwdCompute,
+                format!("F mb{i} s{s}"),
+                f_mb,
+                act_mb,
+                p.fwd_transient / bf,
+                0.0,
+            )
+        };
+        let bwd = |i: usize| {
+            compute_op(
+                EventKind::BwdCompute,
+                format!("B mb{i} s{s}"),
+                b_mb,
+                0.0,
+                p.bwd_transient / bf,
+                act_mb,
+            )
+        };
+        // warmup: fill the pipe
+        for i in 0..warm {
+            if s > 0 {
+                prog.push(fwd_op(s - 1, i));
+            }
+            prog.push(fwd(i));
+            if s + 1 < ns {
+                prog.push(fwd_op(s, i));
+            }
+        }
+        // first steady input arrives before the 1F1B loop starts
+        if steady > 0 && s > 0 {
+            prog.push(fwd_op(s - 1, warm));
+        }
+        // steady state: one forward, one backward, combined rendezvous
+        for k in 0..steady {
+            let (i_f, i_b) = (warm + k, k);
+            prog.push(fwd(i_f));
+            if s + 1 < ns {
+                prog.push(fb_op(s, i_f, i_b));
+            }
+            prog.push(bwd(i_b));
+            if s > 0 {
+                if k + 1 < steady {
+                    prog.push(fb_op(s - 1, i_f + 1, i_b));
+                } else {
+                    prog.push(bwd_op(s - 1, i_b));
+                }
+            }
+        }
+        // cooldown: drain the pipe
+        for i in steady..nb {
+            if s + 1 < ns {
+                prog.push(bwd_op(s, i));
+            }
+            prog.push(bwd(i));
+            if s > 0 {
+                prog.push(bwd_op(s - 1, i));
+            }
+        }
+        if p.exposed_grad > 0.0 {
+            prog.push(compute_op(
+                EventKind::GradSync,
+                format!("grad-sync s{s} (exposed)"),
+                p.exposed_grad,
+                0.0,
+                0.0,
+                0.0,
+            ));
+        }
+        progs.push(prog);
+    }
+
+    let trace = run_programs(&progs, &[ns], 0.0).map_err(|e| {
+        anyhow::anyhow!("1F1B replay ({ns} stages, {nb} microbatches): {e}")
+    })?;
+    if trace.step_time < 0.0 {
+        bail!("1F1B replay produced a negative step time");
+    }
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::P2pTransfer;
+
+    fn spec(fwd: f64, bwd: f64, act: f64, pm: f64,
+            p2p: Option<P2pTransfer>) -> PipelineStageSpec {
+        PipelineStageSpec {
+            phases: StagePhases {
+                fwd,
+                bwd,
+                exposed_grad: 0.0,
+                act_bytes: act,
+                fwd_transient: 0.0,
+                bwd_transient: 0.0,
+                param_bytes: pm,
+            },
+            p2p_in: p2p,
+        }
+    }
+
+    fn free_link(from: usize) -> P2pTransfer {
+        P2pTransfer {
+            from_stage: from,
+            to_stage: from + 1,
+            bytes_fwd: 0.0,
+            bytes_bwd: 0.0,
+            alpha: 0.0,
+            beta: f64::INFINITY,
+            streams: 1,
+        }
+    }
+
+    #[test]
+    fn stage_phases_decompose_the_intra_op_replay() {
+        use crate::graph::models::{gpt2, Gpt2Cfg};
+        use crate::layout::LayoutManager;
+        use crate::solver::{solve, SolveOpts, SolverGraph};
+        let g = gpt2(&Gpt2Cfg::mini());
+        let mesh = DeviceMesh {
+            shape: vec![2],
+            devices: vec![0, 1],
+            axis_alpha: vec![1e-6],
+            axis_beta: vec![1e11],
+        };
+        let dev = DeviceModel::a100_80gb();
+        let lm = LayoutManager::new(mesh.clone());
+        let sg = SolverGraph::build(&g, &mesh, &dev, &lm);
+        let sol = solve(
+            &sg,
+            1e13,
+            SolveOpts { anneal_iters: 150, ..Default::default() },
+        )
+        .unwrap();
+        let ep = crate::gen::lower(&g, &sg, &sol, &mesh, &lm, None);
+        let ph = stage_phases(&g, &mesh, &ep, &dev).unwrap();
+        let replay =
+            crate::sim::exec::replay_exec(&g, &mesh, &ep, &dev).unwrap();
+        // fwd + bwd + exposed grad IS the serialized intra-op replay —
+        // the phase split only re-associates the same op durations
+        let total = ph.fwd + ph.bwd + ph.exposed_grad;
+        let rel = (total - replay.step_time).abs() / replay.step_time;
+        assert!(
+            rel < 1e-9,
+            "phases {total} vs replay {}",
+            replay.step_time
+        );
+        assert!(ph.param_bytes > 0.0 && ph.act_bytes > 0.0);
+        assert!(ph.fwd > 0.0 && ph.bwd > 0.0);
+    }
+
+    #[test]
+    fn single_stage_is_exactly_the_serial_step() {
+        for nb in [1usize, 3, 8] {
+            let t = replay_1f1b(&[spec(1.0, 2.0, 100.0, 10.0, None)], nb)
+                .unwrap();
+            // (fwd + bwd) split over B microbatches sums back exactly
+            assert!(
+                (t.step_time - 3.0).abs() < 1e-9,
+                "B={nb}: {}",
+                t.step_time
+            );
+            // one microbatch in flight: params + act/B
+            assert!(
+                (t.devices[0].peak_mem - (10.0 + 100.0 / nb as f64))
+                    .abs()
+                    < 1e-6
+            );
+        }
+    }
+
+    #[test]
+    fn balanced_two_stage_pipeline_has_the_textbook_makespan() {
+        // equal stages, free links: makespan = (B + S - 1) * (f+b)/B
+        let stages = vec![
+            spec(1.0, 1.0, 80.0, 5.0, None),
+            spec(1.0, 1.0, 80.0, 5.0, Some(free_link(0))),
+        ];
+        let nb = 4;
+        let t = replay_1f1b(&stages, nb).unwrap();
+        let per_mb = 2.0 / nb as f64;
+        let expect = (nb + 2 - 1) as f64 * per_mb;
+        assert!(
+            (t.step_time - expect).abs() < 1e-9,
+            "got {}, want {expect}",
+            t.step_time
+        );
+        // stage 0 holds min(S - 0, B) = 2 microbatches in flight,
+        // stage 1 holds 1
+        let act_mb = 80.0 / nb as f64;
+        assert!(
+            (t.devices[0].peak_mem - (5.0 + 2.0 * act_mb)).abs() < 1e-6,
+            "stage0 peak {}",
+            t.devices[0].peak_mem
+        );
+        assert!(
+            (t.devices[1].peak_mem - (5.0 + act_mb)).abs() < 1e-6,
+            "stage1 peak {}",
+            t.devices[1].peak_mem
+        );
+    }
+
+    #[test]
+    fn deep_pipelines_never_deadlock() {
+        for ns in 1..=5usize {
+            for nb in 1..=6usize {
+                let mut stages = vec![spec(0.6, 1.1, 10.0, 1.0, None)];
+                for s in 1..ns {
+                    stages.push(spec(
+                        0.5 + s as f64 * 0.1,
+                        1.0,
+                        10.0,
+                        1.0,
+                        Some(free_link(s - 1)),
+                    ));
+                }
+                let t = replay_1f1b(&stages, nb).unwrap_or_else(|e| {
+                    panic!("S={ns} B={nb}: {e}")
+                });
+                assert!(t.step_time > 0.0);
+                // every stage ends with all activations freed: final
+                // resident memory equals its params
+                for (s, d) in t.devices.iter().enumerate() {
+                    let last = d.events.last().unwrap();
+                    assert!(
+                        (last.mem - 1.0).abs() < 1e-6,
+                        "S={ns} B={nb} stage {s}: leaked {}",
+                        last.mem
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn in_flight_memory_is_bounded_by_min_depth_microbatches() {
+        let ns = 4;
+        for nb in [2usize, 3, 8] {
+            let mut stages = vec![spec(1.0, 1.0, 100.0, 0.0, None)];
+            for s in 1..ns {
+                stages.push(spec(1.0, 1.0, 100.0, 0.0,
+                                 Some(free_link(s - 1))));
+            }
+            let t = replay_1f1b(&stages, nb).unwrap();
+            for (s, d) in t.devices.iter().enumerate() {
+                let bound =
+                    (ns - s).min(nb) as f64 * 100.0 / nb as f64;
+                assert!(
+                    d.peak_mem <= bound + 1e-6,
+                    "B={nb} stage {s}: peak {} > bound {bound}",
+                    d.peak_mem
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn p2p_latency_slows_the_pipeline() {
+        let mk = |alpha: f64| {
+            vec![
+                spec(1.0, 1.0, 0.0, 0.0, None),
+                spec(
+                    1.0,
+                    1.0,
+                    0.0,
+                    0.0,
+                    Some(P2pTransfer {
+                        from_stage: 0,
+                        to_stage: 1,
+                        bytes_fwd: 1e6,
+                        bytes_bwd: 1e6,
+                        alpha,
+                        beta: 1e9,
+                        streams: 1,
+                    }),
+                ),
+            ]
+        };
+        let fast = replay_1f1b(&mk(0.0), 4).unwrap();
+        let slow = replay_1f1b(&mk(0.05), 4).unwrap();
+        assert!(
+            slow.step_time > fast.step_time,
+            "latency must surface: {} vs {}",
+            slow.step_time,
+            fast.step_time
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_stage_lists() {
+        assert!(replay_1f1b(&[], 2).is_err());
+        assert!(
+            replay_1f1b(&[spec(1.0, 1.0, 0.0, 0.0, None)], 0).is_err()
+        );
+        // stage 1 without a boundary link
+        let bad = vec![
+            spec(1.0, 1.0, 0.0, 0.0, None),
+            spec(1.0, 1.0, 0.0, 0.0, None),
+        ];
+        assert!(replay_1f1b(&bad, 2).is_err());
+        // stage 0 with a spurious incoming link
+        let bad =
+            vec![spec(1.0, 1.0, 0.0, 0.0, Some(free_link(0)))];
+        assert!(replay_1f1b(&bad, 2).is_err());
+    }
+}

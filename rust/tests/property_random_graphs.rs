@@ -7,8 +7,9 @@
 //!   * rotor time is monotone in the memory budget,
 //!   * the solver returns valid, budget-respecting plans.
 
+use automap::api::{Artifact, PlanOpts, Planner, PpOpts};
 use automap::ckpt::{build_stages, common_nodes, linearize, RotorSolver};
-use automap::cluster::DeviceMesh;
+use automap::cluster::{DeviceMesh, SimCluster};
 use automap::graph::{EwBinary, EwUnary, Graph, GraphBuilder};
 use automap::layout::LayoutManager;
 use automap::profiler::{execute, profile, random_feeds};
@@ -343,6 +344,89 @@ fn property_random_graphs_have_finite_losses() {
                 .map_err(|e| format!("{e}"))?[0];
             if !loss.is_finite() || loss < 0.0 {
                 return Err(format!("bad loss {loss}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_forced_single_stage_pipeline_is_byte_identical() {
+    // a 1-stage pipeline solve is the staged planner with extra steps:
+    // the full-span "stage" is the original graph on the whole cluster,
+    // so its nested CompiledPlan must reproduce the staged compile byte
+    // for byte — any divergence means the two paths price differently
+    forall_res(
+        0x1F1B,
+        6,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let g = random_graph(&mut rng);
+            let cluster = SimCluster::fully_connected(2);
+            let dev = DeviceModel::a100_80gb();
+            let opts = PlanOpts {
+                sweep: 2,
+                solve: SolveOpts {
+                    beam_width: 8,
+                    anneal_iters: 60,
+                    lagrange_iters: 3,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let staged = {
+                let mut p = Planner::new(&g, &cluster, &dev)
+                    .with_opts(opts.clone());
+                p.lower().map_err(|e| format!("staged: {e}"))?
+            };
+            let mut popts = opts.clone();
+            popts.pp = Some(PpOpts {
+                min_stages: 1,
+                max_stages: 1,
+                microbatches: vec![1],
+                ..Default::default()
+            });
+            let mut p =
+                Planner::new(&g, &cluster, &dev).with_opts(popts);
+            let sol = p
+                .solve_pipeline()
+                .map_err(|e| format!("pipeline: {e}"))?
+                .clone();
+            if sol.stages.len() != 1 {
+                return Err(format!(
+                    "forced 1-stage solve produced {} stages",
+                    sol.stages.len()
+                ));
+            }
+            if sol.microbatches != 1 {
+                return Err(format!(
+                    "1-stage pipeline gains nothing from {} microbatches",
+                    sol.microbatches
+                ));
+            }
+            let a = staged.to_json().to_string();
+            let b = sol.stages[0].plan.to_json().to_string();
+            if a != b {
+                return Err(format!(
+                    "stage plan diverged from the staged planner \
+                     ({} vs {} bytes)",
+                    a.len(),
+                    b.len()
+                ));
+            }
+            // and the degenerate 1F1B replay is the plain intra-op replay
+            let pipe = sol.replay_1f1b().map_err(|e| format!("{e}"))?;
+            let intra = staged
+                .replay_sim(&g, &dev)
+                .map_err(|e| format!("{e}"))?;
+            let rel = (pipe.step_time - intra.step_time).abs()
+                / intra.step_time.max(1e-12);
+            if rel > 1e-6 {
+                return Err(format!(
+                    "1-stage 1F1B replay {} vs intra-op replay {}",
+                    pipe.step_time, intra.step_time
+                ));
             }
             Ok(())
         },
