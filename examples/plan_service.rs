@@ -61,8 +61,8 @@ fn main() -> anyhow::Result<()> {
             "  {:<18} {:<13} mesh {:?}, iter {:.2} ms",
             req.tag,
             out.source.name(),
-            out.plan.mesh.shape,
-            out.plan.iter_time * 1e3
+            out.compiled()?.mesh.shape,
+            out.artifact.iter_time() * 1e3
         );
     }
     println!("  ({:.2}s)", t0.elapsed().as_secs_f64());
@@ -85,7 +85,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "  re-lowered {} from the cached sharding (iter {:.2} ms)",
         reqs[3].tag,
-        out.plan.iter_time * 1e3
+        out.artifact.iter_time() * 1e3
     );
 
     let s = service.stats();

@@ -68,7 +68,7 @@ fn main() {
         let warm = bench(&format!("warm-{n}"), 1, iters, || {
             let out = svc.plan(&req).expect("warm hit");
             assert!(out.source.is_hit());
-            out.plan.iter_time
+            out.artifact.iter_time()
         });
         let warm_ms = warm.median_ns / 1e6;
 
@@ -77,7 +77,7 @@ fn main() {
             let fresh = PlanService::with_dir(&dir).expect("cache dir");
             let out = fresh.plan(&req).expect("disk hit");
             assert_eq!(out.source, PlanSource::DiskHit);
-            out.plan.iter_time
+            out.artifact.iter_time()
         });
 
         // partial: drop the plan (keep sharding) before each resolve
@@ -85,7 +85,7 @@ fn main() {
             svc.cache().drop_plan(&cold.fingerprint).expect("drop");
             let out = svc.plan(&req).expect("partial resume");
             assert_eq!(out.source, PlanSource::PartialResume);
-            out.plan.iter_time
+            out.artifact.iter_time()
         });
 
         let speedup = cold_ms / warm_ms.max(1e-9);

@@ -1,0 +1,141 @@
+//! Bench: what the daemon wire costs. Three regimes on gpt2-mini@nvlink2:
+//!
+//! * **local warm** — `PlanService::plan` on an in-process service whose
+//!   memory tier already holds the plan: the floor (no HTTP, no JSON);
+//! * **remote warm** — `Client::plan` against a loopback `automap serve`
+//!   daemon that answers from its memory tier: floor + one HTTP/1.1
+//!   round trip + request/response JSON — the marginal cost of moving
+//!   planning out of process;
+//! * **remote cold** — full solve behind the wire, measured on a daemon
+//!   with a fresh registry per iteration: what the first tenant pays
+//!   before the registry turns everyone else's request into a hit.
+//!
+//! Results print as a table and land in `BENCH_serve.json` at the repo
+//! root. `cargo bench --bench serve_roundtrip [-- --quick]`
+//!
+//! The warm rows are the story: remote-warm minus local-warm is the wire
+//! tax, and it should be orders of magnitude below a cold solve.
+
+use automap::api::PlanService;
+use automap::serve::server::{self, ServeConfig};
+use automap::serve::wire::PlanSpec;
+use automap::serve::Client;
+use automap::util::bench::{bench, quick, Table};
+use automap::util::json::{arr, num, obj, s, write_json, Json};
+
+fn spec() -> PlanSpec {
+    let mut spec = PlanSpec::new("gpt2-mini", "nvlink2");
+    spec.fast = true;
+    spec
+}
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "automap_bench_serve_{}_{}",
+        tag,
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn main() {
+    let q = quick();
+    let warm_iters = if q { 20 } else { 200 };
+    let cold_iters = if q { 1 } else { 3 };
+
+    // local floor: in-process service, memory tier warmed
+    let svc = PlanService::new();
+    let req = spec().resolve().expect("bench spec resolves");
+    svc.plan(&req).expect("bench solve");
+    let local = bench("local warm plan", 1, warm_iters, || {
+        svc.plan(&req).unwrap().wall_ms
+    });
+
+    // remote warm: loopback daemon, same plan resident in its memory tier
+    let dir = scratch("warm");
+    let handle = server::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        registry: dir.clone(),
+        ..Default::default()
+    })
+    .expect("daemon binds");
+    let client = Client::new(handle.addr());
+    client.plan(&spec()).expect("daemon warm-up solve");
+    let remote_warm = bench("remote warm plan", 1, warm_iters, || {
+        client.plan(&spec()).unwrap().wall_ms
+    });
+    handle.stop();
+    std::fs::remove_dir_all(&dir).ok();
+
+    // remote cold: fresh registry + fresh daemon per iteration, so every
+    // measured request runs the full solve behind the wire
+    let remote_cold = bench("remote cold plan", 0, cold_iters, || {
+        let dir = scratch("cold");
+        let handle = server::start(ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            registry: dir.clone(),
+            ..Default::default()
+        })
+        .expect("daemon binds");
+        let out = Client::new(handle.addr()).plan(&spec()).unwrap();
+        handle.stop();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(out.source, "solved");
+        out.wall_ms
+    });
+
+    let local_ms = local.median_ns / 1e6;
+    let warm_ms = remote_warm.median_ns / 1e6;
+    let cold_ms = remote_cold.median_ns / 1e6;
+    let mut table = Table::new(
+        "serve roundtrip: local vs remote-warm vs remote-cold",
+        &["regime", "median ms", "vs local"],
+    );
+    table.row(vec!["local warm".into(), format!("{local_ms:.3}"),
+                   "1.000x".into()]);
+    table.row(vec![
+        "remote warm".into(),
+        format!("{warm_ms:.3}"),
+        format!("{:.3}x", warm_ms / local_ms.max(1e-9)),
+    ]);
+    table.row(vec![
+        "remote cold".into(),
+        format!("{cold_ms:.1}"),
+        format!("{:.1}x", cold_ms / local_ms.max(1e-9)),
+    ]);
+    table.print();
+
+    let out = obj(vec![
+        ("bench", s("serve_roundtrip")),
+        ("model", s("gpt2-mini")),
+        ("cluster", s("nvlink2")),
+        ("quick", Json::Bool(q)),
+        (
+            "results",
+            arr(vec![
+                obj(vec![
+                    ("regime", s("local_warm")),
+                    ("median_ms", num(local_ms)),
+                ]),
+                obj(vec![
+                    ("regime", s("remote_warm")),
+                    ("median_ms", num(warm_ms)),
+                    ("wire_tax_ms", num(warm_ms - local_ms)),
+                ]),
+                obj(vec![
+                    ("regime", s("remote_cold")),
+                    ("median_ms", num(cold_ms)),
+                ]),
+            ]),
+        ),
+    ]);
+    let mut text = String::new();
+    write_json(&out, &mut text);
+    text.push('\n');
+    if let Err(e) = std::fs::write("BENCH_serve.json", &text) {
+        eprintln!("could not write BENCH_serve.json: {e}");
+    } else {
+        println!("\nrecorded -> BENCH_serve.json");
+    }
+}

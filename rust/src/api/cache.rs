@@ -4,27 +4,36 @@
 //! `PlanOpts`, backend) — see [`PlanService::fingerprint`]
 //! (super::PlanService::fingerprint). Two tiers:
 //!
-//! * **memory** — an LRU-capped map of deserialized [`CompiledPlan`]s,
+//! * **memory** — an LRU-capped map of deserialized [`PlanArtifact`]s
+//!   (intra-op [`CompiledPlan`]s and two-level [`PipelineSolution`]s),
 //!   shared across batch workers behind a mutex;
-//! * **disk** — one `<fingerprint>.plan.json` plus one
-//!   `<fingerprint>.sharding.json` per solved request, written through the
-//!   atomic [`Artifact::save`] path so concurrent workers can never leave
-//!   torn entries.
+//! * **registry** — the persistent [`PlanRegistry`](super::PlanRegistry):
+//!   one kind-suffixed JSON file per artifact plus a versioned LRU index,
+//!   all written through the atomic temp+rename path so concurrent
+//!   workers (or a crashing daemon) can never leave torn entries.
 //!
 //! The sharding artifact is what makes *partial resume* possible: if the
 //! plan file is gone (evicted, invalidated by a generator change) but the
 //! solution survives, the service re-runs only the deterministic
 //! checkpoint-DP + lowering stages via `Planner::load_sharding` instead of
-//! the full solver sweep.
+//! the full solver sweep. Pipeline solutions have no partial form — they
+//! either hit or re-solve.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use super::artifacts::{Artifact, CompiledPlan, ShardingSolution};
+use crate::util::json::Json;
+
+use super::artifacts::{
+    Artifact, CompiledPlan, PipelineSolution, ShardingSolution,
+};
+use super::registry::{
+    PlanRegistry, RegistryEntry, KIND_PIPELINE, KIND_PLAN, KIND_SHARDING,
+};
 
 /// Where a served plan came from. `Solved` means a cache miss: the full
 /// pipeline ran and the result was inserted.
@@ -52,12 +61,111 @@ impl PlanSource {
     }
 }
 
+/// A cacheable planning result: either an intra-op [`CompiledPlan`] or a
+/// two-level [`PipelineSolution`]. The fingerprint determines which kind
+/// a request produces (it hashes `PlanOpts::pp`), so one key never maps
+/// to both.
+#[derive(Debug, Clone)]
+pub enum PlanArtifact {
+    Plan(CompiledPlan),
+    Pipeline(PipelineSolution),
+}
+
+impl PlanArtifact {
+    /// Registry kind name: "plan" or "pipeline".
+    pub fn kind(&self) -> &'static str {
+        match self {
+            PlanArtifact::Plan(_) => KIND_PLAN,
+            PlanArtifact::Pipeline(_) => KIND_PIPELINE,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            PlanArtifact::Plan(p) => p.to_json(),
+            PlanArtifact::Pipeline(p) => p.to_json(),
+        }
+    }
+
+    /// Dispatch on the serialized `kind` field.
+    pub fn from_json(v: &Json) -> Result<PlanArtifact> {
+        match v.get("kind").as_str() {
+            Some(CompiledPlan::KIND) => {
+                Ok(PlanArtifact::Plan(CompiledPlan::from_json(v)?))
+            }
+            Some(PipelineSolution::KIND) => {
+                Ok(PlanArtifact::Pipeline(PipelineSolution::from_json(v)?))
+            }
+            other => bail!(
+                "not a plan artifact (kind = {:?})",
+                other.unwrap_or("missing")
+            ),
+        }
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        match self {
+            PlanArtifact::Plan(p) => p.save(path),
+            PlanArtifact::Pipeline(p) => p.save(path),
+        }
+    }
+
+    pub fn as_plan(&self) -> Option<&CompiledPlan> {
+        match self {
+            PlanArtifact::Plan(p) => Some(p),
+            PlanArtifact::Pipeline(_) => None,
+        }
+    }
+
+    pub fn as_pipeline(&self) -> Option<&PipelineSolution> {
+        match self {
+            PlanArtifact::Plan(_) => None,
+            PlanArtifact::Pipeline(p) => Some(p),
+        }
+    }
+
+    /// The intra-op plan, or an error for pipeline artifacts — for
+    /// callers whose result shape predates pipeline planning.
+    pub fn into_plan(self) -> Result<CompiledPlan> {
+        match self {
+            PlanArtifact::Plan(p) => Ok(p),
+            PlanArtifact::Pipeline(_) => bail!(
+                "request produced a pipeline solution, not an intra-op \
+                 plan (was --pp set?)"
+            ),
+        }
+    }
+
+    /// Predicted per-iteration time, seconds.
+    pub fn iter_time(&self) -> f64 {
+        match self {
+            PlanArtifact::Plan(p) => p.iter_time,
+            PlanArtifact::Pipeline(p) => p.iter_time,
+        }
+    }
+
+    /// Aggregate achieved PFLOPS.
+    pub fn pflops(&self) -> f64 {
+        match self {
+            PlanArtifact::Plan(p) => p.pflops,
+            PlanArtifact::Pipeline(p) => p.pflops,
+        }
+    }
+
+    pub fn backend(&self) -> &str {
+        match self {
+            PlanArtifact::Plan(p) => &p.backend,
+            PlanArtifact::Pipeline(p) => &p.backend,
+        }
+    }
+}
+
 /// Counter snapshot (see the field docs for what each event means).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Full plans served from the in-memory tier.
     pub memory_hits: u64,
-    /// Full plans served from disk (and promoted to memory).
+    /// Full plans served from the registry (and promoted to memory).
     pub disk_hits: u64,
     /// Sharding artifact found without a plan: ckpt + lower re-ran.
     pub partial_resumes: u64,
@@ -71,6 +179,13 @@ pub struct CacheStats {
     pub sgraph_builds: u64,
     /// Solver-graph requests served by an already-built shared graph.
     pub sgraph_reuses: u64,
+    /// Artifact files currently in the persistent registry (zero for a
+    /// memory-only cache).
+    pub registry_artifacts: u64,
+    /// Total registry artifact bytes on disk.
+    pub registry_bytes: u64,
+    /// Lifetime registry GC evictions (persisted across restarts).
+    pub registry_gc_evictions: u64,
 }
 
 impl CacheStats {
@@ -85,17 +200,17 @@ impl CacheStats {
 
 /// Result of a tiered lookup (counters already updated).
 pub enum Lookup {
-    /// Full plan available; no stage needs to run. The final field lists
-    /// fingerprints the memory tier evicted while promoting a disk hit
-    /// (always empty on a memory hit).
-    Plan(CompiledPlan, PlanSource, Vec<String>),
+    /// Full artifact available; no stage needs to run. The final field
+    /// lists fingerprints the memory tier evicted while promoting a
+    /// registry hit (always empty on a memory hit).
+    Artifact(PlanArtifact, PlanSource, Vec<String>),
     /// Only the sharding solution survived; resume from stage 4.
     Sharding(ShardingSolution),
     Miss,
 }
 
 struct MemEntry {
-    plan: CompiledPlan,
+    artifact: PlanArtifact,
     last_used: u64,
 }
 
@@ -104,17 +219,17 @@ struct MemTier {
     clock: u64,
 }
 
-/// One on-disk cache file (for `automap cache stats`).
+/// One persisted cache artifact (for `automap cache stats`).
 #[derive(Debug, Clone)]
 pub struct DiskEntry {
     pub fingerprint: String,
-    /// "plan" or "sharding".
+    /// "plan", "pipeline" or "sharding".
     pub kind: &'static str,
     pub bytes: u64,
 }
 
 pub struct PlanCache {
-    dir: Option<PathBuf>,
+    registry: Option<PlanRegistry>,
     capacity: usize,
     mem: Mutex<MemTier>,
     memory_hits: AtomicU64,
@@ -128,14 +243,11 @@ pub struct PlanCache {
 /// worth of structs; 64 keeps a busy batch comfortably resident).
 pub const DEFAULT_MEMORY_CAPACITY: usize = 64;
 
-const PLAN_SUFFIX: &str = ".plan.json";
-const SHARDING_SUFFIX: &str = ".sharding.json";
-
 impl PlanCache {
     /// Memory-only cache (no persistence across processes).
     pub fn in_memory() -> PlanCache {
         PlanCache {
-            dir: None,
+            registry: None,
             capacity: DEFAULT_MEMORY_CAPACITY,
             mem: Mutex::new(MemTier { entries: HashMap::new(), clock: 0 }),
             memory_hits: AtomicU64::new(0),
@@ -146,14 +258,11 @@ impl PlanCache {
         }
     }
 
-    /// Memory + disk cache rooted at `dir` (created if missing).
+    /// Memory + persistent cache: opens (or creates) a
+    /// [`PlanRegistry`] rooted at `dir`.
     pub fn with_dir(dir: impl AsRef<Path>) -> Result<PlanCache> {
-        let dir = dir.as_ref().to_path_buf();
-        std::fs::create_dir_all(&dir).map_err(|e| {
-            anyhow!("creating cache dir {}: {e}", dir.display())
-        })?;
         let mut c = PlanCache::in_memory();
-        c.dir = Some(dir);
+        c.registry = Some(PlanRegistry::open(dir)?);
         Ok(c)
     }
 
@@ -164,10 +273,20 @@ impl PlanCache {
     }
 
     pub fn dir(&self) -> Option<&Path> {
-        self.dir.as_deref()
+        self.registry.as_ref().map(|r| r.dir())
+    }
+
+    /// The persistent registry, when this cache has one.
+    pub fn registry(&self) -> Option<&PlanRegistry> {
+        self.registry.as_ref()
     }
 
     pub fn stats(&self) -> CacheStats {
+        let reg = self
+            .registry
+            .as_ref()
+            .map(|r| r.stats())
+            .unwrap_or_default();
         CacheStats {
             memory_hits: self.memory_hits.load(Ordering::Relaxed),
             disk_hits: self.disk_hits.load(Ordering::Relaxed),
@@ -176,63 +295,72 @@ impl PlanCache {
             evictions: self.evictions.load(Ordering::Relaxed),
             sgraph_builds: 0,
             sgraph_reuses: 0,
+            registry_artifacts: reg.artifacts,
+            registry_bytes: reg.bytes,
+            registry_gc_evictions: reg.gc_evictions,
         }
     }
 
-    fn plan_path(&self, key: &str) -> Option<PathBuf> {
-        self.dir.as_ref().map(|d| d.join(format!("{key}{PLAN_SUFFIX}")))
-    }
-
-    fn sharding_path(&self, key: &str) -> Option<PathBuf> {
-        self.dir
+    /// Non-counting peek: is a full artifact of `kind` present in either
+    /// tier? (Used by the batch driver to decide which requests are worth
+    /// pre-warming solver graphs for — a peek must not skew the hit/miss
+    /// counters.)
+    pub fn contains_plan(&self, key: &str, kind: &str) -> bool {
+        if let Some(e) = self.mem.lock().unwrap().entries.get(key) {
+            return e.artifact.kind() == kind;
+        }
+        self.registry
             .as_ref()
-            .map(|d| d.join(format!("{key}{SHARDING_SUFFIX}")))
+            .map(|r| r.contains(key, kind))
+            .unwrap_or(false)
     }
 
-    /// Non-counting peek: is a full plan present in either tier? (Used
-    /// by the batch driver to decide which requests are worth pre-warming
-    /// solver graphs for — a peek must not skew the hit/miss counters.)
-    pub fn contains_plan(&self, key: &str) -> bool {
-        if self.mem.lock().unwrap().entries.contains_key(key) {
-            return true;
-        }
-        self.plan_path(key).map(|p| p.exists()).unwrap_or(false)
-    }
-
-    /// Tiered lookup: memory, then disk plan (promoting into memory),
-    /// then disk sharding. Updates the hit/partial/miss counters.
-    pub fn lookup(&self, key: &str) -> Lookup {
+    /// Tiered lookup for an artifact of `kind` ("plan" or "pipeline"):
+    /// memory, then registry (promoting into memory), then — for the
+    /// intra-op kind only — the registry's sharding artifact. Updates the
+    /// hit/partial/miss counters.
+    pub fn lookup(&self, key: &str, kind: &str) -> Lookup {
         {
             let mut mem = self.mem.lock().unwrap();
             mem.clock += 1;
             let clock = mem.clock;
             if let Some(e) = mem.entries.get_mut(key) {
-                e.last_used = clock;
-                self.memory_hits.fetch_add(1, Ordering::Relaxed);
-                return Lookup::Plan(
-                    e.plan.clone(),
-                    PlanSource::MemoryHit,
-                    Vec::new(),
-                );
-            }
-        }
-        if let Some(path) = self.plan_path(key) {
-            if path.exists() {
-                // a torn/garbage file is impossible through the atomic
-                // save path, but a foreign file with the right name is
-                // not — treat unparseable as absent, not fatal
-                if let Ok(plan) = CompiledPlan::load(&path) {
-                    self.disk_hits.fetch_add(1, Ordering::Relaxed);
-                    let evicted = self.insert_memory(key, plan.clone());
-                    return Lookup::Plan(plan, PlanSource::DiskHit, evicted);
+                if e.artifact.kind() == kind {
+                    e.last_used = clock;
+                    self.memory_hits.fetch_add(1, Ordering::Relaxed);
+                    return Lookup::Artifact(
+                        e.artifact.clone(),
+                        PlanSource::MemoryHit,
+                        Vec::new(),
+                    );
                 }
             }
         }
-        if let Some(path) = self.sharding_path(key) {
-            if path.exists() {
-                if let Ok(sh) = ShardingSolution::load(&path) {
-                    self.partial_resumes.fetch_add(1, Ordering::Relaxed);
-                    return Lookup::Sharding(sh);
+        if let Some(reg) = &self.registry {
+            if let Some(bytes) = reg.load(key, kind) {
+                // a torn/garbage file is impossible through the atomic
+                // save path, but a foreign file with the right name is
+                // not — treat unparseable as absent, not fatal
+                if let Some(artifact) = parse_artifact(&bytes) {
+                    if artifact.kind() == kind {
+                        self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                        let evicted =
+                            self.insert_memory(key, artifact.clone());
+                        return Lookup::Artifact(
+                            artifact,
+                            PlanSource::DiskHit,
+                            evicted,
+                        );
+                    }
+                }
+            }
+            if kind == KIND_PLAN {
+                if let Some(bytes) = reg.load(key, KIND_SHARDING) {
+                    if let Some(sh) = parse_sharding(&bytes) {
+                        self.partial_resumes
+                            .fetch_add(1, Ordering::Relaxed);
+                        return Lookup::Sharding(sh);
+                    }
                 }
             }
         }
@@ -240,31 +368,37 @@ impl PlanCache {
         Lookup::Miss
     }
 
-    /// Insert a solved request: plan into both tiers, sharding solution
-    /// onto disk (the partial-resume seed). Returns fingerprints evicted
-    /// from the memory tier, if any.
+    /// Insert a solved request: artifact into both tiers, sharding
+    /// solution into the registry (the partial-resume seed for intra-op
+    /// plans). Returns fingerprints evicted from the memory tier, if any.
     pub fn insert(
         &self,
         key: &str,
         sharding: Option<&ShardingSolution>,
-        plan: &CompiledPlan,
+        artifact: &PlanArtifact,
     ) -> Result<Vec<String>> {
-        if let Some(path) = self.plan_path(key) {
-            plan.save(&path)?;
+        if let Some(reg) = &self.registry {
+            reg.store(key, artifact.kind(), &artifact_bytes(artifact))?;
+            if let Some(sh) = sharding {
+                let mut text = String::new();
+                crate::util::json::write_json(&sh.to_json(), &mut text);
+                text.push('\n');
+                reg.store(key, KIND_SHARDING, text.as_bytes())?;
+            }
         }
-        if let (Some(path), Some(sh)) = (self.sharding_path(key), sharding)
-        {
-            sh.save(&path)?;
-        }
-        Ok(self.insert_memory(key, plan.clone()))
+        Ok(self.insert_memory(key, artifact.clone()))
     }
 
-    fn insert_memory(&self, key: &str, plan: CompiledPlan) -> Vec<String> {
+    fn insert_memory(
+        &self,
+        key: &str,
+        artifact: PlanArtifact,
+    ) -> Vec<String> {
         let mut mem = self.mem.lock().unwrap();
         mem.clock += 1;
         let clock = mem.clock;
         mem.entries
-            .insert(key.to_string(), MemEntry { plan, last_used: clock });
+            .insert(key.to_string(), MemEntry { artifact, last_used: clock });
         let mut evicted = Vec::new();
         while mem.entries.len() > self.capacity {
             let oldest = mem
@@ -280,75 +414,64 @@ impl PlanCache {
         evicted
     }
 
-    /// Invalidate the *plan* for a key (memory + disk) while keeping the
-    /// sharding artifact, forcing the next request into a partial resume
-    /// — how a caller re-lowers everything after a generator change.
+    /// Invalidate the *plan* for a key (memory + registry, both kinds)
+    /// while keeping the sharding artifact, forcing the next request into
+    /// a partial resume — how a caller re-lowers everything after a
+    /// generator change.
     pub fn drop_plan(&self, key: &str) -> Result<()> {
         self.mem.lock().unwrap().entries.remove(key);
-        if let Some(path) = self.plan_path(key) {
-            if path.exists() {
-                std::fs::remove_file(&path).map_err(|e| {
-                    anyhow!("removing {}: {e}", path.display())
-                })?;
-            }
+        if let Some(reg) = &self.registry {
+            reg.remove(key, KIND_PLAN)?;
+            reg.remove(key, KIND_PIPELINE)?;
         }
         Ok(())
     }
 
-    /// Drop every in-memory entry (disk untouched).
+    /// Drop every in-memory entry (registry untouched).
     pub fn clear_memory(&self) {
         self.mem.lock().unwrap().entries.clear();
     }
 
-    /// Enumerate the on-disk tier (empty when memory-only).
+    /// Enumerate the persistent tier (empty when memory-only).
     pub fn disk_entries(&self) -> Result<Vec<DiskEntry>> {
-        let Some(dir) = &self.dir else { return Ok(Vec::new()) };
-        let mut out = Vec::new();
-        let rd = std::fs::read_dir(dir)
-            .map_err(|e| anyhow!("reading {}: {e}", dir.display()))?;
-        for entry in rd {
-            let entry = entry.map_err(|e| anyhow!("cache dir: {e}"))?;
-            let name = entry.file_name().to_string_lossy().into_owned();
-            let kind = if name.ends_with(PLAN_SUFFIX) {
-                "plan"
-            } else if name.ends_with(SHARDING_SUFFIX) {
-                "sharding"
-            } else {
-                continue;
-            };
-            let suffix =
-                if kind == "plan" { PLAN_SUFFIX } else { SHARDING_SUFFIX };
-            let bytes =
-                entry.metadata().map(|m| m.len()).unwrap_or_default();
-            out.push(DiskEntry {
-                fingerprint: name[..name.len() - suffix.len()].to_string(),
-                kind,
-                bytes,
-            });
-        }
-        out.sort_by(|a, b| {
-            (&a.fingerprint, a.kind).cmp(&(&b.fingerprint, b.kind))
-        });
-        Ok(out)
+        let Some(reg) = &self.registry else { return Ok(Vec::new()) };
+        Ok(reg
+            .entries()
+            .into_iter()
+            .map(|e: RegistryEntry| DiskEntry {
+                fingerprint: e.fingerprint,
+                kind: e.kind,
+                bytes: e.bytes,
+            })
+            .collect())
     }
 
-    /// Delete every cache file on disk and clear memory; returns how many
+    /// Delete every registry artifact and clear memory; returns how many
     /// files were removed.
     pub fn clear(&self) -> Result<usize> {
         self.clear_memory();
-        let Some(dir) = &self.dir else { return Ok(0) };
-        let mut removed = 0;
-        for e in self.disk_entries()? {
-            let suffix =
-                if e.kind == "plan" { PLAN_SUFFIX } else { SHARDING_SUFFIX };
-            let path = dir.join(format!("{}{suffix}", e.fingerprint));
-            std::fs::remove_file(&path).map_err(|err| {
-                anyhow!("removing {}: {err}", path.display())
-            })?;
-            removed += 1;
-        }
-        Ok(removed)
+        let Some(reg) = &self.registry else { return Ok(0) };
+        reg.clear()
     }
+}
+
+fn artifact_bytes(artifact: &PlanArtifact) -> Vec<u8> {
+    let mut text = String::new();
+    crate::util::json::write_json(&artifact.to_json(), &mut text);
+    text.push('\n');
+    text.into_bytes()
+}
+
+fn parse_artifact(bytes: &[u8]) -> Option<PlanArtifact> {
+    let text = std::str::from_utf8(bytes).ok()?;
+    let json = Json::parse(text).ok()?;
+    PlanArtifact::from_json(&json).ok()
+}
+
+fn parse_sharding(bytes: &[u8]) -> Option<ShardingSolution> {
+    let text = std::str::from_utf8(bytes).ok()?;
+    let json = Json::parse(text).ok()?;
+    ShardingSolution::from_json(&json).ok()
 }
 
 #[cfg(test)]
@@ -358,8 +481,8 @@ mod tests {
     use crate::gen::ExecutionPlan;
     use std::collections::BTreeMap;
 
-    fn dummy_plan(iter_time: f64) -> CompiledPlan {
-        CompiledPlan {
+    fn dummy_plan(iter_time: f64) -> PlanArtifact {
+        PlanArtifact::Plan(CompiledPlan {
             backend: "test".into(),
             graph_nodes: 3,
             mesh: DeviceMesh {
@@ -382,24 +505,28 @@ mod tests {
             mem_per_device: 1.0,
             budget: 0.0,
             sweep_n: 0,
-        }
+        })
     }
 
     #[test]
     fn memory_tier_hits_and_counts() {
         let c = PlanCache::in_memory();
-        assert!(matches!(c.lookup("k1"), Lookup::Miss));
+        assert!(matches!(c.lookup("k1", "plan"), Lookup::Miss));
         c.insert("k1", None, &dummy_plan(0.5)).unwrap();
-        match c.lookup("k1") {
-            Lookup::Plan(p, PlanSource::MemoryHit, _) => {
-                assert_eq!(p.iter_time, 0.5)
+        match c.lookup("k1", "plan") {
+            Lookup::Artifact(a, PlanSource::MemoryHit, _) => {
+                assert_eq!(a.iter_time(), 0.5)
             }
             _ => panic!("expected memory hit"),
         }
+        // asking for the other kind under the same key is a miss, not a
+        // mistyped hit
+        assert!(matches!(c.lookup("k1", "pipeline"), Lookup::Miss));
         let s = c.stats();
-        assert_eq!(s.misses, 1);
+        assert_eq!(s.misses, 2);
         assert_eq!(s.memory_hits, 1);
         assert_eq!(s.evictions, 0);
+        assert_eq!(s.registry_artifacts, 0);
     }
 
     #[test]
@@ -408,16 +535,16 @@ mod tests {
         c.insert("a", None, &dummy_plan(1.0)).unwrap();
         c.insert("b", None, &dummy_plan(2.0)).unwrap();
         // touch "a" so "b" is the LRU victim
-        assert!(matches!(c.lookup("a"), Lookup::Plan(..)));
+        assert!(matches!(c.lookup("a", "plan"), Lookup::Artifact(..)));
         let evicted = c.insert("c", None, &dummy_plan(3.0)).unwrap();
         assert_eq!(evicted, vec!["b".to_string()]);
-        assert!(matches!(c.lookup("a"), Lookup::Plan(..)));
-        assert!(matches!(c.lookup("b"), Lookup::Miss));
+        assert!(matches!(c.lookup("a", "plan"), Lookup::Artifact(..)));
+        assert!(matches!(c.lookup("b", "plan"), Lookup::Miss));
         assert_eq!(c.stats().evictions, 1);
     }
 
     #[test]
-    fn disk_tier_survives_memory_clear_and_enumerates() {
+    fn registry_tier_survives_memory_clear_and_enumerates() {
         let dir = std::env::temp_dir().join(format!(
             "automap_cache_unit_{}",
             std::process::id()
@@ -426,18 +553,21 @@ mod tests {
         let c = PlanCache::with_dir(&dir).unwrap();
         c.insert("deadbeef", None, &dummy_plan(0.25)).unwrap();
         c.clear_memory();
-        match c.lookup("deadbeef") {
-            Lookup::Plan(p, PlanSource::DiskHit, _) => {
-                assert_eq!(p.iter_time, 0.25)
+        match c.lookup("deadbeef", "plan") {
+            Lookup::Artifact(a, PlanSource::DiskHit, _) => {
+                assert_eq!(a.iter_time(), 0.25)
             }
-            _ => panic!("expected disk hit"),
+            _ => panic!("expected registry hit"),
         }
         let entries = c.disk_entries().unwrap();
         assert_eq!(entries.len(), 1);
         assert_eq!(entries[0].kind, "plan");
         assert_eq!(entries[0].fingerprint, "deadbeef");
+        let s = c.stats();
+        assert_eq!(s.registry_artifacts, 1);
+        assert!(s.registry_bytes > 0);
         assert_eq!(c.clear().unwrap(), 1);
-        assert!(matches!(c.lookup("deadbeef"), Lookup::Miss));
+        assert!(matches!(c.lookup("deadbeef", "plan"), Lookup::Miss));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

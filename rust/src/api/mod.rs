@@ -61,6 +61,7 @@
 pub mod artifacts;
 pub mod cache;
 pub mod progress;
+pub mod registry;
 pub mod service;
 pub mod solve;
 pub mod store;
@@ -70,7 +71,9 @@ pub use self::artifacts::{Artifact, CkptSchedule, ClusterReport,
                           PipelineStagePlan, ShardingCandidate,
                           ShardingSolution, ARTIFACT_VERSION};
 pub use crate::pp::PpOpts;
-pub use self::cache::{CacheStats, DiskEntry, PlanCache, PlanSource};
+pub use self::cache::{CacheStats, DiskEntry, PlanArtifact, PlanCache,
+                      PlanSource};
+pub use self::registry::{PlanRegistry, RegistryEntry, RegistryStats};
 pub use self::progress::{PlanStage, ProgressEvent};
 pub use self::service::{BackendSpec, ClusterSpec, PlanOutcome,
                         PlanRequest, PlanService};

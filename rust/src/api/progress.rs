@@ -7,6 +7,8 @@
 //! completion) on the same channel so a single callback observes both the
 //! cache tier and the stages running beneath it.
 
+use crate::util::json::{arr, num, obj, s, Json};
+
 use super::cache::PlanSource;
 
 /// The intra-op compile stages, in order, plus the inter-op pipeline
@@ -106,6 +108,122 @@ pub enum ProgressEvent {
         predicted: f64,
         simulated: f64,
     },
+}
+
+impl ProgressEvent {
+    /// Short wire name of the event variant.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProgressEvent::StageStart { .. } => "stage-start",
+            ProgressEvent::StageDone { .. } => "stage-done",
+            ProgressEvent::MeshStart { .. } => "mesh-start",
+            ProgressEvent::SweepPoint { .. } => "sweep-point",
+            ProgressEvent::CandidateRanked { .. } => "candidate-ranked",
+            ProgressEvent::CandidateReplayed { .. } => {
+                "candidate-replayed"
+            }
+            ProgressEvent::SgraphBuild { .. } => "sgraph-build",
+            ProgressEvent::CacheLookup { .. } => "cache-lookup",
+            ProgressEvent::CacheEvicted { .. } => "cache-evicted",
+            ProgressEvent::RequestDone { .. } => "request-done",
+            ProgressEvent::PipelineCellSolved { .. } => {
+                "pipeline-cell-solved"
+            }
+            ProgressEvent::PipelineChosen { .. } => "pipeline-chosen",
+        }
+    }
+
+    /// Canonical JSON form (one object per event; sorted keys), used by
+    /// the daemon's `GET /v1/events/<job>` stream.
+    pub fn to_json(&self) -> Json {
+        let shape_arr = |shape: &[usize]| {
+            arr(shape.iter().map(|&x| num(x as f64)).collect())
+        };
+        let mut pairs: Vec<(&str, Json)> =
+            vec![("event", s(self.name()))];
+        match self {
+            ProgressEvent::StageStart { stage } => {
+                pairs.push(("stage", s(stage.name())));
+            }
+            ProgressEvent::StageDone { stage, ms } => {
+                pairs.push(("stage", s(stage.name())));
+                pairs.push(("ms", num(*ms)));
+            }
+            ProgressEvent::MeshStart { shape } => {
+                pairs.push(("shape", shape_arr(shape)));
+            }
+            ProgressEvent::SweepPoint { shape, n, feasible, time, mem } => {
+                pairs.push(("shape", shape_arr(shape)));
+                pairs.push(("n", num(*n as f64)));
+                pairs.push(("feasible", Json::Bool(*feasible)));
+                pairs.push(("time", num(*time)));
+                pairs.push(("mem", num(*mem)));
+            }
+            ProgressEvent::CandidateRanked { index, iter_time, best } => {
+                pairs.push(("index", num(*index as f64)));
+                pairs.push(("iter_time", num(*iter_time)));
+                pairs.push(("best", Json::Bool(*best)));
+            }
+            ProgressEvent::CandidateReplayed {
+                index,
+                step_time,
+                peak_mem,
+            } => {
+                pairs.push(("index", num(*index as f64)));
+                pairs.push(("step_time", num(*step_time)));
+                pairs.push(("peak_mem", num(*peak_mem)));
+            }
+            ProgressEvent::SgraphBuild { shape, ms, shared } => {
+                pairs.push(("shape", shape_arr(shape)));
+                pairs.push(("ms", num(*ms)));
+                pairs.push(("shared", Json::Bool(*shared)));
+            }
+            ProgressEvent::CacheLookup { fingerprint, source } => {
+                pairs.push(("fingerprint", s(fingerprint)));
+                pairs.push(("source", s(source.name())));
+            }
+            ProgressEvent::CacheEvicted { fingerprint } => {
+                pairs.push(("fingerprint", s(fingerprint)));
+            }
+            ProgressEvent::RequestDone { index, source, ms } => {
+                pairs.push(("index", num(*index as f64)));
+                pairs.push(("source", s(source.name())));
+                pairs.push(("ms", num(*ms)));
+            }
+            ProgressEvent::PipelineCellSolved {
+                span,
+                devices,
+                feasible,
+                ms,
+            } => {
+                pairs.push((
+                    "span",
+                    arr(vec![num(span.0 as f64), num(span.1 as f64)]),
+                ));
+                pairs.push((
+                    "devices",
+                    arr(vec![
+                        num(devices.0 as f64),
+                        num(devices.1 as f64),
+                    ]),
+                ));
+                pairs.push(("feasible", Json::Bool(*feasible)));
+                pairs.push(("ms", num(*ms)));
+            }
+            ProgressEvent::PipelineChosen {
+                stages,
+                microbatches,
+                predicted,
+                simulated,
+            } => {
+                pairs.push(("stages", num(*stages as f64)));
+                pairs.push(("microbatches", num(*microbatches as f64)));
+                pairs.push(("predicted", num(*predicted)));
+                pairs.push(("simulated", num(*simulated)));
+            }
+        }
+        obj(pairs)
+    }
 }
 
 pub(crate) type ProgressFn<'a> = Box<dyn FnMut(&ProgressEvent) + 'a>;

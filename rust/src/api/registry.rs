@@ -1,0 +1,470 @@
+//! Content-addressed plan registry: the persistent tier behind
+//! [`PlanCache`](super::PlanCache) and the `automap serve` daemon.
+//!
+//! The registry owns one directory. Every artifact is a JSON file named
+//! `<fingerprint><suffix>` where the suffix encodes the artifact kind
+//! (`.plan.json`, `.pipeline.json`, `.sharding.json`), plus one versioned
+//! index file `registry.json` tracking byte sizes and a logical LRU clock.
+//! The index is written through the same atomic temp+rename path as the
+//! artifacts themselves, so a crash can never leave a torn index.
+//!
+//! The index is a cache of the directory, not the source of truth: on
+//! `open` the directory is scanned and reconciled — artifact files missing
+//! from the index are adopted (with `last_used = 0`, i.e. first in line
+//! for GC), indexed entries whose files vanished are dropped, and byte
+//! counts are refreshed from the filesystem. A daemon restarted on the
+//! same `--registry` dir therefore serves previously solved fingerprints
+//! even if the index was deleted.
+//!
+//! GC is LRU by the logical clock under a byte budget
+//! (`automap registry gc --max-bytes`). Sharding artifacts participate
+//! like any other kind: losing one only costs a partial resume.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{arr, num, obj, s, write_json, Json};
+
+use super::artifacts::atomic_write;
+
+/// Artifact kinds the registry stores, with their filename suffixes.
+pub const KIND_PLAN: &str = "plan";
+pub const KIND_PIPELINE: &str = "pipeline";
+pub const KIND_SHARDING: &str = "sharding";
+
+const INDEX_FILE: &str = "registry.json";
+const INDEX_VERSION: u64 = 1;
+
+/// Map a kind name to its filename suffix.
+pub fn kind_suffix(kind: &str) -> Option<&'static str> {
+    match kind {
+        KIND_PLAN => Some(".plan.json"),
+        KIND_PIPELINE => Some(".pipeline.json"),
+        KIND_SHARDING => Some(".sharding.json"),
+        _ => None,
+    }
+}
+
+/// Intern a parsed kind string (index files and dir scans yield owned
+/// strings; the rest of the crate wants `&'static str`).
+fn intern_kind(kind: &str) -> Option<&'static str> {
+    match kind {
+        KIND_PLAN => Some(KIND_PLAN),
+        KIND_PIPELINE => Some(KIND_PIPELINE),
+        KIND_SHARDING => Some(KIND_SHARDING),
+        _ => None,
+    }
+}
+
+/// One registered artifact.
+#[derive(Debug, Clone)]
+pub struct RegistryEntry {
+    pub fingerprint: String,
+    /// "plan", "pipeline" or "sharding".
+    pub kind: &'static str,
+    pub bytes: u64,
+    /// Logical LRU clock value of the last store/load (0 = never used
+    /// since adoption; evicted first).
+    pub last_used: u64,
+}
+
+struct IndexState {
+    /// (fingerprint, kind) -> (bytes, last_used).
+    entries: BTreeMap<(String, &'static str), (u64, u64)>,
+    clock: u64,
+    gc_evictions: u64,
+}
+
+/// Point-in-time registry counters (folded into
+/// [`CacheStats`](super::CacheStats) by the cache layer).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    /// Artifact files currently registered.
+    pub artifacts: u64,
+    /// Total artifact bytes on disk.
+    pub bytes: u64,
+    /// Lifetime GC evictions (persisted in the index across restarts).
+    pub gc_evictions: u64,
+}
+
+pub struct PlanRegistry {
+    dir: PathBuf,
+    state: Mutex<IndexState>,
+}
+
+impl PlanRegistry {
+    /// Open (or create) a registry rooted at `dir`, reconciling the
+    /// persisted index against the actual directory contents.
+    pub fn open(dir: impl AsRef<Path>) -> Result<PlanRegistry> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).map_err(|e| {
+            anyhow!("creating registry dir {}: {e}", dir.display())
+        })?;
+        let mut state = IndexState {
+            entries: BTreeMap::new(),
+            clock: 0,
+            gc_evictions: 0,
+        };
+        let index_path = dir.join(INDEX_FILE);
+        if let Ok(text) = std::fs::read_to_string(&index_path) {
+            // a foreign or older-version index is discarded, not fatal:
+            // the dir scan below rebuilds everything that matters
+            if let Ok(json) = Json::parse(&text) {
+                if json.get("version").as_usize()
+                    == Some(INDEX_VERSION as usize)
+                {
+                    state.clock =
+                        json.get("clock").as_usize().unwrap_or(0) as u64;
+                    state.gc_evictions = json
+                        .get("gc_evictions")
+                        .as_usize()
+                        .unwrap_or(0)
+                        as u64;
+                    if let Some(entries) = json.get("entries").as_arr() {
+                        for e in entries {
+                            let (Some(fp), Some(kind)) = (
+                                e.get("fingerprint").as_str(),
+                                e.get("kind")
+                                    .as_str()
+                                    .and_then(intern_kind),
+                            ) else {
+                                continue;
+                            };
+                            let bytes = e
+                                .get("bytes")
+                                .as_usize()
+                                .unwrap_or(0)
+                                as u64;
+                            let last_used = e
+                                .get("last_used")
+                                .as_usize()
+                                .unwrap_or(0)
+                                as u64;
+                            state.entries.insert(
+                                (fp.to_string(), kind),
+                                (bytes, last_used),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // reconcile with the directory: the files are the truth
+        let mut on_disk: BTreeMap<(String, &'static str), u64> =
+            BTreeMap::new();
+        let rd = std::fs::read_dir(&dir)
+            .map_err(|e| anyhow!("reading {}: {e}", dir.display()))?;
+        for entry in rd {
+            let entry = entry.map_err(|e| anyhow!("registry dir: {e}"))?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let Some((fp, kind)) = split_artifact_name(&name) else {
+                continue;
+            };
+            let bytes = entry.metadata().map(|m| m.len()).unwrap_or(0);
+            on_disk.insert((fp, kind), bytes);
+        }
+        state
+            .entries
+            .retain(|key, _| on_disk.contains_key(key));
+        for (key, bytes) in on_disk {
+            let e = state.entries.entry(key).or_insert((0, 0));
+            e.0 = bytes;
+        }
+        let reg = PlanRegistry { dir, state: Mutex::new(state) };
+        reg.persist_index()?;
+        Ok(reg)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path an artifact of `kind` for `fingerprint` lives at (whether or
+    /// not it exists yet).
+    pub fn path_of(&self, fingerprint: &str, kind: &str) -> Result<PathBuf> {
+        let suffix = kind_suffix(kind)
+            .ok_or_else(|| anyhow!("unknown artifact kind '{kind}'"))?;
+        Ok(self.dir.join(format!("{fingerprint}{suffix}")))
+    }
+
+    pub fn contains(&self, fingerprint: &str, kind: &str) -> bool {
+        let Some(kind) = intern_kind(kind) else { return false };
+        self.state
+            .lock()
+            .unwrap()
+            .entries
+            .contains_key(&(fingerprint.to_string(), kind))
+    }
+
+    /// Store one artifact (atomic write) and index it.
+    pub fn store(
+        &self,
+        fingerprint: &str,
+        kind: &str,
+        bytes: &[u8],
+    ) -> Result<()> {
+        let kind = intern_kind(kind)
+            .ok_or_else(|| anyhow!("unknown artifact kind '{kind}'"))?;
+        let path = self.path_of(fingerprint, kind)?;
+        atomic_write(&path, bytes)?;
+        {
+            let mut st = self.state.lock().unwrap();
+            st.clock += 1;
+            let clock = st.clock;
+            st.entries.insert(
+                (fingerprint.to_string(), kind),
+                (bytes.len() as u64, clock),
+            );
+        }
+        self.persist_index()
+    }
+
+    /// Load an artifact's raw bytes, bumping its LRU clock. `None` when
+    /// the artifact is not registered (or its file vanished underneath
+    /// the index, in which case the entry is dropped).
+    pub fn load(&self, fingerprint: &str, kind: &str) -> Option<Vec<u8>> {
+        let kind = intern_kind(kind)?;
+        let key = (fingerprint.to_string(), kind);
+        if !self.state.lock().unwrap().entries.contains_key(&key) {
+            return None;
+        }
+        let path = self.path_of(fingerprint, kind).ok()?;
+        match std::fs::read(&path) {
+            Ok(bytes) => {
+                {
+                    let mut st = self.state.lock().unwrap();
+                    st.clock += 1;
+                    let clock = st.clock;
+                    if let Some(e) = st.entries.get_mut(&key) {
+                        e.1 = clock;
+                    }
+                }
+                // clock persistence is best-effort on the read path:
+                // losing it only perturbs GC order, never correctness
+                self.persist_index().ok();
+                Some(bytes)
+            }
+            Err(_) => {
+                self.state.lock().unwrap().entries.remove(&key);
+                self.persist_index().ok();
+                None
+            }
+        }
+    }
+
+    /// Remove one artifact; returns whether it existed.
+    pub fn remove(&self, fingerprint: &str, kind: &str) -> Result<bool> {
+        let Some(kind) = intern_kind(kind) else { return Ok(false) };
+        let key = (fingerprint.to_string(), kind);
+        let existed =
+            self.state.lock().unwrap().entries.remove(&key).is_some();
+        let path = self.path_of(fingerprint, kind)?;
+        if path.exists() {
+            std::fs::remove_file(&path)
+                .map_err(|e| anyhow!("removing {}: {e}", path.display()))?;
+        }
+        if existed {
+            self.persist_index()?;
+        }
+        Ok(existed)
+    }
+
+    /// All registered artifacts, sorted by (fingerprint, kind).
+    pub fn entries(&self) -> Vec<RegistryEntry> {
+        let st = self.state.lock().unwrap();
+        st.entries
+            .iter()
+            .map(|((fp, kind), (bytes, last_used))| RegistryEntry {
+                fingerprint: fp.clone(),
+                kind,
+                bytes: *bytes,
+                last_used: *last_used,
+            })
+            .collect()
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        let st = self.state.lock().unwrap();
+        RegistryStats {
+            artifacts: st.entries.len() as u64,
+            bytes: st.entries.values().map(|(b, _)| *b).sum(),
+            gc_evictions: st.gc_evictions,
+        }
+    }
+
+    /// Evict least-recently-used artifacts until total bytes fit under
+    /// `max_bytes`. Returns the evicted entries (oldest first).
+    pub fn gc(&self, max_bytes: u64) -> Result<Vec<RegistryEntry>> {
+        let victims: Vec<RegistryEntry> = {
+            let st = self.state.lock().unwrap();
+            let mut total: u64 =
+                st.entries.values().map(|(b, _)| *b).sum();
+            let mut by_age: Vec<RegistryEntry> = st
+                .entries
+                .iter()
+                .map(|((fp, kind), (bytes, last_used))| RegistryEntry {
+                    fingerprint: fp.clone(),
+                    kind,
+                    bytes: *bytes,
+                    last_used: *last_used,
+                })
+                .collect();
+            by_age.sort_by(|a, b| {
+                (a.last_used, &a.fingerprint, a.kind)
+                    .cmp(&(b.last_used, &b.fingerprint, b.kind))
+            });
+            let mut victims = Vec::new();
+            for e in by_age {
+                if total <= max_bytes {
+                    break;
+                }
+                total = total.saturating_sub(e.bytes);
+                victims.push(e);
+            }
+            victims
+        };
+        for e in &victims {
+            let path = self.path_of(&e.fingerprint, e.kind)?;
+            if path.exists() {
+                std::fs::remove_file(&path).map_err(|err| {
+                    anyhow!("removing {}: {err}", path.display())
+                })?;
+            }
+            let mut st = self.state.lock().unwrap();
+            st.entries.remove(&(e.fingerprint.clone(), e.kind));
+            st.gc_evictions += 1;
+        }
+        if !victims.is_empty() {
+            self.persist_index()?;
+        }
+        Ok(victims)
+    }
+
+    /// Delete every artifact and reset the index; returns files removed.
+    pub fn clear(&self) -> Result<usize> {
+        let entries = self.entries();
+        let mut removed = 0;
+        for e in &entries {
+            let path = self.path_of(&e.fingerprint, e.kind)?;
+            if path.exists() {
+                std::fs::remove_file(&path).map_err(|err| {
+                    anyhow!("removing {}: {err}", path.display())
+                })?;
+                removed += 1;
+            }
+        }
+        self.state.lock().unwrap().entries.clear();
+        self.persist_index()?;
+        Ok(removed)
+    }
+
+    fn persist_index(&self) -> Result<()> {
+        let json = {
+            let st = self.state.lock().unwrap();
+            let entries: Vec<Json> = st
+                .entries
+                .iter()
+                .map(|((fp, kind), (bytes, last_used))| {
+                    obj(vec![
+                        ("fingerprint", s(fp)),
+                        ("kind", s(kind)),
+                        ("bytes", num(*bytes as f64)),
+                        ("last_used", num(*last_used as f64)),
+                    ])
+                })
+                .collect();
+            obj(vec![
+                ("kind", s("plan-registry-index")),
+                ("version", num(INDEX_VERSION as f64)),
+                ("clock", num(st.clock as f64)),
+                ("gc_evictions", num(st.gc_evictions as f64)),
+                ("entries", arr(entries)),
+            ])
+        };
+        let mut text = String::new();
+        write_json(&json, &mut text);
+        text.push('\n');
+        atomic_write(&self.dir.join(INDEX_FILE), text.as_bytes())
+    }
+}
+
+/// Split `<fingerprint><suffix>` into (fingerprint, kind); `None` for
+/// files that are not registry artifacts (including the index itself).
+fn split_artifact_name(name: &str) -> Option<(String, &'static str)> {
+    for kind in [KIND_PLAN, KIND_PIPELINE, KIND_SHARDING] {
+        let suffix = kind_suffix(kind).unwrap();
+        if let Some(fp) = name.strip_suffix(suffix) {
+            if !fp.is_empty() {
+                return Some((fp.to_string(), kind));
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("automap_registry_{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn store_load_roundtrip_and_index_survives_reopen() {
+        let dir = scratch("reopen");
+        {
+            let r = PlanRegistry::open(&dir).unwrap();
+            r.store("feed", KIND_PLAN, b"{\"a\":1}").unwrap();
+            r.store("feed", KIND_SHARDING, b"{\"b\":2}").unwrap();
+            assert_eq!(r.stats().artifacts, 2);
+        }
+        let r = PlanRegistry::open(&dir).unwrap();
+        assert!(r.contains("feed", KIND_PLAN));
+        assert_eq!(r.load("feed", KIND_PLAN).unwrap(), b"{\"a\":1}");
+        assert_eq!(r.stats().artifacts, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reconciles_after_index_loss_and_foreign_files() {
+        let dir = scratch("reconcile");
+        {
+            let r = PlanRegistry::open(&dir).unwrap();
+            r.store("cafe", KIND_PIPELINE, b"{}").unwrap();
+        }
+        std::fs::remove_file(dir.join("registry.json")).unwrap();
+        std::fs::write(dir.join("notes.txt"), b"ignore me").unwrap();
+        let r = PlanRegistry::open(&dir).unwrap();
+        let entries = r.entries();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].fingerprint, "cafe");
+        assert_eq!(entries[0].kind, KIND_PIPELINE);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_evicts_lru_until_under_budget() {
+        let dir = scratch("gc");
+        let r = PlanRegistry::open(&dir).unwrap();
+        r.store("aa", KIND_PLAN, &[b'x'; 100]).unwrap();
+        r.store("bb", KIND_PLAN, &[b'y'; 100]).unwrap();
+        r.store("cc", KIND_PLAN, &[b'z'; 100]).unwrap();
+        // touch "aa" so "bb" is the oldest
+        assert!(r.load("aa", KIND_PLAN).is_some());
+        let evicted = r.gc(250).unwrap();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].fingerprint, "bb");
+        assert!(!r.contains("bb", KIND_PLAN));
+        assert!(r.contains("aa", KIND_PLAN));
+        assert_eq!(r.stats().gc_evictions, 1);
+        assert!(r.stats().bytes <= 250);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

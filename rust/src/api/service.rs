@@ -31,9 +31,9 @@
 //! `Planner` remains the single-compilation engine; `autoparallelize` and
 //! the CLI are thin clients of this service.
 
-use std::collections::{BTreeMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -47,9 +47,11 @@ use crate::util::json::{hash_json, StableHasher};
 use crate::util::pool::parallel_map;
 
 use super::artifacts::{Artifact, ClusterReport, CompiledPlan,
-                       MeshCandidates};
-use super::cache::{CacheStats, Lookup, PlanCache, PlanSource};
+                       MeshCandidates, ShardingSolution};
+use super::cache::{CacheStats, Lookup, PlanArtifact, PlanCache,
+                   PlanSource};
 use super::progress::ProgressEvent;
+use super::registry::{KIND_PIPELINE, KIND_PLAN};
 use super::solve::{Baseline, BaselineSolve, ExactSolve, PortfolioSolve,
                    SimMeasureSolve};
 use super::store::{graph_fingerprint, SolverGraphStore};
@@ -220,14 +222,74 @@ impl PlanRequest {
     }
 }
 
-/// A resolved request: the compiled plan plus where it came from.
+/// A resolved request: the planning artifact plus where it came from.
 #[derive(Debug, Clone)]
 pub struct PlanOutcome {
     pub fingerprint: String,
     pub source: PlanSource,
-    pub plan: CompiledPlan,
+    /// The compiled plan, or — for requests with `opts.pp` set — the
+    /// two-level pipeline solution.
+    pub artifact: PlanArtifact,
     /// Wall time this request took inside the service, milliseconds.
     pub wall_ms: f64,
+}
+
+impl PlanOutcome {
+    /// The intra-op plan; errors when the request produced a pipeline
+    /// solution (for callers whose result shape predates `--pp`).
+    pub fn compiled(&self) -> Result<&CompiledPlan> {
+        self.artifact.as_plan().ok_or_else(|| {
+            anyhow!(
+                "request produced a pipeline solution, not an intra-op \
+                 plan (was --pp set?)"
+            )
+        })
+    }
+
+    pub fn into_compiled(self) -> Result<CompiledPlan> {
+        self.artifact.into_plan()
+    }
+}
+
+/// Which artifact kind a request resolves to (the fingerprint hashes
+/// `opts.pp`, so one fingerprint never maps to both).
+fn kind_of(req: &PlanRequest) -> &'static str {
+    if req.opts.pp.is_some() {
+        KIND_PIPELINE
+    } else {
+        KIND_PLAN
+    }
+}
+
+/// Publication cell for a fingerprint being solved right now: `None`
+/// while running, then `Some(None)` on success / `Some(message)` on
+/// failure. Concurrent requests for the same fingerprint wait on it
+/// instead of re-solving (*single-flight*).
+struct Inflight {
+    state: Mutex<Option<Option<String>>>,
+    cv: Condvar,
+}
+
+impl Inflight {
+    fn new() -> Inflight {
+        Inflight { state: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn publish(&self, err: Option<String>) {
+        let mut st = self.state.lock().unwrap();
+        *st = Some(err);
+        self.cv.notify_all();
+    }
+
+    /// Block until the leader publishes; returns its error message, if
+    /// any.
+    fn wait(&self) -> Option<String> {
+        let mut st = self.state.lock().unwrap();
+        while st.is_none() {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.clone().unwrap()
+    }
 }
 
 /// Detect + mesh state shared across batch requests on the same cluster.
@@ -327,6 +389,11 @@ pub struct PlanService {
     cache: PlanCache,
     store: Arc<SolverGraphStore>,
     progress: Option<ServiceProgressFn>,
+    /// Fingerprints being solved right now (single-flight dedup): the
+    /// first requester becomes the leader and solves; concurrent
+    /// requesters wait and are then served from the cache, so N clients
+    /// racing on one fingerprint trigger exactly one solve.
+    inflight: Mutex<HashMap<String, Arc<Inflight>>>,
 }
 
 impl Default for PlanService {
@@ -342,16 +409,13 @@ impl PlanService {
             cache: PlanCache::in_memory(),
             store: Arc::new(SolverGraphStore::new()),
             progress: None,
+            inflight: Mutex::new(HashMap::new()),
         }
     }
 
-    /// Service with a persistent on-disk tier rooted at `dir`.
+    /// Service with a persistent registry tier rooted at `dir`.
     pub fn with_dir(dir: impl AsRef<Path>) -> Result<PlanService> {
-        Ok(PlanService {
-            cache: PlanCache::with_dir(dir)?,
-            store: Arc::new(SolverGraphStore::new()),
-            progress: None,
-        })
+        Ok(PlanService::with_cache(PlanCache::with_dir(dir)?))
     }
 
     /// Full control over the cache (capacity, placement).
@@ -360,6 +424,7 @@ impl PlanService {
             cache,
             store: Arc::new(SolverGraphStore::new()),
             progress: None,
+            inflight: Mutex::new(HashMap::new()),
         }
     }
 
@@ -465,6 +530,12 @@ impl PlanService {
 
     /// `plan` with both digests precomputed — the batch driver hashes
     /// each request exactly once and reuses the digests here.
+    ///
+    /// Solves are *single-flight* per fingerprint: when several threads
+    /// miss on the same key concurrently, one becomes the leader and
+    /// runs the solver stages; the rest block until it publishes, then
+    /// re-read the (now populated) cache. A leader failure is mirrored
+    /// to its waiters without re-solving.
     fn plan_keyed(
         &self,
         req: &PlanRequest,
@@ -473,24 +544,114 @@ impl PlanService {
         graph_fp: &str,
     ) -> Result<PlanOutcome> {
         let fingerprint = fingerprint.to_string();
+        let kind = kind_of(req);
         let t0 = Instant::now();
-        match self.cache.lookup(&fingerprint) {
-            Lookup::Plan(plan, source, evicted) => {
-                self.emit_evictions(evicted);
-                self.emit(ProgressEvent::CacheLookup {
-                    fingerprint: fingerprint.clone(),
-                    source,
-                });
-                Ok(PlanOutcome {
-                    fingerprint,
-                    source,
-                    plan,
-                    wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-                })
+        loop {
+            let resume = match self.cache.lookup(&fingerprint, kind) {
+                Lookup::Artifact(artifact, source, evicted) => {
+                    self.emit_evictions(evicted);
+                    self.emit(ProgressEvent::CacheLookup {
+                        fingerprint: fingerprint.clone(),
+                        source,
+                    });
+                    return Ok(PlanOutcome {
+                        fingerprint,
+                        source,
+                        artifact,
+                        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    });
+                }
+                Lookup::Sharding(sh) => Some(sh),
+                Lookup::Miss => None,
+            };
+            // some stage has to run: try to become the leader
+            let leader = {
+                let mut map = self.inflight.lock().unwrap();
+                match map.get(&fingerprint) {
+                    Some(cell) => Err(Arc::clone(cell)),
+                    None => {
+                        let cell = Arc::new(Inflight::new());
+                        map.insert(
+                            fingerprint.clone(),
+                            Arc::clone(&cell),
+                        );
+                        Ok(cell)
+                    }
+                }
+            };
+            match leader {
+                Ok(cell) => {
+                    let result = self.solve_uncached(
+                        req,
+                        shared,
+                        &fingerprint,
+                        graph_fp,
+                        resume,
+                        &t0,
+                    );
+                    cell.publish(
+                        result.as_ref().err().map(|e| e.to_string()),
+                    );
+                    self.inflight.lock().unwrap().remove(&fingerprint);
+                    return result;
+                }
+                Err(cell) => {
+                    if let Some(msg) = cell.wait() {
+                        return Err(anyhow!(
+                            "{} (deduplicated in-flight request): {msg}",
+                            req.tag
+                        ));
+                    }
+                    // leader succeeded: loop back to the cache lookup
+                }
             }
-            Lookup::Sharding(sharding) => {
+        }
+    }
+
+    /// Run the solver stages for a cache miss (or partial resume when
+    /// `resume` carries the surviving sharding solution) and populate
+    /// the cache. Only ever called by a single-flight leader.
+    fn solve_uncached(
+        &self,
+        req: &PlanRequest,
+        shared: Option<&SharedCluster>,
+        fingerprint: &str,
+        graph_fp: &str,
+        resume: Option<ShardingSolution>,
+        t0: &Instant,
+    ) -> Result<PlanOutcome> {
+        if req.opts.pp.is_some() {
+            if !matches!(req.backend, BackendSpec::Beam) {
+                bail!(
+                    "{}: pipeline planning supports only the beam \
+                     backend (got {})",
+                    req.tag,
+                    req.backend.describe()
+                );
+            }
+            self.emit(ProgressEvent::CacheLookup {
+                fingerprint: fingerprint.to_string(),
+                source: PlanSource::Solved,
+            });
+            let mut planner = self.planner_for(req, graph_fp, shared);
+            let sol = planner
+                .solve_pipeline()
+                .map_err(|e| anyhow!("{}: {e}", req.tag))?
+                .clone();
+            let artifact = PlanArtifact::Pipeline(sol);
+            let evicted = self.cache.insert(fingerprint, None, &artifact)?;
+            self.emit_evictions(evicted);
+            return Ok(PlanOutcome {
+                fingerprint: fingerprint.to_string(),
+                source: PlanSource::Solved,
+                artifact,
+                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            });
+        }
+        match resume {
+            Some(sharding) => {
                 self.emit(ProgressEvent::CacheLookup {
-                    fingerprint: fingerprint.clone(),
+                    fingerprint: fingerprint.to_string(),
                     source: PlanSource::PartialResume,
                 });
                 let mut planner = self
@@ -499,20 +660,22 @@ impl PlanService {
                 let plan = planner.lower().map_err(|e| {
                     anyhow!("{} (partial resume): {e}", req.tag)
                 })?;
-                // the sharding artifact is already on disk; restore the
-                // plan entry so the next lookup is a full hit
-                let evicted = self.cache.insert(&fingerprint, None, &plan)?;
+                // the sharding artifact is already persisted; restore
+                // the plan entry so the next lookup is a full hit
+                let artifact = PlanArtifact::Plan(plan);
+                let evicted =
+                    self.cache.insert(fingerprint, None, &artifact)?;
                 self.emit_evictions(evicted);
                 Ok(PlanOutcome {
-                    fingerprint,
+                    fingerprint: fingerprint.to_string(),
                     source: PlanSource::PartialResume,
-                    plan,
+                    artifact,
                     wall_ms: t0.elapsed().as_secs_f64() * 1e3,
                 })
             }
-            Lookup::Miss => {
+            None => {
                 self.emit(ProgressEvent::CacheLookup {
-                    fingerprint: fingerprint.clone(),
+                    fingerprint: fingerprint.to_string(),
                     source: PlanSource::Solved,
                 });
                 let mut planner = self.planner_for(req, graph_fp, shared);
@@ -520,16 +683,17 @@ impl PlanService {
                     .lower()
                     .map_err(|e| anyhow!("{}: {e}", req.tag))?;
                 let sharding = planner.sharding_solution().cloned();
+                let artifact = PlanArtifact::Plan(plan);
                 let evicted = self.cache.insert(
-                    &fingerprint,
+                    fingerprint,
                     sharding.as_ref(),
-                    &plan,
+                    &artifact,
                 )?;
                 self.emit_evictions(evicted);
                 Ok(PlanOutcome {
-                    fingerprint,
+                    fingerprint: fingerprint.to_string(),
                     source: PlanSource::Solved,
-                    plan,
+                    artifact,
                     wall_ms: t0.elapsed().as_secs_f64() * 1e3,
                 })
             }
@@ -667,7 +831,12 @@ impl PlanService {
             if matches!(req.backend, BackendSpec::Baseline(..)) {
                 continue; // analytic backends never touch a solver graph
             }
-            if self.cache.contains_plan(&fps[i]) {
+            if req.opts.pp.is_some() {
+                // pipeline solves key their nested per-cell graphs by
+                // subgraph span, not by these full-graph meshes
+                continue;
+            }
+            if self.cache.contains_plan(&fps[i], kind_of(req)) {
                 continue; // full hit: no planner will run
             }
             let sc = shared.get_or_probe(req);
@@ -777,8 +946,8 @@ mod tests {
         let second = svc.plan(&req).unwrap();
         assert_eq!(second.source, PlanSource::MemoryHit);
         assert_eq!(
-            second.plan.to_json().to_string(),
-            first.plan.to_json().to_string(),
+            second.artifact.to_json().to_string(),
+            first.artifact.to_json().to_string(),
             "cache hit must be byte-identical"
         );
         let s = svc.stats();
@@ -788,6 +957,47 @@ mod tests {
         // cache hit built none
         assert!(s.sgraph_builds >= 1);
         assert_eq!(svc.store().builds(), s.sgraph_builds);
+    }
+
+    #[test]
+    fn concurrent_identical_requests_solve_exactly_once() {
+        let solves = Arc::new(Mutex::new(0usize));
+        let svc = {
+            let solves = Arc::clone(&solves);
+            PlanService::new().on_progress(move |ev| {
+                if let ProgressEvent::CacheLookup {
+                    source: PlanSource::Solved,
+                    ..
+                } = ev
+                {
+                    *solves.lock().unwrap() += 1;
+                }
+            })
+        };
+        let req = mini_request(2);
+        let outs: Vec<String> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    s.spawn(|| {
+                        svc.plan(&req)
+                            .unwrap()
+                            .artifact
+                            .to_json()
+                            .to_string()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(
+            outs.windows(2).all(|w| w[0] == w[1]),
+            "all racers must observe byte-identical artifacts"
+        );
+        assert_eq!(
+            *solves.lock().unwrap(),
+            1,
+            "single-flight must collapse concurrent misses to one solve"
+        );
     }
 
     #[test]

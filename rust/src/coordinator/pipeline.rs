@@ -79,7 +79,7 @@ fn plan_via_service(
         opts: opts.clone(),
         backend: BackendSpec::Beam,
     };
-    let compiled = service().plan(&req)?.plan;
+    let compiled = service().plan(&req)?.into_compiled()?;
     // the profile is symbolic (milliseconds) and not part of the cached
     // artifact; recompute it for the legacy result shape
     Ok(FullPlan {

@@ -12,6 +12,7 @@ pub mod layout;
 pub mod pp;
 pub mod profiler;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod solver;
 pub mod spec;

@@ -10,7 +10,7 @@
 //!             [--backend beam|exact|portfolio|sim|ddp|megatron-1d|
 //!              optimus-2d|3d-tp]
 //!             [--json] [--save-plan p.json] [--load-plan p.json]
-//!             [--cache-dir DIR]
+//!             [--cache-dir DIR] [--remote host:port]
 //!             [--pp [--max-stages K] [--min-stages K]
 //!              [--microbatches 1,2,4,8]] :
 //!             plan through the service and print the result. --cache-dir
@@ -27,7 +27,14 @@
 //!             result is a PipelineSolution artifact whose recorded step
 //!             time is the microbatched 1F1B replay's. --load-plan
 //!             detects the artifact kind, so saved pipeline plans reload
-//!             the same way compiled plans do.
+//!             the same way compiled plans do. Pipeline plans go through
+//!             the service like intra-op plans: --cache-dir (and the
+//!             daemon registry) serve repeat --pp solves from cache.
+//!             --remote host:port plans through a running
+//!             `automap serve` daemon instead of in-process: the flags
+//!             are sent as a wire spec (see serve below), the daemon
+//!             solves or serves from its registry, and the returned
+//!             artifact prints/saves exactly like a local plan.
 //!   verify    <plan.json> [--model M | --manifest artifacts/manifest.json]
 //!             [--budget-gb G] [--strict] [--save-trace t.json] [--json] :
 //!             structurally validate a saved CompiledPlan artifact, then
@@ -54,8 +61,45 @@
 //!             entries: {"model": .., "cluster": .., "backend": ..,
 //!             "budget_gb": .., "fast": .., "sweep": .., "seed": ..,
 //!             "tag": ..} — only "model"/"cluster" are required.
-//!   cache     stats|clear [--cache-dir DIR] : inspect or empty the
-//!             on-disk plan cache.
+//!   serve     [--addr 127.0.0.1:7070] [--unix /path.sock]
+//!             [--registry DIR] [--max-inflight N] [--max-queued N] :
+//!             run the multi-tenant planning daemon over a persistent
+//!             plan registry (default .automap-cache). Endpoints:
+//!
+//!               POST /v1/plan                plan one spec or a batch
+//!               GET  /v1/plan/<fingerprint>  fetch a stored artifact
+//!               GET  /v1/events/<job>        chunked progress stream
+//!               GET  /v1/cache/stats         cache + registry counters
+//!               GET  /v1/healthz             liveness
+//!
+//!             Wire format: POST /v1/plan takes one spec object —
+//!               {"model": "gpt2-mini", "cluster": "fig5",
+//!                "backend": "beam", "fast": true, "budget_gb": 40,
+//!                "sweep": 3, "seed": 7, "pp": {"max_stages": 4, ...},
+//!                "tenant": "team-a", "job": "j1", "tag": "..."}
+//!             (same fields and defaults as a batch manifest entry) or
+//!             {"requests": [spec, ...]}. A success is
+//!               {"fingerprint": .., "source": "memory-hit|disk-hit|
+//!                partial-resume|solved", "kind": "plan|pipeline",
+//!                "wall_ms": .., "artifact": {..}}
+//!             (batches: {"results": [outcome-or-error, ...]}); every
+//!             non-2xx carries {"error": {"code": .., "message": ..}}
+//!             (400 bad-request, 404 not-found, 405 method-not-allowed,
+//!             429 over-capacity, 500 plan-failed). Per-tenant admission
+//!             (the x-automap-tenant header or the spec's "tenant")
+//!             bounds in-flight solves and queue depth; identical
+//!             fingerprints racing across tenants still collapse to one
+//!             solve. GET /v1/plan/<fp> returns registry bytes verbatim,
+//!             so a warm-restarted daemon serves byte-identical plans
+//!             without invoking any solver backend.
+//!   registry  gc --max-bytes N [--registry DIR] | stats : garbage-
+//!             collect the plan registry down to a byte budget (least-
+//!             recently-used artifacts evicted first; the versioned
+//!             index registry.json is rewritten atomically), or print
+//!             its contents.
+//!   cache     stats|clear [--cache-dir DIR] [--json] : inspect or empty
+//!             the on-disk plan registry (plan + pipeline + sharding
+//!             entries, byte totals, GC eviction count).
 //!   cluster   --cluster fig5 [--json] : probe the simulated cluster and
 //!             print the ClusterReport + MeshCandidates artifacts.
 //!   profile   --model ... : symbolic profile (FLOPs, memory buckets).
@@ -69,9 +113,11 @@ use anyhow::{anyhow, Result};
 
 use automap::api::{Artifact, BackendSpec, BaselineSolve, ClusterReport,
                    CompiledPlan, MeshCandidates, PipelineSolution,
-                   PlanOutcome, PlanRequest, PlanService, Planner,
-                   PpOpts, ProgressEvent};
+                   PlanArtifact, PlanOutcome, PlanRegistry, PlanRequest,
+                   PlanService, Planner, PpOpts, ProgressEvent};
 use automap::cluster::{detect, SimCluster};
+use automap::serve::wire::{cluster_for, model_for, stats_json};
+use automap::serve::{server, Client, PlanSpec, ServeConfig};
 use automap::runtime::Manifest;
 use automap::coordinator::tp::{serial_block_forward, tp_block_forward,
                                BlockParams};
@@ -90,44 +136,6 @@ use automap::util::rng::Rng;
 
 /// Default on-disk cache location for `batch` and `cache`.
 const DEFAULT_CACHE_DIR: &str = ".automap-cache";
-
-fn model_for(name: &str) -> Result<Gpt2Cfg> {
-    Ok(match name {
-        "gpt2-mini" | "mini" => Gpt2Cfg::mini(),
-        "alpha" | "beta" | "gamma" | "delta" => Gpt2Cfg::paper(name),
-        other => {
-            return Err(anyhow!(
-                "unknown model {other} (gpt2-mini|alpha..delta)"
-            ))
-        }
-    })
-}
-
-fn cluster_for(name: &str) -> Result<SimCluster> {
-    if name == "fig5" {
-        Ok(SimCluster::partially_connected_8gpu())
-    } else if name == "single" {
-        Ok(SimCluster::single())
-    } else if let Some(n) = name.strip_prefix("nvlink") {
-        let n = n
-            .parse()
-            .map_err(|_| anyhow!("nvlink<N> needs an integer, got {n}"))?;
-        Ok(SimCluster::fully_connected(n))
-    } else if let Some(spec) = name.strip_prefix("multinode") {
-        let (a, b) = spec
-            .split_once('x')
-            .ok_or_else(|| anyhow!("multinode<N>x<M>, got {spec}"))?;
-        Ok(SimCluster::multi_node(
-            a.parse().map_err(|_| anyhow!("bad node count {a}"))?,
-            b.parse().map_err(|_| anyhow!("bad per-node count {b}"))?,
-            100.0,
-        ))
-    } else {
-        Err(anyhow!(
-            "unknown cluster {name} (fig5|single|nvlink<N>|multinode<NxM>)"
-        ))
-    }
-}
 
 fn opts_from(args: &Args) -> PipelineOpts {
     let mut opts = PipelineOpts::default();
@@ -361,7 +369,7 @@ fn print_pipeline(sol: &PipelineSolution, args: &Args) -> Result<()> {
 
 fn cmd_plan_pp(args: &Args, model: &str) -> Result<()> {
     // fail loudly instead of silently planning with different settings:
-    // stage solves are beam-only and pipeline plans bypass the cache
+    // stage solves are beam-only
     if let Some(b) = args.get("backend") {
         if b != "beam" {
             return Err(anyhow!(
@@ -370,28 +378,30 @@ fn cmd_plan_pp(args: &Args, model: &str) -> Result<()> {
             ));
         }
     }
-    if args.get("cache-dir").is_some() {
-        return Err(anyhow!(
-            "--pp plans are not served from the plan cache; drop \
-             --cache-dir (use --save-plan/--load-plan to persist them)"
-        ));
-    }
-    let cfg = model_for(model)?;
-    let g = gpt2(&cfg);
-    let cluster = cluster_for(args.get_or("cluster", "fig5"))?;
-    let dev = DeviceModel::a100_80gb();
     let mut opts = opts_from(args);
     opts.pp = Some(pp_opts_from(args)?);
-    let mut p = Planner::new(&g, &cluster, &dev).with_opts(opts);
-    if args.has_flag("progress") {
-        p = p.on_progress(narrate);
-    }
-    let sol = p.solve_pipeline()?.clone();
+    let req = request_for(
+        model,
+        model,
+        args.get_or("cluster", "fig5"),
+        "beam",
+        opts,
+    )?;
+    let service = service_for(args, None)?;
+    let out = service.plan(&req)?;
+    eprintln!(
+        "cache: {} (fingerprint {})",
+        out.source.name(),
+        out.fingerprint
+    );
+    let sol = out.artifact.as_pipeline().ok_or_else(|| {
+        anyhow!("--pp request produced a non-pipeline artifact")
+    })?;
     if let Some(path) = args.get("save-plan") {
         sol.save(path)?;
         eprintln!("pipeline plan saved to {path}");
     }
-    print_pipeline(&sol, args)
+    print_pipeline(sol, args)
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
@@ -422,6 +432,11 @@ fn cmd_plan(args: &Args) -> Result<()> {
         return print_plan(&g, &plan, args);
     }
 
+    // remote path: plan through a running `automap serve` daemon
+    if let Some(addr) = args.get("remote") {
+        return cmd_plan_remote(args, addr);
+    }
+
     // inter-op path: two-level stage x intra-op x ckpt planning
     if args.has_flag("pp") {
         return cmd_plan_pp(args, model);
@@ -442,10 +457,58 @@ fn cmd_plan(args: &Args) -> Result<()> {
         out.fingerprint
     );
     if let Some(path) = args.get("save-plan") {
-        out.plan.save(path)?;
+        out.artifact.save(path)?;
         eprintln!("plan saved to {path}");
     }
-    print_plan(&req.graph, &out.plan, args)
+    match &out.artifact {
+        PlanArtifact::Plan(plan) => print_plan(&req.graph, plan, args),
+        PlanArtifact::Pipeline(sol) => print_pipeline(sol, args),
+    }
+}
+
+/// Assemble the wire spec `plan --remote` ships: the same flags the
+/// local path consumes, resolved by the daemon instead.
+fn spec_from_args(args: &Args) -> Result<PlanSpec> {
+    let mut spec = PlanSpec::new(
+        args.get_or("model", "gpt2-mini"),
+        args.get_or("cluster", "fig5"),
+    );
+    spec.backend = args.get_or("backend", "beam").to_string();
+    spec.fast = args.has_flag("fast");
+    if let Some(gb) = args.get("budget-gb") {
+        spec.budget_gb = Some(gb.parse::<f64>().map_err(|_| {
+            anyhow!("--budget-gb needs a number, got {gb}")
+        })?);
+    }
+    if args.has_flag("pp") {
+        spec.pp = Some(pp_opts_from(args)?);
+    }
+    spec.tenant = args.get("tenant").map(str::to_string);
+    spec.job = args.get("job").map(str::to_string);
+    Ok(spec)
+}
+
+fn cmd_plan_remote(args: &Args, addr: &str) -> Result<()> {
+    let spec = spec_from_args(args)?;
+    let out = Client::new(addr).plan(&spec)?;
+    eprintln!(
+        "remote {}: {} (fingerprint {})",
+        addr, out.source, out.fingerprint
+    );
+    if let Some(path) = args.get("save-plan") {
+        let mut text = out.artifact_text();
+        text.push('\n');
+        std::fs::write(path, text)
+            .map_err(|e| anyhow!("writing {path}: {e}"))?;
+        eprintln!("plan saved to {path}");
+    }
+    match PlanArtifact::from_json(&out.artifact)? {
+        PlanArtifact::Plan(plan) => {
+            let g = gpt2(&model_for(&spec.model)?);
+            print_plan(&g, &plan, args)
+        }
+        PlanArtifact::Pipeline(sol) => print_pipeline(&sol, args),
+    }
 }
 
 /// Step-time drift (relative) above which `verify --strict` fails.
@@ -758,14 +821,15 @@ fn cmd_batch(args: &Args) -> Result<()> {
             .map_err(|e| anyhow!("creating {d}: {e}"))?;
     }
     let path_of = |i: usize, out: &PlanOutcome| -> Result<String> {
+        let kind = out.artifact.kind();
         match out_dir {
             Some(d) => {
-                let p = format!("{d}/req{i:03}.plan.json");
-                out.plan.save(&p)?;
+                let p = format!("{d}/req{i:03}.{kind}.json");
+                out.artifact.save(&p)?;
                 Ok(p)
             }
             None => Ok(cache_dir
-                .join(format!("{}.plan.json", out.fingerprint))
+                .join(format!("{}.{kind}.json", out.fingerprint))
                 .display()
                 .to_string()),
         }
@@ -782,8 +846,9 @@ fn cmd_batch(args: &Args) -> Result<()> {
                      automap::util::json::s(&out.fingerprint)),
                     ("status", automap::util::json::s(out.source.name())),
                     ("iter_time",
-                     automap::util::json::num(out.plan.iter_time)),
-                    ("pflops", automap::util::json::num(out.plan.pflops)),
+                     automap::util::json::num(out.artifact.iter_time())),
+                    ("pflops",
+                     automap::util::json::num(out.artifact.pflops())),
                     ("plan_path",
                      automap::util::json::s(&path_of(i, out)?)),
                 ]),
@@ -814,8 +879,8 @@ fn cmd_batch(args: &Args) -> Result<()> {
                 i.to_string(),
                 e.tag.clone(),
                 out.source.name().to_string(),
-                format!("{:.3}", out.plan.iter_time * 1e3),
-                format!("{:.3}", out.plan.pflops),
+                format!("{:.3}", out.artifact.iter_time() * 1e3),
+                format!("{:.3}", out.artifact.pflops()),
                 path_of(i, out)?,
             ]),
             Err(err) => {
@@ -860,16 +925,28 @@ fn cmd_cache(args: &Args) -> Result<()> {
     let service = PlanService::with_dir(dir)?;
     match action {
         Some("stats") | None => {
+            if args.has_flag("json") {
+                println!("{}", stats_json(&service.stats()));
+                return Ok(());
+            }
             let entries = service.cache().disk_entries()?;
             let plans =
                 entries.iter().filter(|e| e.kind == "plan").count();
+            let pipelines =
+                entries.iter().filter(|e| e.kind == "pipeline").count();
             let shardings =
                 entries.iter().filter(|e| e.kind == "sharding").count();
-            let bytes: u64 = entries.iter().map(|e| e.bytes).sum();
+            let st = service.stats();
             println!("cache dir      : {dir}");
             println!("plan entries   : {plans}");
+            println!("pipeline plans : {pipelines}");
             println!("sharding seeds : {shardings}");
-            println!("total size     : {:.2} MB", bytes as f64 / 1e6);
+            println!("artifacts      : {}", st.registry_artifacts);
+            println!(
+                "total size     : {:.2} MB",
+                st.registry_bytes as f64 / 1e6
+            );
+            println!("gc evictions   : {}", st.registry_gc_evictions);
             for e in entries {
                 println!(
                     "  {} {:>9} {:>8.1} KB",
@@ -887,6 +964,83 @@ fn cmd_cache(args: &Args) -> Result<()> {
         }
         Some(other) => {
             Err(anyhow!("unknown cache action {other} (stats|clear)"))
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let defaults = ServeConfig::default();
+    let config = ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:7070").to_string(),
+        unix: args.get("unix").map(std::path::PathBuf::from),
+        registry: std::path::PathBuf::from(
+            args.get_or("registry", DEFAULT_CACHE_DIR),
+        ),
+        max_inflight: args
+            .get_usize("max-inflight", defaults.max_inflight),
+        max_queued: args.get_usize("max-queued", defaults.max_queued),
+    };
+    server::run(config)
+}
+
+fn cmd_registry(args: &Args) -> Result<()> {
+    let dir = args
+        .get("registry")
+        .or_else(|| args.get("cache-dir"))
+        .unwrap_or(DEFAULT_CACHE_DIR);
+    let action = args.positional.first().map(String::as_str);
+    let reg = PlanRegistry::open(dir)?;
+    match action {
+        Some("gc") => {
+            let max_bytes = args
+                .get("max-bytes")
+                .ok_or_else(|| {
+                    anyhow!(
+                        "usage: automap registry gc --max-bytes N \
+                         [--registry DIR]"
+                    )
+                })?
+                .parse::<u64>()
+                .map_err(|_| anyhow!("--max-bytes needs an integer"))?;
+            let evicted = reg.gc(max_bytes)?;
+            for e in &evicted {
+                println!(
+                    "evicted {} {:>9} {:>8.1} KB",
+                    e.fingerprint,
+                    e.kind,
+                    e.bytes as f64 / 1e3
+                );
+            }
+            let st = reg.stats();
+            println!(
+                "{} artifact(s), {:.2} MB on disk (budget {:.2} MB), \
+                 {} evicted this pass",
+                st.artifacts,
+                st.bytes as f64 / 1e6,
+                max_bytes as f64 / 1e6,
+                evicted.len()
+            );
+            Ok(())
+        }
+        Some("stats") | None => {
+            let st = reg.stats();
+            println!("registry dir   : {dir}");
+            println!("artifacts      : {}", st.artifacts);
+            println!("total size     : {:.2} MB", st.bytes as f64 / 1e6);
+            println!("gc evictions   : {}", st.gc_evictions);
+            for e in reg.entries() {
+                println!(
+                    "  {} {:>9} {:>8.1} KB (last used @{})",
+                    e.fingerprint,
+                    e.kind,
+                    e.bytes as f64 / 1e3,
+                    e.last_used
+                );
+            }
+            Ok(())
+        }
+        Some(other) => {
+            Err(anyhow!("unknown registry action {other} (gc|stats)"))
         }
     }
 }
@@ -1071,6 +1225,8 @@ fn main() -> Result<()> {
         Some("plan") => cmd_plan(&args),
         Some("verify") => cmd_verify(&args),
         Some("batch") => cmd_batch(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("registry") => cmd_registry(&args),
         Some("cache") => cmd_cache(&args),
         Some("cluster") => cmd_cluster(&args),
         Some("profile") => cmd_profile(&args),
@@ -1079,18 +1235,20 @@ fn main() -> Result<()> {
         Some("table4") => cmd_table4(&args),
         _ => {
             println!(
-                "usage: automap <plan|verify|batch|cache|cluster|profile|\
-                 train|tp-check|table4> [--options]"
+                "usage: automap <plan|verify|batch|serve|registry|cache|\
+                 cluster|profile|train|tp-check|table4> [--options]"
             );
             println!(
                 "  plan     compile a plan (--pp for two-level pipeline \
-                 parallelism)"
+                 parallelism, --remote for a daemon)"
             );
             println!(
                 "  verify   replay a saved CompiledPlan or \
                  PipelineSolution artifact"
             );
             println!("  batch    plan a JSON manifest of requests concurrently");
+            println!("  serve    run the planning daemon over a plan registry");
+            println!("  registry garbage-collect / inspect the plan registry");
             println!("  cache    inspect/clear the on-disk plan cache");
             println!("  cluster  probe a simulated cluster topology");
             println!("  profile  symbolic model profile (FLOPs, memory)");

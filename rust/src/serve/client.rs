@@ -1,0 +1,238 @@
+//! Blocking client for the daemon — the other half of [`super::wire`].
+//!
+//! Used by `automap plan --remote <addr>` and the loopback tests. Keeps
+//! responses as [`Json`] (plus the raw bytes for registry fetches) so
+//! callers can check byte-identity against locally produced artifacts.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{arr, obj, write_json, Json};
+
+use super::wire::PlanSpec;
+
+/// The decoded body of a successful `POST /v1/plan` entry.
+#[derive(Debug, Clone)]
+pub struct RemoteOutcome {
+    pub fingerprint: String,
+    /// `memory-hit | disk-hit | partial-resume | solved` — as reported
+    /// by the *server's* cache, not this client.
+    pub source: String,
+    /// Artifact kind: `plan` or `pipeline`.
+    pub kind: String,
+    /// Server-side wall time for this request, milliseconds.
+    pub wall_ms: f64,
+    /// The artifact body (a `CompiledPlan` or `PipelineSolution` JSON).
+    pub artifact: Json,
+}
+
+impl RemoteOutcome {
+    fn from_json(v: &Json) -> Result<RemoteOutcome> {
+        let fingerprint = v
+            .get("fingerprint")
+            .as_str()
+            .ok_or_else(|| anyhow!("response missing \"fingerprint\""))?
+            .to_string();
+        Ok(RemoteOutcome {
+            fingerprint,
+            source: v
+                .get("source")
+                .as_str()
+                .unwrap_or("unknown")
+                .to_string(),
+            kind: v.get("kind").as_str().unwrap_or("plan").to_string(),
+            wall_ms: v.get("wall_ms").as_f64().unwrap_or(0.0),
+            artifact: v.get("artifact").clone(),
+        })
+    }
+
+    /// Canonical serialization of the artifact body — comparable across
+    /// clients and against `PlanArtifact::to_json().to_string()`.
+    pub fn artifact_text(&self) -> String {
+        let mut out = String::new();
+        write_json(&self.artifact, &mut out);
+        out
+    }
+}
+
+/// A blocking HTTP client bound to one daemon address.
+pub struct Client {
+    addr: String,
+}
+
+impl Client {
+    pub fn new(addr: impl Into<String>) -> Client {
+        Client { addr: addr.into() }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn get(&self, path: &str) -> Result<(u16, Vec<u8>)> {
+        let resp =
+            tinyhttp::request(&self.addr, "GET", path, &[], &[])
+                .map_err(|e| anyhow!("GET {} {}: {e}", self.addr, path))?;
+        let status = resp.status;
+        let body = resp
+            .read_body()
+            .map_err(|e| anyhow!("GET {path}: reading body: {e}"))?;
+        Ok((status, body))
+    }
+
+    fn post_json(&self, path: &str, body: &Json) -> Result<(u16, Json)> {
+        let mut text = String::new();
+        write_json(body, &mut text);
+        let resp = tinyhttp::request(
+            &self.addr,
+            "POST",
+            path,
+            &[("content-type", "application/json")],
+            text.as_bytes(),
+        )
+        .map_err(|e| anyhow!("POST {} {}: {e}", self.addr, path))?;
+        let status = resp.status;
+        let bytes = resp
+            .read_body()
+            .map_err(|e| anyhow!("POST {path}: reading body: {e}"))?;
+        Ok((status, parse_body(&bytes)?))
+    }
+
+    /// `GET /v1/healthz`; errors unless the daemon reports `ok: true`.
+    pub fn healthz(&self) -> Result<Json> {
+        let (status, bytes) = self.get("/v1/healthz")?;
+        let v = parse_body(&bytes)?;
+        if status != 200 || v.get("ok").as_bool() != Some(true) {
+            return Err(response_error(status, &v));
+        }
+        Ok(v)
+    }
+
+    /// `GET /v1/cache/stats` — the daemon's [`CacheStats`] counters,
+    /// including the registry tier.
+    ///
+    /// [`CacheStats`]: crate::api::CacheStats
+    pub fn cache_stats(&self) -> Result<Json> {
+        let (status, bytes) = self.get("/v1/cache/stats")?;
+        let v = parse_body(&bytes)?;
+        if status != 200 {
+            return Err(response_error(status, &v));
+        }
+        Ok(v)
+    }
+
+    /// `POST /v1/plan` with one spec.
+    pub fn plan(&self, spec: &PlanSpec) -> Result<RemoteOutcome> {
+        let (status, v) = self.post_json("/v1/plan", &spec.to_json())?;
+        if status != 200 {
+            return Err(response_error(status, &v));
+        }
+        RemoteOutcome::from_json(&v)
+    }
+
+    /// `POST /v1/plan` with `{"requests": [...]}`; per-entry outcomes in
+    /// input order (a whole-batch rejection is the outer `Err`).
+    pub fn plan_batch(
+        &self,
+        specs: &[PlanSpec],
+    ) -> Result<Vec<Result<RemoteOutcome>>> {
+        let body = obj(vec![(
+            "requests",
+            arr(specs.iter().map(|sp| sp.to_json()).collect()),
+        )]);
+        let (status, v) = self.post_json("/v1/plan", &body)?;
+        if status != 200 {
+            return Err(response_error(status, &v));
+        }
+        let rows = v
+            .get("results")
+            .as_arr()
+            .ok_or_else(|| anyhow!("batch response missing \"results\""))?;
+        Ok(rows
+            .iter()
+            .map(|row| {
+                if !matches!(row.get("error"), Json::Null) {
+                    Err(response_error(200, row))
+                } else {
+                    RemoteOutcome::from_json(row)
+                }
+            })
+            .collect())
+    }
+
+    /// `GET /v1/plan/<fingerprint>` — the artifact exactly as the
+    /// registry stores it on disk (byte-identity checks compare this).
+    pub fn fetch_raw(&self, fingerprint: &str) -> Result<Vec<u8>> {
+        let path = format!("/v1/plan/{fingerprint}");
+        let (status, bytes) = self.get(&path)?;
+        if status != 200 {
+            return Err(response_error(status, &parse_body(&bytes)?));
+        }
+        Ok(bytes)
+    }
+
+    /// `GET /v1/plan/<fingerprint>`, parsed.
+    pub fn fetch(&self, fingerprint: &str) -> Result<Json> {
+        parse_body(&self.fetch_raw(fingerprint)?)
+    }
+
+    /// `GET /v1/events/<job>`: consume the chunked progress stream,
+    /// calling `f` per event until the job finishes. Returns the event
+    /// count.
+    pub fn events(
+        &self,
+        job: &str,
+        mut f: impl FnMut(&Json),
+    ) -> Result<usize> {
+        let path = format!("/v1/events/{job}");
+        let mut resp =
+            tinyhttp::request(&self.addr, "GET", &path, &[], &[])
+                .map_err(|e| anyhow!("GET {path}: {e}"))?;
+        if resp.status != 200 {
+            let status = resp.status;
+            let bytes = resp
+                .read_body()
+                .map_err(|e| anyhow!("GET {path}: reading body: {e}"))?;
+            return Err(response_error(status, &parse_body(&bytes)?));
+        }
+        let mut count = 0usize;
+        let mut pending = String::new();
+        while let Some(chunk) = resp
+            .next_chunk()
+            .map_err(|e| anyhow!("GET {path}: stream: {e}"))?
+        {
+            pending.push_str(
+                std::str::from_utf8(&chunk)
+                    .map_err(|_| anyhow!("event stream is not UTF-8"))?,
+            );
+            while let Some(nl) = pending.find('\n') {
+                let line: String = pending.drain(..=nl).collect();
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                let ev = Json::parse(line)
+                    .map_err(|e| anyhow!("bad event line: {e}"))?;
+                f(&ev);
+                count += 1;
+            }
+        }
+        Ok(count)
+    }
+}
+
+fn parse_body(bytes: &[u8]) -> Result<Json> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| anyhow!("response body is not UTF-8"))?;
+    Json::parse(text).map_err(|e| anyhow!("response body: {e}"))
+}
+
+/// Surface the server's structured `{"error": {code, message}}` body.
+fn response_error(status: u16, v: &Json) -> anyhow::Error {
+    let err = v.get("error");
+    match (err.get("code").as_str(), err.get("message").as_str()) {
+        (Some(code), Some(msg)) => {
+            anyhow!("server error {code} (HTTP {status}): {msg}")
+        }
+        _ => anyhow!("server returned HTTP {status}: {v}"),
+    }
+}

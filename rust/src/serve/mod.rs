@@ -1,0 +1,44 @@
+//! `automap serve` — the multi-tenant planning daemon.
+//!
+//! Colossal-Auto's value is ahead-of-time compilation: a solved (model,
+//! cluster, opts) triple is a reusable artifact, so the expensive solves
+//! should happen once and be served everywhere. This module exposes the
+//! process-local [`PlanService`](crate::api::PlanService) as a long-lived
+//! HTTP daemon over a persistent
+//! [`PlanRegistry`](crate::api::PlanRegistry): plans solved in any prior
+//! run of the daemon (or by `automap plan --cache-dir` against the same
+//! directory) are served byte-identically from disk without invoking any
+//! solver backend.
+//!
+//! ```text
+//! automap serve --addr 127.0.0.1:7070 --registry .automap-cache
+//!
+//! POST /v1/plan               plan one spec, or {"requests": [...]} batch
+//! GET  /v1/plan/<fingerprint> fetch a registered artifact verbatim
+//! GET  /v1/events/<job>       stream ProgressEvents (chunked)
+//! GET  /v1/cache/stats        CacheStats + registry counters
+//! GET  /v1/healthz            liveness
+//! ```
+//!
+//! The wire format ([`wire::PlanSpec`]) is the `automap batch` manifest
+//! entry: the server rebuilds the graph from the model *name*, so a plan
+//! request is a few hundred bytes, and the fingerprint computed on the
+//! server is the same one `automap plan` computes locally. Per-tenant
+//! admission ([`admission`]) bounds concurrent solves and queue depth per
+//! `x-automap-tenant`; identical fingerprints racing across tenants still
+//! collapse to one solve via the service's single-flight dedup.
+//!
+//! [`client::Client`] is the matching blocking client, used by
+//! `automap plan --remote <addr>` and the loopback tests — both sides of
+//! the wire live in this crate, so a format drift breaks the build, not
+//! production.
+
+pub mod admission;
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use self::admission::{AdmissionQueue, Permit};
+pub use self::client::{Client, RemoteOutcome};
+pub use self::server::{ServeConfig, ServerHandle};
+pub use self::wire::PlanSpec;

@@ -1,0 +1,589 @@
+//! The daemon: accept loop, request routing, job event channels.
+//!
+//! One blocking handler thread per connection (bounded in practice by
+//! the per-tenant admission caps on the plan endpoints), over a
+//! nonblocking accept loop that polls a stop flag every few
+//! milliseconds — which is what lets tests (and embedders) start a
+//! daemon on an ephemeral port, stop it, and warm-restart another on
+//! the same registry, all in-process.
+//!
+//! Progress streaming: the service has a single global progress
+//! callback, so events are routed to per-job channels through a
+//! thread-local set by the handler thread around its `plan()` call.
+//! Events emitted on that thread (cache lookups, single-request stage
+//! progress) reach the stream; events emitted inside `plan_batch`'s
+//! pool workers stay off it by design.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+use tinyhttp::{ChunkedWriter, Request, Response};
+
+use crate::api::{PlanOutcome, PlanService};
+use crate::api::registry::{KIND_PIPELINE, KIND_PLAN};
+use crate::util::json::{arr, num, obj, s, write_json, Json};
+use crate::util::pool;
+
+use super::admission::{AdmissionQueue, DEFAULT_TENANT};
+use super::wire::{error_json, stats_json, PlanSpec};
+
+/// Poll interval of the nonblocking accept loops.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Retained job channels before finished ones are reaped.
+const MAX_JOBS: usize = 256;
+
+/// Daemon configuration (`automap serve` flags).
+pub struct ServeConfig {
+    /// TCP listen address; port 0 binds an ephemeral port (tests).
+    pub addr: String,
+    /// Optional additional Unix-domain listener.
+    pub unix: Option<PathBuf>,
+    /// Plan registry directory (created if missing).
+    pub registry: PathBuf,
+    /// Per-tenant concurrent-plan cap.
+    pub max_inflight: usize,
+    /// Per-tenant bounded wait queue past the in-flight cap.
+    pub max_queued: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7070".into(),
+            unix: None,
+            registry: PathBuf::from(".automap-cache"),
+            max_inflight: pool::threads(),
+            max_queued: 32,
+        }
+    }
+}
+
+/// Per-job progress event channel: the handler thread pushes, the
+/// events stream pops; `finish` unblocks a draining reader.
+struct JobChannel {
+    events: Mutex<VecDeque<Json>>,
+    cv: Condvar,
+    done: AtomicBool,
+}
+
+impl JobChannel {
+    fn new() -> JobChannel {
+        JobChannel {
+            events: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            done: AtomicBool::new(false),
+        }
+    }
+
+    fn push(&self, ev: Json) {
+        self.events.lock().unwrap().push_back(ev);
+        self.cv.notify_all();
+    }
+
+    fn finish(&self) {
+        let _guard = self.events.lock().unwrap();
+        self.done.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    /// Next event, blocking; `None` once finished and drained.
+    fn next(&self) -> Option<Json> {
+        let mut q = self.events.lock().unwrap();
+        loop {
+            if let Some(ev) = q.pop_front() {
+                return Some(ev);
+            }
+            if self.done.load(Ordering::SeqCst) {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+}
+
+#[derive(Clone)]
+struct JobRegistry(Arc<Mutex<HashMap<String, Arc<JobChannel>>>>);
+
+impl JobRegistry {
+    fn new() -> JobRegistry {
+        JobRegistry(Arc::new(Mutex::new(HashMap::new())))
+    }
+
+    fn register(&self, id: &str) -> Arc<JobChannel> {
+        let mut map = self.0.lock().unwrap();
+        if map.len() >= MAX_JOBS {
+            map.retain(|_, ch| !ch.done.load(Ordering::SeqCst));
+        }
+        let ch = Arc::new(JobChannel::new());
+        map.insert(id.to_string(), Arc::clone(&ch));
+        ch
+    }
+
+    fn get(&self, id: &str) -> Option<Arc<JobChannel>> {
+        self.0.lock().unwrap().get(id).cloned()
+    }
+
+    fn remove(&self, id: &str) {
+        self.0.lock().unwrap().remove(id);
+    }
+}
+
+thread_local! {
+    /// The job channel the current handler thread routes progress
+    /// events into, if its request asked for one.
+    static CURRENT_JOB: RefCell<Option<Arc<JobChannel>>> =
+        const { RefCell::new(None) };
+}
+
+struct State {
+    service: PlanService,
+    admission: AdmissionQueue,
+    jobs: JobRegistry,
+    registry_dir: PathBuf,
+}
+
+impl State {
+    fn new(config: &ServeConfig) -> Result<State> {
+        let service = PlanService::with_dir(&config.registry)?
+            .on_progress(|ev| {
+                CURRENT_JOB.with(|j| {
+                    if let Some(ch) = j.borrow().as_ref() {
+                        ch.push(ev.to_json());
+                    }
+                });
+            });
+        Ok(State {
+            service,
+            admission: AdmissionQueue::new(
+                config.max_inflight,
+                config.max_queued,
+            ),
+            jobs: JobRegistry::new(),
+            registry_dir: config.registry.clone(),
+        })
+    }
+}
+
+/// A running daemon. Dropping the handle does NOT stop the server; call
+/// [`stop`](ServerHandle::stop) (tests) or never (the CLI).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The actual bound address (resolves port 0).
+    pub fn addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Signal the accept loops, join every handler, release the port.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for t in self.threads.drain(..) {
+            t.join().ok();
+        }
+    }
+}
+
+/// Bind and start serving in background threads; returns immediately.
+pub fn start(config: ServeConfig) -> Result<ServerHandle> {
+    let state = Arc::new(State::new(&config)?);
+    let listener = TcpListener::bind(&config.addr)
+        .map_err(|e| anyhow!("binding {}: {e}", config.addr))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut threads = Vec::new();
+    {
+        let state = Arc::clone(&state);
+        let stop = Arc::clone(&stop);
+        threads.push(std::thread::spawn(move || {
+            accept_tcp(listener, state, stop)
+        }));
+    }
+    #[cfg(unix)]
+    if let Some(path) = &config.unix {
+        std::fs::remove_file(path).ok();
+        let listener = std::os::unix::net::UnixListener::bind(path)
+            .map_err(|e| anyhow!("binding {}: {e}", path.display()))?;
+        listener.set_nonblocking(true)?;
+        let state = Arc::clone(&state);
+        let stop = Arc::clone(&stop);
+        threads.push(std::thread::spawn(move || {
+            accept_unix(listener, state, stop)
+        }));
+    }
+    #[cfg(not(unix))]
+    if config.unix.is_some() {
+        return Err(anyhow!("--unix requires a unix platform"));
+    }
+    Ok(ServerHandle { addr, stop, threads })
+}
+
+/// `automap serve`: start and serve until the process dies.
+pub fn run(config: ServeConfig) -> Result<()> {
+    let registry = config.registry.clone();
+    let unix = config.unix.clone();
+    let handle = start(config)?;
+    eprintln!(
+        "automap serve: listening on {} (registry {}{})",
+        handle.addr(),
+        registry.display(),
+        unix.map(|p| format!(", unix {}", p.display()))
+            .unwrap_or_default()
+    );
+    loop {
+        std::thread::park();
+    }
+}
+
+fn accept_tcp(
+    listener: TcpListener,
+    state: Arc<State>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nodelay(true).ok();
+                let state = Arc::clone(&state);
+                handlers.push(std::thread::spawn(move || {
+                    let Ok(read_half) = stream.try_clone() else {
+                        return;
+                    };
+                    let mut r = BufReader::new(read_half);
+                    let mut w = stream;
+                    handle(&state, &mut r, &mut w);
+                }));
+                handlers.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+    for h in handlers {
+        h.join().ok();
+    }
+}
+
+#[cfg(unix)]
+fn accept_unix(
+    listener: std::os::unix::net::UnixListener,
+    state: Arc<State>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let state = Arc::clone(&state);
+                handlers.push(std::thread::spawn(move || {
+                    let Ok(read_half) = stream.try_clone() else {
+                        return;
+                    };
+                    let mut r = BufReader::new(read_half);
+                    let mut w = stream;
+                    handle(&state, &mut r, &mut w);
+                }));
+                handlers.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+    for h in handlers {
+        h.join().ok();
+    }
+}
+
+fn json_body(v: &Json) -> Vec<u8> {
+    let mut text = String::new();
+    write_json(v, &mut text);
+    text.push('\n');
+    text.into_bytes()
+}
+
+fn respond<W: Write>(w: &mut W, status: u16, v: &Json) {
+    Response::json(json_body(v), status).write_to(w).ok();
+}
+
+fn outcome_json(out: &PlanOutcome) -> Json {
+    obj(vec![
+        ("fingerprint", s(&out.fingerprint)),
+        ("source", s(out.source.name())),
+        ("kind", s(out.artifact.kind())),
+        ("wall_ms", num(out.wall_ms)),
+        ("artifact", out.artifact.to_json()),
+    ])
+}
+
+/// Route one request and write one response (or one chunked stream).
+fn handle<R: BufRead, W: Write>(state: &State, r: &mut R, w: &mut W) {
+    let req = match Request::read_from(r) {
+        Ok(rq) => rq,
+        Err(e) => {
+            respond(
+                w,
+                400,
+                &error_json("bad-request", &e.to_string()),
+            );
+            return;
+        }
+    };
+    let path = req.path.split('?').next().unwrap_or("").to_string();
+    match (req.method.as_str(), path.as_str()) {
+        ("GET", "/v1/healthz") => respond(
+            w,
+            200,
+            &obj(vec![
+                ("ok", Json::Bool(true)),
+                ("service", s("automap-serve")),
+                (
+                    "registry",
+                    s(&state.registry_dir.display().to_string()),
+                ),
+            ]),
+        ),
+        ("GET", "/v1/cache/stats") => {
+            respond(w, 200, &stats_json(&state.service.stats()))
+        }
+        ("GET", p) if p.starts_with("/v1/plan/") => {
+            handle_fetch(state, w, &p["/v1/plan/".len()..])
+        }
+        ("GET", p) if p.starts_with("/v1/events/") => {
+            handle_events(state, w, &p["/v1/events/".len()..])
+        }
+        ("POST", "/v1/plan") => handle_plan(state, w, &req),
+        (_, "/v1/plan") | (_, "/v1/healthz") | (_, "/v1/cache/stats") => {
+            respond(
+                w,
+                405,
+                &error_json(
+                    "method-not-allowed",
+                    &format!("{} {} is not supported", req.method, path),
+                ),
+            )
+        }
+        _ => respond(
+            w,
+            404,
+            &error_json(
+                "not-found",
+                &format!(
+                    "no route for {} {} (see /v1/healthz, /v1/plan, \
+                     /v1/plan/<fingerprint>, /v1/events/<job>, \
+                     /v1/cache/stats)",
+                    req.method, path
+                ),
+            ),
+        ),
+    }
+}
+
+/// `GET /v1/plan/<fingerprint>`: the registered artifact, byte-for-byte
+/// as the registry stores it.
+fn handle_fetch<W: Write>(state: &State, w: &mut W, fp: &str) {
+    let Some(reg) = state.service.cache().registry() else {
+        respond(
+            w,
+            500,
+            &error_json("no-registry", "daemon has no registry tier"),
+        );
+        return;
+    };
+    for kind in [KIND_PLAN, KIND_PIPELINE] {
+        if let Some(bytes) = reg.load(fp, kind) {
+            Response::json(bytes, 200)
+                .header("x-automap-kind", kind)
+                .write_to(w)
+                .ok();
+            return;
+        }
+    }
+    respond(
+        w,
+        404,
+        &error_json(
+            "not-found",
+            &format!("no plan or pipeline artifact for {fp}"),
+        ),
+    );
+}
+
+/// `GET /v1/events/<job>`: chunked stream, one event JSON per line.
+fn handle_events<W: Write>(state: &State, w: &mut W, job: &str) {
+    let Some(ch) = state.jobs.get(job) else {
+        respond(
+            w,
+            404,
+            &error_json("not-found", &format!("unknown job '{job}'")),
+        );
+        return;
+    };
+    let mut cw = ChunkedWriter::new(w, 200)
+        .header("content-type", "application/json");
+    while let Some(ev) = ch.next() {
+        let mut line = String::new();
+        write_json(&ev, &mut line);
+        line.push('\n');
+        if cw.chunk(line.as_bytes()).is_err() {
+            break; // client hung up; keep draining nothing
+        }
+    }
+    cw.finish().ok();
+    state.jobs.remove(job);
+}
+
+fn tenant_of(req: &Request, spec: Option<&PlanSpec>) -> String {
+    req.header("x-automap-tenant")
+        .map(str::to_string)
+        .or_else(|| spec.and_then(|sp| sp.tenant.clone()))
+        .unwrap_or_else(|| DEFAULT_TENANT.to_string())
+}
+
+/// `POST /v1/plan`: a single spec object, or `{"requests": [...]}`.
+fn handle_plan<W: Write>(state: &State, w: &mut W, req: &Request) {
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => {
+            respond(
+                w,
+                400,
+                &error_json("bad-request", "body is not UTF-8"),
+            );
+            return;
+        }
+    };
+    let body = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => {
+            respond(
+                w,
+                400,
+                &error_json("bad-request", &format!("body: {e}")),
+            );
+            return;
+        }
+    };
+    if let Some(items) = body.get("requests").as_arr() {
+        handle_plan_batch(state, w, req, items);
+        return;
+    }
+    let spec = match PlanSpec::from_json(&body) {
+        Ok(sp) => sp,
+        Err(e) => {
+            respond(
+                w,
+                400,
+                &error_json("bad-request", &e.to_string()),
+            );
+            return;
+        }
+    };
+    let tenant = tenant_of(req, Some(&spec));
+    let permit = match state.admission.enter(&tenant) {
+        Ok(p) => p,
+        Err(rej) => {
+            respond(
+                w,
+                429,
+                &error_json(
+                    "over-capacity",
+                    &format!(
+                        "tenant '{}' has {} plan(s) in flight and {} \
+                         queued; retry later",
+                        rej.tenant, rej.inflight, rej.queued
+                    ),
+                ),
+            );
+            return;
+        }
+    };
+    let channel = spec.job.as_deref().map(|id| state.jobs.register(id));
+    if let Some(ch) = &channel {
+        CURRENT_JOB.with(|j| *j.borrow_mut() = Some(Arc::clone(ch)));
+    }
+    let result = spec
+        .resolve()
+        .and_then(|plan_req| state.service.plan(&plan_req));
+    CURRENT_JOB.with(|j| *j.borrow_mut() = None);
+    if let Some(ch) = &channel {
+        ch.finish();
+    }
+    drop(permit);
+    match result {
+        Ok(out) => respond(w, 200, &outcome_json(&out)),
+        Err(e) => respond(
+            w,
+            500,
+            &error_json("plan-failed", &e.to_string()),
+        ),
+    }
+}
+
+fn handle_plan_batch<W: Write>(
+    state: &State,
+    w: &mut W,
+    req: &Request,
+    items: &[Json],
+) {
+    let tenant = tenant_of(req, None);
+    let permit = match state.admission.enter(&tenant) {
+        Ok(p) => p,
+        Err(rej) => {
+            respond(
+                w,
+                429,
+                &error_json(
+                    "over-capacity",
+                    &format!(
+                        "tenant '{}' has {} plan(s) in flight and {} \
+                         queued; retry later",
+                        rej.tenant, rej.inflight, rej.queued
+                    ),
+                ),
+            );
+            return;
+        }
+    };
+    // resolve what resolves; per-entry failures become per-entry errors
+    let mut resolved: Vec<(usize, crate::api::PlanRequest)> = Vec::new();
+    let mut slots: Vec<Option<Json>> = vec![None; items.len()];
+    for (i, item) in items.iter().enumerate() {
+        match PlanSpec::from_json(item).and_then(|sp| sp.resolve()) {
+            Ok(plan_req) => resolved.push((i, plan_req)),
+            Err(e) => {
+                slots[i] =
+                    Some(error_json("bad-request", &e.to_string()));
+            }
+        }
+    }
+    let reqs: Vec<crate::api::PlanRequest> =
+        resolved.iter().map(|(_, r)| r.clone()).collect();
+    let results = state.service.plan_batch(&reqs);
+    for ((i, _), r) in resolved.iter().zip(results) {
+        slots[*i] = Some(match r {
+            Ok(out) => outcome_json(&out),
+            Err(e) => error_json("plan-failed", &e.to_string()),
+        });
+    }
+    drop(permit);
+    let rows: Vec<Json> =
+        slots.into_iter().map(|v| v.expect("slot filled")).collect();
+    respond(w, 200, &obj(vec![("results", arr(rows))]));
+}

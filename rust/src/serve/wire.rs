@@ -1,0 +1,314 @@
+//! The daemon's wire format: request specs and response shapes.
+//!
+//! A [`PlanSpec`] is exactly one `automap batch` manifest entry — model,
+//! cluster and backend by *name* plus the scalar options. The server
+//! resolves it to a full [`PlanRequest`] (rebuilding the graph from the
+//! model name), so requests stay a few hundred bytes and the fingerprint
+//! the server computes matches what `automap plan` computes locally for
+//! the same flags. `model_for`/`cluster_for` are the single naming
+//! authority — the CLI resolves through these same functions.
+
+use anyhow::{anyhow, Result};
+
+use crate::api::{BackendSpec, CacheStats, PlanOpts, PlanRequest, PpOpts};
+use crate::cluster::SimCluster;
+use crate::graph::models::{gpt2, Gpt2Cfg};
+use crate::sim::DeviceModel;
+use crate::solver::SolveOpts;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Resolve a model name (`gpt2-mini|mini|alpha..delta`).
+pub fn model_for(name: &str) -> Result<Gpt2Cfg> {
+    Ok(match name {
+        "gpt2-mini" | "mini" => Gpt2Cfg::mini(),
+        "alpha" | "beta" | "gamma" | "delta" => Gpt2Cfg::paper(name),
+        other => {
+            return Err(anyhow!(
+                "unknown model {other} (gpt2-mini|alpha..delta)"
+            ))
+        }
+    })
+}
+
+/// Resolve a cluster name (`fig5|single|nvlink<N>|multinode<NxM>`).
+pub fn cluster_for(name: &str) -> Result<SimCluster> {
+    if name == "fig5" {
+        Ok(SimCluster::partially_connected_8gpu())
+    } else if name == "single" {
+        Ok(SimCluster::single())
+    } else if let Some(n) = name.strip_prefix("nvlink") {
+        let n = n
+            .parse()
+            .map_err(|_| anyhow!("nvlink<N> needs an integer, got {n}"))?;
+        Ok(SimCluster::fully_connected(n))
+    } else if let Some(spec) = name.strip_prefix("multinode") {
+        let (a, b) = spec
+            .split_once('x')
+            .ok_or_else(|| anyhow!("multinode<N>x<M>, got {spec}"))?;
+        Ok(SimCluster::multi_node(
+            a.parse().map_err(|_| anyhow!("bad node count {a}"))?,
+            b.parse().map_err(|_| anyhow!("bad per-node count {b}"))?,
+            100.0,
+        ))
+    } else {
+        Err(anyhow!(
+            "unknown cluster {name} (fig5|single|nvlink<N>|multinode<NxM>)"
+        ))
+    }
+}
+
+/// One planning request on the wire. Identical field names and defaults
+/// to an `automap batch` manifest entry, plus the daemon-only `tenant`
+/// and `job` routing fields.
+#[derive(Debug, Clone)]
+pub struct PlanSpec {
+    /// Display label (not part of the fingerprint).
+    pub tag: Option<String>,
+    pub model: String,
+    pub cluster: String,
+    pub backend: String,
+    pub fast: bool,
+    pub budget_gb: Option<f64>,
+    pub sweep: Option<usize>,
+    pub seed: Option<u64>,
+    /// Two-level pipeline planning options (`--pp`).
+    pub pp: Option<PpOpts>,
+    /// Admission-queue tenant (also settable via `x-automap-tenant`).
+    pub tenant: Option<String>,
+    /// Progress-stream job id: events emitted while this request plans
+    /// are published under `GET /v1/events/<job>`.
+    pub job: Option<String>,
+}
+
+impl PlanSpec {
+    pub fn new(model: impl Into<String>, cluster: impl Into<String>) -> PlanSpec {
+        PlanSpec {
+            tag: None,
+            model: model.into(),
+            cluster: cluster.into(),
+            backend: "beam".into(),
+            fast: false,
+            budget_gb: None,
+            sweep: None,
+            seed: None,
+            pp: None,
+            tenant: None,
+            job: None,
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<PlanSpec> {
+        if v.as_obj().is_none() {
+            return Err(anyhow!("plan spec must be a JSON object"));
+        }
+        let pp = match v.get("pp") {
+            Json::Null => None,
+            ppv => {
+                if ppv.as_obj().is_none() {
+                    return Err(anyhow!("\"pp\" must be an object"));
+                }
+                let mut pp = PpOpts::default();
+                if let Some(k) = ppv.get("max_stages").as_usize() {
+                    pp.max_stages = k;
+                }
+                if let Some(k) = ppv.get("min_stages").as_usize() {
+                    pp.min_stages = k;
+                }
+                if let Some(b) = ppv.get("balance").as_f64() {
+                    pp.balance = b;
+                }
+                if let Some(mb) = ppv.get("microbatches").usize_vec() {
+                    pp.microbatches = mb;
+                }
+                Some(pp)
+            }
+        };
+        Ok(PlanSpec {
+            tag: v.get("tag").as_str().map(str::to_string),
+            model: v
+                .get("model")
+                .as_str()
+                .unwrap_or("gpt2-mini")
+                .to_string(),
+            cluster: v
+                .get("cluster")
+                .as_str()
+                .unwrap_or("fig5")
+                .to_string(),
+            backend: v
+                .get("backend")
+                .as_str()
+                .unwrap_or("beam")
+                .to_string(),
+            fast: v.get("fast").as_bool().unwrap_or(false),
+            budget_gb: v.get("budget_gb").as_f64(),
+            sweep: v.get("sweep").as_usize(),
+            seed: v.get("seed").as_usize().map(|x| x as u64),
+            pp,
+            tenant: v.get("tenant").as_str().map(str::to_string),
+            job: v.get("job").as_str().map(str::to_string),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("model", s(&self.model)),
+            ("cluster", s(&self.cluster)),
+            ("backend", s(&self.backend)),
+        ];
+        if let Some(tag) = &self.tag {
+            pairs.push(("tag", s(tag)));
+        }
+        if self.fast {
+            pairs.push(("fast", Json::Bool(true)));
+        }
+        if let Some(gb) = self.budget_gb {
+            pairs.push(("budget_gb", num(gb)));
+        }
+        if let Some(sw) = self.sweep {
+            pairs.push(("sweep", num(sw as f64)));
+        }
+        if let Some(seed) = self.seed {
+            pairs.push(("seed", num(seed as f64)));
+        }
+        if let Some(pp) = &self.pp {
+            pairs.push((
+                "pp",
+                obj(vec![
+                    ("max_stages", num(pp.max_stages as f64)),
+                    ("min_stages", num(pp.min_stages as f64)),
+                    ("balance", num(pp.balance)),
+                    (
+                        "microbatches",
+                        arr(pp
+                            .microbatches
+                            .iter()
+                            .map(|&x| num(x as f64))
+                            .collect()),
+                    ),
+                ]),
+            ));
+        }
+        if let Some(t) = &self.tenant {
+            pairs.push(("tenant", s(t)));
+        }
+        if let Some(j) = &self.job {
+            pairs.push(("job", s(j)));
+        }
+        obj(pairs)
+    }
+
+    /// The display tag: explicit, or `model@cluster/backend`.
+    pub fn tag(&self) -> String {
+        self.tag.clone().unwrap_or_else(|| {
+            format!("{}@{}/{}", self.model, self.cluster, self.backend)
+        })
+    }
+
+    /// Resolve to a full [`PlanRequest`]: rebuild the graph from the
+    /// model name, parse the backend, assemble `PlanOpts` with the same
+    /// precedence the CLI and the batch manifest use.
+    pub fn resolve(&self) -> Result<PlanRequest> {
+        let cfg = model_for(&self.model)?;
+        let mut opts = PlanOpts::default();
+        if self.fast {
+            opts.sweep = 3;
+            opts.solve = SolveOpts {
+                beam_width: 16,
+                anneal_iters: 300,
+                lagrange_iters: 6,
+                ..Default::default()
+            };
+        }
+        if let Some(gb) = self.budget_gb {
+            opts.budget = Some(gb * 1e9);
+        }
+        if let Some(sw) = self.sweep {
+            opts.sweep = sw;
+        }
+        if let Some(seed) = self.seed {
+            opts.seed = seed;
+        }
+        opts.pp = self.pp.clone();
+        let backend = BackendSpec::parse(&self.backend, cfg, opts.solve)?;
+        Ok(PlanRequest::new(
+            self.tag(),
+            gpt2(&cfg),
+            cluster_for(&self.cluster)?,
+            DeviceModel::a100_80gb(),
+        )
+        .with_opts(opts)
+        .with_backend(backend))
+    }
+}
+
+/// The structured error body every non-2xx response carries:
+/// `{"error": {"code": .., "message": ..}}`.
+pub fn error_json(code: &str, message: &str) -> Json {
+    obj(vec![(
+        "error",
+        obj(vec![("code", s(code)), ("message", s(message))]),
+    )])
+}
+
+/// `GET /v1/cache/stats` body (also `automap cache stats --json`).
+pub fn stats_json(st: &CacheStats) -> Json {
+    obj(vec![
+        ("memory_hits", num(st.memory_hits as f64)),
+        ("disk_hits", num(st.disk_hits as f64)),
+        ("partial_resumes", num(st.partial_resumes as f64)),
+        ("misses", num(st.misses as f64)),
+        ("evictions", num(st.evictions as f64)),
+        ("sgraph_builds", num(st.sgraph_builds as f64)),
+        ("sgraph_reuses", num(st.sgraph_reuses as f64)),
+        ("registry_artifacts", num(st.registry_artifacts as f64)),
+        ("registry_bytes", num(st.registry_bytes as f64)),
+        (
+            "registry_gc_evictions",
+            num(st.registry_gc_evictions as f64),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_json_roundtrips() {
+        let mut spec = PlanSpec::new("gpt2-mini", "nvlink2");
+        spec.fast = true;
+        spec.budget_gb = Some(40.0);
+        spec.seed = Some(7);
+        spec.pp = Some(PpOpts { max_stages: 2, ..Default::default() });
+        spec.tenant = Some("team-a".into());
+        let back = PlanSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.model, "gpt2-mini");
+        assert_eq!(back.cluster, "nvlink2");
+        assert!(back.fast);
+        assert_eq!(back.budget_gb, Some(40.0));
+        assert_eq!(back.seed, Some(7));
+        assert_eq!(back.pp.as_ref().unwrap().max_stages, 2);
+        assert_eq!(back.tenant.as_deref(), Some("team-a"));
+        assert_eq!(
+            back.to_json().to_string(),
+            spec.to_json().to_string()
+        );
+    }
+
+    #[test]
+    fn resolve_matches_local_fingerprint() {
+        use crate::api::PlanService;
+        let spec = PlanSpec::new("gpt2-mini", "nvlink2");
+        let a = PlanService::fingerprint(&spec.resolve().unwrap());
+        let b = PlanService::fingerprint(&spec.resolve().unwrap());
+        assert_eq!(a, b, "spec resolution must be deterministic");
+    }
+
+    #[test]
+    fn unknown_names_are_errors() {
+        assert!(model_for("gpt9").is_err());
+        assert!(cluster_for("torus").is_err());
+        assert!(PlanSpec::from_json(&Json::Num(3.0)).is_err());
+    }
+}

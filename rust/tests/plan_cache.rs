@@ -79,8 +79,8 @@ fn warm_hit_is_byte_identical_and_runs_no_solver_stage() {
          invocation)"
     );
     assert_eq!(
-        warm.plan.to_json().to_string(),
-        cold.plan.to_json().to_string(),
+        warm.artifact.to_json().to_string(),
+        cold.artifact.to_json().to_string(),
         "warm cache-hit must return a byte-identical CompiledPlan"
     );
     assert_eq!(warm.fingerprint, cold.fingerprint);
@@ -166,8 +166,8 @@ fn disk_tier_serves_a_fresh_service_instance() {
     assert_eq!(warm.source, PlanSource::DiskHit);
     assert_eq!(warm.fingerprint, cold.fingerprint);
     assert_eq!(
-        warm.plan.to_json().to_string(),
-        cold.plan.to_json().to_string()
+        warm.artifact.to_json().to_string(),
+        cold.artifact.to_json().to_string()
     );
     // promoted to memory: third lookup is a memory hit
     let third = second.plan(&req).unwrap();
@@ -190,8 +190,8 @@ fn partial_resume_skips_the_solver_but_not_the_lowering() {
     let resumed = svc.plan(&req).unwrap();
     assert_eq!(resumed.source, PlanSource::PartialResume);
     assert_eq!(
-        resumed.plan.to_json().to_string(),
-        cold.plan.to_json().to_string(),
+        resumed.artifact.to_json().to_string(),
+        cold.artifact.to_json().to_string(),
         "re-lowering from the cached sharding must reproduce the plan"
     );
     assert_eq!(svc.stats().partial_resumes, 1);
@@ -241,8 +241,8 @@ fn batch_plans_concurrently_and_reports_per_request_status() {
         assert!(o.source.is_hit(), "duplicate must be a cache hit");
         assert_eq!(o.fingerprint, outcomes[0].fingerprint);
         assert_eq!(
-            o.plan.to_json().to_string(),
-            outcomes[0].plan.to_json().to_string()
+            o.artifact.to_json().to_string(),
+            outcomes[0].artifact.to_json().to_string()
         );
     }
     let s = svc.stats();
@@ -353,5 +353,5 @@ fn portfolio_plugs_into_the_service_and_planner() {
     );
     let svc = PlanService::new();
     let out = svc.plan(&req).unwrap();
-    assert_eq!(out.plan.backend, "portfolio(2)");
+    assert_eq!(out.artifact.backend(), "portfolio(2)");
 }

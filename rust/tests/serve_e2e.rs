@@ -1,0 +1,258 @@
+//! Loopback end-to-end tests for `automap serve`: concurrent clients
+//! deduplicate to one solve, a warm-restarted daemon serves byte-identical
+//! plans from its registry without invoking any solver backend, pipeline
+//! (`--pp`) artifacts cache-hit end-to-end, and errors come back as
+//! structured JSON bodies.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use automap::serve::server::{self, ServeConfig};
+use automap::serve::wire::PlanSpec;
+use automap::serve::Client;
+use automap::util::json::Json;
+
+/// Fresh per-test scratch directory under the system temp dir.
+fn scratch(name: &str) -> PathBuf {
+    static UNIQUE: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "automap_serve_{}_{}_{}",
+        name,
+        std::process::id(),
+        UNIQUE.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Daemon on an ephemeral loopback port over `registry`.
+fn start(registry: &Path) -> server::ServerHandle {
+    std::env::set_var("AUTOMAP_THREADS", "4");
+    server::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        registry: registry.to_path_buf(),
+        ..Default::default()
+    })
+    .expect("daemon must bind a loopback port")
+}
+
+/// A quick-to-solve request every test reuses.
+fn mini_spec() -> PlanSpec {
+    let mut spec = PlanSpec::new("gpt2-mini", "nvlink2");
+    spec.fast = true;
+    spec
+}
+
+fn counter(stats: &Json, key: &str) -> usize {
+    stats.get(key).as_usize().unwrap_or(usize::MAX)
+}
+
+#[test]
+fn concurrent_clients_identical_fingerprint_solve_exactly_once() {
+    // baseline: how many solver-graph builds one solo solve performs
+    let solo_dir = scratch("concurrent_solo");
+    let solo = start(&solo_dir);
+    Client::new(solo.addr()).plan(&mini_spec()).unwrap();
+    let stats = Client::new(solo.addr()).cache_stats().unwrap();
+    let solo_builds = counter(&stats, "sgraph_builds");
+    solo.stop();
+
+    let dir = scratch("concurrent");
+    let handle = start(&dir);
+    let addr = handle.addr();
+    Client::new(&addr).healthz().expect("daemon must be healthy");
+
+    // 4 clients race the same spec; 2 race a distinct one
+    let outs: Vec<_> = std::thread::scope(|s| {
+        let same: Vec<_> = (0..4)
+            .map(|_| {
+                let addr = addr.clone();
+                s.spawn(move || Client::new(addr).plan(&mini_spec()))
+            })
+            .collect();
+        let other: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut spec = mini_spec();
+                    spec.seed = Some(99);
+                    Client::new(addr).plan(&spec)
+                })
+            })
+            .collect();
+        same.into_iter()
+            .chain(other)
+            .map(|t| t.join().unwrap().expect("remote plan"))
+            .collect()
+    });
+
+    // identical fingerprints, byte-identical artifacts
+    for out in &outs[1..4] {
+        assert_eq!(out.fingerprint, outs[0].fingerprint);
+        assert_eq!(out.artifact_text(), outs[0].artifact_text());
+    }
+    // the distinct spec resolves to a different artifact
+    assert_eq!(outs[4].fingerprint, outs[5].fingerprint);
+    assert_ne!(outs[4].fingerprint, outs[0].fingerprint);
+
+    // exactly one racer per unique fingerprint became the solve leader;
+    // everyone else was served from the cache after waiting on it
+    let sources: Vec<&str> =
+        outs[..4].iter().map(|o| o.source.as_str()).collect();
+    assert_eq!(
+        sources.iter().filter(|s| **s == "solved").count(),
+        1,
+        "exactly one solve for the shared fingerprint: {sources:?}"
+    );
+    assert!(sources
+        .iter()
+        .all(|s| *s == "solved" || s.ends_with("-hit")));
+    assert_eq!(
+        outs[4..]
+            .iter()
+            .filter(|o| o.source == "solved")
+            .count(),
+        1,
+        "exactly one solve for the distinct fingerprint"
+    );
+
+    // the solver-graph store deduplicated the race down to the same
+    // builds a single solo request performs (the distinct-seed spec
+    // shares its (graph, mesh, device) keys entirely)
+    let stats = Client::new(&addr).cache_stats().unwrap();
+    assert_eq!(
+        counter(&stats, "sgraph_builds"),
+        solo_builds,
+        "stats: {stats}"
+    );
+    handle.stop();
+}
+
+#[test]
+fn warm_restart_serves_byte_identical_plans_with_zero_solves() {
+    let dir = scratch("restart");
+    let first = start(&dir);
+    let out = Client::new(first.addr()).plan(&mini_spec()).unwrap();
+    assert_eq!(out.source, "solved");
+    let bytes = Client::new(first.addr())
+        .fetch_raw(&out.fingerprint)
+        .unwrap();
+    first.stop();
+
+    // new daemon, same registry: the plan must come off disk
+    let second = start(&dir);
+    let client = Client::new(second.addr());
+    let stats = client.cache_stats().unwrap();
+    assert_eq!(counter(&stats, "misses"), 0);
+    assert!(counter(&stats, "registry_artifacts") >= 1);
+
+    let warm = client.plan(&mini_spec()).unwrap();
+    assert_eq!(warm.source, "disk-hit");
+    assert_eq!(warm.fingerprint, out.fingerprint);
+    assert_eq!(warm.artifact_text(), out.artifact_text());
+    assert_eq!(client.fetch_raw(&warm.fingerprint).unwrap(), bytes);
+
+    // zero backend invocations across the whole restarted daemon
+    let stats = client.cache_stats().unwrap();
+    assert_eq!(counter(&stats, "misses"), 0, "stats: {stats}");
+    assert_eq!(counter(&stats, "sgraph_builds"), 0, "stats: {stats}");
+    second.stop();
+}
+
+#[test]
+fn pipeline_artifacts_cache_hit_end_to_end() {
+    let dir = scratch("pipeline");
+    let mut spec = mini_spec();
+    spec.pp = Some(automap::api::PpOpts {
+        max_stages: 2,
+        ..Default::default()
+    });
+
+    let first = start(&dir);
+    let client = Client::new(first.addr());
+    let cold = client.plan(&spec).unwrap();
+    assert_eq!(cold.kind, "pipeline");
+    assert_eq!(cold.source, "solved");
+    let warm = client.plan(&spec).unwrap();
+    assert_eq!(warm.source, "memory-hit");
+    assert_eq!(warm.artifact_text(), cold.artifact_text());
+    first.stop();
+
+    // disk tier: a restarted daemon replays the pipeline solution too
+    let second = start(&dir);
+    let client = Client::new(second.addr());
+    let disk = client.plan(&spec).unwrap();
+    assert_eq!(disk.source, "disk-hit");
+    assert_eq!(disk.kind, "pipeline");
+    assert_eq!(disk.artifact_text(), cold.artifact_text());
+    let stats = client.cache_stats().unwrap();
+    assert_eq!(counter(&stats, "sgraph_builds"), 0, "stats: {stats}");
+    second.stop();
+}
+
+#[test]
+fn batch_endpoint_reports_per_entry_outcomes() {
+    let dir = scratch("batch");
+    let handle = start(&dir);
+    let client = Client::new(handle.addr());
+    let mut bad = mini_spec();
+    bad.model = "gpt9".into();
+    let results = client
+        .plan_batch(&[mini_spec(), mini_spec(), bad])
+        .unwrap();
+    assert_eq!(results.len(), 3);
+    let a = results[0].as_ref().expect("first entry plans");
+    let b = results[1].as_ref().expect("duplicate entry plans");
+    assert_eq!(a.fingerprint, b.fingerprint);
+    let err = results[2].as_ref().expect_err("unknown model fails");
+    assert!(err.to_string().contains("unknown model"), "{err}");
+    handle.stop();
+}
+
+#[test]
+fn progress_events_stream_for_a_named_job() {
+    let dir = scratch("events");
+    let handle = start(&dir);
+    let client = Client::new(handle.addr());
+    let mut spec = mini_spec();
+    spec.job = Some("job-1".into());
+    client.plan(&spec).unwrap();
+    // the job finished, so its buffered events drain and the stream ends
+    let mut names = Vec::new();
+    let n = client
+        .events("job-1", |ev| {
+            names.push(
+                ev.get("event").as_str().unwrap_or("?").to_string(),
+            );
+        })
+        .unwrap();
+    assert!(n > 0, "a solve must emit progress events");
+    assert!(
+        names.iter().any(|n| n == "stage-start"),
+        "events: {names:?}"
+    );
+    handle.stop();
+}
+
+#[test]
+fn errors_are_structured_json() {
+    let dir = scratch("errors");
+    let handle = start(&dir);
+    let client = Client::new(handle.addr());
+
+    let err = client.fetch("0000000000000000").unwrap_err();
+    assert!(err.to_string().contains("not-found"), "{err}");
+
+    let err = Client::new(handle.addr())
+        .plan(&{
+            let mut sp = mini_spec();
+            sp.cluster = "torus".into();
+            sp
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("unknown cluster"), "{err}");
+
+    let err = client.events("no-such-job", |_| {}).unwrap_err();
+    assert!(err.to_string().contains("not-found"), "{err}");
+    handle.stop();
+}

@@ -128,7 +128,7 @@ fn shared_store_plan_is_byte_identical_to_isolated_build() {
     let isolated = p.lower().unwrap();
 
     assert_eq!(
-        shared.plan.to_json().to_string(),
+        shared.compiled().unwrap().to_json().to_string(),
         isolated.to_json().to_string(),
         "shared-build plan must be byte-identical to an isolated build"
     );

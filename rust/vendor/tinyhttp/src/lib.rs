@@ -1,0 +1,477 @@
+//! Minimal std-only HTTP/1.1 primitives for the `automap serve` daemon.
+//!
+//! Scope: exactly what a loopback planning daemon needs — request parsing
+//! (request line, headers, `Content-Length` bodies), response writing,
+//! chunked transfer-encoding (server-side writer and client-side decoder),
+//! and a tiny blocking client over `TcpStream`. No TLS, no HTTP/2, no
+//! keep-alive: every exchange is one request, one response, connection
+//! close. Hyper/reqwest are unavailable offline; this crate keeps the
+//! wire format honest from both sides without external dependencies.
+
+use std::fmt;
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Errors from parsing or transport. Wraps `io::Error` so `?` works in
+/// handler code; protocol violations carry a short description.
+#[derive(Debug)]
+pub enum Error {
+    Io(io::Error),
+    Protocol(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "http io error: {e}"),
+            Error::Protocol(m) => write!(f, "http protocol error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<io::Error> for Error {
+    fn from(e: io::Error) -> Error {
+        Error::Io(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn proto(msg: impl Into<String>) -> Error {
+    Error::Protocol(msg.into())
+}
+
+/// Cap on header-section and body sizes, a guard against malformed or
+/// hostile peers tying up a handler thread (plans are a few hundred KB).
+pub const MAX_HEADER_BYTES: usize = 64 * 1024;
+pub const MAX_BODY_BYTES: usize = 256 * 1024 * 1024;
+
+/// A parsed HTTP/1.1 request. Header names are lowercased on parse.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value for `name` (case-insensitive), if present.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse one request from a buffered stream: request line, headers,
+    /// then a `Content-Length` body (chunked request bodies are not
+    /// accepted — the daemon's clients never send them).
+    pub fn read_from<R: BufRead>(r: &mut R) -> Result<Request> {
+        let line = read_line(r)?;
+        let mut parts = line.split_whitespace();
+        let method = parts
+            .next()
+            .ok_or_else(|| proto("empty request line"))?
+            .to_string();
+        let path = parts
+            .next()
+            .ok_or_else(|| proto("request line missing path"))?
+            .to_string();
+        let version = parts.next().unwrap_or("HTTP/1.0");
+        if !version.starts_with("HTTP/1.") {
+            return Err(proto(format!("unsupported version '{version}'")));
+        }
+        let headers = read_headers(r)?;
+        let mut req = Request {
+            method,
+            path,
+            headers,
+            body: Vec::new(),
+        };
+        if let Some(len) = req.header("content-length") {
+            let len: usize = len
+                .trim()
+                .parse()
+                .map_err(|_| proto(format!("bad content-length '{len}'")))?;
+            if len > MAX_BODY_BYTES {
+                return Err(proto(format!("body of {len} bytes exceeds cap")));
+            }
+            let mut body = vec![0u8; len];
+            r.read_exact(&mut body)?;
+            req.body = body;
+        } else if req
+            .header("transfer-encoding")
+            .map(|v| v.eq_ignore_ascii_case("chunked"))
+            .unwrap_or(false)
+        {
+            return Err(proto("chunked request bodies are not supported"));
+        }
+        Ok(req)
+    }
+}
+
+/// An HTTP/1.1 response under construction. `Content-Length` and
+/// `Connection: close` are added automatically on write.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Response {
+        Response {
+            status,
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    pub fn header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn body(mut self, bytes: impl Into<Vec<u8>>) -> Response {
+        self.body = bytes.into();
+        self
+    }
+
+    pub fn json(body: impl Into<Vec<u8>>, status: u16) -> Response {
+        Response::new(status)
+            .header("content-type", "application/json")
+            .body(body)
+    }
+
+    /// Write status line, headers, and body; flushes the stream.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\n",
+            self.status,
+            status_text(self.status)
+        )?;
+        for (k, v) in &self.headers {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        write!(w, "content-length: {}\r\n", self.body.len())?;
+        write!(w, "connection: close\r\n\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+/// Canonical reason phrases for the handful of codes the daemon emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        _ => "Unknown",
+    }
+}
+
+/// Server-side chunked transfer-encoding writer: send the header once,
+/// then any number of chunks, then `finish()` for the zero-length
+/// terminator. Each chunk is flushed immediately so clients observe
+/// events as they happen.
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+    started: bool,
+    status: u16,
+    headers: Vec<(String, String)>,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    pub fn new(w: W, status: u16) -> ChunkedWriter<W> {
+        ChunkedWriter {
+            w,
+            started: false,
+            status,
+            headers: Vec::new(),
+        }
+    }
+
+    pub fn header(mut self, name: &str, value: &str) -> ChunkedWriter<W> {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    fn start(&mut self) -> Result<()> {
+        if self.started {
+            return Ok(());
+        }
+        write!(
+            self.w,
+            "HTTP/1.1 {} {}\r\n",
+            self.status,
+            status_text(self.status)
+        )?;
+        for (k, v) in &self.headers {
+            write!(self.w, "{k}: {v}\r\n")?;
+        }
+        write!(self.w, "transfer-encoding: chunked\r\n")?;
+        write!(self.w, "connection: close\r\n\r\n")?;
+        self.w.flush()?;
+        self.started = true;
+        Ok(())
+    }
+
+    /// Emit one chunk (empty input is skipped: a zero-length chunk is
+    /// the stream terminator in the chunked coding).
+    pub fn chunk(&mut self, data: &[u8]) -> Result<()> {
+        self.start()?;
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        write!(self.w, "\r\n")?;
+        self.w.flush()?;
+        Ok(())
+    }
+
+    /// Terminate the stream with the zero-length chunk.
+    pub fn finish(mut self) -> Result<()> {
+        self.start()?;
+        write!(self.w, "0\r\n\r\n")?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// A client-side response: status, headers, and a reader positioned at
+/// the start of the body. `read_body` drains it honoring
+/// `Content-Length` / chunked / read-to-EOF; `next_chunk` steps a
+/// chunked stream incrementally.
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    reader: BufReader<TcpStream>,
+    chunked: bool,
+    content_length: Option<usize>,
+}
+
+impl ClientResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Read the entire body.
+    pub fn read_body(mut self) -> Result<Vec<u8>> {
+        if self.chunked {
+            let mut out = Vec::new();
+            while let Some(chunk) = self.next_chunk()? {
+                out.extend_from_slice(&chunk);
+            }
+            return Ok(out);
+        }
+        let mut out = Vec::new();
+        match self.content_length {
+            Some(len) => {
+                if len > MAX_BODY_BYTES {
+                    return Err(proto(format!("body of {len} bytes exceeds cap")));
+                }
+                out.resize(len, 0);
+                self.reader.read_exact(&mut out)?;
+            }
+            None => {
+                self.reader.read_to_end(&mut out)?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Next chunk of a chunked body, or `None` after the terminator.
+    /// Errors if the response is not chunked.
+    pub fn next_chunk(&mut self) -> Result<Option<Vec<u8>>> {
+        if !self.chunked {
+            return Err(proto("response body is not chunked"));
+        }
+        let size_line = read_line(&mut self.reader)?;
+        let size_str = size_line.split(';').next().unwrap_or("").trim();
+        let size = usize::from_str_radix(size_str, 16)
+            .map_err(|_| proto(format!("bad chunk size '{size_line}'")))?;
+        if size > MAX_BODY_BYTES {
+            return Err(proto(format!("chunk of {size} bytes exceeds cap")));
+        }
+        if size == 0 {
+            // trailer section: zero or more header lines then a blank
+            loop {
+                if read_line(&mut self.reader)?.is_empty() {
+                    break;
+                }
+            }
+            return Ok(None);
+        }
+        let mut data = vec![0u8; size];
+        self.reader.read_exact(&mut data)?;
+        let mut crlf = [0u8; 2];
+        self.reader.read_exact(&mut crlf)?;
+        if &crlf != b"\r\n" {
+            return Err(proto("chunk not terminated by CRLF"));
+        }
+        Ok(Some(data))
+    }
+}
+
+/// Issue one blocking request against `addr` ("host:port") and parse the
+/// response head. The connection closes after the exchange.
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<ClientResponse> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| proto(format!("connect to {addr} failed: {e}")))?;
+    let mut w = stream.try_clone()?;
+    write!(w, "{method} {path} HTTP/1.1\r\n")?;
+    write!(w, "host: {addr}\r\n")?;
+    for (k, v) in headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "content-length: {}\r\n", body.len())?;
+    write!(w, "connection: close\r\n\r\n")?;
+    w.write_all(body)?;
+    w.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let status_line = read_line(&mut reader)?;
+    let mut parts = status_line.split_whitespace();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        return Err(proto(format!("bad status line '{status_line}'")));
+    }
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| proto(format!("bad status line '{status_line}'")))?;
+    let headers = read_headers(&mut reader)?;
+    let chunked = headers
+        .iter()
+        .any(|(k, v)| k == "transfer-encoding" && v.eq_ignore_ascii_case("chunked"));
+    let content_length = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.trim().parse().ok());
+    Ok(ClientResponse {
+        status,
+        headers,
+        reader,
+        chunked,
+        content_length,
+    })
+}
+
+/// Read a CRLF- (or bare-LF-) terminated line, without the terminator.
+fn read_line<R: BufRead>(r: &mut R) -> Result<String> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line)?;
+    if n == 0 {
+        return Err(proto("unexpected end of stream"));
+    }
+    if line.len() > MAX_HEADER_BYTES {
+        return Err(proto("header line exceeds cap"));
+    }
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(line)
+}
+
+/// Read header lines until the blank separator; names are lowercased.
+fn read_headers<R: BufRead>(r: &mut R) -> Result<Vec<(String, String)>> {
+    let mut headers = Vec::new();
+    let mut total = 0usize;
+    loop {
+        let line = read_line(r)?;
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        total += line.len();
+        if total > MAX_HEADER_BYTES {
+            return Err(proto("header section exceeds cap"));
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| proto(format!("malformed header '{line}'")))?;
+        headers.push((
+            name.trim().to_ascii_lowercase(),
+            value.trim().to_string(),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = b"POST /v1/plan HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\nX-Automap-Tenant: t1\r\n\r\nhello";
+        let mut r = BufReader::new(&raw[..]);
+        let req = Request::read_from(&mut r).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/plan");
+        assert_eq!(req.header("x-automap-tenant"), Some("t1"));
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn response_roundtrips_headers_and_body() {
+        let mut buf = Vec::new();
+        Response::json(br#"{"ok":true}"#.to_vec(), 200)
+            .write_to(&mut buf)
+            .unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("content-type: application/json\r\n"));
+        assert!(text.contains("content-length: 11\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
+    }
+
+    #[test]
+    fn chunked_writer_emits_sized_frames() {
+        let mut buf = Vec::new();
+        {
+            let mut w = ChunkedWriter::new(&mut buf, 200)
+                .header("content-type", "application/json");
+            w.chunk(b"abc").unwrap();
+            w.chunk(b"defgh").unwrap();
+            w.finish().unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("transfer-encoding: chunked"));
+        assert!(text.contains("3\r\nabc\r\n"));
+        assert!(text.contains("5\r\ndefgh\r\n"));
+        assert!(text.ends_with("0\r\n\r\n"));
+    }
+
+    #[test]
+    fn rejects_oversized_content_length() {
+        let raw = format!(
+            "POST / HTTP/1.1\r\ncontent-length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        let mut r = BufReader::new(raw.as_bytes());
+        assert!(Request::read_from(&mut r).is_err());
+    }
+}
