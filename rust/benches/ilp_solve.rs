@@ -1,0 +1,157 @@
+//! Bench: the exact-ILP backend vs beam vs portfolio(+ilp) on the
+//! gpt2-mini solver graph. For each fig5 cluster prefix the three
+//! backends solve the same (graph, mesh) instance; the table reports the
+//! solver objective each one reached (lower is better — ilp is anytime,
+//! so it can never lose to beam) and its solve wall time, plus the ILP's
+//! branch-and-bound telemetry (engaged / proven optimal / nodes).
+//!
+//! Results are printed as a table and recorded in `BENCH_ilp.json` at
+//! the working directory root.
+//!
+//! `cargo bench --bench ilp_solve [-- --quick]`
+
+use automap::api::{BeamSolve, ClusterReport, IlpSolve, MeshCandidates,
+                   PortfolioSolve, Solve};
+use automap::cluster::{DeviceMesh, SimCluster};
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::layout::LayoutManager;
+use automap::sim::DeviceModel;
+use automap::solver::{solve, solve_ilp_detailed, IlpOpts, SolveOpts,
+                      SolverGraph};
+use automap::util::bench::{bench, quick, Table};
+use automap::util::json::{arr, num, obj, s, write_json, Json};
+
+/// The widest mesh the cluster supports (most axes; ties to the first).
+fn widest_mesh(meshes: &[DeviceMesh]) -> &DeviceMesh {
+    meshes
+        .iter()
+        .max_by_key(|m| m.shape.len())
+        .expect("fig5 clusters always yield at least one mesh")
+}
+
+fn main() {
+    let q = quick();
+    let iters = if q { 1 } else { 3 };
+    let dev = DeviceModel::a100_80gb();
+    let g = gpt2(&Gpt2Cfg::mini());
+    let budget = dev.memory * 0.9;
+    let opts = SolveOpts {
+        beam_width: 16,
+        anneal_iters: 300,
+        lagrange_iters: 6,
+        ..Default::default()
+    };
+    let ilp_opts = IlpOpts {
+        time_budget_ms: if q { 500 } else { 2_000 },
+        ..Default::default()
+    };
+
+    let mut table = Table::new(
+        "intra-op solve: beam vs exact ILP vs portfolio(+ilp)",
+        &["cluster", "mesh", "beam cost ms", "ilp cost ms",
+          "pfl cost ms", "gap %", "beam ms", "ilp ms", "pfl ms",
+          "optimal", "bnb nodes"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    for n in if q { vec![2usize] } else { vec![2usize, 4] } {
+        let cluster = SimCluster::fig5_prefix(n);
+        let report = ClusterReport::probe(&cluster, 42);
+        let meshes = MeshCandidates::enumerate(&report, None).meshes;
+        let mesh = widest_mesh(&meshes).clone();
+        let lm = LayoutManager::new(mesh.clone());
+        let sg = SolverGraph::build(&g, &mesh, &dev, &lm);
+
+        let beam_backend = BeamSolve(opts);
+        let ilp_backend = IlpSolve::new(opts, ilp_opts);
+        let pfl_backend =
+            PortfolioSolve::spread(opts, 4).with_ilp(ilp_opts);
+
+        let beam_sol = beam_backend
+            .solve(&sg, budget)
+            .expect("beam solves gpt2-mini");
+        let warm = solve(&sg, budget, opts);
+        let ilp_report =
+            solve_ilp_detailed(&sg, budget, ilp_opts, warm.as_ref());
+        let ilp_sol = ilp_report
+            .solution
+            .clone()
+            .expect("ilp never loses a feasible warm start");
+        let pfl_sol = pfl_backend
+            .solve(&sg, budget)
+            .expect("portfolio solves gpt2-mini");
+        assert!(
+            ilp_sol.time <= beam_sol.time * (1.0 + 1e-9),
+            "anytime ILP must never cost more than beam"
+        );
+
+        let beam_t = bench(&format!("beam fig5-{n}"), 1, iters, || {
+            beam_backend.solve(&sg, budget).map(|sol| sol.time)
+        });
+        let ilp_t = bench(&format!("ilp fig5-{n}"), 0, iters, || {
+            ilp_backend.solve(&sg, budget).map(|sol| sol.time)
+        });
+        let pfl_t = bench(&format!("pfl fig5-{n}"), 0, iters, || {
+            pfl_backend.solve(&sg, budget).map(|sol| sol.time)
+        });
+
+        let gap = (beam_sol.time - ilp_sol.time)
+            / beam_sol.time.max(1e-12)
+            * 100.0;
+        table.row(vec![
+            format!("fig5-{n}"),
+            format!("{:?}", mesh.shape),
+            format!("{:.4}", beam_sol.time * 1e3),
+            format!("{:.4}", ilp_sol.time * 1e3),
+            format!("{:.4}", pfl_sol.time * 1e3),
+            format!("{gap:.2}"),
+            format!("{:.1}", beam_t.median_ns / 1e6),
+            format!("{:.1}", ilp_t.median_ns / 1e6),
+            format!("{:.1}", pfl_t.median_ns / 1e6),
+            format!(
+                "{}{}",
+                if ilp_report.proven_optimal { "yes" } else { "no" },
+                if ilp_report.engaged { "" } else { " (refused)" }
+            ),
+            ilp_report.nodes.to_string(),
+        ]);
+        rows.push(obj(vec![
+            ("cluster", s(&format!("fig5-{n}"))),
+            (
+                "mesh",
+                arr(mesh
+                    .shape
+                    .iter()
+                    .map(|&x| num(x as f64))
+                    .collect()),
+            ),
+            ("beam_cost_ms", num(beam_sol.time * 1e3)),
+            ("ilp_cost_ms", num(ilp_sol.time * 1e3)),
+            ("portfolio_cost_ms", num(pfl_sol.time * 1e3)),
+            ("gap_closed_pct", num(gap)),
+            ("beam_wall_ms", num(beam_t.median_ns / 1e6)),
+            ("ilp_wall_ms", num(ilp_t.median_ns / 1e6)),
+            ("portfolio_wall_ms", num(pfl_t.median_ns / 1e6)),
+            ("ilp_proven_optimal", Json::Bool(ilp_report.proven_optimal)),
+            ("ilp_engaged", Json::Bool(ilp_report.engaged)),
+            ("ilp_bnb_nodes", num(ilp_report.nodes as f64)),
+        ]));
+    }
+    table.print();
+
+    let out = obj(vec![
+        ("bench", s("ilp_solve")),
+        ("model", s("gpt2-mini")),
+        ("threads", num(automap::util::pool::threads() as f64)),
+        ("quick", Json::Bool(q)),
+        ("results", arr(rows)),
+    ]);
+    let mut text = String::new();
+    write_json(&out, &mut text);
+    text.push('\n');
+    if let Err(e) = std::fs::write("BENCH_ilp.json", &text) {
+        eprintln!("could not write BENCH_ilp.json: {e}");
+    } else {
+        println!("\nrecorded -> BENCH_ilp.json");
+    }
+}

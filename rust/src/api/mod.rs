@@ -29,11 +29,15 @@
 //!
 //! Solver backends are pluggable through the [`Solve`] trait
 //! ([`with_backend`](Planner::with_backend)): the exact branch-and-bound,
-//! the production beam + Lagrangian + annealing path, the portfolio race
-//! ([`PortfolioSolve`]), the measured [`SimMeasureSolve`] (candidates
-//! ranked by discrete-event replay instead of the cost model), and the
-//! Table-4 analytic baselines (DDP, Megatron-1D, Optimus-2D, 3D-TP) are
-//! all interchangeable. Per-stage progress callbacks
+//! the production beam + Lagrangian + annealing path, the anytime exact
+//! ILP ([`IlpSolve`], the paper's integer program over the vendored
+//! `milp` solver), the portfolio race ([`PortfolioSolve`]), the measured
+//! [`SimMeasureSolve`] (candidates ranked by discrete-event replay
+//! instead of the cost model), and the Table-4 analytic baselines (DDP,
+//! Megatron-1D, Optimus-2D, 3D-TP) are all interchangeable. The value
+//! form of that choice is a [`BackendSpec`]
+//! ([`with_backend_spec`](Planner::with_backend_spec)), which also
+//! propagates into pipeline cell fan-out. Per-stage progress callbacks
 //! ([`on_progress`](Planner::on_progress)) feed the CLI and benches.
 //!
 //! Past `lower()` sits the verify stage: a [`CompiledPlan`] replays
@@ -74,11 +78,14 @@ pub use crate::pp::PpOpts;
 pub use self::cache::{CacheStats, DiskEntry, PlanArtifact, PlanCache,
                       PlanSource};
 pub use self::registry::{PlanRegistry, RegistryEntry, RegistryStats};
-pub use self::progress::{PlanStage, ProgressEvent};
-pub use self::service::{BackendSpec, ClusterSpec, PlanOutcome,
-                        PlanRequest, PlanService};
-pub use self::solve::{Baseline, BaselineSolve, BeamSolve, ExactSolve,
-                      PortfolioSolve, SimMeasureSolve, Solve, SolveCtx};
+pub use self::progress::{HubGuard, PlanStage, ProgressEvent,
+                         ProgressHub};
+pub use self::service::{ClusterSpec, PlanOutcome, PlanRequest,
+                        PlanService};
+pub use self::solve::{BackendSpec, Baseline, BaselineSolve, BeamSolve,
+                      ExactSolve, IlpSolve, PortfolioSolve,
+                      SimMeasureSolve, Solve, SolveCtx,
+                      PORTFOLIO_DEFAULT_CONFIGS};
 pub use self::store::{graph_fingerprint, MeshGraph, SolverGraphStore};
 
 use std::collections::BTreeMap;
@@ -207,6 +214,11 @@ pub struct Planner<'a> {
     opts: PlanOpts,
     /// None = default beam backend built from `opts.solve` at solve time.
     backend: Option<Box<dyn Solve + 'a>>,
+    /// Value form of the backend, kept when installed via
+    /// [`with_backend_spec`](Planner::with_backend_spec) so the pipeline
+    /// stage can ship it across the per-cell worker threads. `None` when
+    /// no backend (or an ad-hoc `dyn Solve`) is installed.
+    backend_spec: Option<BackendSpec>,
     progress: Option<ProgressFn<'a>>,
     prof: Option<GraphProfile>,
     groups: Option<Vec<Vec<NodeId>>>,
@@ -236,6 +248,7 @@ impl<'a> Planner<'a> {
             dev,
             opts: PlanOpts::default(),
             backend: None,
+            backend_spec: None,
             progress: None,
             prof: None,
             groups: None,
@@ -273,6 +286,7 @@ impl<'a> Planner<'a> {
             dev,
             opts: PlanOpts::default(),
             backend: None,
+            backend_spec: None,
             progress: None,
             prof: None,
             groups: None,
@@ -303,6 +317,19 @@ impl<'a> Planner<'a> {
     /// Install a solver backend (default: [`BeamSolve`] from `opts.solve`).
     pub fn with_backend(mut self, backend: impl Solve + 'a) -> Self {
         self.backend = Some(Box::new(backend));
+        self.backend_spec = None;
+        self
+    }
+
+    /// Install a solver backend from its value form. Unlike
+    /// [`with_backend`](Planner::with_backend), the spec is kept and
+    /// propagates into the pipeline stage's nested per-cell compiles
+    /// (each cell clones it for its own planner). Call *after*
+    /// [`with_opts`](Planner::with_opts): `opts.solve` seeds beam-family
+    /// entrants (the ILP warm start, the sim proposer).
+    pub fn with_backend_spec(mut self, spec: &BackendSpec) -> Self {
+        self.backend = spec.build(self.opts.solve);
+        self.backend_spec = Some(spec.clone());
         self
     }
 
@@ -1026,10 +1053,13 @@ impl<'a> Planner<'a> {
     /// Orthogonal to `lower()`: the intra-op stages plan one mesh, this
     /// stage plans a chain of them. Options come from
     /// [`PlanOpts::pp`] (defaults if unset). Runs at most once per
-    /// planner, like every other stage. Nested stage compiles use the
-    /// default beam backend configured by `opts.solve` (a custom
-    /// [`Solve`] backend installed on this planner does not propagate —
-    /// backends are not clonable across the cell fan-out).
+    /// planner, like every other stage. Nested stage compiles reuse this
+    /// planner's [`BackendSpec`] when one was installed via
+    /// [`with_backend_spec`](Planner::with_backend_spec) — each cell
+    /// clones the spec for its own planner — and fall back to the
+    /// default beam backend configured by `opts.solve` otherwise (an
+    /// ad-hoc `dyn Solve` from [`with_backend`](Planner::with_backend)
+    /// is not clonable across the cell fan-out).
     pub fn solve_pipeline(&mut self) -> Result<&PipelineSolution> {
         if self.pipeline.is_some() {
             return Ok(self.pipeline.as_ref().unwrap());
@@ -1044,6 +1074,8 @@ impl<'a> Planner<'a> {
         let total_flops = self.prof.as_ref().unwrap().total_flops();
         let ppopts = self.opts.pp.clone().unwrap_or_default();
         let info = self.report.as_ref().unwrap().info.clone();
+        let spec =
+            self.backend_spec.clone().unwrap_or(BackendSpec::Beam);
         // hand the callback to the partitioner without aliasing `self`
         let mut progress = self.progress.take();
         let result = crate::pp::solve(
@@ -1052,6 +1084,7 @@ impl<'a> Planner<'a> {
             self.dev,
             &self.opts,
             &ppopts,
+            &spec,
             budget,
             total_flops,
             &self.store,

@@ -6,8 +6,20 @@
 //! service adds cache-level events (lookups, evictions, per-request batch
 //! completion) on the same channel so a single callback observes both the
 //! cache tier and the stages running beneath it.
+//!
+//! Planner/service callbacks are `FnMut` closures pinned to one thread;
+//! events born on `util::pool` worker threads (the pipeline cell
+//! fan-out, batch workers) cannot reach them directly. [`ProgressHub`]
+//! is the thread-crossing form: an `Arc`'d `Fn(&ProgressEvent) + Send +
+//! Sync` sink installed on a thread via [`ProgressHub::install`] and
+//! inherited by every pool worker that thread spawns (the pool clones
+//! its context into workers), so [`ProgressHub::current`] finds it from
+//! inside the fan-out and no event is silently dropped.
+
+use std::sync::Arc;
 
 use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::pool;
 
 use super::cache::PlanSource;
 
@@ -231,5 +243,81 @@ pub(crate) type ProgressFn<'a> = Box<dyn FnMut(&ProgressEvent) + 'a>;
 pub(crate) fn emit(p: &mut Option<ProgressFn<'_>>, ev: ProgressEvent) {
     if let Some(f) = p.as_mut() {
         f(&ev);
+    }
+}
+
+/// A thread-crossing progress sink: events emitted on `util::pool`
+/// worker threads (the pipeline cell fan-out, batch workers) reach the
+/// hub installed on the thread that spawned them. See the module docs.
+pub struct ProgressHub {
+    sink: Box<dyn Fn(&ProgressEvent) + Send + Sync>,
+}
+
+impl ProgressHub {
+    pub fn new(
+        sink: impl Fn(&ProgressEvent) + Send + Sync + 'static,
+    ) -> Arc<ProgressHub> {
+        Arc::new(ProgressHub { sink: Box::new(sink) })
+    }
+
+    /// Deliver one event to the sink.
+    pub fn emit(&self, ev: &ProgressEvent) {
+        (self.sink)(ev);
+    }
+
+    /// Install `hub` as the calling thread's hub; `parallel_map` workers
+    /// spawned from this thread (transitively) inherit it. The returned
+    /// guard restores the previously-installed context on drop.
+    #[must_use = "dropping the guard immediately uninstalls the hub"]
+    pub fn install(hub: Arc<ProgressHub>) -> HubGuard {
+        HubGuard { prev: pool::install_context(Some(hub)) }
+    }
+
+    /// The hub visible to the calling thread: installed directly, or
+    /// inherited from the thread that spawned this pool worker.
+    pub fn current() -> Option<Arc<ProgressHub>> {
+        pool::current_context()
+            .and_then(|c| c.downcast::<ProgressHub>().ok())
+    }
+}
+
+/// Restores the pool context that [`ProgressHub::install`] displaced.
+pub struct HubGuard {
+    prev: Option<pool::Ctx>,
+}
+
+impl Drop for HubGuard {
+    fn drop(&mut self) {
+        pool::install_context(self.prev.take());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn hub_crosses_the_pool_fanout_and_uninstalls_on_drop() {
+        assert!(ProgressHub::current().is_none());
+        let seen: Arc<Mutex<Vec<String>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&seen);
+        let hub = ProgressHub::new(move |ev| {
+            sink.lock().unwrap().push(ev.name().to_string());
+        });
+        {
+            let _guard = ProgressHub::install(hub);
+            let items: Vec<usize> = (0..16).collect();
+            pool::parallel_map(&items, |_| {
+                if let Some(h) = ProgressHub::current() {
+                    h.emit(&ProgressEvent::StageStart {
+                        stage: PlanStage::Detect,
+                    });
+                }
+            });
+        }
+        assert!(ProgressHub::current().is_none(), "guard must restore");
+        assert_eq!(seen.lock().unwrap().len(), 16);
     }
 }

@@ -39,10 +39,8 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::cluster::SimCluster;
-use crate::graph::models::Gpt2Cfg;
 use crate::graph::Graph;
 use crate::sim::DeviceModel;
-use crate::solver::SolveOpts;
 use crate::util::json::{hash_json, StableHasher};
 use crate::util::pool::parallel_map;
 
@@ -52,8 +50,8 @@ use super::cache::{CacheStats, Lookup, PlanArtifact, PlanCache,
                    PlanSource};
 use super::progress::ProgressEvent;
 use super::registry::{KIND_PIPELINE, KIND_PLAN};
-use super::solve::{Baseline, BaselineSolve, ExactSolve, PortfolioSolve,
-                   SimMeasureSolve};
+use super::solve::hash_solve_opts;
+pub use super::solve::{BackendSpec, PORTFOLIO_DEFAULT_CONFIGS};
 use super::store::{graph_fingerprint, SolverGraphStore};
 use super::{PlanOpts, Planner};
 
@@ -63,121 +61,6 @@ use super::{PlanOpts, Planner};
 pub enum ClusterSpec {
     Sim(SimCluster),
     Report(ClusterReport),
-}
-
-/// Serializable description of which solver backend to run — the
-/// service needs a *value* (clonable, hashable into the fingerprint,
-/// shippable across batch worker threads), not a `dyn Solve` object.
-#[derive(Debug, Clone)]
-pub enum BackendSpec {
-    /// Default beam + Lagrangian + annealing, configured by `opts.solve`.
-    Beam,
-    /// Exact branch-and-bound (small graphs only).
-    Exact,
-    /// A Table-4 analytic baseline.
-    Baseline(Baseline, Gpt2Cfg),
-    /// Portfolio race over explicit beam configurations.
-    Portfolio(Vec<SolveOpts>),
-    /// Measured backend: beam-proposed candidates ranked by replaying
-    /// each lowered schedule through the discrete-event executor.
-    Sim(SolveOpts),
-}
-
-/// How many configs `BackendSpec::parse("portfolio", ..)` spreads over.
-pub const PORTFOLIO_DEFAULT_CONFIGS: usize = 4;
-
-impl BackendSpec {
-    /// CLI-name parser shared by `automap plan` and `automap batch`.
-    /// `cfg` feeds the analytic baselines; `base_solve` seeds the
-    /// portfolio spread.
-    pub fn parse(
-        name: &str,
-        cfg: Gpt2Cfg,
-        base_solve: SolveOpts,
-    ) -> Result<BackendSpec> {
-        Ok(match name {
-            "beam" => BackendSpec::Beam,
-            "exact" => BackendSpec::Exact,
-            "portfolio" => BackendSpec::Portfolio(
-                PortfolioSolve::spread(base_solve, PORTFOLIO_DEFAULT_CONFIGS)
-                    .configs,
-            ),
-            "sim" => BackendSpec::Sim(base_solve),
-            "ddp" => BackendSpec::Baseline(Baseline::Ddp, cfg),
-            "megatron-1d" => {
-                BackendSpec::Baseline(Baseline::Megatron1d, cfg)
-            }
-            "optimus-2d" => BackendSpec::Baseline(Baseline::Optimus2d, cfg),
-            "3d-tp" => BackendSpec::Baseline(Baseline::Tp3d, cfg),
-            other => bail!(
-                "unknown backend {other} \
-                 (beam|exact|portfolio|sim|ddp|megatron-1d|optimus-2d|\
-                 3d-tp)"
-            ),
-        })
-    }
-
-    /// Short display name (batch summary tables).
-    pub fn describe(&self) -> String {
-        match self {
-            BackendSpec::Beam => "beam".into(),
-            BackendSpec::Exact => "exact".into(),
-            BackendSpec::Baseline(kind, _) => match kind {
-                Baseline::Ddp => "ddp".into(),
-                Baseline::Megatron1d => "megatron-1d".into(),
-                Baseline::Optimus2d => "optimus-2d".into(),
-                Baseline::Tp3d => "3d-tp".into(),
-            },
-            BackendSpec::Portfolio(configs) => {
-                format!("portfolio({})", configs.len())
-            }
-            BackendSpec::Sim(_) => "sim".into(),
-        }
-    }
-
-    fn install<'a>(&self, p: Planner<'a>) -> Planner<'a> {
-        match self {
-            BackendSpec::Beam => p,
-            BackendSpec::Exact => p.with_backend(ExactSolve),
-            BackendSpec::Baseline(kind, cfg) => {
-                p.with_backend(BaselineSolve::new(*kind, *cfg))
-            }
-            BackendSpec::Portfolio(configs) => {
-                p.with_backend(PortfolioSolve::new(configs.clone()))
-            }
-            BackendSpec::Sim(opts) => {
-                p.with_backend(SimMeasureSolve::new(*opts))
-            }
-        }
-    }
-
-    fn hash_into(&self, h: &mut StableHasher) {
-        h.write_str(&self.describe());
-        match self {
-            BackendSpec::Beam | BackendSpec::Exact => {}
-            BackendSpec::Baseline(_, cfg) => {
-                for x in [cfg.vocab, cfg.seq, cfg.d_model, cfg.n_layer,
-                          cfg.n_head, cfg.d_ff, cfg.batch]
-                {
-                    h.write_usize(x);
-                }
-            }
-            BackendSpec::Portfolio(configs) => {
-                h.write_usize(configs.len());
-                for o in configs {
-                    hash_solve_opts(h, o);
-                }
-            }
-            BackendSpec::Sim(opts) => hash_solve_opts(h, opts),
-        }
-    }
-}
-
-fn hash_solve_opts(h: &mut StableHasher, o: &SolveOpts) {
-    h.write_usize(o.beam_width);
-    h.write_usize(o.anneal_iters);
-    h.write_usize(o.lagrange_iters);
-    h.write_u64(o.seed);
 }
 
 /// One planning job: everything the staged pipeline consumes, as owned
@@ -621,10 +504,10 @@ impl PlanService {
         t0: &Instant,
     ) -> Result<PlanOutcome> {
         if req.opts.pp.is_some() {
-            if !matches!(req.backend, BackendSpec::Beam) {
+            if req.backend.is_analytic() {
                 bail!(
-                    "{}: pipeline planning supports only the beam \
-                     backend (got {})",
+                    "{}: pipeline planning needs an assignment backend \
+                     for its nested stage compiles (got analytic {})",
                     req.tag,
                     req.backend.describe()
                 );
@@ -730,7 +613,7 @@ impl PlanService {
         p = p
             .with_store(Arc::clone(&self.store))
             .with_graph_fingerprint(graph_fp.to_string());
-        p = req.backend.install(p);
+        p = p.with_backend_spec(&req.backend);
         if let Some(f) = &self.progress {
             p = p.on_progress(move |ev| f(ev));
         }
@@ -828,7 +711,7 @@ impl PlanService {
         let mut seen: HashSet<String> = HashSet::new();
         for &i in unique {
             let req = &reqs[i];
-            if matches!(req.backend, BackendSpec::Baseline(..)) {
+            if req.backend.is_analytic() {
                 continue; // analytic backends never touch a solver graph
             }
             if req.opts.pp.is_some() {
@@ -886,7 +769,8 @@ impl PlanService {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::models::gpt2;
+    use crate::graph::models::{gpt2, Gpt2Cfg};
+    use crate::solver::SolveOpts;
 
     fn fast_opts() -> PlanOpts {
         PlanOpts {

@@ -5,18 +5,30 @@
 //! * **Assignment backends** pick one strategy per solver-graph node under a
 //!   memory budget — the paper's Eq. (1). [`BeamSolve`] is the production
 //!   beam + Lagrangian + annealing path; [`ExactSolve`] is the
-//!   branch-and-bound reference for small graphs.
+//!   branch-and-bound reference for small graphs; [`IlpSolve`] is the
+//!   paper-faithful 0/1 integer program over the vendored
+//!   [`milp`](crate::solver::ilp) branch-and-bound, warm-started from the
+//!   beam so it is an *anytime* improver under a millisecond budget.
 //! * **Analytic backends** ([`BaselineSolve`]) are the manually-designed
 //!   Table-4 baselines (DDP, Megatron-1D, Optimus-2D, 3D-TP). They derive a
 //!   closed-form plan from the profile and detected cluster, bypassing mesh
 //!   enumeration entirely — which is exactly how the paper costs them.
+//!
+//! [`BackendSpec`] is the *value* form of a backend choice: clonable,
+//! hashable into cache fingerprints, serializable for the daemon, and
+//! shippable across the pipeline planner's per-cell worker threads —
+//! everywhere a `dyn Solve` object can't go.
+
+use anyhow::{bail, Result};
 
 use crate::cluster::ClusterInfo;
 use crate::graph::models::Gpt2Cfg;
 use crate::graph::Graph;
 use crate::profiler::GraphProfile;
 use crate::sim::{baselines, DeviceModel, SimReport};
-use crate::solver::{solve, solve_exact, Solution, SolveOpts, SolverGraph};
+use crate::solver::{solve, solve_exact, solve_ilp, IlpOpts, Solution,
+                    SolveOpts, SolverGraph};
+use crate::util::json::{arr, num, obj, s, Json, StableHasher};
 use crate::util::pool::parallel_map;
 
 /// Everything an analytic backend may consult.
@@ -98,23 +110,74 @@ impl Solve for ExactSolve {
     }
 }
 
-/// Portfolio backend: races several beam configurations across the
-/// `util::pool` worker threads and keeps the best feasible solution.
+/// Exact ILP backend (`--backend ilp`): the paper's 0/1 integer program
+/// over (node, strategy) binaries with resharding costs on edge
+/// variables, solved by the vendored [`milp`] simplex + branch-and-bound.
+///
+/// Anytime by construction: the beam search runs first and seeds the
+/// branch-and-bound incumbent, so *any* time budget — including zero —
+/// returns a plan no worse than [`BeamSolve`] with the same `warm`
+/// configuration, and a generous budget returns the proven optimum.
+#[derive(Debug, Clone, Copy)]
+pub struct IlpSolve {
+    /// Beam configuration that produces the warm-start incumbent.
+    pub warm: SolveOpts,
+    /// Branch-and-bound limits (time budget, node cap, size guard).
+    pub opts: IlpOpts,
+}
+
+impl IlpSolve {
+    pub fn new(warm: SolveOpts, opts: IlpOpts) -> IlpSolve {
+        IlpSolve { warm, opts }
+    }
+}
+
+impl Default for IlpSolve {
+    fn default() -> Self {
+        IlpSolve::new(SolveOpts::default(), IlpOpts::default())
+    }
+}
+
+impl Solve for IlpSolve {
+    fn name(&self) -> String {
+        format!("ilp({}ms)", self.opts.time_budget_ms)
+    }
+
+    fn solve(&self, sg: &SolverGraph, budget: f64) -> Option<Solution> {
+        let warm = solve(sg, budget, self.warm);
+        solve_ilp(sg, budget, self.opts, warm.as_ref())
+    }
+}
+
+/// Portfolio backend: races several beam configurations (plus an
+/// optional anytime-ILP entrant) across the `util::pool` worker threads
+/// and keeps the best feasible solution.
 ///
 /// The beam + annealing path is seed- and width-sensitive; rather than
 /// hand-tuning one configuration, a portfolio runs a diverse spread in
 /// parallel and takes the minimum-objective result. Deterministic for a
-/// fixed config list: `parallel_map` preserves input order and ties
-/// resolve to the first (lowest-index) config.
+/// fixed entrant list: `parallel_map` preserves input order and ties
+/// resolve to the first (lowest-index) entrant.
 #[derive(Debug, Clone)]
 pub struct PortfolioSolve {
     pub configs: Vec<SolveOpts>,
+    /// When set, one extra entrant runs the exact ILP (warm-started from
+    /// `configs[0]`) alongside the beams. Because the ILP never returns a
+    /// worse plan than its warm start, adding it can only improve the
+    /// portfolio's result.
+    pub ilp: Option<IlpOpts>,
 }
 
 impl PortfolioSolve {
     pub fn new(configs: Vec<SolveOpts>) -> PortfolioSolve {
         assert!(!configs.is_empty(), "portfolio needs >= 1 config");
-        PortfolioSolve { configs }
+        PortfolioSolve { configs, ilp: None }
+    }
+
+    /// Add an exact-ILP entrant with the given limits to the race.
+    pub fn with_ilp(mut self, opts: IlpOpts) -> Self {
+        self.ilp = Some(opts);
+        self
     }
 
     /// A diversity spread around `base`: the base config itself, then
@@ -143,22 +206,40 @@ impl PortfolioSolve {
                 .wrapping_add(0x9e37_79b9_7f4a_7c15u64.wrapping_mul(i as u64));
             configs.push(o);
         }
-        PortfolioSolve { configs }
+        PortfolioSolve { configs, ilp: None }
     }
+}
+
+/// One lane of a portfolio race.
+#[derive(Debug, Clone, Copy)]
+enum Entrant {
+    Beam(SolveOpts),
+    Ilp(IlpSolve),
 }
 
 impl Solve for PortfolioSolve {
     fn name(&self) -> String {
-        format!("portfolio({})", self.configs.len())
+        match self.ilp {
+            Some(_) => format!("portfolio({}+ilp)", self.configs.len()),
+            None => format!("portfolio({})", self.configs.len()),
+        }
     }
 
     fn solve(&self, sg: &SolverGraph, budget: f64) -> Option<Solution> {
-        parallel_map(&self.configs, |o| solve(sg, budget, *o))
-            .into_iter()
-            .flatten()
-            .min_by(|a, b| {
-                a.time.partial_cmp(&b.time).expect("finite solver times")
-            })
+        let mut entrants: Vec<Entrant> =
+            self.configs.iter().map(|o| Entrant::Beam(*o)).collect();
+        if let Some(opts) = self.ilp {
+            entrants.push(Entrant::Ilp(IlpSolve::new(self.configs[0], opts)));
+        }
+        parallel_map(&entrants, |e| match e {
+            Entrant::Beam(o) => solve(sg, budget, *o),
+            Entrant::Ilp(ilp) => ilp.solve(sg, budget),
+        })
+        .into_iter()
+        .flatten()
+        .min_by(|a, b| {
+            a.time.partial_cmp(&b.time).expect("finite solver times")
+        })
     }
 }
 
@@ -267,5 +348,299 @@ impl Solve for BaselineSolve {
 
     fn is_analytic(&self) -> bool {
         true
+    }
+}
+
+/// Serializable description of which solver backend to run — the
+/// planner, the pipeline cell fan-out, the service, and the daemon all
+/// need a *value* (clonable, hashable into the cache fingerprint,
+/// shippable across worker threads), not a `dyn Solve` object.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// Default beam + Lagrangian + annealing, configured by `opts.solve`.
+    Beam,
+    /// Exact branch-and-bound (small graphs only).
+    Exact,
+    /// Exact 0/1 ILP over the vendored `milp` crate, warm-started from
+    /// the beam (anytime under the millisecond budget).
+    Ilp(IlpOpts),
+    /// A Table-4 analytic baseline.
+    Baseline(Baseline, Gpt2Cfg),
+    /// Portfolio race over explicit beam configurations.
+    Portfolio(Vec<SolveOpts>),
+    /// Measured backend: beam-proposed candidates ranked by replaying
+    /// each lowered schedule through the discrete-event executor.
+    Sim(SolveOpts),
+}
+
+/// How many configs `BackendSpec::parse("portfolio", ..)` spreads over.
+pub const PORTFOLIO_DEFAULT_CONFIGS: usize = 4;
+
+impl BackendSpec {
+    /// CLI-name parser shared by `automap plan`, `automap batch`, and the
+    /// daemon's wire specs. `cfg` feeds the analytic baselines;
+    /// `base_solve` seeds the portfolio spread. `ilp:<ms>` overrides the
+    /// ILP time budget (e.g. `ilp:250` for a quarter-second cap).
+    pub fn parse(
+        name: &str,
+        cfg: Gpt2Cfg,
+        base_solve: SolveOpts,
+    ) -> Result<BackendSpec> {
+        Ok(match name {
+            "beam" => BackendSpec::Beam,
+            "exact" => BackendSpec::Exact,
+            "ilp" => BackendSpec::Ilp(IlpOpts::default()),
+            "portfolio" => BackendSpec::Portfolio(
+                PortfolioSolve::spread(base_solve, PORTFOLIO_DEFAULT_CONFIGS)
+                    .configs,
+            ),
+            "sim" => BackendSpec::Sim(base_solve),
+            "ddp" => BackendSpec::Baseline(Baseline::Ddp, cfg),
+            "megatron-1d" => {
+                BackendSpec::Baseline(Baseline::Megatron1d, cfg)
+            }
+            "optimus-2d" => BackendSpec::Baseline(Baseline::Optimus2d, cfg),
+            "3d-tp" => BackendSpec::Baseline(Baseline::Tp3d, cfg),
+            other => {
+                if let Some(ms) = other.strip_prefix("ilp:") {
+                    let ms: u64 = ms.parse().map_err(|_| {
+                        anyhow::anyhow!(
+                            "ilp:<ms> needs a millisecond count, got \
+                             {other}"
+                        )
+                    })?;
+                    return Ok(BackendSpec::Ilp(IlpOpts {
+                        time_budget_ms: ms,
+                        ..Default::default()
+                    }));
+                }
+                bail!(
+                    "unknown backend {other} \
+                     (beam|exact|ilp[:<ms>]|portfolio|sim|ddp|megatron-1d|\
+                     optimus-2d|3d-tp)"
+                )
+            }
+        })
+    }
+
+    /// Short display name (batch summary tables).
+    pub fn describe(&self) -> String {
+        match self {
+            BackendSpec::Beam => "beam".into(),
+            BackendSpec::Exact => "exact".into(),
+            BackendSpec::Ilp(_) => "ilp".into(),
+            BackendSpec::Baseline(kind, _) => match kind {
+                Baseline::Ddp => "ddp".into(),
+                Baseline::Megatron1d => "megatron-1d".into(),
+                Baseline::Optimus2d => "optimus-2d".into(),
+                Baseline::Tp3d => "3d-tp".into(),
+            },
+            BackendSpec::Portfolio(configs) => {
+                format!("portfolio({})", configs.len())
+            }
+            BackendSpec::Sim(_) => "sim".into(),
+        }
+    }
+
+    /// True when the backend derives a closed-form report (the Table-4
+    /// baselines) instead of solving the graph. Analytic backends cannot
+    /// drive nested pipeline-stage compiles.
+    pub fn is_analytic(&self) -> bool {
+        matches!(self, BackendSpec::Baseline(..))
+    }
+
+    /// Build the backend object. `base` seeds beam-family entrants (the
+    /// ILP warm start, the sim proposer's fallback). `None` means "use
+    /// the planner's default beam path", byte-identical to never
+    /// installing a backend at all.
+    pub fn build(&self, base: SolveOpts) -> Option<Box<dyn Solve>> {
+        match self {
+            BackendSpec::Beam => None,
+            BackendSpec::Exact => Some(Box::new(ExactSolve)),
+            BackendSpec::Ilp(opts) => {
+                Some(Box::new(IlpSolve::new(base, *opts)))
+            }
+            BackendSpec::Baseline(kind, cfg) => {
+                Some(Box::new(BaselineSolve::new(*kind, *cfg)))
+            }
+            BackendSpec::Portfolio(configs) => {
+                Some(Box::new(PortfolioSolve::new(configs.clone())))
+            }
+            BackendSpec::Sim(opts) => {
+                Some(Box::new(SimMeasureSolve::new(*opts)))
+            }
+        }
+    }
+
+    /// The [`Solve::name`] the built backend reports, with `base`
+    /// standing in for the default beam.
+    pub fn backend_name(&self, base: SolveOpts) -> String {
+        match self.build(base) {
+            Some(b) => b.name(),
+            None => BeamSolve(base).name(),
+        }
+    }
+
+    /// Canonical JSON form (`{"name": .., ..params}`) for registries and
+    /// debug output.
+    pub fn to_json(&self) -> Json {
+        let name = self.describe();
+        let mut pairs: Vec<(&str, Json)> = vec![("name", s(&name))];
+        match self {
+            BackendSpec::Beam | BackendSpec::Exact => {}
+            BackendSpec::Ilp(o) => {
+                pairs.push((
+                    "time_budget_ms",
+                    num(o.time_budget_ms as f64),
+                ));
+                pairs.push(("max_nodes", num(o.max_nodes as f64)));
+                pairs.push(("max_cells", num(o.max_cells as f64)));
+            }
+            BackendSpec::Baseline(_, cfg) => {
+                for (k, v) in [
+                    ("vocab", cfg.vocab),
+                    ("seq", cfg.seq),
+                    ("d_model", cfg.d_model),
+                    ("n_layer", cfg.n_layer),
+                    ("n_head", cfg.n_head),
+                    ("d_ff", cfg.d_ff),
+                    ("batch", cfg.batch),
+                ] {
+                    pairs.push((k, num(v as f64)));
+                }
+            }
+            BackendSpec::Portfolio(configs) => {
+                pairs.push((
+                    "configs",
+                    arr(configs.iter().map(solve_opts_json).collect()),
+                ));
+            }
+            BackendSpec::Sim(o) => {
+                pairs.push(("solve", solve_opts_json(o)));
+            }
+        }
+        obj(pairs)
+    }
+
+    /// Feed the spec into a cache fingerprint. Stable across releases:
+    /// existing variants must keep hashing the exact same byte sequence,
+    /// or every cached plan on disk silently misses.
+    pub(crate) fn hash_into(&self, h: &mut StableHasher) {
+        h.write_str(&self.describe());
+        match self {
+            BackendSpec::Beam | BackendSpec::Exact => {}
+            BackendSpec::Ilp(o) => {
+                h.write_u64(o.time_budget_ms);
+                h.write_usize(o.max_nodes);
+                h.write_usize(o.max_cells);
+            }
+            BackendSpec::Baseline(_, cfg) => {
+                for x in [cfg.vocab, cfg.seq, cfg.d_model, cfg.n_layer,
+                          cfg.n_head, cfg.d_ff, cfg.batch]
+                {
+                    h.write_usize(x);
+                }
+            }
+            BackendSpec::Portfolio(configs) => {
+                h.write_usize(configs.len());
+                for o in configs {
+                    hash_solve_opts(h, o);
+                }
+            }
+            BackendSpec::Sim(opts) => hash_solve_opts(h, opts),
+        }
+    }
+}
+
+pub(crate) fn hash_solve_opts(h: &mut StableHasher, o: &SolveOpts) {
+    h.write_usize(o.beam_width);
+    h.write_usize(o.anneal_iters);
+    h.write_usize(o.lagrange_iters);
+    h.write_u64(o.seed);
+}
+
+/// `SolveOpts` as JSON. Seeds are emitted as hex strings: the spread
+/// constants exceed 2^53 and would lose precision as JSON numbers.
+fn solve_opts_json(o: &SolveOpts) -> Json {
+    obj(vec![
+        ("beam_width", num(o.beam_width as f64)),
+        ("anneal_iters", num(o.anneal_iters as f64)),
+        ("lagrange_iters", num(o.lagrange_iters as f64)),
+        ("seed", s(&format!("{:#x}", o.seed))),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_are_stable() {
+        let base = SolveOpts::default();
+        let cfg = Gpt2Cfg::mini();
+        for (wire, display) in [
+            ("beam", format!("beam({})+lagrange+anneal", base.beam_width)),
+            ("exact", "exact-bnb".to_string()),
+            ("ilp", "ilp(5000ms)".to_string()),
+            ("portfolio", "portfolio(4)".to_string()),
+            (
+                "sim",
+                format!("sim-measure(beam {})", base.beam_width),
+            ),
+        ] {
+            let spec = BackendSpec::parse(wire, cfg, base).unwrap();
+            assert_eq!(spec.backend_name(base), display, "{wire}");
+        }
+    }
+
+    #[test]
+    fn ilp_backend_parses_time_budget_suffix() {
+        let base = SolveOpts::default();
+        let cfg = Gpt2Cfg::mini();
+        let spec = BackendSpec::parse("ilp:250", cfg, base).unwrap();
+        match spec {
+            BackendSpec::Ilp(o) => {
+                assert_eq!(o.time_budget_ms, 250);
+                assert_eq!(o.max_nodes, IlpOpts::default().max_nodes);
+            }
+            other => panic!("expected ilp, got {other:?}"),
+        }
+        assert!(BackendSpec::parse("ilp:abc", cfg, base).is_err());
+        assert!(BackendSpec::parse("lp", cfg, base).is_err());
+    }
+
+    #[test]
+    fn backend_spec_json_carries_params() {
+        let base = SolveOpts::default();
+        let cfg = Gpt2Cfg::mini();
+        let spec = BackendSpec::parse("ilp:777", cfg, base).unwrap();
+        let txt = spec.to_json().to_string();
+        assert!(txt.contains("\"name\":\"ilp\""), "{txt}");
+        assert!(txt.contains("\"time_budget_ms\":777"), "{txt}");
+        let beam = BackendSpec::Beam.to_json().to_string();
+        assert_eq!(beam, "{\"name\":\"beam\"}");
+    }
+
+    #[test]
+    fn portfolio_with_ilp_renames_and_keeps_configs() {
+        let p = PortfolioSolve::spread(SolveOpts::default(), 3);
+        assert_eq!(p.name(), "portfolio(3)");
+        let p = p.with_ilp(IlpOpts::default());
+        assert_eq!(p.name(), "portfolio(3+ilp)");
+        assert_eq!(p.configs.len(), 3);
+    }
+
+    #[test]
+    fn only_baselines_are_analytic() {
+        let base = SolveOpts::default();
+        let cfg = Gpt2Cfg::mini();
+        for name in ["beam", "exact", "ilp", "portfolio", "sim"] {
+            let spec = BackendSpec::parse(name, cfg, base).unwrap();
+            assert!(!spec.is_analytic(), "{name}");
+        }
+        for name in ["ddp", "megatron-1d", "optimus-2d", "3d-tp"] {
+            let spec = BackendSpec::parse(name, cfg, base).unwrap();
+            assert!(spec.is_analytic(), "{name}");
+        }
     }
 }

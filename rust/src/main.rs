@@ -7,8 +7,8 @@
 //!   plan      --model gpt2-mini|alpha..delta
 //!             --cluster fig5|single|nvlink<N>|multinode<NxM>
 //!             [--budget-gb G] [--fast] [--codegen] [--progress]
-//!             [--backend beam|exact|portfolio|sim|ddp|megatron-1d|
-//!              optimus-2d|3d-tp]
+//!             [--backend beam|exact|ilp[:<ms>]|portfolio|sim|ddp|
+//!              megatron-1d|optimus-2d|3d-tp] [--ilp-time-budget <ms>]
 //!             [--json] [--save-plan p.json] [--load-plan p.json]
 //!             [--cache-dir DIR] [--remote host:port]
 //!             [--pp [--max-stages K] [--min-stages K]
@@ -21,9 +21,16 @@
 //!             --backend sim ranks candidates by replaying each lowered
 //!             schedule through the discrete-event executor (measured,
 //!             cost-model-free selection).
+//!             --backend ilp solves the sharding ILP exactly with the
+//!             vendored `milp` branch-and-bound crate, warm-started from
+//!             a beam incumbent (anytime: the answer is never worse than
+//!             beam's); --ilp-time-budget caps its solve time, shorthand
+//!             for --backend ilp:<ms>.
 //!             --pp runs the two-level inter-op planner instead: stage
 //!             cuts × submesh slices × microbatch count minimizing 1F1B
-//!             latency, each stage solved by the intra-op pipeline; the
+//!             latency, each stage solved by the intra-op pipeline with
+//!             the selected --backend (analytic baselines like ddp are
+//!             rejected — stage compiles need a real solver); the
 //!             result is a PipelineSolution artifact whose recorded step
 //!             time is the microbatched 1F1B replay's. --load-plan
 //!             detects the artifact kind, so saved pipeline plans reload
@@ -273,6 +280,29 @@ fn service_for(
     })
 }
 
+/// Resolve `--backend`, folding `--ilp-time-budget <ms>` into the
+/// canonical `ilp:<ms>` form so [`BackendSpec::parse`] stays the single
+/// authority on backend strings (local, remote, and manifest paths all
+/// funnel through it).
+fn backend_from(args: &Args) -> Result<String> {
+    let name = args.get_or("backend", "beam").to_string();
+    match args.get("ilp-time-budget") {
+        None => Ok(name),
+        Some(ms) => {
+            if name != "ilp" && !name.starts_with("ilp:") {
+                return Err(anyhow!(
+                    "--ilp-time-budget only applies to --backend ilp \
+                     (got {name})"
+                ));
+            }
+            let ms: u64 = ms.parse().map_err(|_| {
+                anyhow!("--ilp-time-budget needs milliseconds, got {ms}")
+            })?;
+            Ok(format!("ilp:{ms}"))
+        }
+    }
+}
+
 fn request_for(
     tag: &str,
     model: &str,
@@ -368,23 +398,15 @@ fn print_pipeline(sol: &PipelineSolution, args: &Args) -> Result<()> {
 }
 
 fn cmd_plan_pp(args: &Args, model: &str) -> Result<()> {
-    // fail loudly instead of silently planning with different settings:
-    // stage solves are beam-only
-    if let Some(b) = args.get("backend") {
-        if b != "beam" {
-            return Err(anyhow!(
-                "--pp solves every stage with the beam backend; \
-                 --backend {b} is not supported with --pp yet"
-            ));
-        }
-    }
     let mut opts = opts_from(args);
     opts.pp = Some(pp_opts_from(args)?);
+    // the selected backend propagates into every nested stage compile;
+    // analytic baselines are rejected by the service with a clear error
     let req = request_for(
         model,
         model,
         args.get_or("cluster", "fig5"),
-        "beam",
+        &backend_from(args)?,
         opts,
     )?;
     let service = service_for(args, None)?;
@@ -446,7 +468,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
         model,
         model,
         args.get_or("cluster", "fig5"),
-        args.get_or("backend", "beam"),
+        &backend_from(args)?,
         opts_from(args),
     )?;
     let service = service_for(args, None)?;
@@ -473,7 +495,7 @@ fn spec_from_args(args: &Args) -> Result<PlanSpec> {
         args.get_or("model", "gpt2-mini"),
         args.get_or("cluster", "fig5"),
     );
-    spec.backend = args.get_or("backend", "beam").to_string();
+    spec.backend = backend_from(args)?;
     spec.fast = args.has_flag("fast");
     if let Some(gb) = args.get("budget-gb") {
         spec.budget_gb = Some(gb.parse::<f64>().map_err(|_| {

@@ -32,9 +32,9 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::api::{BeamSolve, CompiledPlan, PipelineSolution,
+use crate::api::{BackendSpec, CompiledPlan, PipelineSolution,
                  PipelineStagePlan, PlanOpts, Planner, ProgressEvent,
-                 Solve, SolverGraphStore};
+                 ProgressHub, SolverGraphStore};
 use crate::ckpt::{build_stages, common_nodes, linearize};
 use crate::cluster::ClusterInfo;
 use crate::gen::stage_boundary_p2p;
@@ -154,9 +154,13 @@ fn enumerate_cells(
 }
 
 /// Solve the two-level pipeline plan. `budget` is the per-device memory
-/// budget every stage compiles under; `total_flops` feeds the headline
+/// budget every stage compiles under; `spec` is the assignment backend
+/// every nested cell compile installs (analytic baselines are rejected —
+/// they cannot solve a stage subgraph); `total_flops` feeds the headline
 /// PFLOPS. Progress events (`PipelineCellSolved`, `PipelineChosen`) go
-/// to `on_ev`.
+/// to `on_ev`, and cell events are additionally delivered *live* from
+/// the worker threads when a [`ProgressHub`] is installed on the calling
+/// thread.
 #[allow(clippy::too_many_arguments)]
 pub fn solve(
     g: &Graph,
@@ -164,11 +168,19 @@ pub fn solve(
     dev: &DeviceModel,
     opts: &PlanOpts,
     pp: &PpOpts,
+    spec: &BackendSpec,
     budget: f64,
     total_flops: f64,
     store: &Arc<SolverGraphStore>,
     on_ev: &mut dyn FnMut(ProgressEvent),
 ) -> Result<PipelineSolution> {
+    if spec.is_analytic() {
+        bail!(
+            "pipeline planning needs an assignment backend for its \
+             nested stage compiles (got analytic {})",
+            spec.describe()
+        );
+    }
     let common = common_nodes(g);
     let groups = linearize(g, &common);
     let n_groups = groups.len();
@@ -205,8 +217,8 @@ pub fn solve(
         );
     }
 
-    // nested stage compiles use the default beam backend under the same
-    // intra-op options, with the budget pinned explicitly. Any
+    // nested stage compiles install the caller's backend spec under the
+    // same intra-op options, with the budget pinned explicitly. Any
     // `mesh_shapes` restriction is dropped: those shapes are sized for
     // the full cluster and would be unrealizable on smaller stage
     // submeshes, silently killing every multi-stage cell.
@@ -217,9 +229,24 @@ pub fn solve(
         ..opts.clone()
     };
 
+    // when the caller's thread carries a ProgressHub, workers deliver
+    // cell events live (the pool propagates the hub context into them);
+    // otherwise the events replay in key order after the fan-out
+    let hub_live = ProgressHub::current().is_some();
     let cells: Vec<CellOut> = parallel_map(&key_list, |&(i, j, a, k)| {
         let t0 = std::time::Instant::now();
         let ms = |t0: std::time::Instant| t0.elapsed().as_secs_f64() * 1e3;
+        let emit_cell = |out: CellOut| {
+            if let Some(hub) = ProgressHub::current() {
+                hub.emit(&ProgressEvent::PipelineCellSolved {
+                    span: (i, j),
+                    devices: (a, a + k),
+                    feasible: out.cell.is_some(),
+                    ms: out.ms,
+                });
+            }
+            out
+        };
         let full = i == 0 && j == n_groups;
         let owned;
         let (graph, boundary_in): (&Graph, f64) = if full {
@@ -233,35 +260,44 @@ pub fn solve(
                     owned = s;
                     (&owned.graph, owned.boundary_in_bytes)
                 }
-                Err(_) => return CellOut { cell: None, ms: ms(t0) },
+                Err(_) => {
+                    return emit_cell(CellOut { cell: None, ms: ms(t0) })
+                }
             }
         };
         let devs: Vec<usize> = (a..a + k).collect();
         let sliced = info.slice(&devs);
         let mut planner = Planner::with_info(graph, sliced, dev)
             .with_opts(nested.clone())
+            .with_backend_spec(spec)
             .with_store(Arc::clone(store));
         let plan = match planner.lower() {
             Ok(p) => p,
-            Err(_) => return CellOut { cell: None, ms: ms(t0) },
+            Err(_) => {
+                return emit_cell(CellOut { cell: None, ms: ms(t0) })
+            }
         };
         let phases =
             match stage_phases(graph, &plan.mesh, &plan.plan, dev) {
                 Ok(p) => p,
-                Err(_) => return CellOut { cell: None, ms: ms(t0) },
+                Err(_) => {
+                    return emit_cell(CellOut { cell: None, ms: ms(t0) })
+                }
             };
-        CellOut {
+        emit_cell(CellOut {
             cell: Some(Cell { plan, phases, boundary_in }),
             ms: ms(t0),
-        }
+        })
     });
-    for (ci, &(i, j, a, k)) in key_list.iter().enumerate() {
-        on_ev(ProgressEvent::PipelineCellSolved {
-            span: (i, j),
-            devices: (a, a + k),
-            feasible: cells[ci].cell.is_some(),
-            ms: cells[ci].ms,
-        });
+    if !hub_live {
+        for (ci, &(i, j, a, k)) in key_list.iter().enumerate() {
+            on_ev(ProgressEvent::PipelineCellSolved {
+                span: (i, j),
+                devices: (a, a + k),
+                feasible: cells[ci].cell.is_some(),
+                ms: cells[ci].ms,
+            });
+        }
     }
 
     // -- composition DP ---------------------------------------------------
@@ -439,7 +475,7 @@ pub fn solve(
     });
 
     Ok(PipelineSolution {
-        backend: format!("pp+{}", BeamSolve(opts.solve).name()),
+        backend: format!("pp+{}", spec.backend_name(opts.solve)),
         graph_nodes: g.len(),
         n_groups,
         microbatches,
@@ -492,6 +528,7 @@ mod tests {
             &dev,
             &fast(),
             &pp,
+            &BackendSpec::Beam,
             budget,
             1e12,
             &store,
@@ -531,6 +568,7 @@ mod tests {
             &dev,
             &fast(),
             &PpOpts::default(),
+            &BackendSpec::Beam,
             64.0,
             1e12,
             &store,

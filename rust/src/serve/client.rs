@@ -6,7 +6,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::util::json::{arr, obj, write_json, Json};
+use crate::util::json::{arr, obj, s, write_json, Json};
 
 use super::wire::PlanSpec;
 
@@ -135,10 +135,26 @@ impl Client {
         &self,
         specs: &[PlanSpec],
     ) -> Result<Vec<Result<RemoteOutcome>>> {
-        let body = obj(vec![(
+        self.plan_batch_job(specs, None)
+    }
+
+    /// [`plan_batch`](Client::plan_batch) with an optional top-level
+    /// job id: the daemon streams every request's progress events —
+    /// including those emitted on its batch worker threads — over one
+    /// `GET /v1/events/<job>` channel.
+    pub fn plan_batch_job(
+        &self,
+        specs: &[PlanSpec],
+        job: Option<&str>,
+    ) -> Result<Vec<Result<RemoteOutcome>>> {
+        let mut pairs = vec![(
             "requests",
             arr(specs.iter().map(|sp| sp.to_json()).collect()),
-        )]);
+        )];
+        if let Some(id) = job {
+            pairs.push(("job", s(id)));
+        }
+        let body = obj(pairs);
         let (status, v) = self.post_json("/v1/plan", &body)?;
         if status != 200 {
             return Err(response_error(status, &v));

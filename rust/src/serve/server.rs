@@ -9,12 +9,11 @@
 //!
 //! Progress streaming: the service has a single global progress
 //! callback, so events are routed to per-job channels through a
-//! thread-local set by the handler thread around its `plan()` call.
-//! Events emitted on that thread (cache lookups, single-request stage
-//! progress) reach the stream; events emitted inside `plan_batch`'s
-//! pool workers stay off it by design.
+//! [`ProgressHub`] the handler thread installs around its `plan()` /
+//! `plan_batch()` call. The pool propagates the hub into its workers,
+//! so events born on batch or pipeline-cell worker threads reach the
+//! job's stream too — nothing is dropped for running off-thread.
 
-use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener};
@@ -26,7 +25,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 use tinyhttp::{ChunkedWriter, Request, Response};
 
-use crate::api::{PlanOutcome, PlanService};
+use crate::api::{PlanOutcome, PlanService, ProgressHub};
 use crate::api::registry::{KIND_PIPELINE, KIND_PLAN};
 use crate::util::json::{arr, num, obj, s, write_json, Json};
 use crate::util::pool;
@@ -136,11 +135,16 @@ impl JobRegistry {
     }
 }
 
-thread_local! {
-    /// The job channel the current handler thread routes progress
-    /// events into, if its request asked for one.
-    static CURRENT_JOB: RefCell<Option<Arc<JobChannel>>> =
-        const { RefCell::new(None) };
+/// Install a [`ProgressHub`] forwarding events into `channel` for the
+/// duration of the returned guard (handler thread + pool workers it
+/// spawns).
+fn install_job_hub(
+    channel: &Arc<JobChannel>,
+) -> crate::api::HubGuard {
+    let ch = Arc::clone(channel);
+    ProgressHub::install(ProgressHub::new(move |ev| {
+        ch.push(ev.to_json());
+    }))
 }
 
 struct State {
@@ -154,11 +158,11 @@ impl State {
     fn new(config: &ServeConfig) -> Result<State> {
         let service = PlanService::with_dir(&config.registry)?
             .on_progress(|ev| {
-                CURRENT_JOB.with(|j| {
-                    if let Some(ch) = j.borrow().as_ref() {
-                        ch.push(ev.to_json());
-                    }
-                });
+                // the hub is found wherever the event was born: the
+                // handler thread, or a pool worker that inherited it
+                if let Some(hub) = ProgressHub::current() {
+                    hub.emit(ev);
+                }
             });
         Ok(State {
             service,
@@ -481,7 +485,7 @@ fn handle_plan<W: Write>(state: &State, w: &mut W, req: &Request) {
         }
     };
     if let Some(items) = body.get("requests").as_arr() {
-        handle_plan_batch(state, w, req, items);
+        handle_plan_batch(state, w, req, &body, items);
         return;
     }
     let spec = match PlanSpec::from_json(&body) {
@@ -515,13 +519,11 @@ fn handle_plan<W: Write>(state: &State, w: &mut W, req: &Request) {
         }
     };
     let channel = spec.job.as_deref().map(|id| state.jobs.register(id));
-    if let Some(ch) = &channel {
-        CURRENT_JOB.with(|j| *j.borrow_mut() = Some(Arc::clone(ch)));
-    }
+    let guard = channel.as_ref().map(install_job_hub);
     let result = spec
         .resolve()
         .and_then(|plan_req| state.service.plan(&plan_req));
-    CURRENT_JOB.with(|j| *j.borrow_mut() = None);
+    drop(guard);
     if let Some(ch) = &channel {
         ch.finish();
     }
@@ -536,10 +538,14 @@ fn handle_plan<W: Write>(state: &State, w: &mut W, req: &Request) {
     }
 }
 
+/// `{"requests": [...], "job": "<id>"}` — the optional top-level `job`
+/// streams every request's progress events (including those born on
+/// batch worker threads) over one `GET /v1/events/<id>` channel.
 fn handle_plan_batch<W: Write>(
     state: &State,
     w: &mut W,
     req: &Request,
+    body: &Json,
     items: &[Json],
 ) {
     let tenant = tenant_of(req, None);
@@ -575,7 +581,16 @@ fn handle_plan_batch<W: Write>(
     }
     let reqs: Vec<crate::api::PlanRequest> =
         resolved.iter().map(|(_, r)| r.clone()).collect();
+    let channel = body
+        .get("job")
+        .as_str()
+        .map(|id| state.jobs.register(id));
+    let guard = channel.as_ref().map(install_job_hub);
     let results = state.service.plan_batch(&reqs);
+    drop(guard);
+    if let Some(ch) = &channel {
+        ch.finish();
+    }
     for ((i, _), r) in resolved.iter().zip(results) {
         slots[*i] = Some(match r {
             Ok(out) => outcome_json(&out),

@@ -5,10 +5,12 @@
 //! path in tests); production solves use beam search under a Lagrangian
 //! sweep of the memory constraint, plus simulated-annealing refinement.
 
+pub mod ilp;
 pub mod sgraph;
 
 use crate::util::rng::Rng;
 
+pub use ilp::{solve_ilp, solve_ilp_detailed, IlpOpts, IlpReport};
 pub use sgraph::{Edge, SolverGraph};
 
 #[derive(Debug, Clone)]

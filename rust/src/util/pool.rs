@@ -9,13 +9,40 @@
 //! Without this, N batch-planning workers each spawning N edge-pricing
 //! threads would oversubscribe the machine with up to N² compute-bound
 //! threads.
+//!
+//! Threads additionally carry an opaque *context*
+//! ([`install_context`]/[`current_context`]): whatever the spawning
+//! thread has installed is cloned into every worker, so thread-scoped
+//! facilities (the progress hub,
+//! [`api::progress::ProgressHub`](crate::api::ProgressHub)) survive the
+//! fan-out instead of silently evaporating on worker threads.
 
-use std::cell::Cell;
+use std::any::Any;
+use std::cell::{Cell, RefCell};
+use std::sync::Arc;
+
+/// Opaque per-thread context propagated into pool workers.
+pub type Ctx = Arc<dyn Any + Send + Sync>;
 
 thread_local! {
     /// True on threads spawned by `parallel_map` (fresh scoped threads,
     /// so the flag dies with the worker — no cleanup needed).
     static IN_POOL: Cell<bool> = const { Cell::new(false) };
+    /// Context inherited by workers this thread spawns (fresh scoped
+    /// threads, so the slot dies with each worker — no cleanup needed).
+    static CONTEXT: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+/// Install (or clear, with `None`) the calling thread's pool context,
+/// returning the previous value so callers can restore it when done.
+pub fn install_context(ctx: Option<Ctx>) -> Option<Ctx> {
+    CONTEXT.with(|c| std::mem::replace(&mut *c.borrow_mut(), ctx))
+}
+
+/// The calling thread's pool context: set via [`install_context`], or
+/// inherited from the thread that spawned this worker.
+pub fn current_context() -> Option<Ctx> {
+    CONTEXT.with(|c| c.borrow().clone())
 }
 
 /// Apply `f` to every item, splitting the index range over worker threads.
@@ -31,6 +58,7 @@ where
         return items.iter().map(&f).collect();
     }
     let chunk = items.len().div_ceil(workers);
+    let ctx = current_context();
     let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
     std::thread::scope(|scope| {
         let mut rest: &mut [Option<R>] = &mut out;
@@ -39,9 +67,13 @@ where
             let (head, tail) = rest.split_at_mut(chunk_items.len().min(rest.len()));
             rest = tail;
             let f = &f;
+            let ctx = &ctx;
             let _ = ci;
             handles.push(scope.spawn(move || {
                 IN_POOL.with(|p| p.set(true));
+                if ctx.is_some() {
+                    install_context(ctx.clone());
+                }
                 for (slot, item) in head.iter_mut().zip(chunk_items) {
                     *slot = Some(f(item));
                 }
@@ -104,6 +136,32 @@ mod tests {
                 "inner map must run sequentially on its worker"
             );
         }
+    }
+
+    #[test]
+    fn context_propagates_into_workers_and_restores() {
+        let items: Vec<usize> = (0..64).collect();
+        // no context installed: workers see none
+        assert!(parallel_map(&items, |_| current_context().is_some())
+            .iter()
+            .all(|&seen| !seen));
+
+        let prev = install_context(Some(Arc::new(42usize) as Ctx));
+        assert!(prev.is_none());
+        let seen = parallel_map(&items, |_| {
+            current_context()
+                .and_then(|c| c.downcast::<usize>().ok())
+                .map(|v| *v)
+        });
+        assert!(seen.iter().all(|v| *v == Some(42)));
+        // nested fan-out (sequential on the worker) still sees it
+        let nested = parallel_map(&items, |_| {
+            parallel_map(&[0usize], |_| current_context().is_some())[0]
+        });
+        assert!(nested.iter().all(|&s| s));
+        let prev = install_context(None);
+        assert!(prev.is_some());
+        assert!(current_context().is_none());
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Unit tests for the vendored `milp` crate, run from the root package
+//! so they are part of tier-1 `cargo test` (path-dependency members are
+//! not covered by a plain `cargo test` at the workspace root).
+//!
+//! Coverage mandated by the ILP issue: simplex on known LPs (degenerate,
+//! unbounded, infeasible), branch-and-bound on small knapsacks with
+//! hand-checked optima, and warm starts that never worsen the incumbent.
+
+use milp::{solve, solve_lp, Cmp, LpStatus, MilpOpts, MilpStatus, Problem};
+
+fn assert_near(a: f64, b: f64) {
+    assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+}
+
+// ----------------------------- simplex ---------------------------------
+
+#[test]
+fn simplex_respects_variable_bounds() {
+    // max x + y  s.t.  x + y <= 4, x in [0,2], y in [0,3]: the optimum
+    // needs a bound flip (x pinned at its upper bound, no extra row)
+    let mut p = Problem::new();
+    let x = p.add_var(-1.0, 0.0, 2.0);
+    let y = p.add_var(-1.0, 0.0, 3.0);
+    p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Le, 4.0);
+    let s = solve_lp(&p);
+    assert_eq!(s.status, LpStatus::Optimal);
+    assert_near(s.objective, -4.0);
+    assert_near(s.x[x] + s.x[y], 4.0);
+    assert!(s.x[x] <= 2.0 + 1e-9 && s.x[y] <= 3.0 + 1e-9);
+}
+
+#[test]
+fn simplex_handles_degenerate_vertices() {
+    // (1,1) has three tight rows in 2D — a degenerate vertex; Bland's
+    // fallback keeps the pivot sequence finite
+    let mut p = Problem::new();
+    let x = p.add_var(-1.0, 0.0, 10.0);
+    let y = p.add_var(-1.0, 0.0, 10.0);
+    p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Le, 2.0);
+    p.constrain(vec![(x, 1.0)], Cmp::Le, 1.0);
+    p.constrain(vec![(y, 1.0)], Cmp::Le, 1.0);
+    let s = solve_lp(&p);
+    assert_eq!(s.status, LpStatus::Optimal);
+    assert_near(s.objective, -2.0);
+    assert_near(s.x[x], 1.0);
+    assert_near(s.x[y], 1.0);
+}
+
+#[test]
+fn simplex_detects_unboundedness() {
+    let mut p = Problem::new();
+    let _x = p.add_var(-1.0, 0.0, f64::INFINITY);
+    let y = p.add_var(0.0, 0.0, f64::INFINITY);
+    p.constrain(vec![(y, 1.0)], Cmp::Le, 5.0);
+    assert_eq!(solve_lp(&p).status, LpStatus::Unbounded);
+}
+
+#[test]
+fn simplex_detects_infeasibility() {
+    // x <= 1 (bound) but x >= 2 (row): phase 1 cannot zero the artificial
+    let mut p = Problem::new();
+    let x = p.add_var(1.0, 0.0, 1.0);
+    p.constrain(vec![(x, 1.0)], Cmp::Ge, 2.0);
+    assert_eq!(solve_lp(&p).status, LpStatus::Infeasible);
+
+    // contradictory equalities
+    let mut p = Problem::new();
+    let x = p.add_var(0.0, 0.0, 10.0);
+    p.constrain(vec![(x, 1.0)], Cmp::Eq, 3.0);
+    p.constrain(vec![(x, 1.0)], Cmp::Eq, 4.0);
+    assert_eq!(solve_lp(&p).status, LpStatus::Infeasible);
+}
+
+#[test]
+fn simplex_solves_equalities_with_shifted_bounds() {
+    // negative lower bounds exercise the lb-shift preprocessing
+    let mut p = Problem::new();
+    let x = p.add_var(1.0, -10.0, 10.0);
+    let y = p.add_var(1.0, -10.0, 10.0);
+    p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 3.0);
+    p.constrain(vec![(x, 1.0), (y, -1.0)], Cmp::Eq, 1.0);
+    let s = solve_lp(&p);
+    assert_eq!(s.status, LpStatus::Optimal);
+    assert_near(s.x[x], 2.0);
+    assert_near(s.x[y], 1.0);
+    assert_near(s.objective, 3.0);
+}
+
+#[test]
+fn simplex_solves_surplus_rows() {
+    // min x + y  s.t.  x + 2y >= 4, 3x + y >= 6  ->  (8/5, 6/5)
+    let mut p = Problem::new();
+    let x = p.add_var(1.0, 0.0, f64::INFINITY);
+    let y = p.add_var(1.0, 0.0, f64::INFINITY);
+    p.constrain(vec![(x, 1.0), (y, 2.0)], Cmp::Ge, 4.0);
+    p.constrain(vec![(x, 3.0), (y, 1.0)], Cmp::Ge, 6.0);
+    let s = solve_lp(&p);
+    assert_eq!(s.status, LpStatus::Optimal);
+    assert_near(s.objective, 2.8);
+    assert_near(s.x[x], 1.6);
+    assert_near(s.x[y], 1.2);
+}
+
+#[test]
+fn simplex_drops_redundant_rows() {
+    // the duplicated equality is linearly dependent; phase 1 must drop
+    // it instead of wedging on an undriveable artificial
+    let mut p = Problem::new();
+    let x = p.add_var(1.0, 0.0, 10.0);
+    let y = p.add_var(2.0, 0.0, 10.0);
+    p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 4.0);
+    p.constrain(vec![(x, 2.0), (y, 2.0)], Cmp::Eq, 8.0);
+    let s = solve_lp(&p);
+    assert_eq!(s.status, LpStatus::Optimal);
+    assert_near(s.objective, 4.0); // x=4, y=0
+}
+
+// ------------------------- branch-and-bound ----------------------------
+
+fn knapsack(v: &[f64], w: &[f64], cap: f64) -> Problem {
+    let mut p = Problem::new();
+    let terms = (0..v.len())
+        .map(|i| {
+            let j = p.add_binary(-v[i]);
+            (j, w[i])
+        })
+        .collect();
+    p.constrain(terms, Cmp::Le, cap);
+    p
+}
+
+#[test]
+fn bnb_knapsack_hand_checked_optimum() {
+    // classic 3-item knapsack: optimum 220 = items 2+3 (weight 50)
+    let p = knapsack(&[60.0, 100.0, 120.0], &[10.0, 20.0, 30.0], 50.0);
+    let s = solve(&p, &MilpOpts::default(), None);
+    assert_eq!(s.status, MilpStatus::Optimal);
+    assert_near(s.objective, -220.0);
+    assert_eq!(
+        s.x.iter().map(|v| v.round() as u8).collect::<Vec<_>>(),
+        vec![0, 1, 1]
+    );
+    // the LP relaxation is fractional (bound -240), so the optimum must
+    // come from genuine branching, not a lucky integral relaxation
+    assert!(s.nodes > 1, "expected branching, got {} node(s)", s.nodes);
+    assert_near(s.bound, -220.0);
+}
+
+#[test]
+fn bnb_knapsack_four_items() {
+    // best is items 2+4: weight 7, value 90
+    let p =
+        knapsack(&[10.0, 40.0, 30.0, 50.0], &[5.0, 4.0, 6.0, 3.0], 10.0);
+    let s = solve(&p, &MilpOpts::default(), None);
+    assert_eq!(s.status, MilpStatus::Optimal);
+    assert_near(s.objective, -90.0);
+    assert_eq!(
+        s.x.iter().map(|v| v.round() as u8).collect::<Vec<_>>(),
+        vec![0, 1, 0, 1]
+    );
+}
+
+#[test]
+fn bnb_detects_integer_infeasibility() {
+    let mut p = Problem::new();
+    let x = p.add_binary(1.0);
+    let y = p.add_binary(1.0);
+    p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 3.0);
+    assert_eq!(
+        solve(&p, &MilpOpts::default(), None).status,
+        MilpStatus::Infeasible
+    );
+}
+
+#[test]
+fn bnb_picks_cheapest_pair_under_equality() {
+    let mut p = Problem::new();
+    let a = p.add_binary(1.0);
+    let b = p.add_binary(2.0);
+    let c = p.add_binary(3.0);
+    p.constrain(vec![(a, 1.0), (b, 1.0), (c, 1.0)], Cmp::Eq, 2.0);
+    let s = solve(&p, &MilpOpts::default(), None);
+    assert_eq!(s.status, MilpStatus::Optimal);
+    assert_near(s.objective, 3.0);
+}
+
+#[test]
+fn warm_start_never_worsens_the_incumbent() {
+    let p = knapsack(&[60.0, 100.0, 120.0], &[10.0, 20.0, 30.0], 50.0);
+    let warm = [1.0, 0.0, 0.0]; // value 60, feasible
+
+    // zero search budget: the warm incumbent comes straight back
+    let opts = MilpOpts { max_nodes: 0, ..Default::default() };
+    let s = solve(&p, &opts, Some(&warm));
+    assert_eq!(s.status, MilpStatus::Feasible);
+    assert_near(s.objective, -60.0);
+    assert_eq!(s.x, warm.to_vec());
+
+    // growing budgets: the answer is monotone non-worsening in nodes
+    let mut last = f64::INFINITY;
+    for max_nodes in [0, 1, 2, 4, 64] {
+        let opts = MilpOpts { max_nodes, ..Default::default() };
+        let s = solve(&p, &opts, Some(&warm));
+        assert!(
+            s.objective <= -60.0 + 1e-9,
+            "budget {max_nodes} worsened the warm start: {}",
+            s.objective
+        );
+        assert!(s.objective <= last + 1e-9);
+        last = s.objective;
+    }
+    // full search lands on the true optimum
+    let s = solve(&p, &MilpOpts::default(), Some(&warm));
+    assert_eq!(s.status, MilpStatus::Optimal);
+    assert_near(s.objective, -220.0);
+}
+
+#[test]
+fn infeasible_warm_starts_are_rejected() {
+    let p = knapsack(&[60.0, 100.0, 120.0], &[10.0, 20.0, 30.0], 50.0);
+    let warm = [1.0, 1.0, 1.0]; // weight 60 > 50: not a valid incumbent
+    let opts = MilpOpts { max_nodes: 0, ..Default::default() };
+    let s = solve(&p, &opts, Some(&warm));
+    assert_eq!(s.status, MilpStatus::Limit);
+    assert!(s.x.is_empty());
+}
+
+#[test]
+fn size_guard_refuses_but_keeps_warm() {
+    let mut p = Problem::new();
+    let vars: Vec<usize> = (0..100).map(|_| p.add_binary(-1.0)).collect();
+    for &v in &vars {
+        p.constrain(vec![(v, 1.0)], Cmp::Le, 1.0);
+    }
+    let warm = vec![1.0; 100];
+    let opts = MilpOpts { max_cells: 10, ..Default::default() };
+    let s = solve(&p, &opts, Some(&warm));
+    assert_eq!(s.status, MilpStatus::TooLarge);
+    assert_near(s.objective, -100.0);
+    assert_eq!(s.x, warm);
+}
+
+#[test]
+fn time_budget_is_honored() {
+    let p = knapsack(&[60.0, 100.0, 120.0], &[10.0, 20.0, 30.0], 50.0);
+    let warm = [1.0, 0.0, 0.0];
+    let opts = MilpOpts {
+        time_budget: Some(std::time::Duration::ZERO),
+        ..Default::default()
+    };
+    let s = solve(&p, &opts, Some(&warm));
+    assert_eq!(s.status, MilpStatus::Feasible);
+    assert_near(s.objective, -60.0);
+}

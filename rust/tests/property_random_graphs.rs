@@ -5,16 +5,20 @@
 //!   * symbolic peak-memory estimate ≈ instrumented real execution,
 //!   * linearization partitions the differentiable nodes, in topo order,
 //!   * rotor time is monotone in the memory budget,
-//!   * the solver returns valid, budget-respecting plans.
+//!   * the solver returns valid, budget-respecting plans,
+//!   * the exact ILP backend never costs more than beam, its plans pass
+//!     the sim oracle, and on tiny graphs it matches exhaustive search.
 
-use automap::api::{Artifact, PlanOpts, Planner, PpOpts};
+use automap::api::{Artifact, BackendSpec, PlanOpts, Planner, PpOpts};
 use automap::ckpt::{build_stages, common_nodes, linearize, RotorSolver};
 use automap::cluster::{DeviceMesh, SimCluster};
+use automap::graph::models::mlp;
 use automap::graph::{EwBinary, EwUnary, Graph, GraphBuilder};
 use automap::layout::LayoutManager;
 use automap::profiler::{execute, profile, random_feeds};
 use automap::sim::{simulate_schedule, DeviceModel};
-use automap::solver::{solve, SolveOpts, SolverGraph};
+use automap::solver::{solve, solve_exact, solve_ilp, solve_ilp_detailed,
+                      IlpOpts, SolveOpts, SolverGraph};
 use automap::util::prop::forall_res;
 use automap::util::rng::Rng;
 
@@ -325,6 +329,161 @@ fn property_solver_plans_random_graphs_validly() {
             Ok(())
         },
     );
+}
+
+/// 1-D two-device mesh shared by the ILP differential properties.
+fn mesh2() -> DeviceMesh {
+    DeviceMesh {
+        shape: vec![2],
+        devices: vec![0, 1],
+        axis_alpha: vec![1e-6],
+        axis_beta: vec![1e11],
+    }
+}
+
+#[test]
+fn property_ilp_never_costs_more_than_beam() {
+    // the acceptance bar for the exact backend: on every random graph,
+    // the ILP's solver-graph cost is at or below beam's (it is seeded
+    // with the beam incumbent and only ever improves on it), and the
+    // winning assignment is still structurally valid
+    let dev = DeviceModel::a100_80gb();
+    forall_res(
+        0x11F0,
+        8,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let g = random_graph(&mut rng);
+            let mesh = mesh2();
+            let lm = LayoutManager::new(mesh.clone());
+            let sg = SolverGraph::build(&g, &mesh, &dev, &lm);
+            let beam = solve(
+                &sg,
+                1e15,
+                SolveOpts {
+                    beam_width: 8,
+                    anneal_iters: 100,
+                    lagrange_iters: 2,
+                    ..Default::default()
+                },
+            )
+            .ok_or("beam found no solution")?;
+            let ilp = solve_ilp(
+                &sg,
+                1e15,
+                IlpOpts { time_budget_ms: 2_000, ..Default::default() },
+                Some(&beam),
+            )
+            .ok_or("ilp lost the warm start")?;
+            if ilp.time > beam.time * (1.0 + 1e-9) {
+                return Err(format!(
+                    "ilp cost {} above beam cost {}",
+                    ilp.time, beam.time
+                ));
+            }
+            if !ilp.time.is_finite() || ilp.time < 0.0 {
+                return Err("non-finite ilp cost".into());
+            }
+            if ilp.choice.len() != sg.anchors.len() {
+                return Err("choice vector length mismatch".into());
+            }
+            for (i, &c) in ilp.choice.iter().enumerate() {
+                if c >= sg.sets[i].strategies.len() {
+                    return Err(format!(
+                        "choice {c} out of range at solver node {i}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_sim_oracle_accepts_ilp_plans() {
+    // the same bound the sim_oracle suite applies to every backend: the
+    // discrete-event replay of an ILP-compiled plan comes in at or under
+    // the plan's own predicted iteration time, and is not mostly
+    // imaginary
+    let dev = DeviceModel::a100_80gb();
+    forall_res(
+        0x11F5,
+        5,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let g = random_graph(&mut rng);
+            let cluster = SimCluster::fully_connected(2);
+            let opts = PlanOpts {
+                sweep: 2,
+                solve: SolveOpts {
+                    beam_width: 8,
+                    anneal_iters: 60,
+                    lagrange_iters: 3,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let spec = BackendSpec::Ilp(IlpOpts {
+                time_budget_ms: 2_000,
+                ..Default::default()
+            });
+            let mut p = Planner::new(&g, &cluster, &dev)
+                .with_opts(opts)
+                .with_backend_spec(&spec);
+            let plan =
+                p.lower().map_err(|e| format!("ilp plan: {e}"))?;
+            let trace = plan
+                .replay_sim(&g, &dev)
+                .map_err(|e| format!("replay: {e}"))?;
+            if trace.step_time > plan.iter_time * (1.0 + 1e-6) {
+                return Err(format!(
+                    "simulated {} exceeds predicted {}",
+                    trace.step_time, plan.iter_time
+                ));
+            }
+            if trace.step_time < plan.iter_time * 0.5 {
+                return Err(format!(
+                    "simulated {} implausibly below predicted {}",
+                    trace.step_time, plan.iter_time
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_ilp_matches_exhaustive_search_on_tiny_graphs() {
+    // on graphs small enough to enumerate, a *cold* ILP (no warm start)
+    // must engage, prove optimality, and land exactly on the exhaustive
+    // branch-and-bound reference optimum
+    let dev = DeviceModel::a100_80gb();
+    for dims in [vec![8usize, 8], vec![8, 16, 8], vec![16, 8, 8, 16]] {
+        let g = mlp(4, &dims);
+        let mesh = mesh2();
+        let lm = LayoutManager::new(mesh.clone());
+        let sg = SolverGraph::build(&g, &mesh, &dev, &lm);
+        let exact =
+            solve_exact(&sg, 1e15).expect("exhaustive optimum exists");
+        let report =
+            solve_ilp_detailed(&sg, 1e15, IlpOpts::default(), None);
+        assert!(report.engaged, "{dims:?}: tiny encoding refused");
+        assert!(
+            report.proven_optimal,
+            "{dims:?}: tiny ILP must close the gap"
+        );
+        let ilp = report.solution.expect("ilp solution");
+        let rel =
+            (ilp.time - exact.time).abs() / exact.time.max(1e-12);
+        assert!(
+            rel < 1e-9,
+            "{dims:?}: ilp {} != exhaustive {}",
+            ilp.time,
+            exact.time
+        );
+    }
 }
 
 #[test]

@@ -235,6 +235,40 @@ fn progress_events_stream_for_a_named_job() {
 }
 
 #[test]
+fn batch_job_streams_worker_thread_events() {
+    let dir = scratch("batch_events");
+    let handle = start(&dir);
+    let client = Client::new(handle.addr());
+    // two distinct specs so both batch workers really solve something
+    let mut other = mini_spec();
+    other.seed = Some(7);
+    let results = client
+        .plan_batch_job(&[mini_spec(), other], Some("batch-1"))
+        .unwrap();
+    assert!(results.iter().all(|r| r.is_ok()));
+    // batch workers run on pool threads; the hub must still route
+    // their events into the job's stream
+    let mut names = Vec::new();
+    let n = client
+        .events("batch-1", |ev| {
+            names.push(
+                ev.get("event").as_str().unwrap_or("?").to_string(),
+            );
+        })
+        .unwrap();
+    assert!(n > 0, "a batch must emit progress events");
+    assert!(
+        names.iter().filter(|n| *n == "request-done").count() >= 2,
+        "one request-done per entry: {names:?}"
+    );
+    assert!(
+        names.iter().any(|n| n == "stage-start"),
+        "worker-born solver events must reach the stream: {names:?}"
+    );
+    handle.stop();
+}
+
+#[test]
 fn errors_are_structured_json() {
     let dir = scratch("errors");
     let handle = start(&dir);

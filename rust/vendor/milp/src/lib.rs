@@ -1,0 +1,979 @@
+//! Self-contained 0/1 mixed-integer linear programming solver.
+//!
+//! Two layers:
+//!
+//! * [`solve_lp`] — bounded-variable primal simplex on a dense tableau.
+//!   Two-phase (artificials are driven out or their redundant rows
+//!   dropped), per-variable `[lb, ub]` handled by shifting plus column
+//!   complement flips (`x := ub - x`) so every nonbasic variable sits at
+//!   zero and no extra bound rows are needed. Dantzig pricing with a
+//!   Bland's-rule fallback against cycling.
+//! * [`solve`] — branch-and-bound on fractional *binary* variables with
+//!   best-bound node selection (min-heap on the parent LP bound), an
+//!   optional warm-start incumbent, and a wall-clock/node budget. Any
+//!   early exit returns the incumbent, so a warm-started solve is an
+//!   anytime improver: the answer never gets worse than the seed.
+//!
+//! Written for an offline environment (crates.io unreachable): std only,
+//! no dependencies. Minimization throughout — negate the objective to
+//! maximize.
+
+use std::collections::BinaryHeap;
+use std::time::{Duration, Instant};
+
+/// Anti-degeneracy / zero threshold for tableau entries.
+const EPS: f64 = 1e-9;
+/// Row-level feasibility tolerance (scaled by the rhs magnitude).
+const FEAS_TOL: f64 = 1e-6;
+/// A binary LP value within this of an integer counts as integral.
+const INT_TOL: f64 = 1e-6;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Cmp {
+    Le,
+    Eq,
+    Ge,
+}
+
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    /// `(var, coefficient)` pairs; duplicate vars are summed.
+    pub terms: Vec<(usize, f64)>,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+/// `min c.x  s.t.  rows, lb <= x <= ub`, some vars flagged binary.
+#[derive(Clone, Debug, Default)]
+pub struct Problem {
+    pub objective: Vec<f64>,
+    pub lower: Vec<f64>,
+    /// `f64::INFINITY` means unbounded above.
+    pub upper: Vec<f64>,
+    /// Branch-and-bound only branches on these.
+    pub binary: Vec<bool>,
+    pub constraints: Vec<Constraint>,
+}
+
+impl Problem {
+    pub fn new() -> Problem {
+        Problem::default()
+    }
+
+    pub fn add_var(&mut self, obj: f64, lower: f64, upper: f64) -> usize {
+        let i = self.objective.len();
+        self.objective.push(obj);
+        self.lower.push(lower);
+        self.upper.push(upper);
+        self.binary.push(false);
+        i
+    }
+
+    /// A `{0, 1}` variable branch-and-bound may branch on.
+    pub fn add_binary(&mut self, obj: f64) -> usize {
+        let i = self.add_var(obj, 0.0, 1.0);
+        self.binary[i] = true;
+        i
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.objective.len()
+    }
+
+    pub fn constrain(
+        &mut self,
+        terms: Vec<(usize, f64)>,
+        cmp: Cmp,
+        rhs: f64,
+    ) {
+        self.constraints.push(Constraint { terms, cmp, rhs });
+    }
+
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        self.objective.iter().zip(x).map(|(c, v)| c * v).sum()
+    }
+
+    /// Loose feasibility check: bounds, binary integrality, every row.
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        if x.len() != self.num_vars() {
+            return false;
+        }
+        for j in 0..x.len() {
+            if x[j] < self.lower[j] - tol || x[j] > self.upper[j] + tol {
+                return false;
+            }
+            if self.binary[j] && (x[j] - x[j].round()).abs() > tol {
+                return false;
+            }
+        }
+        self.constraints.iter().all(|c| {
+            let lhs: f64 = c.terms.iter().map(|&(j, a)| a * x[j]).sum();
+            let t = tol * (1.0 + c.rhs.abs());
+            match c.cmp {
+                Cmp::Le => lhs <= c.rhs + t,
+                Cmp::Ge => lhs >= c.rhs - t,
+                Cmp::Eq => (lhs - c.rhs).abs() <= t,
+            }
+        })
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum LpStatus {
+    Optimal,
+    Infeasible,
+    Unbounded,
+    /// Iteration safety cap hit — the returned point is feasible but its
+    /// objective is NOT a valid lower bound.
+    IterLimit,
+}
+
+#[derive(Clone, Debug)]
+pub struct LpSolution {
+    pub status: LpStatus,
+    /// Full-length variable vector (empty unless Optimal/IterLimit).
+    pub x: Vec<f64>,
+    pub objective: f64,
+}
+
+/// Solve the LP relaxation (integrality flags ignored).
+pub fn solve_lp(p: &Problem) -> LpSolution {
+    solve_lp_bounds(p, &p.lower, &p.upper)
+}
+
+/// [`solve_lp`] with overriding bounds — how branch-and-bound fixes
+/// binaries (`lb = ub = v`) without rebuilding the [`Problem`].
+pub fn solve_lp_bounds(
+    p: &Problem,
+    lower: &[f64],
+    upper: &[f64],
+) -> LpSolution {
+    match Simplex::build(p, lower, upper) {
+        Ok(mut s) => s.run(),
+        Err(status) => LpSolution {
+            status,
+            x: Vec::new(),
+            objective: f64::INFINITY,
+        },
+    }
+}
+
+/// Dense bounded-variable tableau. Column layout: structurals (free
+/// vars, shifted so lb = 0), then slacks/surpluses, then artificials.
+struct Simplex<'a> {
+    p: &'a Problem,
+    lower: &'a [f64],
+    /// Problem var index per structural column.
+    free: Vec<usize>,
+    /// Values of vars substituted out (`ub - lb <= EPS`).
+    fixed_val: Vec<f64>,
+    m: usize,
+    /// Total columns (tableau rows have `n + 1` entries, rhs last).
+    n: usize,
+    /// First artificial column.
+    art0: usize,
+    a: Vec<Vec<f64>>,
+    /// Reduced-cost row, length `n + 1`; objective excess is `-z[n]`.
+    z: Vec<f64>,
+    basis: Vec<usize>,
+    in_basis: Vec<bool>,
+    /// Per-column upper bound in shifted space (INFINITY allowed).
+    ub: Vec<f64>,
+    /// Column currently complemented (`x = ub - x~`).
+    flipped: Vec<bool>,
+    /// Objective constant from lb shifts + substituted-out vars.
+    obj_base: f64,
+    /// Largest |rhs| seen at build time, for the phase-1 tolerance.
+    rhs_scale: f64,
+}
+
+impl<'a> Simplex<'a> {
+    fn build(
+        p: &'a Problem,
+        lower: &'a [f64],
+        upper: &'a [f64],
+    ) -> Result<Simplex<'a>, LpStatus> {
+        let nv = p.num_vars();
+        let mut fixed_val = vec![0.0; nv];
+        let mut col_of = vec![usize::MAX; nv];
+        let mut free = Vec::new();
+        for j in 0..nv {
+            if lower[j] > upper[j] + FEAS_TOL {
+                return Err(LpStatus::Infeasible);
+            }
+            if upper[j] - lower[j] <= EPS {
+                fixed_val[j] = lower[j];
+            } else {
+                col_of[j] = free.len();
+                free.push(j);
+            }
+        }
+        let nf = free.len();
+        let m = p.constraints.len();
+
+        // rows over structural columns, rhs shifted by fixed values and
+        // lower bounds; slack sign per row (0 for Eq)
+        let mut rows: Vec<Vec<f64>> = vec![vec![0.0; nf]; m];
+        let mut rhs = vec![0.0; m];
+        let mut slack_sign = vec![0.0f64; m];
+        for (r, c) in p.constraints.iter().enumerate() {
+            rhs[r] = c.rhs;
+            for &(j, coef) in &c.terms {
+                if col_of[j] == usize::MAX {
+                    rhs[r] -= coef * fixed_val[j];
+                } else {
+                    rows[r][col_of[j]] += coef;
+                    rhs[r] -= coef * lower[j];
+                }
+            }
+            slack_sign[r] = match c.cmp {
+                Cmp::Le => 1.0,
+                Cmp::Ge => -1.0,
+                Cmp::Eq => 0.0,
+            };
+        }
+        let mut rhs_scale = 1.0f64;
+        for (r, row) in rows.iter_mut().enumerate() {
+            if rhs[r] < 0.0 {
+                rhs[r] = -rhs[r];
+                slack_sign[r] = -slack_sign[r];
+                for v in row.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            rhs_scale = rhs_scale.max(rhs[r].abs());
+        }
+
+        // column plan: a slack per inequality; an artificial wherever the
+        // slack cannot serve as the initial basic variable
+        let ns = slack_sign.iter().filter(|&&s| s != 0.0).count();
+        let needs_art: Vec<bool> =
+            slack_sign.iter().map(|&s| s != 1.0).collect();
+        let na = needs_art.iter().filter(|&&b| b).count();
+        let art0 = nf + ns;
+        let n = art0 + na;
+
+        let mut a = vec![vec![0.0; n + 1]; m];
+        let mut basis = vec![usize::MAX; m];
+        let mut in_basis = vec![false; n];
+        let mut ub = vec![f64::INFINITY; n];
+        for (k, &j) in free.iter().enumerate() {
+            ub[k] = upper[j] - lower[j];
+        }
+        let mut next_slack = nf;
+        let mut next_art = art0;
+        for r in 0..m {
+            a[r][..nf].copy_from_slice(&rows[r]);
+            a[r][n] = rhs[r];
+            if slack_sign[r] != 0.0 {
+                a[r][next_slack] = slack_sign[r];
+                if slack_sign[r] == 1.0 {
+                    basis[r] = next_slack;
+                }
+                next_slack += 1;
+            }
+            if needs_art[r] {
+                a[r][next_art] = 1.0;
+                basis[r] = next_art;
+                next_art += 1;
+            }
+            in_basis[basis[r]] = true;
+        }
+
+        let obj_base: f64 = (0..nv)
+            .map(|j| {
+                p.objective[j]
+                    * if col_of[j] == usize::MAX {
+                        fixed_val[j]
+                    } else {
+                        lower[j]
+                    }
+            })
+            .sum();
+
+        Ok(Simplex {
+            p,
+            lower,
+            free,
+            fixed_val,
+            m,
+            n,
+            art0,
+            a,
+            z: vec![0.0; n + 1],
+            basis,
+            in_basis,
+            ub,
+            flipped: vec![false; n],
+            obj_base,
+            rhs_scale,
+        })
+    }
+
+    /// Complement-flip a nonbasic column: `x := ub - x`.
+    fn flip(&mut self, j: usize) {
+        let u = self.ub[j];
+        for r in 0..self.m {
+            let arj = self.a[r][j];
+            if arj != 0.0 {
+                self.a[r][self.n] -= arj * u;
+                self.a[r][j] = -arj;
+            }
+        }
+        self.z[self.n] -= self.z[j] * u;
+        self.z[j] = -self.z[j];
+        self.flipped[j] = !self.flipped[j];
+    }
+
+    fn pivot(&mut self, r: usize, j: usize) {
+        let inv = 1.0 / self.a[r][j];
+        for v in self.a[r].iter_mut() {
+            *v *= inv;
+        }
+        self.a[r][j] = 1.0;
+        for i in 0..self.m {
+            if i == r {
+                continue;
+            }
+            let f = self.a[i][j];
+            if f != 0.0 {
+                for c in 0..=self.n {
+                    self.a[i][c] -= f * self.a[r][c];
+                }
+                self.a[i][j] = 0.0;
+                // roundoff must not leave a basic value slightly negative
+                if self.a[i][self.n] < 0.0 && self.a[i][self.n] > -1e-7 {
+                    self.a[i][self.n] = 0.0;
+                }
+            }
+        }
+        let f = self.z[j];
+        if f != 0.0 {
+            for c in 0..=self.n {
+                self.z[c] -= f * self.a[r][c];
+            }
+            self.z[j] = 0.0;
+        }
+        self.in_basis[self.basis[r]] = false;
+        self.in_basis[j] = true;
+        self.basis[r] = j;
+    }
+
+    /// Price and pivot until optimal. `allow_art` admits artificial
+    /// columns as entering candidates (phase 1 never needs it either —
+    /// artificials start basic and must not re-enter once driven out).
+    fn optimize(&mut self) -> LpStatus {
+        let max_iters = 200 * (self.m + self.n) + 2000;
+        let bland_after = 50 * (self.m + self.n) + 500;
+        for it in 0..max_iters {
+            let bland = it > bland_after;
+            // entering column
+            let mut enter = None;
+            let mut best = -EPS;
+            for j in 0..self.n {
+                if self.in_basis[j] || j >= self.art0 {
+                    continue;
+                }
+                let zj = self.z[j];
+                if zj < -EPS {
+                    if bland {
+                        enter = Some(j);
+                        break;
+                    }
+                    if zj < best {
+                        best = zj;
+                        enter = Some(j);
+                    }
+                }
+            }
+            let Some(j) = enter else {
+                return LpStatus::Optimal;
+            };
+
+            // ratio test: basic leaves at lower, basic reaches its upper,
+            // or the entering column hits its own bound (a pure flip)
+            let mut t = self.ub[j];
+            let mut leave: Option<(usize, bool)> = None;
+            for r in 0..self.m {
+                let arj = self.a[r][j];
+                if arj > EPS {
+                    let tr = (self.a[r][self.n] / arj).max(0.0);
+                    if tr < t - 1e-12
+                        || (bland
+                            && leave.is_some()
+                            && tr < t + 1e-12
+                            && self.basis[r]
+                                < self.basis[leave.unwrap().0])
+                    {
+                        t = tr.min(t);
+                        leave = Some((r, false));
+                    }
+                } else if arj < -EPS {
+                    let ubr = self.ub[self.basis[r]];
+                    if ubr.is_finite() {
+                        let tr =
+                            ((ubr - self.a[r][self.n]) / -arj).max(0.0);
+                        if tr < t - 1e-12
+                            || (bland
+                                && leave.is_some()
+                                && tr < t + 1e-12
+                                && self.basis[r]
+                                    < self.basis[leave.unwrap().0])
+                        {
+                            t = tr.min(t);
+                            leave = Some((r, true));
+                        }
+                    }
+                }
+            }
+            match leave {
+                None if t.is_infinite() => return LpStatus::Unbounded,
+                None => self.flip(j), // entering var runs to its bound
+                Some((r, at_upper)) => {
+                    if at_upper {
+                        // leaving var exits at its upper bound: flip its
+                        // (unit) column first so it leaves at zero
+                        let k = self.basis[r];
+                        self.a[r][self.n] -= self.ub[k];
+                        self.a[r][k] = -1.0;
+                        self.flipped[k] = !self.flipped[k];
+                    }
+                    self.pivot(r, j);
+                }
+            }
+        }
+        LpStatus::IterLimit
+    }
+
+    fn extract(&self) -> Vec<f64> {
+        let mut val = vec![0.0; self.n];
+        for r in 0..self.m {
+            val[self.basis[r]] = self.a[r][self.n];
+        }
+        let mut x = self.fixed_val.clone();
+        for (k, &j) in self.free.iter().enumerate() {
+            let v = if self.flipped[k] {
+                self.ub[k] - val[k]
+            } else {
+                val[k]
+            };
+            x[j] = self.lower[j] + v;
+        }
+        x
+    }
+
+    fn run(&mut self) -> LpSolution {
+        let fail = |status| LpSolution {
+            status,
+            x: Vec::new(),
+            objective: f64::INFINITY,
+        };
+        // ---- phase 1: minimize the sum of artificials ----
+        if self.art0 < self.n {
+            // z := -(sum of artificial rows), pricing out the basis
+            for r in 0..self.m {
+                if self.basis[r] >= self.art0 {
+                    for c in 0..=self.n {
+                        self.z[c] -= self.a[r][c];
+                    }
+                    self.z[self.basis[r]] = 0.0;
+                }
+            }
+            // (artificial columns carry cost 1; they are excluded from
+            // entering, so their reduced costs never matter)
+            match self.optimize() {
+                LpStatus::Optimal => {}
+                s => return fail(s),
+            }
+            if -self.z[self.n] > FEAS_TOL * (1.0 + self.rhs_scale) {
+                return fail(LpStatus::Infeasible);
+            }
+            // drive surviving artificials out of the basis; a row with no
+            // eligible pivot is linearly dependent — drop it
+            let mut r = 0;
+            while r < self.m {
+                if self.basis[r] < self.art0 {
+                    r += 1;
+                    continue;
+                }
+                let piv = (0..self.art0).find(|&j| {
+                    !self.in_basis[j] && self.a[r][j].abs() > 1e-7
+                });
+                match piv {
+                    Some(j) => {
+                        self.pivot(r, j);
+                        r += 1;
+                    }
+                    None => {
+                        self.in_basis[self.basis[r]] = false;
+                        self.a.swap_remove(r);
+                        self.basis.swap_remove(r);
+                        self.m -= 1;
+                    }
+                }
+            }
+        }
+
+        // ---- phase 2: the real objective ----
+        self.z = vec![0.0; self.n + 1];
+        for (k, &j) in self.free.iter().enumerate() {
+            let c = self.p.objective[j];
+            if self.flipped[k] {
+                self.z[k] = -c;
+                self.z[self.n] -= c * self.ub[k];
+            } else {
+                self.z[k] = c;
+            }
+        }
+        for r in 0..self.m {
+            let k = self.basis[r];
+            let f = self.z[k];
+            if f != 0.0 {
+                for c in 0..=self.n {
+                    self.z[c] -= f * self.a[r][c];
+                }
+                self.z[k] = 0.0;
+            }
+        }
+        let status = self.optimize();
+        match status {
+            LpStatus::Optimal | LpStatus::IterLimit => LpSolution {
+                status,
+                x: self.extract(),
+                objective: self.obj_base - self.z[self.n],
+            },
+            s => fail(s),
+        }
+    }
+}
+
+// --------------------------- branch-and-bound ---------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MilpStatus {
+    /// Incumbent proven optimal (within `abs_gap`).
+    Optimal,
+    /// Incumbent feasible but the search stopped early (time/node
+    /// budget, or an LP hit its iteration cap).
+    Feasible,
+    Infeasible,
+    Unbounded,
+    /// Search stopped early with no incumbent found.
+    Limit,
+    /// Refused up front: the dense tableau would exceed `max_cells`.
+    TooLarge,
+}
+
+#[derive(Clone, Debug)]
+pub struct MilpSolution {
+    pub status: MilpStatus,
+    /// Best integral solution found (the warm start if nothing better).
+    pub x: Vec<f64>,
+    pub objective: f64,
+    /// Best proven lower bound on the optimum.
+    pub bound: f64,
+    /// Branch-and-bound nodes whose LP was solved.
+    pub nodes: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct MilpOpts {
+    /// Wall-clock budget; `None` = unlimited.
+    pub time_budget: Option<Duration>,
+    pub max_nodes: usize,
+    /// Cap on `rows * columns` of the dense tableau.
+    pub max_cells: usize,
+    /// An incumbent within this of the best bound counts as optimal.
+    pub abs_gap: f64,
+}
+
+impl Default for MilpOpts {
+    fn default() -> Self {
+        MilpOpts {
+            time_budget: None,
+            max_nodes: 100_000,
+            max_cells: 16_000_000,
+            abs_gap: 1e-9,
+        }
+    }
+}
+
+/// Heap entry ordered so the *smallest* bound pops first (best-bound).
+struct Entry {
+    bound: f64,
+    id: u64,
+    fixes: Vec<(usize, f64)>,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound && self.id == other.id
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap, we want min-bound first
+        other
+            .bound
+            .total_cmp(&self.bound)
+            .then(other.id.cmp(&self.id))
+    }
+}
+
+/// Branch-and-bound over the problem's binary variables. `warm` seeds
+/// the incumbent (it is verified feasible first); the result is never
+/// worse than a feasible warm start.
+pub fn solve(
+    p: &Problem,
+    opts: &MilpOpts,
+    warm: Option<&[f64]>,
+) -> MilpSolution {
+    let deadline = opts.time_budget.map(|d| Instant::now() + d);
+    let mut inc: Option<(Vec<f64>, f64)> = warm.and_then(|w| {
+        p.is_feasible(w, 10.0 * FEAS_TOL)
+            .then(|| (w.to_vec(), p.eval(w)))
+    });
+
+    let m = p.constraints.len();
+    let est_cols = p.num_vars() + 2 * m;
+    let finish = |status: MilpStatus,
+                  inc: Option<(Vec<f64>, f64)>,
+                  bound: f64,
+                  nodes: usize| {
+        match inc {
+            Some((x, obj)) => MilpSolution {
+                status,
+                x,
+                objective: obj,
+                bound,
+                nodes,
+            },
+            None => MilpSolution {
+                status,
+                x: Vec::new(),
+                objective: f64::INFINITY,
+                bound,
+                nodes,
+            },
+        }
+    };
+    if m.saturating_mul(est_cols + 1) > opts.max_cells {
+        let st = MilpStatus::TooLarge;
+        return finish(st, inc, f64::NEG_INFINITY, 0);
+    }
+
+    let mut lower = p.lower.clone();
+    let mut upper = p.upper.clone();
+    let mut heap = BinaryHeap::new();
+    let mut next_id = 0u64;
+    heap.push(Entry {
+        bound: f64::NEG_INFINITY,
+        id: 0,
+        fixes: Vec::new(),
+    });
+    let mut nodes = 0usize;
+    let mut best_bound = f64::NEG_INFINITY;
+    // true once any subtree was dropped unexplored (LP iteration cap):
+    // optimality/infeasibility can no longer be claimed
+    let mut incomplete = false;
+
+    while let Some(node) = heap.pop() {
+        best_bound = best_bound.max(node.bound);
+        if let Some((_, iobj)) = &inc {
+            if node.bound >= iobj - opts.abs_gap {
+                // best-bound order: every open node is at least this bad
+                return finish(MilpStatus::Optimal, inc, *iobj, nodes);
+            }
+        }
+        if nodes >= opts.max_nodes
+            || deadline.map(|d| Instant::now() >= d).unwrap_or(false)
+        {
+            let st = if inc.is_some() {
+                MilpStatus::Feasible
+            } else {
+                MilpStatus::Limit
+            };
+            return finish(st, inc, node.bound.max(best_bound), nodes);
+        }
+        nodes += 1;
+
+        for &(j, v) in &node.fixes {
+            lower[j] = v;
+            upper[j] = v;
+        }
+        let lp = solve_lp_bounds(p, &lower, &upper);
+        for &(j, _) in &node.fixes {
+            lower[j] = p.lower[j];
+            upper[j] = p.upper[j];
+        }
+
+        match lp.status {
+            LpStatus::Infeasible => continue,
+            LpStatus::Unbounded => {
+                // a relaxation is unbounded in its continuous vars, so
+                // the restricted integer problem is too
+                return MilpSolution {
+                    status: MilpStatus::Unbounded,
+                    x: Vec::new(),
+                    objective: f64::NEG_INFINITY,
+                    bound: f64::NEG_INFINITY,
+                    nodes,
+                };
+            }
+            LpStatus::IterLimit => {
+                incomplete = true;
+                continue;
+            }
+            LpStatus::Optimal => {}
+        }
+        if let Some((_, iobj)) = &inc {
+            if lp.objective >= iobj - opts.abs_gap {
+                continue;
+            }
+        }
+
+        // most fractional binary
+        let mut branch = None;
+        let mut best_frac = INT_TOL;
+        for j in 0..p.num_vars() {
+            if !p.binary[j] {
+                continue;
+            }
+            let f = (lp.x[j] - lp.x[j].round()).abs();
+            if f > best_frac {
+                best_frac = f;
+                branch = Some(j);
+            }
+        }
+        match branch {
+            None => {
+                // integral on every binary: snap and take as incumbent
+                let mut x = lp.x.clone();
+                for j in 0..p.num_vars() {
+                    if p.binary[j] {
+                        x[j] = x[j].round();
+                    }
+                }
+                let obj = p.eval(&x);
+                if inc.as_ref().map(|(_, io)| obj < *io).unwrap_or(true) {
+                    inc = Some((x, obj));
+                }
+            }
+            Some(j) => {
+                for v in [0.0, 1.0] {
+                    let mut fixes = node.fixes.clone();
+                    fixes.push((j, v));
+                    next_id += 1;
+                    heap.push(Entry {
+                        bound: lp.objective,
+                        id: next_id,
+                        fixes,
+                    });
+                }
+            }
+        }
+    }
+
+    // heap drained
+    match (&inc, incomplete) {
+        (Some((_, obj)), false) => {
+            let obj = *obj;
+            finish(MilpStatus::Optimal, inc, obj, nodes)
+        }
+        (Some(_), true) => {
+            finish(MilpStatus::Feasible, inc, best_bound, nodes)
+        }
+        (None, false) => {
+            finish(MilpStatus::Infeasible, inc, f64::INFINITY, nodes)
+        }
+        (None, true) => finish(MilpStatus::Limit, inc, best_bound, nodes),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_near(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+
+    #[test]
+    fn lp_bounds_and_row() {
+        // max x + y  s.t.  x + y <= 4, x in [0,2], y in [0,3]
+        let mut p = Problem::new();
+        let x = p.add_var(-1.0, 0.0, 2.0);
+        let y = p.add_var(-1.0, 0.0, 3.0);
+        p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Le, 4.0);
+        let s = solve_lp(&p);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert_near(s.objective, -4.0);
+        assert_near(s.x[x] + s.x[y], 4.0);
+    }
+
+    #[test]
+    fn lp_degenerate_vertex() {
+        // three rows tight at (1, 1) in 2D
+        let mut p = Problem::new();
+        let x = p.add_var(-1.0, 0.0, 10.0);
+        let y = p.add_var(-1.0, 0.0, 10.0);
+        p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Le, 2.0);
+        p.constrain(vec![(x, 1.0)], Cmp::Le, 1.0);
+        p.constrain(vec![(y, 1.0)], Cmp::Le, 1.0);
+        let s = solve_lp(&p);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert_near(s.objective, -2.0);
+    }
+
+    #[test]
+    fn lp_unbounded() {
+        let mut p = Problem::new();
+        let _x = p.add_var(-1.0, 0.0, f64::INFINITY);
+        let y = p.add_var(0.0, 0.0, f64::INFINITY);
+        p.constrain(vec![(y, 1.0)], Cmp::Le, 5.0);
+        assert_eq!(solve_lp(&p).status, LpStatus::Unbounded);
+    }
+
+    #[test]
+    fn lp_infeasible() {
+        let mut p = Problem::new();
+        let x = p.add_var(1.0, 0.0, 1.0);
+        p.constrain(vec![(x, 1.0)], Cmp::Ge, 2.0);
+        assert_eq!(solve_lp(&p).status, LpStatus::Infeasible);
+    }
+
+    #[test]
+    fn lp_equalities_and_negative_bounds() {
+        let mut p = Problem::new();
+        let x = p.add_var(1.0, -10.0, 10.0);
+        let y = p.add_var(1.0, -10.0, 10.0);
+        p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 3.0);
+        p.constrain(vec![(x, 1.0), (y, -1.0)], Cmp::Eq, 1.0);
+        let s = solve_lp(&p);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert_near(s.x[x], 2.0);
+        assert_near(s.x[y], 1.0);
+        assert_near(s.objective, 3.0);
+    }
+
+    #[test]
+    fn lp_surplus_rows() {
+        // min x + y  s.t.  x + 2y >= 4, 3x + y >= 6
+        let mut p = Problem::new();
+        let x = p.add_var(1.0, 0.0, f64::INFINITY);
+        let y = p.add_var(1.0, 0.0, f64::INFINITY);
+        p.constrain(vec![(x, 1.0), (y, 2.0)], Cmp::Ge, 4.0);
+        p.constrain(vec![(x, 3.0), (y, 1.0)], Cmp::Ge, 6.0);
+        let s = solve_lp(&p);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert_near(s.objective, 2.8);
+    }
+
+    fn knapsack(v: &[f64], w: &[f64], cap: f64) -> Problem {
+        let mut p = Problem::new();
+        let terms = (0..v.len())
+            .map(|i| {
+                let j = p.add_binary(-v[i]);
+                (j, w[i])
+            })
+            .collect();
+        p.constrain(terms, Cmp::Le, cap);
+        p
+    }
+
+    #[test]
+    fn knapsack_hand_checked() {
+        // classic: optimum picks items 2+3 for value 220
+        let p = knapsack(&[60.0, 100.0, 120.0], &[10.0, 20.0, 30.0], 50.0);
+        let s = solve(&p, &MilpOpts::default(), None);
+        assert_eq!(s.status, MilpStatus::Optimal);
+        assert_near(s.objective, -220.0);
+        assert_near(s.x[0], 0.0);
+        assert_near(s.x[1], 1.0);
+        assert_near(s.x[2], 1.0);
+        // the LP relaxation is fractional (bound -240), so the optimum
+        // must come from actual branching
+        assert!(s.nodes > 1, "expected branching, got {} node(s)", s.nodes);
+    }
+
+    #[test]
+    fn knapsack_four_items() {
+        // best is items 2+4: weight 7, value 90
+        let p = knapsack(
+            &[10.0, 40.0, 30.0, 50.0],
+            &[5.0, 4.0, 6.0, 3.0],
+            10.0,
+        );
+        let s = solve(&p, &MilpOpts::default(), None);
+        assert_eq!(s.status, MilpStatus::Optimal);
+        assert_near(s.objective, -90.0);
+    }
+
+    #[test]
+    fn milp_infeasible() {
+        let mut p = Problem::new();
+        let x = p.add_binary(1.0);
+        let y = p.add_binary(1.0);
+        p.constrain(vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 3.0);
+        let s = solve(&p, &MilpOpts::default(), None);
+        assert_eq!(s.status, MilpStatus::Infeasible);
+    }
+
+    #[test]
+    fn warm_start_never_worsens() {
+        let p = knapsack(&[60.0, 100.0, 120.0], &[10.0, 20.0, 30.0], 50.0);
+        let warm = [1.0, 0.0, 0.0]; // value 60, feasible
+        // zero search budget: the warm incumbent comes straight back
+        let opts = MilpOpts { max_nodes: 0, ..Default::default() };
+        let s = solve(&p, &opts, Some(&warm));
+        assert_eq!(s.status, MilpStatus::Feasible);
+        assert_near(s.objective, -60.0);
+        assert_eq!(s.x, warm.to_vec());
+        // full search can only improve on it
+        let s = solve(&p, &MilpOpts::default(), Some(&warm));
+        assert!(s.objective <= -60.0 + 1e-9);
+        assert_near(s.objective, -220.0);
+    }
+
+    #[test]
+    fn equality_over_binaries() {
+        // pick exactly two of three, cheapest pair
+        let mut p = Problem::new();
+        let a = p.add_binary(1.0);
+        let b = p.add_binary(2.0);
+        let c = p.add_binary(3.0);
+        p.constrain(
+            vec![(a, 1.0), (b, 1.0), (c, 1.0)],
+            Cmp::Eq,
+            2.0,
+        );
+        let s = solve(&p, &MilpOpts::default(), None);
+        assert_eq!(s.status, MilpStatus::Optimal);
+        assert_near(s.objective, 3.0);
+        assert_near(s.x[a], 1.0);
+        assert_near(s.x[b], 1.0);
+        assert_near(s.x[c], 0.0);
+    }
+
+    #[test]
+    fn too_large_is_refused_but_keeps_warm() {
+        let mut p = Problem::new();
+        let vars: Vec<usize> =
+            (0..100).map(|_| p.add_binary(-1.0)).collect();
+        for &v in &vars {
+            p.constrain(vec![(v, 1.0)], Cmp::Le, 1.0);
+        }
+        let warm = vec![1.0; 100];
+        let opts = MilpOpts { max_cells: 10, ..Default::default() };
+        let s = solve(&p, &opts, Some(&warm));
+        assert_eq!(s.status, MilpStatus::TooLarge);
+        assert_near(s.objective, -100.0);
+        assert_eq!(s.x, warm);
+    }
+}
