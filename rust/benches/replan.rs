@@ -1,0 +1,179 @@
+//! Bench: incremental replanning — a cold two-level pipeline solve vs a
+//! warm cell-store replan after an elastic cluster change.
+//!
+//! The warm store is what a registry-backed daemon (or `automap replan
+//! --cache-dir`) sees: every (span, device-range) cell the base solve
+//! compiled, keyed by content fingerprint. Three Fig-5 scenarios:
+//!
+//! * **drop-last** (`fig5-drop7`) — the canonical one-node loss. The
+//!   surviving devices keep their ids and links, so *every* cell rehits
+//!   and the replan is pure composition DP + replay. This is the ≥10×
+//!   headline case.
+//! * **grow** (`fig5-grow`) — two extra NVLink devices appear; cells on
+//!   the original eight rehit, only ranges touching the new pair
+//!   compile.
+//! * **degrade** (`fig5-degraded`) — the second NUMA node derates to
+//!   0.5× compute; its device class changes, so exactly the cells
+//!   touching devices 4..8 recompile.
+//!
+//! The bench also asserts the invariant the cache must never break:
+//! replanning on an *unchanged* cluster reproduces the cold solution
+//! byte-for-byte.
+//!
+//! Results print as a table and land in `BENCH_replan.json` at the repo
+//! root. `cargo bench --bench replan [-- --quick]`
+
+use std::sync::Arc;
+
+use automap::api::{CellStore, PipelineSolution, PlanOpts, Planner,
+                   PpOpts};
+use automap::cluster::SimCluster;
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::graph::Graph;
+use automap::sim::DeviceModel;
+use automap::solver::SolveOpts;
+use automap::util::bench::{bench, quick, Table};
+use automap::util::json::{arr, num, obj, s, write_json, Json};
+
+fn fast_opts() -> PlanOpts {
+    PlanOpts {
+        sweep: 2,
+        solve: SolveOpts {
+            beam_width: 12,
+            anneal_iters: 150,
+            lagrange_iters: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn solve_pp(
+    g: &Graph,
+    cluster: &SimCluster,
+    dev: &DeviceModel,
+    cells: &Arc<CellStore>,
+    max_stages: usize,
+) -> PipelineSolution {
+    let mut opts = fast_opts();
+    opts.pp = Some(PpOpts {
+        min_stages: 2,
+        max_stages,
+        microbatches: vec![2, 4],
+        ..Default::default()
+    });
+    let mut p = Planner::new(g, cluster, dev)
+        .with_opts(opts)
+        .with_cell_store(Arc::clone(cells));
+    p.solve_pipeline().expect("bench pipeline solves").clone()
+}
+
+fn canonical(sol: &PipelineSolution) -> String {
+    use automap::api::Artifact;
+    let mut text = String::new();
+    write_json(&sol.to_json(), &mut text);
+    text
+}
+
+fn main() {
+    let q = quick();
+    let iters = if q { 1 } else { 2 };
+    let max_stages = if q { 2 } else { 3 };
+    let dev = DeviceModel::a100_80gb();
+    let g = gpt2(&Gpt2Cfg::mini());
+    let base_cluster = SimCluster::partially_connected_8gpu();
+
+    // the base solve fills the warm store with every cell it evaluated
+    let warm = Arc::new(CellStore::default());
+    let base = solve_pp(&g, &base_cluster, &dev, &warm, max_stages);
+
+    // invariant: an unchanged cluster replans byte-identically
+    let again = solve_pp(&g, &base_cluster, &dev, &warm, max_stages);
+    assert_eq!(
+        canonical(&base),
+        canonical(&again),
+        "warm replan on an unchanged cluster must be byte-identical"
+    );
+
+    let scenarios: Vec<(&str, SimCluster)> = vec![
+        ("fig5-drop7", SimCluster::fig5_drop(7)),
+        ("fig5-grow", SimCluster::fig5_grow()),
+        ("fig5-degraded", SimCluster::fig5_degraded()),
+    ];
+
+    let mut table = Table::new(
+        "replan: cold solve vs warm cell-store replan after a cluster \
+         change",
+        &["scenario", "cold ms", "warm ms", "speedup", "reused",
+          "recompiled"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut drop_last_speedup = 0.0;
+
+    for (name, cluster) in &scenarios {
+        // counted warm pass: per-scenario reuse off the shared store
+        let r0 = (warm.reused(), warm.recompiled());
+        let warm_sol = solve_pp(&g, cluster, &dev, &warm, max_stages);
+        let reused = warm.reused() - r0.0;
+        let recompiled = warm.recompiled() - r0.1;
+
+        let cold = bench(&format!("cold solve {name}"), 0, iters, || {
+            let fresh = Arc::new(CellStore::default());
+            solve_pp(&g, cluster, &dev, &fresh, max_stages).iter_time
+        });
+        let warm_t = bench(&format!("warm replan {name}"), 0, iters, || {
+            solve_pp(&g, cluster, &dev, &warm, max_stages).iter_time
+        });
+
+        let cold_ms = cold.median_ns / 1e6;
+        let warm_ms = warm_t.median_ns / 1e6;
+        let speedup = cold_ms / warm_ms.max(1e-9);
+        if *name == "fig5-drop7" {
+            drop_last_speedup = speedup;
+        }
+        table.row(vec![
+            name.to_string(),
+            format!("{cold_ms:.1}"),
+            format!("{warm_ms:.1}"),
+            format!("{speedup:.1}x"),
+            reused.to_string(),
+            recompiled.to_string(),
+        ]);
+        rows.push(obj(vec![
+            ("scenario", s(name)),
+            ("stages", num(warm_sol.stages.len() as f64)),
+            ("cold_solve_ms", num(cold_ms)),
+            ("warm_replan_ms", num(warm_ms)),
+            ("speedup", num(speedup)),
+            ("cells_reused", num(reused as f64)),
+            ("cells_recompiled", num(recompiled as f64)),
+        ]));
+    }
+    table.print();
+
+    // the headline claim, checked only in full mode (quick runs one
+    // noisy iteration on a shrunken search space)
+    if !q {
+        assert!(
+            drop_last_speedup >= 10.0,
+            "one-node loss must replan >= 10x faster warm than cold \
+             (got {drop_last_speedup:.1}x)"
+        );
+    }
+
+    let out = obj(vec![
+        ("bench", s("replan")),
+        ("model", s("gpt2-mini")),
+        ("quick", Json::Bool(q)),
+        ("byte_identical_when_unchanged", Json::Bool(true)),
+        ("results", arr(rows)),
+    ]);
+    let mut text = String::new();
+    write_json(&out, &mut text);
+    text.push('\n');
+    if let Err(e) = std::fs::write("BENCH_replan.json", &text) {
+        eprintln!("could not write BENCH_replan.json: {e}");
+    } else {
+        println!("\nrecorded -> BENCH_replan.json");
+    }
+}

@@ -465,7 +465,7 @@ impl Artifact for ClusterReport {
     const KIND: &'static str = "cluster-report";
 
     fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("kind", s(Self::KIND)),
             ("version", num(ARTIFACT_VERSION as f64)),
             ("seed", num(self.seed as f64)),
@@ -482,19 +482,30 @@ impl Artifact for ClusterReport {
                     .map(|r| usize_arr(r))
                     .collect()),
             ),
-        ])
+        ];
+        // only emitted for heterogeneous clusters: uniform reports keep
+        // the exact bytes (and hashes) they had before the field existed
+        if !self.info.is_uniform_compute() {
+            pairs.push(("flops_scale", f64_arr(&self.info.flops_scale)));
+        }
+        obj(pairs)
     }
 
     fn from_json(v: &Json) -> Result<Self> {
         expect_kind(v, Self::KIND)?;
+        let n = jusize(v.get("n"), "n")?;
         Ok(ClusterReport {
             seed: jusize(v.get("seed"), "seed")? as u64,
             info: ClusterInfo {
-                n: jusize(v.get("n"), "n")?,
+                n,
                 alpha: read_f64_mat(v.get("alpha"), "alpha")?,
                 beta: read_f64_mat(v.get("beta"), "beta")?,
                 tiers: read_f64_arr(v.get("tiers"), "tiers")?,
                 tier_of: read_usize_mat(v.get("tier_of"), "tier_of")?,
+                flops_scale: match v.get("flops_scale") {
+                    Json::Null => vec![1.0; n], // pre-hetero artifacts
+                    other => read_f64_arr(other, "flops_scale")?,
+                },
             },
         })
     }
@@ -582,6 +593,14 @@ pub struct ShardingCandidate {
     pub time: f64,
     /// Solver per-device memory, bytes.
     pub mem: f64,
+    /// Relative optimality gap reported by the backend (`Some(0.0)` =
+    /// proven optimal). Heuristic backends leave both fields `None`,
+    /// which keeps their serialized candidates byte-identical to
+    /// pre-telemetry artifacts.
+    pub gap: Option<f64>,
+    /// Whether the backend proved this candidate optimal for its
+    /// (mesh, sweep point) subproblem.
+    pub proven_optimal: Option<bool>,
 }
 
 /// Output of the sharding stage. Assignment backends produce `candidates`;
@@ -610,14 +629,24 @@ impl Artifact for ShardingSolution {
                     .candidates
                     .iter()
                     .map(|c| {
-                        obj(vec![
+                        let mut pairs = vec![
                             ("mesh", mesh_to_json(&c.mesh)),
                             ("sweep_n", num(c.sweep_n as f64)),
                             ("intra_budget", jnum(c.intra_budget)),
                             ("choice", usize_arr(&c.choice)),
                             ("time", jnum(c.time)),
                             ("mem", jnum(c.mem)),
-                        ])
+                        ];
+                        if let Some(gap) = c.gap {
+                            pairs.push(("gap", jnum(gap)));
+                        }
+                        if let Some(p) = c.proven_optimal {
+                            pairs.push((
+                                "proven_optimal",
+                                Json::Bool(p),
+                            ));
+                        }
+                        obj(pairs)
                     })
                     .collect()),
             ),
@@ -646,6 +675,14 @@ impl Artifact for ShardingSolution {
                     choice: read_usize_arr(c.get("choice"), "choice")?,
                     time: jf(c.get("time"), "cand.time")?,
                     mem: jf(c.get("mem"), "cand.mem")?,
+                    gap: match c.get("gap") {
+                        Json::Null => None,
+                        other => Some(jf(other, "cand.gap")?),
+                    },
+                    proven_optimal: match c.get("proven_optimal") {
+                        Json::Null => None,
+                        other => other.as_bool(),
+                    },
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -740,6 +777,14 @@ pub struct CompiledPlan {
     pub budget: f64,
     /// Which sweep point n won (intra-op budget = budget·(1+α)^n).
     pub sweep_n: usize,
+    /// Relative optimality gap of the winning sharding solution,
+    /// (objective − best bound) / objective, when the backend proved a
+    /// bound (the ILP backend's branch-and-bound). `None` for heuristic
+    /// backends and pre-gap artifacts; `Some(0.0)` means proven optimal.
+    pub gap: Option<f64>,
+    /// True when the backend proved the winning solution optimal (the
+    /// ILP search closed its tree without hitting a node limit).
+    pub proven_optimal: Option<bool>,
 }
 
 impl CompiledPlan {
@@ -789,7 +834,7 @@ impl Artifact for CompiledPlan {
     const KIND: &'static str = "compiled-plan";
 
     fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("kind", s(Self::KIND)),
             ("version", num(ARTIFACT_VERSION as f64)),
             ("backend", s(&self.backend)),
@@ -801,7 +846,16 @@ impl Artifact for CompiledPlan {
             ("mem_per_device", jnum(self.mem_per_device)),
             ("budget", jnum(self.budget)),
             ("sweep_n", num(self.sweep_n as f64)),
-        ])
+        ];
+        // only present when the backend proved a bound, so plans from
+        // heuristic backends keep their exact pre-gap bytes
+        if let Some(gap) = self.gap {
+            pairs.push(("gap", jnum(gap)));
+        }
+        if let Some(p) = self.proven_optimal {
+            pairs.push(("proven_optimal", Json::Bool(p)));
+        }
+        obj(pairs)
     }
 
     fn from_json(v: &Json) -> Result<Self> {
@@ -819,6 +873,14 @@ impl Artifact for CompiledPlan {
                 other => jf(other, "budget")?,
             },
             sweep_n: jusize(v.get("sweep_n"), "sweep_n")?,
+            gap: match v.get("gap") {
+                Json::Null => None,
+                other => Some(jf(other, "gap")?),
+            },
+            proven_optimal: match v.get("proven_optimal") {
+                Json::Null => None,
+                other => Some(jbool(other, "proven_optimal")?),
+            },
         })
     }
 }
@@ -877,6 +939,11 @@ pub struct PipelineStagePlan {
     pub in_flight: usize,
     /// Boundary transfer from the previous stage (`None` for stage 0).
     pub p2p_in: Option<crate::gen::P2pTransfer>,
+    /// Content fingerprint of the cell this stage was compiled as (see
+    /// [`cell_fingerprint`](super::cell_fingerprint)) — what lets
+    /// `automap replan --from` seed the [`CellStore`](super::CellStore)
+    /// from the artifact alone. Empty for pre-cell artifacts.
+    pub cell_fp: String,
 }
 
 impl PipelineStagePlan {
@@ -1090,6 +1157,7 @@ impl Artifact for PipelineSolution {
                             None => Json::Null,
                         },
                     ),
+                    ("cell_fp", s(&st.cell_fp)),
                 ])
             })
             .collect());
@@ -1154,6 +1222,12 @@ impl Artifact for PipelineSolution {
                         Json::Null => None,
                         other => Some(p2p_from_json(other)?),
                     },
+                    // pre-cell artifacts: no fingerprint, still loadable
+                    cell_fp: st
+                        .get("cell_fp")
+                        .as_str()
+                        .unwrap_or("")
+                        .to_string(),
                 })
             })
             .collect::<Result<Vec<_>>>()?;

@@ -22,7 +22,7 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -186,6 +186,12 @@ pub struct CacheStats {
     pub registry_bytes: u64,
     /// Lifetime registry GC evictions (persisted across restarts).
     pub registry_gc_evictions: u64,
+    /// Pipeline cells served from the service's [`CellStore`]
+    /// (super::CellStore) without a nested compile (zero for a bare
+    /// `PlanCache`, which has no cell store).
+    pub cell_reuses: u64,
+    /// Pipeline cells that ran a nested intra-op compile.
+    pub cell_recompiles: u64,
 }
 
 impl CacheStats {
@@ -229,7 +235,7 @@ pub struct DiskEntry {
 }
 
 pub struct PlanCache {
-    registry: Option<PlanRegistry>,
+    registry: Option<Arc<PlanRegistry>>,
     capacity: usize,
     mem: Mutex<MemTier>,
     memory_hits: AtomicU64,
@@ -262,7 +268,7 @@ impl PlanCache {
     /// [`PlanRegistry`] rooted at `dir`.
     pub fn with_dir(dir: impl AsRef<Path>) -> Result<PlanCache> {
         let mut c = PlanCache::in_memory();
-        c.registry = Some(PlanRegistry::open(dir)?);
+        c.registry = Some(Arc::new(PlanRegistry::open(dir)?));
         Ok(c)
     }
 
@@ -278,7 +284,13 @@ impl PlanCache {
 
     /// The persistent registry, when this cache has one.
     pub fn registry(&self) -> Option<&PlanRegistry> {
-        self.registry.as_ref()
+        self.registry.as_deref()
+    }
+
+    /// Shared handle to the registry — how the service hands the same
+    /// persistent tier to its [`CellStore`](super::CellStore).
+    pub fn registry_arc(&self) -> Option<Arc<PlanRegistry>> {
+        self.registry.clone()
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -298,6 +310,8 @@ impl PlanCache {
             registry_artifacts: reg.artifacts,
             registry_bytes: reg.bytes,
             registry_gc_evictions: reg.gc_evictions,
+            cell_reuses: 0,
+            cell_recompiles: 0,
         }
     }
 
@@ -370,20 +384,34 @@ impl PlanCache {
 
     /// Insert a solved request: artifact into both tiers, sharding
     /// solution into the registry (the partial-resume seed for intra-op
-    /// plans). Returns fingerprints evicted from the memory tier, if any.
+    /// plans). `solve_ms` is the request's wall-clock solve time,
+    /// recorded in the registry index for cost-aware GC (0.0 when
+    /// unknown). Returns fingerprints evicted from the memory tier.
     pub fn insert(
         &self,
         key: &str,
         sharding: Option<&ShardingSolution>,
         artifact: &PlanArtifact,
+        solve_ms: f64,
     ) -> Result<Vec<String>> {
         if let Some(reg) = &self.registry {
-            reg.store(key, artifact.kind(), &artifact_bytes(artifact))?;
+            reg.store_with_cost(
+                key,
+                artifact.kind(),
+                &artifact_bytes(artifact),
+                solve_ms,
+            )?;
             if let Some(sh) = sharding {
                 let mut text = String::new();
                 crate::util::json::write_json(&sh.to_json(), &mut text);
                 text.push('\n');
-                reg.store(key, KIND_SHARDING, text.as_bytes())?;
+                // the sharding artifact rode along with the same solve
+                reg.store_with_cost(
+                    key,
+                    KIND_SHARDING,
+                    text.as_bytes(),
+                    solve_ms,
+                )?;
             }
         }
         Ok(self.insert_memory(key, artifact.clone()))
@@ -505,6 +533,8 @@ mod tests {
             mem_per_device: 1.0,
             budget: 0.0,
             sweep_n: 0,
+            gap: None,
+            proven_optimal: None,
         })
     }
 
@@ -512,7 +542,7 @@ mod tests {
     fn memory_tier_hits_and_counts() {
         let c = PlanCache::in_memory();
         assert!(matches!(c.lookup("k1", "plan"), Lookup::Miss));
-        c.insert("k1", None, &dummy_plan(0.5)).unwrap();
+        c.insert("k1", None, &dummy_plan(0.5), 0.0).unwrap();
         match c.lookup("k1", "plan") {
             Lookup::Artifact(a, PlanSource::MemoryHit, _) => {
                 assert_eq!(a.iter_time(), 0.5)
@@ -532,11 +562,11 @@ mod tests {
     #[test]
     fn lru_eviction_respects_capacity_and_recency() {
         let c = PlanCache::in_memory().with_capacity(2);
-        c.insert("a", None, &dummy_plan(1.0)).unwrap();
-        c.insert("b", None, &dummy_plan(2.0)).unwrap();
+        c.insert("a", None, &dummy_plan(1.0), 0.0).unwrap();
+        c.insert("b", None, &dummy_plan(2.0), 0.0).unwrap();
         // touch "a" so "b" is the LRU victim
         assert!(matches!(c.lookup("a", "plan"), Lookup::Artifact(..)));
-        let evicted = c.insert("c", None, &dummy_plan(3.0)).unwrap();
+        let evicted = c.insert("c", None, &dummy_plan(3.0), 0.0).unwrap();
         assert_eq!(evicted, vec!["b".to_string()]);
         assert!(matches!(c.lookup("a", "plan"), Lookup::Artifact(..)));
         assert!(matches!(c.lookup("b", "plan"), Lookup::Miss));
@@ -551,7 +581,7 @@ mod tests {
         ));
         std::fs::remove_dir_all(&dir).ok();
         let c = PlanCache::with_dir(&dir).unwrap();
-        c.insert("deadbeef", None, &dummy_plan(0.25)).unwrap();
+        c.insert("deadbeef", None, &dummy_plan(0.25), 12.5).unwrap();
         c.clear_memory();
         match c.lookup("deadbeef", "plan") {
             Lookup::Artifact(a, PlanSource::DiskHit, _) => {

@@ -1,0 +1,439 @@
+//! Persistent pipeline-cell store: the incremental-replanning tier.
+//!
+//! The inter-op partitioner ([`crate::pp::partition`]) compiles one
+//! nested intra-op plan per candidate (span, device-range) cell — by far
+//! the dominant cost of a pipeline solve. Those compiles are pure
+//! functions of *content*, not of raw device indices: a stage subgraph
+//! on an NVLink pair prices identically whether the pair is devices
+//! {0,1} or {4,5}, and it still prices identically after the cluster
+//! loses an unrelated node and every id is renumbered.
+//!
+//! [`cell_fingerprint`] names that equivalence class: it hashes the
+//! stage subgraph's structure, the *device-class structure* of the
+//! cluster slice (quantized α-β link classes plus exact per-device
+//! compute scales — never the raw probed floats, which carry measurement
+//! noise), the device model, the memory budget, and the backend + solve
+//! options. [`CellStore`] then maps fingerprints to solved cells in two
+//! tiers: an in-process memory map shared by every planner on one
+//! service, and (when the service has a cache directory) the persistent
+//! [`PlanRegistry`](super::PlanRegistry) under the `cell` kind, so a
+//! restarted daemon — or `automap replan` — re-runs only the cheap
+//! composition DP plus the few cells a cluster change actually
+//! invalidated.
+//!
+//! Like [`SolverGraphStore`](super::SolverGraphStore), the memory tier
+//! is deliberately eviction-free: the working set is one entry per
+//! distinct cell class, and a long-lived daemon recycles its service at
+//! its own checkpoint boundaries. The registry tier participates in
+//! cost-aware GC like every other artifact kind, with the recorded
+//! compile time making expensive cells the last to go.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::ClusterInfo;
+use crate::sim::pipeline::StagePhases;
+use crate::sim::DeviceModel;
+use crate::util::json::{num, obj, s, write_json, Json, StableHasher};
+
+use super::artifacts::{Artifact, CompiledPlan, PipelineSolution};
+use super::registry::{PlanRegistry, KIND_CELL};
+use super::solve::{hash_solve_opts, BackendSpec};
+use super::PlanOpts;
+
+/// Quantize a positive rate (bytes/s) or latency (s) onto a √2-spaced
+/// log grid: `round(2·log₂ x)`. Two probes of the same physical link
+/// land in the same bin (probe noise is ≪ √2), while distinct
+/// interconnect classes — which differ by ≥ 2× in practice — land
+/// apart. This is what lets a cell fingerprint survive re-probing.
+fn qlog2(x: f64) -> i64 {
+    if x <= 0.0 {
+        return i64::MIN;
+    }
+    if !x.is_finite() {
+        return i64::MAX;
+    }
+    (2.0 * x.log2()).round() as i64
+}
+
+/// Content fingerprint of one pipeline cell: the equivalence class of
+/// (stage subgraph, device-class structure of the slice, device model,
+/// budget, backend, intra-op solve options). Cells with equal
+/// fingerprints compile to interchangeable plans, so the partitioner
+/// compiles one representative and shares it — across duplicate slices
+/// within a solve, and across cluster resizes between solves.
+///
+/// The slice is hashed *positionally* (the full quantized link matrix,
+/// not just a class multiset): a pair-then-single slice and a
+/// single-then-pair slice build different meshes, so conflating them
+/// would reuse a plan whose device ordering is wrong.
+pub fn cell_fingerprint(
+    graph_fp: &str,
+    slice: &ClusterInfo,
+    dev: &DeviceModel,
+    budget: f64,
+    spec: &BackendSpec,
+    opts: &PlanOpts,
+) -> String {
+    let mut h = StableHasher::new();
+    h.write_str("automap-cell-v1");
+    h.write_str(graph_fp);
+    h.write_usize(slice.n);
+    for i in 0..slice.n {
+        for j in 0..slice.n {
+            if i == j {
+                continue;
+            }
+            h.write_u64(qlog2(slice.alpha[i][j]) as u64);
+            h.write_u64(qlog2(slice.beta[i][j]) as u64);
+        }
+    }
+    // compute scales are spec-sheet values (noise-free), hashed exactly
+    for &sc in &slice.flops_scale {
+        h.write_f64(sc);
+    }
+    for x in [dev.peak_flops, dev.hbm_bw, dev.gemm_efficiency,
+              dev.vector_efficiency, dev.memory, dev.kernel_overhead]
+    {
+        h.write_f64(x);
+    }
+    h.write_f64(budget);
+    spec.hash_into(&mut h);
+    h.write_usize(opts.sweep);
+    h.write_f64(opts.alpha);
+    h.write_u64(opts.seed);
+    hash_solve_opts(&mut h, &opts.solve);
+    h.hex()
+}
+
+/// A solved pipeline cell: the nested intra-op plan plus the phase
+/// timings the composition DP and the 1F1B replay consume.
+#[derive(Debug, Clone)]
+pub struct StoredCell {
+    pub plan: CompiledPlan,
+    pub phases: StagePhases,
+}
+
+const CELL_KIND: &str = "pipeline-cell";
+const CELL_VERSION: u64 = 1;
+
+fn jf(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)
+        .as_f64()
+        .ok_or_else(|| anyhow!("cell artifact missing '{key}'"))
+}
+
+impl StoredCell {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", s(CELL_KIND)),
+            ("version", num(CELL_VERSION as f64)),
+            ("plan", self.plan.to_json()),
+            ("fwd", num(self.phases.fwd)),
+            ("bwd", num(self.phases.bwd)),
+            ("exposed_grad", num(self.phases.exposed_grad)),
+            ("act_bytes", num(self.phases.act_bytes)),
+            ("fwd_transient", num(self.phases.fwd_transient)),
+            ("bwd_transient", num(self.phases.bwd_transient)),
+            ("param_bytes", num(self.phases.param_bytes)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<StoredCell> {
+        if v.get("kind").as_str() != Some(CELL_KIND) {
+            anyhow::bail!(
+                "not a pipeline-cell artifact (kind = {:?})",
+                v.get("kind").as_str().unwrap_or("missing")
+            );
+        }
+        Ok(StoredCell {
+            plan: CompiledPlan::from_json(v.get("plan"))?,
+            phases: StagePhases {
+                fwd: jf(v, "fwd")?,
+                bwd: jf(v, "bwd")?,
+                exposed_grad: jf(v, "exposed_grad")?,
+                act_bytes: jf(v, "act_bytes")?,
+                fwd_transient: jf(v, "fwd_transient")?,
+                bwd_transient: jf(v, "bwd_transient")?,
+                param_bytes: jf(v, "param_bytes")?,
+            },
+        })
+    }
+}
+
+/// Two-tier store of solved pipeline cells, keyed by
+/// [`cell_fingerprint`]. Shared across planners via `Arc` (the service
+/// installs its store on every planner it runs) so concurrent pipeline
+/// solves — and successive replans — reuse each other's cells.
+pub struct CellStore {
+    mem: Mutex<HashMap<String, Arc<StoredCell>>>,
+    registry: Option<Arc<PlanRegistry>>,
+    reused: AtomicU64,
+    recompiled: AtomicU64,
+}
+
+impl Default for CellStore {
+    fn default() -> Self {
+        CellStore::new(None)
+    }
+}
+
+impl CellStore {
+    /// `registry` adds the persistent tier; `None` is memory-only.
+    pub fn new(registry: Option<Arc<PlanRegistry>>) -> CellStore {
+        CellStore {
+            mem: Mutex::new(HashMap::new()),
+            registry,
+            reused: AtomicU64::new(0),
+            recompiled: AtomicU64::new(0),
+        }
+    }
+
+    /// Fetch a cell: memory first, then the registry (promoting a hit
+    /// into memory). Does not touch the reuse counters — the partitioner
+    /// counts per-key reuse itself, since one fetched cell can serve
+    /// many duplicate keys.
+    pub fn get(&self, fp: &str) -> Option<Arc<StoredCell>> {
+        if let Some(c) = self.mem.lock().unwrap().get(fp) {
+            return Some(Arc::clone(c));
+        }
+        let reg = self.registry.as_ref()?;
+        let bytes = reg.load(fp, KIND_CELL)?;
+        let text = std::str::from_utf8(&bytes).ok()?;
+        let json = Json::parse(text).ok()?;
+        // a foreign or stale file under a cell name is treated as
+        // absent: the cell just recompiles
+        let cell = Arc::new(StoredCell::from_json(&json).ok()?);
+        self.mem
+            .lock()
+            .unwrap()
+            .insert(fp.to_string(), Arc::clone(&cell));
+        Some(cell)
+    }
+
+    /// Insert a freshly-compiled cell into both tiers. `solve_ms` is the
+    /// nested compile's wall time, recorded in the registry index so
+    /// cost-aware GC evicts cheap-to-recompute cells first. Registry
+    /// persistence is best-effort: a full disk degrades replanning, it
+    /// does not fail the solve.
+    pub fn put(&self, fp: &str, cell: Arc<StoredCell>, solve_ms: f64) {
+        self.mem
+            .lock()
+            .unwrap()
+            .insert(fp.to_string(), Arc::clone(&cell));
+        if let Some(reg) = &self.registry {
+            let mut text = String::new();
+            write_json(&cell.to_json(), &mut text);
+            text.push('\n');
+            if let Err(e) =
+                reg.store_with_cost(fp, KIND_CELL, text.as_bytes(), solve_ms)
+            {
+                crate::debug!("cell persist failed for {fp}: {e}");
+            }
+        }
+    }
+
+    /// Seed the memory tier from an existing pipeline artifact — how
+    /// `automap replan --from <plan>` warms the store without a cache
+    /// directory. Stages without a recorded fingerprint (artifacts from
+    /// before the cell store existed) are skipped.
+    pub fn seed_solution(&self, sol: &PipelineSolution) -> usize {
+        let mut seeded = 0;
+        for st in &sol.stages {
+            if st.cell_fp.is_empty() {
+                continue;
+            }
+            let cell = Arc::new(StoredCell {
+                plan: st.plan.clone(),
+                phases: StagePhases {
+                    fwd: st.fwd,
+                    bwd: st.bwd,
+                    exposed_grad: st.exposed_grad,
+                    act_bytes: st.act_bytes,
+                    fwd_transient: st.fwd_transient,
+                    bwd_transient: st.bwd_transient,
+                    param_bytes: st.param_bytes,
+                },
+            });
+            let mut mem = self.mem.lock().unwrap();
+            if !mem.contains_key(&st.cell_fp) {
+                mem.insert(st.cell_fp.clone(), cell);
+                seeded += 1;
+            }
+        }
+        seeded
+    }
+
+    /// Count `n` cells served without a nested compile.
+    pub fn note_reused(&self, n: u64) {
+        self.reused.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Count `n` cells that ran a nested compile.
+    pub fn note_recompiled(&self, n: u64) {
+        self.recompiled.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Lifetime cells served from the store (or from a fingerprint twin
+    /// compiled in the same fan-out).
+    pub fn reused(&self) -> u64 {
+        self.reused.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime cells that actually compiled.
+    pub fn recompiled(&self) -> u64 {
+        self.recompiled.load(Ordering::Relaxed)
+    }
+
+    /// Distinct fingerprints resident in memory.
+    pub fn len(&self) -> usize {
+        self.mem.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{detect, SimCluster};
+
+    fn fig5_info() -> ClusterInfo {
+        detect(&SimCluster::partially_connected_8gpu(), 42)
+    }
+
+    #[test]
+    fn fingerprint_survives_renumbering_and_reprobing() {
+        let dev = DeviceModel::a100_80gb();
+        let opts = PlanOpts::default();
+        let spec = BackendSpec::Beam;
+        let full = fig5_info();
+        // {0,1} and {4,5} are both NVLink pairs: same class, same fp
+        let a = cell_fingerprint(
+            "g", &full.slice(&[0, 1]), &dev, 1e9, &spec, &opts,
+        );
+        let b = cell_fingerprint(
+            "g", &full.slice(&[4, 5]), &dev, 1e9, &spec, &opts,
+        );
+        assert_eq!(a, b, "isomorphic slices must share a fingerprint");
+        // the same pair re-probed after a node loss (different rng
+        // stream, different noise) still matches
+        let shrunk =
+            detect(&SimCluster::partially_connected_8gpu().without_device(3), 42);
+        let c = cell_fingerprint(
+            "g", &shrunk.slice(&[0, 1]), &dev, 1e9, &spec, &opts,
+        );
+        assert_eq!(a, c, "probe noise must not perturb the fingerprint");
+        // a PCIe pair is a different link class
+        let d = cell_fingerprint(
+            "g", &full.slice(&[0, 2]), &dev, 1e9, &spec, &opts,
+        );
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn fingerprint_separates_graph_budget_and_compute_class() {
+        let dev = DeviceModel::a100_80gb();
+        let opts = PlanOpts::default();
+        let spec = BackendSpec::Beam;
+        let info = fig5_info();
+        let pair = info.slice(&[0, 1]);
+        let base =
+            cell_fingerprint("g", &pair, &dev, 1e9, &spec, &opts);
+        assert_ne!(
+            base,
+            cell_fingerprint("h", &pair, &dev, 1e9, &spec, &opts)
+        );
+        assert_ne!(
+            base,
+            cell_fingerprint("g", &pair, &dev, 2e9, &spec, &opts)
+        );
+        let degraded =
+            detect(&SimCluster::fig5_degraded(), 42).slice(&[4, 5]);
+        assert_ne!(
+            base,
+            cell_fingerprint("g", &degraded, &dev, 1e9, &spec, &opts),
+            "slower device class must not alias the reference class"
+        );
+        // position matters: pair-then-single != single-then-pair
+        let ps = info.slice(&[0, 1, 2]);
+        let sp = info.slice(&[2, 0, 1]);
+        assert_ne!(
+            cell_fingerprint("g", &ps, &dev, 1e9, &spec, &opts),
+            cell_fingerprint("g", &sp, &dev, 1e9, &spec, &opts)
+        );
+    }
+
+    #[test]
+    fn store_roundtrips_through_registry() {
+        use crate::cluster::DeviceMesh;
+        use crate::gen::ExecutionPlan;
+        use std::collections::BTreeMap;
+        let dir = std::env::temp_dir().join(format!(
+            "automap_cells_unit_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let reg = Arc::new(PlanRegistry::open(&dir).unwrap());
+        let store = CellStore::new(Some(Arc::clone(&reg)));
+        let cell = Arc::new(StoredCell {
+            plan: CompiledPlan {
+                backend: "test".into(),
+                graph_nodes: 3,
+                mesh: DeviceMesh {
+                    shape: vec![1],
+                    devices: vec![0],
+                    axis_alpha: vec![0.0],
+                    axis_beta: vec![f64::INFINITY],
+                },
+                plan: ExecutionPlan {
+                    mesh_shape: vec![1],
+                    decisions: BTreeMap::new(),
+                    comms: Vec::new(),
+                    local_shapes: BTreeMap::new(),
+                    ckpt: None,
+                    iter_time: 0.5,
+                    mem_per_device: 1.0,
+                },
+                iter_time: 0.5,
+                pflops: 1.0,
+                mem_per_device: 1.0,
+                budget: 2.0,
+                sweep_n: 0,
+                gap: None,
+                proven_optimal: None,
+            },
+            phases: StagePhases {
+                fwd: 1.0,
+                bwd: 2.0,
+                exposed_grad: 0.1,
+                act_bytes: 3.0,
+                fwd_transient: 4.0,
+                bwd_transient: 5.0,
+                param_bytes: 6.0,
+            },
+        });
+        store.put("cafe01", Arc::clone(&cell), 123.0);
+        assert_eq!(store.len(), 1);
+        // a fresh store over the same registry sees the persisted cell
+        let warm = CellStore::new(Some(Arc::clone(&reg)));
+        let got = warm.get("cafe01").expect("registry tier hit");
+        assert_eq!(got.phases.bwd, 2.0);
+        assert_eq!(got.plan.iter_time, 0.5);
+        assert_eq!(warm.len(), 1, "registry hit promotes into memory");
+        assert!(warm.get("beef02").is_none());
+        // the recorded compile cost landed in the registry index
+        let e = reg
+            .entries()
+            .into_iter()
+            .find(|e| e.kind == KIND_CELL)
+            .unwrap();
+        assert_eq!(e.solve_ms, 123);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -64,6 +64,7 @@
 
 pub mod artifacts;
 pub mod cache;
+pub mod cells;
 pub mod progress;
 pub mod registry;
 pub mod service;
@@ -77,6 +78,7 @@ pub use self::artifacts::{Artifact, CkptSchedule, ClusterReport,
 pub use crate::pp::PpOpts;
 pub use self::cache::{CacheStats, DiskEntry, PlanArtifact, PlanCache,
                       PlanSource};
+pub use self::cells::{cell_fingerprint, CellStore, StoredCell};
 pub use self::registry::{PlanRegistry, RegistryEntry, RegistryStats};
 pub use self::progress::{HubGuard, PlanStage, ProgressEvent,
                          ProgressHub};
@@ -84,7 +86,7 @@ pub use self::service::{ClusterSpec, PlanOutcome, PlanRequest,
                         PlanService};
 pub use self::solve::{BackendSpec, Baseline, BaselineSolve, BeamSolve,
                       ExactSolve, IlpSolve, PortfolioSolve,
-                      SimMeasureSolve, Solve, SolveCtx,
+                      SimMeasureSolve, Solve, SolveCtx, SolveMeta,
                       PORTFOLIO_DEFAULT_CONFIGS};
 pub use self::store::{graph_fingerprint, MeshGraph, SolverGraphStore};
 
@@ -223,6 +225,12 @@ pub struct Planner<'a> {
     prof: Option<GraphProfile>,
     groups: Option<Vec<Vec<NodeId>>>,
     store: Arc<SolverGraphStore>,
+    /// Content-addressed pipeline-cell store shared with
+    /// [`solve_pipeline`](Planner::solve_pipeline): cells compiled for
+    /// one cluster are reused on any later solve whose slices are
+    /// equivalent (the replan path). Private per planner unless
+    /// installed via [`with_cell_store`](Planner::with_cell_store).
+    cells: Arc<CellStore>,
     /// Lazily-computed [`graph_fingerprint`] (the store-key prefix).
     graph_fp: Option<String>,
     /// Contexts this planner has pulled from the store, in first-use
@@ -253,6 +261,7 @@ impl<'a> Planner<'a> {
             prof: None,
             groups: None,
             store: Arc::new(SolverGraphStore::new()),
+            cells: Arc::new(CellStore::default()),
             graph_fp: None,
             mesh_ctxs: Vec::new(),
             report: None,
@@ -291,6 +300,7 @@ impl<'a> Planner<'a> {
             prof: None,
             groups: None,
             store: Arc::new(SolverGraphStore::new()),
+            cells: Arc::new(CellStore::default()),
             graph_fp: None,
             mesh_ctxs: Vec::new(),
             report: Some(report),
@@ -340,6 +350,23 @@ impl<'a> Planner<'a> {
     pub fn with_store(mut self, store: Arc<SolverGraphStore>) -> Self {
         self.store = store;
         self
+    }
+
+    /// Share a [`CellStore`] with other planners (and with the planner's
+    /// own future solves): the pipeline stage then reuses any stored
+    /// cell whose content fingerprint matches instead of recompiling it.
+    /// This is the warm path behind `automap replan` — seed the store
+    /// from a previous [`PipelineSolution`]
+    /// ([`CellStore::seed_solution`]) or hand every planner the
+    /// service's registry-backed store.
+    pub fn with_cell_store(mut self, cells: Arc<CellStore>) -> Self {
+        self.cells = cells;
+        self
+    }
+
+    /// The planner's cell store (reuse/recompile counters live here).
+    pub fn cell_store(&self) -> &Arc<CellStore> {
+        &self.cells
     }
 
     /// Seed the [`graph_fingerprint`] digest when the caller already
@@ -591,12 +618,17 @@ impl<'a> Planner<'a> {
                     let intra =
                         budget * (1.0 + self.opts.alpha).powi(n as i32);
                     let ts = std::time::Instant::now();
-                    let sol = match &self.backend {
-                        Some(b) => b.solve(&self.mesh_ctxs[ci].sg, intra),
-                        None => crate::solver::solve(
-                            &self.mesh_ctxs[ci].sg,
-                            intra,
-                            self.opts.solve,
+                    let (sol, meta) = match &self.backend {
+                        Some(b) => {
+                            b.solve_report(&self.mesh_ctxs[ci].sg, intra)
+                        }
+                        None => (
+                            crate::solver::solve(
+                                &self.mesh_ctxs[ci].sg,
+                                intra,
+                                self.opts.solve,
+                            ),
+                            SolveMeta::default(),
                         ),
                     };
                     crate::debug!(
@@ -635,6 +667,8 @@ impl<'a> Planner<'a> {
                                 choice: sol.choice,
                                 time: sol.time,
                                 mem: sol.mem,
+                                gap: meta.gap,
+                                proven_optimal: meta.proven_optimal,
                             });
                             // if even this sweep point fit without
                             // checkpointing help, larger intra-op budgets
@@ -915,12 +949,17 @@ impl<'a> Planner<'a> {
             for n in last_n + 1..self.opts.sweep {
                 let intra =
                     budget * (1.0 + self.opts.alpha).powi(n as i32);
-                let sol = match &self.backend {
-                    Some(b) => b.solve(&self.mesh_ctxs[ci].sg, intra),
-                    None => crate::solver::solve(
-                        &self.mesh_ctxs[ci].sg,
-                        intra,
-                        self.opts.solve,
+                let (sol, meta) = match &self.backend {
+                    Some(b) => {
+                        b.solve_report(&self.mesh_ctxs[ci].sg, intra)
+                    }
+                    None => (
+                        crate::solver::solve(
+                            &self.mesh_ctxs[ci].sg,
+                            intra,
+                            self.opts.solve,
+                        ),
+                        SolveMeta::default(),
                     ),
                 };
                 let Some(sol) = sol else { continue };
@@ -938,6 +977,8 @@ impl<'a> Planner<'a> {
                     choice: sol.choice,
                     time: sol.time,
                     mem: sol.mem,
+                    gap: meta.gap,
+                    proven_optimal: meta.proven_optimal,
                 });
             }
         }
@@ -989,6 +1030,9 @@ impl<'a> Planner<'a> {
                 mem_per_device: rep.mem_per_device,
                 budget: sharding.budget,
                 sweep_n: 0,
+                // closed-form baselines make no optimality claim
+                gap: None,
+                proven_optimal: None,
             }
         } else {
             let cand = sharding
@@ -1029,6 +1073,8 @@ impl<'a> Planner<'a> {
                 mem_per_device: ck.mem_per_device,
                 budget: sharding.budget,
                 sweep_n: cand.sweep_n,
+                gap: cand.gap,
+                proven_optimal: cand.proven_optimal,
             }
         };
         emit(&mut self.progress, ProgressEvent::StageDone {
@@ -1088,6 +1134,7 @@ impl<'a> Planner<'a> {
             budget,
             total_flops,
             &self.store,
+            &self.cells,
             &mut |ev| emit(&mut progress, ev),
         );
         self.progress = progress;

@@ -110,6 +110,18 @@ pub enum ProgressEvent {
         feasible: bool,
         ms: f64,
     },
+    /// A candidate cell was served from the [`CellStore`]
+    /// (super::CellStore) — or from a fingerprint twin compiled in the
+    /// same fan-out — skipping the nested intra-op compile entirely.
+    CellReused { span: (usize, usize), devices: (usize, usize) },
+    /// A candidate cell missed the store and ran the nested intra-op
+    /// compile; `ms` is the compile's wall time (also recorded with the
+    /// persisted cell for cost-aware GC).
+    CellRecompiled {
+        span: (usize, usize),
+        devices: (usize, usize),
+        ms: f64,
+    },
     /// The inter-op DP picked its winner and the 1F1B replay confirmed
     /// it: `predicted` is the DP's closed-form latency estimate,
     /// `simulated` the microbatched replay's step time (the number the
@@ -141,6 +153,8 @@ impl ProgressEvent {
             ProgressEvent::PipelineCellSolved { .. } => {
                 "pipeline-cell-solved"
             }
+            ProgressEvent::CellReused { .. } => "cell-reused",
+            ProgressEvent::CellRecompiled { .. } => "cell-recompiled",
             ProgressEvent::PipelineChosen { .. } => "pipeline-chosen",
         }
     }
@@ -220,6 +234,33 @@ impl ProgressEvent {
                     ]),
                 ));
                 pairs.push(("feasible", Json::Bool(*feasible)));
+                pairs.push(("ms", num(*ms)));
+            }
+            ProgressEvent::CellReused { span, devices } => {
+                pairs.push((
+                    "span",
+                    arr(vec![num(span.0 as f64), num(span.1 as f64)]),
+                ));
+                pairs.push((
+                    "devices",
+                    arr(vec![
+                        num(devices.0 as f64),
+                        num(devices.1 as f64),
+                    ]),
+                ));
+            }
+            ProgressEvent::CellRecompiled { span, devices, ms } => {
+                pairs.push((
+                    "span",
+                    arr(vec![num(span.0 as f64), num(span.1 as f64)]),
+                ));
+                pairs.push((
+                    "devices",
+                    arr(vec![
+                        num(devices.0 as f64),
+                        num(devices.1 as f64),
+                    ]),
+                ));
                 pairs.push(("ms", num(*ms)));
             }
             ProgressEvent::PipelineChosen {

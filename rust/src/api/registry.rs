@@ -3,8 +3,9 @@
 //!
 //! The registry owns one directory. Every artifact is a JSON file named
 //! `<fingerprint><suffix>` where the suffix encodes the artifact kind
-//! (`.plan.json`, `.pipeline.json`, `.sharding.json`), plus one versioned
-//! index file `registry.json` tracking byte sizes and a logical LRU clock.
+//! (`.plan.json`, `.pipeline.json`, `.sharding.json`, `.cell.json`),
+//! plus one versioned index file `registry.json` tracking byte sizes, a
+//! logical LRU clock, and the recorded solve cost of each artifact.
 //! The index is written through the same atomic temp+rename path as the
 //! artifacts themselves, so a crash can never leave a torn index.
 //!
@@ -16,9 +17,15 @@
 //! same `--registry` dir therefore serves previously solved fingerprints
 //! even if the index was deleted.
 //!
-//! GC is LRU by the logical clock under a byte budget
-//! (`automap registry gc --max-bytes`). Sharding artifacts participate
-//! like any other kind: losing one only costs a partial resume.
+//! GC runs under a byte budget (`automap registry gc --max-bytes`) and
+//! is *cost-aware*: artifacts whose solve time was recorded are ranked
+//! by bytes-freed-per-millisecond-to-recompute, so the cheapest plans
+//! go first and an expensive pipeline solve survives a squeeze that
+//! flushes a hundred one-shot sharding probes. Artifacts with no
+//! recorded cost (adopted files, pre-cost-index writers) fall back to
+//! plain LRU and are evicted before any known-cost artifact. Sharding
+//! artifacts participate like any other kind: losing one only costs a
+//! partial resume; losing a cell only costs one nested recompile.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -34,6 +41,7 @@ use super::artifacts::atomic_write;
 pub const KIND_PLAN: &str = "plan";
 pub const KIND_PIPELINE: &str = "pipeline";
 pub const KIND_SHARDING: &str = "sharding";
+pub const KIND_CELL: &str = "cell";
 
 const INDEX_FILE: &str = "registry.json";
 const INDEX_VERSION: u64 = 1;
@@ -44,6 +52,7 @@ pub fn kind_suffix(kind: &str) -> Option<&'static str> {
         KIND_PLAN => Some(".plan.json"),
         KIND_PIPELINE => Some(".pipeline.json"),
         KIND_SHARDING => Some(".sharding.json"),
+        KIND_CELL => Some(".cell.json"),
         _ => None,
     }
 }
@@ -55,6 +64,7 @@ fn intern_kind(kind: &str) -> Option<&'static str> {
         KIND_PLAN => Some(KIND_PLAN),
         KIND_PIPELINE => Some(KIND_PIPELINE),
         KIND_SHARDING => Some(KIND_SHARDING),
+        KIND_CELL => Some(KIND_CELL),
         _ => None,
     }
 }
@@ -63,17 +73,32 @@ fn intern_kind(kind: &str) -> Option<&'static str> {
 #[derive(Debug, Clone)]
 pub struct RegistryEntry {
     pub fingerprint: String,
-    /// "plan", "pipeline" or "sharding".
+    /// "plan", "pipeline", "sharding" or "cell".
     pub kind: &'static str,
     pub bytes: u64,
     /// Logical LRU clock value of the last store/load (0 = never used
     /// since adoption; evicted first).
     pub last_used: u64,
+    /// Wall-clock milliseconds the artifact took to solve, rounded up
+    /// (0 = unknown, e.g. an adopted file). Drives cost-aware GC.
+    pub solve_ms: u64,
+}
+
+impl RegistryEntry {
+    /// Eviction score: bytes freed per recompute-millisecond. Higher
+    /// means cheaper to lose. `None` when the cost is unknown.
+    fn gc_score(&self) -> Option<f64> {
+        if self.solve_ms == 0 {
+            None
+        } else {
+            Some(self.bytes as f64 / self.solve_ms as f64)
+        }
+    }
 }
 
 struct IndexState {
-    /// (fingerprint, kind) -> (bytes, last_used).
-    entries: BTreeMap<(String, &'static str), (u64, u64)>,
+    /// (fingerprint, kind) -> (bytes, last_used, solve_ms).
+    entries: BTreeMap<(String, &'static str), (u64, u64, u64)>,
     clock: u64,
     gc_evictions: u64,
 }
@@ -143,9 +168,16 @@ impl PlanRegistry {
                                 .as_usize()
                                 .unwrap_or(0)
                                 as u64;
+                            // pre-cost indexes have no solve_ms: treat
+                            // as unknown (0), evicted LRU-first
+                            let solve_ms = e
+                                .get("solve_ms")
+                                .as_usize()
+                                .unwrap_or(0)
+                                as u64;
                             state.entries.insert(
                                 (fp.to_string(), kind),
-                                (bytes, last_used),
+                                (bytes, last_used, solve_ms),
                             );
                         }
                     }
@@ -170,7 +202,7 @@ impl PlanRegistry {
             .entries
             .retain(|key, _| on_disk.contains_key(key));
         for (key, bytes) in on_disk {
-            let e = state.entries.entry(key).or_insert((0, 0));
+            let e = state.entries.entry(key).or_insert((0, 0, 0));
             e.0 = bytes;
         }
         let reg = PlanRegistry { dir, state: Mutex::new(state) };
@@ -199,24 +231,45 @@ impl PlanRegistry {
             .contains_key(&(fingerprint.to_string(), kind))
     }
 
-    /// Store one artifact (atomic write) and index it.
+    /// Store one artifact (atomic write) with no recorded solve cost.
     pub fn store(
         &self,
         fingerprint: &str,
         kind: &str,
         bytes: &[u8],
     ) -> Result<()> {
+        self.store_with_cost(fingerprint, kind, bytes, 0.0)
+    }
+
+    /// Store one artifact (atomic write) and index it together with the
+    /// wall-clock milliseconds its solve took. The cost is persisted in
+    /// the index and makes expensive-to-recompute artifacts the last to
+    /// be GC'd; pass 0.0 when the cost is unknown.
+    pub fn store_with_cost(
+        &self,
+        fingerprint: &str,
+        kind: &str,
+        bytes: &[u8],
+        solve_ms: f64,
+    ) -> Result<()> {
         let kind = intern_kind(kind)
             .ok_or_else(|| anyhow!("unknown artifact kind '{kind}'"))?;
         let path = self.path_of(fingerprint, kind)?;
         atomic_write(&path, bytes)?;
+        // ceil so any measured sub-millisecond solve still counts as
+        // known-cost (solve_ms == 0 is reserved for "unknown")
+        let solve_ms = if solve_ms > 0.0 && solve_ms.is_finite() {
+            solve_ms.ceil() as u64
+        } else {
+            0
+        };
         {
             let mut st = self.state.lock().unwrap();
             st.clock += 1;
             let clock = st.clock;
             st.entries.insert(
                 (fingerprint.to_string(), kind),
-                (bytes.len() as u64, clock),
+                (bytes.len() as u64, clock, solve_ms),
             );
         }
         self.persist_index()
@@ -277,11 +330,14 @@ impl PlanRegistry {
         let st = self.state.lock().unwrap();
         st.entries
             .iter()
-            .map(|((fp, kind), (bytes, last_used))| RegistryEntry {
-                fingerprint: fp.clone(),
-                kind,
-                bytes: *bytes,
-                last_used: *last_used,
+            .map(|((fp, kind), (bytes, last_used, solve_ms))| {
+                RegistryEntry {
+                    fingerprint: fp.clone(),
+                    kind,
+                    bytes: *bytes,
+                    last_used: *last_used,
+                    solve_ms: *solve_ms,
+                }
             })
             .collect()
     }
@@ -290,34 +346,40 @@ impl PlanRegistry {
         let st = self.state.lock().unwrap();
         RegistryStats {
             artifacts: st.entries.len() as u64,
-            bytes: st.entries.values().map(|(b, _)| *b).sum(),
+            bytes: st.entries.values().map(|(b, _, _)| *b).sum(),
             gc_evictions: st.gc_evictions,
         }
     }
 
-    /// Evict least-recently-used artifacts until total bytes fit under
-    /// `max_bytes`. Returns the evicted entries (oldest first).
+    /// Evict artifacts until total bytes fit under `max_bytes`,
+    /// cheapest-to-recompute first. Unknown-cost artifacts go first in
+    /// LRU order; known-cost artifacts follow by descending
+    /// bytes-per-solve-millisecond (most space freed per millisecond of
+    /// future recompute), LRU as the tiebreak. Returns the evicted
+    /// entries in eviction order.
     pub fn gc(&self, max_bytes: u64) -> Result<Vec<RegistryEntry>> {
         let victims: Vec<RegistryEntry> = {
             let st = self.state.lock().unwrap();
             let mut total: u64 =
-                st.entries.values().map(|(b, _)| *b).sum();
-            let mut by_age: Vec<RegistryEntry> = st
-                .entries
-                .iter()
-                .map(|((fp, kind), (bytes, last_used))| RegistryEntry {
-                    fingerprint: fp.clone(),
-                    kind,
-                    bytes: *bytes,
-                    last_used: *last_used,
+                st.entries.values().map(|(b, _, _)| *b).sum();
+            drop(st);
+            let mut order = self.entries();
+            order.sort_by(|a, b| {
+                match (a.gc_score(), b.gc_score()) {
+                    (None, Some(_)) => std::cmp::Ordering::Less,
+                    (Some(_), None) => std::cmp::Ordering::Greater,
+                    (Some(x), Some(y)) => y
+                        .partial_cmp(&x)
+                        .unwrap_or(std::cmp::Ordering::Equal),
+                    (None, None) => std::cmp::Ordering::Equal,
+                }
+                .then_with(|| {
+                    (a.last_used, &a.fingerprint, a.kind)
+                        .cmp(&(b.last_used, &b.fingerprint, b.kind))
                 })
-                .collect();
-            by_age.sort_by(|a, b| {
-                (a.last_used, &a.fingerprint, a.kind)
-                    .cmp(&(b.last_used, &b.fingerprint, b.kind))
             });
             let mut victims = Vec::new();
-            for e in by_age {
+            for e in order {
                 if total <= max_bytes {
                     break;
                 }
@@ -367,12 +429,13 @@ impl PlanRegistry {
             let entries: Vec<Json> = st
                 .entries
                 .iter()
-                .map(|((fp, kind), (bytes, last_used))| {
+                .map(|((fp, kind), (bytes, last_used, solve_ms))| {
                     obj(vec![
                         ("fingerprint", s(fp)),
                         ("kind", s(kind)),
                         ("bytes", num(*bytes as f64)),
                         ("last_used", num(*last_used as f64)),
+                        ("solve_ms", num(*solve_ms as f64)),
                     ])
                 })
                 .collect();
@@ -394,7 +457,7 @@ impl PlanRegistry {
 /// Split `<fingerprint><suffix>` into (fingerprint, kind); `None` for
 /// files that are not registry artifacts (including the index itself).
 fn split_artifact_name(name: &str) -> Option<(String, &'static str)> {
-    for kind in [KIND_PLAN, KIND_PIPELINE, KIND_SHARDING] {
+    for kind in [KIND_PLAN, KIND_PIPELINE, KIND_SHARDING, KIND_CELL] {
         let suffix = kind_suffix(kind).unwrap();
         if let Some(fp) = name.strip_suffix(suffix) {
             if !fp.is_empty() {
@@ -465,6 +528,43 @@ mod tests {
         assert!(r.contains("aa", KIND_PLAN));
         assert_eq!(r.stats().gc_evictions, 1);
         assert!(r.stats().bytes <= 250);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_prefers_cheap_to_recompute_artifacts() {
+        let dir = scratch("gc_cost");
+        let r = PlanRegistry::open(&dir).unwrap();
+        // equal sizes: "fast" solved in 2 ms (score 50 B/ms), "slow"
+        // took 10 s (score 0.01 B/ms), "mystery" has no recorded cost
+        r.store_with_cost("fast", KIND_PLAN, &[b'x'; 100], 2.0).unwrap();
+        r.store_with_cost("slow", KIND_PLAN, &[b'y'; 100], 1e4).unwrap();
+        r.store("mystery", KIND_PLAN, &[b'z'; 100]).unwrap();
+        // unknown cost evicts before any known cost, even though
+        // "mystery" is the most recently stored
+        let evicted = r.gc(250).unwrap();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].fingerprint, "mystery");
+        // then the cheap one; the expensive solve survives longest
+        let evicted = r.gc(150).unwrap();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].fingerprint, "fast");
+        assert!(r.contains("slow", KIND_PLAN));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn solve_cost_survives_reopen() {
+        let dir = scratch("cost_reopen");
+        {
+            let r = PlanRegistry::open(&dir).unwrap();
+            r.store_with_cost("abc", KIND_CELL, b"{}", 41.2).unwrap();
+        }
+        let r = PlanRegistry::open(&dir).unwrap();
+        let entries = r.entries();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].kind, KIND_CELL);
+        assert_eq!(entries[0].solve_ms, 42, "41.2 ms rounds up to 42");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

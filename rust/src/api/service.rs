@@ -48,6 +48,7 @@ use super::artifacts::{Artifact, ClusterReport, CompiledPlan,
                        MeshCandidates, ShardingSolution};
 use super::cache::{CacheStats, Lookup, PlanArtifact, PlanCache,
                    PlanSource};
+use super::cells::CellStore;
 use super::progress::ProgressEvent;
 use super::registry::{KIND_PIPELINE, KIND_PLAN};
 use super::solve::hash_solve_opts;
@@ -236,6 +237,15 @@ fn hash_cluster(h: &mut StableHasher, cluster: &ClusterSpec) {
                     h.write_f64(x);
                 }
             }
+            // only heterogeneous clusters hash their compute classes, so
+            // every uniform cluster keeps its pre-heterogeneity
+            // fingerprint (and its cached plans)
+            if c.compute_scale.iter().any(|&s| s != 1.0) {
+                h.write_str("compute-scale");
+                for &x in &c.compute_scale {
+                    h.write_f64(x);
+                }
+            }
         }
         ClusterSpec::Report(r) => {
             h.write_str("cluster-report");
@@ -271,6 +281,10 @@ type ServiceProgressFn = Box<dyn Fn(&ProgressEvent) + Send + Sync>;
 pub struct PlanService {
     cache: PlanCache,
     store: Arc<SolverGraphStore>,
+    /// Content-addressed pipeline-cell store shared by every planner the
+    /// service runs. Backed by the cache's registry when one exists, so
+    /// compiled cells survive process restarts and feed `replan`.
+    cells: Arc<CellStore>,
     progress: Option<ServiceProgressFn>,
     /// Fingerprints being solved right now (single-flight dedup): the
     /// first requester becomes the leader and solves; concurrent
@@ -288,12 +302,7 @@ impl Default for PlanService {
 impl PlanService {
     /// Memory-only service (plans cached for this process's lifetime).
     pub fn new() -> PlanService {
-        PlanService {
-            cache: PlanCache::in_memory(),
-            store: Arc::new(SolverGraphStore::new()),
-            progress: None,
-            inflight: Mutex::new(HashMap::new()),
-        }
+        PlanService::with_cache(PlanCache::in_memory())
     }
 
     /// Service with a persistent registry tier rooted at `dir`.
@@ -303,9 +312,11 @@ impl PlanService {
 
     /// Full control over the cache (capacity, placement).
     pub fn with_cache(cache: PlanCache) -> PlanService {
+        let cells = Arc::new(CellStore::new(cache.registry_arc()));
         PlanService {
             cache,
             store: Arc::new(SolverGraphStore::new()),
+            cells,
             progress: None,
             inflight: Mutex::new(HashMap::new()),
         }
@@ -332,12 +343,23 @@ impl PlanService {
         &self.store
     }
 
+    /// The shared pipeline-cell store. Callers replanning after a
+    /// cluster change seed it from a previous solution
+    /// ([`CellStore::seed_solution`]); reuse/recompile counters live on
+    /// it too.
+    pub fn cell_store(&self) -> &Arc<CellStore> {
+        &self.cells
+    }
+
     /// Counter snapshot: hits, misses, partial resumes, evictions, plus
-    /// the shared store's solver-graph build/reuse totals.
+    /// the shared store's solver-graph build/reuse totals and the cell
+    /// store's reuse/recompile totals.
     pub fn stats(&self) -> CacheStats {
         let mut s = self.cache.stats();
         s.sgraph_builds = self.store.builds();
         s.sgraph_reuses = self.store.reuses();
+        s.cell_reuses = self.cells.reused();
+        s.cell_recompiles = self.cells.recompiled();
         s
     }
 
@@ -522,7 +544,12 @@ impl PlanService {
                 .map_err(|e| anyhow!("{}: {e}", req.tag))?
                 .clone();
             let artifact = PlanArtifact::Pipeline(sol);
-            let evicted = self.cache.insert(fingerprint, None, &artifact)?;
+            let evicted = self.cache.insert(
+                fingerprint,
+                None,
+                &artifact,
+                t0.elapsed().as_secs_f64() * 1e3,
+            )?;
             self.emit_evictions(evicted);
             return Ok(PlanOutcome {
                 fingerprint: fingerprint.to_string(),
@@ -546,8 +573,12 @@ impl PlanService {
                 // the sharding artifact is already persisted; restore
                 // the plan entry so the next lookup is a full hit
                 let artifact = PlanArtifact::Plan(plan);
-                let evicted =
-                    self.cache.insert(fingerprint, None, &artifact)?;
+                let evicted = self.cache.insert(
+                    fingerprint,
+                    None,
+                    &artifact,
+                    t0.elapsed().as_secs_f64() * 1e3,
+                )?;
                 self.emit_evictions(evicted);
                 Ok(PlanOutcome {
                     fingerprint: fingerprint.to_string(),
@@ -571,6 +602,7 @@ impl PlanService {
                     fingerprint,
                     sharding.as_ref(),
                     &artifact,
+                    t0.elapsed().as_secs_f64() * 1e3,
                 )?;
                 self.emit_evictions(evicted);
                 Ok(PlanOutcome {
@@ -612,6 +644,7 @@ impl PlanService {
         }
         p = p
             .with_store(Arc::clone(&self.store))
+            .with_cell_store(Arc::clone(&self.cells))
             .with_graph_fingerprint(graph_fp.to_string());
         p = p.with_backend_spec(&req.backend);
         if let Some(f) = &self.progress {

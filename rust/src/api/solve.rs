@@ -26,8 +26,8 @@ use crate::graph::models::Gpt2Cfg;
 use crate::graph::Graph;
 use crate::profiler::GraphProfile;
 use crate::sim::{baselines, DeviceModel, SimReport};
-use crate::solver::{solve, solve_exact, solve_ilp, IlpOpts, Solution,
-                    SolveOpts, SolverGraph};
+use crate::solver::{solve, solve_exact, IlpOpts, Solution, SolveOpts,
+                    SolverGraph};
 use crate::util::json::{arr, num, obj, s, Json, StableHasher};
 use crate::util::pool::parallel_map;
 
@@ -37,6 +37,20 @@ pub struct SolveCtx<'a> {
     pub profile: &'a GraphProfile,
     pub info: &'a ClusterInfo,
     pub dev: &'a DeviceModel,
+}
+
+/// Optimality telemetry attached to a solve. Exact backends fill it in
+/// ([`ExactSolve`] proves by construction; [`IlpSolve`] reports the
+/// branch-and-bound gap); heuristic backends keep the default — no
+/// claim either way — which keeps their artifacts byte-identical to
+/// pre-telemetry builds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SolveMeta {
+    /// Relative optimality gap `(objective − best bound)/objective`;
+    /// `Some(0.0)` means proven optimal.
+    pub gap: Option<f64>,
+    /// Whether the backend proved the returned solution optimal.
+    pub proven_optimal: Option<bool>,
 }
 
 /// A solver backend selectable through
@@ -50,6 +64,16 @@ pub trait Solve {
     /// per-device memory stays under `budget` bytes. Analytic backends
     /// return `None`.
     fn solve(&self, sg: &SolverGraph, budget: f64) -> Option<Solution>;
+
+    /// [`solve`](Solve::solve) plus optimality telemetry. Backends that
+    /// can prove bounds override this; the default makes no claim.
+    fn solve_report(
+        &self,
+        sg: &SolverGraph,
+        budget: f64,
+    ) -> (Option<Solution>, SolveMeta) {
+        (self.solve(sg, budget), SolveMeta::default())
+    }
 
     /// Analytic backends: derive a whole-plan report without touching the
     /// solver graph. Assignment backends keep the default `None`.
@@ -108,6 +132,18 @@ impl Solve for ExactSolve {
     fn solve(&self, sg: &SolverGraph, budget: f64) -> Option<Solution> {
         solve_exact(sg, budget)
     }
+
+    fn solve_report(
+        &self,
+        sg: &SolverGraph,
+        budget: f64,
+    ) -> (Option<Solution>, SolveMeta) {
+        // the reference branch-and-bound always runs to exhaustion
+        (
+            solve_exact(sg, budget),
+            SolveMeta { gap: Some(0.0), proven_optimal: Some(true) },
+        )
+    }
 }
 
 /// Exact ILP backend (`--backend ilp`): the paper's 0/1 integer program
@@ -144,8 +180,32 @@ impl Solve for IlpSolve {
     }
 
     fn solve(&self, sg: &SolverGraph, budget: f64) -> Option<Solution> {
+        self.solve_report(sg, budget).0
+    }
+
+    fn solve_report(
+        &self,
+        sg: &SolverGraph,
+        budget: f64,
+    ) -> (Option<Solution>, SolveMeta) {
         let warm = solve(sg, budget, self.warm);
-        solve_ilp(sg, budget, self.opts, warm.as_ref())
+        let r = crate::solver::solve_ilp_detailed(
+            sg,
+            budget,
+            self.opts,
+            warm.as_ref(),
+        );
+        // a refused encoding passed the warm start through: the result
+        // is the beam's, so it carries no optimality claim
+        let meta = if r.engaged {
+            SolveMeta {
+                gap: r.gap,
+                proven_optimal: Some(r.proven_optimal),
+            }
+        } else {
+            SolveMeta::default()
+        };
+        (r.solution, meta)
     }
 }
 
@@ -628,6 +688,41 @@ mod tests {
         let p = p.with_ilp(IlpOpts::default());
         assert_eq!(p.name(), "portfolio(3+ilp)");
         assert_eq!(p.configs.len(), 3);
+    }
+
+    #[test]
+    fn solve_report_claims_match_backend_strength() {
+        use crate::cluster::DeviceMesh;
+        use crate::graph::models::mlp;
+        use crate::layout::LayoutManager;
+        let g = mlp(64, &[128, 64, 10]);
+        let m = DeviceMesh {
+            shape: vec![2],
+            devices: vec![0, 1],
+            axis_alpha: vec![1e-6],
+            axis_beta: vec![1e11],
+        };
+        let lm = LayoutManager::new(m.clone());
+        let sg = SolverGraph::build(
+            &g,
+            &m,
+            &DeviceModel::a100_80gb(),
+            &lm,
+        );
+        // heuristic: no claim either way
+        let (sol, meta) = BeamSolve::default().solve_report(&sg, 1e12);
+        assert!(sol.is_some());
+        assert_eq!(meta, SolveMeta::default());
+        // exact branch-and-bound: proof by construction
+        let (sol, meta) = ExactSolve.solve_report(&sg, 1e12);
+        assert!(sol.is_some());
+        assert_eq!(meta.gap, Some(0.0));
+        assert_eq!(meta.proven_optimal, Some(true));
+        // ilp: a small graph closes the gap within the default budget
+        let (sol, meta) = IlpSolve::default().solve_report(&sg, 1e12);
+        assert!(sol.is_some());
+        assert_eq!(meta.proven_optimal, Some(true));
+        assert_eq!(meta.gap, Some(0.0));
     }
 
     #[test]

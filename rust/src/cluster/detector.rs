@@ -21,6 +21,10 @@ pub struct ClusterInfo {
     pub tiers: Vec<f64>,
     /// tier_of\[i\]\[j\] = index into `tiers` for the (i, j) link.
     pub tier_of: Vec<Vec<usize>>,
+    /// Per-device compute scale relative to the reference device model
+    /// (all 1.0 for a homogeneous cluster). Read from the cluster's
+    /// spec sheet, not probed, so it carries no measurement noise.
+    pub flops_scale: Vec<f64>,
 }
 
 impl ClusterInfo {
@@ -99,7 +103,22 @@ impl ClusterInfo {
                     devs.iter().map(|&j| self.tier_of[i][j]).collect()
                 })
                 .collect(),
+            flops_scale: devs
+                .iter()
+                .map(|&i| self.flops_scale[i])
+                .collect(),
         }
+    }
+
+    /// The slowest device class in the cluster (SPMD stages run in
+    /// lockstep, so the weakest device gates the whole slice).
+    pub fn min_flops_scale(&self) -> f64 {
+        self.flops_scale.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// True when every device is the reference class.
+    pub fn is_uniform_compute(&self) -> bool {
+        self.flops_scale.iter().all(|&s| s == 1.0)
     }
 }
 
@@ -170,7 +189,16 @@ pub fn detect(cluster: &SimCluster, seed: u64) -> ClusterInfo {
         })
         .collect();
 
-    ClusterInfo { n, alpha, beta, tiers, tier_of }
+    ClusterInfo {
+        n,
+        alpha,
+        beta,
+        tiers,
+        tier_of,
+        // spec-sheet read, deliberately noise-free: device classes are
+        // advertised, not measured, so replan fingerprints stay stable
+        flops_scale: cluster.compute_scale.clone(),
+    }
 }
 
 #[cfg(test)]
@@ -238,6 +266,20 @@ mod tests {
         let one = info.slice(&[3]);
         assert_eq!(one.n, 1);
         assert_eq!(one.beta.len(), 1);
+    }
+
+    #[test]
+    fn flops_scale_is_noise_free_and_slices() {
+        let c = SimCluster::fig5_degraded();
+        let info = detect(&c, 42);
+        assert_eq!(info.flops_scale, c.compute_scale);
+        assert!(!info.is_uniform_compute());
+        assert_eq!(info.min_flops_scale(), 0.5);
+        let fast = info.slice(&[0, 1, 2, 3]);
+        assert!(fast.is_uniform_compute());
+        let slow = info.slice(&[4, 5]);
+        assert_eq!(slow.flops_scale, vec![0.5, 0.5]);
+        assert_eq!(slow.min_flops_scale(), 0.5);
     }
 
     #[test]

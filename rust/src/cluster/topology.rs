@@ -19,6 +19,10 @@ pub struct SimCluster {
     pub bandwidth: Vec<Vec<f64>>,
     /// multiplicative measurement noise (std dev, e.g. 0.03 = 3%).
     pub noise: f64,
+    /// Per-device compute scale relative to the reference device model
+    /// (1.0 = reference; 0.5 = half-speed older generation). Spec-sheet
+    /// data, not probed — mixed-generation nodes advertise their class.
+    pub compute_scale: Vec<f64>,
 }
 
 impl SimCluster {
@@ -29,6 +33,7 @@ impl SimCluster {
             latency: vec![vec![lat; n]; n],
             bandwidth: vec![vec![bw; n]; n],
             noise: 0.03,
+            compute_scale: vec![1.0; n],
         }
     }
 
@@ -112,6 +117,93 @@ impl SimCluster {
         }
         for row in c.bandwidth.iter_mut() {
             row.truncate(n);
+        }
+        c.compute_scale.truncate(n);
+        c
+    }
+
+    /// Remove one device from a cluster (elastic shrink: a node was lost
+    /// or preempted). The surviving devices keep their relative links and
+    /// renumber contiguously.
+    pub fn without_device(&self, lost: usize) -> SimCluster {
+        assert!(lost < self.n, "device {lost} not in cluster");
+        assert!(self.n > 1, "cannot shrink a single-device cluster");
+        let keep: Vec<usize> =
+            (0..self.n).filter(|&d| d != lost).collect();
+        let pick = |m: &Vec<Vec<f64>>| -> Vec<Vec<f64>> {
+            keep.iter()
+                .map(|&i| keep.iter().map(|&j| m[i][j]).collect())
+                .collect()
+        };
+        SimCluster {
+            name: format!("{}-drop{lost}", self.name),
+            n: keep.len(),
+            latency: pick(&self.latency),
+            bandwidth: pick(&self.bandwidth),
+            noise: self.noise,
+            compute_scale: keep
+                .iter()
+                .map(|&i| self.compute_scale[i])
+                .collect(),
+        }
+    }
+
+    /// The Fig-5 box after losing device `lost` — the canonical elastic
+    /// shrink scenario for `automap replan`.
+    pub fn fig5_drop(lost: usize) -> SimCluster {
+        SimCluster::partially_connected_8gpu().without_device(lost)
+    }
+
+    /// Fig-5 with the second NUMA node degraded to half compute (e.g.
+    /// thermal throttling or power capping): links unchanged, devices
+    /// 4..8 run at 0.5× the reference FLOPs.
+    pub fn fig5_degraded() -> SimCluster {
+        let mut c = SimCluster::partially_connected_8gpu();
+        c.name = "fig5-degraded".into();
+        for s in c.compute_scale.iter_mut().skip(4) {
+            *s = 0.5;
+        }
+        c
+    }
+
+    /// Mixed-generation Fig-5: the first NUMA node is current-gen, the
+    /// second is a previous-gen part (0.6× FLOPs, half the NVLink and
+    /// PCIe bandwidth inside the node). Cross-NUMA links unchanged.
+    pub fn fig5_mixed() -> SimCluster {
+        let mut c = SimCluster::partially_connected_8gpu();
+        c.name = "fig5-mixed".into();
+        for i in 4..8 {
+            c.compute_scale[i] = 0.6;
+            for j in 4..8 {
+                if i != j {
+                    c.bandwidth[i][j] /= 2.0;
+                }
+            }
+        }
+        c
+    }
+
+    /// Fig-5 grown by one extra NVLink pair hanging off the second NUMA
+    /// node (elastic grow: 10 devices, the new pair reaches everyone
+    /// else at cross-NUMA speed).
+    pub fn fig5_grow() -> SimCluster {
+        let base = SimCluster::partially_connected_8gpu();
+        let n = 10;
+        let mut c = SimCluster::uniform("fig5-grow10", n, 12e-6, 10.0 * GB);
+        for i in 0..8 {
+            for j in 0..8 {
+                c.latency[i][j] = base.latency[i][j];
+                c.bandwidth[i][j] = base.bandwidth[i][j];
+            }
+        }
+        for i in 8..10 {
+            for j in 8..10 {
+                if i != j {
+                    // the new pair is NVLink-connected internally
+                    c.latency[i][j] = 2e-6;
+                    c.bandwidth[i][j] = 200.0 * GB;
+                }
+            }
         }
         c
     }
@@ -208,5 +300,33 @@ mod tests {
         let c = SimCluster::multi_node(2, 4, 100.0);
         assert_eq!(c.bandwidth[0][3], 200.0 * GB);
         assert_eq!(c.bandwidth[0][4], 12.5 * GB);
+    }
+
+    #[test]
+    fn drop_device_renumbers_and_keeps_links() {
+        let full = SimCluster::partially_connected_8gpu();
+        let c = SimCluster::fig5_drop(3);
+        assert_eq!(c.n, 7);
+        // old device 4 is new device 3; (4,5) NVLink pair survives
+        assert_eq!(c.bandwidth[3][4], full.bandwidth[4][5]);
+        assert_eq!(c.bandwidth[0][1], 200.0 * GB);
+        assert_eq!(c.compute_scale.len(), 7);
+    }
+
+    #[test]
+    fn scenario_clusters_are_consistent() {
+        let d = SimCluster::fig5_degraded();
+        assert_eq!(d.compute_scale[0], 1.0);
+        assert_eq!(d.compute_scale[7], 0.5);
+        assert_eq!(d.bandwidth[4][5], 200.0 * GB, "links unchanged");
+        let m = SimCluster::fig5_mixed();
+        assert_eq!(m.compute_scale[5], 0.6);
+        assert_eq!(m.bandwidth[4][5], 100.0 * GB, "older NVLink halved");
+        assert_eq!(m.bandwidth[0][4], 10.0 * GB, "cross-NUMA unchanged");
+        let g = SimCluster::fig5_grow();
+        assert_eq!(g.n, 10);
+        assert_eq!(g.bandwidth[8][9], 200.0 * GB);
+        assert_eq!(g.bandwidth[0][8], 10.0 * GB);
+        assert_eq!(g.compute_scale, vec![1.0; 10]);
     }
 }

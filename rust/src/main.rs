@@ -42,6 +42,23 @@
 //!             are sent as a wire spec (see serve below), the daemon
 //!             solves or serves from its registry, and the returned
 //!             artifact prints/saves exactly like a local plan.
+//!   replan    --from pipeline.json --cluster C [--model M]
+//!             [--budget-gb G] [--fast] [--backend B] [--max-stages K]
+//!             [--min-stages K] [--microbatches 1,2,4] [--cache-dir DIR]
+//!             [--save-plan out.json] [--progress] [--json] :
+//!             warm re-plan of a saved PipelineSolution against a changed
+//!             cluster (elastic shrink/grow, degraded or mixed-generation
+//!             nodes). The old solution's compiled stage cells seed a
+//!             content-addressed CellStore keyed by (stage subgraph,
+//!             device-class structure, budget, backend), so every cell
+//!             whose slice is still equivalent under the new topology is
+//!             reused verbatim and only the composition DP plus the
+//!             invalidated cells re-run. --cache-dir additionally
+//!             persists cells in the plan registry across replans.
+//!             --json wraps the solution with reuse counters:
+//!             {"cells_seeded": .., "cells_reused": ..,
+//!              "cells_recompiled": .., "wall_ms": .., "solution": {..}}.
+//!             The daemon exposes the same flow as POST /v1/replan.
 //!   verify    <plan.json> [--model M | --manifest artifacts/manifest.json]
 //!             [--budget-gb G] [--strict] [--save-trace t.json] [--json] :
 //!             structurally validate a saved CompiledPlan artifact, then
@@ -118,10 +135,11 @@
 
 use anyhow::{anyhow, Result};
 
-use automap::api::{Artifact, BackendSpec, BaselineSolve, ClusterReport,
-                   CompiledPlan, MeshCandidates, PipelineSolution,
-                   PlanArtifact, PlanOutcome, PlanRegistry, PlanRequest,
-                   PlanService, Planner, PpOpts, ProgressEvent};
+use automap::api::{Artifact, BackendSpec, BaselineSolve, CellStore,
+                   ClusterReport, CompiledPlan, MeshCandidates,
+                   PipelineSolution, PlanArtifact, PlanOutcome,
+                   PlanRegistry, PlanRequest, PlanService, Planner,
+                   PpOpts, ProgressEvent};
 use automap::cluster::{detect, SimCluster};
 use automap::serve::wire::{cluster_for, model_for, stats_json};
 use automap::serve::{server, Client, PlanSpec, ServeConfig};
@@ -174,6 +192,17 @@ fn print_plan(g: &Graph, plan: &CompiledPlan, args: &Args) -> Result<()> {
     println!("achieved       : {:.3} PFLOPS", plan.pflops);
     println!("mem/device     : {:.2} GB", plan.mem_per_device / 1e9);
     println!("sweep point n  : {}", plan.sweep_n);
+    if let Some(gap) = plan.gap {
+        println!(
+            "optimality gap : {:.4}%{}",
+            gap * 100.0,
+            if plan.proven_optimal == Some(true) {
+                " (proven optimal)"
+            } else {
+                ""
+            }
+        );
+    }
     println!("comm inserts   : {}", plan.plan.comms.len());
     let mut comms = plan.plan.comms.clone();
     comms.sort_by(|a, b| b.time.partial_cmp(&a.time).unwrap());
@@ -243,6 +272,19 @@ fn narrate(ev: &ProgressEvent) {
                 devices.0,
                 devices.1,
                 if *feasible { "solved" } else { "infeasible" }
+            );
+        }
+        ProgressEvent::CellReused { span, devices } => {
+            eprintln!(
+                "[pp] stage [{}, {}) on devs [{}, {}): reused cached cell",
+                span.0, span.1, devices.0, devices.1
+            );
+        }
+        ProgressEvent::CellRecompiled { span, devices, ms } => {
+            eprintln!(
+                "[pp] stage [{}, {}) on devs [{}, {}): recompiled \
+                 ({ms:.0} ms)",
+                span.0, span.1, devices.0, devices.1
             );
         }
         ProgressEvent::PipelineChosen {
@@ -486,6 +528,93 @@ fn cmd_plan(args: &Args) -> Result<()> {
         PlanArtifact::Plan(plan) => print_plan(&req.graph, plan, args),
         PlanArtifact::Pipeline(sol) => print_pipeline(sol, args),
     }
+}
+
+/// `automap replan`: warm re-plan of a saved pipeline solution against
+/// a changed cluster. The previous solution's compiled stage cells seed
+/// a content-addressed [`CellStore`]; the two-level planner then reuses
+/// every cell whose (stage subgraph, device-class structure, budget,
+/// backend) fingerprint still matches — only the cheap composition DP
+/// and the cells invalidated by the cluster change re-run. Pass the
+/// same planning flags (--fast, --backend, --max-stages, ...) as the
+/// original plan: cell fingerprints include them, so different knobs
+/// force an (intentional) full recompile.
+fn cmd_replan(args: &Args) -> Result<()> {
+    let from = args.get("from").ok_or_else(|| {
+        anyhow!(
+            "usage: automap replan --from pipeline.json --cluster C \
+             [--model M] [--budget-gb G] [--fast] [--backend B] \
+             [--max-stages K] [--min-stages K] [--microbatches 1,2,4] \
+             [--cache-dir DIR] [--save-plan out.json] [--progress] \
+             [--json]"
+        )
+    })?;
+    if artifact_kind(from)? != PipelineSolution::KIND {
+        return Err(anyhow!(
+            "{from} is not a pipeline-solution artifact — replan reuses \
+             pipeline stage cells (automap plan --pp produces one)"
+        ));
+    }
+    let prev = PipelineSolution::load(from)?;
+    let cfg = model_for(args.get_or("model", "gpt2-mini"))?;
+    let g = gpt2(&cfg);
+    let cluster = cluster_for(args.get_or("cluster", "fig5"))?;
+    let dev = DeviceModel::a100_80gb();
+
+    let mut opts = opts_from(args);
+    // inherit the original budget unless overridden: cell fingerprints
+    // include the budget, so a silently different default would force a
+    // full recompile
+    if opts.budget.is_none() && prev.budget > 0.0 {
+        opts.budget = Some(prev.budget);
+    }
+    opts.pp = Some(pp_opts_from(args)?);
+    let spec = BackendSpec::parse(&backend_from(args)?, cfg, opts.solve)?;
+
+    // registry-backed when --cache-dir points at one (cells persist
+    // across replans); always seeded from the previous solution
+    let registry = match args.get("cache-dir") {
+        Some(d) => Some(std::sync::Arc::new(PlanRegistry::open(d)?)),
+        None => None,
+    };
+    let cells = std::sync::Arc::new(CellStore::new(registry));
+    let seeded = cells.seed_solution(&prev);
+
+    let info = detect(&cluster, opts.seed);
+    let t0 = std::time::Instant::now();
+    let mut planner = Planner::with_info(&g, info, &dev)
+        .with_opts(opts)
+        .with_backend_spec(&spec)
+        .with_cell_store(std::sync::Arc::clone(&cells));
+    if args.has_flag("progress") {
+        planner = planner.on_progress(narrate);
+    }
+    let sol = planner.solve_pipeline()?.clone();
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let (reused, recompiled) = (cells.reused(), cells.recompiled());
+    eprintln!(
+        "replan: {seeded} cell(s) seeded from {from}, {reused} reused, \
+         {recompiled} recompiled ({wall_ms:.0} ms)"
+    );
+    if let Some(path) = args.get("save-plan") {
+        sol.save(path)?;
+        eprintln!("pipeline plan saved to {path}");
+    }
+    if args.has_flag("json") {
+        use automap::util::json::{num, obj};
+        println!(
+            "{}",
+            obj(vec![
+                ("cells_seeded", num(seeded as f64)),
+                ("cells_reused", num(reused as f64)),
+                ("cells_recompiled", num(recompiled as f64)),
+                ("wall_ms", num(wall_ms)),
+                ("solution", sol.to_json()),
+            ])
+        );
+        return Ok(());
+    }
+    print_pipeline(&sol, args)
 }
 
 /// Assemble the wire spec `plan --remote` ships: the same flags the
@@ -1245,6 +1374,7 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("plan") => cmd_plan(&args),
+        Some("replan") => cmd_replan(&args),
         Some("verify") => cmd_verify(&args),
         Some("batch") => cmd_batch(&args),
         Some("serve") => cmd_serve(&args),
@@ -1257,12 +1387,16 @@ fn main() -> Result<()> {
         Some("table4") => cmd_table4(&args),
         _ => {
             println!(
-                "usage: automap <plan|verify|batch|serve|registry|cache|\
-                 cluster|profile|train|tp-check|table4> [--options]"
+                "usage: automap <plan|replan|verify|batch|serve|registry|\
+                 cache|cluster|profile|train|tp-check|table4> [--options]"
             );
             println!(
                 "  plan     compile a plan (--pp for two-level pipeline \
                  parallelism, --remote for a daemon)"
+            );
+            println!(
+                "  replan   warm re-plan a saved pipeline solution \
+                 against a changed cluster (reuses stage cells)"
             );
             println!(
                 "  verify   replay a saved CompiledPlan or \

@@ -8,10 +8,17 @@
 //! 1. **Cells.** A cell is a candidate stage: a group span `[i, j)` on a
 //!    device range `[a, a+k)`. Cells are enumerated by forward
 //!    reachability under the stage-count bounds, pruned by work balance
-//!    (a span doing 5% of the FLOPs never gets half the cluster), and
-//!    each surviving cell runs a full nested staged compile — intra-op
-//!    sweep, per-stage rotor checkpoint DP, lowering — in parallel over
-//!    the thread pool, sharing the caller's solver-graph store.
+//!    (a span doing 5% of the FLOPs never gets half the cluster), then
+//!    *resolved by content*: each cell is fingerprinted
+//!    ([`cell_fingerprint`]) over its stage subgraph, the device-class
+//!    structure of its cluster slice, and the solve configuration.
+//!    Cells already present in the caller's [`CellStore`] — from an
+//!    earlier solve on an overlapping cluster, or a replan seed — are
+//!    reused outright; of the rest, one representative per distinct
+//!    fingerprint runs the full nested staged compile — intra-op sweep,
+//!    per-stage rotor checkpoint DP, lowering — in parallel over the
+//!    thread pool (sharing the caller's solver-graph store), and
+//!    fingerprint twins share the compiled result.
 //! 2. **Composition.** A forward DP walks group index × devices used ×
 //!    stage count, keeping a Pareto frontier over `(Σ t, max t, max g)`
 //!    per state — the three statistics the 1F1B latency
@@ -32,18 +39,20 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::api::{BackendSpec, CompiledPlan, PipelineSolution,
-                 PipelineStagePlan, PlanOpts, Planner, ProgressEvent,
-                 ProgressHub, SolverGraphStore};
+use crate::api::store::graph_fingerprint;
+use crate::api::{cell_fingerprint, BackendSpec, CellStore,
+                 PipelineSolution, PipelineStagePlan, PlanOpts, Planner,
+                 ProgressEvent, ProgressHub, SolverGraphStore,
+                 StoredCell};
 use crate::ckpt::{build_stages, common_nodes, linearize};
 use crate::cluster::ClusterInfo;
 use crate::gen::stage_boundary_p2p;
 use crate::graph::Graph;
-use crate::sim::pipeline::{replay_1f1b, stage_phases, StagePhases};
+use crate::sim::pipeline::{replay_1f1b, stage_phases};
 use crate::sim::DeviceModel;
 use crate::util::pool::parallel_map;
 
-use super::{stage_subgraph, PpOpts};
+use super::{stage_subgraph, PpOpts, StageSubgraph};
 
 /// Target cap on nested stage solves per pipeline compile; when the
 /// enumeration exceeds it, the balance tolerance tightens
@@ -55,16 +64,17 @@ const MAX_CELLS: usize = 192;
 /// A cell key: group span `[i, j)` on device range `[a, a+k)`.
 type CellKey = (usize, usize, usize, usize);
 
-/// A solved candidate stage.
-struct Cell {
-    plan: CompiledPlan,
-    phases: StagePhases,
-    boundary_in: f64,
-}
-
-struct CellOut {
-    cell: Option<Cell>,
-    ms: f64,
+/// Per-key preparation for the resolution phase: the extracted stage
+/// subgraph (`None` for the degenerate full-span stage, which uses the
+/// original graph), the sliced cluster view, the device model derated
+/// to the slice's weakest compute class, and the cell's content
+/// fingerprint. A key whose subgraph cannot be extracted has no `Prep`
+/// and is infeasible before any compile runs.
+struct Prep {
+    sub: Option<StageSubgraph>,
+    sliced: ClusterInfo,
+    sdev: DeviceModel,
+    fp: String,
 }
 
 /// One Pareto-frontier entry of the composition DP.
@@ -157,10 +167,12 @@ fn enumerate_cells(
 /// budget every stage compiles under; `spec` is the assignment backend
 /// every nested cell compile installs (analytic baselines are rejected —
 /// they cannot solve a stage subgraph); `total_flops` feeds the headline
-/// PFLOPS. Progress events (`PipelineCellSolved`, `PipelineChosen`) go
-/// to `on_ev`, and cell events are additionally delivered *live* from
-/// the worker threads when a [`ProgressHub`] is installed on the calling
-/// thread.
+/// PFLOPS. `cell_store` supplies already-compiled cells by content
+/// fingerprint and receives every cell compiled here — the incremental
+/// replanning tier. Progress events (`PipelineCellSolved`,
+/// `CellReused`/`CellRecompiled`, `PipelineChosen`) go to `on_ev`, and
+/// cell events are delivered *live* from the worker threads when a
+/// [`ProgressHub`] is installed on the calling thread.
 #[allow(clippy::too_many_arguments)]
 pub fn solve(
     g: &Graph,
@@ -172,6 +184,7 @@ pub fn solve(
     budget: f64,
     total_flops: f64,
     store: &Arc<SolverGraphStore>,
+    cell_store: &Arc<CellStore>,
     on_ev: &mut dyn FnMut(ProgressEvent),
 ) -> Result<PipelineSolution> {
     if spec.is_analytic() {
@@ -229,76 +242,184 @@ pub fn solve(
         ..opts.clone()
     };
 
+    // -- cell preparation -------------------------------------------------
+    // Per key: extract the stage subgraph, slice the cluster, derate the
+    // device model to the slice's weakest compute class (SPMD stages run
+    // in lockstep, so the slowest device gates the whole slice — on a
+    // uniform cluster `scaled(1.0)` is bit-identical to `dev`), and
+    // fingerprint the cell's content.
+    let preps: Vec<Option<Prep>> =
+        parallel_map(&key_list, |&(i, j, a, k)| {
+            let full = i == 0 && j == n_groups;
+            let (sub, sub_fp) = if full {
+                // the degenerate full-span stage is the original graph —
+                // not a copy — so a 1-stage pipeline reproduces the
+                // staged planner's compile byte for byte
+                (None, graph_fingerprint(g))
+            } else {
+                match stage_subgraph(g, &common, &groups, i, j) {
+                    Ok(s) => {
+                        let fp = graph_fingerprint(&s.graph);
+                        (Some(s), fp)
+                    }
+                    Err(_) => return None,
+                }
+            };
+            let devs: Vec<usize> = (a..a + k).collect();
+            let sliced = info.slice(&devs);
+            let sdev = dev.scaled(sliced.min_flops_scale());
+            let fp = cell_fingerprint(
+                &sub_fp, &sliced, dev, budget, spec, &nested,
+            );
+            Some(Prep { sub, sliced, sdev, fp })
+        });
+
+    // -- cell resolution --------------------------------------------------
+    // Group keys by fingerprint; serve whole groups from the store, and
+    // compile exactly one deterministic representative (the lowest key —
+    // key_list is sorted) per remaining group. Twins share the Arc'd
+    // result, so isomorphic slices (every NVLink pair of a fig5 box, the
+    // surviving devices after a node loss) never compile twice.
+    let mut by_fp: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (ci, p) in preps.iter().enumerate() {
+        if let Some(p) = p {
+            by_fp.entry(p.fp.as_str()).or_default().push(ci);
+        }
+    }
+    let mut slots: Vec<Option<Arc<StoredCell>>> =
+        vec![None; key_list.len()];
+    let mut reps: Vec<usize> = Vec::new();
+    for (fp, members) in &by_fp {
+        if let Some(cell) = cell_store.get(fp) {
+            for &ci in members {
+                slots[ci] = Some(Arc::clone(&cell));
+            }
+        } else {
+            reps.push(members[0]);
+        }
+    }
+
     // when the caller's thread carries a ProgressHub, workers deliver
-    // cell events live (the pool propagates the hub context into them);
-    // otherwise the events replay in key order after the fan-out
+    // their cell events live (the pool propagates the hub context into
+    // them); reused cells' events are emitted after the fan-out either
+    // way, and everything replays through `on_ev` when no hub exists
     let hub_live = ProgressHub::current().is_some();
-    let cells: Vec<CellOut> = parallel_map(&key_list, |&(i, j, a, k)| {
-        let t0 = std::time::Instant::now();
-        let ms = |t0: std::time::Instant| t0.elapsed().as_secs_f64() * 1e3;
-        let emit_cell = |out: CellOut| {
+    let compiled: Vec<(Option<Arc<StoredCell>>, f64)> =
+        parallel_map(&reps, |&ci| {
+            let (i, j, a, k) = key_list[ci];
+            let p = preps[ci].as_ref().expect("reps are prepared");
+            let t0 = std::time::Instant::now();
+            let graph: &Graph = match &p.sub {
+                None => g,
+                Some(s) => &s.graph,
+            };
+            let mut planner =
+                Planner::with_info(graph, p.sliced.clone(), &p.sdev)
+                    .with_opts(nested.clone())
+                    .with_backend_spec(spec)
+                    .with_store(Arc::clone(store));
+            let cell = planner.lower().ok().and_then(|plan| {
+                stage_phases(graph, &plan.mesh, &plan.plan, &p.sdev)
+                    .ok()
+                    .map(|phases| Arc::new(StoredCell { plan, phases }))
+            });
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            if let Some(cell) = &cell {
+                // publish from the worker so future replans (and other
+                // planners sharing the store) see the cell immediately
+                cell_store.put(&p.fp, Arc::clone(cell), ms);
+            }
             if let Some(hub) = ProgressHub::current() {
                 hub.emit(&ProgressEvent::PipelineCellSolved {
                     span: (i, j),
                     devices: (a, a + k),
-                    feasible: out.cell.is_some(),
-                    ms: out.ms,
+                    feasible: cell.is_some(),
+                    ms,
                 });
-            }
-            out
-        };
-        let full = i == 0 && j == n_groups;
-        let owned;
-        let (graph, boundary_in): (&Graph, f64) = if full {
-            // the degenerate full-span stage is the original graph —
-            // not a copy — so a 1-stage pipeline reproduces the staged
-            // planner's compile byte for byte
-            (g, 0.0)
-        } else {
-            match stage_subgraph(g, &common, &groups, i, j) {
-                Ok(s) => {
-                    owned = s;
-                    (&owned.graph, owned.boundary_in_bytes)
-                }
-                Err(_) => {
-                    return emit_cell(CellOut { cell: None, ms: ms(t0) })
+                if cell.is_some() {
+                    hub.emit(&ProgressEvent::CellRecompiled {
+                        span: (i, j),
+                        devices: (a, a + k),
+                        ms,
+                    });
                 }
             }
-        };
-        let devs: Vec<usize> = (a..a + k).collect();
-        let sliced = info.slice(&devs);
-        let mut planner = Planner::with_info(graph, sliced, dev)
-            .with_opts(nested.clone())
-            .with_backend_spec(spec)
-            .with_store(Arc::clone(store));
-        let plan = match planner.lower() {
-            Ok(p) => p,
-            Err(_) => {
-                return emit_cell(CellOut { cell: None, ms: ms(t0) })
+            (cell, ms)
+        });
+    let mut rep_ms: Vec<f64> = vec![0.0; key_list.len()];
+    let mut compiled_rep: Vec<bool> = vec![false; key_list.len()];
+    for (ri, &ci) in reps.iter().enumerate() {
+        rep_ms[ci] = compiled[ri].1;
+        compiled_rep[ci] = true;
+        if let Some(cell) = &compiled[ri].0 {
+            let fp = preps[ci].as_ref().unwrap().fp.as_str();
+            for &tw in &by_fp[fp] {
+                slots[tw] = Some(Arc::clone(cell));
             }
-        };
-        let phases =
-            match stage_phases(graph, &plan.mesh, &plan.plan, dev) {
-                Ok(p) => p,
-                Err(_) => {
-                    return emit_cell(CellOut { cell: None, ms: ms(t0) })
-                }
-            };
-        emit_cell(CellOut {
-            cell: Some(Cell { plan, phases, boundary_in }),
-            ms: ms(t0),
-        })
-    });
-    if !hub_live {
-        for (ci, &(i, j, a, k)) in key_list.iter().enumerate() {
-            on_ev(ProgressEvent::PipelineCellSolved {
-                span: (i, j),
-                devices: (a, a + k),
-                feasible: cells[ci].cell.is_some(),
-                ms: cells[ci].ms,
-            });
         }
     }
+
+    // -- cell events + counters -------------------------------------------
+    // Reused cells (store hits and twins) never visited a worker; their
+    // events are emitted here in key order. Representatives already
+    // emitted live when a hub was installed; without one, everything —
+    // including them — replays through `on_ev` in key order.
+    let mut reused = 0u64;
+    let mut recompiled = 0u64;
+    {
+        let hub = ProgressHub::current();
+        let mut deliver = |ev: ProgressEvent| match &hub {
+            Some(h) => h.emit(&ev),
+            None => on_ev(ev),
+        };
+        for (ci, &(i, j, a, k)) in key_list.iter().enumerate() {
+            let feasible = slots[ci].is_some();
+            if compiled_rep[ci] {
+                recompiled += u64::from(feasible);
+                if !hub_live {
+                    deliver(ProgressEvent::PipelineCellSolved {
+                        span: (i, j),
+                        devices: (a, a + k),
+                        feasible,
+                        ms: rep_ms[ci],
+                    });
+                    if feasible {
+                        deliver(ProgressEvent::CellRecompiled {
+                            span: (i, j),
+                            devices: (a, a + k),
+                            ms: rep_ms[ci],
+                        });
+                    }
+                }
+                continue;
+            }
+            deliver(ProgressEvent::PipelineCellSolved {
+                span: (i, j),
+                devices: (a, a + k),
+                feasible,
+                ms: 0.0,
+            });
+            if feasible {
+                reused += 1;
+                deliver(ProgressEvent::CellReused {
+                    span: (i, j),
+                    devices: (a, a + k),
+                });
+            }
+        }
+    }
+    cell_store.note_reused(reused);
+    cell_store.note_recompiled(recompiled);
+
+    let boundary_of: Vec<f64> = preps
+        .iter()
+        .map(|p| {
+            p.as_ref()
+                .and_then(|p| p.sub.as_ref())
+                .map(|s| s.boundary_in_bytes)
+                .unwrap_or(0.0)
+        })
+        .collect();
 
     // -- composition DP ---------------------------------------------------
     // Frontier states carry (next group, devices used, last stage's
@@ -330,7 +451,7 @@ pub fn solve(
                 if ki != i || ka != d {
                     continue;
                 }
-                let Some(cell) = cells[ci].cell.as_ref() else {
+                let Some(cell) = slots[ci].as_ref() else {
                     continue;
                 };
                 let complete = kj == n_groups;
@@ -356,7 +477,7 @@ pub fn solve(
                                 s,
                                 &prev_devs,
                                 &these,
-                                cell.boundary_in,
+                                boundary_of[ci],
                             );
                             (
                                 arena[pi].sum,
@@ -427,7 +548,7 @@ pub fn solve(
     for (s, &aei) in chain.iter().enumerate() {
         let ci = arena[aei].cell;
         let (i, j, a, k) = key_list[ci];
-        let cell = cells[ci].cell.as_ref().unwrap();
+        let cell = slots[ci].as_ref().unwrap();
         let devices: Vec<usize> = (a..a + k).collect();
         let p2p_in = if s == 0 {
             None
@@ -438,7 +559,7 @@ pub fn solve(
                 s,
                 &stages_out[s - 1].devices,
                 &devices,
-                cell.boundary_in,
+                boundary_of[ci],
             ))
         };
         stages_out.push(PipelineStagePlan {
@@ -454,6 +575,7 @@ pub fn solve(
             param_bytes: cell.phases.param_bytes,
             in_flight: (s_total - s).min(microbatches),
             p2p_in,
+            cell_fp: preps[ci].as_ref().unwrap().fp.clone(),
         });
     }
 
@@ -521,6 +643,7 @@ mod tests {
             ..Default::default()
         };
         let budget = dev.memory * 0.9;
+        let cells = Arc::new(CellStore::default());
         let mut events = 0usize;
         let sol = solve(
             &g,
@@ -532,6 +655,7 @@ mod tests {
             budget,
             1e12,
             &store,
+            &cells,
             &mut |_| events += 1,
         )
         .expect("two-stage mlp pipeline");
@@ -553,6 +677,53 @@ mod tests {
         // the replay produced the headline number
         assert!(sol.iter_time > 0.0 && sol.iter_time.is_finite());
         assert!(sol.max_stage_mem <= budget * 1.05);
+        // every stage records its cell fingerprint for replan seeding
+        assert!(sol.stages.iter().all(|s| !s.cell_fp.is_empty()));
+        assert!(cells.recompiled() > 0);
+    }
+
+    #[test]
+    fn warm_cell_store_replans_without_recompiling() {
+        let g = mlp(16, &[64, 64, 64, 64, 10]);
+        let info = detect(&SimCluster::fully_connected(2), 42);
+        let dev = DeviceModel::a100_80gb();
+        let pp = PpOpts {
+            min_stages: 2,
+            max_stages: 2,
+            microbatches: vec![2, 4],
+            ..Default::default()
+        };
+        let budget = dev.memory * 0.9;
+        let run = |cells: &Arc<CellStore>| {
+            solve(
+                &g,
+                &info,
+                &dev,
+                &fast(),
+                &pp,
+                &BackendSpec::Beam,
+                budget,
+                1e12,
+                &Arc::new(SolverGraphStore::new()),
+                cells,
+                &mut |_| {},
+            )
+            .expect("pipeline solves")
+        };
+        let cells = Arc::new(CellStore::default());
+        let cold = run(&cells);
+        let after_cold = cells.recompiled();
+        assert!(after_cold > 0);
+        // second solve over the same cluster: every cell is served from
+        // the store, and the result is identical
+        let warm = run(&cells);
+        assert_eq!(cells.recompiled(), after_cold, "no new compiles");
+        assert!(cells.reused() > 0);
+        let mut a = String::new();
+        let mut b = String::new();
+        crate::util::json::write_json(&cold.to_json(), &mut a);
+        crate::util::json::write_json(&warm.to_json(), &mut b);
+        assert_eq!(a, b, "warm replan must be byte-identical");
     }
 
     #[test]
@@ -572,6 +743,7 @@ mod tests {
             64.0,
             1e12,
             &store,
+            &Arc::new(CellStore::default()),
             &mut |_| {},
         )
         .unwrap_err()

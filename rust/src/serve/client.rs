@@ -54,6 +54,19 @@ impl RemoteOutcome {
     }
 }
 
+/// The decoded body of a successful `POST /v1/replan` — the plan
+/// outcome plus this request's cell-cache counters.
+#[derive(Debug, Clone)]
+pub struct ReplanOutcome {
+    pub outcome: RemoteOutcome,
+    /// Cells seeded into the daemon's store from the `from` solution.
+    pub cells_seeded: usize,
+    /// Stage cells served from the store during this solve.
+    pub cells_reused: usize,
+    /// Stage cells the solver had to recompile.
+    pub cells_recompiled: usize,
+}
+
 /// A blocking HTTP client bound to one daemon address.
 pub struct Client {
     addr: String,
@@ -127,6 +140,33 @@ impl Client {
             return Err(response_error(status, &v));
         }
         RemoteOutcome::from_json(&v)
+    }
+
+    /// `POST /v1/replan`: `spec` plus `from`, the fingerprint of a
+    /// registered pipeline solution whose per-stage cells seed the
+    /// solve (`automap replan` is the CLI equivalent).
+    pub fn replan(
+        &self,
+        spec: &PlanSpec,
+        from: &str,
+    ) -> Result<ReplanOutcome> {
+        let mut body = spec.to_json();
+        if let Json::Obj(map) = &mut body {
+            map.insert("from".into(), s(from));
+        }
+        let (status, v) = self.post_json("/v1/replan", &body)?;
+        if status != 200 {
+            return Err(response_error(status, &v));
+        }
+        Ok(ReplanOutcome {
+            outcome: RemoteOutcome::from_json(&v)?,
+            cells_seeded: v.get("cells_seeded").as_usize().unwrap_or(0),
+            cells_reused: v.get("cells_reused").as_usize().unwrap_or(0),
+            cells_recompiled: v
+                .get("cells_recompiled")
+                .as_usize()
+                .unwrap_or(0),
+        })
     }
 
     /// `POST /v1/plan` with `{"requests": [...]}`; per-entry outcomes in

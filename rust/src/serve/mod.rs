@@ -14,6 +14,9 @@
 //! automap serve --addr 127.0.0.1:7070 --registry .automap-cache
 //!
 //! POST /v1/plan               plan one spec, or {"requests": [...]} batch
+//! POST /v1/replan             replan a registered pipeline solution
+//!                             ("from": fingerprint) on a new cluster,
+//!                             reusing its cached stage cells
 //! GET  /v1/plan/<fingerprint> fetch a registered artifact verbatim
 //! GET  /v1/events/<job>       stream ProgressEvents (chunked)
 //! GET  /v1/cache/stats        CacheStats + registry counters
@@ -39,6 +42,6 @@ pub mod server;
 pub mod wire;
 
 pub use self::admission::{AdmissionQueue, Permit};
-pub use self::client::{Client, RemoteOutcome};
+pub use self::client::{Client, RemoteOutcome, ReplanOutcome};
 pub use self::server::{ServeConfig, ServerHandle};
 pub use self::wire::PlanSpec;

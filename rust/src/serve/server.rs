@@ -25,8 +25,10 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 use tinyhttp::{ChunkedWriter, Request, Response};
 
-use crate::api::{PlanOutcome, PlanService, ProgressHub};
 use crate::api::registry::{KIND_PIPELINE, KIND_PLAN};
+use crate::api::{
+    Artifact, PipelineSolution, PlanOutcome, PlanService, ProgressHub,
+};
 use crate::util::json::{arr, num, obj, s, write_json, Json};
 use crate::util::pool;
 
@@ -373,7 +375,11 @@ fn handle<R: BufRead, W: Write>(state: &State, r: &mut R, w: &mut W) {
             handle_events(state, w, &p["/v1/events/".len()..])
         }
         ("POST", "/v1/plan") => handle_plan(state, w, &req),
-        (_, "/v1/plan") | (_, "/v1/healthz") | (_, "/v1/cache/stats") => {
+        ("POST", "/v1/replan") => handle_replan(state, w, &req),
+        (_, "/v1/plan")
+        | (_, "/v1/replan")
+        | (_, "/v1/healthz")
+        | (_, "/v1/cache/stats") => {
             respond(
                 w,
                 405,
@@ -390,8 +396,8 @@ fn handle<R: BufRead, W: Write>(state: &State, r: &mut R, w: &mut W) {
                 "not-found",
                 &format!(
                     "no route for {} {} (see /v1/healthz, /v1/plan, \
-                     /v1/plan/<fingerprint>, /v1/events/<job>, \
-                     /v1/cache/stats)",
+                     /v1/replan, /v1/plan/<fingerprint>, \
+                     /v1/events/<job>, /v1/cache/stats)",
                     req.method, path
                 ),
             ),
@@ -530,6 +536,180 @@ fn handle_plan<W: Write>(state: &State, w: &mut W, req: &Request) {
     drop(permit);
     match result {
         Ok(out) => respond(w, 200, &outcome_json(&out)),
+        Err(e) => respond(
+            w,
+            500,
+            &error_json("plan-failed", &e.to_string()),
+        ),
+    }
+}
+
+/// `POST /v1/replan`: a plan spec plus `"from": "<fingerprint>"` naming
+/// a registered pipeline solution. The previous solution's per-stage
+/// cells are seeded into the service-wide [`CellStore`], then the spec
+/// plans normally — stages whose content fingerprint still matches the
+/// new cluster are reused instead of recompiled. The response is the
+/// `/v1/plan` envelope plus `cells_seeded` / `cells_reused` /
+/// `cells_recompiled` counters for this request.
+///
+/// [`CellStore`]: crate::api::CellStore
+fn handle_replan<W: Write>(state: &State, w: &mut W, req: &Request) {
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => {
+            respond(
+                w,
+                400,
+                &error_json("bad-request", "body is not UTF-8"),
+            );
+            return;
+        }
+    };
+    let body = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => {
+            respond(
+                w,
+                400,
+                &error_json("bad-request", &format!("body: {e}")),
+            );
+            return;
+        }
+    };
+    let Some(from) = body.get("from").as_str().map(str::to_string)
+    else {
+        respond(
+            w,
+            400,
+            &error_json(
+                "bad-request",
+                "replan needs \"from\": the fingerprint of a \
+                 registered pipeline solution",
+            ),
+        );
+        return;
+    };
+    let spec = match PlanSpec::from_json(&body) {
+        Ok(sp) => sp,
+        Err(e) => {
+            respond(
+                w,
+                400,
+                &error_json("bad-request", &e.to_string()),
+            );
+            return;
+        }
+    };
+    if spec.pp.is_none() {
+        respond(
+            w,
+            400,
+            &error_json(
+                "bad-request",
+                "replan is a pipeline operation; the spec needs a \
+                 \"pp\" object",
+            ),
+        );
+        return;
+    }
+    let Some(reg) = state.service.cache().registry() else {
+        respond(
+            w,
+            500,
+            &error_json("no-registry", "daemon has no registry tier"),
+        );
+        return;
+    };
+    let Some(bytes) = reg.load(&from, KIND_PIPELINE) else {
+        respond(
+            w,
+            404,
+            &error_json(
+                "not-found",
+                &format!("no pipeline solution registered under {from}"),
+            ),
+        );
+        return;
+    };
+    let prev = match std::str::from_utf8(&bytes)
+        .map_err(|_| anyhow!("artifact is not UTF-8"))
+        .and_then(|t| {
+            Json::parse(t).map_err(|e| anyhow!("parse: {e}"))
+        })
+        .and_then(|v| PipelineSolution::from_json(&v))
+    {
+        Ok(p) => p,
+        Err(e) => {
+            respond(
+                w,
+                500,
+                &error_json(
+                    "bad-artifact",
+                    &format!("loading {from}: {e}"),
+                ),
+            );
+            return;
+        }
+    };
+    let tenant = tenant_of(req, Some(&spec));
+    let permit = match state.admission.enter(&tenant) {
+        Ok(p) => p,
+        Err(rej) => {
+            respond(
+                w,
+                429,
+                &error_json(
+                    "over-capacity",
+                    &format!(
+                        "tenant '{}' has {} plan(s) in flight and {} \
+                         queued; retry later",
+                        rej.tenant, rej.inflight, rej.queued
+                    ),
+                ),
+            );
+            return;
+        }
+    };
+    let cells = state.service.cell_store();
+    let seeded = cells.seed_solution(&prev);
+    let (reused0, recompiled0) = (cells.reused(), cells.recompiled());
+    let channel = spec.job.as_deref().map(|id| state.jobs.register(id));
+    let guard = channel.as_ref().map(install_job_hub);
+    let result = spec.resolve().and_then(|mut plan_req| {
+        // a replanned job keeps the original budget unless the spec
+        // overrides it: cell fingerprints include the budget, so a
+        // different default would silently force a full recompile
+        if spec.budget_gb.is_none() && prev.budget > 0.0 {
+            plan_req.opts.budget = Some(prev.budget);
+        }
+        state.service.plan(&plan_req)
+    });
+    drop(guard);
+    if let Some(ch) = &channel {
+        ch.finish();
+    }
+    drop(permit);
+    match result {
+        Ok(out) => respond(
+            w,
+            200,
+            &obj(vec![
+                ("fingerprint", s(&out.fingerprint)),
+                ("source", s(out.source.name())),
+                ("kind", s(out.artifact.kind())),
+                ("wall_ms", num(out.wall_ms)),
+                ("cells_seeded", num(seeded as f64)),
+                (
+                    "cells_reused",
+                    num((cells.reused() - reused0) as f64),
+                ),
+                (
+                    "cells_recompiled",
+                    num((cells.recompiled() - recompiled0) as f64),
+                ),
+                ("artifact", out.artifact.to_json()),
+            ]),
+        ),
         Err(e) => respond(
             w,
             500,

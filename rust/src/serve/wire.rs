@@ -30,12 +30,31 @@ pub fn model_for(name: &str) -> Result<Gpt2Cfg> {
     })
 }
 
-/// Resolve a cluster name (`fig5|single|nvlink<N>|multinode<NxM>`).
+/// Resolve a cluster name (`fig5|single|nvlink<N>|multinode<NxM>`, plus
+/// the elastic/heterogeneous fig5 scenarios `fig5-prefix<N>`,
+/// `fig5-drop<I>`, `fig5-grow`, `fig5-degraded`, `fig5-mixed` used by
+/// `automap replan` and the replan bench).
 pub fn cluster_for(name: &str) -> Result<SimCluster> {
     if name == "fig5" {
         Ok(SimCluster::partially_connected_8gpu())
     } else if name == "single" {
         Ok(SimCluster::single())
+    } else if name == "fig5-grow" {
+        Ok(SimCluster::fig5_grow())
+    } else if name == "fig5-degraded" {
+        Ok(SimCluster::fig5_degraded())
+    } else if name == "fig5-mixed" {
+        Ok(SimCluster::fig5_mixed())
+    } else if let Some(n) = name.strip_prefix("fig5-prefix") {
+        let n = n
+            .parse()
+            .map_err(|_| anyhow!("fig5-prefix<N> wants an integer, got {n}"))?;
+        Ok(SimCluster::fig5_prefix(n))
+    } else if let Some(i) = name.strip_prefix("fig5-drop") {
+        let i = i
+            .parse()
+            .map_err(|_| anyhow!("fig5-drop<I> wants a device id, got {i}"))?;
+        Ok(SimCluster::fig5_drop(i))
     } else if let Some(n) = name.strip_prefix("nvlink") {
         let n = n
             .parse()
@@ -52,7 +71,9 @@ pub fn cluster_for(name: &str) -> Result<SimCluster> {
         ))
     } else {
         Err(anyhow!(
-            "unknown cluster {name} (fig5|single|nvlink<N>|multinode<NxM>)"
+            "unknown cluster {name} (fig5|fig5-prefix<N>|fig5-drop<I>|\
+             fig5-grow|fig5-degraded|fig5-mixed|single|nvlink<N>|\
+             multinode<NxM>)"
         ))
     }
 }
@@ -261,6 +282,8 @@ pub fn stats_json(st: &CacheStats) -> Json {
         ("evictions", num(st.evictions as f64)),
         ("sgraph_builds", num(st.sgraph_builds as f64)),
         ("sgraph_reuses", num(st.sgraph_reuses as f64)),
+        ("cell_reuses", num(st.cell_reuses as f64)),
+        ("cell_recompiles", num(st.cell_recompiles as f64)),
         ("registry_artifacts", num(st.registry_artifacts as f64)),
         ("registry_bytes", num(st.registry_bytes as f64)),
         (
@@ -303,6 +326,17 @@ mod tests {
         let a = PlanService::fingerprint(&spec.resolve().unwrap());
         let b = PlanService::fingerprint(&spec.resolve().unwrap());
         assert_eq!(a, b, "spec resolution must be deterministic");
+    }
+
+    #[test]
+    fn elastic_cluster_names_resolve() {
+        assert_eq!(cluster_for("fig5-drop7").unwrap().n, 7);
+        assert_eq!(cluster_for("fig5-prefix4").unwrap().n, 4);
+        assert_eq!(cluster_for("fig5-grow").unwrap().n, 10);
+        let deg = cluster_for("fig5-degraded").unwrap();
+        assert_eq!(deg.compute_scale[7], 0.5);
+        assert!(cluster_for("fig5-mixed").is_ok());
+        assert!(cluster_for("fig5-dropX").is_err());
     }
 
     #[test]

@@ -30,6 +30,20 @@ impl DeviceModel {
         }
     }
 
+    /// This device derated to `scale`× the reference class: peak FLOPs
+    /// and HBM bandwidth shrink together (older generations are slower
+    /// on both rooflines), capacity and launch overhead stay put. Used
+    /// to price a stage pinned to a slower device class in a
+    /// mixed-generation cluster.
+    pub fn scaled(&self, scale: f64) -> DeviceModel {
+        assert!(scale > 0.0 && scale.is_finite(), "bad scale {scale}");
+        DeviceModel {
+            peak_flops: self.peak_flops * scale,
+            hbm_bw: self.hbm_bw * scale,
+            ..*self
+        }
+    }
+
     /// Roofline time for a kernel doing `flops` work over `bytes` of
     /// traffic: max(compute-bound, memory-bound) + launch overhead.
     pub fn kernel_time(&self, flops: f64, bytes: f64, is_gemm: bool) -> f64 {
@@ -69,5 +83,21 @@ mod tests {
     fn overhead_floors_tiny_kernels() {
         let d = DeviceModel::a100_80gb();
         assert!(d.kernel_time(1.0, 1.0, false) >= 6e-6);
+    }
+
+    #[test]
+    fn scaled_derates_both_rooflines_but_not_memory() {
+        let d = DeviceModel::a100_80gb();
+        let half = d.scaled(0.5);
+        assert_eq!(half.peak_flops, d.peak_flops * 0.5);
+        assert_eq!(half.hbm_bw, d.hbm_bw * 0.5);
+        assert_eq!(half.memory, d.memory);
+        assert_eq!(d.scaled(1.0).peak_flops, d.peak_flops);
+        let big = 2.0 * 4096f64.powi(3);
+        let bytes = 3.0 * 4096.0 * 4096.0 * 2.0;
+        assert!(
+            half.kernel_time(big, bytes, true)
+                > 1.9 * d.kernel_time(big, bytes, true)
+        );
     }
 }

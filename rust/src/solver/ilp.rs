@@ -69,6 +69,11 @@ pub struct IlpReport {
     pub engaged: bool,
     /// Branch-and-bound nodes explored.
     pub nodes: usize,
+    /// Relative optimality gap `(incumbent − best bound)/|incumbent|`,
+    /// measured on the reduced encoding's objective. `Some(0.0)` when
+    /// branch-and-bound closed the gap, `None` when no bound is
+    /// available (pass-through, or a limit hit before any incumbent).
+    pub gap: Option<f64>,
 }
 
 /// Solve Eq. (1) exactly (budget permitting). Mirrors
@@ -101,6 +106,7 @@ pub fn solve_ilp_detailed(
             proven_optimal: true,
             engaged: true,
             nodes: 0,
+            gap: Some(0.0),
         };
     }
     if sg.min_mem().iter().sum::<f64>() > budget {
@@ -109,6 +115,7 @@ pub fn solve_ilp_detailed(
             proven_optimal: true,
             engaged: true,
             nodes: 0,
+            gap: Some(0.0),
         };
     }
     let pass_through = |warm: Option<&Solution>| IlpReport {
@@ -116,6 +123,7 @@ pub fn solve_ilp_detailed(
         proven_optimal: false,
         engaged: false,
         nodes: 0,
+        gap: None,
     };
 
     let n = sg.len();
@@ -318,11 +326,26 @@ pub fn solve_ilp_detailed(
                 }
                 _ => sol,
             };
+            // relative gap on the scaled reduced objective — scale and
+            // folded constants cancel out of "proved optimal" but keep
+            // the partial-proof number an approximation of the true gap
+            let gap = if r.status == MilpStatus::Optimal {
+                Some(0.0)
+            } else if r.bound.is_finite() {
+                Some(
+                    ((r.objective - r.bound)
+                        / r.objective.abs().max(1e-12))
+                    .max(0.0),
+                )
+            } else {
+                None
+            };
             IlpReport {
                 solution: Some(sol),
                 proven_optimal: r.status == MilpStatus::Optimal,
                 engaged: true,
                 nodes: r.nodes,
+                gap,
             }
         }
         MilpStatus::TooLarge => pass_through(warm),
@@ -334,6 +357,7 @@ pub fn solve_ilp_detailed(
             proven_optimal: false,
             engaged: true,
             nodes: r.nodes,
+            gap: None,
         },
     }
 }
@@ -377,6 +401,7 @@ mod tests {
         );
         assert!(r.engaged, "small graph must not be refused");
         assert!(r.proven_optimal, "small graph must be solved to proof");
+        assert_eq!(r.gap, Some(0.0), "proof means a closed gap");
         let sol = r.solution.unwrap();
         assert!(
             (sol.time - exact.time).abs() <= 1e-9 * (1.0 + exact.time),
@@ -448,6 +473,7 @@ mod tests {
         );
         assert!(!r.engaged);
         assert!(!r.proven_optimal);
+        assert_eq!(r.gap, None, "pass-through carries no bound");
         let sol = r.solution.unwrap();
         assert_eq!(sol.choice, warm.choice);
     }

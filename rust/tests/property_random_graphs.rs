@@ -9,7 +9,10 @@
 //!   * the exact ILP backend never costs more than beam, its plans pass
 //!     the sim oracle, and on tiny graphs it matches exhaustive search.
 
-use automap::api::{Artifact, BackendSpec, PlanOpts, Planner, PpOpts};
+use std::sync::Arc;
+
+use automap::api::{Artifact, BackendSpec, CellStore, PlanOpts, Planner,
+                   PpOpts};
 use automap::ckpt::{build_stages, common_nodes, linearize, RotorSolver};
 use automap::cluster::{DeviceMesh, SimCluster};
 use automap::graph::models::mlp;
@@ -503,6 +506,102 @@ fn property_random_graphs_have_finite_losses() {
                 .map_err(|e| format!("{e}"))?[0];
             if !loss.is_finite() || loss < 0.0 {
                 return Err(format!("bad loss {loss}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_replan_is_byte_stable_and_verifies_after_shrink() {
+    // elastic replanning invariants over random graphs: (a) a warm
+    // cell store replans an *unchanged* cluster byte-identically to
+    // the cold solve without recompiling a single cell; (b) a replan
+    // on the cluster minus its last device reuses surviving cells, and
+    // the replanned solution still validates, replays, and respects
+    // its own memory accounting
+    forall_res(
+        0xCE11,
+        4,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let g = random_graph(&mut rng);
+            // a 2-stage pipeline needs at least two linearized groups
+            if linearize(&g, &common_nodes(&g)).len() < 2 {
+                return Ok(());
+            }
+            let dev = DeviceModel::a100_80gb();
+            let cluster = SimCluster::fig5_prefix(4);
+            let mut opts = PlanOpts {
+                sweep: 2,
+                solve: SolveOpts {
+                    beam_width: 8,
+                    anneal_iters: 60,
+                    lagrange_iters: 3,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            opts.pp = Some(PpOpts {
+                min_stages: 2,
+                max_stages: 2,
+                microbatches: vec![2],
+                ..Default::default()
+            });
+            let cells = Arc::new(CellStore::default());
+            let run = |cl: &SimCluster| {
+                let mut p = Planner::new(&g, cl, &dev)
+                    .with_opts(opts.clone())
+                    .with_cell_store(Arc::clone(&cells));
+                p.solve_pipeline().map(|s| s.clone())
+            };
+            let cold =
+                run(&cluster).map_err(|e| format!("cold: {e}"))?;
+            let after_cold = cells.recompiled();
+            if after_cold == 0 {
+                return Err("cold solve compiled no cells".into());
+            }
+            let warm =
+                run(&cluster).map_err(|e| format!("warm: {e}"))?;
+            if cells.recompiled() != after_cold {
+                return Err(
+                    "unchanged cluster recompiled cells".into()
+                );
+            }
+            if cold.to_json().to_string()
+                != warm.to_json().to_string()
+            {
+                return Err(
+                    "warm replan diverged byte-wise from cold".into()
+                );
+            }
+            // lose the last device: ids don't renumber, so surviving
+            // device ranges must rehit their cached cells
+            let shrunk = cluster.without_device(3);
+            let r0 = cells.reused();
+            let re =
+                run(&shrunk).map_err(|e| format!("replan: {e}"))?;
+            if cells.reused() == r0 {
+                return Err("shrunk replan reused no cells".into());
+            }
+            re.validate().map_err(|e| format!("validate: {e}"))?;
+            let (_, trace) = re
+                .verify_against(&g, &dev)
+                .map_err(|e| format!("verify: {e}"))?;
+            if !trace.step_time.is_finite() || trace.step_time <= 0.0 {
+                return Err(format!(
+                    "replanned step time {} is not usable",
+                    trace.step_time
+                ));
+            }
+            if re.budget > 0.0
+                && re.max_stage_mem > re.budget * (1.0 + 1e-9)
+            {
+                return Err(format!(
+                    "replanned peak {} over budget {}",
+                    re.max_stage_mem, re.budget
+                ));
             }
             Ok(())
         },

@@ -191,6 +191,45 @@ fn pipeline_artifacts_cache_hit_end_to_end() {
 }
 
 #[test]
+fn replan_reuses_cells_after_losing_a_device() {
+    let dir = scratch("replan");
+    let handle = start(&dir);
+    let client = Client::new(handle.addr());
+    let mut spec = mini_spec();
+    spec.cluster = "fig5-prefix4".into();
+    spec.pp = Some(automap::api::PpOpts {
+        min_stages: 2,
+        max_stages: 2,
+        ..Default::default()
+    });
+    let cold = client.plan(&spec).unwrap();
+    assert_eq!(cold.kind, "pipeline");
+
+    // one device lost: replan on the shrunk cluster, seeded from the
+    // registered solution (fig5-prefix3 == fig5-prefix4 minus its last
+    // device, so every [0, k) device range keeps its cell fingerprint)
+    let mut shrunk = spec.clone();
+    shrunk.cluster = "fig5-prefix3".into();
+    let re = client.replan(&shrunk, &cold.fingerprint).unwrap();
+    assert_eq!(re.outcome.kind, "pipeline");
+    assert_ne!(re.outcome.fingerprint, cold.fingerprint);
+    assert!(re.cells_seeded > 0, "seeded {}", re.cells_seeded);
+    assert!(
+        re.cells_reused > 0,
+        "surviving device ranges must rehit their cells \
+         (reused {}, recompiled {})",
+        re.cells_reused,
+        re.cells_recompiled
+    );
+
+    // unknown source fingerprint is a structured 404
+    let err =
+        client.replan(&shrunk, "0000000000000000").unwrap_err();
+    assert!(err.to_string().contains("not-found"), "{err}");
+    handle.stop();
+}
+
+#[test]
 fn batch_endpoint_reports_per_entry_outcomes() {
     let dir = scratch("batch");
     let handle = start(&dir);
