@@ -9,10 +9,14 @@
 //!   (stage-subgraph, submesh) solver graph from a previous solve: the
 //!   steady-state cost of re-partitioning on a long-lived service, and
 //!   the direct measure of what the store-sharing buys the cell fan-out.
-//! * **pipeline vs single-stage** — the chosen pipeline's simulated 1F1B
+//! * **pipeline vs single-stage** — the chosen pipeline's simulated
 //!   step next to the best single-stage plan's replayed step on the same
 //!   cluster (the scenario-diversity claim in numbers; on clusters where
 //!   intra-op is comm-bound the pipeline column should win).
+//! * **schedule axis** — the auto-zoo winner's schedule, plus the
+//!   replayed step under forced `1f1b` and forced `interleaved:2` at
+//!   the same stage range, so the interleaving win (or loss) is visible
+//!   per cluster.
 //!
 //! Results print as a table and land in `BENCH_pp.json` at the repo
 //! root. `cargo bench --bench pp_plan [-- --quick]`
@@ -20,7 +24,7 @@
 use std::sync::Arc;
 
 use automap::api::{PipelineSolution, PlanOpts, Planner, PpOpts,
-                   SolverGraphStore};
+                   Schedule, SolverGraphStore};
 use automap::cluster::SimCluster;
 use automap::graph::models::{gpt2, Gpt2Cfg};
 use automap::graph::Graph;
@@ -47,12 +51,14 @@ fn solve_pp(
     cluster: &SimCluster,
     dev: &DeviceModel,
     store: &Arc<SolverGraphStore>,
+    schedule: &[Schedule],
 ) -> PipelineSolution {
     let mut opts = fast_opts();
     opts.pp = Some(PpOpts {
         min_stages: 2,
         max_stages: 2,
         microbatches: vec![2, 4, 8],
+        schedule: schedule.to_vec(),
         ..Default::default()
     });
     let mut p = Planner::new(g, cluster, dev)
@@ -71,7 +77,8 @@ fn main() {
     let mut table = Table::new(
         "pp plan: cold vs warm-store two-level solve, pipeline vs \
          single-stage step",
-        &["cluster", "stages", "B", "cold ms", "warm ms", "pp step ms",
+        &["cluster", "stages", "B", "schedule", "cold ms", "warm ms",
+          "pp step ms", "1f1b step ms", "il2 step ms",
           "1-stage step ms"],
     );
     let mut rows: Vec<Json> = Vec::new();
@@ -87,15 +94,23 @@ fn main() {
             plan.replay_sim(&g, &dev).expect("replay").step_time
         };
 
+        let zoo = [Schedule::OneF1B, Schedule::Interleaved { v: 2 }];
         let warm_store = Arc::new(SolverGraphStore::new());
-        let sol = solve_pp(&g, &cluster, &dev, &warm_store); // warms it
+        let sol = solve_pp(&g, &cluster, &dev, &warm_store, &zoo); // warms
+
+        // forced schedules on the warmed store: the per-schedule step
+        // times the auto zoo chose between
+        let step_1f1b =
+            solve_pp(&g, &cluster, &dev, &warm_store, &zoo[..1]).iter_time;
+        let step_il2 =
+            solve_pp(&g, &cluster, &dev, &warm_store, &zoo[1..]).iter_time;
 
         let cold = bench(&format!("cold pp solve fig5-{n}"), 0, iters, || {
             let store = Arc::new(SolverGraphStore::new());
-            solve_pp(&g, &cluster, &dev, &store).iter_time
+            solve_pp(&g, &cluster, &dev, &store, &zoo).iter_time
         });
         let warm = bench(&format!("warm pp solve fig5-{n}"), 0, iters, || {
-            solve_pp(&g, &cluster, &dev, &warm_store).iter_time
+            solve_pp(&g, &cluster, &dev, &warm_store, &zoo).iter_time
         });
 
         let cold_ms = cold.median_ns / 1e6;
@@ -104,15 +119,21 @@ fn main() {
             format!("fig5-{n}"),
             sol.stages.len().to_string(),
             sol.microbatches.to_string(),
+            sol.schedule.name(),
             format!("{cold_ms:.1}"),
             format!("{warm_ms:.1}"),
             format!("{:.3}", sol.iter_time * 1e3),
+            format!("{:.3}", step_1f1b * 1e3),
+            format!("{:.3}", step_il2 * 1e3),
             format!("{:.3}", single_step * 1e3),
         ]);
         rows.push(obj(vec![
             ("cluster", s(&format!("fig5-{n}"))),
             ("stages", num(sol.stages.len() as f64)),
             ("microbatches", num(sol.microbatches as f64)),
+            ("schedule", s(&sol.schedule.name())),
+            ("step_1f1b_ms", num(step_1f1b * 1e3)),
+            ("step_interleaved2_ms", num(step_il2 * 1e3)),
             ("cold_solve_ms", num(cold_ms)),
             ("warm_solve_ms", num(warm_ms)),
             ("warm_over_cold", num(warm_ms / cold_ms.max(1e-9))),

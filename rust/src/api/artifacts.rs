@@ -974,10 +974,11 @@ impl PipelineStagePlan {
 
 /// The inter-op planning artifact: stage cuts over cluster slices, a
 /// nested intra-op `CompiledPlan` per stage, the chosen microbatch
-/// count, and the simulated 1F1B step time. Kind `pipeline-solution`.
+/// count and schedule, and the simulated step time. Kind
+/// `pipeline-solution`.
 ///
-/// Self-contained for replay: [`replay_1f1b`](Self::replay_1f1b) needs
-/// no model graph. Binding a model back
+/// Self-contained for replay: [`replay`](Self::replay) needs no model
+/// graph. Binding a model back
 /// ([`verify_against`](Self::verify_against)) re-derives the stage
 /// subgraphs from the recorded spans and replays every stage's intra-op
 /// schedule tick-by-tick as well.
@@ -989,10 +990,16 @@ pub struct PipelineSolution {
     /// Length of the linearized group chain the spans index into.
     pub n_groups: usize,
     pub microbatches: usize,
+    /// Pipeline schedule the solution replays under. Omitted from the
+    /// JSON when `OneF1B` and tolerated absent on load, so
+    /// pre-schedule artifacts stay readable (and forced-1F1B solves
+    /// stay byte-identical to theirs).
+    pub schedule: crate::sim::Schedule,
     /// Per-device memory budget every stage compiled under, bytes.
     pub budget: f64,
     pub stages: Vec<PipelineStagePlan>,
-    /// Simulated 1F1B step time (the replay's number, not a formula).
+    /// Simulated step time of the recorded schedule (the replay's
+    /// number, not a formula).
     pub iter_time: f64,
     /// The partitioner's closed-form latency estimate for the winner.
     pub predicted_time: f64,
@@ -1012,6 +1019,18 @@ impl PipelineSolution {
         }
         if self.microbatches == 0 {
             bail!("pipeline solution has zero microbatches");
+        }
+        if !self
+            .schedule
+            .feasible_for(self.stages.len(), self.microbatches)
+        {
+            bail!(
+                "schedule {} cannot drive {} stage(s) with {} \
+                 microbatch(es)",
+                self.schedule.name(),
+                self.stages.len(),
+                self.microbatches
+            );
         }
         let mut next_group = 0usize;
         let mut seen_devs: Vec<usize> = Vec::new();
@@ -1068,20 +1087,26 @@ impl PipelineSolution {
         Ok(())
     }
 
-    /// Replay the microbatched 1F1B schedule from the artifact alone
-    /// (per-stage device programs, P2P rendezvous, per-microbatch memory
-    /// ledger). `devices[s]` of the trace is stage `s`'s queue.
-    pub fn replay_1f1b(&self) -> Result<crate::sim::SimTrace> {
+    /// Replay the recorded microbatched pipeline schedule from the
+    /// artifact alone (per-stage device programs, P2P rendezvous,
+    /// per-microbatch memory ledger). `devices[s]` of the trace is
+    /// stage `s`'s queue.
+    pub fn replay(&self) -> Result<crate::sim::SimTrace> {
         let specs: Vec<_> =
             self.stages.iter().map(|s| s.spec()).collect();
-        crate::sim::pipeline::replay_1f1b(&specs, self.microbatches)
+        crate::sim::pipeline::replay_schedule(
+            &specs,
+            self.microbatches,
+            self.schedule,
+        )
     }
 
     /// Bind the artifact back to a model graph and verify the whole
     /// chain: re-derive the linearization, re-extract every stage's
     /// subgraph from its recorded span, replay each stage's intra-op
-    /// plan tick-by-tick (peaks returned per stage), then run the 1F1B
-    /// replay. Returns (per-stage intra-op peak memory, pipeline trace).
+    /// plan tick-by-tick (peaks returned per stage), then run the
+    /// recorded schedule's pipeline replay. Returns (per-stage
+    /// intra-op peak memory, pipeline trace).
     pub fn verify_against(
         &self,
         g: &crate::graph::Graph,
@@ -1124,7 +1149,7 @@ impl PipelineSolution {
             })?;
             peaks.push(trace.peak_mem);
         }
-        let trace = self.replay_1f1b()?;
+        let trace = self.replay()?;
         Ok((peaks, trace))
     }
 }
@@ -1161,7 +1186,7 @@ impl Artifact for PipelineSolution {
                 ])
             })
             .collect());
-        obj(vec![
+        let mut pairs = vec![
             ("kind", s(Self::KIND)),
             ("version", num(ARTIFACT_VERSION as f64)),
             ("backend", s(&self.backend)),
@@ -1174,7 +1199,14 @@ impl Artifact for PipelineSolution {
             ("predicted_time", jnum(self.predicted_time)),
             ("pflops", jnum(self.pflops)),
             ("max_stage_mem", jnum(self.max_stage_mem)),
-        ])
+        ];
+        // recorded only off-default, so forced-1F1B (and historical)
+        // artifacts keep their exact byte shape
+        let sched = self.schedule.name();
+        if self.schedule != crate::sim::Schedule::OneF1B {
+            pairs.push(("schedule", s(&sched)));
+        }
+        obj(pairs)
     }
 
     fn from_json(v: &Json) -> Result<Self> {
@@ -1236,6 +1268,11 @@ impl Artifact for PipelineSolution {
             graph_nodes: jusize(v.get("graph_nodes"), "graph_nodes")?,
             n_groups: jusize(v.get("n_groups"), "n_groups")?,
             microbatches: jusize(v.get("microbatches"), "microbatches")?,
+            // pre-schedule artifacts carry no schedule key: 1F1B
+            schedule: match v.get("schedule").as_str() {
+                Some(t) => crate::sim::Schedule::parse(t)?,
+                None => crate::sim::Schedule::OneF1B,
+            },
             budget: jf(v.get("budget"), "budget")?,
             stages,
             iter_time: jf(v.get("iter_time"), "iter_time")?,

@@ -75,7 +75,7 @@ pub use self::artifacts::{Artifact, CkptSchedule, ClusterReport,
                           CompiledPlan, MeshCandidates, PipelineSolution,
                           PipelineStagePlan, ShardingCandidate,
                           ShardingSolution, ARTIFACT_VERSION};
-pub use crate::pp::PpOpts;
+pub use crate::pp::{PpOpts, Schedule};
 pub use self::cache::{CacheStats, DiskEntry, PlanArtifact, PlanCache,
                       PlanSource};
 pub use self::cells::{cell_fingerprint, CellStore, StoredCell};

@@ -122,13 +122,15 @@ pub enum ProgressEvent {
         devices: (usize, usize),
         ms: f64,
     },
-    /// The inter-op DP picked its winner and the 1F1B replay confirmed
-    /// it: `predicted` is the DP's closed-form latency estimate,
-    /// `simulated` the microbatched replay's step time (the number the
-    /// artifact records).
+    /// The inter-op DP picked its winner and the schedule replay
+    /// confirmed it: `schedule` is the winning schedule's canonical
+    /// name (`1f1b`, `interleaved:<v>`), `predicted` the DP's
+    /// closed-form latency estimate, `simulated` the microbatched
+    /// replay's step time (the number the artifact records).
     PipelineChosen {
         stages: usize,
         microbatches: usize,
+        schedule: String,
         predicted: f64,
         simulated: f64,
     },
@@ -266,11 +268,13 @@ impl ProgressEvent {
             ProgressEvent::PipelineChosen {
                 stages,
                 microbatches,
+                schedule,
                 predicted,
                 simulated,
             } => {
                 pairs.push(("stages", num(*stages as f64)));
                 pairs.push(("microbatches", num(*microbatches as f64)));
+                pairs.push(("schedule", s(schedule)));
                 pairs.push(("predicted", num(*predicted)));
                 pairs.push(("simulated", num(*simulated)));
             }

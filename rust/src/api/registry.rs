@@ -359,11 +359,28 @@ impl PlanRegistry {
     /// entries in eviction order.
     pub fn gc(&self, max_bytes: u64) -> Result<Vec<RegistryEntry>> {
         let victims: Vec<RegistryEntry> = {
+            // One lock acquisition for both the byte total and the
+            // candidate list. Re-reading via `entries()` after dropping
+            // the lock let a racing `store` slip artifacts into the
+            // sort that the stale total never counted (or vice versa),
+            // so gc could evict too much or stop short of the budget.
             let st = self.state.lock().unwrap();
             let mut total: u64 =
                 st.entries.values().map(|(b, _, _)| *b).sum();
+            let mut order: Vec<RegistryEntry> = st
+                .entries
+                .iter()
+                .map(|((fp, kind), (bytes, last_used, solve_ms))| {
+                    RegistryEntry {
+                        fingerprint: fp.clone(),
+                        kind,
+                        bytes: *bytes,
+                        last_used: *last_used,
+                        solve_ms: *solve_ms,
+                    }
+                })
+                .collect();
             drop(st);
-            let mut order = self.entries();
             order.sort_by(|a, b| {
                 match (a.gc_score(), b.gc_score()) {
                     (None, Some(_)) => std::cmp::Ordering::Less,
@@ -550,6 +567,45 @@ mod tests {
         assert_eq!(evicted.len(), 1);
         assert_eq!(evicted[0].fingerprint, "fast");
         assert!(r.contains("slow", KIND_PLAN));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_races_with_concurrent_stores() {
+        use std::sync::Arc;
+        let dir = scratch("gc_race");
+        let r = Arc::new(PlanRegistry::open(&dir).unwrap());
+        for i in 0..16 {
+            r.store(&format!("old{i:02}"), KIND_PLAN, &[b'x'; 100])
+                .unwrap();
+        }
+        let writer = {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || {
+                for i in 0..16 {
+                    r.store(&format!("new{i:02}"), KIND_PLAN, &[b'y'; 100])
+                        .unwrap();
+                }
+            })
+        };
+        // sweeps racing the writer: each must see a self-consistent
+        // (byte total, candidate list) snapshot, or the sort runs
+        // against a stale total and evicts past / short of the budget
+        for _ in 0..8 {
+            r.gc(400).unwrap();
+        }
+        writer.join().unwrap();
+        // quiescent sweep: the index, the byte total and the files on
+        // disk must all agree afterwards
+        r.gc(400).unwrap();
+        let entries = r.entries();
+        let total: u64 = entries.iter().map(|e| e.bytes).sum();
+        assert!(total <= 400, "gc left {total} bytes over budget");
+        assert_eq!(r.stats().bytes, total);
+        for e in &entries {
+            assert!(r.contains(&e.fingerprint, e.kind));
+            assert!(r.load(&e.fingerprint, e.kind).is_some());
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

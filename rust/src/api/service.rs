@@ -375,8 +375,11 @@ impl PlanService {
     /// hashes each request's graph exactly once and reuses the digest
     /// for the planner's store key).
     fn fingerprint_with(req: &PlanRequest, graph_fp: &str) -> String {
+        // v4: pipeline requests hash their schedule candidates, so a
+        // registry warmed before the schedule zoo never serves a plan
+        // solved without the interleaved axis
         let mut h = StableHasher::new();
-        h.write_str("automap-plan-request-v3");
+        h.write_str("automap-plan-request-v4");
         // model: node structure + tensor metadata decide the search space
         // (the same digest keys the shared SolverGraphStore)
         h.write_str(graph_fp);
@@ -413,6 +416,11 @@ impl PlanService {
                 h.write_usize(mb.len());
                 for b in mb {
                     h.write_usize(b);
+                }
+                let sch = pp.schedule_candidates();
+                h.write_usize(sch.len());
+                for sc in sch {
+                    h.write_str(&sc.name());
                 }
             }
         }
@@ -840,6 +848,21 @@ mod tests {
         assert_ne!(a, PlanService::fingerprint(&d));
         let e = mini_request(2).with_backend(BackendSpec::Exact);
         assert_ne!(a, PlanService::fingerprint(&e));
+        // pipeline requests hash their schedule candidates (the v4 bump)
+        let mut f = mini_request(2);
+        f.opts.pp = Some(crate::pp::PpOpts::default());
+        let f_fp = PlanService::fingerprint(&f);
+        assert_ne!(a, f_fp, "pp options must change the key");
+        let mut g = mini_request(2);
+        g.opts.pp = Some(crate::pp::PpOpts {
+            schedule: vec![crate::pp::Schedule::OneF1B],
+            ..Default::default()
+        });
+        assert_ne!(
+            f_fp,
+            PlanService::fingerprint(&g),
+            "schedule candidates must change the key"
+        );
     }
 
     #[test]

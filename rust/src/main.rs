@@ -12,7 +12,8 @@
 //!             [--json] [--save-plan p.json] [--load-plan p.json]
 //!             [--cache-dir DIR] [--remote host:port]
 //!             [--pp [--max-stages K] [--min-stages K]
-//!              [--microbatches 1,2,4,8]] :
+//!              [--microbatches 1,2,4,8]
+//!              [--schedule auto|1f1b|interleaved:<v>[,..]]] :
 //!             plan through the service and print the result. --cache-dir
 //!             persists plans on disk (repeat runs are cache hits);
 //!             --save-plan copies the CompiledPlan artifact; --load-plan
@@ -27,12 +28,19 @@
 //!             beam's); --ilp-time-budget caps its solve time, shorthand
 //!             for --backend ilp:<ms>.
 //!             --pp runs the two-level inter-op planner instead: stage
-//!             cuts × submesh slices × microbatch count minimizing 1F1B
-//!             latency, each stage solved by the intra-op pipeline with
-//!             the selected --backend (analytic baselines like ddp are
-//!             rejected — stage compiles need a real solver); the
-//!             result is a PipelineSolution artifact whose recorded step
-//!             time is the microbatched 1F1B replay's. --load-plan
+//!             cuts × submesh slices × microbatch count × schedule
+//!             minimizing pipeline latency, each stage solved by the
+//!             intra-op pipeline with the selected --backend (analytic
+//!             baselines like ddp are rejected — stage compiles need a
+//!             real solver); the result is a PipelineSolution artifact
+//!             whose recorded step time is the winning schedule's
+//!             microbatched replay. --schedule picks the candidate
+//!             schedules: "auto" (default) races classic 1f1b against
+//!             interleaved:2 (Megatron's virtual-stage schedule, ~v×
+//!             smaller bubble for v× boundary P2P; needs a microbatch
+//!             count divisible by the stage count), a comma list forces
+//!             specific candidates, and --schedule 1f1b reproduces
+//!             pre-schedule-zoo plans byte for byte. --load-plan
 //!             detects the artifact kind, so saved pipeline plans reload
 //!             the same way compiled plans do. Pipeline plans go through
 //!             the service like intra-op plans: --cache-dir (and the
@@ -44,7 +52,8 @@
 //!             artifact prints/saves exactly like a local plan.
 //!   replan    --from pipeline.json --cluster C [--model M]
 //!             [--budget-gb G] [--fast] [--backend B] [--max-stages K]
-//!             [--min-stages K] [--microbatches 1,2,4] [--cache-dir DIR]
+//!             [--min-stages K] [--microbatches 1,2,4] [--schedule ..]
+//!             [--cache-dir DIR]
 //!             [--save-plan out.json] [--progress] [--json] :
 //!             warm re-plan of a saved PipelineSolution against a changed
 //!             cluster (elastic shrink/grow, degraded or mixed-generation
@@ -73,10 +82,11 @@
 //!             despite being healthy). --save-trace writes the SimTrace
 //!             artifact; --json prints it on stdout.
 //!             PipelineSolution artifacts are detected by kind and get
-//!             the pipeline treatment: structural validation, the 1F1B
-//!             replay (P2P deadlock / per-stage budget checks), and —
-//!             when --model/--manifest binds a model — a per-stage
-//!             intra-op replay of every nested stage plan against its
+//!             the pipeline treatment: structural validation, the
+//!             recorded schedule's replay (1f1b or interleaved; P2P
+//!             deadlock / per-stage budget checks), and — when
+//!             --model/--manifest binds a model — a per-stage intra-op
+//!             replay of every nested stage plan against its
 //!             re-extracted subgraph.
 //!   batch     <manifest.json> [--cache-dir DIR] [--out-dir DIR]
 //!             [--progress] [--json] : plan a JSON list of requests
@@ -139,7 +149,7 @@ use automap::api::{Artifact, BackendSpec, BaselineSolve, CellStore,
                    ClusterReport, CompiledPlan, MeshCandidates,
                    PipelineSolution, PlanArtifact, PlanOutcome,
                    PlanRegistry, PlanRequest, PlanService, Planner,
-                   PpOpts, ProgressEvent};
+                   PpOpts, ProgressEvent, Schedule};
 use automap::cluster::{detect, SimCluster};
 use automap::serve::wire::{cluster_for, model_for, stats_json};
 use automap::serve::{server, Client, PlanSpec, ServeConfig};
@@ -290,12 +300,14 @@ fn narrate(ev: &ProgressEvent) {
         ProgressEvent::PipelineChosen {
             stages,
             microbatches,
+            schedule,
             predicted,
             simulated,
         } => {
             eprintln!(
                 "[pp] chose {stages} stage(s) x {microbatches} \
-                 microbatch(es): predicted {:.3} ms, simulated {:.3} ms",
+                 microbatch(es) under {schedule}: predicted {:.3} ms, \
+                 simulated {:.3} ms",
                 predicted * 1e3,
                 simulated * 1e3
             );
@@ -394,6 +406,16 @@ fn pp_opts_from(args: &Args) -> Result<PpOpts> {
             })
             .collect::<Result<Vec<usize>>>()?;
     }
+    if let Some(sc) = args.get("schedule") {
+        // "auto" keeps the default zoo (1f1b + interleaved:2); anything
+        // else is a comma list of forced candidates
+        if sc.trim() != "auto" {
+            pp.schedule = sc
+                .split(',')
+                .map(Schedule::parse)
+                .collect::<Result<Vec<Schedule>>>()?;
+        }
+    }
     Ok(pp)
 }
 
@@ -406,6 +428,7 @@ fn print_pipeline(sol: &PipelineSolution, args: &Args) -> Result<()> {
     println!("backend        : {}", sol.backend);
     println!("stages         : {}", sol.stages.len());
     println!("microbatches   : {}", sol.microbatches);
+    println!("schedule       : {}", sol.schedule.name());
     println!(
         "sim step time  : {:.3} ms (predicted {:.3} ms)",
         sol.iter_time * 1e3,
@@ -545,6 +568,7 @@ fn cmd_replan(args: &Args) -> Result<()> {
             "usage: automap replan --from pipeline.json --cluster C \
              [--model M] [--budget-gb G] [--fast] [--backend B] \
              [--max-stages K] [--min-stages K] [--microbatches 1,2,4] \
+             [--schedule auto|1f1b|interleaved:<v>[,..]] \
              [--cache-dir DIR] [--save-plan out.json] [--progress] \
              [--json]"
         )
@@ -687,7 +711,7 @@ fn cmd_verify_pipeline(path: &str, args: &Args) -> Result<()> {
             .map_err(|e| anyhow!("verify FAILED: {path}: {e}"))?
     } else {
         let trace = sol
-            .replay_1f1b()
+            .replay()
             .map_err(|e| anyhow!("verify FAILED: {path}: {e}"))?;
         (Vec::new(), trace)
     };
@@ -709,9 +733,10 @@ fn cmd_verify_pipeline(path: &str, args: &Args) -> Result<()> {
         println!("== verify {path} ==");
         println!("backend          : {}", sol.backend);
         println!(
-            "pipeline         : {} stage(s) x {} microbatch(es)",
+            "pipeline         : {} stage(s) x {} microbatch(es), {}",
             sol.stages.len(),
-            sol.microbatches
+            sol.microbatches,
+            sol.schedule.name()
         );
         println!(
             "sim step time    : {:.3} ms (plan recorded {:.3} ms, \

@@ -14,10 +14,15 @@
 //! * **submesh slices** — contiguous device ranges of the probed
 //!   cluster ([`ClusterInfo::slice`](crate::cluster::ClusterInfo::slice)),
 //!   one per stage, assigned in order;
-//! * **microbatch count** — minimizing the 1F1B pipeline latency
-//!   `(Σ tₛ + (B−1)·max tₛ)/B + max gₛ`, where `tₛ` is the stage's
-//!   full-batch fwd+bwd time (checkpoint recomputation and boundary P2P
-//!   included) and `gₛ` its exposed gradient-sync tail.
+//! * **microbatch count and schedule** — jointly minimizing the
+//!   pipeline latency over candidate microbatch counts `B` and schedule
+//!   variants ([`Schedule`]): non-interleaved 1F1B scores as
+//!   `(Σ tₛ + (B−1)·max tₛ)/B + max gₛ`, interleaved-1F1B with `v`
+//!   virtual chunks per stage shrinks the bubble term to
+//!   `(B−1)·max tₛ/v` (at the price of v× boundary P2P, which the
+//!   replay — not the closed form — charges), where `tₛ` is the
+//!   stage's full-batch fwd+bwd time (checkpoint recomputation and
+//!   boundary P2P included) and `gₛ` its exposed gradient-sync tail.
 //!
 //! Every candidate (span, device range) cell runs the *existing* staged
 //! compiler — intra-op sweep, per-stage rotor checkpoint DP under the
@@ -29,15 +34,19 @@
 //! what gets recomputed.
 //!
 //! The winning cut is *simulated*, not just predicted: the microbatched
-//! 1F1B replay ([`sim::pipeline`](crate::sim::pipeline)) reruns the
+//! schedule replay ([`sim::pipeline`](crate::sim::pipeline)) reruns the
 //! chosen stages with P2P rendezvous between submeshes and a
 //! per-microbatch memory ledger, and the artifact records that simulated
-//! step time. A forced single-stage solve degenerates to exactly the
-//! staged planner's plan, byte for byte (property-tested).
+//! step time. Each schedule's closed-form champion is replayed and the
+//! final winner is picked on *replayed* step time, preferring plans
+//! whose simulated peak fits the per-device budget. A forced
+//! single-stage solve degenerates to exactly the staged planner's plan,
+//! byte for byte (property-tested).
 
 pub mod partition;
 pub mod subgraph;
 
+pub use crate::sim::Schedule;
 pub use partition::solve;
 pub use subgraph::{stage_subgraph, StageSubgraph};
 
@@ -56,6 +65,10 @@ pub struct PpOpts {
     /// of the range's device fraction. 1.0 = perfectly proportional
     /// cells only; larger admits more skew.
     pub balance: f64,
+    /// Candidate pipeline schedules the partitioner may choose from
+    /// (the default "auto" zoo tries non-interleaved 1F1B and
+    /// interleaved with two virtual chunks per stage).
+    pub schedule: Vec<Schedule>,
 }
 
 impl Default for PpOpts {
@@ -65,6 +78,8 @@ impl Default for PpOpts {
             max_stages: 4,
             min_stages: 1,
             balance: 4.0,
+            schedule: vec![Schedule::OneF1B,
+                           Schedule::Interleaved { v: 2 }],
         }
     }
 }
@@ -87,6 +102,19 @@ impl PpOpts {
         b.dedup();
         b
     }
+
+    /// Candidate schedules, sanitized: deduplicated, sorted with plain
+    /// 1F1B first then interleaved by ascending `v` (ties in replayed
+    /// latency resolve to the simpler schedule), never empty.
+    pub fn schedule_candidates(&self) -> Vec<Schedule> {
+        let mut s = self.schedule.clone();
+        if s.is_empty() {
+            s.push(Schedule::OneF1B);
+        }
+        s.sort_unstable();
+        s.dedup();
+        s
+    }
 }
 
 #[cfg(test)]
@@ -103,5 +131,33 @@ mod tests {
         let empty =
             PpOpts { microbatches: vec![0], ..Default::default() };
         assert_eq!(empty.microbatch_candidates(), vec![1]);
+    }
+
+    #[test]
+    fn schedule_candidates_are_sane() {
+        let o = PpOpts {
+            schedule: vec![
+                Schedule::Interleaved { v: 4 },
+                Schedule::OneF1B,
+                Schedule::Interleaved { v: 2 },
+                Schedule::OneF1B,
+            ],
+            ..Default::default()
+        };
+        assert_eq!(
+            o.schedule_candidates(),
+            vec![
+                Schedule::OneF1B,
+                Schedule::Interleaved { v: 2 },
+                Schedule::Interleaved { v: 4 },
+            ]
+        );
+        let empty = PpOpts { schedule: vec![], ..Default::default() };
+        assert_eq!(empty.schedule_candidates(), vec![Schedule::OneF1B]);
+        // the default zoo leads with plain 1F1B so ties go to it
+        assert_eq!(
+            PpOpts::default().schedule_candidates()[0],
+            Schedule::OneF1B
+        );
     }
 }

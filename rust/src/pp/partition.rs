@@ -1,7 +1,7 @@
 //! The inter-op dynamic program: cut the linearized group chain into
 //! stages over contiguous cluster slices, solve each candidate stage with
 //! the existing intra-op compiler, and pick the (cuts, submeshes,
-//! microbatch count) tuple minimizing 1F1B pipeline latency.
+//! microbatch count, schedule) tuple minimizing pipeline latency.
 //!
 //! Shape of the search (Alpa's two-level decomposition, adapted):
 //!
@@ -27,8 +27,13 @@
 //!    link model) is folded into the downstream stage's `t` at
 //!    composition time, when both sides of the cut are known.
 //! 3. **Selection.** Every completed frontier entry × microbatch count
-//!    is scored; the winner is *replayed* through the microbatched 1F1B
-//!    simulator and the artifact records the simulated step time.
+//!    × schedule candidate ([`Schedule`]) is scored with the schedule's
+//!    closed form (interleaving with `v` chunks divides the bubble term
+//!    by `v`); each schedule's champion is *replayed* through the
+//!    microbatched simulator, and the final winner is picked on
+//!    simulated step time — preferring plans whose simulated peak fits
+//!    the budget, with ties keeping the simpler schedule. The artifact
+//!    records the winning schedule and its simulated step time.
 //!
 //! Determinism: cells are enumerated into a `BTreeSet`, evaluated with
 //! the order-preserving `parallel_map`, and the DP iterates states and
@@ -48,8 +53,8 @@ use crate::ckpt::{build_stages, common_nodes, linearize};
 use crate::cluster::ClusterInfo;
 use crate::gen::stage_boundary_p2p;
 use crate::graph::Graph;
-use crate::sim::pipeline::{replay_1f1b, stage_phases};
-use crate::sim::DeviceModel;
+use crate::sim::pipeline::{replay_schedule, stage_phases, Schedule};
+use crate::sim::{DeviceModel, SimTrace};
 use crate::util::pool::parallel_map;
 
 use super::{stage_subgraph, PpOpts, StageSubgraph};
@@ -518,95 +523,171 @@ pub fn solve(
     }
 
     // -- selection --------------------------------------------------------
+    // Each schedule candidate scores every completed entry × microbatch
+    // count with its own closed-form latency — interleaving with `v`
+    // chunks divides the bubble term by `v`, but needs B divisible by
+    // the entry's stage count — and fields one champion.
     let micro = pp.microbatch_candidates();
-    let mut best: Option<(f64, usize, usize)> = None; // (lat, B, entry)
-    for &ei in &done {
-        let e = &arena[ei];
-        for &b in &micro {
-            let lat =
-                (e.sum + (b as f64 - 1.0) * e.mx) / b as f64 + e.mg;
-            if best.map(|(bl, _, _)| lat < bl).unwrap_or(true) {
-                best = Some((lat, b, ei));
+    let scheds = pp.schedule_candidates();
+    let mut champs: Vec<(f64, usize, usize, Schedule)> = Vec::new();
+    for &sched in &scheds {
+        let v = sched.v() as f64;
+        let mut best: Option<(f64, usize, usize)> = None;
+        for &ei in &done {
+            let e = &arena[ei];
+            for &b in &micro {
+                if !sched.feasible_for(e.stages, b) {
+                    continue;
+                }
+                let lat = (e.sum + (b as f64 - 1.0) * e.mx / v)
+                    / b as f64
+                    + e.mg;
+                if best.map(|(bl, _, _)| lat < bl).unwrap_or(true) {
+                    best = Some((lat, b, ei));
+                }
             }
         }
-    }
-    let (predicted, microbatches, mut ei) =
-        best.ok_or_else(|| anyhow!("empty microbatch candidate list"))?;
-
-    let mut chain: Vec<usize> = Vec::new();
-    loop {
-        chain.push(ei);
-        match arena[ei].prev {
-            Some(p) => ei = p,
-            None => break,
+        if let Some((lat, b, ei)) = best {
+            champs.push((lat, b, ei, sched));
         }
     }
-    chain.reverse();
-    let s_total = chain.len();
-
-    let mut stages_out: Vec<PipelineStagePlan> = Vec::new();
-    for (s, &aei) in chain.iter().enumerate() {
-        let ci = arena[aei].cell;
-        let (i, j, a, k) = key_list[ci];
-        let cell = slots[ci].as_ref().unwrap();
-        let devices: Vec<usize> = (a..a + k).collect();
-        let p2p_in = if s == 0 {
-            None
-        } else {
-            Some(stage_boundary_p2p(
-                info,
-                s - 1,
-                s,
-                &stages_out[s - 1].devices,
-                &devices,
-                boundary_of[ci],
-            ))
-        };
-        stages_out.push(PipelineStagePlan {
-            span: (i, j),
-            devices,
-            plan: cell.plan.clone(),
-            fwd: cell.phases.fwd,
-            bwd: cell.phases.bwd,
-            exposed_grad: cell.phases.exposed_grad,
-            act_bytes: cell.phases.act_bytes,
-            fwd_transient: cell.phases.fwd_transient,
-            bwd_transient: cell.phases.bwd_transient,
-            param_bytes: cell.phases.param_bytes,
-            in_flight: (s_total - s).min(microbatches),
-            p2p_in,
-            cell_fp: preps[ci].as_ref().unwrap().fp.clone(),
-        });
+    if champs.is_empty() {
+        bail!(
+            "no (schedule, microbatch) candidate is feasible: \
+             interleaved schedules need a microbatch count divisible \
+             by the stage count"
+        );
     }
 
-    // the winner is simulated, not just predicted: the artifact records
-    // the 1F1B replay's step time as its headline number
-    let specs: Vec<_> = stages_out.iter().map(|s| s.spec()).collect();
-    let trace = replay_1f1b(&specs, microbatches)?;
-    let max_stage_mem = trace
-        .devices
-        .iter()
-        .map(|d| d.peak_mem)
-        .fold(0.0, f64::max);
+    // realize one champion's stage chain as artifact stage plans
+    let build = |tail: usize, b: usize, sched: Schedule|
+        -> Vec<PipelineStagePlan> {
+        let mut chain: Vec<usize> = Vec::new();
+        let mut ei = tail;
+        loop {
+            chain.push(ei);
+            match arena[ei].prev {
+                Some(p) => ei = p,
+                None => break,
+            }
+        }
+        chain.reverse();
+        let s_total = chain.len();
+        let mut out: Vec<PipelineStagePlan> = Vec::new();
+        for (s, &aei) in chain.iter().enumerate() {
+            let ci = arena[aei].cell;
+            let (i, j, a, k) = key_list[ci];
+            let cell = slots[ci].as_ref().unwrap();
+            let devices: Vec<usize> = (a..a + k).collect();
+            let p2p_in = if s == 0 {
+                None
+            } else {
+                Some(stage_boundary_p2p(
+                    info,
+                    s - 1,
+                    s,
+                    &out[s - 1].devices,
+                    &devices,
+                    boundary_of[ci],
+                ))
+            };
+            out.push(PipelineStagePlan {
+                span: (i, j),
+                devices,
+                plan: cell.plan.clone(),
+                fwd: cell.phases.fwd,
+                bwd: cell.phases.bwd,
+                exposed_grad: cell.phases.exposed_grad,
+                act_bytes: cell.phases.act_bytes,
+                fwd_transient: cell.phases.fwd_transient,
+                bwd_transient: cell.phases.bwd_transient,
+                param_bytes: cell.phases.param_bytes,
+                in_flight: sched.in_flight_bound(s_total, s, b),
+                p2p_in,
+                cell_fp: preps[ci].as_ref().unwrap().fp.clone(),
+            });
+        }
+        out
+    };
+
+    // every champion is simulated, not just predicted: the final winner
+    // is the best *replayed* step time among champions whose simulated
+    // peak fits the budget (or the best overall when none does), with
+    // ties keeping the earlier — simpler — schedule
+    struct Winner {
+        predicted: f64,
+        microbatches: usize,
+        schedule: Schedule,
+        stages: Vec<PipelineStagePlan>,
+        trace: SimTrace,
+        peak: f64,
+        fits: bool,
+    }
+    let mut winner: Option<Winner> = None;
+    let mut last_err = None;
+    for &(predicted, b, ei, sched) in &champs {
+        let stages_out = build(ei, b, sched);
+        let specs: Vec<_> =
+            stages_out.iter().map(|st| st.spec()).collect();
+        let trace = match replay_schedule(&specs, b, sched) {
+            Ok(t) => t,
+            Err(e) => {
+                last_err = Some(e);
+                continue;
+            }
+        };
+        let peak = trace
+            .devices
+            .iter()
+            .map(|d| d.peak_mem)
+            .fold(0.0, f64::max);
+        let fits = peak <= budget;
+        let better = match &winner {
+            None => true,
+            Some(w) => match (fits, w.fits) {
+                (true, false) => true,
+                (false, true) => false,
+                _ => trace.step_time < w.trace.step_time,
+            },
+        };
+        if better {
+            winner = Some(Winner {
+                predicted,
+                microbatches: b,
+                schedule: sched,
+                stages: stages_out,
+                trace,
+                peak,
+                fits,
+            });
+        }
+    }
+    let Some(w) = winner else {
+        return Err(last_err.unwrap_or_else(|| {
+            anyhow!("every schedule champion failed to replay")
+        }));
+    };
 
     on_ev(ProgressEvent::PipelineChosen {
-        stages: s_total,
-        microbatches,
-        predicted,
-        simulated: trace.step_time,
+        stages: w.stages.len(),
+        microbatches: w.microbatches,
+        schedule: w.schedule.name(),
+        predicted: w.predicted,
+        simulated: w.trace.step_time,
     });
 
     Ok(PipelineSolution {
         backend: format!("pp+{}", spec.backend_name(opts.solve)),
         graph_nodes: g.len(),
         n_groups,
-        microbatches,
+        microbatches: w.microbatches,
+        schedule: w.schedule,
         budget,
-        stages: stages_out,
-        iter_time: trace.step_time,
-        predicted_time: predicted,
-        pflops: total_flops / trace.step_time.max(1e-12) / 1e15,
-        max_stage_mem,
+        stages: w.stages,
+        iter_time: w.trace.step_time,
+        predicted_time: w.predicted,
+        pflops: total_flops / w.trace.step_time.max(1e-12) / 1e15,
+        max_stage_mem: w.peak,
     })
 }
 
@@ -640,6 +721,9 @@ mod tests {
             min_stages: 2,
             max_stages: 2,
             microbatches: vec![2, 4],
+            // forced 1F1B: the in-flight assertions below are the
+            // classic `min(S - s, B)` ramp
+            schedule: vec![Schedule::OneF1B],
             ..Default::default()
         };
         let budget = dev.memory * 0.9;
@@ -674,6 +758,8 @@ mod tests {
         // in-flight follows min(S - s, B)
         assert_eq!(sol.stages[0].in_flight, 2);
         assert_eq!(sol.stages[1].in_flight, 1);
+        // the forced schedule is the one recorded
+        assert_eq!(sol.schedule, Schedule::OneF1B);
         // the replay produced the headline number
         assert!(sol.iter_time > 0.0 && sol.iter_time.is_finite());
         assert!(sol.max_stage_mem <= budget * 1.05);

@@ -10,7 +10,9 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::api::{BackendSpec, CacheStats, PlanOpts, PlanRequest, PpOpts};
+use crate::api::{
+    BackendSpec, CacheStats, PlanOpts, PlanRequest, PpOpts, Schedule,
+};
 use crate::cluster::SimCluster;
 use crate::graph::models::{gpt2, Gpt2Cfg};
 use crate::sim::DeviceModel;
@@ -141,6 +143,22 @@ impl PlanSpec {
                 if let Some(mb) = ppv.get("microbatches").usize_vec() {
                     pp.microbatches = mb;
                 }
+                // absent => the default zoo; present => forced list
+                if let Some(list) = ppv.get("schedule").as_arr() {
+                    pp.schedule = list
+                        .iter()
+                        .map(|x| {
+                            x.as_str()
+                                .ok_or_else(|| {
+                                    anyhow!(
+                                        "pp.schedule entries must be \
+                                         strings"
+                                    )
+                                })
+                                .and_then(Schedule::parse)
+                        })
+                        .collect::<Result<Vec<Schedule>>>()?;
+                }
                 Some(pp)
             }
         };
@@ -164,7 +182,7 @@ impl PlanSpec {
             fast: v.get("fast").as_bool().unwrap_or(false),
             budget_gb: v.get("budget_gb").as_f64(),
             sweep: v.get("sweep").as_usize(),
-            seed: v.get("seed").as_usize().map(|x| x as u64),
+            seed: v.get("seed").as_u64(),
             pp,
             tenant: v.get("tenant").as_str().map(str::to_string),
             job: v.get("job").as_str().map(str::to_string),
@@ -205,6 +223,14 @@ impl PlanSpec {
                             .microbatches
                             .iter()
                             .map(|&x| num(x as f64))
+                            .collect()),
+                    ),
+                    (
+                        "schedule",
+                        arr(pp
+                            .schedule
+                            .iter()
+                            .map(|sc| s(&sc.name()))
                             .collect()),
                     ),
                 ]),
@@ -302,16 +328,26 @@ mod tests {
         let mut spec = PlanSpec::new("gpt2-mini", "nvlink2");
         spec.fast = true;
         spec.budget_gb = Some(40.0);
-        spec.seed = Some(7);
-        spec.pp = Some(PpOpts { max_stages: 2, ..Default::default() });
+        // u64::MAX probes the old `as_usize().map(|x| x as u64)` path,
+        // which truncated any seed the f64->usize cast couldn't carry
+        spec.seed = Some(u64::MAX);
+        spec.pp = Some(PpOpts {
+            max_stages: 2,
+            schedule: vec![Schedule::Interleaved { v: 2 }],
+            ..Default::default()
+        });
         spec.tenant = Some("team-a".into());
         let back = PlanSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(back.model, "gpt2-mini");
         assert_eq!(back.cluster, "nvlink2");
         assert!(back.fast);
         assert_eq!(back.budget_gb, Some(40.0));
-        assert_eq!(back.seed, Some(7));
+        assert_eq!(back.seed, Some(u64::MAX));
         assert_eq!(back.pp.as_ref().unwrap().max_stages, 2);
+        assert_eq!(
+            back.pp.as_ref().unwrap().schedule,
+            vec![Schedule::Interleaved { v: 2 }]
+        );
         assert_eq!(back.tenant.as_deref(), Some("team-a"));
         assert_eq!(
             back.to_json().to_string(),

@@ -13,6 +13,7 @@ pub use baselines::{ddp, megatron_1d, optimus_2d, tp_3d, SimReport};
 pub use device::DeviceModel;
 pub use exec::{exposed_grad, replay_analytic, replay_exec, run_programs,
                simulate_schedule, validate_exec, SimOp, OVERLAP_FRAC};
-pub use pipeline::{replay_1f1b, stage_phases, PipelineStageSpec,
+pub use pipeline::{replay_1f1b, replay_interleaved, replay_schedule,
+                   stage_phases, PipelineStageSpec, Schedule,
                    StagePhases};
 pub use trace::{DeviceTimeline, EventKind, SimTrace, TraceEvent};

@@ -1,4 +1,4 @@
-//! Microbatched 1F1B pipeline replay — the inter-op extension of the
+//! Microbatched pipeline-schedule replay — the inter-op extension of the
 //! discrete-event executor (`sim::exec`).
 //!
 //! The intra-op replayer models one SPMD mesh: every device runs the same
@@ -6,31 +6,47 @@
 //! parallelism breaks that symmetry — each *stage* owns a submesh and a
 //! slice of the model, and stages talk through point-to-point transfers,
 //! not collectives. This module models each stage as one logical queue
-//! (SPMD *within* a stage means one queue per stage suffices), emits the
-//! standard non-interleaved 1F1B schedule per stage — warmup forwards,
-//! steady one-forward-one-backward with Megatron-style *combined*
-//! `send_forward_recv_backward` rendezvous, cooldown backwards — and runs
-//! it through the same [`run_programs`] engine, so P2P deadlocks and
-//! mismatched boundary transfers are detected exactly like collective
-//! bugs are in the intra-op replay.
+//! (SPMD *within* a stage means one queue per stage suffices), emits a
+//! per-stage program for the chosen [`Schedule`], and runs it through the
+//! same [`run_programs`] engine, so P2P deadlocks and mismatched boundary
+//! transfers are detected exactly like collective bugs are in the
+//! intra-op replay. Two schedules are in the zoo:
 //!
-//! The combined steady-state ops are not an optimization nicety: with
-//! strict in-order rendezvous, separate send-forward and recv-backward
-//! ops on one boundary interleave differently on the two sides and
-//! deadlock. Pairing them (as Megatron's schedule does) makes both sides
-//! post the boundary's ops in one agreed total order — which this module
-//! relies on and the oracle tests exercise for many (stages,
-//! microbatches) shapes.
+//! * **Non-interleaved 1F1B** ([`replay_1f1b`]): warmup forwards, steady
+//!   one-forward-one-backward with Megatron-style *combined*
+//!   `send_forward_recv_backward` rendezvous, cooldown backwards. The
+//!   combined steady-state ops are not an optimization nicety: with
+//!   strict in-order rendezvous, separate send-forward and recv-backward
+//!   ops on one boundary interleave differently on the two sides and
+//!   deadlock. Pairing them (as Megatron's schedule does) makes both
+//!   sides post the boundary's ops in one agreed total order.
 //!
-//! Memory is a per-microbatch ledger: a forward retains `act/B` (the
-//! stage's full-batch retained set split over `B` microbatches), the
-//! matching backward frees it, and 1F1B's in-flight bound
-//! `min(S - s, B)` emerges from the schedule rather than being assumed.
-//! Per-stage parameters are allocated up front by a zero-time op, so one
-//! trace "device" ledger per stage starts at that stage's own resident
-//! model data.
+//! * **Interleaved (virtual-stage) 1F1B** ([`replay_interleaved`]): each
+//!   physical stage holds `v` model chunks, microbatches advance in
+//!   stage-count-sized groups, and the warmup/cooldown bubble shrinks
+//!   ~`v`× at the price of `v`× boundary P2P traffic plus a wraparound
+//!   link from the last stage back to the first. Emission here is a
+//!   *weave*: a dependency-respecting global walk over all stages' step
+//!   lists that appends every boundary rendezvous to BOTH endpoint
+//!   programs at a single global moment. Each per-stage program is then
+//!   a restriction of one global op sequence, so the two sides of any
+//!   boundary post its ops in one agreed order and no ordering cycle
+//!   across boundaries can form — deadlock-freedom by construction,
+//!   with the engine's detector still checking. A peephole pass
+//!   (`merge_duplex`) then fuses adjacent opposite-direction
+//!   rendezvous into single full-duplex ops, generalizing the 1F1B
+//!   combined ops to the interleaved (and wraparound) boundaries.
+//!
+//! Memory is a per-microbatch ledger: a forward retains `act/B` (split
+//! further over `v` chunks when interleaved), the matching backward
+//! frees it, and the in-flight bound — `min(S - s, B)` for 1F1B, the
+//! deeper `min(v·S − s, B)`-shaped ramp for interleaved (see
+//! [`Schedule::in_flight_bound`]) — emerges from the schedule rather
+//! than being assumed. Per-stage parameters are allocated up front by a
+//! zero-time op, so one trace "device" ledger per stage starts at that
+//! stage's own resident model data.
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::ckpt::{build_stages, common_nodes, linearize, Block};
 use crate::cluster::DeviceMesh;
@@ -169,6 +185,114 @@ pub struct PipelineStageSpec {
     pub p2p_in: Option<P2pTransfer>,
 }
 
+// -- the schedule zoo -------------------------------------------------------
+
+/// Which pipeline schedule a stage chain replays under — the
+/// partitioner's schedule axis, recorded in the `PipelineSolution`
+/// artifact (absent = `OneF1B`, so pre-schedule artifacts stay
+/// readable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash,
+         Default)]
+pub enum Schedule {
+    /// Classic non-interleaved 1F1B (PipeDream-flush).
+    #[default]
+    OneF1B,
+    /// Megatron's interleaved virtual-stage 1F1B with `v >= 2` model
+    /// chunks per physical stage.
+    Interleaved {
+        v: usize,
+    },
+}
+
+impl Schedule {
+    /// Virtual chunks per physical stage (1 for non-interleaved).
+    pub fn v(&self) -> usize {
+        match self {
+            Schedule::OneF1B => 1,
+            Schedule::Interleaved { v } => *v,
+        }
+    }
+
+    /// Canonical CLI/wire spelling: `1f1b` or `interleaved:<v>`.
+    pub fn name(&self) -> String {
+        match self {
+            Schedule::OneF1B => "1f1b".to_string(),
+            Schedule::Interleaved { v } => format!("interleaved:{v}"),
+        }
+    }
+
+    /// Parse a canonical spelling (`1f1b`, or `interleaved:<v>` with
+    /// `v >= 2`).
+    pub fn parse(text: &str) -> Result<Schedule> {
+        let t = text.trim();
+        if t == "1f1b" {
+            return Ok(Schedule::OneF1B);
+        }
+        if let Some(rest) = t.strip_prefix("interleaved:") {
+            let v: usize = rest.parse().map_err(|_| {
+                anyhow!("bad virtual-chunk count in schedule '{text}'")
+            })?;
+            ensure!(
+                v >= 2,
+                "interleaved schedule needs v >= 2 chunks, got {v}"
+            );
+            return Ok(Schedule::Interleaved { v });
+        }
+        bail!("unknown schedule '{text}' (want '1f1b' or 'interleaved:<v>')")
+    }
+
+    /// Whether this schedule can drive `ns` stages with `nb`
+    /// microbatches. Interleaving advances microbatches in
+    /// stage-count-sized groups (as Megatron does), so it needs
+    /// `nb % ns == 0` — and at least two physical stages, since
+    /// chunking a single stage buys nothing.
+    pub fn feasible_for(&self, ns: usize, nb: usize) -> bool {
+        match self {
+            Schedule::OneF1B => ns > 0 && nb > 0,
+            Schedule::Interleaved { v } => {
+                *v >= 2 && ns >= 2 && nb > 0 && nb % ns == 0
+            }
+        }
+    }
+
+    /// Upper bound on stage `s`'s concurrently retained microbatch
+    /// activations, in whole microbatches. 1F1B fills `min(S - s, B)`;
+    /// the interleaved warmup runs `2(S−1−s) + (v−1)S` chunk forwards
+    /// deep (one more in flight during the first steady pair), capped
+    /// at the `v·B` chunk total and rounded up to microbatches —
+    /// the `min(v·S − s, B)`-shaped ramp the ledger tests pin.
+    pub fn in_flight_bound(
+        &self,
+        ns: usize,
+        s: usize,
+        nb: usize,
+    ) -> usize {
+        match self {
+            Schedule::OneF1B => (ns - s).min(nb),
+            Schedule::Interleaved { v } => {
+                let chunks =
+                    (2 * (ns - 1 - s) + (v - 1) * ns + 1).min(v * nb);
+                chunks.div_ceil(*v)
+            }
+        }
+    }
+}
+
+/// Replay a stage chain under `schedule` — the one dispatch point the
+/// artifact replay, the verify oracle and the partitioner all share.
+pub fn replay_schedule(
+    stages: &[PipelineStageSpec],
+    microbatches: usize,
+    schedule: Schedule,
+) -> Result<SimTrace> {
+    match schedule {
+        Schedule::OneF1B => replay_1f1b(stages, microbatches),
+        Schedule::Interleaved { v } => {
+            replay_interleaved(stages, microbatches, v)
+        }
+    }
+}
+
 // -- 1F1B program emission --------------------------------------------------
 
 fn compute_op(
@@ -182,15 +306,13 @@ fn compute_op(
     SimOp::Compute { kind, label, secs, alloc, transient, free }
 }
 
-/// A boundary rendezvous between stage `b` and `b+1`. Both sides MUST
-/// construct their op through this one function so labels, durations and
-/// signatures agree bit-for-bit.
-fn boundary_op(
-    b: usize,
-    label: String,
-    secs: f64,
-) -> SimOp {
-    let group = vec![b, b + 1];
+/// A P2P rendezvous between stages `a` and `b` — any pair, since the
+/// interleaved schedule's wraparound link joins the last stage back to
+/// the first. Both sides MUST construct their op through this one
+/// function so labels, durations and signatures agree bit-for-bit.
+fn pair_op(a: usize, b: usize, label: String, secs: f64) -> SimOp {
+    let mut group = vec![a, b];
+    group.sort_unstable();
     let sig = coll_sig(&label, secs, &group);
     SimOp::Collective {
         kind: EventKind::Comm,
@@ -201,19 +323,13 @@ fn boundary_op(
     }
 }
 
-/// Replay a stage chain under the non-interleaved 1F1B schedule with
-/// `microbatches` microbatches. Returns a [`SimTrace`] whose "devices"
-/// are the stage queues (`devices[s].peak_mem` is stage `s`'s per-device
-/// peak); `step_time` is the pipeline-latency of one training step.
-pub fn replay_1f1b(
-    stages: &[PipelineStageSpec],
-    microbatches: usize,
-) -> Result<SimTrace> {
-    let ns = stages.len();
-    ensure!(ns > 0, "cannot replay an empty pipeline");
-    ensure!(microbatches > 0, "need at least one microbatch");
-    let nb = microbatches;
-    let bf = nb as f64;
+/// A boundary rendezvous between stage `b` and `b+1`.
+fn boundary_op(b: usize, label: String, secs: f64) -> SimOp {
+    pair_op(b, b + 1, label, secs)
+}
+
+/// Shared stage-list validation for every schedule's replayer.
+fn validate_stages(stages: &[PipelineStageSpec]) -> Result<()> {
     for (s, st) in stages.iter().enumerate() {
         for x in [st.phases.fwd, st.phases.bwd, st.phases.exposed_grad,
                   st.phases.act_bytes, st.phases.fwd_transient,
@@ -236,6 +352,41 @@ pub fn replay_1f1b(
             );
         }
     }
+    Ok(())
+}
+
+/// Negative step times out of a replay are a bug — but a long tick
+/// accumulation over near-zero-cost ops can drift a sub-epsilon hair
+/// below zero in floats. Tolerate exactly that: clamp tiny negatives to
+/// zero, keep the bail for genuinely negative times.
+fn clamp_step_time(mut trace: SimTrace, what: &str) -> Result<SimTrace> {
+    if trace.step_time < 0.0 {
+        let tol = 1e-9
+            * (1.0 + trace.compute_time.abs() + trace.comm_time.abs());
+        ensure!(
+            trace.step_time >= -tol,
+            "{what} replay produced a negative step time ({})",
+            trace.step_time
+        );
+        trace.step_time = 0.0;
+    }
+    Ok(trace)
+}
+
+/// Replay a stage chain under the non-interleaved 1F1B schedule with
+/// `microbatches` microbatches. Returns a [`SimTrace`] whose "devices"
+/// are the stage queues (`devices[s].peak_mem` is stage `s`'s per-device
+/// peak); `step_time` is the pipeline-latency of one training step.
+pub fn replay_1f1b(
+    stages: &[PipelineStageSpec],
+    microbatches: usize,
+) -> Result<SimTrace> {
+    let ns = stages.len();
+    ensure!(ns > 0, "cannot replay an empty pipeline");
+    ensure!(microbatches > 0, "need at least one microbatch");
+    let nb = microbatches;
+    let bf = nb as f64;
+    validate_stages(stages)?;
 
     // boundary b sits between stage b and b+1; its link data lives on
     // the downstream stage's spec
@@ -354,12 +505,395 @@ pub fn replay_1f1b(
     }
 
     let trace = run_programs(&progs, &[ns], 0.0).map_err(|e| {
-        anyhow::anyhow!("1F1B replay ({ns} stages, {nb} microbatches): {e}")
+        anyhow!("1F1B replay ({ns} stages, {nb} microbatches): {e}")
     })?;
-    if trace.step_time < 0.0 {
-        bail!("1F1B replay produced a negative step time");
+    clamp_step_time(trace, "1F1B")
+}
+
+// -- interleaved (virtual-stage) 1F1B emission ------------------------------
+
+/// One schedule slot of a stage's interleaved step list.
+#[derive(Clone, Copy)]
+enum Step {
+    /// Forward of (chunk, microbatch).
+    F(usize, usize),
+    /// Backward of (chunk, microbatch).
+    B(usize, usize),
+}
+
+/// Replay a stage chain under Megatron's interleaved (virtual-stage)
+/// 1F1B schedule: each physical stage models `v` equal sub-chunks of its
+/// span, so model chunk `c` of stage `s` is virtual stage `u = c·S + s`.
+/// Microbatches advance in stage-count-sized groups (hence the
+/// `B % S == 0` requirement), the warmup ramp runs `2(S−1−s) + (v−1)S`
+/// chunk forwards deep, and every virtual boundary is a real rendezvous:
+/// each physical cut is crossed `v` times per microbatch and the chunk
+/// handoff from the last stage back to the first becomes a wraparound
+/// link. That interior cut was never profiled, so its per-crossing times
+/// are approximated by the mean of the recorded physical cuts.
+///
+/// Emission is a dependency-respecting *weave* over all stages' step
+/// lists (see the module docs): every rendezvous lands in both endpoint
+/// programs at one global moment, which is what makes the emitted
+/// programs deadlock-free under the engine's strict in-order rendezvous.
+pub fn replay_interleaved(
+    stages: &[PipelineStageSpec],
+    microbatches: usize,
+    v: usize,
+) -> Result<SimTrace> {
+    let ns = stages.len();
+    ensure!(ns > 0, "cannot replay an empty pipeline");
+    ensure!(microbatches > 0, "need at least one microbatch");
+    ensure!(v >= 2, "interleaved 1F1B needs v >= 2 chunks, got {v}");
+    ensure!(
+        microbatches % ns == 0,
+        "interleaved 1F1B needs microbatches divisible by stages \
+         (B={microbatches}, S={ns})"
+    );
+    validate_stages(stages)?;
+
+    let nb = microbatches;
+    let bf = nb as f64;
+    let vf = v as f64;
+    let nv = ns * v; // virtual stages == model chunks
+    let total = nb * v; // chunk slots per stage per direction
+
+    let link = |b: usize| stages[b + 1].p2p_in.as_ref().unwrap();
+    let (wrap_f, wrap_b) = if ns > 1 {
+        let mut f = 0.0;
+        let mut b = 0.0;
+        for x in 0..ns - 1 {
+            f += link(x).fwd_time(nb);
+            b += link(x).bwd_time(nb);
+        }
+        let m = (ns - 1) as f64;
+        (f / m, b / m)
+    } else {
+        (0.0, 0.0)
+    };
+    // edge `u` joins virtual stage u to u+1: (producer stage, consumer
+    // stage, fwd crossing secs, bwd crossing secs), or None when both
+    // chunks share one queue (S == 1)
+    let edge = |u: usize| -> Option<(usize, usize, f64, f64)> {
+        let a = u % ns;
+        let b = (u + 1) % ns;
+        if a == b {
+            None
+        } else if b == a + 1 {
+            Some((a, b, link(a).fwd_time(nb), link(a).bwd_time(nb)))
+        } else {
+            Some((a, b, wrap_f, wrap_b))
+        }
+    };
+
+    // Megatron's traversal: microbatches advance in groups of S; within
+    // a group a stage runs all S on one chunk before switching (forwards
+    // ascend chunks, backwards descend).
+    let grp = ns * v;
+    let fwd_ci = |k: usize| (k % grp / ns, k / grp * ns + k % ns);
+    let bwd_ci =
+        |k: usize| (v - 1 - k % grp / ns, k / grp * ns + k % ns);
+    let mut steps: Vec<Vec<Step>> = Vec::with_capacity(ns);
+    for s in 0..ns {
+        let w = (2 * (ns - 1 - s) + (v - 1) * ns).min(total);
+        let steady = total - w;
+        let mut list = Vec::with_capacity(2 * total);
+        for k in 0..w {
+            let (c, i) = fwd_ci(k);
+            list.push(Step::F(c, i));
+        }
+        for k in 0..steady {
+            let (c, i) = fwd_ci(w + k);
+            list.push(Step::F(c, i));
+            let (c, i) = bwd_ci(k);
+            list.push(Step::B(c, i));
+        }
+        for k in steady..total {
+            let (c, i) = bwd_ci(k);
+            list.push(Step::B(c, i));
+        }
+        steps.push(list);
     }
-    Ok(trace)
+
+    // -- the weave --------------------------------------------------------
+    // Execute each stage's fixed step list in order, earliest
+    // virtual-clock first among data-ready stages; every rendezvous is
+    // appended to BOTH endpoint programs at that single global moment.
+    let mut progs: Vec<Vec<SimOp>> = stages
+        .iter()
+        .enumerate()
+        .map(|(s, st)| {
+            let mut p = Vec::new();
+            if st.phases.param_bytes > 0.0 {
+                p.push(compute_op(
+                    EventKind::FwdCompute,
+                    format!("params s{s}"),
+                    0.0,
+                    st.phases.param_bytes,
+                    0.0,
+                    0.0,
+                ));
+            }
+            p
+        })
+        .collect();
+    // physical direction of every emitted rendezvous, for merge_duplex
+    let mut dirs: std::collections::HashMap<String, (usize, usize)> =
+        std::collections::HashMap::new();
+    let mut idx = vec![0usize; ns];
+    let mut clock = vec![0.0f64; ns];
+    let mut done_f = vec![vec![false; nb]; nv];
+    let mut done_b = vec![vec![false; nb]; nv];
+    let mut tf = vec![vec![0.0f64; nb]; nv];
+    let mut tb = vec![vec![0.0f64; nb]; nv];
+    let mut left: usize = steps.iter().map(|l| l.len()).sum();
+    while left > 0 {
+        // recv-carrying steps win clock ties so producers service their
+        // sends before running ahead of a waiting consumer
+        let mut pick: Option<(f64, bool, usize)> = None;
+        for s in 0..ns {
+            let Some(&st) = steps[s].get(idx[s]) else { continue };
+            let (ready, recv) = match st {
+                Step::F(c, i) => {
+                    let u = c * ns + s;
+                    if u == 0 {
+                        (clock[s], false)
+                    } else if !done_f[u - 1][i] {
+                        continue;
+                    } else {
+                        (
+                            clock[s].max(tf[u - 1][i]),
+                            edge(u - 1).is_some(),
+                        )
+                    }
+                }
+                Step::B(c, i) => {
+                    let u = c * ns + s;
+                    if !done_f[u][i] {
+                        continue;
+                    }
+                    if u == nv - 1 {
+                        (clock[s], false)
+                    } else if !done_b[u + 1][i] {
+                        continue;
+                    } else {
+                        (clock[s].max(tb[u + 1][i]), edge(u).is_some())
+                    }
+                }
+            };
+            let better = match &pick {
+                None => true,
+                Some((r, rv, ps)) => {
+                    ready < *r
+                        || (ready == *r
+                            && ((recv && !*rv)
+                                || (recv == *rv && s < *ps)))
+                }
+            };
+            if better {
+                pick = Some((ready, recv, s));
+            }
+        }
+        let Some((_, _, s)) = pick else {
+            bail!(
+                "interleaved 1F1B weave wedged: no stage is data-ready \
+                 (S={ns}, B={nb}, v={v})"
+            );
+        };
+        let p = &stages[s].phases;
+        match steps[s][idx[s]] {
+            Step::F(c, i) => {
+                let u = c * ns + s;
+                let mut arrive = clock[s];
+                if u > 0 {
+                    if let Some((a, b, secs, _)) = edge(u - 1) {
+                        let op = pair_op(
+                            a,
+                            b,
+                            format!("p2p fwd e{} mb{i}", u - 1),
+                            secs,
+                        );
+                        if let SimOp::Collective { sig, .. } = &op {
+                            dirs.insert(sig.clone(), (a, b));
+                        }
+                        progs[a].push(op.clone());
+                        progs[b].push(op);
+                        arrive = arrive.max(tf[u - 1][i] + secs);
+                    } else {
+                        arrive = arrive.max(tf[u - 1][i]);
+                    }
+                }
+                progs[s].push(compute_op(
+                    EventKind::FwdCompute,
+                    format!("F c{c} mb{i} s{s}"),
+                    p.fwd / bf / vf,
+                    p.act_bytes / bf / vf,
+                    p.fwd_transient / bf,
+                    0.0,
+                ));
+                clock[s] = arrive + p.fwd / bf / vf;
+                done_f[u][i] = true;
+                tf[u][i] = clock[s];
+            }
+            Step::B(c, i) => {
+                let u = c * ns + s;
+                let mut arrive = clock[s];
+                if u + 1 < nv {
+                    if let Some((a, b, _, secs)) = edge(u) {
+                        // the gradient flows consumer -> producer
+                        let op = pair_op(
+                            a,
+                            b,
+                            format!("p2p bwd e{u} mb{i}"),
+                            secs,
+                        );
+                        if let SimOp::Collective { sig, .. } = &op {
+                            dirs.insert(sig.clone(), (b, a));
+                        }
+                        progs[a].push(op.clone());
+                        progs[b].push(op);
+                        arrive = arrive.max(tb[u + 1][i] + secs);
+                    } else {
+                        arrive = arrive.max(tb[u + 1][i]);
+                    }
+                }
+                progs[s].push(compute_op(
+                    EventKind::BwdCompute,
+                    format!("B c{c} mb{i} s{s}"),
+                    p.bwd / bf / vf,
+                    0.0,
+                    p.bwd_transient / bf,
+                    p.act_bytes / bf / vf,
+                ));
+                clock[s] = arrive + p.bwd / bf / vf;
+                done_b[u][i] = true;
+                tb[u][i] = clock[s];
+            }
+        }
+        idx[s] += 1;
+        left -= 1;
+    }
+    for (s, st) in stages.iter().enumerate() {
+        if st.phases.exposed_grad > 0.0 {
+            progs[s].push(compute_op(
+                EventKind::GradSync,
+                format!("grad-sync s{s} (exposed)"),
+                st.phases.exposed_grad,
+                0.0,
+                0.0,
+                0.0,
+            ));
+        }
+    }
+    merge_duplex(&mut progs, &dirs);
+
+    let trace = run_programs(&progs, &[ns], 0.0).map_err(|e| {
+        anyhow!(
+            "interleaved 1F1B replay ({ns} stages, {nb} microbatches, \
+             v={v}): {e}"
+        )
+    })?;
+    clamp_step_time(trace, "interleaved 1F1B")
+}
+
+/// Fuse adjacent opposite-direction rendezvous on one stage pair into a
+/// single full-duplex op (`secs = max`), generalizing 1F1B's combined
+/// steady-state `send_forward_recv_backward` to the interleaved (and
+/// wraparound) boundaries. Only pairs adjacent in BOTH endpoint programs
+/// fuse, which keeps every program a restriction of the same global op
+/// sequence — the deadlock-freedom argument survives the rewrite.
+/// `dirs` maps each rendezvous signature to its physical (from, to):
+/// on a two-stage ring the same {0, 1} group carries both directions,
+/// so the label alone cannot tell full duplex from half.
+fn merge_duplex(
+    progs: &mut [Vec<SimOp>],
+    dirs: &std::collections::HashMap<String, (usize, usize)>,
+) {
+    use std::collections::HashMap;
+    let parts = |op: &SimOp| -> Option<(String, f64, Vec<usize>, String)> {
+        match op {
+            SimOp::Collective { label, secs, group, sig, .. } => Some((
+                label.clone(),
+                *secs,
+                group.clone(),
+                sig.clone(),
+            )),
+            _ => None,
+        }
+    };
+    // every rendezvous sig appears in exactly two programs
+    let mut at: HashMap<String, Vec<(usize, usize)>> = HashMap::new();
+    for (x, prog) in progs.iter().enumerate() {
+        for (j, op) in prog.iter().enumerate() {
+            if let SimOp::Collective { sig, .. } = op {
+                at.entry(sig.clone()).or_default().push((x, j));
+            }
+        }
+    }
+    let peer = |sig: &str, x: usize| -> Option<(usize, usize)> {
+        at.get(sig)?
+            .iter()
+            .copied()
+            .find(|&(px, _)| px != x)
+    };
+    // (program, position) -> replacement (first of pair) / drop (second)
+    let mut repl: HashMap<(usize, usize), Option<SimOp>> = HashMap::new();
+    for (x, prog) in progs.iter().enumerate() {
+        for j in 0..prog.len().saturating_sub(1) {
+            if repl.contains_key(&(x, j))
+                || repl.contains_key(&(x, j + 1))
+            {
+                continue;
+            }
+            let (Some((l1, s1, g1, sg1)), Some((l2, s2, g2, sg2))) =
+                (parts(&prog[j]), parts(&prog[j + 1]))
+            else {
+                continue;
+            };
+            if g1 != g2 {
+                continue;
+            }
+            // full duplex only: physically opposite directions
+            match (dirs.get(&sg1), dirs.get(&sg2)) {
+                (Some(&(f1, t1)), Some(&(f2, t2)))
+                    if f1 == t2 && t1 == f2 => {}
+                _ => continue,
+            }
+            // and adjacent, in the same order, on the peer side
+            let (Some((y1, j1)), Some((y2, j2))) =
+                (peer(&sg1, x), peer(&sg2, x))
+            else {
+                continue;
+            };
+            if y1 != y2 || j2 != j1 + 1 {
+                continue;
+            }
+            if repl.contains_key(&(y1, j1))
+                || repl.contains_key(&(y1, j2))
+            {
+                continue;
+            }
+            let op =
+                pair_op(g1[0], g1[1], format!("{l1} + {l2}"), s1.max(s2));
+            repl.insert((x, j), Some(op.clone()));
+            repl.insert((x, j + 1), None);
+            repl.insert((y1, j1), Some(op));
+            repl.insert((y1, j2), None);
+        }
+    }
+    if repl.is_empty() {
+        return;
+    }
+    for (x, prog) in progs.iter_mut().enumerate() {
+        let old = std::mem::take(prog);
+        for (j, op) in old.into_iter().enumerate() {
+            match repl.get(&(x, j)) {
+                None => prog.push(op),
+                Some(Some(m)) => prog.push(m.clone()),
+                Some(None) => {}
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -586,5 +1120,277 @@ mod tests {
         let bad =
             vec![spec(1.0, 1.0, 0.0, 0.0, Some(free_link(0)))];
         assert!(replay_1f1b(&bad, 2).is_err());
+    }
+
+    // -- schedule zoo -------------------------------------------------------
+
+    #[test]
+    fn schedule_parses_and_prints_canonically() {
+        assert_eq!(Schedule::parse("1f1b").unwrap(), Schedule::OneF1B);
+        assert_eq!(
+            Schedule::parse("interleaved:3").unwrap(),
+            Schedule::Interleaved { v: 3 }
+        );
+        for s in [Schedule::OneF1B, Schedule::Interleaved { v: 2 }] {
+            assert_eq!(Schedule::parse(&s.name()).unwrap(), s);
+        }
+        assert!(Schedule::parse("interleaved:1").is_err());
+        assert!(Schedule::parse("interleaved:x").is_err());
+        assert!(Schedule::parse("gpipe").is_err());
+        assert_eq!(Schedule::default(), Schedule::OneF1B);
+        // interleaving needs B % S == 0 and a real pipeline
+        let il = Schedule::Interleaved { v: 2 };
+        assert!(il.feasible_for(2, 4));
+        assert!(!il.feasible_for(2, 3));
+        assert!(!il.feasible_for(1, 4));
+        assert!(Schedule::OneF1B.feasible_for(1, 1));
+    }
+
+    #[test]
+    fn interleaved_two_stage_has_the_textbook_makespan() {
+        // equal stages, free links, v=2: the bubble shrinks to
+        // (S-1)*(f+b)_mb / v while the steady span stays B*(f+b)_mb
+        let stages = vec![
+            spec(2.0, 2.0, 80.0, 5.0, None),
+            spec(2.0, 2.0, 80.0, 5.0, Some(free_link(0))),
+        ];
+        let (nb, v) = (2usize, 2usize);
+        let t = replay_interleaved(&stages, nb, v).unwrap();
+        let per_mb = 2.0; // f_mb + b_mb = 2.0/2 + 2.0/2 per direction
+        let expect =
+            nb as f64 * per_mb + per_mb * (2 - 1) as f64 / v as f64;
+        assert!(
+            (t.step_time - expect).abs() < 1e-9,
+            "got {}, want {expect}",
+            t.step_time
+        );
+        // and it beats the non-interleaved bubble at the same B
+        let base = replay_1f1b(&stages, nb).unwrap();
+        assert!(t.step_time < base.step_time - 1e-9);
+        // stage 0's all-warmup schedule holds the full chunk complement
+        let act_c = 80.0 / (nb * v) as f64;
+        let bound = Schedule::Interleaved { v }.in_flight_bound(2, 0, nb)
+            as f64
+            * v as f64
+            * act_c;
+        assert!(
+            (t.devices[0].peak_mem - (5.0 + bound)).abs() < 1e-6,
+            "stage0 peak {}",
+            t.devices[0].peak_mem
+        );
+    }
+
+    #[test]
+    fn interleaved_never_deadlocks_leaks_or_blows_the_ledger() {
+        for ns in 1..=4usize {
+            for v in [2usize, 3] {
+                for mult in [1usize, 2, 4] {
+                    let nb = ns * mult;
+                    let mut stages =
+                        vec![spec(0.8, 1.3, 12.0, 1.0, None)];
+                    for s in 1..ns {
+                        stages.push(spec(
+                            0.7 + s as f64 * 0.1,
+                            1.1,
+                            12.0,
+                            1.0,
+                            Some(free_link(s - 1)),
+                        ));
+                    }
+                    let t = replay_interleaved(&stages, nb, v)
+                        .unwrap_or_else(|e| {
+                            panic!("S={ns} B={nb} v={v}: {e}")
+                        });
+                    assert!(t.step_time > 0.0);
+                    let sched = Schedule::Interleaved { v };
+                    for (s, d) in t.devices.iter().enumerate() {
+                        // all activations freed at the end
+                        let last = d.events.last().unwrap();
+                        assert!(
+                            (last.mem - 1.0).abs() < 1e-6,
+                            "S={ns} B={nb} v={v} s{s}: leaked {}",
+                            last.mem
+                        );
+                        // ledger peak within the schedule's ramp bound
+                        let act_c = 12.0 / (nb * v) as f64;
+                        let chunks = (sched
+                            .in_flight_bound(ns, s, nb)
+                            * v) as f64;
+                        let bound = 1.0
+                            + chunks * act_c
+                            + stages[s].phases.fwd_transient
+                                / nb as f64;
+                        assert!(
+                            d.peak_mem <= bound + 1e-6,
+                            "S={ns} B={nb} v={v} s{s}: peak {} > \
+                             bound {bound}",
+                            d.peak_mem
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_bubble_never_exceeds_1f1b_at_equal_b() {
+        for ns in 2..=4usize {
+            for mult in [1usize, 2, 3] {
+                let nb = ns * mult;
+                let mut stages = vec![spec(1.0, 1.0, 10.0, 1.0, None)];
+                for s in 1..ns {
+                    stages.push(spec(
+                        1.0,
+                        1.0,
+                        10.0,
+                        1.0,
+                        Some(free_link(s - 1)),
+                    ));
+                }
+                let base = replay_1f1b(&stages, nb).unwrap();
+                for v in [2usize, 3] {
+                    let il =
+                        replay_interleaved(&stages, nb, v).unwrap();
+                    assert!(
+                        il.step_time <= base.step_time + 1e-9,
+                        "S={ns} B={nb} v={v}: interleaved {} > 1f1b {}",
+                        il.step_time,
+                        base.step_time
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_pays_for_the_extra_p2p_crossings() {
+        // a costly boundary is crossed v times per microbatch, so the
+        // replay's comm share must grow with v
+        let mk = || {
+            vec![
+                spec(1.0, 1.0, 0.0, 0.0, None),
+                spec(
+                    1.0,
+                    1.0,
+                    0.0,
+                    0.0,
+                    Some(P2pTransfer {
+                        from_stage: 0,
+                        to_stage: 1,
+                        bytes_fwd: 4e6,
+                        bytes_bwd: 4e6,
+                        alpha: 0.01,
+                        beta: 1e9,
+                        streams: 1,
+                    }),
+                ),
+            ]
+        };
+        let base = replay_1f1b(&mk(), 4).unwrap();
+        let il = replay_interleaved(&mk(), 4, 2).unwrap();
+        let count = |t: &SimTrace| {
+            t.devices[0]
+                .events
+                .iter()
+                .filter(|e| e.kind == EventKind::Comm)
+                .count()
+        };
+        assert!(
+            count(&il) > count(&base),
+            "v=2 must post more boundary rendezvous ({} vs {})",
+            count(&il),
+            count(&base)
+        );
+    }
+
+    #[test]
+    fn interleaved_rejects_bad_shapes() {
+        let stages = vec![
+            spec(1.0, 1.0, 0.0, 0.0, None),
+            spec(1.0, 1.0, 0.0, 0.0, Some(free_link(0))),
+        ];
+        // B not divisible by S
+        assert!(replay_interleaved(&stages, 3, 2).is_err());
+        // v < 2 is not an interleaved schedule
+        assert!(replay_interleaved(&stages, 4, 1).is_err());
+        assert!(replay_interleaved(&[], 2, 2).is_err());
+    }
+
+    #[test]
+    fn replay_schedule_dispatches_both_ways() {
+        let stages = vec![
+            spec(1.0, 1.0, 8.0, 1.0, None),
+            spec(1.0, 1.0, 8.0, 1.0, Some(free_link(0))),
+        ];
+        let a = replay_schedule(&stages, 4, Schedule::OneF1B).unwrap();
+        let b = replay_1f1b(&stages, 4).unwrap();
+        assert_eq!(a.step_time, b.step_time);
+        let c = replay_schedule(
+            &stages,
+            4,
+            Schedule::Interleaved { v: 2 },
+        )
+        .unwrap();
+        let d = replay_interleaved(&stages, 4, 2).unwrap();
+        assert_eq!(c.step_time, d.step_time);
+    }
+
+    #[test]
+    fn in_flight_bound_degenerates_to_1f1b_at_v1() {
+        for ns in 1..=4usize {
+            for s in 0..ns {
+                for nb in [1usize, 2, 8] {
+                    assert_eq!(
+                        Schedule::OneF1B.in_flight_bound(ns, s, nb),
+                        (ns - s).min(nb)
+                    );
+                }
+            }
+        }
+        // deeper ramp for earlier stages, never past the chunk total
+        let sched = Schedule::Interleaved { v: 2 };
+        assert!(
+            sched.in_flight_bound(4, 0, 8)
+                >= sched.in_flight_bound(4, 3, 8)
+        );
+        assert!(sched.in_flight_bound(2, 0, 2) <= 2);
+    }
+
+    // -- step-time clamp (sub-epsilon float negatives) ----------------------
+
+    #[test]
+    fn zero_cost_stages_replay_to_exactly_zero() {
+        let stages = vec![
+            spec(0.0, 0.0, 0.0, 0.0, None),
+            spec(0.0, 0.0, 0.0, 0.0, Some(free_link(0))),
+        ];
+        let t = replay_1f1b(&stages, 4).unwrap();
+        assert_eq!(t.step_time, 0.0);
+        let t = replay_interleaved(&stages, 4, 2).unwrap();
+        assert_eq!(t.step_time, 0.0);
+    }
+
+    #[test]
+    fn step_time_clamp_tolerates_only_sub_epsilon_negatives() {
+        let mk = |st: f64| SimTrace {
+            mesh_shape: vec![1],
+            analytic: false,
+            step_time: st,
+            peak_mem: 0.0,
+            param_mem: 0.0,
+            compute_time: 1.0,
+            comm_time: 0.0,
+            recompute_time: 0.0,
+            exposed_grad_time: 0.0,
+            devices: Vec::new(),
+        };
+        // a float-accumulation hair below zero is clamped ...
+        let t = clamp_step_time(mk(-1e-12), "test").unwrap();
+        assert_eq!(t.step_time, 0.0);
+        // ... a genuinely negative time still bails
+        assert!(clamp_step_time(mk(-0.5), "test").is_err());
+        // and non-negative times pass through untouched
+        let t = clamp_step_time(mk(2.5), "test").unwrap();
+        assert_eq!(t.step_time, 2.5);
     }
 }

@@ -40,6 +40,17 @@ impl Json {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// Non-negative integer as `u64`. The float→int cast saturates, so
+    /// values at or beyond 2^53 (e.g. a `u64::MAX` seed, which the JSON
+    /// number round-trips as 1.8446744073709552e19) survive as
+    /// `u64::MAX` instead of truncating through a narrower cast.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self.as_f64() {
+            Some(f) if f >= 0.0 => Some(f as u64),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -464,6 +475,21 @@ mod tests {
         assert_eq!(v.get("a").idx(2).get("b").as_str(), Some("x"));
         assert_eq!(v.get("c"), &Json::Null);
         assert_eq!(v.get("missing"), &Json::Null);
+    }
+
+    #[test]
+    fn as_u64_survives_the_full_range() {
+        assert_eq!(Json::Num(7.0).as_u64(), Some(7));
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Str("7".into()).as_u64(), None);
+        // u64::MAX written as a JSON number parses back to the f64
+        // nearest 2^64; the saturating cast recovers u64::MAX exactly
+        // where `as_usize as u64`-style narrowing would mangle it
+        let mut out = String::new();
+        write_json(&Json::Num(u64::MAX as f64), &mut out);
+        let back = Json::parse(&out).unwrap();
+        assert_eq!(back.as_u64(), Some(u64::MAX));
     }
 
     #[test]

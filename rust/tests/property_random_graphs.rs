@@ -674,7 +674,7 @@ fn property_forced_single_stage_pipeline_is_byte_identical() {
                 ));
             }
             // and the degenerate 1F1B replay is the plain intra-op replay
-            let pipe = sol.replay_1f1b().map_err(|e| format!("{e}"))?;
+            let pipe = sol.replay().map_err(|e| format!("{e}"))?;
             let intra = staged
                 .replay_sim(&g, &dev)
                 .map_err(|e| format!("{e}"))?;

@@ -16,7 +16,8 @@
 use std::fs;
 use std::path::PathBuf;
 
-use automap::api::{Artifact, BeamSolve, CompiledPlan, PlanOpts, Planner};
+use automap::api::{Artifact, BeamSolve, CompiledPlan, PipelineSolution,
+                   PlanOpts, Planner, PpOpts, Schedule};
 use automap::cluster::SimCluster;
 use automap::graph::models::{gpt2, Gpt2Cfg};
 use automap::profiler::profile;
@@ -110,6 +111,74 @@ fn golden_trace_tight_budget() {
     let budget = prof.model_bytes as f64 * 2.0
         + prof.saved_activation as f64 * 0.6;
     golden("tight", 4, Some(budget));
+}
+
+#[test]
+fn golden_trace_interleaved_pipeline() {
+    // Same protocol, inter-op flavor: a forced interleaved:2 pipeline
+    // artifact and the `SimTrace` its recorded schedule replays to.
+    // Pins the v-chunked emission order, the combined-rendezvous
+    // weaving and the per-microbatch ledger — a byte diff here means
+    // the interleaved schedule itself drifted.
+    let g = gpt2(&Gpt2Cfg::mini());
+    let cluster = SimCluster::fig5_prefix(4);
+    let dev = DeviceModel::a100_80gb();
+    let dir = fixtures_dir();
+    fs::create_dir_all(&dir).unwrap();
+    let plan_path = dir.join("sim_il2.pipeline.json");
+    let trace_path = dir.join("sim_il2.trace.json");
+
+    let sol = if plan_path.exists() {
+        PipelineSolution::load(&plan_path).expect("fixture loads")
+    } else {
+        let opts = PlanOpts {
+            sweep: 2,
+            solve: fast_solve(),
+            pp: Some(PpOpts {
+                min_stages: 2,
+                max_stages: 2,
+                microbatches: vec![4],
+                schedule: vec![Schedule::Interleaved { v: 2 }],
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let mut p = Planner::new(&g, &cluster, &dev).with_opts(opts);
+        let sol = p
+            .solve_pipeline()
+            .expect("golden pipeline solves")
+            .clone();
+        sol.save(&plan_path).unwrap();
+        eprintln!("blessed pipeline fixture {}", plan_path.display());
+        sol
+    };
+    sol.validate().expect("fixture pipeline validates");
+    assert_eq!(sol.schedule, Schedule::Interleaved { v: 2 });
+
+    let trace = sol.replay().expect("fixture pipeline replays");
+    let text = trace.to_json().to_string();
+    let again = sol.replay().unwrap();
+    assert_eq!(
+        text,
+        again.to_json().to_string(),
+        "interleaved replay must be bit-deterministic"
+    );
+
+    if trace_path.exists() {
+        let want = fs::read_to_string(&trace_path).unwrap();
+        assert_eq!(
+            want,
+            text,
+            "replaying the checked-in interleaved pipeline no longer \
+             reproduces its golden trace — the schedule emission, the \
+             boundary weaving, or the simulator drifted. If the change \
+             is intentional, delete {} to re-bless.",
+            trace_path.display()
+        );
+    } else {
+        fs::write(&trace_path, &text).unwrap();
+        eprintln!("blessed trace fixture {}", trace_path.display());
+    }
 }
 
 #[test]

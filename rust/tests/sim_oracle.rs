@@ -14,11 +14,14 @@
 
 use automap::api::{Artifact, BaselineSolve, BeamSolve, CompiledPlan,
                    ExactSolve, PipelineSolution, PlanOpts, Planner,
-                   PortfolioSolve, PpOpts, SimMeasureSolve, Solve};
+                   PortfolioSolve, PpOpts, Schedule, SimMeasureSolve,
+                   Solve};
 use automap::cluster::SimCluster;
+use automap::gen::P2pTransfer;
 use automap::graph::models::{gpt2, mlp, Gpt2Cfg};
 use automap::graph::Graph;
-use automap::sim::DeviceModel;
+use automap::sim::{replay_1f1b, replay_schedule, DeviceModel,
+                   PipelineStageSpec, StagePhases};
 use automap::solver::SolveOpts;
 use automap::util::json::Json;
 
@@ -293,7 +296,7 @@ fn pipeline_plans_replay_with_per_stage_budgets() {
         // the recorded step time IS a simulation result: replaying the
         // loaded artifact reproduces it bit-for-bit, with every stage's
         // per-microbatch ledger inside the per-device budget
-        let trace = back.replay_1f1b().expect(tag);
+        let trace = back.replay().expect(tag);
         assert_eq!(trace.step_time, sol.iter_time, "{tag}");
         assert_eq!(trace.devices.len(), 2);
         for (s, d) in trace.devices.iter().enumerate() {
@@ -398,4 +401,149 @@ fn pipeline_beats_single_stage_on_a_cross_node_scenario() {
         "pipeline parallelism must win at least one cross-node \
          scenario (memory-infeasible single stage, or faster step)"
     );
+}
+
+/// (S, B, v) shape sweep through the public `replay_schedule` surface:
+/// every feasible combination replays without deadlock, the interleaved
+/// bubble never exceeds the 1F1B bubble at equal B (links are comm-free,
+/// so the makespan difference *is* the bubble), and each stage's ledger
+/// peak stays within the schedule's closed-form in-flight ramp.
+#[test]
+fn interleaved_shape_sweep_stays_deadlock_free_within_budgets() {
+    let act = 24.0;
+    let params = 3.0;
+    let mk = |s_total: usize| -> Vec<PipelineStageSpec> {
+        (0..s_total)
+            .map(|s| PipelineStageSpec {
+                phases: StagePhases {
+                    fwd: 1.0 + s as f64 * 0.125,
+                    bwd: 1.7 + s as f64 * 0.0625,
+                    exposed_grad: 0.0,
+                    act_bytes: act,
+                    fwd_transient: 0.0,
+                    bwd_transient: 0.0,
+                    param_bytes: params,
+                },
+                p2p_in: (s > 0).then(|| P2pTransfer {
+                    from_stage: s - 1,
+                    to_stage: s,
+                    bytes_fwd: 0.0,
+                    bytes_bwd: 0.0,
+                    alpha: 0.0,
+                    beta: f64::INFINITY,
+                    streams: 1,
+                }),
+            })
+            .collect()
+    };
+    for s_total in [2usize, 3, 4] {
+        let stages = mk(s_total);
+        for mult in [1usize, 2, 4] {
+            let nb = s_total * mult; // interleaving needs B % S == 0
+            let base = replay_1f1b(&stages, nb).unwrap();
+            for v in [2usize, 3] {
+                let sched = Schedule::Interleaved { v };
+                assert!(sched.feasible_for(s_total, nb));
+                let tag = format!("S={s_total} B={nb} v={v}");
+                let tr = replay_schedule(&stages, nb, sched)
+                    .unwrap_or_else(|e| panic!("{tag}: {e}"));
+                assert!(
+                    tr.step_time.is_finite() && tr.step_time > 0.0,
+                    "{tag}"
+                );
+                assert!(
+                    tr.step_time <= base.step_time + 1e-9,
+                    "{tag}: interleaved bubble {} exceeds 1F1B {}",
+                    tr.step_time,
+                    base.step_time
+                );
+                for (s, d) in tr.devices.iter().enumerate() {
+                    // the ramp bound counts whole chunk activations:
+                    // in_flight_bound rounds chunks up to microbatch
+                    // units, so expand it back before pricing chunks
+                    let act_chunk = act / (nb * v) as f64;
+                    let chunks =
+                        (sched.in_flight_bound(s_total, s, nb) * v)
+                            as f64;
+                    let cap = params + chunks * act_chunk;
+                    assert!(
+                        d.peak_mem <= cap + 1e-6,
+                        "{tag} stage {s}: ledger peak {} exceeds the \
+                         in-flight ramp bound {cap}",
+                        d.peak_mem
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The acceptance scenario: on a bandwidth-bound fig5 prefix (intra-op
+/// comm-bound, cheap stage boundaries) with few microbatches, the
+/// schedule zoo's DP must *choose* interleaving — and its replayed step
+/// must beat the forced non-interleaved 1F1B solve at the same
+/// microbatch count, with the ledger still inside the budget.
+#[test]
+fn dp_selects_interleaved_on_a_bandwidth_bound_fig5_scenario() {
+    // deep-and-wide so per-stage compute dwarfs the single boundary
+    // tensor: the t/2 bubble shrink is worth many extra PCIe hops
+    let g = gpt2(&Gpt2Cfg {
+        vocab: 512,
+        seq: 64,
+        d_model: 1024,
+        n_layer: 6,
+        n_head: 8,
+        d_ff: 4096,
+        batch: 8,
+    });
+    let dev = DeviceModel::a100_80gb();
+    let cluster = SimCluster::fig5_prefix(4);
+    let solve = |schedule: Vec<Schedule>| {
+        let mut opts = fast_opts();
+        opts.pp = Some(PpOpts {
+            min_stages: 2,
+            max_stages: 2,
+            // B = S: the bubble is half the step under 1F1B, so the
+            // v-fold bubble shrink dwarfs the extra boundary hops
+            microbatches: vec![2],
+            schedule,
+            ..Default::default()
+        });
+        let mut p = Planner::new(&g, &cluster, &dev).with_opts(opts);
+        p.solve_pipeline().expect("pipeline solves").clone()
+    };
+
+    let auto = solve(vec![
+        Schedule::OneF1B,
+        Schedule::Interleaved { v: 2 },
+    ]);
+    let f1b = solve(vec![Schedule::OneF1B]);
+
+    assert_eq!(
+        auto.schedule,
+        Schedule::Interleaved { v: 2 },
+        "the DP must select the interleaved schedule here"
+    );
+    assert_eq!(auto.microbatches, f1b.microbatches, "same B");
+    assert!(
+        auto.iter_time < f1b.iter_time,
+        "interleaved replayed step {} must beat 1F1B {} at equal B",
+        auto.iter_time,
+        f1b.iter_time
+    );
+
+    // the winner still honors every per-stage ledger budget, and the
+    // recorded step time is a replayable simulation result
+    auto.validate().expect("winner validates");
+    let trace = auto.replay().expect("winner replays");
+    assert_eq!(trace.step_time, auto.iter_time);
+    for (s, d) in trace.devices.iter().enumerate() {
+        assert!(
+            d.peak_mem <= auto.budget,
+            "stage {s}: interleaved peak {:.3} GB exceeds the {:.3} \
+             GB budget",
+            d.peak_mem / 1e9,
+            auto.budget / 1e9
+        );
+    }
 }
