@@ -492,8 +492,15 @@ impl<'a> Planner<'a> {
         }
         let fp = self.graph_fp.as_ref().unwrap();
         let tb = std::time::Instant::now();
+        let mut sp = crate::obs::trace::span("sgraph", "planner");
+        sp.arg(
+            "shape",
+            crate::util::json::s(&format!("{:?}", mesh.shape)),
+        );
         let (ctx, built) =
             self.store.get_or_build(fp, self.graph, mesh, self.dev);
+        sp.arg("built", crate::util::json::Json::Bool(built));
+        drop(sp);
         emit(&mut self.progress, ProgressEvent::SgraphBuild {
             shape: mesh.shape.clone(),
             ms: tb.elapsed().as_secs_f64() * 1e3,
@@ -517,6 +524,8 @@ impl<'a> Planner<'a> {
             emit(&mut self.progress, ProgressEvent::StageStart {
                 stage: PlanStage::Detect,
             });
+            let _sp =
+                crate::obs::trace::span(PlanStage::Detect.name(), "planner");
             let t = Phase::new("cluster-detect");
             let report = ClusterReport::probe(cluster, self.opts.seed);
             let ms = t.elapsed_ms();
@@ -539,6 +548,8 @@ impl<'a> Planner<'a> {
             emit(&mut self.progress, ProgressEvent::StageStart {
                 stage: PlanStage::Meshes,
             });
+            let _sp =
+                crate::obs::trace::span(PlanStage::Meshes.name(), "planner");
             let t0 = std::time::Instant::now();
             let mc = MeshCandidates::enumerate(
                 self.report.as_ref().unwrap(),
@@ -578,6 +589,12 @@ impl<'a> Planner<'a> {
         emit(&mut self.progress, ProgressEvent::StageStart {
             stage: PlanStage::Sharding,
         });
+        let mut stage_sp =
+            crate::obs::trace::span(PlanStage::Sharding.name(), "planner");
+        stage_sp.arg(
+            "backend",
+            crate::util::json::s(&self.backend_name()),
+        );
         let t0 = std::time::Instant::now();
         if analytic {
             self.profile();
@@ -707,6 +724,8 @@ impl<'a> Planner<'a> {
         emit(&mut self.progress, ProgressEvent::StageStart {
             stage: PlanStage::Ckpt,
         });
+        let _sp =
+            crate::obs::trace::span(PlanStage::Ckpt.name(), "planner");
         let t0 = std::time::Instant::now();
         let sharding = self.sharding.clone().unwrap();
 
@@ -994,6 +1013,8 @@ impl<'a> Planner<'a> {
         emit(&mut self.progress, ProgressEvent::StageStart {
             stage: PlanStage::Lower,
         });
+        let _sp =
+            crate::obs::trace::span(PlanStage::Lower.name(), "planner");
         let t0 = std::time::Instant::now();
         self.profile();
         let total_flops = self.prof.as_ref().unwrap().total_flops();
@@ -1115,6 +1136,8 @@ impl<'a> Planner<'a> {
         emit(&mut self.progress, ProgressEvent::StageStart {
             stage: PlanStage::Pipeline,
         });
+        let _sp =
+            crate::obs::trace::span(PlanStage::Pipeline.name(), "planner");
         let t0 = std::time::Instant::now();
         let budget = self.effective_budget();
         let total_flops = self.prof.as_ref().unwrap().total_flops();

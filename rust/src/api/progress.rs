@@ -305,8 +305,13 @@ impl ProgressHub {
         Arc::new(ProgressHub { sink: Box::new(sink) })
     }
 
-    /// Deliver one event to the sink.
+    /// Deliver one event to the sink. Also taps the event into the
+    /// metrics bridge: every hub-routed event (daemon jobs, worker-born
+    /// pipeline-cell events) feeds `/v1/metrics` with no second
+    /// instrumentation pass. The daemon's hubless fallback records the
+    /// same tap, so each event is counted exactly once.
     pub fn emit(&self, ev: &ProgressEvent) {
+        crate::obs::metrics::record_event(ev);
         (self.sink)(ev);
     }
 

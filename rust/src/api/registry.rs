@@ -254,6 +254,9 @@ impl PlanRegistry {
     ) -> Result<()> {
         let kind = intern_kind(kind)
             .ok_or_else(|| anyhow!("unknown artifact kind '{kind}'"))?;
+        let mut sp = crate::obs::trace::span("registry-store", "io");
+        sp.arg("kind", s(kind));
+        sp.arg("bytes", num(bytes.len() as f64));
         let path = self.path_of(fingerprint, kind)?;
         atomic_write(&path, bytes)?;
         // ceil so any measured sub-millisecond solve still counts as
@@ -280,6 +283,8 @@ impl PlanRegistry {
     /// the index, in which case the entry is dropped).
     pub fn load(&self, fingerprint: &str, kind: &str) -> Option<Vec<u8>> {
         let kind = intern_kind(kind)?;
+        let mut sp = crate::obs::trace::span("registry-load", "io");
+        sp.arg("kind", s(kind));
         let key = (fingerprint.to_string(), kind);
         if !self.state.lock().unwrap().entries.contains_key(&key) {
             return None;
@@ -358,6 +363,7 @@ impl PlanRegistry {
     /// future recompute), LRU as the tiebreak. Returns the evicted
     /// entries in eviction order.
     pub fn gc(&self, max_bytes: u64) -> Result<Vec<RegistryEntry>> {
+        let _sp = crate::obs::trace::span("registry-gc", "io");
         let victims: Vec<RegistryEntry> = {
             // One lock acquisition for both the byte total and the
             // candidate list. Re-reading via `entries()` after dropping

@@ -459,6 +459,15 @@ impl PlanService {
         let fingerprint = fingerprint.to_string();
         let kind = kind_of(req);
         let t0 = Instant::now();
+        // root span of this request: every planner stage, backend solve,
+        // and pool-worker span below nests under it (one Perfetto
+        // process track per request)
+        let mut req_sp = crate::obs::trace::span(
+            format!("plan {}", &fingerprint[..fingerprint.len().min(12)]),
+            "service",
+        );
+        req_sp.arg("tag", crate::util::json::s(&req.tag));
+        req_sp.arg("kind", crate::util::json::s(kind));
         loop {
             let resume = match self.cache.lookup(&fingerprint, kind) {
                 Lookup::Artifact(artifact, source, evicted) => {
@@ -559,11 +568,17 @@ impl PlanService {
                 t0.elapsed().as_secs_f64() * 1e3,
             )?;
             self.emit_evictions(evicted);
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            crate::obs::metrics::observe_ms(
+                "automap_solve_ms",
+                &[("backend", &req.backend.describe())],
+                wall_ms,
+            );
             return Ok(PlanOutcome {
                 fingerprint: fingerprint.to_string(),
                 source: PlanSource::Solved,
                 artifact,
-                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                wall_ms,
             });
         }
         match resume {
@@ -588,11 +603,17 @@ impl PlanService {
                     t0.elapsed().as_secs_f64() * 1e3,
                 )?;
                 self.emit_evictions(evicted);
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                crate::obs::metrics::observe_ms(
+                    "automap_solve_ms",
+                    &[("backend", &req.backend.describe())],
+                    wall_ms,
+                );
                 Ok(PlanOutcome {
                     fingerprint: fingerprint.to_string(),
                     source: PlanSource::PartialResume,
                     artifact,
-                    wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    wall_ms,
                 })
             }
             None => {
@@ -613,11 +634,17 @@ impl PlanService {
                     t0.elapsed().as_secs_f64() * 1e3,
                 )?;
                 self.emit_evictions(evicted);
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                crate::obs::metrics::observe_ms(
+                    "automap_solve_ms",
+                    &[("backend", &req.backend.describe())],
+                    wall_ms,
+                );
                 Ok(PlanOutcome {
                     fingerprint: fingerprint.to_string(),
                     source: PlanSource::Solved,
                     artifact,
-                    wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    wall_ms,
                 })
             }
         }

@@ -115,6 +115,8 @@ impl Solve for BeamSolve {
     }
 
     fn solve(&self, sg: &SolverGraph, budget: f64) -> Option<Solution> {
+        let mut sp = crate::obs::trace::span("beam", "solve");
+        sp.arg("beam_width", num(self.0.beam_width as f64));
         solve(sg, budget, self.0)
     }
 }
@@ -138,6 +140,7 @@ impl Solve for ExactSolve {
         sg: &SolverGraph,
         budget: f64,
     ) -> (Option<Solution>, SolveMeta) {
+        let _sp = crate::obs::trace::span("exact-bnb", "solve");
         // the reference branch-and-bound always runs to exhaustion
         (
             solve_exact(sg, budget),
@@ -188,6 +191,11 @@ impl Solve for IlpSolve {
         sg: &SolverGraph,
         budget: f64,
     ) -> (Option<Solution>, SolveMeta) {
+        let mut sp = crate::obs::trace::span("ilp", "solve");
+        sp.arg(
+            "time_budget_ms",
+            num(self.opts.time_budget_ms as f64),
+        );
         let warm = solve(sg, budget, self.warm);
         let r = crate::solver::solve_ilp_detailed(
             sg,
@@ -195,6 +203,9 @@ impl Solve for IlpSolve {
             self.opts,
             warm.as_ref(),
         );
+        sp.arg("bnb_nodes", num(r.nodes as f64));
+        sp.arg("engaged", Json::Bool(r.engaged));
+        sp.arg("proven_optimal", Json::Bool(r.proven_optimal));
         // a refused encoding passed the warm start through: the result
         // is the beam's, so it carries no optimality claim
         let meta = if r.engaged {
@@ -286,14 +297,27 @@ impl Solve for PortfolioSolve {
     }
 
     fn solve(&self, sg: &SolverGraph, budget: f64) -> Option<Solution> {
+        let mut sp = crate::obs::trace::span("portfolio", "solve");
         let mut entrants: Vec<Entrant> =
             self.configs.iter().map(|o| Entrant::Beam(*o)).collect();
         if let Some(opts) = self.ilp {
             entrants.push(Entrant::Ilp(IlpSolve::new(self.configs[0], opts)));
         }
+        sp.arg("entrants", num(entrants.len() as f64));
+        // entrant spans open on pool workers and parent back under this
+        // span via the propagated trace slot
         parallel_map(&entrants, |e| match e {
-            Entrant::Beam(o) => solve(sg, budget, *o),
-            Entrant::Ilp(ilp) => ilp.solve(sg, budget),
+            Entrant::Beam(o) => {
+                let mut esp =
+                    crate::obs::trace::span("entrant:beam", "solve");
+                esp.arg("beam_width", num(o.beam_width as f64));
+                solve(sg, budget, *o)
+            }
+            Entrant::Ilp(ilp) => {
+                let _esp =
+                    crate::obs::trace::span("entrant:ilp", "solve");
+                ilp.solve(sg, budget)
+            }
         })
         .into_iter()
         .flatten()
@@ -330,6 +354,7 @@ impl Solve for SimMeasureSolve {
     }
 
     fn solve(&self, sg: &SolverGraph, budget: f64) -> Option<Solution> {
+        let _sp = crate::obs::trace::span("sim-measure", "solve");
         solve(sg, budget, self.inner)
     }
 

@@ -147,6 +147,13 @@ impl SolverGraphStore {
         let mut built = false;
         let ctx = cell.get_or_init(|| {
             built = true;
+            // distinguishes the actual construction from callers that
+            // merely blocked on the cell and shared the result
+            let mut sp = crate::obs::trace::span("sgraph-build", "planner");
+            sp.arg(
+                "shape",
+                crate::util::json::s(&format!("{:?}", mesh.shape)),
+            );
             let layout = LayoutManager::new(mesh.clone());
             let tb = std::time::Instant::now();
             let sg = SolverGraph::build(g, mesh, dev, &layout);

@@ -292,6 +292,9 @@ impl LayoutManager {
             return Arc::clone(p);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        // only cache misses pay the path search; hits stay span-free so
+        // hot pricing loops don't flood the tracer
+        let _sp = crate::obs::trace::span("layout-convert-miss", "planner");
         let (s, d) = (src.spec(), dst.spec());
         let path = self
             .greedy_search(&s, &d, shape, elem_bytes)

@@ -9,6 +9,7 @@ pub mod cluster;
 pub mod gen;
 pub mod graph;
 pub mod layout;
+pub mod obs;
 pub mod pp;
 pub mod profiler;
 pub mod runtime;

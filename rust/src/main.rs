@@ -50,10 +50,16 @@
 //!             are sent as a wire spec (see serve below), the daemon
 //!             solves or serves from its registry, and the returned
 //!             artifact prints/saves exactly like a local plan.
+//!             --trace-out spans.trace.json records the hierarchical
+//!             planner spans (stages, solver backends, sgraph builds,
+//!             pipeline cells) for this run and writes them as
+//!             Chrome-trace JSON — open in ui.perfetto.dev or
+//!             chrome://tracing. Spans are recorded in-process, so a
+//!             --remote plan (solved in the daemon) leaves them empty.
 //!   replan    --from pipeline.json --cluster C [--model M]
 //!             [--budget-gb G] [--fast] [--backend B] [--max-stages K]
 //!             [--min-stages K] [--microbatches 1,2,4] [--schedule ..]
-//!             [--cache-dir DIR]
+//!             [--cache-dir DIR] [--trace-out spans.trace.json]
 //!             [--save-plan out.json] [--progress] [--json] :
 //!             warm re-plan of a saved PipelineSolution against a changed
 //!             cluster (elastic shrink/grow, degraded or mixed-generation
@@ -88,6 +94,14 @@
 //!             --model/--manifest binds a model — a per-stage intra-op
 //!             replay of every nested stage plan against its
 //!             re-extracted subgraph.
+//!   trace     <artifact.json> [--model M] [--out x.trace.json] :
+//!             export an artifact as Chrome-trace/Perfetto JSON (one
+//!             timeline track per simulated device, memory counter
+//!             track per device). The artifact kind picks the path:
+//!             sim-trace converts directly, pipeline-solution replays
+//!             the recorded microbatched schedule first, compiled-plan
+//!             replays tick-by-tick against the bound --model. Without
+//!             --out the JSON goes to stdout.
 //!   batch     <manifest.json> [--cache-dir DIR] [--out-dir DIR]
 //!             [--progress] [--json] : plan a JSON list of requests
 //!             concurrently (AUTOMAP_THREADS workers) with per-request
@@ -101,10 +115,21 @@
 //!             plan registry (default .automap-cache). Endpoints:
 //!
 //!               POST /v1/plan                plan one spec or a batch
+//!               POST /v1/replan              warm re-plan a solution
 //!               GET  /v1/plan/<fingerprint>  fetch a stored artifact
 //!               GET  /v1/events/<job>        chunked progress stream
 //!               GET  /v1/cache/stats         cache + registry counters
+//!               GET  /v1/metrics             Prometheus text exposition
 //!               GET  /v1/healthz             liveness
+//!
+//!             /v1/metrics exposes per-route request counters and
+//!             latency histograms, admission rejections, per-backend
+//!             solve walltime, stage timings, cache hit/miss/partial
+//!             counters, sgraph build/reuse, pipeline cell reuse/
+//!             recompile, and registry size/GC gauges (metric names
+//!             are tabled in rust/src/api/README.md). Every request is
+//!             also access-logged to stderr (method, path, status,
+//!             bytes, tenant, elapsed ms).
 //!
 //!             Wire format: POST /v1/plan takes one spec object —
 //!               {"model": "gpt2-mini", "cluster": "fig5",
@@ -892,6 +917,95 @@ fn cmd_verify(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// When `--trace-out` is set, record hierarchical planner spans around
+/// `f` and write them as Chrome-trace JSON (ui.perfetto.dev /
+/// chrome://tracing). The tracer is process-wide and disabled-by-default,
+/// so runs without the flag pay only an atomic load per span site.
+fn with_trace_out<T>(
+    args: &Args,
+    f: impl FnOnce() -> Result<T>,
+) -> Result<T> {
+    let out = match args.get("trace-out") {
+        None => return f(),
+        Some(p) => p,
+    };
+    automap::obs::trace::enable();
+    let result = f();
+    automap::obs::trace::disable();
+    let spans = automap::obs::trace::take();
+    let mut text =
+        automap::obs::perfetto::spans_to_chrome(&spans).to_string();
+    text.push('\n');
+    std::fs::write(out, text)
+        .map_err(|e| anyhow!("writing {out}: {e}"))?;
+    eprintln!(
+        "planner trace ({} span(s)) written to {out} — open in \
+         ui.perfetto.dev",
+        spans.len()
+    );
+    result
+}
+
+/// `automap trace`: export an artifact as Chrome-trace/Perfetto JSON.
+/// `sim-trace` artifacts convert directly; `pipeline-solution` artifacts
+/// replay their recorded microbatched schedule first; `compiled-plan`
+/// artifacts replay tick-by-tick against the bound `--model`.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args.positional.first().ok_or_else(|| {
+        anyhow!(
+            "usage: automap trace <trace.json|pipeline.json|plan.json> \
+             [--model M] [--out x.trace.json]"
+        )
+    })?;
+    let kind = artifact_kind(path)?;
+    let chrome = if kind == automap::sim::SimTrace::KIND {
+        let trace = automap::sim::SimTrace::load(path)?;
+        automap::obs::perfetto::sim_trace_to_chrome(&trace)
+    } else if kind == PipelineSolution::KIND {
+        let sol = PipelineSolution::load(path)?;
+        let trace = sol
+            .replay()
+            .map_err(|e| anyhow!("trace FAILED: {path}: {e}"))?;
+        automap::obs::perfetto::sim_trace_to_chrome(&trace)
+    } else if kind == CompiledPlan::KIND {
+        let model = args.get_or("model", "gpt2-mini");
+        let g = gpt2(&model_for(model)?);
+        let plan = CompiledPlan::load(path)?;
+        if plan.graph_nodes != g.len() {
+            return Err(anyhow!(
+                "{path} was compiled for a {}-node graph but --model \
+                 {} builds {} nodes — pass the model the plan was \
+                 saved with",
+                plan.graph_nodes,
+                model,
+                g.len()
+            ));
+        }
+        let trace = plan
+            .replay_sim(&g, &DeviceModel::a100_80gb())
+            .map_err(|e| anyhow!("trace FAILED: {path}: {e}"))?;
+        automap::obs::perfetto::sim_trace_to_chrome(&trace)
+    } else {
+        return Err(anyhow!(
+            "{path}: artifact kind '{kind}' has no trace view (expected \
+             sim-trace, pipeline-solution, or compiled-plan)"
+        ));
+    };
+    match args.get("out") {
+        Some(out) => {
+            let mut text = chrome.to_string();
+            text.push('\n');
+            std::fs::write(out, text)
+                .map_err(|e| anyhow!("writing {out}: {e}"))?;
+            eprintln!(
+                "chrome trace written to {out} — open in ui.perfetto.dev"
+            );
+        }
+        None => println!("{chrome}"),
+    }
+    Ok(())
+}
+
 /// One parsed `automap batch` manifest entry (strings feed `request_for`).
 struct ManifestEntry {
     tag: String,
@@ -1398,9 +1512,10 @@ fn main() -> Result<()> {
     }
     let args = Args::from_env();
     match args.subcommand.as_deref() {
-        Some("plan") => cmd_plan(&args),
-        Some("replan") => cmd_replan(&args),
+        Some("plan") => with_trace_out(&args, || cmd_plan(&args)),
+        Some("replan") => with_trace_out(&args, || cmd_replan(&args)),
         Some("verify") => cmd_verify(&args),
+        Some("trace") => cmd_trace(&args),
         Some("batch") => cmd_batch(&args),
         Some("serve") => cmd_serve(&args),
         Some("registry") => cmd_registry(&args),
@@ -1412,8 +1527,9 @@ fn main() -> Result<()> {
         Some("table4") => cmd_table4(&args),
         _ => {
             println!(
-                "usage: automap <plan|replan|verify|batch|serve|registry|\
-                 cache|cluster|profile|train|tp-check|table4> [--options]"
+                "usage: automap <plan|replan|verify|trace|batch|serve|\
+                 registry|cache|cluster|profile|train|tp-check|table4> \
+                 [--options]"
             );
             println!(
                 "  plan     compile a plan (--pp for two-level pipeline \
@@ -1426,6 +1542,10 @@ fn main() -> Result<()> {
             println!(
                 "  verify   replay a saved CompiledPlan or \
                  PipelineSolution artifact"
+            );
+            println!(
+                "  trace    export an artifact (or, via plan/replan \
+                 --trace-out, planner spans) as Chrome-trace JSON"
             );
             println!("  batch    plan a JSON manifest of requests concurrently");
             println!("  serve    run the planning daemon over a plan registry");

@@ -1,0 +1,402 @@
+//! Atomic counter / gauge / histogram registry with Prometheus text
+//! exposition (`GET /v1/metrics` on the daemon).
+//!
+//! Series are keyed by metric name plus a sorted label set, so
+//! exposition is deterministic. Histograms use fixed log-scale
+//! millisecond buckets (1-2-5 decades): latency distributions across
+//! endpoints and solver backends stay comparable without per-series
+//! configuration.
+//!
+//! Two feeds keep existing code uninstrumented:
+//!
+//! - [`record_event`] taps the [`ProgressEvent`] stream (the daemon
+//!   calls it once per event, wherever the event was born), turning
+//!   stage timings, cache lookups, sgraph builds, and pipeline-cell
+//!   outcomes into counters and histograms.
+//! - [`sync_cache_stats`] mirrors the service's exact cumulative
+//!   [`CacheStats`] counters into gauges at scrape time, so `/v1/
+//!   metrics` always agrees with `/v1/cache/stats`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::api::cache::CacheStats;
+use crate::api::ProgressEvent;
+
+/// Fixed log-scale latency buckets, milliseconds (`+Inf` is implicit).
+pub const BUCKETS_MS: [f64; 13] = [
+    0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0,
+    2000.0, 5000.0,
+];
+
+struct Histo {
+    /// One slot per bucket plus the trailing `+Inf`.
+    counts: Vec<AtomicU64>,
+    /// Sum of observations, microseconds (integer keeps it atomic).
+    sum_us: AtomicU64,
+}
+
+impl Histo {
+    fn new() -> Histo {
+        Histo {
+            counts: (0..=BUCKETS_MS.len())
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    fn observe_ms(&self, ms: f64) {
+        let slot = BUCKETS_MS
+            .iter()
+            .position(|b| ms <= *b)
+            .unwrap_or(BUCKETS_MS.len());
+        self.counts[slot].fetch_add(1, Ordering::Relaxed);
+        self.sum_us
+            .fetch_add((ms.max(0.0) * 1e3) as u64, Ordering::Relaxed);
+    }
+}
+
+/// metric name -> rendered label set -> series.
+type Series<T> = Mutex<BTreeMap<String, BTreeMap<String, Arc<T>>>>;
+
+struct Registry {
+    counters: Series<AtomicU64>,
+    gauges: Series<AtomicU64>,
+    histos: Series<Histo>,
+}
+
+fn registry() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(|| Registry {
+        counters: Mutex::new(BTreeMap::new()),
+        gauges: Mutex::new(BTreeMap::new()),
+        histos: Mutex::new(BTreeMap::new()),
+    })
+}
+
+fn escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// `{a="b",c="d"}` with labels sorted by key; empty string for none.
+fn label_key(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut ls: Vec<(String, String)> = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), escape(v)))
+        .collect();
+    ls.sort();
+    let body = ls
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{v}\""))
+        .collect::<Vec<_>>()
+        .join(",");
+    format!("{{{body}}}")
+}
+
+/// Splice an extra label (the histogram `le`) into a rendered set.
+fn with_label(rendered: &str, key: &str, value: &str) -> String {
+    if rendered.is_empty() {
+        format!("{{{key}=\"{value}\"}}")
+    } else {
+        format!(
+            "{},{key}=\"{value}\"}}",
+            &rendered[..rendered.len() - 1]
+        )
+    }
+}
+
+fn series<T>(
+    map: &Series<T>,
+    name: &str,
+    labels: &[(&str, &str)],
+    make: impl FnOnce() -> T,
+) -> Arc<T> {
+    let key = label_key(labels);
+    let mut m = map.lock().unwrap();
+    Arc::clone(
+        m.entry(name.to_string())
+            .or_default()
+            .entry(key)
+            .or_insert_with(|| Arc::new(make())),
+    )
+}
+
+/// Add `by` to a counter series.
+pub fn inc(name: &str, labels: &[(&str, &str)], by: u64) {
+    series(&registry().counters, name, labels, || AtomicU64::new(0))
+        .fetch_add(by, Ordering::Relaxed);
+}
+
+/// Set a gauge series to `value`.
+pub fn gauge_set(name: &str, labels: &[(&str, &str)], value: u64) {
+    series(&registry().gauges, name, labels, || AtomicU64::new(0))
+        .store(value, Ordering::Relaxed);
+}
+
+/// Record one latency observation, milliseconds.
+pub fn observe_ms(name: &str, labels: &[(&str, &str)], ms: f64) {
+    series(&registry().histos, name, labels, Histo::new)
+        .observe_ms(ms);
+}
+
+/// Prometheus text exposition of every registered series.
+pub fn expose() -> String {
+    let r = registry();
+    let mut out = String::new();
+    for (name, by_label) in r.counters.lock().unwrap().iter() {
+        let _ = writeln!(out, "# TYPE {name} counter");
+        for (labels, v) in by_label {
+            let _ = writeln!(
+                out,
+                "{name}{labels} {}",
+                v.load(Ordering::Relaxed)
+            );
+        }
+    }
+    for (name, by_label) in r.gauges.lock().unwrap().iter() {
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        for (labels, v) in by_label {
+            let _ = writeln!(
+                out,
+                "{name}{labels} {}",
+                v.load(Ordering::Relaxed)
+            );
+        }
+    }
+    for (name, by_label) in r.histos.lock().unwrap().iter() {
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        for (labels, h) in by_label {
+            let mut cum = 0u64;
+            for (i, b) in BUCKETS_MS.iter().enumerate() {
+                cum += h.counts[i].load(Ordering::Relaxed);
+                let _ = writeln!(
+                    out,
+                    "{name}_bucket{} {cum}",
+                    with_label(labels, "le", &format!("{b}"))
+                );
+            }
+            cum += h.counts[BUCKETS_MS.len()].load(Ordering::Relaxed);
+            let _ = writeln!(
+                out,
+                "{name}_bucket{} {cum}",
+                with_label(labels, "le", "+Inf")
+            );
+            let _ = writeln!(
+                out,
+                "{name}_sum{labels} {}",
+                h.sum_us.load(Ordering::Relaxed) as f64 / 1e3
+            );
+            let _ = writeln!(out, "{name}_count{labels} {cum}");
+        }
+    }
+    out
+}
+
+/// The `ProgressEvent` tap: one call per event turns the existing
+/// emission points into metrics with no second instrumentation pass.
+pub fn record_event(ev: &ProgressEvent) {
+    match ev {
+        ProgressEvent::StageDone { stage, ms } => {
+            observe_ms(
+                "automap_stage_ms",
+                &[("stage", stage.name())],
+                *ms,
+            );
+        }
+        ProgressEvent::SgraphBuild { ms, shared, .. } => {
+            inc(
+                "automap_sgraph_total",
+                &[("result", if *shared { "shared" } else { "built" })],
+                1,
+            );
+            observe_ms("automap_sgraph_wait_ms", &[], *ms);
+        }
+        ProgressEvent::CacheLookup { source, .. } => {
+            inc(
+                "automap_cache_lookups_total",
+                &[("source", source.name())],
+                1,
+            );
+        }
+        ProgressEvent::CacheEvicted { .. } => {
+            inc("automap_cache_evictions_total", &[], 1);
+        }
+        ProgressEvent::RequestDone { source, ms, .. } => {
+            inc(
+                "automap_requests_total",
+                &[("source", source.name())],
+                1,
+            );
+            observe_ms("automap_request_ms", &[], *ms);
+        }
+        ProgressEvent::PipelineCellSolved { feasible, ms, .. } => {
+            inc(
+                "automap_pp_cells_total",
+                &[(
+                    "result",
+                    if *feasible { "solved" } else { "infeasible" },
+                )],
+                1,
+            );
+            observe_ms("automap_pp_cell_ms", &[], *ms);
+        }
+        ProgressEvent::CellReused { .. } => {
+            inc("automap_pp_cells_total", &[("result", "reused")], 1);
+        }
+        ProgressEvent::CellRecompiled { ms, .. } => {
+            inc(
+                "automap_pp_cells_total",
+                &[("result", "recompiled")],
+                1,
+            );
+            observe_ms("automap_pp_cell_ms", &[], *ms);
+        }
+        ProgressEvent::PipelineChosen { schedule, .. } => {
+            inc(
+                "automap_pp_chosen_total",
+                &[("schedule", schedule)],
+                1,
+            );
+        }
+        _ => {}
+    }
+}
+
+/// Mirror the service's exact cumulative cache/registry/cell counters
+/// into gauges (called at scrape time by `GET /v1/metrics`).
+pub fn sync_cache_stats(st: &CacheStats) {
+    for (name, v) in [
+        ("automap_cache_memory_hits", st.memory_hits),
+        ("automap_cache_disk_hits", st.disk_hits),
+        ("automap_cache_partial_resumes", st.partial_resumes),
+        ("automap_cache_misses", st.misses),
+        ("automap_cache_memory_evictions", st.evictions),
+        ("automap_sgraph_builds", st.sgraph_builds),
+        ("automap_sgraph_reuses", st.sgraph_reuses),
+        ("automap_registry_artifacts", st.registry_artifacts),
+        ("automap_registry_bytes", st.registry_bytes),
+        ("automap_registry_gc_evictions", st.registry_gc_evictions),
+        ("automap_cells_reused", st.cell_reuses),
+        ("automap_cells_recompiled", st.cell_recompiles),
+    ] {
+        gauge_set(name, &[], v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_expose_sorted_labels() {
+        inc("test_ctr_total", &[("b", "2"), ("a", "1")], 3);
+        inc("test_ctr_total", &[("b", "2"), ("a", "1")], 2);
+        gauge_set("test_gauge", &[], 7);
+        let text = expose();
+        assert!(text.contains("# TYPE test_ctr_total counter"));
+        assert!(
+            text.contains("test_ctr_total{a=\"1\",b=\"2\"} 5"),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE test_gauge gauge"));
+        assert!(text.contains("test_gauge 7"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_consistent() {
+        observe_ms("test_hist_ms", &[("k", "v")], 0.3);
+        observe_ms("test_hist_ms", &[("k", "v")], 3.0);
+        observe_ms("test_hist_ms", &[("k", "v")], 9999.0);
+        let text = expose();
+        let mut cum_prev = 0u64;
+        let mut inf = None;
+        let mut count = None;
+        let mut sum = None;
+        for line in text.lines() {
+            if let Some(rest) =
+                line.strip_prefix("test_hist_ms_bucket{k=\"v\",le=\"")
+            {
+                let v: u64 = rest
+                    .split_once("\"} ")
+                    .unwrap()
+                    .1
+                    .parse()
+                    .unwrap();
+                assert!(v >= cum_prev, "buckets must be cumulative");
+                cum_prev = v;
+                if rest.starts_with("+Inf") {
+                    inf = Some(v);
+                }
+            } else if let Some(rest) =
+                line.strip_prefix("test_hist_ms_count{k=\"v\"} ")
+            {
+                count = Some(rest.parse::<u64>().unwrap());
+            } else if let Some(rest) =
+                line.strip_prefix("test_hist_ms_sum{k=\"v\"} ")
+            {
+                sum = Some(rest.parse::<f64>().unwrap());
+            }
+        }
+        assert_eq!(count, Some(3));
+        assert_eq!(inf, count, "_count must equal the +Inf bucket");
+        let sum = sum.expect("sum line present");
+        assert!(
+            (sum - (0.3 + 3.0 + 9999.0)).abs() < 0.01,
+            "sum {sum} must match the observations"
+        );
+    }
+
+    #[test]
+    fn progress_events_feed_the_bridge() {
+        use crate::api::cache::PlanSource;
+        record_event(&ProgressEvent::CacheLookup {
+            fingerprint: "f".into(),
+            source: PlanSource::MemoryHit,
+        });
+        record_event(&ProgressEvent::CacheLookup {
+            fingerprint: "f".into(),
+            source: PlanSource::MemoryHit,
+        });
+        let text = expose();
+        let line = text
+            .lines()
+            .find(|l| {
+                l.starts_with(
+                    "automap_cache_lookups_total{source=\"memory-hit\"}",
+                )
+            })
+            .expect("bridge counter registered");
+        let n: u64 =
+            line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!(n >= 2);
+    }
+
+    #[test]
+    fn cache_stats_sync_to_gauges() {
+        let st = CacheStats {
+            memory_hits: 4,
+            disk_hits: 1,
+            partial_resumes: 0,
+            misses: 2,
+            evictions: 0,
+            sgraph_builds: 3,
+            sgraph_reuses: 5,
+            registry_artifacts: 6,
+            registry_bytes: 7890,
+            registry_gc_evictions: 1,
+            cell_reuses: 2,
+            cell_recompiles: 9,
+        };
+        sync_cache_stats(&st);
+        let text = expose();
+        assert!(text.contains("automap_cache_memory_hits 4"));
+        assert!(text.contains("automap_registry_bytes 7890"));
+        assert!(text.contains("automap_cells_recompiled 9"));
+    }
+}

@@ -1,0 +1,28 @@
+//! Observability: hierarchical span tracing, Perfetto/Chrome-trace
+//! export, and a Prometheus-style metrics registry.
+//!
+//! Three pillars, all std-only:
+//!
+//! - [`trace`] — a process-wide, lock-light span recorder. Spans nest
+//!   via a thread-local stack on one thread and ride the
+//!   [`util::pool`](crate::util::pool) keyed-slot propagation across
+//!   `parallel_map` fan-outs, so pipeline-cell, portfolio, and batch
+//!   worker spans parent under the request that spawned them (the same
+//!   mechanism [`ProgressHub`](crate::api::ProgressHub) uses for
+//!   events). Disabled by default at near-zero cost; `automap plan
+//!   --trace-out x.json` enables it for one run.
+//! - [`perfetto`] — converters to Chrome-trace JSON (`traceEvents`):
+//!   recorded planner spans (pid = request, tid = pool worker) and
+//!   simulated [`SimTrace`](crate::sim::SimTrace) timelines (pid = the
+//!   simulated step, tid = device, plus a per-device memory counter
+//!   track), both loadable in Perfetto / `chrome://tracing`. Surfaced
+//!   as `automap trace <artifact>` and `plan/replan --trace-out`.
+//! - [`metrics`] — an atomic counter/gauge/histogram registry with
+//!   Prometheus text exposition, fed by a
+//!   [`ProgressEvent`](crate::api::ProgressEvent) tap (existing
+//!   emission points need no second instrumentation pass) and exposed
+//!   by the daemon as `GET /v1/metrics`.
+
+pub mod metrics;
+pub mod perfetto;
+pub mod trace;

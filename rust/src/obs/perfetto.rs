@@ -1,0 +1,297 @@
+//! Chrome-trace / Perfetto JSON exporters.
+//!
+//! Both converters emit the `traceEvents` array format that Perfetto
+//! and `chrome://tracing` load directly: `ph:"X"` complete events with
+//! microsecond `ts`/`dur`, `ph:"C"` counter samples for the memory
+//! track, and `ph:"M"` metadata naming the process/thread rows.
+//!
+//! - [`spans_to_chrome`]: recorded planner spans ([`obs::trace`]
+//!   (super::trace)). `pid` is the request id (concurrent daemon
+//!   requests become separate process tracks), `tid` the pool worker.
+//! - [`sim_trace_to_chrome`]: a simulated [`SimTrace`] timeline.
+//!   `pid` 0 is the simulated step, `tid` the device index; compute /
+//!   comm / recompute segments keep their kinds as categories, and each
+//!   device gets a `memory-dev<i>` counter track from the ledger.
+//!
+//! Output is deterministic for a given input (events in device/time
+//! order, canonical JSON writer), which is what lets the golden
+//! fixture pin the `SimTrace` conversion byte-for-byte.
+
+use crate::sim::SimTrace;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::trace::SpanRec;
+
+fn meta(name: &str, pid: u64, tid: Option<u64>, label: &str) -> Json {
+    let mut pairs = vec![
+        ("name", s(name)),
+        ("ph", s("M")),
+        ("pid", num(pid as f64)),
+    ];
+    if let Some(t) = tid {
+        pairs.push(("tid", num(t as f64)));
+    }
+    pairs.push(("args", obj(vec![("name", s(label))])));
+    obj(pairs)
+}
+
+/// Recorded planner spans -> Chrome-trace JSON.
+pub fn spans_to_chrome(spans: &[SpanRec]) -> Json {
+    let mut spans: Vec<&SpanRec> = spans.iter().collect();
+    spans.sort_by(|a, b| {
+        a.start_us
+            .partial_cmp(&b.start_us)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+    let mut events = Vec::new();
+    let mut pids: Vec<u64> = spans.iter().map(|sp| sp.request).collect();
+    pids.sort_unstable();
+    pids.dedup();
+    for pid in &pids {
+        events.push(meta(
+            "process_name",
+            *pid,
+            None,
+            &format!("request {pid}"),
+        ));
+    }
+    let mut tids: Vec<(u64, u64)> =
+        spans.iter().map(|sp| (sp.request, sp.tid)).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    for (pid, tid) in &tids {
+        events.push(meta(
+            "thread_name",
+            *pid,
+            Some(*tid),
+            &format!("worker {tid}"),
+        ));
+    }
+    for sp in &spans {
+        let mut args: Vec<(&str, Json)> =
+            vec![("span_id", num(sp.id as f64))];
+        if let Some(p) = sp.parent {
+            args.push(("parent", num(p as f64)));
+        }
+        for (k, v) in &sp.args {
+            args.push((k.as_str(), v.clone()));
+        }
+        events.push(obj(vec![
+            ("name", s(&sp.name)),
+            ("cat", s(sp.cat)),
+            ("ph", s("X")),
+            ("ts", num(sp.start_us)),
+            ("dur", num(sp.dur_us)),
+            ("pid", num(sp.request as f64)),
+            ("tid", num(sp.tid as f64)),
+            ("args", obj(args)),
+        ]));
+    }
+    obj(vec![
+        ("traceEvents", arr(events)),
+        ("displayTimeUnit", s("ms")),
+    ])
+}
+
+/// A simulated timeline -> Chrome-trace JSON (per-device event tracks
+/// plus a per-device resident-memory counter track).
+pub fn sim_trace_to_chrome(trace: &SimTrace) -> Json {
+    let mut events = Vec::new();
+    events.push(meta("process_name", 0, None, "simulated step"));
+    for d in &trace.devices {
+        events.push(meta(
+            "thread_name",
+            0,
+            Some(d.device as u64),
+            &format!("device {}", d.device),
+        ));
+    }
+    for d in &trace.devices {
+        for e in &d.events {
+            events.push(obj(vec![
+                ("name", s(&e.label)),
+                ("cat", s(e.kind.name())),
+                ("ph", s("X")),
+                ("ts", num(e.t0 * 1e6)),
+                ("dur", num((e.t1 - e.t0) * 1e6)),
+                ("pid", num(0.0)),
+                ("tid", num(d.device as f64)),
+                ("args", obj(vec![("mem", num(e.mem))])),
+            ]));
+            events.push(obj(vec![
+                ("name", s(&format!("memory-dev{}", d.device))),
+                ("ph", s("C")),
+                ("ts", num(e.t1 * 1e6)),
+                ("pid", num(0.0)),
+                ("tid", num(d.device as f64)),
+                ("args", obj(vec![("bytes", num(e.mem))])),
+            ]));
+        }
+    }
+    obj(vec![
+        ("traceEvents", arr(events)),
+        ("displayTimeUnit", s("ms")),
+        (
+            "otherData",
+            obj(vec![
+                ("step_time_us", num(trace.step_time * 1e6)),
+                ("peak_mem", num(trace.peak_mem)),
+                (
+                    "mesh_shape",
+                    arr(trace
+                        .mesh_shape
+                        .iter()
+                        .map(|&x| num(x as f64))
+                        .collect()),
+                ),
+            ]),
+        ),
+    ])
+}
+
+/// Max `ts + dur` over complete events, microseconds — the span-total
+/// the acceptance test pins against the `SimTrace` step time.
+pub fn span_end_us(chrome: &Json) -> f64 {
+    let mut max = 0.0f64;
+    if let Some(events) = chrome.get("traceEvents").as_arr() {
+        for e in events {
+            if e.get("ph").as_str() != Some("X") {
+                continue;
+            }
+            let end = e.get("ts").as_f64().unwrap_or(0.0)
+                + e.get("dur").as_f64().unwrap_or(0.0);
+            max = max.max(end);
+        }
+    }
+    max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::trace::{DeviceTimeline, EventKind, TraceEvent};
+
+    fn two_device_trace() -> SimTrace {
+        SimTrace {
+            mesh_shape: vec![2],
+            analytic: false,
+            step_time: 0.5,
+            peak_mem: 2048.0,
+            param_mem: 512.0,
+            compute_time: 0.4,
+            comm_time: 0.1,
+            recompute_time: 0.0,
+            exposed_grad_time: 0.0,
+            devices: vec![
+                DeviceTimeline {
+                    device: 0,
+                    peak_mem: 2048.0,
+                    events: vec![
+                        TraceEvent {
+                            kind: EventKind::FwdCompute,
+                            label: "fwd s0".into(),
+                            t0: 0.0,
+                            t1: 0.2,
+                            mem: 1024.0,
+                        },
+                        TraceEvent {
+                            kind: EventKind::BwdCompute,
+                            label: "bwd s0".into(),
+                            t0: 0.2,
+                            t1: 0.5,
+                            mem: 512.0,
+                        },
+                    ],
+                },
+                DeviceTimeline {
+                    device: 1,
+                    peak_mem: 1024.0,
+                    events: vec![TraceEvent {
+                        kind: EventKind::Comm,
+                        label: "p2p".into(),
+                        t0: 0.1,
+                        t1: 0.3,
+                        mem: 256.0,
+                    }],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn sim_conversion_is_deterministic_and_complete() {
+        let t = two_device_trace();
+        let a = sim_trace_to_chrome(&t).to_string();
+        let b = sim_trace_to_chrome(&t).to_string();
+        assert_eq!(a, b);
+        let v = sim_trace_to_chrome(&t);
+        let events = v.get("traceEvents").as_arr().unwrap();
+        // 1 process + 2 thread metadata, 3 X events, 3 C samples
+        assert_eq!(events.len(), 9);
+        let x_count = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .count();
+        assert_eq!(x_count, 3);
+        let c_count = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("C"))
+            .count();
+        assert_eq!(c_count, 3);
+    }
+
+    #[test]
+    fn span_totals_agree_with_the_step_time() {
+        let t = two_device_trace();
+        let v = sim_trace_to_chrome(&t);
+        let end = span_end_us(&v);
+        assert!(
+            (end - t.step_time * 1e6).abs() < 1.0,
+            "span end {end} us vs step {} us",
+            t.step_time * 1e6
+        );
+    }
+
+    #[test]
+    fn planner_spans_become_request_scoped_tracks() {
+        let spans = vec![
+            SpanRec {
+                id: 1,
+                parent: None,
+                request: 1,
+                name: "plan".into(),
+                cat: "service",
+                start_us: 0.0,
+                dur_us: 100.0,
+                tid: 1,
+                args: vec![],
+            },
+            SpanRec {
+                id: 2,
+                parent: Some(1),
+                request: 1,
+                name: "solve-sharding".into(),
+                cat: "planner",
+                start_us: 10.0,
+                dur_us: 50.0,
+                tid: 2,
+                args: vec![(
+                    "shape".into(),
+                    crate::util::json::s("[2,2]"),
+                )],
+            },
+        ];
+        let v = spans_to_chrome(&spans);
+        let events = v.get("traceEvents").as_arr().unwrap();
+        // 1 process meta + 2 thread metas + 2 X events
+        assert_eq!(events.len(), 5);
+        let x: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .collect();
+        assert_eq!(x.len(), 2);
+        assert_eq!(x[0].get("pid").as_f64(), Some(1.0));
+        assert_eq!(x[1].get("args").get("parent").as_f64(), Some(1.0));
+    }
+}

@@ -1,0 +1,300 @@
+//! Process-wide hierarchical span recorder.
+//!
+//! A [`SpanGuard`] opens a span on creation and records it on drop.
+//! Nesting works two ways:
+//!
+//! - **Same thread:** a thread-local stack; a span opened while another
+//!   is live parents under it and shares its request id.
+//! - **Across the pool:** opening a span installs a
+//!   [`pool`](crate::util::pool) keyed slot carrying `(span id, request
+//!   id)`; `parallel_map` clones slots into its workers, so a span
+//!   opened on a worker thread (pipeline cell, portfolio entrant,
+//!   batch request) parents under the span that was live when the
+//!   fan-out started — exactly how `ProgressHub` crosses the pool.
+//!
+//! A span opened with an empty stack and no inherited slot starts a new
+//! *request* (its id becomes the Perfetto `pid`), so concurrent daemon
+//! requests separate into distinct process tracks.
+//!
+//! The recorder is **disabled by default**: `span()` then costs one
+//! relaxed atomic load and allocates nothing. When enabled, the only
+//! shared write is a single `Mutex<Vec<_>>` push per finished span.
+
+use std::any::TypeId;
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::pool;
+
+/// One finished span, as drained by [`take`].
+#[derive(Debug, Clone)]
+pub struct SpanRec {
+    pub id: u64,
+    /// Enclosing span, if any (same request).
+    pub parent: Option<u64>,
+    /// Root-span id of the request this span belongs to.
+    pub request: u64,
+    pub name: String,
+    /// Coarse category (`planner`, `solve`, `pp`, `io`, `serve`, ...).
+    pub cat: &'static str,
+    /// Start, microseconds since the tracer's epoch.
+    pub start_us: f64,
+    pub dur_us: f64,
+    /// Small per-thread integer (1 = first thread seen), the Perfetto
+    /// `tid`.
+    pub tid: u64,
+    /// Free-form span arguments (B&B node counts, mesh shapes, ...).
+    pub args: Vec<(String, Json)>,
+}
+
+/// The `(parent, request)` pair propagated into pool workers.
+struct TraceCtx {
+    parent: u64,
+    request: u64,
+}
+
+struct Tracer {
+    enabled: AtomicBool,
+    epoch: Instant,
+    next_id: AtomicU64,
+    spans: Mutex<Vec<SpanRec>>,
+}
+
+fn tracer() -> &'static Tracer {
+    static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+    GLOBAL.get_or_init(|| Tracer {
+        enabled: AtomicBool::new(false),
+        epoch: Instant::now(),
+        next_id: AtomicU64::new(1),
+        spans: Mutex::new(Vec::new()),
+    })
+}
+
+thread_local! {
+    /// Live spans on this thread: `(span id, request id)`, innermost
+    /// last.
+    static STACK: RefCell<Vec<(u64, u64)>> = const { RefCell::new(Vec::new()) };
+    /// Lazily-assigned small thread number for the Perfetto `tid`.
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+fn worker_tid() -> u64 {
+    TID.with(|t| {
+        let mut v = t.get();
+        if v == 0 {
+            static NEXT: AtomicU64 = AtomicU64::new(1);
+            v = NEXT.fetch_add(1, Ordering::Relaxed);
+            t.set(v);
+        }
+        v
+    })
+}
+
+/// Start recording (clears anything recorded before).
+pub fn enable() {
+    let t = tracer();
+    t.spans.lock().unwrap().clear();
+    t.enabled.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording; already-open spans still record on drop.
+pub fn disable() {
+    tracer().enabled.store(false, Ordering::Relaxed);
+}
+
+/// True when the recorder is collecting spans.
+pub fn enabled() -> bool {
+    tracer().enabled.load(Ordering::Relaxed)
+}
+
+/// Drain every recorded span (oldest first is not guaranteed; sort by
+/// `start_us` for display).
+pub fn take() -> Vec<SpanRec> {
+    std::mem::take(&mut *tracer().spans.lock().unwrap())
+}
+
+/// Open a span. Returns an inert guard (no allocation, no bookkeeping)
+/// while the tracer is disabled.
+pub fn span(name: impl Into<String>, cat: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { live: None };
+    }
+    let t = tracer();
+    let id = t.next_id.fetch_add(1, Ordering::Relaxed);
+    let (parent, request) = STACK.with(|s| match s.borrow().last() {
+        Some(&(pid, req)) => (Some(pid), req),
+        None => match pool::current_slot(TypeId::of::<TraceCtx>())
+            .and_then(|c| c.downcast::<TraceCtx>().ok())
+        {
+            Some(ctx) => (Some(ctx.parent), ctx.request),
+            // no enclosing span anywhere: this span IS the request
+            None => (None, id),
+        },
+    });
+    STACK.with(|s| s.borrow_mut().push((id, request)));
+    let prev_slot = pool::install_slot(
+        TypeId::of::<TraceCtx>(),
+        Some(Arc::new(TraceCtx { parent: id, request })),
+    );
+    SpanGuard {
+        live: Some(LiveSpan {
+            id,
+            parent,
+            request,
+            name: name.into(),
+            cat,
+            start_us: t.epoch.elapsed().as_secs_f64() * 1e6,
+            t0: Instant::now(),
+            prev_slot,
+            args: Vec::new(),
+        }),
+    }
+}
+
+struct LiveSpan {
+    id: u64,
+    parent: Option<u64>,
+    request: u64,
+    name: String,
+    cat: &'static str,
+    start_us: f64,
+    t0: Instant,
+    prev_slot: Option<pool::Ctx>,
+    args: Vec<(String, Json)>,
+}
+
+/// RAII handle for an open span; records the span when dropped.
+#[must_use = "dropping the guard immediately closes the span"]
+pub struct SpanGuard {
+    live: Option<LiveSpan>,
+}
+
+impl SpanGuard {
+    /// Attach an argument shown in the trace viewer's span details.
+    pub fn arg(&mut self, key: &str, value: Json) {
+        if let Some(live) = &mut self.live {
+            live.args.push((key.to_string(), value));
+        }
+    }
+
+    /// The request id this span belongs to (None when inert).
+    pub fn request(&self) -> Option<u64> {
+        self.live.as_ref().map(|l| l.request)
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(live) = self.live.take() else { return };
+        STACK.with(|s| {
+            s.borrow_mut().pop();
+        });
+        pool::install_slot(
+            TypeId::of::<TraceCtx>(),
+            live.prev_slot.clone(),
+        );
+        let rec = SpanRec {
+            id: live.id,
+            parent: live.parent,
+            request: live.request,
+            name: live.name.clone(),
+            cat: live.cat,
+            start_us: live.start_us,
+            dur_us: live.t0.elapsed().as_secs_f64() * 1e6,
+            tid: worker_tid(),
+            args: live.args.clone(),
+        };
+        tracer().spans.lock().unwrap().push(rec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tracer is process-global; serialize tests that flip it.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let _l = lock();
+        disable();
+        {
+            let mut sp = span("noop", "test");
+            sp.arg("k", crate::util::json::num(1.0));
+            assert!(sp.request().is_none());
+        }
+        assert!(take().is_empty());
+    }
+
+    #[test]
+    fn same_thread_spans_nest_and_share_a_request() {
+        let _l = lock();
+        enable();
+        {
+            let root = span("root", "test");
+            let root_req = root.request().unwrap();
+            {
+                let child = span("child", "test");
+                assert_eq!(child.request(), Some(root_req));
+            }
+        }
+        disable();
+        let spans = take();
+        assert_eq!(spans.len(), 2);
+        let child =
+            spans.iter().find(|s| s.name == "child").unwrap();
+        let root = spans.iter().find(|s| s.name == "root").unwrap();
+        assert_eq!(child.parent, Some(root.id));
+        assert_eq!(child.request, root.request);
+        assert_eq!(root.parent, None);
+        assert_eq!(root.request, root.id);
+    }
+
+    #[test]
+    fn pool_worker_spans_parent_under_the_spawning_request() {
+        let _l = lock();
+        enable();
+        let root_req = {
+            let root = span("fanout-root", "test");
+            let items: Vec<usize> = (0..16).collect();
+            pool::parallel_map(&items, |i| {
+                let mut sp = span(format!("cell-{i}"), "test");
+                sp.arg("index", crate::util::json::num(*i as f64));
+            });
+            root.request().unwrap()
+        };
+        disable();
+        let spans = take();
+        let cells: Vec<&SpanRec> = spans
+            .iter()
+            .filter(|s| s.name.starts_with("cell-"))
+            .collect();
+        assert_eq!(cells.len(), 16);
+        for c in &cells {
+            // the fan-out root is the request root, so worker spans
+            // parent directly under it and inherit its request id
+            assert_eq!(
+                c.parent,
+                Some(root_req),
+                "worker span {} must parent under the fan-out root",
+                c.name
+            );
+            assert_eq!(c.request, root_req);
+        }
+        // the guard restored the slot: a fresh span is a fresh request
+        enable();
+        drop(span("fresh", "test"));
+        disable();
+        let fresh = take();
+        assert_eq!(fresh.len(), 1);
+        assert!(fresh[0].parent.is_none());
+        assert_ne!(fresh[0].request, root_req);
+    }
+}

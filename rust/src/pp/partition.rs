@@ -313,6 +313,13 @@ pub fn solve(
         parallel_map(&reps, |&ci| {
             let (i, j, a, k) = key_list[ci];
             let p = preps[ci].as_ref().expect("reps are prepared");
+            // worker-side span: parents under the request that opened
+            // the pipeline stage via the pool's propagated trace slot
+            let mut sp = crate::obs::trace::span(
+                format!("cell[{i},{j}]x{k}"),
+                "pp",
+            );
+            sp.arg("devices", crate::util::json::s(&format!("{a}..{}", a + k)));
             let t0 = std::time::Instant::now();
             let graph: &Graph = match &p.sub {
                 None => g,

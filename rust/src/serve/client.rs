@@ -120,6 +120,17 @@ impl Client {
         Ok(v)
     }
 
+    /// `GET /v1/metrics` — the daemon's Prometheus text exposition
+    /// (counters, gauges, and latency histograms), returned verbatim.
+    pub fn metrics(&self) -> Result<String> {
+        let (status, bytes) = self.get("/v1/metrics")?;
+        if status != 200 {
+            return Err(response_error(status, &parse_body(&bytes)?));
+        }
+        String::from_utf8(bytes)
+            .map_err(|_| anyhow!("/v1/metrics: non-UTF8 exposition"))
+    }
+
     /// `GET /v1/cache/stats` — the daemon's [`CacheStats`] counters,
     /// including the registry tier.
     ///

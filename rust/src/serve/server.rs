@@ -161,9 +161,13 @@ impl State {
         let service = PlanService::with_dir(&config.registry)?
             .on_progress(|ev| {
                 // the hub is found wherever the event was born: the
-                // handler thread, or a pool worker that inherited it
-                if let Some(hub) = ProgressHub::current() {
-                    hub.emit(ev);
+                // handler thread, or a pool worker that inherited it.
+                // hub.emit taps the metrics registry itself; events with
+                // no hub (jobless requests) are tapped here instead, so
+                // every event is counted exactly once either way
+                match ProgressHub::current() {
+                    Some(hub) => hub.emit(ev),
+                    None => crate::obs::metrics::record_event(ev),
                 }
             });
         Ok(State {
@@ -324,8 +328,13 @@ fn json_body(v: &Json) -> Vec<u8> {
     text.into_bytes()
 }
 
-fn respond<W: Write>(w: &mut W, status: u16, v: &Json) {
-    Response::json(json_body(v), status).write_to(w).ok();
+/// Write a JSON response; returns `(status, body bytes)` for the access
+/// log and the per-endpoint metrics.
+fn respond<W: Write>(w: &mut W, status: u16, v: &Json) -> (u16, u64) {
+    let body = json_body(v);
+    let bytes = body.len() as u64;
+    Response::json(body, status).write_to(w).ok();
+    (status, bytes)
 }
 
 fn outcome_json(out: &PlanOutcome) -> Json {
@@ -339,7 +348,15 @@ fn outcome_json(out: &PlanOutcome) -> Json {
 }
 
 /// Route one request and write one response (or one chunked stream).
+///
+/// Every routed request leaves three observability trails: a `serve`
+/// span, an access-log line on stderr, and per-endpoint counters
+/// (`automap_http_requests_total{route,status}` +
+/// `automap_http_request_ms{route}`). Route labels are static patterns
+/// (`/v1/plan/:fp`, not the fingerprint itself) so metric cardinality
+/// stays bounded.
 fn handle<R: BufRead, W: Write>(state: &State, r: &mut R, w: &mut W) {
+    let t0 = std::time::Instant::now();
     let req = match Request::read_from(r) {
         Ok(rq) => rq,
         Err(e) => {
@@ -352,34 +369,58 @@ fn handle<R: BufRead, W: Write>(state: &State, r: &mut R, w: &mut W) {
         }
     };
     let path = req.path.split('?').next().unwrap_or("").to_string();
-    match (req.method.as_str(), path.as_str()) {
-        ("GET", "/v1/healthz") => respond(
-            w,
-            200,
-            &obj(vec![
-                ("ok", Json::Bool(true)),
-                ("service", s("automap-serve")),
-                (
-                    "registry",
-                    s(&state.registry_dir.display().to_string()),
-                ),
-            ]),
+    let tenant = req
+        .header("x-automap-tenant")
+        .unwrap_or("-")
+        .to_string();
+    let mut sp = crate::obs::trace::span(
+        format!("{} {path}", req.method),
+        "serve",
+    );
+    let (route, (status, bytes)) = match (req.method.as_str(), path.as_str())
+    {
+        ("GET", "/v1/healthz") => (
+            "/v1/healthz",
+            respond(
+                w,
+                200,
+                &obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("service", s("automap-serve")),
+                    (
+                        "registry",
+                        s(&state.registry_dir.display().to_string()),
+                    ),
+                ]),
+            ),
         ),
-        ("GET", "/v1/cache/stats") => {
-            respond(w, 200, &stats_json(&state.service.stats()))
+        ("GET", "/v1/metrics") => {
+            ("/v1/metrics", handle_metrics(state, w))
         }
-        ("GET", p) if p.starts_with("/v1/plan/") => {
-            handle_fetch(state, w, &p["/v1/plan/".len()..])
+        ("GET", "/v1/cache/stats") => (
+            "/v1/cache/stats",
+            respond(w, 200, &stats_json(&state.service.stats())),
+        ),
+        ("GET", p) if p.starts_with("/v1/plan/") => (
+            "/v1/plan/:fp",
+            handle_fetch(state, w, &p["/v1/plan/".len()..]),
+        ),
+        ("GET", p) if p.starts_with("/v1/events/") => (
+            "/v1/events/:job",
+            handle_events(state, w, &p["/v1/events/".len()..]),
+        ),
+        ("POST", "/v1/plan") => {
+            ("/v1/plan", handle_plan(state, w, &req))
         }
-        ("GET", p) if p.starts_with("/v1/events/") => {
-            handle_events(state, w, &p["/v1/events/".len()..])
+        ("POST", "/v1/replan") => {
+            ("/v1/replan", handle_replan(state, w, &req))
         }
-        ("POST", "/v1/plan") => handle_plan(state, w, &req),
-        ("POST", "/v1/replan") => handle_replan(state, w, &req),
         (_, "/v1/plan")
         | (_, "/v1/replan")
         | (_, "/v1/healthz")
-        | (_, "/v1/cache/stats") => {
+        | (_, "/v1/metrics")
+        | (_, "/v1/cache/stats") => (
+            "method-not-allowed",
             respond(
                 w,
                 405,
@@ -387,42 +428,88 @@ fn handle<R: BufRead, W: Write>(state: &State, r: &mut R, w: &mut W) {
                     "method-not-allowed",
                     &format!("{} {} is not supported", req.method, path),
                 ),
-            )
-        }
-        _ => respond(
-            w,
-            404,
-            &error_json(
-                "not-found",
-                &format!(
-                    "no route for {} {} (see /v1/healthz, /v1/plan, \
-                     /v1/replan, /v1/plan/<fingerprint>, \
-                     /v1/events/<job>, /v1/cache/stats)",
-                    req.method, path
+            ),
+        ),
+        _ => (
+            "other",
+            respond(
+                w,
+                404,
+                &error_json(
+                    "not-found",
+                    &format!(
+                        "no route for {} {} (see /v1/healthz, /v1/plan, \
+                         /v1/replan, /v1/plan/<fingerprint>, \
+                         /v1/events/<job>, /v1/cache/stats, /v1/metrics)",
+                        req.method, path
+                    ),
                 ),
             ),
         ),
-    }
+    };
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    let status_str = status.to_string();
+    crate::obs::metrics::inc(
+        "automap_http_requests_total",
+        &[("route", route), ("status", &status_str)],
+        1,
+    );
+    crate::obs::metrics::observe_ms(
+        "automap_http_request_ms",
+        &[("route", route)],
+        ms,
+    );
+    sp.arg("status", num(status as f64));
+    sp.arg("bytes", num(bytes as f64));
+    drop(sp);
+    crate::info!(
+        "{} {} {} {}B tenant={} {:.1}ms",
+        req.method,
+        path,
+        status,
+        bytes,
+        tenant,
+        ms
+    );
+}
+
+/// `GET /v1/metrics`: Prometheus text exposition of every counter,
+/// gauge, and histogram, with the live cache/registry totals folded
+/// into their gauges at scrape time.
+fn handle_metrics<W: Write>(state: &State, w: &mut W) -> (u16, u64) {
+    crate::obs::metrics::sync_cache_stats(&state.service.stats());
+    let body = crate::obs::metrics::expose().into_bytes();
+    let bytes = body.len() as u64;
+    Response::new(200)
+        .header("content-type", "text/plain; version=0.0.4")
+        .body(body)
+        .write_to(w)
+        .ok();
+    (200, bytes)
 }
 
 /// `GET /v1/plan/<fingerprint>`: the registered artifact, byte-for-byte
 /// as the registry stores it.
-fn handle_fetch<W: Write>(state: &State, w: &mut W, fp: &str) {
+fn handle_fetch<W: Write>(
+    state: &State,
+    w: &mut W,
+    fp: &str,
+) -> (u16, u64) {
     let Some(reg) = state.service.cache().registry() else {
-        respond(
+        return respond(
             w,
             500,
             &error_json("no-registry", "daemon has no registry tier"),
         );
-        return;
     };
     for kind in [KIND_PLAN, KIND_PIPELINE] {
         if let Some(bytes) = reg.load(fp, kind) {
+            let n = bytes.len() as u64;
             Response::json(bytes, 200)
                 .header("x-automap-kind", kind)
                 .write_to(w)
                 .ok();
-            return;
+            return (200, n);
         }
     }
     respond(
@@ -432,19 +519,23 @@ fn handle_fetch<W: Write>(state: &State, w: &mut W, fp: &str) {
             "not-found",
             &format!("no plan or pipeline artifact for {fp}"),
         ),
-    );
+    )
 }
 
 /// `GET /v1/events/<job>`: chunked stream, one event JSON per line.
-fn handle_events<W: Write>(state: &State, w: &mut W, job: &str) {
+fn handle_events<W: Write>(
+    state: &State,
+    w: &mut W,
+    job: &str,
+) -> (u16, u64) {
     let Some(ch) = state.jobs.get(job) else {
-        respond(
+        return respond(
             w,
             404,
             &error_json("not-found", &format!("unknown job '{job}'")),
         );
-        return;
     };
+    let mut sent = 0u64;
     let mut cw = ChunkedWriter::new(w, 200)
         .header("content-type", "application/json");
     while let Some(ev) = ch.next() {
@@ -454,9 +545,11 @@ fn handle_events<W: Write>(state: &State, w: &mut W, job: &str) {
         if cw.chunk(line.as_bytes()).is_err() {
             break; // client hung up; keep draining nothing
         }
+        sent += line.len() as u64;
     }
     cw.finish().ok();
     state.jobs.remove(job);
+    (200, sent)
 }
 
 fn tenant_of(req: &Request, spec: Option<&PlanSpec>) -> String {
@@ -467,49 +560,54 @@ fn tenant_of(req: &Request, spec: Option<&PlanSpec>) -> String {
 }
 
 /// `POST /v1/plan`: a single spec object, or `{"requests": [...]}`.
-fn handle_plan<W: Write>(state: &State, w: &mut W, req: &Request) {
+fn handle_plan<W: Write>(
+    state: &State,
+    w: &mut W,
+    req: &Request,
+) -> (u16, u64) {
     let text = match std::str::from_utf8(&req.body) {
         Ok(t) => t,
         Err(_) => {
-            respond(
+            return respond(
                 w,
                 400,
                 &error_json("bad-request", "body is not UTF-8"),
             );
-            return;
         }
     };
     let body = match Json::parse(text) {
         Ok(v) => v,
         Err(e) => {
-            respond(
+            return respond(
                 w,
                 400,
                 &error_json("bad-request", &format!("body: {e}")),
             );
-            return;
         }
     };
     if let Some(items) = body.get("requests").as_arr() {
-        handle_plan_batch(state, w, req, &body, items);
-        return;
+        return handle_plan_batch(state, w, req, &body, items);
     }
     let spec = match PlanSpec::from_json(&body) {
         Ok(sp) => sp,
         Err(e) => {
-            respond(
+            return respond(
                 w,
                 400,
                 &error_json("bad-request", &e.to_string()),
             );
-            return;
         }
     };
     let tenant = tenant_of(req, Some(&spec));
     let permit = match state.admission.enter(&tenant) {
         Ok(p) => p,
         Err(rej) => {
-            respond(
+            crate::obs::metrics::inc(
+                "automap_admission_rejections_total",
+                &[("tenant", &tenant)],
+                1,
+            );
+            return respond(
                 w,
                 429,
                 &error_json(
@@ -521,7 +619,6 @@ fn handle_plan<W: Write>(state: &State, w: &mut W, req: &Request) {
                     ),
                 ),
             );
-            return;
         }
     };
     let channel = spec.job.as_deref().map(|id| state.jobs.register(id));
@@ -553,32 +650,34 @@ fn handle_plan<W: Write>(state: &State, w: &mut W, req: &Request) {
 /// `cells_recompiled` counters for this request.
 ///
 /// [`CellStore`]: crate::api::CellStore
-fn handle_replan<W: Write>(state: &State, w: &mut W, req: &Request) {
+fn handle_replan<W: Write>(
+    state: &State,
+    w: &mut W,
+    req: &Request,
+) -> (u16, u64) {
     let text = match std::str::from_utf8(&req.body) {
         Ok(t) => t,
         Err(_) => {
-            respond(
+            return respond(
                 w,
                 400,
                 &error_json("bad-request", "body is not UTF-8"),
             );
-            return;
         }
     };
     let body = match Json::parse(text) {
         Ok(v) => v,
         Err(e) => {
-            respond(
+            return respond(
                 w,
                 400,
                 &error_json("bad-request", &format!("body: {e}")),
             );
-            return;
         }
     };
     let Some(from) = body.get("from").as_str().map(str::to_string)
     else {
-        respond(
+        return respond(
             w,
             400,
             &error_json(
@@ -587,21 +686,19 @@ fn handle_replan<W: Write>(state: &State, w: &mut W, req: &Request) {
                  registered pipeline solution",
             ),
         );
-        return;
     };
     let spec = match PlanSpec::from_json(&body) {
         Ok(sp) => sp,
         Err(e) => {
-            respond(
+            return respond(
                 w,
                 400,
                 &error_json("bad-request", &e.to_string()),
             );
-            return;
         }
     };
     if spec.pp.is_none() {
-        respond(
+        return respond(
             w,
             400,
             &error_json(
@@ -610,18 +707,16 @@ fn handle_replan<W: Write>(state: &State, w: &mut W, req: &Request) {
                  \"pp\" object",
             ),
         );
-        return;
     }
     let Some(reg) = state.service.cache().registry() else {
-        respond(
+        return respond(
             w,
             500,
             &error_json("no-registry", "daemon has no registry tier"),
         );
-        return;
     };
     let Some(bytes) = reg.load(&from, KIND_PIPELINE) else {
-        respond(
+        return respond(
             w,
             404,
             &error_json(
@@ -629,7 +724,6 @@ fn handle_replan<W: Write>(state: &State, w: &mut W, req: &Request) {
                 &format!("no pipeline solution registered under {from}"),
             ),
         );
-        return;
     };
     let prev = match std::str::from_utf8(&bytes)
         .map_err(|_| anyhow!("artifact is not UTF-8"))
@@ -640,7 +734,7 @@ fn handle_replan<W: Write>(state: &State, w: &mut W, req: &Request) {
     {
         Ok(p) => p,
         Err(e) => {
-            respond(
+            return respond(
                 w,
                 500,
                 &error_json(
@@ -648,14 +742,18 @@ fn handle_replan<W: Write>(state: &State, w: &mut W, req: &Request) {
                     &format!("loading {from}: {e}"),
                 ),
             );
-            return;
         }
     };
     let tenant = tenant_of(req, Some(&spec));
     let permit = match state.admission.enter(&tenant) {
         Ok(p) => p,
         Err(rej) => {
-            respond(
+            crate::obs::metrics::inc(
+                "automap_admission_rejections_total",
+                &[("tenant", &tenant)],
+                1,
+            );
+            return respond(
                 w,
                 429,
                 &error_json(
@@ -667,7 +765,6 @@ fn handle_replan<W: Write>(state: &State, w: &mut W, req: &Request) {
                     ),
                 ),
             );
-            return;
         }
     };
     let cells = state.service.cell_store();
@@ -727,12 +824,17 @@ fn handle_plan_batch<W: Write>(
     req: &Request,
     body: &Json,
     items: &[Json],
-) {
+) -> (u16, u64) {
     let tenant = tenant_of(req, None);
     let permit = match state.admission.enter(&tenant) {
         Ok(p) => p,
         Err(rej) => {
-            respond(
+            crate::obs::metrics::inc(
+                "automap_admission_rejections_total",
+                &[("tenant", &tenant)],
+                1,
+            );
+            return respond(
                 w,
                 429,
                 &error_json(
@@ -744,7 +846,6 @@ fn handle_plan_batch<W: Write>(
                     ),
                 ),
             );
-            return;
         }
     };
     // resolve what resolves; per-entry failures become per-entry errors
@@ -780,5 +881,5 @@ fn handle_plan_batch<W: Write>(
     drop(permit);
     let rows: Vec<Json> =
         slots.into_iter().map(|v| v.expect("slot filled")).collect();
-    respond(w, 200, &obj(vec![("results", arr(rows))]));
+    respond(w, 200, &obj(vec![("results", arr(rows))]))
 }

@@ -2,25 +2,71 @@
 //!
 //! The coordinator uses `Phase` spans as the coarse profiler called for in
 //! the performance pass (flamegraph tooling is unavailable offline).
+//!
+//! All output goes to **stderr**: stdout belongs to machine-readable
+//! command output (`--json` pipes into `jq`), so a stray log line must
+//! never interleave with it. Lines carry a wall-clock timestamp, and the
+//! default level can be set from the environment via
+//! `AUTOMAP_LOG=quiet|info|debug` (an explicit [`set_level`] call wins).
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
-static LEVEL: AtomicU8 = AtomicU8::new(1); // 0 quiet, 1 info, 2 debug
+/// Sentinel meaning "not yet initialized from the environment".
+const UNSET: u8 = u8::MAX;
+
+// 0 quiet, 1 info, 2 debug; UNSET until first read or set_level
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
 
 pub fn set_level(level: u8) {
     LEVEL.store(level, Ordering::Relaxed);
 }
 
 pub fn level() -> u8 {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != UNSET {
+        return v;
+    }
+    let from_env = match std::env::var("AUTOMAP_LOG").as_deref() {
+        Ok("quiet") | Ok("0") => 0,
+        Ok("debug") | Ok("2") => 2,
+        _ => 1,
+    };
+    // racing initializers compute the same value (the env is stable);
+    // a concurrent set_level wins the exchange and sticks
+    let _ = LEVEL.compare_exchange(
+        UNSET,
+        from_env,
+        Ordering::Relaxed,
+        Ordering::Relaxed,
+    );
     LEVEL.load(Ordering::Relaxed)
+}
+
+/// Wall-clock `HH:MM:SS.mmm` (UTC) for log-line prefixes.
+pub fn timestamp() -> String {
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap_or_default();
+    let secs = now.as_secs();
+    format!(
+        "{:02}:{:02}:{:02}.{:03}",
+        (secs / 3600) % 24,
+        (secs / 60) % 60,
+        secs % 60,
+        now.subsec_millis()
+    )
 }
 
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => {
         if $crate::util::logger::level() >= 1 {
-            println!("[info] {}", format!($($arg)*));
+            eprintln!(
+                "[{}] [info] {}",
+                $crate::util::logger::timestamp(),
+                format!($($arg)*)
+            );
         }
     };
 }
@@ -29,7 +75,11 @@ macro_rules! info {
 macro_rules! debug {
     ($($arg:tt)*) => {
         if $crate::util::logger::level() >= 2 {
-            println!("[debug] {}", format!($($arg)*));
+            eprintln!(
+                "[{}] [debug] {}",
+                $crate::util::logger::timestamp(),
+                format!($($arg)*)
+            );
         }
     };
 }
@@ -53,7 +103,12 @@ impl Phase {
 impl Drop for Phase {
     fn drop(&mut self) {
         if level() >= 1 {
-            println!("[phase] {}: {:.1} ms", self.name, self.elapsed_ms());
+            eprintln!(
+                "[{}] [phase] {}: {:.1} ms",
+                timestamp(),
+                self.name,
+                self.elapsed_ms()
+            );
         }
     }
 }
@@ -75,5 +130,15 @@ mod tests {
         set_level(2);
         assert_eq!(level(), 2);
         set_level(old);
+    }
+
+    #[test]
+    fn timestamp_shape() {
+        let t = timestamp();
+        // HH:MM:SS.mmm
+        assert_eq!(t.len(), 12, "{t}");
+        assert_eq!(&t[2..3], ":");
+        assert_eq!(&t[5..6], ":");
+        assert_eq!(&t[8..9], ".");
     }
 }

@@ -16,8 +16,14 @@
 //! facilities (the progress hub,
 //! [`api::progress::ProgressHub`](crate::api::ProgressHub)) survive the
 //! fan-out instead of silently evaporating on worker threads.
+//!
+//! Independent facilities share the fan-out through *keyed slots*
+//! ([`install_slot`]/[`current_slot`]): a small `TypeId`-keyed map
+//! propagated alongside the single legacy context, so the span tracer
+//! ([`obs::trace`](crate::obs::trace)) and the progress hub can both
+//! ride one `parallel_map` without evicting each other.
 
-use std::any::Any;
+use std::any::{Any, TypeId};
 use std::cell::{Cell, RefCell};
 use std::sync::Arc;
 
@@ -31,6 +37,9 @@ thread_local! {
     /// Context inherited by workers this thread spawns (fresh scoped
     /// threads, so the slot dies with each worker — no cleanup needed).
     static CONTEXT: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+    /// `TypeId`-keyed contexts propagated the same way. A `Vec` beats a
+    /// map here: a thread carries at most a handful of slots.
+    static SLOTS: RefCell<Vec<(TypeId, Ctx)>> = const { RefCell::new(Vec::new()) };
 }
 
 /// Install (or clear, with `None`) the calling thread's pool context,
@@ -43,6 +52,38 @@ pub fn install_context(ctx: Option<Ctx>) -> Option<Ctx> {
 /// inherited from the thread that spawned this worker.
 pub fn current_context() -> Option<Ctx> {
     CONTEXT.with(|c| c.borrow().clone())
+}
+
+/// Install (or clear, with `None`) the keyed slot `key` on the calling
+/// thread, returning the displaced value so callers can restore it.
+pub fn install_slot(key: TypeId, ctx: Option<Ctx>) -> Option<Ctx> {
+    SLOTS.with(|s| {
+        let mut slots = s.borrow_mut();
+        let prev = slots
+            .iter()
+            .position(|(k, _)| *k == key)
+            .map(|i| slots.remove(i).1);
+        if let Some(c) = ctx {
+            slots.push((key, c));
+        }
+        prev
+    })
+}
+
+/// The keyed slot `key` on the calling thread: set via [`install_slot`],
+/// or inherited from the thread that spawned this worker.
+pub fn current_slot(key: TypeId) -> Option<Ctx> {
+    SLOTS.with(|s| {
+        s.borrow()
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, c)| Arc::clone(c))
+    })
+}
+
+/// Snapshot of every keyed slot, for propagation into spawned workers.
+fn snapshot_slots() -> Vec<(TypeId, Ctx)> {
+    SLOTS.with(|s| s.borrow().clone())
 }
 
 /// Apply `f` to every item, splitting the index range over worker threads.
@@ -59,6 +100,7 @@ where
     }
     let chunk = items.len().div_ceil(workers);
     let ctx = current_context();
+    let slots = snapshot_slots();
     let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
     std::thread::scope(|scope| {
         let mut rest: &mut [Option<R>] = &mut out;
@@ -68,11 +110,15 @@ where
             rest = tail;
             let f = &f;
             let ctx = &ctx;
+            let slots = &slots;
             let _ = ci;
             handles.push(scope.spawn(move || {
                 IN_POOL.with(|p| p.set(true));
                 if ctx.is_some() {
                     install_context(ctx.clone());
+                }
+                for (key, c) in slots {
+                    install_slot(*key, Some(Arc::clone(c)));
                 }
                 for (slot, item) in head.iter_mut().zip(chunk_items) {
                     *slot = Some(f(item));
@@ -162,6 +208,36 @@ mod tests {
         let prev = install_context(None);
         assert!(prev.is_some());
         assert!(current_context().is_none());
+    }
+
+    #[test]
+    fn keyed_slots_propagate_independently_of_the_legacy_context() {
+        struct Marker(u64);
+        let key = TypeId::of::<Marker>();
+        let items: Vec<usize> = (0..64).collect();
+        assert!(current_slot(key).is_none());
+
+        let prev = install_slot(key, Some(Arc::new(Marker(7)) as Ctx));
+        assert!(prev.is_none());
+        // the legacy context slot stays empty: the two channels are
+        // independent
+        assert!(current_context().is_none());
+        let seen = parallel_map(&items, |_| {
+            current_slot(key)
+                .and_then(|c| c.downcast::<Marker>().ok())
+                .map(|m| m.0)
+        });
+        assert!(seen.iter().all(|v| *v == Some(7)));
+
+        // replacing a slot returns the displaced value
+        let prev = install_slot(key, Some(Arc::new(Marker(8)) as Ctx));
+        assert!(prev.is_some());
+        let prev = install_slot(key, None);
+        assert_eq!(
+            prev.and_then(|c| c.downcast::<Marker>().ok()).map(|m| m.0),
+            Some(8)
+        );
+        assert!(current_slot(key).is_none());
     }
 
     #[test]

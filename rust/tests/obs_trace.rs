@@ -1,0 +1,350 @@
+//! Observability integration tests.
+//!
+//! - Golden Perfetto fixture: converting the checked-in interleaved
+//!   pipeline's `SimTrace` to Chrome-trace JSON must be byte-stable,
+//!   and the exported span totals must agree with the trace's step
+//!   time (the `automap trace` acceptance pin).
+//! - Span nesting, end to end: a real `PlanService::plan` run records
+//!   a root request span with every planner stage (and the backend
+//!   solve) parenting up to it through one request id.
+//! - Prometheus exposition: the `/v1/metrics` text a live daemon would
+//!   serve is well-formed line by line, histogram buckets are
+//!   cumulative, and the `+Inf` bucket equals `_count`.
+//!
+//! Snapshot protocol matches `sim_golden.rs`: missing fixture files are
+//! blessed (written) on first run and enforced afterwards; delete
+//! `sim_il2.perfetto.json` to re-bless after a deliberate exporter
+//! change. The pipeline fixture recipe is byte-identical to
+//! `sim_golden::golden_trace_interleaved_pipeline`, so both suites
+//! share one `sim_il2.pipeline.json` regardless of which blesses it.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::PathBuf;
+
+use automap::api::{Artifact, PipelineSolution, PlanOpts, PlanRequest,
+                   PlanService, Planner, PpOpts, Schedule};
+use automap::cluster::SimCluster;
+use automap::graph::models::{gpt2, Gpt2Cfg};
+use automap::obs::perfetto::{sim_trace_to_chrome, span_end_us};
+use automap::sim::DeviceModel;
+use automap::solver::SolveOpts;
+
+fn fixtures_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures")
+}
+
+/// Mirrors the proven-feasible fast options used across the test suite.
+fn fast_solve() -> SolveOpts {
+    SolveOpts {
+        beam_width: 16,
+        anneal_iters: 200,
+        lagrange_iters: 6,
+        ..Default::default()
+    }
+}
+
+/// Load (or bless) the interleaved pipeline fixture with exactly the
+/// `sim_golden.rs` recipe: the seeded solver makes both suites produce
+/// the same artifact, so the first to run writes it for both.
+fn il2_solution() -> PipelineSolution {
+    let dir = fixtures_dir();
+    fs::create_dir_all(&dir).unwrap();
+    let plan_path = dir.join("sim_il2.pipeline.json");
+    if plan_path.exists() {
+        return PipelineSolution::load(&plan_path).expect("fixture loads");
+    }
+    let g = gpt2(&Gpt2Cfg::mini());
+    let cluster = SimCluster::fig5_prefix(4);
+    let dev = DeviceModel::a100_80gb();
+    let opts = PlanOpts {
+        sweep: 2,
+        solve: fast_solve(),
+        pp: Some(PpOpts {
+            min_stages: 2,
+            max_stages: 2,
+            microbatches: vec![4],
+            schedule: vec![Schedule::Interleaved { v: 2 }],
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let mut p = Planner::new(&g, &cluster, &dev).with_opts(opts);
+    let sol = p.solve_pipeline().expect("golden pipeline solves").clone();
+    sol.save(&plan_path).unwrap();
+    eprintln!("blessed pipeline fixture {}", plan_path.display());
+    sol
+}
+
+#[test]
+fn golden_perfetto_export_of_the_interleaved_pipeline() {
+    let sol = il2_solution();
+    let trace = sol.replay().expect("fixture pipeline replays");
+    let chrome = sim_trace_to_chrome(&trace);
+    let text = chrome.to_string();
+
+    // determinism: a second conversion is byte-identical (precondition
+    // for the snapshot being meaningful)
+    assert_eq!(
+        text,
+        sim_trace_to_chrome(&trace).to_string(),
+        "perfetto conversion must be bit-deterministic"
+    );
+
+    // structure: a non-empty traceEvents array whose complete events
+    // cover every simulated device track
+    let events = chrome
+        .get("traceEvents")
+        .as_arr()
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+    for d in &trace.devices {
+        assert!(
+            events.iter().any(|e| {
+                e.get("ph").as_str() == Some("X")
+                    && e.get("tid").as_f64() == Some(d.device as f64)
+            }),
+            "device {} has no span track",
+            d.device
+        );
+    }
+
+    // the acceptance pin: per-device span totals agree with the
+    // SimTrace — each device's last span ends at its last timeline
+    // event, and the global maximum is the simulated step time
+    for d in &trace.devices {
+        let want_us = d
+            .events
+            .iter()
+            .map(|e| e.t1)
+            .fold(0.0f64, f64::max)
+            * 1e6;
+        let got_us = events
+            .iter()
+            .filter(|e| {
+                e.get("ph").as_str() == Some("X")
+                    && e.get("tid").as_f64() == Some(d.device as f64)
+            })
+            .map(|e| {
+                e.get("ts").as_f64().unwrap_or(0.0)
+                    + e.get("dur").as_f64().unwrap_or(0.0)
+            })
+            .fold(0.0f64, f64::max);
+        assert!(
+            (got_us - want_us).abs() < 1.0,
+            "device {}: span end {got_us} us vs timeline {want_us} us",
+            d.device
+        );
+    }
+    let end = span_end_us(&chrome);
+    assert!(
+        (end - trace.step_time * 1e6).abs() < 1.0,
+        "span end {end} us vs step time {} us",
+        trace.step_time * 1e6
+    );
+    assert_eq!(
+        chrome.get("otherData").get("step_time_us").as_f64(),
+        Some(trace.step_time * 1e6)
+    );
+
+    // snapshot: bless on first run, enforce afterwards
+    let perfetto_path = fixtures_dir().join("sim_il2.perfetto.json");
+    if perfetto_path.exists() {
+        let want = fs::read_to_string(&perfetto_path).unwrap();
+        assert_eq!(
+            want,
+            text,
+            "converting the checked-in interleaved pipeline's trace no \
+             longer reproduces its golden Perfetto export — the \
+             exporter or the replay drifted. If the change is \
+             intentional, delete {} to re-bless.",
+            perfetto_path.display()
+        );
+    } else {
+        fs::write(&perfetto_path, &text).unwrap();
+        eprintln!(
+            "blessed perfetto fixture {}",
+            perfetto_path.display()
+        );
+    }
+}
+
+#[test]
+fn planner_spans_nest_under_one_request_end_to_end() {
+    automap::obs::trace::enable();
+    let service = PlanService::new();
+    let req = PlanRequest::new(
+        "obs-span-nesting",
+        gpt2(&Gpt2Cfg::mini()),
+        SimCluster::fully_connected(2),
+        DeviceModel::a100_80gb(),
+    )
+    .with_opts(PlanOpts {
+        sweep: 2,
+        solve: fast_solve(),
+        ..Default::default()
+    });
+    service.plan(&req).expect("plan succeeds");
+    automap::obs::trace::disable();
+    let spans = automap::obs::trace::take();
+
+    // the service's root request span carries the request tag; filter
+    // on it so concurrently running tests can't interfere
+    let root = spans
+        .iter()
+        .find(|sp| {
+            sp.cat == "service"
+                && sp.args.iter().any(|(k, v)| {
+                    k == "tag" && v.as_str() == Some("obs-span-nesting")
+                })
+        })
+        .expect("root request span recorded");
+    assert!(root.parent.is_none(), "the root has no parent");
+    assert_eq!(
+        root.request, root.id,
+        "a fresh request is rooted at its own span"
+    );
+
+    let mine: Vec<_> = spans
+        .iter()
+        .filter(|sp| sp.request == root.request)
+        .collect();
+    let by_id: HashMap<u64, _> =
+        mine.iter().map(|sp| (sp.id, *sp)).collect();
+    for name in
+        ["detect", "meshes", "solve-sharding", "schedule-ckpt", "lower"]
+    {
+        let sp = mine
+            .iter()
+            .find(|sp| sp.name == name)
+            .unwrap_or_else(|| panic!("stage span '{name}' recorded"));
+        // every stage's parent chain terminates at the request root
+        let mut cur = *sp;
+        let mut hops = 0;
+        while let Some(p) = cur.parent {
+            cur = by_id[&p];
+            hops += 1;
+            assert!(hops < 64, "parent chain must terminate");
+        }
+        assert_eq!(
+            cur.id, root.id,
+            "stage '{name}' must nest under the request root"
+        );
+    }
+    // the backend solve span sits inside the request too
+    assert!(
+        mine.iter().any(|sp| sp.cat == "solve"),
+        "a solver backend span is recorded under the request"
+    );
+}
+
+/// `name{labels} value` -> (name, rendered labels, value).
+fn parse_series(line: &str) -> (String, String, f64) {
+    let (head, val) = line
+        .rsplit_once(' ')
+        .unwrap_or_else(|| panic!("malformed series line: {line}"));
+    let value: f64 = val
+        .parse()
+        .unwrap_or_else(|_| panic!("non-numeric value: {line}"));
+    match head.find('{') {
+        Some(i) => {
+            assert!(head.ends_with('}'), "unterminated labels: {line}");
+            (head[..i].to_string(), head[i..].to_string(), value)
+        }
+        None => (head.to_string(), String::new(), value),
+    }
+}
+
+/// Drop the trailing `le="..."` entry from a rendered label set (the
+/// exposition always splices `le` last), so a bucket line keys the
+/// same series as its `_sum`/`_count` lines: `{le="x"}` becomes the
+/// empty set and `{a="b",le="x"}` becomes `{a="b"}`.
+fn strip_le(labels: &str) -> String {
+    match labels.find("le=\"") {
+        None => labels.to_string(),
+        Some(i) => {
+            let head = labels[..i].trim_end_matches(',');
+            if head == "{" {
+                String::new()
+            } else {
+                format!("{head}}}")
+            }
+        }
+    }
+}
+
+#[test]
+fn metrics_exposition_is_prometheus_parseable() {
+    // a real solve feeds the per-backend walltime histogram; the plan
+    // itself also exercises counters via the stage/progress plumbing
+    let service = PlanService::new();
+    let req = PlanRequest::new(
+        "obs-metrics-exposition",
+        gpt2(&Gpt2Cfg::mini()),
+        SimCluster::fully_connected(2),
+        DeviceModel::a100_80gb(),
+    )
+    .with_opts(PlanOpts {
+        sweep: 2,
+        solve: fast_solve(),
+        ..Default::default()
+    });
+    service.plan(&req).expect("plan succeeds");
+
+    let text = automap::obs::metrics::expose();
+    assert!(
+        text.lines()
+            .any(|l| l.starts_with("automap_solve_ms_count{backend=")),
+        "the service records per-backend solve walltime:\n{text}"
+    );
+
+    let mut last_bucket: HashMap<(String, String), f64> = HashMap::new();
+    let mut inf: HashMap<(String, String), f64> = HashMap::new();
+    let mut counts: HashMap<(String, String), f64> = HashMap::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let name = it.next().unwrap_or("");
+            let kind = it.next().unwrap_or("");
+            assert!(!name.is_empty(), "TYPE line without a name: {line}");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "unknown TYPE kind: {line}"
+            );
+            continue;
+        }
+        let (name, labels, value) = parse_series(line);
+        assert!(
+            name.chars().next().map(|c| c.is_ascii_alphabetic()
+                || c == '_').unwrap_or(false)
+                && name.chars().all(|c| c.is_ascii_alphanumeric()
+                    || c == '_' || c == ':'),
+            "invalid metric name: {line}"
+        );
+        if let Some(base) = name.strip_suffix("_bucket") {
+            let key = (base.to_string(), strip_le(&labels));
+            if let Some(prev) = last_bucket.insert(key.clone(), value) {
+                assert!(
+                    value >= prev,
+                    "buckets must be cumulative: {line}"
+                );
+            }
+            if labels.contains("le=\"+Inf\"") {
+                inf.insert(key, value);
+            }
+        } else if let Some(base) = name.strip_suffix("_count") {
+            counts.insert((base.to_string(), labels), value);
+        }
+    }
+    assert!(!inf.is_empty(), "at least one histogram is exposed");
+    for (key, c) in &counts {
+        if let Some(i) = inf.get(key) {
+            assert_eq!(
+                i, c,
+                "{}_count must equal its +Inf bucket",
+                key.0
+            );
+        }
+    }
+}

@@ -307,6 +307,92 @@ fn batch_job_streams_worker_thread_events() {
     handle.stop();
 }
 
+/// First value of the series whose rendered `name{labels}` starts with
+/// `prefix` (0.0 when the series is not exposed yet). The metrics
+/// registry is process-global, so tests assert monotonic advancement
+/// rather than exact deltas.
+fn metric(text: &str, prefix: &str) -> f64 {
+    text.lines()
+        .find(|l| l.starts_with(prefix))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.0)
+}
+
+#[test]
+fn warm_plans_move_the_metrics_endpoint_counters() {
+    let dir = scratch("metrics");
+    let handle = start(&dir);
+    let client = Client::new(handle.addr());
+
+    let cold = client.plan(&mini_spec()).unwrap();
+    assert_eq!(cold.source, "solved");
+    let before = client.metrics().unwrap();
+    let req_before = metric(
+        &before,
+        "automap_http_requests_total{route=\"/v1/plan\",status=\"200\"}",
+    );
+    let lat_before = metric(
+        &before,
+        "automap_http_request_ms_count{route=\"/v1/plan\"}",
+    );
+    let hit_before = metric(
+        &before,
+        "automap_cache_lookups_total{source=\"memory-hit\"}",
+    );
+    // the cold solve itself is on the books: a per-backend walltime
+    // histogram and the stage timings it drove
+    assert!(
+        before
+            .lines()
+            .any(|l| l.starts_with("automap_solve_ms_count{backend=")),
+        "cold solve records walltime:\n{before}"
+    );
+    assert!(
+        metric(&before, "automap_stage_ms_count{stage=\"detect\"}")
+            >= 1.0,
+        "stage timings feed the bridge:\n{before}"
+    );
+
+    // warm repeat: served from memory, no solver invocation — but the
+    // request, latency, and cache-hit series all advance
+    let warm = client.plan(&mini_spec()).unwrap();
+    assert_eq!(warm.source, "memory-hit");
+    let after = client.metrics().unwrap();
+    let req_after = metric(
+        &after,
+        "automap_http_requests_total{route=\"/v1/plan\",status=\"200\"}",
+    );
+    let lat_after = metric(
+        &after,
+        "automap_http_request_ms_count{route=\"/v1/plan\"}",
+    );
+    let hit_after = metric(
+        &after,
+        "automap_cache_lookups_total{source=\"memory-hit\"}",
+    );
+    assert!(
+        req_after >= req_before + 1.0,
+        "request counter must advance: {req_before} -> {req_after}"
+    );
+    assert!(
+        lat_after >= lat_before + 1.0,
+        "latency histogram must advance: {lat_before} -> {lat_after}"
+    );
+    assert!(
+        hit_after >= hit_before + 1.0,
+        "memory-hit counter must advance: {hit_before} -> {hit_after}"
+    );
+    // scrape-time gauge sync mirrors /v1/cache/stats exactly
+    let stats = client.cache_stats().unwrap();
+    assert!(
+        metric(&after, "automap_cache_memory_hits")
+            >= counter(&stats, "memory_hits") as f64 - 1.0,
+        "gauges track cache stats:\n{after}"
+    );
+    handle.stop();
+}
+
 #[test]
 fn errors_are_structured_json() {
     let dir = scratch("errors");
